@@ -1,0 +1,117 @@
+//! Walk through **Fig. 2** of the paper: the four LP-Fusion candidate
+//! kinds on a synthetic graph section, the candidate-③ computation-law
+//! rewrite with its op-count arithmetic (4/5 -> 1/3), and the generated
+//! Fig. 4 loop variants (`fuse_add` vs `fuse_add'`) with the autotuner's
+//! verdict.
+//!
+//! Run: cargo run --release --example fig2_fusion
+
+use canao::compiler::codegen::pretty::emit_c;
+use canao::compiler::codegen::tape::compile_block;
+use canao::compiler::fusion::{lp_fusion, FusionConfig};
+use canao::compiler::ir::{DType, Graph, Op};
+use canao::compiler::poly::{schedules_for, Schedule};
+use canao::compiler::tuning::Autotuner;
+use canao::compiler::{compile, CompileOptions};
+
+fn main() {
+    println!("== Fig. 2b candidate kinds discovered by LP-Fusion ==\n");
+
+    // ① same-shape elementwise chain.
+    let mut g1 = Graph::new();
+    let a = g1.input("A", &[64], DType::F32);
+    let b = g1.weight("B", &[64]);
+    let x = g1.add(a, b);
+    let y = g1.add_op(Op::Tanh, &[x]);
+    g1.mark_output(y);
+    report("candidate 1 (elementwise chain)", &g1);
+
+    // ② broadcast-mixed shapes (the Fig. 4 pattern).
+    let mut g2 = Graph::new();
+    let a = g2.input("A", &[32, 16], DType::F32);
+    let b = g2.weight("B", &[32, 16]);
+    let c = g2.weight("C", &[16]);
+    let d = g2.weight("D", &[16]);
+    let m1 = g2.mul(a, b);
+    let m2 = g2.mul(c, d);
+    let o = g2.add(m1, m2);
+    g2.mark_output(o);
+    report("candidate 2 (broadcast elementwise)", &g2);
+
+    // ③ distributive rewrite: (★+F)⊙G + (★+F)⊙H -> (★+F)⊙(G+H).
+    let mut g3 = Graph::new();
+    let star = g3.input("star", &[64], DType::F32);
+    let f = g3.weight("F", &[64]);
+    let gg = g3.weight("G", &[64]);
+    let h = g3.weight("H", &[64]);
+    let sf = g3.add(star, f);
+    let p1 = g3.mul(sf, gg);
+    let p2 = g3.mul(sf, h);
+    let out = g3.add(p1, p2);
+    g3.mark_output(out);
+    let compiled = compile(&g3, &CompileOptions::default());
+    println!("candidate 3 (computation laws):");
+    println!("  before: 4 layers / 5 computations   (paper: 4 / 5)");
+    println!(
+        "  after : {} block  / {} computations   (paper: 1 / 3)",
+        compiled.plan.num_blocks(),
+        compiled.plan.num_ops()
+    );
+    println!("  rewritten graph:\n{}", indent(&compiled.graph.dump()));
+
+    // ④ reduction block (softmax).
+    let mut g4 = Graph::new();
+    let xx = g4.input("x", &[8, 32], DType::F32);
+    let s = g4.softmax(xx, 1);
+    g4.mark_output(s);
+    report("candidate 4 (reduction / softmax)", &g4);
+
+    // -- Fig. 4: the two generated loop versions + autotuning -------------
+    println!("\n== Fig. 4: generated fused loops (both legal schedules) ==\n");
+    let plan = lp_fusion(&g2, &FusionConfig::default());
+    let tape = compile_block(&g2, &plan.blocks[0]);
+    println!("{}", emit_c(&tape, "fuse_add", Schedule::RowRecompute));
+    println!("{}", emit_c(&tape, "fuse_add_prime", Schedule::HoistedColMajor));
+
+    println!("autotuning on [4096 x 512] (reps=5):");
+    let mut gbig = Graph::new();
+    let a = gbig.input("A", &[4096, 512], DType::F32);
+    let b = gbig.input("B", &[4096, 512], DType::F32);
+    let c = gbig.input("C", &[512], DType::F32);
+    let d = gbig.input("D", &[512], DType::F32);
+    let m1 = gbig.mul(a, b);
+    let m2 = gbig.mul(c, d);
+    let o = gbig.add(m1, m2);
+    gbig.mark_output(o);
+    // Large shapes need a larger fast-memory budget or the footprint
+    // constraint splits the block before both schedules exist.
+    let big_cfg = FusionConfig { footprint_budget: 1 << 30, ..Default::default() };
+    let plan = lp_fusion(&gbig, &big_cfg);
+    let block = plan
+        .blocks
+        .iter()
+        .find(|b| schedules_for(&gbig, b).len() == 2)
+        .expect("a block with both Fig. 4 schedules");
+    let mut tuner = Autotuner::new();
+    tuner.reps = 5;
+    let scheds = schedules_for(&gbig, block);
+    let rep = tuner.tune_block(&gbig, block, &scheds, 1);
+    for (s, t) in &rep.candidates {
+        println!("  {s:?}: {:.2} ms/exec", t * 1e3);
+    }
+    println!("  chosen: {:?}", rep.chosen);
+}
+
+fn report(label: &str, g: &Graph) {
+    let plan = lp_fusion(g, &FusionConfig::default());
+    println!(
+        "{label}:\n  {} ops -> {} fused block(s), kind {:?}\n",
+        g.num_ops(),
+        plan.num_blocks(),
+        plan.blocks.iter().map(|b| b.kind).collect::<Vec<_>>()
+    );
+}
+
+fn indent(s: &str) -> String {
+    s.lines().map(|l| format!("    {l}")).collect::<Vec<_>>().join("\n")
+}

@@ -1,0 +1,89 @@
+//! END-TO-END VALIDATION (DESIGN.md): train a BERT-variant through the
+//! full three-layer stack on a real (synthetic) workload and log the
+//! loss curve + accuracy.
+//!
+//! Every layer is exercised:
+//!   L1  Pallas kernels   — inside the AOT inference executables;
+//!   L2  JAX train step   — fwd+bwd+SGD lowered once to HLO text;
+//!   L3  Rust             — owns the data pipeline, the training loop,
+//!                          parameter state (PJRT literals), and eval.
+//!
+//! Task: trigger-token classification (label = does token 7 appear?).
+//! Random-init accuracy is 50%; a correctly wired stack reaches >90%
+//! within a couple hundred steps.
+//!
+//! Run: make artifacts && cargo run --release --example finetune_e2e
+//!      [-- --steps 200 --lr 0.05]
+
+use canao::runtime::Runtime;
+use canao::train;
+use canao::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let steps = args.usize_or("steps", 200);
+    let lr = args.f64_or("lr", 0.05) as f32;
+    let seed = args.u64_or("seed", 1);
+
+    let mut rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    println!(
+        "platform: {} | model: cls (L=2 H=128 A=2 I=512, seq=64) | {} steps @ lr {lr}",
+        rt.platform(),
+        steps
+    );
+
+    // Baseline accuracy before training (should be ~50%).
+    let params0 = rt.load_params("cls")?;
+    let acc0 = train::eval_cls(&mut rt, &params0, 8, 999)?;
+    println!("accuracy before training: {:.1}%", acc0 * 100.0);
+
+    // Train. (finetune_cls reloads initial params internally and steps
+    // through the AOT train_cls_b8 executable.)
+    let report = train::finetune_cls(&mut rt, steps, lr, seed)?;
+    println!("\nloss curve:");
+    for (i, l) in report.losses.iter().enumerate() {
+        if i % 20 == 0 || i + 1 == report.losses.len() {
+            let bar = "#".repeat((l * 40.0).min(60.0) as usize);
+            println!("  step {i:>4}  {l:.4}  {bar}");
+        }
+    }
+    println!(
+        "\nloss {:.4} -> {:.4} in {:.1}s ({:.1} steps/s, batch 8, seq 64)",
+        report.initial_loss,
+        report.final_loss,
+        report.seconds,
+        report.steps as f64 / report.seconds
+    );
+    anyhow::ensure!(report.improved(), "loss did not improve — stack is miswired");
+
+    // NOTE: finetune_cls consumed its own params; to eval the trained
+    // model we rerun training capturing the final params via train_lm-like
+    // API. Simplest: re-run with the same seed and keep the params.
+    let exe = rt.load("train_cls_b8")?;
+    let mut params = rt.load_params("cls")?;
+    let m = rt.manifest.models["cls"].clone();
+    let (seq, vocab) = (m.cfg("seq"), m.cfg("vocab"));
+    let n_params = params.len();
+    let mut rng = canao::util::rng::Rng::new(seed);
+    for _ in 0..steps {
+        let (ids, tt, mask, labels) = train::make_cls_batch(&mut rng, 8, seq, vocab);
+        let mut out = exe.run(
+            &params,
+            &[
+                canao::runtime::lit_i32(&ids, &[8, seq])?,
+                canao::runtime::lit_i32(&tt, &[8, seq])?,
+                canao::runtime::lit_f32(&mask, &[8, seq])?,
+                canao::runtime::lit_i32(&labels, &[8])?,
+                canao::runtime::lit_scalar_f32(lr),
+            ],
+        )?;
+        debug_assert_eq!(out.len(), n_params + 1);
+        out.pop();
+        params = out;
+    }
+    let acc1 = train::eval_cls(&mut rt, &params, 8, 999)?;
+    println!("accuracy after training:  {:.1}%  (before: {:.1}%)", acc1 * 100.0, acc0 * 100.0);
+    anyhow::ensure!(acc1 > acc0, "accuracy did not improve");
+    println!("\nE2E VALIDATION PASSED: all three layers compose.");
+    Ok(())
+}

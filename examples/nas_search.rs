@@ -1,0 +1,106 @@
+//! The full CANAO loop of **Fig. 3**: RNN controller -> trainer (accuracy
+//! surrogate) -> compiler (passes + LP-Fusion + tuning) -> device latency
+//! -> reward feedback — plus the design-choice ablations from DESIGN.md:
+//!
+//!   --accuracy-only   D3: drop the latency term from the reward
+//!   --joint           D4: joint search instead of two-phase
+//!   --no-fusion       D1: price candidates WITHOUT fusion in the loop
+//!
+//! Run: cargo run --release --example nas_search -- [--target-ms 45]
+//!      [--device cpu|gpu] [--iters 20] [--accuracy-only] [--joint]
+
+use canao::device::DeviceProfile;
+use canao::nas::{Search, SearchConfig};
+use canao::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["accuracy-only", "joint", "no-fusion"]);
+    let device = match args.get_or("device", "gpu").as_str() {
+        "cpu" => DeviceProfile::s865_cpu(),
+        _ => DeviceProfile::s865_gpu(),
+    };
+    let cfg = SearchConfig {
+        device,
+        target_ms: args.f64_or("target-ms", 45.0),
+        lambda: args.f64_or("lambda", 2.0) as f32,
+        phase1_iters: args.usize_or("iters", 15),
+        phase2_iters: args.usize_or("iters", 15) * 2,
+        batch: args.usize_or("batch", 8),
+        seed: args.u64_or("seed", 0xCA_A0),
+        accuracy_only: args.has("accuracy-only"),
+        joint: args.has("joint"),
+        no_fusion_in_loop: args.has("no-fusion"),
+    };
+    println!(
+        "CANAO search: device={} target={:.0}ms lambda={} mode={}{}{}",
+        cfg.device.name,
+        cfg.target_ms,
+        cfg.lambda,
+        if cfg.joint { "joint" } else { "two-phase" },
+        if cfg.accuracy_only { " accuracy-only" } else { "" },
+        if cfg.no_fusion_in_loop { " no-fusion-in-loop" } else { "" },
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut search = Search::new(cfg.clone());
+    let res = search.run();
+    println!(
+        "\n{} candidates sampled, {} unique architectures compiled, {:.1}s\n",
+        res.history.len(),
+        res.evaluations,
+        t0.elapsed().as_secs_f64()
+    );
+
+    println!("reward curve (mean per controller update):");
+    let n = res.reward_curve.len();
+    for (i, r) in res.reward_curve.iter().enumerate() {
+        if i % 4 == 0 || i + 1 == n {
+            let bar = "#".repeat(((r + 1.0).max(0.0) * 30.0) as usize);
+            println!("  iter {i:>3}  {r:>7.4}  {bar}");
+        }
+    }
+
+    // Pareto frontier of everything evaluated.
+    let mut pareto: Vec<&canao::nas::search::Candidate> = Vec::new();
+    for c in &res.history {
+        if !res
+            .history
+            .iter()
+            .any(|o| o.accuracy > c.accuracy && o.latency_ms < c.latency_ms)
+        {
+            if !pareto.iter().any(|p| {
+                p.cfg.layers == c.cfg.layers
+                    && p.cfg.hidden == c.cfg.hidden
+                    && p.cfg.inter == c.cfg.inter
+            }) {
+                pareto.push(c);
+            }
+        }
+    }
+    pareto.sort_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms));
+    println!("\naccuracy-latency Pareto frontier:");
+    for p in pareto.iter().take(10) {
+        println!(
+            "  L={:<2} H={:<4} I={:<4}  {:>5.1} GLUE  {:>6.1} ms  ({:.1} GFLOPs)",
+            p.cfg.layers,
+            p.cfg.hidden,
+            p.cfg.inter,
+            p.accuracy,
+            p.latency_ms,
+            p.cfg.flops() as f64 / 1e9
+        );
+    }
+
+    let b = &res.best;
+    println!(
+        "\nBEST: layers={} hidden={} heads={} inter={}  {:.1} GFLOPs",
+        b.cfg.layers, b.cfg.hidden, b.cfg.heads, b.cfg.inter, b.cfg.flops() as f64 / 1e9
+    );
+    println!(
+        "      GLUE-mean {:.1}, latency {:.0} ms on {} (target {:.0} ms), reward {:.4}",
+        b.accuracy, b.latency_ms, cfg.device.name, cfg.target_ms, b.reward
+    );
+    println!(
+        "      paper's CANAOBERT for reference: 4.6 GFLOPs, 45 ms GPU, GLUE-mean ~77.8"
+    );
+}

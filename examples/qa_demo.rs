@@ -1,0 +1,82 @@
+//! The paper's Fig. 1 (left) demo: real-time Question Answering, served
+//! through the dynamic batcher over the AOT PJRT executables, with the
+//! latency report the paper quotes ("as low as 45 ms").
+//!
+//! Weights are random-initialized (no pretrained checkpoint exists for
+//! the 2048-token demo vocabulary), so answers demonstrate the *system*
+//! (tokenize -> batch -> PJRT -> span decode), not QA quality.
+//!
+//! Run: make artifacts && cargo run --release --example qa_demo
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use canao::runtime::Runtime;
+use canao::serving::batcher::{Batcher, BatcherOptions};
+use canao::serving::{QaEngine, QaRequest};
+use canao::tokenizer::{Tokenizer, Vocab};
+
+fn main() -> anyhow::Result<()> {
+    let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")?;
+    let tok = Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)));
+    let mut rt = Runtime::open("artifacts")?;
+    println!("platform: {} | model: qa (L=4 H=256 A=4 I=1024, seq=128)", rt.platform());
+    let mut engine = QaEngine::new(&mut rt, Arc::clone(&tok))?;
+    engine.calibrate()?;
+    println!("calibrated serving batch cap: {}", engine.batch_cap());
+
+    // Single-request latency, as in the paper's phone demo.
+    let context = "layer fusion reduces the number of kernels and the memory traffic . \
+                   the runtime loads the compiled program and executes it on the device . \
+                   the search finds the sweet spot between speed and quality .";
+    let questions = [
+        "what reduces the number of kernels ?",
+        "what does the runtime load ?",
+        "what does the search find ?",
+    ];
+    println!("\n-- single-request latency --");
+    for q in &questions {
+        let t0 = Instant::now();
+        let r = &engine.answer_batch(&[QaRequest {
+            question: q.to_string(),
+            context: context.to_string(),
+        }])?[0];
+        println!(
+            "  {:>5.1} ms  q: {q}\n            a: {:?} (score {:.2})",
+            t0.elapsed().as_secs_f64() * 1e3,
+            r.answer,
+            r.score
+        );
+    }
+
+    // Concurrent load through the dynamic batcher (b8 bucket).
+    println!("\n-- batched serving (64 concurrent requests) --");
+    let batcher = Arc::new(Batcher::new(
+        engine,
+        BatcherOptions { max_wait: Duration::from_millis(4), min_batch: 4 },
+    ));
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..64)
+        .map(|i| {
+            batcher.submit(QaRequest {
+                question: questions[i % questions.len()].to_string(),
+                context: context.to_string(),
+            })
+        })
+        .collect();
+    let mut answered = 0;
+    for rx in rxs {
+        let r = rx.recv()?;
+        answered += (!r.answer.is_empty()) as usize;
+    }
+    let wall = t0.elapsed();
+    let mut m = batcher.metrics.lock().unwrap();
+    println!(
+        "  {answered}/64 answered in {:.0} ms  ({:.1} req/s, mean batch {:.1})",
+        wall.as_secs_f64() * 1e3,
+        64.0 / wall.as_secs_f64(),
+        m.mean_batch_size()
+    );
+    println!("  latency: {}", m.total_latency.summary());
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the whole CANAO pipeline in ~60 lines.
+//!
+//! 1. Build a BERT-variant computational graph (the §2.1 search space).
+//! 2. Compile it: graph passes -> LP-Fusion -> autotuned schedules.
+//! 3. Price it on the simulated Snapdragon 865 (CPU + GPU) vs TFLite.
+//! 4. If `make artifacts` has run, answer one question through the real
+//!    PJRT executable.
+//!
+//! Run: cargo run --example quickstart
+
+use std::sync::Arc;
+
+use canao::compiler::{compile, CompileOptions};
+use canao::device::{plan_latency, tflite, DeviceProfile};
+use canao::model::{build_encoder, BertConfig};
+use canao::runtime::Runtime;
+use canao::serving::{QaEngine, QaRequest};
+use canao::tokenizer::{Tokenizer, Vocab};
+
+fn main() -> anyhow::Result<()> {
+    // -- 1. a candidate architecture --------------------------------------
+    let cfg = BertConfig::canaobert();
+    println!("model: {cfg:?}");
+    println!(
+        "       {:.1} GFLOPs, {:.1}M params",
+        cfg.flops() as f64 / 1e9,
+        cfg.params() as f64 / 1e6
+    );
+
+    // -- 2. compile --------------------------------------------------------
+    let graph = build_encoder(&cfg);
+    let fused =
+        compile(&graph, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    let unfused =
+        compile(&graph, &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() });
+    let (ops, blocks, ratio) = fused.fusion_summary();
+    println!(
+        "compile: {} ops -> {} fused blocks ({ratio:.1} ops/block; unfused {} blocks)",
+        ops,
+        blocks,
+        unfused.plan.num_blocks()
+    );
+    println!(
+        "         {:.1} MB of intermediate traffic eliminated",
+        fused.plan.bytes_saved(&fused.graph) as f64 / 1e6
+    );
+
+    // -- 3. device latency --------------------------------------------------
+    for dev in [DeviceProfile::s865_cpu(), DeviceProfile::s865_gpu()] {
+        let f = plan_latency(&fused.graph, &fused.plan, &dev);
+        let u = plan_latency(&unfused.graph, &unfused.plan, &dev);
+        println!(
+            "{:>11}: fused {:>6.1} ms   unfused {:>6.1} ms   ({:.2}x from fusion)",
+            dev.name,
+            f.ms(),
+            u.ms(),
+            u.ms() / f.ms()
+        );
+    }
+    let tfl = tflite::tflite_latency_graph(&graph);
+    println!("{:>11}: {:>6.1} ms (baseline)", "TFLite-CPU", tfl.ms());
+
+    // -- 4. a real inference through PJRT (optional) -----------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")?;
+        let tok = Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)));
+        let mut rt = Runtime::open("artifacts")?;
+        let engine = QaEngine::new(&mut rt, tok)?;
+        let t0 = std::time::Instant::now();
+        let resp = &engine.answer_batch(&[QaRequest {
+            question: "what does the runtime load ?".into(),
+            context: "the runtime loads the compiled program and executes it on the device ."
+                .into(),
+        }])?[0];
+        println!(
+            "\nPJRT QA demo ({}): answer {:?} in {:.1} ms",
+            rt.platform(),
+            resp.answer,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    } else {
+        println!("\n(run `make artifacts` to enable the PJRT QA demo step)");
+    }
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Reproduce **Table 1** of the paper: inference latency of DistilBERT /
+//! BERT_BASE / CANAOBERT under TFLite-CPU vs CANAO with/without layer
+//! fusion on mobile CPU and GPU, plus the 7.8x headline.
+//!
+//! Run: cargo run --release --example table1
+
+fn main() -> anyhow::Result<()> {
+    canao::bench_table1(&mut std::io::stdout())?;
+    println!();
+    println!("paper reference (Galaxy S20):");
+    println!("  DistilBERT 10.9G | 188ms | 157ms 1.2x  237ms 0.8x | 105ms 1.8x   86ms 2.2x");
+    println!("  BERT_BASE  21.8G | 352ms | 276ms 1.3x  412ms 0.9x | 196ms 1.8x  147ms 2.4x");
+    println!("  CANAOBERT   4.6G |  98ms |  89ms 1.1x  152ms 0.6x |  49ms 2.0x   45ms 2.2x");
+    Ok(())
+}

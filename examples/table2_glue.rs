@@ -1,0 +1,38 @@
+//! Reproduce **Table 2** of the paper: GLUE dev accuracy of BERT_BASE /
+//! DistilBERT / MobileBERT / CANAOBERT.
+//!
+//! The accuracy source is the trainer surrogate (DESIGN.md §2): anchored
+//! to the published scores at the four reference architectures — so this
+//! table reproduces the paper's numbers exactly — and interpolating in
+//! log-architecture space elsewhere (which the NAS loop exercises).
+//!
+//! Run: cargo run --release --example table2_glue
+
+use canao::model::BertConfig;
+use canao::nas::{surrogate_mean, surrogate_score, GlueTask};
+
+fn main() -> anyhow::Result<()> {
+    canao::bench_table2(&mut std::io::stdout())?;
+
+    println!("\nsurrogate behaviour off the anchors (drives the NAS reward):");
+    for (label, layers, hidden, inter) in [
+        ("half-depth CANAOBERT", 3usize, 512usize, 1792usize),
+        ("double-width tiny", 2, 256, 1024),
+        ("near-BERT_BASE", 10, 768, 3072),
+    ] {
+        let cfg = BertConfig {
+            vocab: 30522,
+            seq: 128,
+            layers,
+            hidden,
+            heads: (hidden / 64).max(1),
+            inter,
+        };
+        println!(
+            "  {label:<22} L={layers:<2} H={hidden:<4} I={inter:<4} -> GLUE mean {:.1}  (MNLI-m {:.1})",
+            surrogate_mean(&cfg, 0),
+            surrogate_score(&cfg, GlueTask::MnliM, 0)
+        );
+    }
+    Ok(())
+}

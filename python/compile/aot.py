@@ -1,0 +1,295 @@
+"""AOT pipeline: lower every (model-variant x head x batch) to HLO *text*
+plus a manifest.json + raw param blobs that the Rust runtime consumes.
+
+HLO text — NOT `lowered.compile()` / `.serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published `xla` crate binds) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE (`make artifacts`); the Rust binary is self-contained
+afterwards. Nothing in this package is imported at request time.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# The exported model zoo.
+#
+# `qa` is the CANAOBERT-shaped demo model (the paper's QA app); `gen` is the
+# text-generation model (causal LM); `cls` is the small fine-tune model used
+# by the end-to-end training example. Sizes are laptop-scale stand-ins for
+# the paper's phone-scale models — the architecture class is identical.
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    "qa": M.ModelConfig(vocab=2048, seq=128, layers=4, hidden=256, heads=4, inter=1024),
+    "gen": M.ModelConfig(vocab=2048, seq=64, layers=2, hidden=128, heads=2, inter=512),
+    "cls": M.ModelConfig(vocab=2048, seq=64, layers=2, hidden=128, heads=2, inter=512),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> dict:
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _shapestruct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, {"f32": jnp.float32, "i32": jnp.int32}[dtype])
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    model: str  # key into CONFIGS ("" for micro kernels)
+    fn: object  # callable taking flat args
+    extra_inputs: List[dict]  # after the params block (name/shape/dtype)
+    outputs: List[str]  # names for the output tuple tail after params
+    returns_params: bool  # True for train steps
+
+
+def build_artifacts() -> List[Artifact]:
+    arts: List[Artifact] = []
+
+    def qa_fn(cfg):
+        def f(*args):
+            n = len(M.param_specs(cfg))
+            params = M.params_from_list(cfg, list(args[:n]))
+            ids, tt, mask = args[n:]
+            return M.qa_forward(cfg, params, ids, tt, mask, use_pallas=True)
+
+        return f
+
+    def gen_fn(cfg):
+        def f(*args):
+            n = len(M.param_specs(cfg))
+            params = M.params_from_list(cfg, list(args[:n]))
+            ids, mask = args[n:]
+            return (M.lm_forward(cfg, params, ids, mask, use_pallas=True),)
+
+        return f
+
+    def cls_fn(cfg):
+        def f(*args):
+            n = len(M.param_specs(cfg))
+            params = M.params_from_list(cfg, list(args[:n]))
+            ids, tt, mask = args[n:]
+            return (M.cls_forward(cfg, params, ids, tt, mask, use_pallas=True),)
+
+        return f
+
+    qa = CONFIGS["qa"]
+    for b in (1, 8):
+        arts.append(
+            Artifact(
+                name=f"qa_b{b}",
+                model="qa",
+                fn=qa_fn(qa),
+                extra_inputs=[
+                    {"name": "input_ids", **_spec((b, qa.seq), "i32")},
+                    {"name": "token_type_ids", **_spec((b, qa.seq), "i32")},
+                    {"name": "mask", **_spec((b, qa.seq), "f32")},
+                ],
+                outputs=["start_logits", "end_logits"],
+                returns_params=False,
+            )
+        )
+
+    gen = CONFIGS["gen"]
+    arts.append(
+        Artifact(
+            name="gen_b1",
+            model="gen",
+            fn=gen_fn(gen),
+            extra_inputs=[
+                {"name": "input_ids", **_spec((1, gen.seq), "i32")},
+                {"name": "mask", **_spec((1, gen.seq), "f32")},
+            ],
+            outputs=["logits"],
+            returns_params=False,
+        )
+    )
+    arts.append(
+        Artifact(
+            name="train_lm_b8",
+            model="gen",
+            fn=M.make_lm_train_step(gen),
+            extra_inputs=[
+                {"name": "input_ids", **_spec((8, gen.seq), "i32")},
+                {"name": "mask", **_spec((8, gen.seq), "f32")},
+                {"name": "lr", **_spec((), "f32")},
+            ],
+            outputs=["loss"],
+            returns_params=True,
+        )
+    )
+
+    cls = CONFIGS["cls"]
+    arts.append(
+        Artifact(
+            name="cls_b8",
+            model="cls",
+            fn=cls_fn(cls),
+            extra_inputs=[
+                {"name": "input_ids", **_spec((8, cls.seq), "i32")},
+                {"name": "token_type_ids", **_spec((8, cls.seq), "i32")},
+                {"name": "mask", **_spec((8, cls.seq), "f32")},
+            ],
+            outputs=["logits"],
+            returns_params=False,
+        )
+    )
+    arts.append(
+        Artifact(
+            name="train_cls_b8",
+            model="cls",
+            fn=M.make_cls_train_step(cls),
+            extra_inputs=[
+                {"name": "input_ids", **_spec((8, cls.seq), "i32")},
+                {"name": "token_type_ids", **_spec((8, cls.seq), "i32")},
+                {"name": "mask", **_spec((8, cls.seq), "f32")},
+                {"name": "labels", **_spec((8,), "i32")},
+                {"name": "lr", **_spec((), "f32")},
+            ],
+            outputs=["loss"],
+            returns_params=True,
+        )
+    )
+
+    # Fig. 4 micro kernel — used by the Rust runtime integration tests
+    # (fast to compile, exercises the whole load/execute path).
+    from .kernels import fused_add
+
+    def micro(a, b, c, d):
+        return (fused_add(a, b, c, d, variant="row", tile=32),)
+
+    arts.append(
+        Artifact(
+            name="fused_add_micro",
+            model="",
+            fn=micro,
+            extra_inputs=[
+                {"name": "a", **_spec((64, 96), "f32")},
+                {"name": "b", **_spec((64, 96), "f32")},
+                {"name": "c", **_spec((96,), "f32")},
+                {"name": "d", **_spec((96,), "f32")},
+            ],
+            outputs=["out"],
+            returns_params=False,
+        )
+    )
+    return arts
+
+
+def write_params_bin(cfg: M.ModelConfig, seed: int, path: str) -> List[dict]:
+    """Raw little-endian f32 blobs, concatenated in param_specs order."""
+    params = M.init_params(cfg, seed)
+    entries = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, shape in M.param_specs(cfg):
+            arr = np.asarray(params[name], dtype=np.float32)
+            assert tuple(arr.shape) == tuple(shape)
+            raw = arr.tobytes()
+            f.write(raw)
+            entries.append(
+                {"name": name, "shape": list(shape), "dtype": "f32", "offset": offset, "nbytes": len(raw)}
+            )
+            offset += len(raw)
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}, "executables": {}}
+
+    for key, cfg in CONFIGS.items():
+        bin_name = f"params_{key}.bin"
+        entries = write_params_bin(cfg, args.seed, os.path.join(args.out_dir, bin_name))
+        manifest["models"][key] = {
+            "config": dataclasses.asdict(cfg),
+            "params_file": bin_name,
+            "params": entries,
+            "flops": cfg.flops(),
+        }
+        print(f"[aot] params_{key}.bin: {sum(e['nbytes'] for e in entries)/1e6:.1f} MB, "
+              f"{len(entries)} tensors")
+
+    # --only re-exports a subset; keep other executables' manifest entries.
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        manifest_path = os.path.join(args.out_dir, "manifest.json")
+        if os.path.exists(manifest_path):
+            with open(manifest_path) as f:
+                old = json.load(f)
+            manifest["executables"].update(old.get("executables", {}))
+    for art in build_artifacts():
+        if only and art.name not in only:
+            continue
+        in_specs = []
+        if art.model:
+            cfg = CONFIGS[art.model]
+            in_specs += [
+                _shapestruct(shape, "f32") for _, shape in M.param_specs(cfg)
+            ]
+        in_specs += [_shapestruct(e["shape"], e["dtype"]) for e in art.extra_inputs]
+
+        lowered = jax.jit(art.fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        hlo_name = f"{art.name}.hlo.txt"
+        with open(os.path.join(args.out_dir, hlo_name), "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        # JAX prunes arguments the function never reads (e.g. the cls-head
+        # params in the qa graph); the Rust caller must skip the same ones.
+        kept = lowered._lowering.compile_args.get("kept_var_idx")
+        kept_idx = sorted(kept) if kept is not None else list(range(len(in_specs)))
+        manifest["executables"][art.name] = {
+            "hlo": hlo_name,
+            "model": art.model,
+            "extra_inputs": art.extra_inputs,
+            "outputs": art.outputs,
+            "returns_params": art.returns_params,
+            "n_inputs_total": len(in_specs),
+            "kept_inputs": kept_idx,
+            "sha256_16": digest,
+        }
+        print(f"[aot] {hlo_name}: {len(text)/1e6:.2f} MB text (sha {digest})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json: {len(manifest['executables'])} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the paper fused compute hot-spots."""
+
+from .fused_add import fused_add
+from .fused_attention import fused_attention
+from .fused_ffn import fused_ffn
+from .fused_layernorm import fused_residual_layernorm
+
+__all__ = [
+    "fused_add",
+    "fused_attention",
+    "fused_ffn",
+    "fused_residual_layernorm",
+]

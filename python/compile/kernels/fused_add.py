@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: the paper's Fig. 4 loop-fusion example.
+
+out[i, j] = a[i, j] * b[i, j] + c[j] * d[j]
+
+The paper generates two loop variants — `fuse_add` (recompute c*d per row,
+row-major locality) and `fuse_add'` (hoist c*d, column-major access) — and
+auto-tunes between them. In Pallas the same trade-off is a BlockSpec
+choice: `variant="row"` tiles rows and recomputes the c*d vector per grid
+step (the fuse_add schedule); `variant="hoisted"` computes c*d once in the
+first step into a scratch accumulator pattern via a column-tiled grid
+(the fuse_add' schedule). Both must match ref.fused_add.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fused_add(
+    a: jax.Array,  # [m, n]
+    b: jax.Array,  # [m, n]
+    c: jax.Array,  # [n]
+    d: jax.Array,  # [n]
+    variant: str = "row",
+    tile: int = 64,
+) -> jax.Array:
+    m, n = a.shape
+    if variant == "row":
+        # fuse_add: iterate row tiles; c*d recomputed every step (redundant
+        # compute) but all accesses are row-major (good locality).
+        tr = min(tile, m)
+        pad = (-m) % tr
+        if pad:
+            a = jnp.pad(a, ((0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, pad), (0, 0)))
+        pm = a.shape[0]
+
+        def kernel(a_ref, b_ref, c_ref, d_ref, o_ref):
+            cd = c_ref[...] * d_ref[...]  # recomputed per tile
+            o_ref[...] = a_ref[...] * b_ref[...] + cd[None, :]
+
+        out = pl.pallas_call(
+            kernel,
+            grid=(pm // tr,),
+            in_specs=[
+                pl.BlockSpec((tr, n), lambda i: (i, 0)),
+                pl.BlockSpec((tr, n), lambda i: (i, 0)),
+                pl.BlockSpec((n,), lambda i: (0,)),
+                pl.BlockSpec((n,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((tr, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((pm, n), a.dtype),
+            interpret=True,
+        )(a, b, c, d)
+        return out[:m]
+
+    if variant == "hoisted":
+        # fuse_add': iterate column tiles; c*d computed once per column tile
+        # (no redundancy across rows) at the cost of column-strided access.
+        tc = min(tile, n)
+        pad = (-n) % tc
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)))
+            b = jnp.pad(b, ((0, 0), (0, pad)))
+            c = jnp.pad(c, (0, pad))
+            d = jnp.pad(d, (0, pad))
+        pn = a.shape[1]
+
+        def kernel(a_ref, b_ref, c_ref, d_ref, o_ref):
+            cd = c_ref[...] * d_ref[...]  # hoisted: once per column tile
+            o_ref[...] = a_ref[...] * b_ref[...] + cd[None, :]
+
+        out = pl.pallas_call(
+            kernel,
+            grid=(pn // tc,),
+            in_specs=[
+                pl.BlockSpec((m, tc), lambda j: (0, j)),
+                pl.BlockSpec((m, tc), lambda j: (0, j)),
+                pl.BlockSpec((tc,), lambda j: (j,)),
+                pl.BlockSpec((tc,), lambda j: (j,)),
+            ],
+            out_specs=pl.BlockSpec((m, tc), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((m, pn), a.dtype),
+            interpret=True,
+        )(a, b, c, d)
+        return out[:, :n]
+
+    raise ValueError(f"unknown variant {variant!r}")

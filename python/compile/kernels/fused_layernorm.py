@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: fused residual-add + LayerNorm.
+
+LP-Fusion merges the residual add with the following layernorm around every
+BERT sublayer (4 such sites per transformer block). Unfused that is one
+full activation-tensor round trip to memory per site; fused, the sum is
+normalized while still in VMEM. Grid: one step per row tile; reductions
+(mean/var) run across the lane dimension in-register.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fused_residual_layernorm(
+    x: jax.Array,  # [rows, hidden]
+    residual: jax.Array,  # [rows, hidden]
+    gamma: jax.Array,  # [hidden]
+    beta: jax.Array,  # [hidden]
+    eps: float = 1e-12,
+    row_tile: int = 128,
+) -> jax.Array:
+    rows, hidden = x.shape
+    tr = min(row_tile, rows)
+    pad = (-rows) % tr
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        residual = jnp.pad(residual, ((0, pad), (0, 0)))
+    padded = x.shape[0]
+
+    def kernel(x_ref, r_ref, g_ref, b_ref, o_ref):
+        s = x_ref[...] + r_ref[...]  # fused residual add
+        mu = jnp.mean(s, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(s - mu), axis=-1, keepdims=True)
+        o_ref[...] = ((s - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]).astype(
+            o_ref.dtype
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((tr, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tr, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, hidden), x.dtype),
+        interpret=True,
+    )(x, residual, gamma, beta)
+    return out[:rows]

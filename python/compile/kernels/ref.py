@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness signal).
+
+These are the "unfused" semantics: each function is written as the naive
+sequence of ops the paper's compiler would see *before* LP-Fusion. The
+Pallas kernels in this package must match these bit-for-bit (up to float
+tolerance) — pytest enforces it, including hypothesis shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Elementwise / normalization primitives
+# ---------------------------------------------------------------------------
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """Tanh-approximate GELU (the original BERT repo's formulation).
+
+    Chosen over the erf form deliberately: `erf` lowers to a dedicated HLO
+    opcode that xla_extension 0.5.1 (the Rust runtime's XLA) cannot parse,
+    while the tanh form lowers to classic opcodes that round-trip through
+    HLO text cleanly. Max abs. deviation from exact GELU is ~1e-3.
+    """
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """LayerNorm over the last axis (BERT uses eps=1e-12)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def residual_layernorm(
+    x: jax.Array, residual: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-12
+) -> jax.Array:
+    """The fused block LP-Fusion produces around every BERT sublayer:
+    add the residual, then layernorm. Two ops before fusion, one after."""
+    return layernorm(x + residual, gamma, beta, eps)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,  # [batch, heads, seq, dh]
+    k: jax.Array,  # [batch, heads, seq, dh]
+    v: jax.Array,  # [batch, heads, seq, dh]
+    mask: jax.Array,  # [batch, seq]  (1.0 = attend, 0.0 = padding)
+    causal: bool = False,
+) -> jax.Array:
+    """Scaled dot-product attention, the 5-op unfused sequence:
+    matmul -> scale -> mask-add -> softmax -> matmul."""
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    bias = (1.0 - mask[:, None, None, :]) * jnp.asarray(-1e9, dtype=q.dtype)
+    scores = scores + bias
+    if causal:
+        seq = q.shape[2]
+        cm = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        scores = jnp.where(cm[None, None, :, :], scores, jnp.asarray(-1e9, q.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward
+# ---------------------------------------------------------------------------
+
+
+def ffn(
+    x: jax.Array,  # [rows, hidden]
+    w1: jax.Array,  # [hidden, inter]
+    b1: jax.Array,  # [inter]
+    w2: jax.Array,  # [inter, hidden]
+    b2: jax.Array,  # [hidden]
+) -> jax.Array:
+    """BERT position-wise FFN: matmul -> bias -> GELU -> matmul -> bias.
+    Unfused this writes a [rows, inter] intermediate to memory; the fused
+    kernel keeps one row-tile of it in VMEM."""
+    h = x @ w1 + b1
+    h = gelu(h)
+    return h @ w2 + b2
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 micro-benchmark kernel
+# ---------------------------------------------------------------------------
+
+
+def fused_add(a: jax.Array, b: jax.Array, c: jax.Array, d: jax.Array) -> jax.Array:
+    """The paper's Fig. 4 example: Mul-1 is elementwise over [M, N], Mul-2
+    over [1, N] (broadcast row), Add combines them.
+
+    out[i, j] = a[i, j] * b[i, j] + c[j] * d[j]
+    """
+    return a * b + (c * d)[None, :]
+
+
+def fig2b_candidate3(star: jax.Array, f: jax.Array, g: jax.Array, h: jax.Array) -> jax.Array:
+    """Fig. 2b candidate (3), pre-fusion form: (star+F)*G + (star+F)*H.
+    LP-Fusion rewrites it (distributivity) to (star+F)*(G+H) — same value."""
+    return (star + f) * g + (star + f) * h

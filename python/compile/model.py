@@ -1,0 +1,306 @@
+"""L2: configurable BERT-variant model in JAX, calling the L1 Pallas kernels.
+
+This is the compute graph the CANAO controller searches over: the number of
+transformer layers, the hidden size, and the FFN intermediate size are all
+free (§2.1 of the paper). `aot.py` lowers chosen variants to HLO text for
+the Rust coordinator.
+
+Two forward paths share one parameter set:
+  * use_pallas=True  — the LP-Fused kernels (fused attention / FFN /
+    residual-layernorm). This is what ships in the inference artifacts.
+  * use_pallas=False — the naive unfused op sequence from kernels/ref.py.
+    Used for the AOT train step (pallas_call has no autodiff rule) and as
+    the oracle in pytest. Both paths must agree to float tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_attention, fused_ffn, fused_residual_layernorm
+from .kernels import ref
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architectural hyper-parameters — exactly the paper's search space."""
+
+    vocab: int = 2048
+    seq: int = 128
+    layers: int = 4
+    hidden: int = 256
+    heads: int = 4
+    inter: int = 1024
+    type_vocab: int = 2
+    n_classes: int = 2
+
+    def __post_init__(self) -> None:
+        if self.hidden % self.heads != 0:
+            raise ValueError(f"hidden {self.hidden} not divisible by heads {self.heads}")
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def flops(self, seq: int | None = None) -> int:
+        """Encoder forward FLOPs per sequence (2*MACs), matching the paper's
+        #FLOPs column (BERT_BASE @ seq=128 -> 22.4G vs the paper's 21.8G)."""
+        s = seq or self.seq
+        h, i = self.hidden, self.inter
+        per_layer = (
+            2 * s * h * h * 4  # q,k,v,o projections
+            + 2 * s * s * h * 2  # QK^T and PV
+            + 2 * s * h * i * 2  # FFN
+        )
+        return self.layers * per_layer
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (deterministic order — the AOT ABI)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list. This order IS the calling convention of
+    every AOT executable; Rust reads it from manifest.json."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed/token", (cfg.vocab, cfg.hidden)),
+        ("embed/position", (cfg.seq, cfg.hidden)),
+        ("embed/type", (cfg.type_vocab, cfg.hidden)),
+        ("embed/ln_gamma", (cfg.hidden,)),
+        ("embed/ln_beta", (cfg.hidden,)),
+    ]
+    for l in range(cfg.layers):
+        p = f"layer{l}"
+        specs += [
+            (f"{p}/wq", (cfg.hidden, cfg.hidden)),
+            (f"{p}/bq", (cfg.hidden,)),
+            (f"{p}/wk", (cfg.hidden, cfg.hidden)),
+            (f"{p}/bk", (cfg.hidden,)),
+            (f"{p}/wv", (cfg.hidden, cfg.hidden)),
+            (f"{p}/bv", (cfg.hidden,)),
+            (f"{p}/wo", (cfg.hidden, cfg.hidden)),
+            (f"{p}/bo", (cfg.hidden,)),
+            (f"{p}/attn_ln_gamma", (cfg.hidden,)),
+            (f"{p}/attn_ln_beta", (cfg.hidden,)),
+            (f"{p}/w1", (cfg.hidden, cfg.inter)),
+            (f"{p}/b1", (cfg.inter,)),
+            (f"{p}/w2", (cfg.inter, cfg.hidden)),
+            (f"{p}/b2", (cfg.hidden,)),
+            (f"{p}/ffn_ln_gamma", (cfg.hidden,)),
+            (f"{p}/ffn_ln_beta", (cfg.hidden,)),
+        ]
+    specs += [
+        ("qa/w", (cfg.hidden, 2)),
+        ("qa/b", (2,)),
+        ("cls/pool_w", (cfg.hidden, cfg.hidden)),
+        ("cls/pool_b", (cfg.hidden,)),
+        ("cls/w", (cfg.hidden, cfg.n_classes)),
+        ("cls/b", (cfg.n_classes,)),
+        ("lm/bias", (cfg.vocab,)),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Truncated-normal(0.02) weights / zero biases / unit LN gammas, per BERT."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.truncated_normal(sub, -2.0, 2.0, shape, jnp.float32)
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: Params) -> List[jax.Array]:
+    return [params[name] for name, _ in param_specs(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, flat: List[jax.Array]) -> Params:
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {name: a for (name, _), a in zip(specs, flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x: jax.Array, heads: int) -> jax.Array:
+    b, s, h = x.shape
+    return x.reshape(b, s, heads, h // heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, a, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, a * d)
+
+
+def encoder(
+    cfg: ModelConfig,
+    params: Params,
+    input_ids: jax.Array,  # i32 [batch, seq]
+    token_type_ids: jax.Array,  # i32 [batch, seq]
+    mask: jax.Array,  # f32 [batch, seq]
+    *,
+    causal: bool = False,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """BERT encoder stack -> [batch, seq, hidden]."""
+    b, s = input_ids.shape
+    h = cfg.hidden
+
+    x = (
+        jnp.take(params["embed/token"], input_ids, axis=0)
+        + params["embed/position"][None, :s, :]
+        + jnp.take(params["embed/type"], token_type_ids, axis=0)
+    )
+    x = ref.layernorm(x, params["embed/ln_gamma"], params["embed/ln_beta"])
+
+    for l in range(cfg.layers):
+        p = f"layer{l}"
+        q = x @ params[f"{p}/wq"] + params[f"{p}/bq"]
+        k = x @ params[f"{p}/wk"] + params[f"{p}/bk"]
+        v = x @ params[f"{p}/wv"] + params[f"{p}/bv"]
+        qh, kh, vh = (_split_heads(t, cfg.heads) for t in (q, k, v))
+        if use_pallas:
+            ctx = fused_attention(qh, kh, vh, mask, causal=causal)
+        else:
+            ctx = ref.attention(qh, kh, vh, mask, causal=causal)
+        attn_out = _merge_heads(ctx) @ params[f"{p}/wo"] + params[f"{p}/bo"]
+
+        flat_x = x.reshape(b * s, h)
+        flat_a = attn_out.reshape(b * s, h)
+        rln = fused_residual_layernorm if use_pallas else ref.residual_layernorm
+        x = rln(flat_a, flat_x, params[f"{p}/attn_ln_gamma"], params[f"{p}/attn_ln_beta"])
+
+        ffn_fn = fused_ffn if use_pallas else ref.ffn
+        f = ffn_fn(x, params[f"{p}/w1"], params[f"{p}/b1"], params[f"{p}/w2"], params[f"{p}/b2"])
+        x = rln(f, x, params[f"{p}/ffn_ln_gamma"], params[f"{p}/ffn_ln_beta"])
+        x = x.reshape(b, s, h)
+
+    return x
+
+
+def qa_forward(
+    cfg: ModelConfig,
+    params: Params,
+    input_ids: jax.Array,
+    token_type_ids: jax.Array,
+    mask: jax.Array,
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """SQuAD-style span head -> (start_logits, end_logits), each [batch, seq].
+    Padding positions are pushed to -1e9 so argmax never lands on them."""
+    x = encoder(cfg, params, input_ids, token_type_ids, mask, use_pallas=use_pallas)
+    logits = x @ params["qa/w"] + params["qa/b"]  # [b, s, 2]
+    neg = (1.0 - mask) * -1e9
+    return logits[..., 0] + neg, logits[..., 1] + neg
+
+
+def cls_forward(
+    cfg: ModelConfig,
+    params: Params,
+    input_ids: jax.Array,
+    token_type_ids: jax.Array,
+    mask: jax.Array,
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Sequence classification: masked mean-pool -> tanh -> logits.
+
+    Mean pooling (instead of BERT's [CLS] pooling) because the demo model
+    trains FROM SCRATCH on the synthetic task: with random init, [CLS]
+    pooling gives near-zero gradient signal until attention learns to
+    route evidence to position 0, while mean pooling is linearly sensitive
+    to any position's embedding from step one."""
+    x = encoder(cfg, params, input_ids, token_type_ids, mask, use_pallas=use_pallas)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    mean = jnp.sum(x * mask[..., None], axis=1) / denom
+    pooled = jnp.tanh(mean @ params["cls/pool_w"] + params["cls/pool_b"])
+    return pooled @ params["cls/w"] + params["cls/b"]
+
+
+def lm_forward(
+    cfg: ModelConfig,
+    params: Params,
+    input_ids: jax.Array,
+    mask: jax.Array,
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Causal LM (the text-generation demo) -> logits [batch, seq, vocab].
+    Output embedding is tied to the input embedding (standard practice)."""
+    tt = jnp.zeros_like(input_ids)
+    x = encoder(cfg, params, input_ids, tt, mask, causal=True, use_pallas=use_pallas)
+    return x @ params["embed/token"].T + params["lm/bias"]
+
+
+# ---------------------------------------------------------------------------
+# Training steps (AOT-exported; Rust drives the loop)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params: Params, input_ids: jax.Array, mask: jax.Array) -> jax.Array:
+    """Next-token cross-entropy over non-pad positions (shifted targets)."""
+    logits = lm_forward(cfg, params, input_ids, mask, use_pallas=False)
+    targets = input_ids[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    w = mask[:, 1:]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def cls_loss(
+    cfg: ModelConfig,
+    params: Params,
+    input_ids: jax.Array,
+    token_type_ids: jax.Array,
+    mask: jax.Array,
+    labels: jax.Array,
+) -> jax.Array:
+    logits = cls_forward(cfg, params, input_ids, token_type_ids, mask, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def make_lm_train_step(cfg: ModelConfig):
+    """Flat-ABI SGD train step: (params..., ids, mask, lr) ->
+    (new_params..., loss). Exported as one HLO module."""
+
+    def step(*args):
+        n = len(param_specs(cfg))
+        flat, (ids, mask, lr) = list(args[:n]), args[n:]
+        params = params_from_list(cfg, flat)
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, ids, mask))(params)
+        new = [params[name] - lr * grads[name] for name, _ in param_specs(cfg)]
+        return tuple(new) + (loss,)
+
+    return step
+
+
+def make_cls_train_step(cfg: ModelConfig):
+    """Flat-ABI SGD train step for sequence classification."""
+
+    def step(*args):
+        n = len(param_specs(cfg))
+        flat, (ids, tt, mask, labels, lr) = list(args[:n]), args[n:]
+        params = params_from_list(cfg, flat)
+        loss, grads = jax.value_and_grad(lambda p: cls_loss(cfg, p, ids, tt, mask, labels))(params)
+        new = [params[name] - lr * grads[name] for name, _ in param_specs(cfg)]
+        return tuple(new) + (loss,)
+
+    return step

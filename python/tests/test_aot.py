@@ -1,0 +1,84 @@
+"""AOT pipeline integrity: manifest schema, ABI arity, HLO text sanity.
+
+These run against the committed aot.py logic without re-lowering the big
+models (fast); if artifacts/ exists they additionally validate the files.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_configs_are_valid():
+    for name, cfg in aot.CONFIGS.items():
+        assert cfg.hidden % cfg.heads == 0, name
+        assert cfg.vocab >= 2048 - 1  # tokenizer budget fits
+
+
+def test_artifact_list_covers_apps():
+    names = {a.name for a in aot.build_artifacts()}
+    assert {"qa_b1", "qa_b8", "gen_b1", "train_lm_b8", "cls_b8", "train_cls_b8",
+            "fused_add_micro"} <= names
+
+
+def test_artifact_abi_shapes():
+    """Every artifact's extra inputs have concrete shapes and known dtypes."""
+    for a in aot.build_artifacts():
+        for e in a.extra_inputs:
+            assert e["dtype"] in ("f32", "i32"), a.name
+            assert all(isinstance(d, int) and d > 0 for d in e["shape"]) or e["shape"] == []
+
+
+def test_write_params_bin(tmp_path):
+    cfg = M.ModelConfig(vocab=32, seq=8, layers=1, hidden=16, heads=2, inter=32)
+    path = tmp_path / "p.bin"
+    entries = aot.write_params_bin(cfg, 0, str(path))
+    total = sum(e["nbytes"] for e in entries)
+    assert path.stat().st_size == total
+    # Offsets are contiguous and ordered.
+    off = 0
+    for e in entries:
+        assert e["offset"] == off
+        off += e["nbytes"]
+    # Round-trip one tensor.
+    raw = path.read_bytes()
+    e0 = entries[0]
+    arr = np.frombuffer(raw[e0["offset"]:e0["offset"] + e0["nbytes"]], np.float32)
+    assert arr.size == int(np.prod(e0["shape"]))
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_schema():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for key, m in man["models"].items():
+        assert os.path.exists(os.path.join(ART, m["params_file"])), key
+        size = os.path.getsize(os.path.join(ART, m["params_file"]))
+        assert size == sum(e["nbytes"] for e in m["params"])
+    for name, e in man["executables"].items():
+        assert os.path.exists(os.path.join(ART, e["hlo"])), name
+
+
+@needs_artifacts
+def test_hlo_text_parses_as_hlo():
+    """The interchange files must be HLO text (ENTRY + computation)."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, e in man["executables"].items():
+        with open(os.path.join(ART, e["hlo"])) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name

@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the fused_add loop-variant choice) so the
+BlockSpec tiling/padding logic is exercised at awkward, non-multiple sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fused_add,
+    fused_attention,
+    fused_ffn,
+    fused_residual_layernorm,
+    ref,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    batch=st.integers(1, 3),
+    heads=st.integers(1, 4),
+    seq=st.sampled_from([4, 8, 16, 33]),
+    dh=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+)
+def test_attention_matches_ref(batch, heads, seq, dh, causal):
+    q = rand(1, (batch, heads, seq, dh))
+    k = rand(2, (batch, heads, seq, dh))
+    v = rand(3, (batch, heads, seq, dh))
+    mask = (jax.random.uniform(jax.random.PRNGKey(4), (batch, seq)) > 0.2).astype(jnp.float32)
+    # Never fully-masked rows: keep position 0 attendable.
+    mask = mask.at[:, 0].set(1.0)
+    out = fused_attention(q, k, v, mask, causal=causal)
+    exp = ref.attention(q, k, v, mask, causal=causal)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_padding_ignored():
+    """Changing Q/K/V values at masked positions must not change unmasked outputs."""
+    b, h, s, d = 1, 2, 8, 4
+    q, k, v = rand(1, (b, h, s, d)), rand(2, (b, h, s, d)), rand(3, (b, h, s, d))
+    mask = jnp.asarray([[1, 1, 1, 1, 1, 0, 0, 0]], jnp.float32)
+    base = fused_attention(q, k, v, mask)
+    k2 = k.at[:, :, 5:, :].set(99.0)
+    v2 = v.at[:, :, 5:, :].set(-99.0)
+    pert = fused_attention(q, k2, v2, mask)
+    np.testing.assert_allclose(base[:, :, :5, :], pert[:, :, :5, :], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causal_no_future_leak():
+    b, h, s, d = 1, 1, 6, 4
+    q, k, v = rand(1, (b, h, s, d)), rand(2, (b, h, s, d)), rand(3, (b, h, s, d))
+    mask = jnp.ones((b, s), jnp.float32)
+    base = fused_attention(q, k, v, mask, causal=True)
+    # Perturb only the last position; earlier outputs must be unchanged.
+    k2 = k.at[:, :, -1, :].add(7.0)
+    v2 = v.at[:, :, -1, :].add(-3.0)
+    pert = fused_attention(q, k2, v2, mask, causal=True)
+    np.testing.assert_allclose(base[:, :, :-1, :], pert[:, :, :-1, :], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_softmax_rows_sum_to_one_property():
+    """With v = identity basis stacked, output rows recover softmax probs."""
+    b, h, s = 1, 1, 8
+    q, k = rand(1, (b, h, s, s)), rand(2, (b, h, s, s))
+    v = jnp.eye(s, dtype=jnp.float32)[None, None]
+    mask = jnp.ones((b, s), jnp.float32)
+    probs = fused_attention(q, k, v, mask)
+    np.testing.assert_allclose(jnp.sum(probs, -1), jnp.ones((b, h, s)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 7, 16, 40]),
+    hidden=st.sampled_from([8, 32]),
+    inter=st.sampled_from([16, 64]),
+    tile=st.sampled_from([4, 8, 128]),
+)
+def test_ffn_matches_ref(rows, hidden, inter, tile):
+    x = rand(1, (rows, hidden))
+    w1, b1 = rand(2, (hidden, inter), 0.1), rand(3, (inter,), 0.1)
+    w2, b2 = rand(4, (inter, hidden), 0.1), rand(5, (hidden,), 0.1)
+    out = fused_ffn(x, w1, b1, w2, b2, row_tile=tile)
+    exp = ref.ffn(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-5)
+
+
+def test_ffn_gelu_zero_fixed_point():
+    """GELU(0)=0, so zero input + zero biases -> zero output."""
+    x = jnp.zeros((4, 8), jnp.float32)
+    w1, w2 = rand(1, (8, 16)), rand(2, (16, 8))
+    out = fused_ffn(x, w1, jnp.zeros(16), w2, jnp.zeros(8))
+    np.testing.assert_allclose(out, jnp.zeros((4, 8)), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# fused_residual_layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 5, 16, 33]),
+    hidden=st.sampled_from([8, 32, 64]),
+    tile=st.sampled_from([4, 16, 128]),
+)
+def test_layernorm_matches_ref(rows, hidden, tile):
+    x, r = rand(1, (rows, hidden)), rand(2, (rows, hidden))
+    g, b = rand(3, (hidden,)), rand(4, (hidden,))
+    out = fused_residual_layernorm(x, r, g, b, row_tile=tile)
+    exp = ref.residual_layernorm(x, r, g, b)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_statistics():
+    """With gamma=1, beta=0, each output row has mean ~0 and var ~1."""
+    x, r = rand(1, (16, 64)), rand(2, (16, 64))
+    out = fused_residual_layernorm(x, r, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(out, -1), jnp.zeros(16), atol=1e-5)
+    np.testing.assert_allclose(jnp.var(out, -1), jnp.ones(16), rtol=1e-3)
+
+
+def test_layernorm_scale_shift():
+    x, r = rand(1, (4, 8)), rand(2, (4, 8))
+    g, b = 2.0 * jnp.ones(8), 3.0 * jnp.ones(8)
+    base = fused_residual_layernorm(x, r, jnp.ones(8), jnp.zeros(8))
+    scaled = fused_residual_layernorm(x, r, g, b)
+    np.testing.assert_allclose(scaled, 2.0 * base + 3.0, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused_add (Fig. 4) — both loop variants
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    variant=st.sampled_from(["row", "hoisted"]),
+    tile=st.sampled_from([4, 16, 64]),
+)
+def test_fused_add_matches_ref(m, n, variant, tile):
+    a, b = rand(1, (m, n)), rand(2, (m, n))
+    c, d = rand(3, (n,)), rand(4, (n,))
+    out = fused_add(a, b, c, d, variant=variant, tile=tile)
+    np.testing.assert_allclose(out, ref.fused_add(a, b, c, d), rtol=1e-5, atol=1e-6)
+
+
+def test_fused_add_variants_agree():
+    """The autotuner's two candidate schedules must be value-identical —
+    the legality invariant the paper's polyhedral analysis guarantees."""
+    a, b = rand(1, (33, 17)), rand(2, (33, 17))
+    c, d = rand(3, (17,)), rand(4, (17,))
+    row = fused_add(a, b, c, d, variant="row", tile=8)
+    hoist = fused_add(a, b, c, d, variant="hoisted", tile=8)
+    np.testing.assert_allclose(row, hoist, rtol=1e-6, atol=1e-7)
+
+
+def test_fused_add_bad_variant_raises():
+    a = jnp.ones((2, 2))
+    with pytest.raises(ValueError):
+        fused_add(a, a, jnp.ones(2), jnp.ones(2), variant="nope")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2b candidate (3): the distributive-law rewrite is value-preserving
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 64))
+def test_fig2b_distributive_rewrite_preserves_value(n):
+    s, f, g, h = (rand(i, (n,)) for i in range(4))
+    pre = ref.fig2b_candidate3(s, f, g, h)
+    post = (s + f) * (g + h)  # LP-Fusion's rewritten form
+    np.testing.assert_allclose(pre, post, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,150 @@
+"""L2 correctness: pallas vs ref forward paths, heads, losses, train steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, seq=16, layers=2, hidden=32, heads=2, inter=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(7)
+    ids = jax.random.randint(key, (2, CFG.seq), 0, CFG.vocab)
+    tt = jnp.zeros_like(ids)
+    mask = jnp.ones((2, CFG.seq), jnp.float32).at[1, 12:].set(0.0)
+    return ids, tt, mask
+
+
+def test_param_specs_roundtrip(params):
+    flat = M.params_to_list(CFG, params)
+    back = M.params_from_list(CFG, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_param_count_formula():
+    """Param count grows exactly linearly in layer count (NAS phase 1)."""
+    def count(layers):
+        c = M.ModelConfig(vocab=64, seq=16, layers=layers, hidden=32, heads=2, inter=64)
+        return sum(int(np.prod(s)) for _, s in M.param_specs(c))
+
+    d = count(3) - count(2)
+    assert count(4) - count(3) == d
+    assert d > 0
+
+
+def test_encoder_pallas_matches_ref(params, batch):
+    """The LP-Fused inference path and the naive unfused path are the same
+    function — the paper's compiler must be semantics-preserving."""
+    ids, tt, mask = batch
+    fused = M.encoder(CFG, params, ids, tt, mask, use_pallas=True)
+    naive = M.encoder(CFG, params, ids, tt, mask, use_pallas=False)
+    np.testing.assert_allclose(fused, naive, rtol=1e-4, atol=1e-5)
+
+
+def test_qa_forward_shapes_and_padding(params, batch):
+    ids, tt, mask = batch
+    start, end = M.qa_forward(CFG, params, ids, tt, mask)
+    assert start.shape == (2, CFG.seq) and end.shape == (2, CFG.seq)
+    # Padded positions must be un-selectable.
+    assert float(jnp.max(start[1, 12:])) < -1e8
+    assert int(jnp.argmax(start[1])) < 12
+
+
+def test_qa_pallas_matches_ref(params, batch):
+    ids, tt, mask = batch
+    s1, e1 = M.qa_forward(CFG, params, ids, tt, mask, use_pallas=True)
+    s2, e2 = M.qa_forward(CFG, params, ids, tt, mask, use_pallas=False)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(e1, e2, rtol=1e-4, atol=1e-4)
+
+
+def test_cls_forward_shapes(params, batch):
+    ids, tt, mask = batch
+    logits = M.cls_forward(CFG, params, ids, tt, mask)
+    assert logits.shape == (2, CFG.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lm_forward_causality(params):
+    """Changing a future token must not change earlier logits."""
+    ids = jax.random.randint(jax.random.PRNGKey(0), (1, CFG.seq), 0, CFG.vocab)
+    mask = jnp.ones((1, CFG.seq), jnp.float32)
+    base = M.lm_forward(CFG, params, ids, mask)
+    ids2 = ids.at[0, -1].set((ids[0, -1] + 1) % CFG.vocab)
+    pert = M.lm_forward(CFG, params, ids2, mask)
+    np.testing.assert_allclose(base[:, :-1], pert[:, :-1], rtol=1e-4, atol=1e-4)
+
+
+def test_lm_loss_uniform_at_init_is_log_vocab(params):
+    """A random-init model's LM loss should be near ln(vocab)."""
+    ids = jax.random.randint(jax.random.PRNGKey(1), (4, CFG.seq), 0, CFG.vocab)
+    mask = jnp.ones((4, CFG.seq), jnp.float32)
+    loss = float(M.lm_loss(CFG, params, ids, mask))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+def test_lm_train_step_decreases_loss(params):
+    """A few SGD steps on a fixed batch must reduce the loss — the same
+    invariant the Rust fine-tune loop checks end-to-end."""
+    step = M.make_lm_train_step(CFG)
+    ids = jax.random.randint(jax.random.PRNGKey(2), (8, CFG.seq), 0, CFG.vocab)
+    mask = jnp.ones((8, CFG.seq), jnp.float32)
+    flat = M.params_to_list(CFG, params)
+    losses = []
+    for _ in range(4):
+        out = step(*flat, ids, mask, jnp.float32(0.5))
+        flat, loss = list(out[:-1]), float(out[-1])
+        losses.append(loss)
+    assert losses[-1] < losses[0], losses
+
+
+def test_cls_train_step_decreases_loss(params):
+    step = M.make_cls_train_step(CFG)
+    key = jax.random.PRNGKey(3)
+    ids = jax.random.randint(key, (8, CFG.seq), 0, CFG.vocab)
+    tt = jnp.zeros_like(ids)
+    mask = jnp.ones((8, CFG.seq), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(4), (8,), 0, CFG.n_classes)
+    flat = M.params_to_list(CFG, params)
+    losses = []
+    for _ in range(4):
+        out = step(*flat, ids, tt, mask, labels, jnp.float32(0.5))
+        flat, loss = list(out[:-1]), float(out[-1])
+        losses.append(loss)
+    assert losses[-1] < losses[0], losses
+
+
+def test_flops_ordering():
+    """The paper's #FLOPs column ordering: BERT_BASE > DistilBERT > CANAOBERT."""
+    bert_base = M.ModelConfig(vocab=30522, seq=128, layers=12, hidden=768, heads=12, inter=3072)
+    distil = M.ModelConfig(vocab=30522, seq=128, layers=6, hidden=768, heads=12, inter=3072)
+    canao = M.ModelConfig(vocab=30522, seq=128, layers=6, hidden=384, heads=6, inter=1536)
+    assert bert_base.flops() > distil.flops() > canao.flops()
+    # BERT_BASE should be ~2x DistilBERT (paper: 21.8G vs 10.9G)
+    ratio = bert_base.flops() / distil.flops()
+    assert 1.7 < ratio < 2.2
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        M.ModelConfig(hidden=100, heads=3)
+
+
+def test_mask_zero_rows_are_finite(params):
+    """Even an (almost) fully padded sequence must produce finite outputs."""
+    ids = jnp.zeros((1, CFG.seq), jnp.int32)
+    tt = jnp.zeros_like(ids)
+    mask = jnp.zeros((1, CFG.seq), jnp.float32).at[0, 0].set(1.0)
+    out = M.encoder(CFG, params, ids, tt, mask)
+    assert bool(jnp.all(jnp.isfinite(out)))

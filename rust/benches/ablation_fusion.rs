@@ -1,0 +1,126 @@
+//! Ablation D1: LP-Fusion on/off, measured two ways:
+//!   (a) REAL host execution of the compiled plans (the compiler's own
+//!       executor) on a small BERT. Note: after the §Perf vectorization
+//!       BOTH paths are memory-bound on the host, and rank-3 fused blocks
+//!       still take the scalar fallback, so the host-side gap is small and
+//!       can even invert on tiny models — the honest signal for *mobile*
+//!       fusion benefit is (b);
+//!   (b) the device simulator across all three Table-1 models and three
+//!       fusion configurations (off / TFLite-repertoire / full LP-Fusion),
+//!       where launch overhead and intermediate traffic are priced.
+//!
+//! Run: cargo bench --bench ablation_fusion
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use canao::compiler::fusion::{lp_fusion, FusionConfig};
+use canao::compiler::ir::Op;
+use canao::compiler::{compile, CompileOptions};
+use canao::device::{plan_latency, tflite, DeviceProfile};
+use canao::model::{build_encoder, BertConfig};
+use canao::util::bench::{black_box, Group};
+use canao::util::rng::Rng;
+
+fn main() {
+    // (a) real host execution, fused vs unfused plans.
+    let cfg = BertConfig { vocab: 256, seq: 32, layers: 2, hidden: 64, heads: 2, inter: 128 };
+    let graph = build_encoder(&cfg);
+    let mut feeds: HashMap<String, Vec<f32>> = HashMap::new();
+    let mut rng = Rng::new(5);
+    for node in &graph.nodes {
+        match &node.op {
+            Op::Input { name } => {
+                let v = if name.starts_with("mask") {
+                    vec![0.0; node.shape.numel()]
+                } else {
+                    (0..node.shape.numel()).map(|_| rng.below(200) as f32).collect()
+                };
+                feeds.insert(name.clone(), v);
+            }
+            Op::Weight { name } => {
+                let v = if name.ends_with("gamma") {
+                    vec![1.0; node.shape.numel()]
+                } else {
+                    (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 0.05)).collect()
+                };
+                feeds.insert(name.clone(), v);
+            }
+            _ => {}
+        }
+    }
+
+    let fused = compile(&graph, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    let unfused =
+        compile(&graph, &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() });
+    println!(
+        "host executor, tiny BERT ({} ops): fused {} blocks vs unfused {} blocks",
+        fused.plan.num_ops(),
+        fused.plan.num_blocks(),
+        unfused.plan.num_blocks()
+    );
+    let mut g = Group::with_target("host plan execution", Duration::from_millis(1200));
+    let f = g.bench("fused", || {
+        black_box(fused.run(&feeds));
+    });
+    let f_med = f.median;
+    let u = g.bench("unfused", || {
+        black_box(unfused.run(&feeds));
+    });
+    println!(
+        "  -> host-executor fused/unfused ratio: {:.2}x (see header note; \
+         mobile benefit is the grid below)",
+        u.median.as_secs_f64() / f_med.as_secs_f64()
+    );
+
+    // (b) device-simulated ablation grid.
+    println!("\ndevice-simulated latency (ms), fusion ablation grid:");
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12}",
+        "model", "no-fusion", "tflite-rep", "lp-fusion", "lp/no gain"
+    );
+    for (name, cfg) in [
+        ("distilbert", BertConfig::distilbert()),
+        ("bert_base", BertConfig::bert_base()),
+        ("canaobert", BertConfig::canaobert()),
+    ] {
+        let graph = build_encoder(&cfg);
+        let dev = DeviceProfile::s865_cpu();
+        let off = compile(
+            &graph,
+            &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() },
+        );
+        let off_ms = plan_latency(&off.graph, &off.plan, &dev).ms();
+        let tfl_plan = lp_fusion(&off.graph, &tflite::tflite_fusion_config());
+        let tfl_ms = plan_latency(&off.graph, &tfl_plan, &dev).ms();
+        let full =
+            compile(&graph, &CompileOptions { model_only_tuning: true, ..Default::default() });
+        let full_ms = plan_latency(&full.graph, &full.plan, &dev).ms();
+        println!(
+            "{:<12} {:>10.1}ms {:>10.1}ms {:>10.1}ms {:>11.2}x",
+            name,
+            off_ms,
+            tfl_ms,
+            full_ms,
+            off_ms / full_ms
+        );
+    }
+
+    // Footprint-budget sweep: how the fast-memory constraint shapes fusion.
+    println!("\nfootprint budget sweep (canaobert, CPU):");
+    let graph = build_encoder(&BertConfig::canaobert());
+    for budget_kib in [64usize, 256, 1024, 4096, 16384] {
+        let fc = FusionConfig { footprint_budget: budget_kib << 10, ..Default::default() };
+        let c = compile(
+            &graph,
+            &CompileOptions { fusion: fc, model_only_tuning: true, ..Default::default() },
+        );
+        let ms = plan_latency(&c.graph, &c.plan, &DeviceProfile::s865_cpu()).ms();
+        println!(
+            "  budget {:>6} KiB -> {:>4} blocks, {:>7.1} ms",
+            budget_kib,
+            c.plan.num_blocks(),
+            ms
+        );
+    }
+}

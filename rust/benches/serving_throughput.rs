@@ -1,0 +1,94 @@
+//! Bench: serving path through real PJRT executables — single-request
+//! latency (the paper's real-time claim), batch-8 amortization, dynamic-
+//! batcher throughput under load, and text-gen tokens/s.
+//!
+//! Requires artifacts; prints a notice and exits cleanly otherwise.
+//!
+//! Run: make artifacts && cargo bench --bench serving_throughput
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use canao::runtime::Runtime;
+use canao::serving::batcher::{Batcher, BatcherOptions};
+use canao::serving::{GenEngine, GenRequest, QaEngine, QaRequest};
+use canao::tokenizer::{Tokenizer, Vocab};
+use canao::util::bench::{bench, fmt_dur};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("serving_throughput: artifacts missing — run `make artifacts` first. skipping.");
+        return Ok(());
+    }
+    let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")?;
+    let tok = Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)));
+    let mut rt = Runtime::open("artifacts")?;
+    println!("platform: {}", rt.platform());
+
+    let mut engine = QaEngine::new(&mut rt, Arc::clone(&tok))?;
+    engine.calibrate()?;
+    println!("calibrated batch cap: {}", engine.batch_cap());
+    let req = QaRequest {
+        question: "what reduces the number of kernels ?".into(),
+        context: "layer fusion reduces the number of kernels and the memory traffic . \
+                  the runtime loads the compiled program and executes it on the device ."
+            .into(),
+    };
+
+    // Single-request latency (the paper's per-inference number).
+    let s1 = bench("qa_b1", Duration::from_secs(2), || {
+        let _ = engine.answer_batch(std::slice::from_ref(&req)).unwrap();
+    });
+    println!("qa single-request: {} median", fmt_dur(s1.median));
+
+    // Batch-8 amortization.
+    let batch: Vec<QaRequest> = vec![req.clone(); 8];
+    let s8 = bench("qa_b8", Duration::from_secs(2), || {
+        let _ = engine.answer_batch(&batch).unwrap();
+    });
+    println!(
+        "qa batch-8:        {} median  ({:.2} ms/request, {:.2}x amortization)",
+        fmt_dur(s8.median),
+        s8.median.as_secs_f64() * 1e3 / 8.0,
+        s1.median.as_secs_f64() * 8.0 / s8.median.as_secs_f64()
+    );
+
+    // Dynamic batcher under concurrent load.
+    let batcher = Arc::new(Batcher::new(
+        engine,
+        BatcherOptions { max_wait: Duration::from_millis(4), min_batch: 4 },
+    ));
+    let n = 128;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n).map(|_| batcher.submit(req.clone())).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed();
+    let mut m = batcher.metrics.lock().unwrap();
+    println!(
+        "batched serving:   {n} reqs in {} = {:.1} req/s (mean batch {:.1})",
+        fmt_dur(wall),
+        n as f64 / wall.as_secs_f64(),
+        m.mean_batch_size()
+    );
+    println!("                   {}", m.total_latency.summary());
+    drop(m);
+
+    // Text generation tokens/s.
+    let mut rt2 = Runtime::open("artifacts")?;
+    let gen = GenEngine::new(&mut rt2, tok)?;
+    let resp = gen.generate(&GenRequest {
+        prompt: "the model".into(),
+        max_new_tokens: 16,
+        temperature: 0.0,
+        seed: 1,
+    })?;
+    let mean_ms = resp.per_token_ms.iter().sum::<f64>() / resp.per_token_ms.len() as f64;
+    println!(
+        "textgen:           {:.2} ms/token = {:.1} tok/s (greedy, seq=64 full re-forward)",
+        mean_ms,
+        1e3 / mean_ms
+    );
+    Ok(())
+}

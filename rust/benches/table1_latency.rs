@@ -1,0 +1,43 @@
+//! Bench: regenerate **Table 1** end to end and time the compiler work
+//! that produces it (graph build, passes, LP-Fusion, pricing).
+//!
+//! Run: cargo bench --bench table1_latency
+
+use std::time::Duration;
+
+use canao::compiler::{compile, CompileOptions};
+use canao::device::{plan_latency, tflite, DeviceProfile};
+use canao::model::{build_encoder, BertConfig};
+use canao::util::bench::{black_box, Group};
+
+fn main() {
+    // The table itself (the deliverable).
+    canao::bench_table1(&mut std::io::stdout()).unwrap();
+
+    // How long the compiler takes per model (the NAS inner-loop cost).
+    let mut g = Group::with_target("compiler pipeline cost", Duration::from_millis(800));
+    for (name, cfg) in [
+        ("distilbert", BertConfig::distilbert()),
+        ("bert_base", BertConfig::bert_base()),
+        ("canaobert", BertConfig::canaobert()),
+    ] {
+        let graph = build_encoder(&cfg);
+        g.bench(&format!("graph_build/{name}"), || {
+            black_box(build_encoder(&cfg));
+        });
+        g.bench(&format!("compile_fused/{name}"), || {
+            black_box(compile(
+                &graph,
+                &CompileOptions { model_only_tuning: true, ..Default::default() },
+            ));
+        });
+        let compiled =
+            compile(&graph, &CompileOptions { model_only_tuning: true, ..Default::default() });
+        g.bench(&format!("price_cpu/{name}"), || {
+            black_box(plan_latency(&compiled.graph, &compiled.plan, &DeviceProfile::s865_cpu()));
+        });
+        g.bench(&format!("tflite_model/{name}"), || {
+            black_box(tflite::tflite_latency_graph(&graph));
+        });
+    }
+}

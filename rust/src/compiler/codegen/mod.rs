@@ -1,0 +1,16 @@
+//! Code generation (S5): lower fused blocks to executable kernels.
+//!
+//! Two backends share one "tape" representation of a block's elementwise
+//! dataflow:
+//!
+//! * `tape` — compile a fused elementwise block into a register program
+//!   with pre-resolved broadcast strides. The executor runs it under
+//!   either Fig. 4 schedule (row-recompute vs hoisted/col-major); this is
+//!   the *generated code* the autotuner actually measures on host.
+//! * `pretty` — emit the pseudo-C the paper prints in Fig. 4 (used by the
+//!   fig2_fusion example and in tests to pin the loop structures).
+
+pub mod pretty;
+pub mod tape;
+
+pub use tape::{BlockTape, TapeInst};

@@ -1,0 +1,173 @@
+//! Pseudo-C emission for generated fused loops — the format of the paper's
+//! Fig. 4. Used by the fig2_fusion example and pinned in tests so the
+//! emitted loop structure can't silently change.
+
+use crate::compiler::codegen::tape::{BlockTape, BOp, TapeInst, UOp};
+use crate::compiler::poly::Schedule;
+
+fn expr_of(tape: &BlockTape, reg: usize, names: &[String], idx: &str, inv_idx: &str) -> String {
+    match tape.insts[reg] {
+        TapeInst::Load { input } => {
+            let strides = &tape.input_strides[input];
+            let sub = if strides.iter().all(|&s| s == 0) {
+                "0".to_string()
+            } else if tape.domain.rank() == 2 && strides[0] == 0 {
+                inv_idx.to_string()
+            } else {
+                idx.to_string()
+            };
+            format!("{}[{}]", names[input], sub)
+        }
+        TapeInst::Const(v) => format!("{v}"),
+        TapeInst::Unary { op, src } => {
+            let s = expr_of(tape, src, names, idx, inv_idx);
+            let f = match op {
+                UOp::Neg => return format!("(-{s})"),
+                UOp::Exp => "expf",
+                UOp::Erf => "erff",
+                UOp::Tanh => "tanhf",
+                UOp::Rsqrt => "rsqrtf",
+                UOp::Recip => return format!("(1.0f / {s})"),
+            };
+            format!("{f}({s})")
+        }
+        TapeInst::Binary { op, lhs, rhs } => {
+            let l = expr_of(tape, lhs, names, idx, inv_idx);
+            let r = expr_of(tape, rhs, names, idx, inv_idx);
+            let o = match op {
+                BOp::Add => "+",
+                BOp::Sub => "-",
+                BOp::Mul => "*",
+                BOp::Div => "/",
+                BOp::Max => return format!("fmaxf({l}, {r})"),
+            };
+            format!("({l} {o} {r})")
+        }
+    }
+}
+
+/// Emit a Fig.4-style fused function for a 2-D tape under `sched`.
+pub fn emit_c(tape: &BlockTape, fn_name: &str, sched: Schedule) -> String {
+    assert_eq!(tape.domain.rank(), 2, "pretty printer handles 2-D domains");
+    let (m, n) = (tape.domain.dims[0], tape.domain.dims[1]);
+    let names: Vec<String> = (0..tape.inputs.len()).map(|i| format!("in{i}")).collect();
+    let args: Vec<String> = names.iter().map(|n| format!("const float* {n}")).collect();
+    let mut s = format!(
+        "// domain: {m} x {n}\nfunc {fn_name}: {}, float* out\n",
+        args.join(", ")
+    );
+    let out_reg = tape.output_regs[0].1;
+    match sched {
+        Schedule::RowRecompute => {
+            // fuse_add: i outer, j inner, everything recomputed inline.
+            s += "  for i = 0 to i < row\n    for j = 0 to j < col\n";
+            s += "      let idx = i * col + j\n";
+            let e = expr_of(tape, out_reg, &names, "idx", "j");
+            s += &format!("      out[idx] = {e}\n");
+        }
+        Schedule::HoistedColMajor => {
+            // fuse_add': j outer, invariants hoisted, i inner (col-major).
+            s += "  for j = 0 to j < col\n";
+            // Hoist each maximal invariant register used by a variant inst.
+            let mut hoisted_names = vec![None::<String>; tape.insts.len()];
+            let mut tmp_count = 0;
+            for (ri, inv) in tape.row_invariant.iter().enumerate() {
+                if !inv {
+                    continue;
+                }
+                // hoist only if used by some variant instruction
+                let used_by_variant = tape.insts.iter().enumerate().any(|(rj, inst)| {
+                    !tape.row_invariant[rj]
+                        && match *inst {
+                            TapeInst::Unary { src, .. } => src == ri,
+                            TapeInst::Binary { lhs, rhs, .. } => lhs == ri || rhs == ri,
+                            _ => false,
+                        }
+                });
+                if used_by_variant
+                    && matches!(tape.insts[ri], TapeInst::Binary { .. } | TapeInst::Unary { .. })
+                {
+                    let e = expr_of(tape, ri, &names, "idx", "j");
+                    let name = format!("temp{tmp_count}");
+                    s += &format!("    let {name} = {e}\n");
+                    hoisted_names[ri] = Some(name);
+                    tmp_count += 1;
+                }
+            }
+            s += "    for i = 0 to i < row\n      let idx = i * col + j\n";
+            let e = expr_with_temps(tape, out_reg, &names, &hoisted_names);
+            s += &format!("      out[idx] = {e}\n");
+        }
+    }
+    s
+}
+
+fn expr_with_temps(
+    tape: &BlockTape,
+    reg: usize,
+    names: &[String],
+    temps: &[Option<String>],
+) -> String {
+    if let Some(t) = &temps[reg] {
+        return t.clone();
+    }
+    match tape.insts[reg] {
+        TapeInst::Binary { op, lhs, rhs } => {
+            let l = expr_with_temps(tape, lhs, names, temps);
+            let r = expr_with_temps(tape, rhs, names, temps);
+            let o = match op {
+                BOp::Add => "+",
+                BOp::Sub => "-",
+                BOp::Mul => "*",
+                BOp::Div => "/",
+                BOp::Max => return format!("fmaxf({l}, {r})"),
+            };
+            format!("({l} {o} {r})")
+        }
+        TapeInst::Unary { .. } | TapeInst::Load { .. } | TapeInst::Const(_) => {
+            expr_of(tape, reg, names, "idx", "j")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::codegen::tape::compile_block;
+    use crate::compiler::fusion::{lp_fusion, FusionConfig};
+    use crate::compiler::ir::{DType, Graph};
+
+    fn fig4_tape() -> BlockTape {
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 16], DType::F32);
+        let b = g.input("B", &[8, 16], DType::F32);
+        let c = g.input("C", &[16], DType::F32);
+        let d = g.input("D", &[16], DType::F32);
+        let m1 = g.mul(a, b);
+        let m2 = g.mul(c, d);
+        let out = g.add(m1, m2);
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        compile_block(&g, &plan.blocks[0])
+    }
+
+    #[test]
+    fn fuse_add_matches_paper_structure() {
+        let c = emit_c(&fig4_tape(), "fuse_add", Schedule::RowRecompute);
+        // The paper's fuse_add: i outer, j inner, c*d inline (recomputed).
+        assert!(c.contains("for i = 0"), "{c}");
+        assert!(c.contains("for j = 0"), "{c}");
+        assert!(c.find("for i").unwrap() < c.find("for j").unwrap(), "{c}");
+        assert!(c.contains("in2[j] * in3[j]"), "{c}");
+        assert!(!c.contains("temp"), "{c}");
+    }
+
+    #[test]
+    fn fuse_add_prime_hoists_and_permutes() {
+        let c = emit_c(&fig4_tape(), "fuse_add_prime", Schedule::HoistedColMajor);
+        // The paper's fuse_add': j outer, temp = c[j]*d[j] hoisted.
+        assert!(c.find("for j").unwrap() < c.find("for i").unwrap(), "{c}");
+        assert!(c.contains("let temp0 = (in2[j] * in3[j])"), "{c}");
+        assert!(c.contains("temp0"), "{c}");
+    }
+}

@@ -1,0 +1,608 @@
+//! Tape compilation + scheduled execution of fused elementwise blocks.
+//!
+//! A `BlockTape` is a straight-line register program computing all block
+//! nodes for one output coordinate. Each external input carries broadcast
+//! strides resolved against the block's output domain, so the same tape
+//! runs under any loop order. Row-invariance of each register is
+//! precomputed: the hoisted schedule evaluates invariant registers once
+//! per column (Fig. 4 `fuse_add'`), the row schedule recomputes them
+//! (Fig. 4 `fuse_add`).
+
+use crate::compiler::exec::tensor::Tensor;
+use crate::compiler::fusion::FusedBlock;
+use crate::compiler::ir::{Graph, NodeId, Op, Shape};
+use crate::compiler::passes::const_fold::erf;
+use crate::compiler::poly::{block_output_shape, Access, Schedule};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TapeInst {
+    /// Load external input `idx` at the current coordinate.
+    Load { input: usize },
+    Const(f32),
+    Unary { op: UOp, src: usize },
+    Binary { op: BOp, lhs: usize, rhs: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UOp {
+    Neg,
+    Exp,
+    Erf,
+    Tanh,
+    Rsqrt,
+    Recip,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockTape {
+    /// One register per instruction.
+    pub insts: Vec<TapeInst>,
+    /// External input node ids, in load order.
+    pub inputs: Vec<NodeId>,
+    /// Broadcast strides per external input, vs the output domain.
+    pub input_strides: Vec<Vec<usize>>,
+    /// Register index producing each block output (single-output blocks
+    /// are the common case; multi-output supported).
+    pub output_regs: Vec<(NodeId, usize)>,
+    /// Whether each register is invariant along axis 0 of the domain.
+    pub row_invariant: Vec<bool>,
+    pub domain: Shape,
+}
+
+/// Compile an elementwise (chain or broadcast) block into a tape.
+/// Panics if the block contains non-elementwise ops — callers dispatch by
+/// `BlockKind` first.
+pub fn compile_block(g: &Graph, block: &FusedBlock) -> BlockTape {
+    let domain = block_output_shape(g, block);
+    let mut insts = Vec::new();
+    let mut inputs: Vec<NodeId> = Vec::new();
+    let mut input_strides: Vec<Vec<usize>> = Vec::new();
+    let mut row_invariant: Vec<bool> = Vec::new();
+    // node id -> register
+    let mut reg_of: std::collections::HashMap<NodeId, usize> = std::collections::HashMap::new();
+
+    let load = |nid: NodeId,
+                    insts: &mut Vec<TapeInst>,
+                    row_invariant: &mut Vec<bool>,
+                    inputs: &mut Vec<NodeId>,
+                    input_strides: &mut Vec<Vec<usize>>|
+     -> usize {
+        if let Op::Const { value } = g.nodes[nid].op {
+            insts.push(TapeInst::Const(value));
+            row_invariant.push(true);
+            return insts.len() - 1;
+        }
+        let idx = if let Some(p) = inputs.iter().position(|&x| x == nid) {
+            p
+        } else {
+            inputs.push(nid);
+            input_strides.push(Access::broadcast(&g.nodes[nid].shape, &domain).strides);
+            inputs.len() - 1
+        };
+        insts.push(TapeInst::Load { input: idx });
+        let inv = domain.rank() >= 1 && input_strides[idx].first().copied() == Some(0);
+        row_invariant.push(inv);
+        insts.len() - 1
+    };
+
+    for &nid in &block.nodes {
+        let node = &g.nodes[nid];
+        let operand = |i: usize,
+                           insts: &mut Vec<TapeInst>,
+                           row_invariant: &mut Vec<bool>,
+                           inputs: &mut Vec<NodeId>,
+                           input_strides: &mut Vec<Vec<usize>>|
+         -> usize {
+            let src = node.inputs[i];
+            if let Some(&r) = reg_of.get(&src) {
+                r
+            } else {
+                load(src, insts, row_invariant, inputs, input_strides)
+            }
+        };
+        let reg = if node.op.is_elementwise_unary() {
+            let s = operand(0, &mut insts, &mut row_invariant, &mut inputs, &mut input_strides);
+            let op = match node.op {
+                Op::Neg => UOp::Neg,
+                Op::Exp => UOp::Exp,
+                Op::Erf => UOp::Erf,
+                Op::Tanh => UOp::Tanh,
+                Op::Rsqrt => UOp::Rsqrt,
+                Op::Recip => UOp::Recip,
+                _ => unreachable!(),
+            };
+            insts.push(TapeInst::Unary { op, src: s });
+            row_invariant.push(row_invariant[s]);
+            insts.len() - 1
+        } else if node.op.is_elementwise_binary() {
+            let l = operand(0, &mut insts, &mut row_invariant, &mut inputs, &mut input_strides);
+            let r = operand(1, &mut insts, &mut row_invariant, &mut inputs, &mut input_strides);
+            let op = match node.op {
+                Op::Add => BOp::Add,
+                Op::Sub => BOp::Sub,
+                Op::Mul => BOp::Mul,
+                Op::Div => BOp::Div,
+                Op::Max => BOp::Max,
+                _ => unreachable!(),
+            };
+            insts.push(TapeInst::Binary { op, lhs: l, rhs: r });
+            row_invariant.push(row_invariant[l] && row_invariant[r]);
+            insts.len() - 1
+        } else {
+            panic!("compile_block on non-elementwise op {:?}", node.op);
+        };
+        reg_of.insert(nid, reg);
+    }
+
+    let output_regs = block.outputs.iter().map(|&o| (o, reg_of[&o])).collect();
+    BlockTape { insts, inputs, input_strides, output_regs, row_invariant, domain }
+}
+
+impl BlockTape {
+    /// Evaluate the full tape at a flat set of per-input offsets.
+    #[inline]
+    fn eval_at(&self, regs: &mut [f32], offsets: &[usize], bufs: &[&Tensor]) {
+        for (i, inst) in self.insts.iter().enumerate() {
+            regs[i] = match *inst {
+                TapeInst::Load { input } => bufs[input].data[offsets[input]],
+                TapeInst::Const(v) => v,
+                TapeInst::Unary { op, src } => apply_unary(op, regs[src]),
+                TapeInst::Binary { op, lhs, rhs } => apply_binary(op, regs[lhs], regs[rhs]),
+            };
+        }
+    }
+
+    /// Execute under `sched`, producing one tensor per block output.
+    /// `bufs` must align with `self.inputs`.
+    ///
+    /// Perf note (§Perf in EXPERIMENTS.md): 2-D domains take vectorized
+    /// fast paths — one instruction-dispatch per tape register per ROW
+    /// (row schedule) or per COLUMN (hoisted schedule) instead of per
+    /// element, exactly what real codegen emits as SIMD loops. Memory
+    /// access order (the schedules' defining property) is unchanged.
+    pub fn execute(&self, bufs: &[&Tensor], sched: Schedule) -> Vec<Tensor> {
+        assert_eq!(bufs.len(), self.inputs.len());
+        if self.domain.rank() == 2 {
+            return match sched {
+                Schedule::RowRecompute => self.execute_rows_vectorized(bufs),
+                Schedule::HoistedColMajor => self.execute_cols_vectorized(bufs),
+            };
+        }
+        self.execute_scalar(bufs, sched)
+    }
+
+    /// Row schedule, vectorized: walk rows; evaluate each register across
+    /// the whole row (sequential access; broadcast rows re-read per row =
+    /// the fuse_add recompute semantics).
+    fn execute_rows_vectorized(&self, bufs: &[&Tensor]) -> Vec<Tensor> {
+        let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
+        let numel = m * n;
+        let mut outs: Vec<Vec<f32>> =
+            self.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
+        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; self.insts.len()];
+
+        for i in 0..m {
+            for (ri, inst) in self.insts.iter().enumerate() {
+                match *inst {
+                    TapeInst::Load { input } => {
+                        let s = &self.input_strides[input];
+                        let base = i * s[0];
+                        let data = &bufs[input].data;
+                        let dst = &mut regs[ri];
+                        if s[1] == 1 {
+                            dst.copy_from_slice(&data[base..base + n]);
+                        } else if s[1] == 0 {
+                            dst.fill(data[base]);
+                        } else {
+                            for (j, d) in dst.iter_mut().enumerate() {
+                                *d = data[base + j * s[1]];
+                            }
+                        }
+                    }
+                    TapeInst::Const(v) => regs[ri].fill(v),
+                    TapeInst::Unary { op, src } => {
+                        let (a, b) = split_two(&mut regs, ri, src);
+                        for (o, &x) in a.iter_mut().zip(b.iter()) {
+                            *o = apply_unary(op, x);
+                        }
+                    }
+                    TapeInst::Binary { op, lhs, rhs } => {
+                        let (dst, l, r) = split_three(&mut regs, ri, lhs, rhs);
+                        match op {
+                            BOp::Add => vbin(dst, l, r, |a, b| a + b),
+                            BOp::Sub => vbin(dst, l, r, |a, b| a - b),
+                            BOp::Mul => vbin(dst, l, r, |a, b| a * b),
+                            BOp::Div => vbin(dst, l, r, |a, b| a / b),
+                            BOp::Max => vbin(dst, l, r, f32::max),
+                        }
+                    }
+                }
+            }
+            for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
+                outs[oi][i * n..(i + 1) * n].copy_from_slice(&regs[r]);
+            }
+        }
+        outs.into_iter()
+            .map(|data| Tensor { shape: self.domain.clone(), data })
+            .collect()
+    }
+
+    /// Hoisted schedule, vectorized: walk columns; row-invariant registers
+    /// computed once per column (scalars), variant registers evaluated
+    /// down the column (stride-n access = the fuse_add' locality cost).
+    fn execute_cols_vectorized(&self, bufs: &[&Tensor]) -> Vec<Tensor> {
+        let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
+        let numel = m * n;
+        let mut outs: Vec<Vec<f32>> =
+            self.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
+        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; m]; self.insts.len()];
+        let mut hoisted = vec![0.0f32; self.insts.len()];
+
+        for j in 0..n {
+            // Scalar pass over invariant registers.
+            for (ri, inst) in self.insts.iter().enumerate() {
+                if !self.row_invariant[ri] {
+                    continue;
+                }
+                hoisted[ri] = match *inst {
+                    TapeInst::Load { input } => {
+                        bufs[input].data[j * self.input_strides[input][1]]
+                    }
+                    TapeInst::Const(v) => v,
+                    TapeInst::Unary { op, src } => apply_unary(op, hoisted[src]),
+                    TapeInst::Binary { op, lhs, rhs } => {
+                        apply_binary(op, hoisted[lhs], hoisted[rhs])
+                    }
+                };
+            }
+            // Vector pass down the column for variant registers.
+            for (ri, inst) in self.insts.iter().enumerate() {
+                if self.row_invariant[ri] {
+                    continue;
+                }
+                match *inst {
+                    TapeInst::Load { input } => {
+                        let s = &self.input_strides[input];
+                        let data = &bufs[input].data;
+                        let dst = &mut regs[ri];
+                        for (i, d) in dst.iter_mut().enumerate() {
+                            *d = data[i * s[0] + j * s[1]];
+                        }
+                    }
+                    TapeInst::Const(_) => unreachable!("consts are invariant"),
+                    TapeInst::Unary { op, src } => {
+                        if self.row_invariant[src] {
+                            let v = apply_unary(op, hoisted[src]);
+                            regs[ri].fill(v);
+                        } else {
+                            let (a, b) = split_two(&mut regs, ri, src);
+                            for (o, &x) in a.iter_mut().zip(b.iter()) {
+                                *o = apply_unary(op, x);
+                            }
+                        }
+                    }
+                    TapeInst::Binary { op, lhs, rhs } => {
+                        let f = |a: f32, b: f32| apply_binary(op, a, b);
+                        match (self.row_invariant[lhs], self.row_invariant[rhs]) {
+                            (true, true) => unreachable!("would be invariant"),
+                            (true, false) => {
+                                let hv = hoisted[lhs];
+                                let (dst, r) = split_two(&mut regs, ri, rhs);
+                                for (o, &x) in dst.iter_mut().zip(r.iter()) {
+                                    *o = f(hv, x);
+                                }
+                            }
+                            (false, true) => {
+                                let hv = hoisted[rhs];
+                                let (dst, l) = split_two(&mut regs, ri, lhs);
+                                for (o, &x) in dst.iter_mut().zip(l.iter()) {
+                                    *o = f(x, hv);
+                                }
+                            }
+                            (false, false) => {
+                                let (dst, l, r) = split_three(&mut regs, ri, lhs, rhs);
+                                for ((o, &a), &b) in dst.iter_mut().zip(l.iter()).zip(r.iter()) {
+                                    *o = f(a, b);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
+                if self.row_invariant[r] {
+                    let v = hoisted[r];
+                    for i in 0..m {
+                        outs[oi][i * n + j] = v;
+                    }
+                } else {
+                    let col = &regs[r];
+                    for i in 0..m {
+                        outs[oi][i * n + j] = col[i]; // column-major store
+                    }
+                }
+            }
+        }
+        outs.into_iter()
+            .map(|data| Tensor { shape: self.domain.clone(), data })
+            .collect()
+    }
+
+    /// Generic per-element path for non-2-D domains.
+    fn execute_scalar(&self, bufs: &[&Tensor], sched: Schedule) -> Vec<Tensor> {
+        let numel = self.domain.numel();
+        let mut outs: Vec<Vec<f32>> =
+            self.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
+        let mut regs = vec![0.0f32; self.insts.len()];
+
+        match (sched, self.domain.rank()) {
+            (Schedule::HoistedColMajor, 2) => {
+                let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
+                let mut offsets = vec![0usize; self.inputs.len()];
+                for j in 0..n {
+                    // Hoist: evaluate row-invariant registers once per j.
+                    for (idx, s) in self.input_strides.iter().enumerate() {
+                        offsets[idx] = j * s[1];
+                    }
+                    let mut hoisted = vec![0.0f32; self.insts.len()];
+                    for (i, inst) in self.insts.iter().enumerate() {
+                        if self.row_invariant[i] {
+                            hoisted[i] = match *inst {
+                                TapeInst::Load { input } => bufs[input].data[offsets[input]],
+                                TapeInst::Const(v) => v,
+                                TapeInst::Unary { op, src } => apply_unary(op, hoisted[src]),
+                                TapeInst::Binary { op, lhs, rhs } => {
+                                    apply_binary(op, hoisted[lhs], hoisted[rhs])
+                                }
+                            };
+                        }
+                    }
+                    for i in 0..m {
+                        for (idx, s) in self.input_strides.iter().enumerate() {
+                            offsets[idx] = i * s[0] + j * s[1];
+                        }
+                        // Variant registers only; invariant ones come from
+                        // the hoisted bank.
+                        for (ri, inst) in self.insts.iter().enumerate() {
+                            if self.row_invariant[ri] {
+                                regs[ri] = hoisted[ri];
+                                continue;
+                            }
+                            regs[ri] = match *inst {
+                                TapeInst::Load { input } => bufs[input].data[offsets[input]],
+                                TapeInst::Const(v) => v,
+                                TapeInst::Unary { op, src } => apply_unary(op, regs[src]),
+                                TapeInst::Binary { op, lhs, rhs } => {
+                                    apply_binary(op, regs[lhs], regs[rhs])
+                                }
+                            };
+                        }
+                        let flat = i * n + j; // output stays row-major
+                        for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
+                            outs[oi][flat] = regs[r];
+                        }
+                    }
+                }
+            }
+            _ => {
+                // Row-recompute: flat row-major walk, full tape per element.
+                let strides = self.domain.strides();
+                let mut offsets = vec![0usize; self.inputs.len()];
+                let mut coords = vec![0usize; self.domain.rank()];
+                for flat in 0..numel {
+                    // decode coords (row-major)
+                    {
+                        let mut rem = flat;
+                        for (ax, st) in strides.iter().enumerate() {
+                            coords[ax] = rem / st;
+                            rem %= st;
+                        }
+                    }
+                    for (idx, s) in self.input_strides.iter().enumerate() {
+                        offsets[idx] = coords.iter().zip(s).map(|(c, st)| c * st).sum();
+                    }
+                    self.eval_at(&mut regs, &offsets, bufs);
+                    for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
+                        outs[oi][flat] = regs[r];
+                    }
+                }
+            }
+        }
+
+        outs.into_iter()
+            .map(|data| Tensor { shape: self.domain.clone(), data })
+            .collect()
+    }
+
+    /// FLOPs per full execution under a schedule (compute ops only).
+    pub fn flops(&self, sched: Schedule) -> usize {
+        let compute: Vec<bool> = self
+            .insts
+            .iter()
+            .map(|i| matches!(i, TapeInst::Unary { .. } | TapeInst::Binary { .. }))
+            .collect();
+        match (sched, self.domain.rank()) {
+            (Schedule::HoistedColMajor, 2) => {
+                let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
+                let inv: usize = compute
+                    .iter()
+                    .zip(&self.row_invariant)
+                    .filter(|(c, inv)| **c && **inv)
+                    .count();
+                let var: usize = compute
+                    .iter()
+                    .zip(&self.row_invariant)
+                    .filter(|(c, inv)| **c && !**inv)
+                    .count();
+                inv * n + var * m * n
+            }
+            _ => compute.iter().filter(|c| **c).count() * self.domain.numel(),
+        }
+    }
+}
+
+#[inline]
+fn apply_unary(op: UOp, x: f32) -> f32 {
+    match op {
+        UOp::Neg => -x,
+        UOp::Exp => x.exp(),
+        UOp::Erf => erf(x),
+        UOp::Tanh => x.tanh(),
+        UOp::Rsqrt => 1.0 / x.sqrt(),
+        UOp::Recip => 1.0 / x,
+    }
+}
+
+#[inline]
+fn apply_binary(op: BOp, a: f32, b: f32) -> f32 {
+    match op {
+        BOp::Add => a + b,
+        BOp::Sub => a - b,
+        BOp::Mul => a * b,
+        BOp::Div => a / b,
+        BOp::Max => a.max(b),
+    }
+}
+
+/// Disjoint (&mut dst, &src) views into the register bank. Registers are
+/// written in SSA order, so dst > src always.
+#[inline]
+fn split_two(regs: &mut [Vec<f32>], dst: usize, src: usize) -> (&mut [f32], &[f32]) {
+    debug_assert!(src < dst);
+    let (lo, hi) = regs.split_at_mut(dst);
+    (&mut hi[0], &lo[src])
+}
+
+/// Disjoint (&mut dst, &lhs, &rhs) views (dst > lhs, rhs).
+#[inline]
+fn split_three(
+    regs: &mut [Vec<f32>],
+    dst: usize,
+    lhs: usize,
+    rhs: usize,
+) -> (&mut [f32], &[f32], &[f32]) {
+    debug_assert!(lhs < dst && rhs < dst);
+    let (lo, hi) = regs.split_at_mut(dst);
+    (&mut hi[0], &lo[lhs], &lo[rhs])
+}
+
+/// Vectorized binary over rows; the inner closure is monomorphized per op
+/// so LLVM auto-vectorizes each into SIMD.
+#[inline]
+fn vbin(dst: &mut [f32], l: &[f32], r: &[f32], f: impl Fn(f32, f32) -> f32) {
+    for ((o, &a), &b) in dst.iter_mut().zip(l.iter()).zip(r.iter()) {
+        *o = f(a, b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::fusion::{lp_fusion, FusionConfig};
+    use crate::compiler::ir::{DType, Graph};
+    use crate::util::rng::Rng;
+
+    fn fig4(m: usize, n: usize) -> (Graph, BlockTape) {
+        let mut g = Graph::new();
+        let a = g.input("A", &[m, n], DType::F32);
+        let b = g.input("B", &[m, n], DType::F32);
+        let c = g.input("C", &[n], DType::F32);
+        let d = g.input("D", &[n], DType::F32);
+        let m1 = g.mul(a, b);
+        let m2 = g.mul(c, d);
+        let out = g.add(m1, m2);
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let tape = compile_block(&g, &plan.blocks[0]);
+        (g, tape)
+    }
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(shape, &mut rng, 1.0)
+    }
+
+    #[test]
+    fn both_schedules_match_reference() {
+        let (m, n) = (13, 17);
+        let (_, tape) = fig4(m, n);
+        let a = rand_t(&[m, n], 1);
+        let b = rand_t(&[m, n], 2);
+        let c = rand_t(&[n], 3);
+        let d = rand_t(&[n], 4);
+        let bufs = vec![&a, &b, &c, &d];
+        let row = tape.execute(&bufs, Schedule::RowRecompute);
+        let hoist = tape.execute(&bufs, Schedule::HoistedColMajor);
+        // reference
+        let mut expect = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                expect[i * n + j] = a.data[i * n + j] * b.data[i * n + j] + c.data[j] * d.data[j];
+            }
+        }
+        crate::util::check::assert_close(&row[0].data, &expect, 1e-6, 1e-6).unwrap();
+        crate::util::check::assert_close(&hoist[0].data, &expect, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn hoisted_flops_fewer() {
+        let (_, tape) = fig4(64, 32);
+        // row: 3 ops * M*N; hoisted: 2 ops * M*N + 1 op * N
+        assert_eq!(tape.flops(Schedule::RowRecompute), 3 * 64 * 32);
+        assert_eq!(tape.flops(Schedule::HoistedColMajor), 2 * 64 * 32 + 32);
+    }
+
+    #[test]
+    fn invariance_marks() {
+        let (_, tape) = fig4(4, 4);
+        // c*d register must be invariant; a*b must not.
+        let n_inv = tape.row_invariant.iter().filter(|b| **b).count();
+        assert!(n_inv >= 3); // load c, load d, mul(c,d)
+        let final_reg = tape.output_regs[0].1;
+        assert!(!tape.row_invariant[final_reg]);
+    }
+
+    #[test]
+    fn scalar_consts_in_tape() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[4, 8], DType::F32);
+        let c = g.constant(2.5);
+        let x = g.mul(a, c);
+        g.mark_output(x);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let tape = compile_block(&g, &plan.blocks[0]);
+        let at = rand_t(&[4, 8], 9);
+        let out = tape.execute(&[&at], Schedule::RowRecompute);
+        for (o, i) in out[0].data.iter().zip(&at.data) {
+            assert!((o - i * 2.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rank3_blocks_run_row_major() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[2, 3, 4], DType::F32);
+        let b = g.input("B", &[4], DType::F32);
+        let x = g.add(a, b);
+        let y = g.add_op(Op::Tanh, &[x]);
+        g.mark_output(y);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let tape = compile_block(&g, &plan.blocks[0]);
+        let at = rand_t(&[2, 3, 4], 5);
+        let bt = rand_t(&[4], 6);
+        let out = tape.execute(&[&at, &bt], Schedule::RowRecompute);
+        for i in 0..24 {
+            let expect = (at.data[i] + bt.data[i % 4]).tanh();
+            assert!((out[0].data[i] - expect).abs() < 1e-6);
+        }
+    }
+}

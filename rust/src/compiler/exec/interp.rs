@@ -1,0 +1,315 @@
+//! Reference graph interpreter — the semantic oracle for the compiler.
+//!
+//! Executes one node at a time with materialized intermediates (exactly the
+//! "without layer fusion" execution model whose memory traffic the paper
+//! eliminates). Correct, simple, O(numel) per op; not fast.
+
+use std::collections::HashMap;
+
+use super::tensor::{for_each_coord, Tensor};
+use crate::compiler::ir::{Graph, Op, Shape};
+use crate::compiler::passes::const_fold::erf;
+
+/// Evaluate the graph on named feeds (inputs AND weights by name).
+/// Returns tensors for each graph output, in order.
+pub fn eval_graph(g: &Graph, feeds: &HashMap<String, Vec<f32>>) -> Vec<Tensor> {
+    let mut vals: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for (id, _node) in g.nodes.iter().enumerate() {
+        let t = eval_node(g, id, &vals, feeds);
+        vals[id] = Some(t);
+    }
+    g.outputs.iter().map(|&o| vals[o].clone().expect("evaluated")).collect()
+}
+
+fn eval_node(
+    g: &Graph,
+    id: usize,
+    vals: &[Option<Tensor>],
+    feeds: &HashMap<String, Vec<f32>>,
+) -> Tensor {
+    let node = &g.nodes[id];
+    match &node.op {
+        Op::Input { name } | Op::Weight { name } => {
+            let data = feeds
+                .get(name)
+                .unwrap_or_else(|| panic!("missing feed {name:?}"))
+                .clone();
+            Tensor::from_vec(&node.shape.dims, data)
+        }
+        Op::Const { value } => Tensor::scalar(*value),
+        op => {
+            let args: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|&i| vals[i].as_ref().expect("topo order"))
+                .collect();
+            apply_op(op, &args, &node.shape)
+        }
+    }
+}
+
+/// Evaluate one compute op on concrete tensors — shared by the graph
+/// interpreter and the plan executor's per-node fallback.
+pub fn apply_op(op: &Op, args: &[&Tensor], out_shape: &Shape) -> Tensor {
+    let arg = |i: usize| args[i];
+    match op {
+        Op::Input { .. } | Op::Weight { .. } | Op::Const { .. } => {
+            unreachable!("leaves are fed externally")
+        }
+        Op::Neg => map_unary(arg(0), |x| -x),
+        Op::Exp => map_unary(arg(0), f32::exp),
+        Op::Erf => map_unary(arg(0), erf),
+        Op::Tanh => map_unary(arg(0), f32::tanh),
+        Op::Rsqrt => map_unary(arg(0), |x| 1.0 / x.sqrt()),
+        Op::Recip => map_unary(arg(0), |x| 1.0 / x),
+        Op::Add => map_binary(arg(0), arg(1), out_shape, |a, b| a + b),
+        Op::Sub => map_binary(arg(0), arg(1), out_shape, |a, b| a - b),
+        Op::Mul => map_binary(arg(0), arg(1), out_shape, |a, b| a * b),
+        Op::Div => map_binary(arg(0), arg(1), out_shape, |a, b| a / b),
+        Op::Max => map_binary(arg(0), arg(1), out_shape, f32::max),
+        Op::MatMul => matmul(arg(0), arg(1), out_shape),
+        Op::Transpose => transpose(arg(0)),
+        Op::Reshape { target } => Tensor::from_vec(target, arg(0).data.clone()),
+        Op::ReduceSum { axis } => reduce(arg(0), *axis, 0.0, |acc, x| acc + x),
+        Op::ReduceMax { axis } => reduce(arg(0), *axis, f32::NEG_INFINITY, f32::max),
+        Op::Gather => gather(arg(0), arg(1), out_shape),
+    }
+}
+
+fn map_unary(t: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor { shape: t.shape.clone(), data: t.data.iter().map(|&x| f(x)).collect() }
+}
+
+fn map_binary(a: &Tensor, b: &Tensor, out_shape: &Shape, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let ra = a.bcast_reader(out_shape);
+    let rb = b.bcast_reader(out_shape);
+    let mut out = Vec::with_capacity(out_shape.numel());
+    for_each_coord(out_shape, |c| out.push(f(ra(c), rb(c))));
+    Tensor { shape: out_shape.clone(), data: out }
+}
+
+fn matmul(a: &Tensor, b: &Tensor, out_shape: &Shape) -> Tensor {
+    let ar = a.shape.rank();
+    let br = b.shape.rank();
+    let (m, k) = (a.shape.dims[ar - 2], a.shape.dims[ar - 1]);
+    let n = b.shape.dims[br - 1];
+    let out_r = out_shape.rank();
+    let batch: usize = out_shape.dims[..out_r - 2].iter().product();
+
+    // Flatten leading dims with broadcasting over them.
+    let lead = Shape::new(&out_shape.dims[..out_r - 2]);
+    let a_lead = Shape::new(&a.shape.dims[..ar - 2]);
+    let b_lead = Shape::new(&b.shape.dims[..br - 2]);
+    let a_strides = a_lead.broadcast_strides(&lead);
+    let b_strides = b_lead.broadcast_strides(&lead);
+
+    let mut out = vec![0.0f32; out_shape.numel()];
+    let mut batch_coords = vec![0usize; lead.rank()];
+    for bi in 0..batch.max(1) {
+        // decode bi -> coords
+        {
+            let mut rem = bi;
+            for ax in (0..lead.rank()).rev() {
+                batch_coords[ax] = rem % lead.dims[ax];
+                rem /= lead.dims[ax];
+            }
+        }
+        let a_off: usize =
+            batch_coords.iter().zip(&a_strides).map(|(c, s)| c * s).sum::<usize>() * m * k;
+        let b_off: usize =
+            batch_coords.iter().zip(&b_strides).map(|(c, s)| c * s).sum::<usize>() * k * n;
+        let o_off = bi * m * n;
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.data[a_off + i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[b_off + kk * n..b_off + kk * n + n];
+                let orow = &mut out[o_off + i * n..o_off + i * n + n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    Tensor { shape: out_shape.clone(), data: out }
+}
+
+fn transpose(a: &Tensor) -> Tensor {
+    let r = a.shape.rank();
+    let mut dims = a.shape.dims.clone();
+    dims.swap(r - 2, r - 1);
+    let (rows, cols) = (a.shape.dims[r - 2], a.shape.dims[r - 1]);
+    let batch: usize = a.shape.dims[..r - 2].iter().product::<usize>().max(1);
+    let mut out = vec![0.0f32; a.numel()];
+    for b in 0..batch {
+        let off = b * rows * cols;
+        for i in 0..rows {
+            for j in 0..cols {
+                out[off + j * rows + i] = a.data[off + i * cols + j];
+            }
+        }
+    }
+    Tensor { shape: Shape { dims }, data: out }
+}
+
+fn reduce(a: &Tensor, axis: usize, init: f32, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let mut dims = a.shape.dims.clone();
+    let extent = dims[axis];
+    dims[axis] = 1;
+    let out_shape = Shape { dims };
+    let inner: usize = a.shape.dims[axis + 1..].iter().product();
+    let outer: usize = a.shape.dims[..axis].iter().product();
+    let mut out = vec![init; out_shape.numel()];
+    for o in 0..outer {
+        for e in 0..extent {
+            let base = (o * extent + e) * inner;
+            let obase = o * inner;
+            for i in 0..inner {
+                out[obase + i] = f(out[obase + i], a.data[base + i]);
+            }
+        }
+    }
+    Tensor { shape: out_shape, data: out }
+}
+
+fn gather(table: &Tensor, ids: &Tensor, out_shape: &Shape) -> Tensor {
+    let h = table.shape.dims[1];
+    let v = table.shape.dims[0];
+    let mut out = Vec::with_capacity(out_shape.numel());
+    for &idf in &ids.data {
+        let idx = (idf as usize).min(v - 1);
+        out.extend_from_slice(&table.data[idx * h..(idx + 1) * h]);
+    }
+    Tensor { shape: out_shape.clone(), data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::DType;
+
+    fn feeds(pairs: &[(&str, Vec<f32>)]) -> HashMap<String, Vec<f32>> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn elementwise_broadcast() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 3], DType::F32);
+        let b = g.input("b", &[3], DType::F32);
+        let o = g.add(a, b);
+        g.mark_output(o);
+        let out = eval_graph(
+            &g,
+            &feeds(&[("a", vec![1., 2., 3., 4., 5., 6.]), ("b", vec![10., 20., 30.])]),
+        );
+        assert_eq!(out[0].data, vec![11., 22., 33., 14., 25., 36.]);
+    }
+
+    #[test]
+    fn matmul_2d() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 2], DType::F32);
+        let b = g.input("b", &[2, 2], DType::F32);
+        let o = g.matmul(a, b);
+        g.mark_output(o);
+        let out = eval_graph(
+            &g,
+            &feeds(&[("a", vec![1., 2., 3., 4.]), ("b", vec![1., 1., 1., 1.])]),
+        );
+        assert_eq!(out[0].data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_batched_broadcast_rhs() {
+        // [2,2,3] @ [3,2] -> rhs broadcast over batch
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 2, 3], DType::F32);
+        let b = g.input("b", &[3, 2], DType::F32);
+        let o = g.matmul(a, b);
+        g.mark_output(o);
+        let av: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let bv = vec![1., 0., 0., 1., 1., 1.];
+        let out = eval_graph(&g, &feeds(&[("a", av), ("b", bv)]));
+        // row [0,1,2] @ b = [0*1+1*0+2*1, 0*0+1*1+2*1] = [2, 3]
+        assert_eq!(out[0].shape.dims, vec![2, 2, 2]);
+        assert_eq!(&out[0].data[..2], &[2., 3.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 4], DType::F32);
+        let s = g.softmax(x, 1);
+        g.mark_output(s);
+        let out = eval_graph(&g, &feeds(&[("x", vec![1., 2., 3., 4., -1., 0., 1., 2.])]));
+        for row in 0..2 {
+            let s: f32 = out[0].data[row * 4..row * 4 + 4].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_statistics() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 8], DType::F32);
+        let ga = g.weight("g", &[8]);
+        let be = g.weight("b", &[8]);
+        let o = g.layernorm(x, ga, be, 1e-12);
+        g.mark_output(o);
+        let xv: Vec<f32> = (0..16).map(|i| (i as f32).sin() * 3.0).collect();
+        let out = eval_graph(
+            &g,
+            &feeds(&[("x", xv), ("g", vec![1.0; 8]), ("b", vec![0.0; 8])]),
+        );
+        for row in 0..2 {
+            let r = &out[0].data[row * 8..row * 8 + 8];
+            let mean: f32 = r.iter().sum::<f32>() / 8.0;
+            let var: f32 = r.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 8.0;
+            assert!(mean.abs() < 1e-4, "{mean}");
+            assert!((var - 1.0).abs() < 1e-3, "{var}");
+        }
+    }
+
+    #[test]
+    fn transpose_and_reduce() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 3], DType::F32);
+        let t = g.add_op(Op::Transpose, &[a]);
+        let r = g.add_op(Op::ReduceSum { axis: 1 }, &[t]);
+        g.mark_output(r);
+        let out = eval_graph(&g, &feeds(&[("a", vec![1., 2., 3., 4., 5., 6.])]));
+        // t = [[1,4],[2,5],[3,6]]; sum rows = [5,7,9]
+        assert_eq!(out[0].shape.dims, vec![3, 1]);
+        assert_eq!(out[0].data, vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn gather_lookup() {
+        let mut g = Graph::new();
+        let t = g.weight("emb", &[3, 2]);
+        let ids = g.input("ids", &[2], DType::I32);
+        let e = g.add_op(Op::Gather, &[t, ids]);
+        g.mark_output(e);
+        let out = eval_graph(
+            &g,
+            &feeds(&[("emb", vec![0., 0., 1., 1., 2., 2.]), ("ids", vec![2., 0.])]),
+        );
+        assert_eq!(out[0].data, vec![2., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[3], DType::F32);
+        let o = g.gelu(x);
+        g.mark_output(o);
+        let out = eval_graph(&g, &feeds(&[("x", vec![0.0, 1.0, -1.0])]));
+        // gelu(0)=0, gelu(1)≈0.8413, gelu(-1)≈-0.1587
+        assert!(out[0].data[0].abs() < 1e-6);
+        assert!((out[0].data[1] - 0.8413).abs() < 1e-3);
+        assert!((out[0].data[2] + 0.1587).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Execution of compiled graphs (S5b): the reference node-by-node
+//! interpreter (`interp`) and the fused-plan executor (`plan`).
+//!
+//! The interpreter is the semantic oracle: every fusion/codegen decision is
+//! validated against it (unit, integration, and property tests). The plan
+//! executor runs the LP-Fused blocks through native kernels and is what the
+//! autotuner times.
+
+pub mod interp;
+pub mod plan;
+pub mod tensor;
+
+pub use tensor::Tensor;

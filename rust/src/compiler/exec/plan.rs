@@ -1,0 +1,354 @@
+//! Fused-plan executor: runs a `FusionPlan` block by block.
+//!
+//! Dispatch per block kind:
+//! * Elementwise blocks -> compiled `BlockTape` under the (auto-tuned or
+//!   given) Fig. 4 schedule — one pass over memory instead of one per op.
+//! * Reduction blocks matching softmax / layernorm -> native kernels.
+//! * Everything else -> per-node fallback via `interp::apply_op`
+//!   (always correct; the perf-critical inference path runs on PJRT).
+//!
+//! Correctness contract (tested): for every graph and every config,
+//! `execute_plan` output == `interp::eval_graph` output.
+
+use std::collections::HashMap;
+
+use super::interp::apply_op;
+use super::tensor::Tensor;
+use crate::compiler::codegen::tape::compile_block;
+use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
+use crate::compiler::ir::{Graph, NodeId, Op};
+use crate::compiler::poly::Schedule;
+
+/// Per-block schedule choices (from the autotuner); defaults to
+/// RowRecompute when absent.
+pub type ScheduleChoices = HashMap<usize, Schedule>;
+
+pub fn execute_plan(
+    g: &Graph,
+    plan: &FusionPlan,
+    feeds: &HashMap<String, Vec<f32>>,
+    schedules: &ScheduleChoices,
+) -> Vec<Tensor> {
+    let mut vals: HashMap<NodeId, Tensor> = HashMap::new();
+
+    // Materialize leaves.
+    for (id, node) in g.nodes.iter().enumerate() {
+        match &node.op {
+            Op::Input { name } | Op::Weight { name } => {
+                let data = feeds
+                    .get(name)
+                    .unwrap_or_else(|| panic!("missing feed {name:?}"))
+                    .clone();
+                vals.insert(id, Tensor::from_vec(&node.shape.dims, data));
+            }
+            Op::Const { value } => {
+                vals.insert(id, Tensor::scalar(*value));
+            }
+            _ => {}
+        }
+    }
+
+    for block in &plan.blocks {
+        let sched = schedules.get(&block.id).copied().unwrap_or(Schedule::RowRecompute);
+        execute_block(g, block, sched, &mut vals);
+    }
+
+    g.outputs.iter().map(|o| vals[o].clone()).collect()
+}
+
+pub fn execute_block(
+    g: &Graph,
+    block: &FusedBlock,
+    sched: Schedule,
+    vals: &mut HashMap<NodeId, Tensor>,
+) {
+    match block.kind {
+        BlockKind::ElementwiseChain | BlockKind::BroadcastElementwise => {
+            // The tape writes every block output over the full iteration
+            // domain; if some output node has a *smaller* (broadcast)
+            // shape than the domain, the generated code would materialize
+            // the wrong tensor — use the per-node fallback for such
+            // (rare, multi-output) blocks.
+            let domain = crate::compiler::poly::block_output_shape(g, block);
+            if block.outputs.iter().any(|&o| g.nodes[o].shape != domain) {
+                fallback(g, block, vals);
+                return;
+            }
+            let tape = compile_block(g, block);
+            let bufs: Vec<&Tensor> = tape.inputs.iter().map(|i| &vals[i]).collect();
+            let outs = tape.execute(&bufs, sched);
+            let keys: Vec<NodeId> = tape.output_regs.iter().map(|&(n, _)| n).collect();
+            for (key, out) in keys.into_iter().zip(outs) {
+                vals.insert(key, out);
+            }
+        }
+        BlockKind::Reduction => {
+            if let Some(()) = try_native_softmax(g, block, vals) {
+                return;
+            }
+            if let Some(()) = try_native_layernorm(g, block, vals) {
+                return;
+            }
+            fallback(g, block, vals);
+        }
+        _ => fallback(g, block, vals),
+    }
+}
+
+/// Per-node fallback inside a block (semantically the unfused execution,
+/// restricted to the block's members).
+fn fallback(g: &Graph, block: &FusedBlock, vals: &mut HashMap<NodeId, Tensor>) {
+    for &n in &block.nodes {
+        let node = &g.nodes[n];
+        let args: Vec<&Tensor> = node.inputs.iter().map(|i| &vals[i]).collect();
+        let out = apply_op(&node.op, &args, &node.shape);
+        vals.insert(n, out);
+    }
+}
+
+/// Detect the exact softmax idiom the graph builder emits
+/// (reduce_max -> sub -> exp -> reduce_sum -> div over the last axis)
+/// and run a single-pass native kernel.
+fn try_native_softmax(
+    g: &Graph,
+    block: &FusedBlock,
+    vals: &mut HashMap<NodeId, Tensor>,
+) -> Option<()> {
+    if block.nodes.len() != 5 || block.outputs.len() != 1 {
+        return None;
+    }
+    let div = *block.nodes.last()?;
+    if g.nodes[div].op != Op::Div {
+        return None;
+    }
+    let e = g.nodes[div].inputs[0];
+    let s = g.nodes[div].inputs[1];
+    if g.nodes[e].op != Op::Exp {
+        return None;
+    }
+    if !matches!(g.nodes[s].op, Op::ReduceSum { .. }) || g.nodes[s].inputs[0] != e {
+        return None;
+    }
+    let sub = g.nodes[e].inputs[0];
+    if g.nodes[sub].op != Op::Sub {
+        return None;
+    }
+    let x = g.nodes[sub].inputs[0];
+    let mx = g.nodes[sub].inputs[1];
+    let axis = match g.nodes[mx].op {
+        Op::ReduceMax { axis } if g.nodes[mx].inputs[0] == x => axis,
+        _ => return None,
+    };
+    let shape = &g.nodes[div].shape;
+    if axis != shape.rank() - 1 {
+        return None;
+    }
+
+    let xt = vals.get(&x)?.clone();
+    let cols = *shape.dims.last().unwrap();
+    let rows = shape.numel() / cols;
+    let mut out = vec![0.0f32; shape.numel()];
+    for r in 0..rows {
+        let row = &xt.data[r * cols..(r + 1) * cols];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut total = 0.0f32;
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - m).exp();
+            total += *o;
+        }
+        let inv = 1.0 / total;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    vals.insert(div, Tensor { shape: shape.clone(), data: out });
+    Some(())
+}
+
+/// Detect the layernorm idiom from `Graph::layernorm` (two reduce_sums,
+/// rsqrt, centered square) and run a two-pass native kernel.
+fn try_native_layernorm(
+    g: &Graph,
+    block: &FusedBlock,
+    vals: &mut HashMap<NodeId, Tensor>,
+) -> Option<()> {
+    // Structural fingerprint: 2x ReduceSum, 1x Rsqrt, final add; input x is
+    // the ReduceSum operand that is also used by a Sub.
+    if block.outputs.len() != 1 {
+        return None;
+    }
+    let reduces: Vec<NodeId> = block
+        .nodes
+        .iter()
+        .copied()
+        .filter(|&n| matches!(g.nodes[n].op, Op::ReduceSum { .. }))
+        .collect();
+    let rsqrts: Vec<NodeId> = block
+        .nodes
+        .iter()
+        .copied()
+        .filter(|&n| g.nodes[n].op == Op::Rsqrt)
+        .collect();
+    if reduces.len() != 2 || rsqrts.len() != 1 || block.nodes.len() != 12 {
+        return None;
+    }
+    let out_id = block.outputs[0];
+    let final_add = &g.nodes[out_id];
+    if final_add.op != Op::Add {
+        return None;
+    }
+    // x = the external input of the first reduce.
+    let x = g.nodes[reduces[0]].inputs[0];
+    if block.nodes.contains(&x) {
+        return None; // expected external
+    }
+    // gamma/beta: external non-scalar inputs of the last mul/add.
+    let scaled = final_add.inputs[0];
+    let beta = final_add.inputs[1];
+    if g.nodes[scaled].op != Op::Mul {
+        return None;
+    }
+    let gamma = g.nodes[scaled].inputs[1];
+    // eps: the Const added before rsqrt.
+    let ve = g.nodes[rsqrts[0]].inputs[0];
+    if g.nodes[ve].op != Op::Add {
+        return None;
+    }
+    let eps = match g.nodes[g.nodes[ve].inputs[1]].op {
+        Op::Const { value } => value,
+        _ => match g.nodes[g.nodes[ve].inputs[0]].op {
+            Op::Const { value } => value,
+            _ => return None,
+        },
+    };
+
+    let xt = vals.get(&x)?.clone();
+    let gt = vals.get(&gamma)?.clone();
+    let bt = vals.get(&beta)?.clone();
+    let shape = g.nodes[out_id].shape.clone();
+    let cols = *shape.dims.last().unwrap();
+    let rows = shape.numel() / cols;
+    let mut out = vec![0.0f32; shape.numel()];
+    for r in 0..rows {
+        let row = &xt.data[r * cols..(r + 1) * cols];
+        let mean: f32 = row.iter().sum::<f32>() / cols as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for j in 0..cols {
+            orow[j] = (row[j] - mean) * rs * gt.data[j % gt.data.len()]
+                + bt.data[j % bt.data.len()];
+        }
+    }
+    vals.insert(out_id, Tensor { shape, data: out });
+    Some(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::exec::interp::eval_graph;
+    use crate::compiler::fusion::{lp_fusion, FusionConfig};
+    use crate::compiler::ir::{DType, Graph};
+    use crate::util::check::assert_close;
+    use crate::util::rng::Rng;
+
+    fn feeds_for(g: &Graph, seed: u64) -> HashMap<String, Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut feeds = HashMap::new();
+        for node in &g.nodes {
+            match &node.op {
+                Op::Input { name } | Op::Weight { name } => {
+                    let data: Vec<f32> =
+                        (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    feeds.insert(name.clone(), data);
+                }
+                _ => {}
+            }
+        }
+        feeds
+    }
+
+    fn check_plan_matches_interp(g: &Graph, cfg: &FusionConfig, seed: u64) {
+        let feeds = feeds_for(g, seed);
+        let expect = eval_graph(g, &feeds);
+        let plan = lp_fusion(g, cfg);
+        let got = execute_plan(g, &plan, &feeds, &HashMap::new());
+        assert_eq!(expect.len(), got.len());
+        for (e, o) in expect.iter().zip(&got) {
+            assert_close(&o.data, &e.data, 1e-4, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn softmax_native_matches_interp() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[6, 32], DType::F32);
+        let s = g.softmax(x, 1);
+        g.mark_output(s);
+        check_plan_matches_interp(&g, &FusionConfig::default(), 11);
+    }
+
+    #[test]
+    fn layernorm_native_matches_interp() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[4, 16], DType::F32);
+        let ga = g.weight("gamma", &[16]);
+        let be = g.weight("beta", &[16]);
+        let o = g.layernorm(x, ga, be, 1e-12);
+        g.mark_output(o);
+        check_plan_matches_interp(&g, &FusionConfig::default(), 12);
+    }
+
+    #[test]
+    fn attention_core_fallback_matches_interp() {
+        let mut g = Graph::new();
+        let q = g.input("q", &[8, 4], DType::F32);
+        let kt = g.input("kt", &[4, 8], DType::F32);
+        let v = g.input("v", &[8, 4], DType::F32);
+        let sc = g.constant(0.5);
+        let s = g.matmul(q, kt);
+        let ss = g.mul(s, sc);
+        let p = g.softmax(ss, 1);
+        let o = g.matmul(p, v);
+        g.mark_output(o);
+        check_plan_matches_interp(&g, &FusionConfig::default(), 13);
+    }
+
+    #[test]
+    fn fig4_both_schedules_match() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[9, 7], DType::F32);
+        let b = g.input("B", &[9, 7], DType::F32);
+        let c = g.input("C", &[7], DType::F32);
+        let d = g.input("D", &[7], DType::F32);
+        let m1 = g.mul(a, b);
+        let m2 = g.mul(c, d);
+        let out = g.add(m1, m2);
+        g.mark_output(out);
+        let feeds = feeds_for(&g, 21);
+        let expect = eval_graph(&g, &feeds);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        for sched in [Schedule::RowRecompute, Schedule::HoistedColMajor] {
+            let mut choice = HashMap::new();
+            choice.insert(plan.blocks[0].id, sched);
+            let got = execute_plan(&g, &plan, &feeds, &choice);
+            assert_close(&got[0].data, &expect[0].data, 1e-5, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn disabled_fusion_still_correct() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[4, 8], DType::F32);
+        let w = g.weight("w", &[8, 8]);
+        let b = g.weight("b", &[8]);
+        let mm = g.matmul(x, w);
+        let bi = g.add(mm, b);
+        let act = g.gelu(bi);
+        g.mark_output(act);
+        check_plan_matches_interp(&g, &FusionConfig::disabled(), 31);
+        check_plan_matches_interp(&g, &FusionConfig::default(), 32);
+    }
+}

@@ -1,0 +1,105 @@
+//! Dense row-major f32 host tensor used by the compiler's interpreter,
+//! plan executor, and autotuner. (Runtime inference tensors live on the
+//! PJRT side as `xla::Literal`s — this type never crosses that boundary.)
+
+use crate::compiler::ir::Shape;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let shape = Shape::new(shape);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: Shape::scalar(), data: vec![v] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        let shape = Shape::new(shape);
+        assert_eq!(shape.numel(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut Rng, std: f32) -> Tensor {
+        let shape = Shape::new(shape);
+        let data = (0..shape.numel()).map(|_| rng.normal_f32(0.0, std)).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Read with broadcasting against a target shape: `idx` indexes the
+    /// target's flattened space; stride-0 axes replicate.
+    pub fn bcast_reader<'a>(&'a self, target: &Shape) -> impl Fn(&[usize]) -> f32 + 'a {
+        let strides = self.shape.broadcast_strides(target);
+        move |coords: &[usize]| {
+            let mut off = 0usize;
+            for (c, s) in coords.iter().zip(&strides) {
+                off += c * s;
+            }
+            self.data[off]
+        }
+    }
+}
+
+/// Iterate all coordinates of `shape` in row-major order.
+pub fn for_each_coord(shape: &Shape, mut f: impl FnMut(&[usize])) {
+    let r = shape.rank();
+    if r == 0 {
+        f(&[]);
+        return;
+    }
+    let mut coords = vec![0usize; r];
+    let total = shape.numel();
+    for _ in 0..total {
+        f(&coords);
+        // increment
+        for ax in (0..r).rev() {
+            coords[ax] += 1;
+            if coords[ax] < shape.dims[ax] {
+                break;
+            }
+            coords[ax] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_reader_row_vector() {
+        let t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let target = Shape::new(&[2, 3]);
+        let read = t.bcast_reader(&target);
+        assert_eq!(read(&[0, 1]), 2.0);
+        assert_eq!(read(&[1, 2]), 3.0);
+    }
+
+    #[test]
+    fn coord_iteration_row_major() {
+        let s = Shape::new(&[2, 2]);
+        let mut seen = Vec::new();
+        for_each_coord(&s, |c| seen.push(c.to_vec()));
+        assert_eq!(seen, vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]);
+    }
+
+    #[test]
+    fn scalar_coord() {
+        let s = Shape::scalar();
+        let mut n = 0;
+        for_each_coord(&s, |_| n += 1);
+        assert_eq!(n, 1);
+    }
+}

@@ -1,0 +1,85 @@
+//! Fused-block classification into the paper's candidate kinds (Fig. 2b)
+//! plus the transformer-specific shapes the codegen backends specialize.
+
+use crate::compiler::ir::{Graph, NodeId, Op};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockKind {
+    /// Fig. 2b ①: same-shape elementwise chain.
+    ElementwiseChain,
+    /// Fig. 2b ②: elementwise ops over broadcast-mixed shapes (the Fig. 4
+    /// pattern) — the kind with multiple legal loop schedules to auto-tune.
+    BroadcastElementwise,
+    /// Fig. 2b ④: reduction + elementwise (softmax / layernorm cores).
+    Reduction,
+    /// One matmul + elementwise prologue/epilogue.
+    MatmulEpilogue,
+    /// Two matmuls + softmax between: the attention core.
+    AttentionCore,
+    /// A single unfused op (matmul alone, transpose, gather, reshape, ...).
+    Opaque,
+}
+
+pub fn classify(g: &Graph, nodes: &[NodeId]) -> BlockKind {
+    let matmuls = nodes.iter().filter(|&&n| g.nodes[n].op == Op::MatMul).count();
+    let reduces = nodes.iter().filter(|&&n| g.nodes[n].op.is_reduce()).count();
+    let elementwise = nodes.iter().filter(|&&n| g.nodes[n].op.is_elementwise()).count();
+
+    if matmuls >= 2 {
+        return BlockKind::AttentionCore;
+    }
+    if matmuls == 1 {
+        if nodes.len() == 1 {
+            return BlockKind::Opaque;
+        }
+        return BlockKind::MatmulEpilogue;
+    }
+    if reduces > 0 {
+        return BlockKind::Reduction;
+    }
+    if elementwise == nodes.len() && !nodes.is_empty() {
+        if nodes.len() == 1 {
+            // A lone elementwise op is still a (degenerate) chain.
+            return BlockKind::ElementwiseChain;
+        }
+        // Mixed input shapes => broadcast kind (multiple loop schedules).
+        let mut shapes = std::collections::HashSet::new();
+        for &n in nodes {
+            for &i in &g.nodes[n].inputs {
+                if !g.nodes[i].shape.is_scalar() {
+                    shapes.insert(g.nodes[i].shape.dims.clone());
+                }
+            }
+        }
+        if shapes.len() > 1 {
+            return BlockKind::BroadcastElementwise;
+        }
+        return BlockKind::ElementwiseChain;
+    }
+    BlockKind::Opaque
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::{DType, Graph};
+
+    #[test]
+    fn single_matmul_is_opaque() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 4], DType::F32);
+        let b = g.weight("b", &[4, 4]);
+        let m = g.matmul(a, b);
+        assert_eq!(classify(&g, &[m]), BlockKind::Opaque);
+    }
+
+    #[test]
+    fn scalar_consts_do_not_make_broadcast_kind() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[8], DType::F32);
+        let c = g.constant(2.0);
+        let x = g.mul(a, c);
+        let y = g.add(x, a);
+        assert_eq!(classify(&g, &[x, y]), BlockKind::ElementwiseChain);
+    }
+}

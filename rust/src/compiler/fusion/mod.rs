@@ -1,0 +1,504 @@
+//! LP-Fusion (S3): fusion-candidate identification and greedy partition of
+//! the graph into fused blocks (§2.2 of the paper).
+//!
+//! Candidates are found from two properties, exactly as the paper states:
+//!   1. *computation laws* — associativity/commutativity/distributivity are
+//!      exploited by `passes::algebraic` + `passes::canonicalize` *before*
+//!      partitioning (rewrites change which fusions exist, e.g. Fig. 2b ③);
+//!   2. *data access patterns* — the partitioner merges ops whose iteration
+//!      spaces are compatible (same output domain, broadcast-compatible, or
+//!      reduce-over-the-fused-domain), subject to a fast-memory footprint
+//!      budget (workgroup memory on the paper's mobile GPU; VMEM on TPU).
+//!
+//! The merge rule is the classic acyclicity-safe one: block P merges into
+//! consumer block C iff *every* user of P's values lies inside C. This
+//! covers straight lines and diamonds and can never create a cycle in the
+//! block DAG (P retains no external user at all).
+
+pub mod classify;
+
+use std::collections::{HashMap, HashSet};
+
+use super::ir::{Graph, NodeId, Op};
+
+pub use classify::BlockKind;
+
+/// Fusion policy knobs. `enabled=false` reproduces the paper's
+/// "CANAO without layer fusion" configuration (Table 1 middle columns).
+#[derive(Debug, Clone)]
+pub struct FusionConfig {
+    pub enabled: bool,
+    /// Allow matmuls to join fused blocks (epilogues + attention cores).
+    pub fuse_matmul: bool,
+    /// Fast-memory budget in bytes for a block's internal intermediates
+    /// (the paper's workgroup-memory constraint; VMEM analogue on TPU).
+    pub footprint_budget: usize,
+    /// Safety valve on block size.
+    pub max_block_ops: usize,
+}
+
+impl Default for FusionConfig {
+    fn default() -> Self {
+        FusionConfig {
+            enabled: true,
+            fuse_matmul: true,
+            footprint_budget: 8 << 20, // 8 MiB
+            max_block_ops: 64,
+        }
+    }
+}
+
+impl FusionConfig {
+    pub fn disabled() -> Self {
+        FusionConfig { enabled: false, ..Default::default() }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FusedBlock {
+    pub id: usize,
+    /// Member nodes in topological order.
+    pub nodes: Vec<NodeId>,
+    /// External values read by the block (leaves or other blocks' outputs).
+    pub inputs: Vec<NodeId>,
+    /// Member values visible outside (graph outputs or read by other blocks).
+    pub outputs: Vec<NodeId>,
+    pub kind: BlockKind,
+}
+
+#[derive(Debug, Clone)]
+pub struct FusionPlan {
+    /// Blocks in topological order.
+    pub blocks: Vec<FusedBlock>,
+    /// node id -> block index (non-leaf nodes only).
+    pub block_of: HashMap<NodeId, usize>,
+}
+
+impl FusionPlan {
+    /// Total ops across all blocks.
+    pub fn num_ops(&self) -> usize {
+        self.blocks.iter().map(|b| b.nodes.len()).sum()
+    }
+
+    /// Number of "layers" after fusion — the paper's headline reduction.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Intermediate tensors that fusion keeps out of main memory:
+    /// values produced AND consumed inside one block.
+    pub fn internal_values(&self, g: &Graph) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.nodes.iter().filter(|n| !b.outputs.contains(n)).count())
+            .sum::<usize>()
+            .saturating_sub(0)
+            .min(g.nodes.len())
+    }
+
+    /// Bytes of intermediate traffic eliminated (write+read per internal value).
+    pub fn bytes_saved(&self, g: &Graph) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|b| b.nodes.iter().filter(|n| !b.outputs.contains(n)))
+            .map(|&n| 2 * g.nodes[n].shape.size_bytes(g.nodes[n].dtype))
+            .sum()
+    }
+}
+
+/// Partition `g` into fused blocks under `cfg`.
+pub fn lp_fusion(g: &Graph, cfg: &FusionConfig) -> FusionPlan {
+    let users = g.users();
+    let n = g.nodes.len();
+
+    // Block assignment via union-find over non-leaf nodes.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        let mut r = x;
+        while parent[r] != r {
+            r = parent[r];
+        }
+        let mut c = x;
+        while parent[c] != r {
+            let next = parent[c];
+            parent[c] = r;
+            c = next;
+        }
+        r
+    }
+
+    if cfg.enabled {
+        // Greedy, in topo order: try to merge each node's producers into it.
+        // Iterate to fixpoint — merging A into B can unlock C into AB.
+        let output_set: HashSet<NodeId> = g.outputs.iter().copied().collect();
+        loop {
+            let mut changed = false;
+            for id in 0..n {
+                let node = &g.nodes[id];
+                if node.op.is_leaf() {
+                    continue;
+                }
+                for &inp in &node.inputs {
+                    if g.nodes[inp].op.is_leaf() {
+                        continue;
+                    }
+                    let bp = find(&mut parent, inp);
+                    let bc = find(&mut parent, id);
+                    if bp == bc {
+                        continue;
+                    }
+                    if can_merge(g, &users, &mut parent, bp, bc, &output_set, cfg) {
+                        parent[bp] = bc;
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    // Materialize blocks, then TOPOLOGICALLY sort them: first-member order
+    // is not sufficient once diamond merges interleave node ids across
+    // blocks (found by proptest P3).
+    let mut members: HashMap<usize, Vec<NodeId>> = HashMap::new();
+    for id in 0..n {
+        if g.nodes[id].op.is_leaf() {
+            continue;
+        }
+        let root = find(&mut parent, id);
+        members.entry(root).or_default().push(id);
+    }
+    let mut roots: Vec<usize> = members.keys().copied().collect();
+    roots.sort_by_key(|r| members[r][0]);
+
+    // Kahn over block-level dependency edges (stable: ready set keeps
+    // first-member order).
+    {
+        let root_index: HashMap<usize, usize> =
+            roots.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+        let mut preds: Vec<HashSet<usize>> = vec![HashSet::new(); roots.len()];
+        let mut succs: Vec<HashSet<usize>> = vec![HashSet::new(); roots.len()];
+        for (bi, &r) in roots.iter().enumerate() {
+            for &m in &members[&r] {
+                for &i in &g.nodes[m].inputs {
+                    if g.nodes[i].op.is_leaf() {
+                        continue;
+                    }
+                    let pr = find(&mut parent, i);
+                    let pi = root_index[&pr];
+                    if pi != bi {
+                        preds[bi].insert(pi);
+                        succs[pi].insert(bi);
+                    }
+                }
+            }
+        }
+        let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+        let mut ready: Vec<usize> = (0..roots.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(roots.len());
+        while let Some(&next) = ready.iter().min_by_key(|&&i| members[&roots[i]][0]) {
+            ready.retain(|&i| i != next);
+            order.push(next);
+            for &s in &succs[next] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), roots.len(), "cyclic block DAG — merge rule violated");
+        roots = order.into_iter().map(|i| roots[i]).collect();
+    }
+
+    let mut blocks = Vec::new();
+    let mut block_of = HashMap::new();
+    let output_set: HashSet<NodeId> = g.outputs.iter().copied().collect();
+    for (bi, root) in roots.iter().enumerate() {
+        let nodes = members[root].clone(); // already ascending = topo
+        let node_set: HashSet<NodeId> = nodes.iter().copied().collect();
+        let mut inputs: Vec<NodeId> = Vec::new();
+        let mut outputs: Vec<NodeId> = Vec::new();
+        for &m in &nodes {
+            for &i in &g.nodes[m].inputs {
+                if !node_set.contains(&i) && !inputs.contains(&i) {
+                    inputs.push(i);
+                }
+            }
+            let external_user =
+                users[m].iter().any(|u| !node_set.contains(u)) || output_set.contains(&m);
+            if external_user {
+                outputs.push(m);
+            }
+        }
+        let kind = classify::classify(g, &nodes);
+        for &m in &nodes {
+            block_of.insert(m, bi);
+        }
+        blocks.push(FusedBlock { id: bi, nodes, inputs, outputs, kind });
+    }
+
+    FusionPlan { blocks, block_of }
+}
+
+/// Merge legality: producer block `bp` may merge into consumer block `bc`
+/// iff every user of every bp-member is inside bc (or bp itself), the
+/// fused footprint fits the budget, op kinds are fusable, and the combined
+/// size is bounded.
+fn can_merge(
+    g: &Graph,
+    users: &[Vec<NodeId>],
+    parent: &mut Vec<usize>,
+    bp: usize,
+    bc: usize,
+    outputs: &HashSet<NodeId>,
+    cfg: &FusionConfig,
+) -> bool {
+    let n = g.nodes.len();
+    let mut p_members = Vec::new();
+    let mut c_members = Vec::new();
+    for id in 0..n {
+        if g.nodes[id].op.is_leaf() {
+            continue;
+        }
+        let r = find_ref(parent, id);
+        if r == bp {
+            p_members.push(id);
+        } else if r == bc {
+            c_members.push(id);
+        }
+    }
+
+    if p_members.len() + c_members.len() > cfg.max_block_ops {
+        return false;
+    }
+
+    // Acyclicity-safe rule: all users of p-members must be in bp or bc.
+    for &m in &p_members {
+        for &u in &users[m] {
+            let r = find_ref(parent, u);
+            if r != bp && r != bc {
+                return false;
+            }
+        }
+    }
+
+    // Op-kind policy: which ops may share a block.
+    let fusable = |id: NodeId| -> bool {
+        let op = &g.nodes[id].op;
+        match op {
+            _ if op.is_elementwise() => true,
+            _ if op.is_reduce() => true,
+            Op::MatMul => cfg.fuse_matmul,
+            Op::Transpose | Op::Reshape { .. } | Op::Gather => false,
+            _ => false,
+        }
+    };
+    if !p_members.iter().chain(&c_members).all(|&m| fusable(m)) {
+        return false;
+    }
+
+    // At most 2 matmuls per block (the attention core), never 3+.
+    let matmuls = p_members
+        .iter()
+        .chain(&c_members)
+        .filter(|&&m| g.nodes[m].op == Op::MatMul)
+        .count();
+    if matmuls > 2 {
+        return false;
+    }
+
+    // Footprint: internal intermediates must fit the fast-memory budget.
+    // Graph outputs are written to main memory regardless, so they don't
+    // occupy the block's fast-memory working set.
+    let merged: HashSet<NodeId> = p_members.iter().chain(&c_members).copied().collect();
+    let mut footprint = 0usize;
+    for &m in &merged {
+        let internal = users[m].iter().all(|u| merged.contains(u)) && !outputs.contains(&m);
+        if internal {
+            footprint += g.nodes[m].shape.size_bytes(g.nodes[m].dtype);
+        }
+    }
+    footprint <= cfg.footprint_budget
+}
+
+fn find_ref(parent: &mut Vec<usize>, x: usize) -> usize {
+    let mut r = x;
+    while parent[r] != r {
+        r = parent[r];
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::DType;
+
+    /// Fig. 2b ①: a same-shape elementwise chain fuses into one block.
+    #[test]
+    fn fig2b_candidate1_elementwise_chain() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[64], DType::F32);
+        let b = g.weight("B", &[64]);
+        let c = g.weight("C", &[64]);
+        let x = g.add(a, b);
+        let y = g.mul(x, c);
+        let z = g.add_op(Op::Tanh, &[y]);
+        g.mark_output(z);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        assert_eq!(plan.blocks[0].kind, BlockKind::ElementwiseChain);
+        assert_eq!(plan.blocks[0].nodes.len(), 3);
+    }
+
+    /// Fig. 2b ②: broadcast-mixed elementwise ops still fuse (the Fig. 4
+    /// pattern: [M,N] elementwise + [N] row recombination).
+    #[test]
+    fn fig2b_candidate2_broadcast() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[32, 16], DType::F32);
+        let b = g.weight("B", &[32, 16]);
+        let c = g.weight("C", &[16]);
+        let d = g.weight("D", &[16]);
+        let m1 = g.mul(a, b);
+        let m2 = g.mul(c, d);
+        let out = g.add(m1, m2);
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        assert_eq!(plan.blocks[0].kind, BlockKind::BroadcastElementwise);
+    }
+
+    /// Fig. 2b ④: reduction + elementwise (softmax) fuses into one block.
+    #[test]
+    fn fig2b_candidate4_reduction() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[8, 32], DType::F32);
+        let s = g.softmax(x, 1);
+        g.mark_output(s);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1, "{}", g.dump());
+        assert_eq!(plan.blocks[0].kind, BlockKind::Reduction);
+        assert_eq!(plan.blocks[0].nodes.len(), 5);
+    }
+
+    #[test]
+    fn matmul_epilogue_fuses() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[16, 32], DType::F32);
+        let w = g.weight("w", &[32, 64]);
+        let b = g.weight("b", &[64]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let act = g.gelu(biased);
+        g.mark_output(act);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1, "{:#?}", plan.blocks);
+        assert_eq!(plan.blocks[0].kind, BlockKind::MatmulEpilogue);
+    }
+
+    #[test]
+    fn attention_core_fuses_to_one_block() {
+        // scores = Q@K^T * scale; P = softmax(scores); out = P@V
+        let mut g = Graph::new();
+        let q = g.input("q", &[16, 8], DType::F32);
+        let kt = g.input("kt", &[8, 16], DType::F32);
+        let v = g.input("v", &[16, 8], DType::F32);
+        let scale = g.constant(0.35);
+        let s = g.matmul(q, kt);
+        let ss = g.mul(s, scale);
+        let p = g.softmax(ss, 1);
+        let o = g.matmul(p, v);
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1, "{:#?}", plan.blocks);
+        assert_eq!(plan.blocks[0].kind, BlockKind::AttentionCore);
+    }
+
+    #[test]
+    fn disabled_fusion_gives_one_block_per_op() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[64], DType::F32);
+        let b = g.weight("B", &[64]);
+        let x = g.add(a, b);
+        let y = g.add_op(Op::Exp, &[x]);
+        g.mark_output(y);
+        let plan = lp_fusion(&g, &FusionConfig::disabled());
+        assert_eq!(plan.num_blocks(), 2);
+    }
+
+    #[test]
+    fn footprint_budget_limits_fusion() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[1024, 1024], DType::F32); // 4 MiB values
+        let b = g.weight("B", &[1024, 1024]);
+        let x = g.add(a, b);
+        let y = g.add_op(Op::Exp, &[x]);
+        let z = g.add_op(Op::Tanh, &[y]);
+        g.mark_output(z);
+        let tight = FusionConfig { footprint_budget: 1 << 20, ..Default::default() };
+        let plan = lp_fusion(&g, &tight);
+        assert!(plan.num_blocks() > 1, "budget must split the chain");
+        let loose = FusionConfig::default();
+        assert_eq!(lp_fusion(&g, &loose).num_blocks(), 1);
+    }
+
+    #[test]
+    fn multi_user_intermediate_blocks_merge_only_when_all_users_inside() {
+        // x feeds BOTH y and the final add: diamond. All of x's users end
+        // up in the same block, so everything fuses.
+        let mut g = Graph::new();
+        let a = g.input("A", &[64], DType::F32);
+        let b = g.weight("B", &[64]);
+        let x = g.add(a, b);
+        let y = g.add_op(Op::Exp, &[x]);
+        let z = g.add(x, y); // diamond join
+        g.mark_output(z);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+    }
+
+    #[test]
+    fn graph_output_values_stay_block_outputs() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[8], DType::F32);
+        let b = g.weight("B", &[8]);
+        let x = g.add(a, b);
+        let y = g.add_op(Op::Exp, &[x]);
+        g.mark_output(x); // intermediate is ALSO a graph output
+        g.mark_output(y);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        assert!(plan.blocks[0].outputs.contains(&x));
+        assert!(plan.blocks[0].outputs.contains(&y));
+    }
+
+    #[test]
+    fn transpose_never_fuses() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 8], DType::F32);
+        let t = g.add_op(Op::Transpose, &[a]);
+        let e = g.add_op(Op::Exp, &[t]);
+        g.mark_output(e);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 2);
+    }
+
+    #[test]
+    fn blocks_are_topologically_ordered() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 8], DType::F32);
+        let t = g.add_op(Op::Transpose, &[a]); // block 0
+        let e = g.add_op(Op::Exp, &[t]); // block 1
+        let t2 = g.add_op(Op::Transpose, &[e]); // block 2
+        let f = g.add_op(Op::Tanh, &[t2]); // block 3
+        g.mark_output(f);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 4);
+        for w in plan.blocks.windows(2) {
+            assert!(w[0].nodes[0] < w[1].nodes[0]);
+        }
+    }
+}

@@ -1,0 +1,479 @@
+//! Computational-graph IR (S1).
+//!
+//! The CANAO compiler pipeline (Fig. 3, step "compiler code generation")
+//! starts from this graph: the controller-generated model is lowered into
+//! `Graph` by `crate::model`, optimization passes rewrite it, LP-Fusion
+//! partitions it into fused blocks, and codegen emits an execution plan.
+//!
+//! Design notes:
+//! * Nodes are append-only and stored in topological order by construction;
+//!   passes that rewrite the graph produce a fresh `Graph` via `GraphRewriter`.
+//! * Softmax / LayerNorm / GELU are *not* primitives — the model builder
+//!   emits their primitive op sequences, and it is LP-Fusion's job to
+//!   re-discover the fused blocks (that is the paper's contribution).
+
+pub mod shape;
+
+pub use shape::{DType, Shape};
+
+use std::collections::HashMap;
+
+pub type NodeId = usize;
+
+/// Primitive operations. Elementwise binaries broadcast NumPy-style.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Runtime input (activations, ids, masks).
+    Input { name: String },
+    /// Trained weight (constant at inference time — fusion may bake it).
+    Weight { name: String },
+    /// Scalar constant.
+    Const { value: f32 },
+    // Unary elementwise.
+    Neg,
+    Exp,
+    Erf,
+    Tanh,
+    Rsqrt,
+    Recip,
+    // Binary elementwise (broadcasting).
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    /// Matrix multiply over the last two dims; leading dims broadcast.
+    MatMul,
+    /// Transpose of the last two dims.
+    Transpose,
+    /// Reshape to an explicit target shape (same element count).
+    Reshape { target: Vec<usize> },
+    /// Sum / max over one axis (keepdims).
+    ReduceSum { axis: usize },
+    ReduceMax { axis: usize },
+    /// Embedding lookup: inputs[0] = table [v, h] (Weight), inputs[1] = ids.
+    Gather,
+}
+
+impl Op {
+    pub fn is_elementwise_unary(&self) -> bool {
+        matches!(self, Op::Neg | Op::Exp | Op::Erf | Op::Tanh | Op::Rsqrt | Op::Recip)
+    }
+
+    pub fn is_elementwise_binary(&self) -> bool {
+        matches!(self, Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Max)
+    }
+
+    pub fn is_elementwise(&self) -> bool {
+        self.is_elementwise_unary() || self.is_elementwise_binary()
+    }
+
+    pub fn is_reduce(&self) -> bool {
+        matches!(self, Op::ReduceSum { .. } | Op::ReduceMax { .. })
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, Op::Input { .. } | Op::Weight { .. } | Op::Const { .. })
+    }
+
+    /// Commutative binary ops (canonicalization orders their operands).
+    pub fn is_commutative(&self) -> bool {
+        matches!(self, Op::Add | Op::Mul | Op::Max)
+    }
+
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Weight { .. } => "weight",
+            Op::Const { .. } => "const",
+            Op::Neg => "neg",
+            Op::Exp => "exp",
+            Op::Erf => "erf",
+            Op::Tanh => "tanh",
+            Op::Rsqrt => "rsqrt",
+            Op::Recip => "recip",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Div => "div",
+            Op::Max => "max",
+            Op::MatMul => "matmul",
+            Op::Transpose => "transpose",
+            Op::Reshape { .. } => "reshape",
+            Op::ReduceSum { .. } => "reduce_sum",
+            Op::ReduceMax { .. } => "reduce_max",
+            Op::Gather => "gather",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub shape: Shape,
+    pub dtype: DType,
+}
+
+/// The computational graph. Nodes are in topological order.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- builders --------------------------------------------------------
+
+    pub fn input(&mut self, name: &str, shape: &[usize], dtype: DType) -> NodeId {
+        self.push(Node {
+            op: Op::Input { name: name.to_string() },
+            inputs: vec![],
+            shape: Shape::new(shape),
+            dtype,
+        })
+    }
+
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        self.push(Node {
+            op: Op::Weight { name: name.to_string() },
+            inputs: vec![],
+            shape: Shape::new(shape),
+            dtype: DType::F32,
+        })
+    }
+
+    pub fn constant(&mut self, value: f32) -> NodeId {
+        self.push(Node {
+            op: Op::Const { value },
+            inputs: vec![],
+            shape: Shape::scalar(),
+            dtype: DType::F32,
+        })
+    }
+
+    /// Append an op node, inferring its shape. Panics on rank/shape errors —
+    /// graph construction bugs are programmer errors, caught in tests.
+    pub fn add_op(&mut self, op: Op, inputs: &[NodeId]) -> NodeId {
+        let shapes: Vec<&Shape> = inputs.iter().map(|&i| &self.nodes[i].shape).collect();
+        let shape = infer_shape(&op, &shapes);
+        let dtype = match op {
+            Op::Gather => DType::F32,
+            _ => self.nodes.get(inputs.first().copied().unwrap_or(0)).map(|n| n.dtype).unwrap_or(DType::F32),
+        };
+        self.push(Node { op, inputs: inputs.to_vec(), shape, dtype })
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        for &i in &node.inputs {
+            assert!(i < self.nodes.len(), "forward reference in graph");
+        }
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    pub fn mark_output(&mut self, id: NodeId) {
+        self.outputs.push(id);
+    }
+
+    // ---- convenience elementwise builders --------------------------------
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.add_op(Op::Add, &[a, b])
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.add_op(Op::Sub, &[a, b])
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.add_op(Op::Mul, &[a, b])
+    }
+
+    pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.add_op(Op::Div, &[a, b])
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.add_op(Op::MatMul, &[a, b])
+    }
+
+    /// Numerically-stable softmax over `axis`, built from primitives.
+    /// LP-Fusion must rediscover this 5-op sequence as one fused block.
+    pub fn softmax(&mut self, x: NodeId, axis: usize) -> NodeId {
+        let m = self.add_op(Op::ReduceMax { axis }, &[x]);
+        let c = self.sub(x, m);
+        let e = self.add_op(Op::Exp, &[c]);
+        let s = self.add_op(Op::ReduceSum { axis }, &[e]);
+        self.div(e, s)
+    }
+
+    /// LayerNorm over the last axis, built from primitives (9 ops).
+    pub fn layernorm(&mut self, x: NodeId, gamma: NodeId, beta: NodeId, eps: f32) -> NodeId {
+        let axis = self.nodes[x].shape.rank() - 1;
+        let n = self.nodes[x].shape.dims[axis] as f32;
+        let inv_n = self.constant(1.0 / n);
+        let s = self.add_op(Op::ReduceSum { axis }, &[x]);
+        let mu = self.mul(s, inv_n);
+        let cx = self.sub(x, mu);
+        let sq = self.mul(cx, cx);
+        let vs = self.add_op(Op::ReduceSum { axis }, &[sq]);
+        let var = self.mul(vs, inv_n);
+        let epsc = self.constant(eps);
+        let ve = self.add(var, epsc);
+        let rs = self.add_op(Op::Rsqrt, &[ve]);
+        let norm = self.mul(cx, rs);
+        let scaled = self.mul(norm, gamma);
+        self.add(scaled, beta)
+    }
+
+    /// Exact GELU from primitives: 0.5*x*(1+erf(x/sqrt(2))).
+    pub fn gelu(&mut self, x: NodeId) -> NodeId {
+        let c = self.constant(std::f32::consts::FRAC_1_SQRT_2);
+        let sx = self.mul(x, c);
+        let e = self.add_op(Op::Erf, &[sx]);
+        let one = self.constant(1.0);
+        let t = self.add(e, one);
+        let half = self.constant(0.5);
+        let hx = self.mul(x, half);
+        self.mul(hx, t)
+    }
+
+    // ---- analysis ---------------------------------------------------------
+
+    /// users[i] = node ids that consume node i.
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut users = vec![Vec::new(); self.nodes.len()];
+        for (id, n) in self.nodes.iter().enumerate() {
+            for &i in &n.inputs {
+                users[i].push(id);
+            }
+        }
+        users
+    }
+
+    /// Ids reachable from the outputs (the live set).
+    pub fn live_set(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if live[id] {
+                continue;
+            }
+            live[id] = true;
+            stack.extend(&self.nodes[id].inputs);
+        }
+        live
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.op.is_leaf()).count()
+    }
+
+    /// Human-readable listing (for tests and the fig2_fusion example).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for (id, n) in self.nodes.iter().enumerate() {
+            let ins: Vec<String> = n.inputs.iter().map(|i| format!("%{i}")).collect();
+            s.push_str(&format!(
+                "%{id} = {} ({}) : {:?}\n",
+                n.op.mnemonic(),
+                ins.join(", "),
+                n.shape.dims
+            ));
+        }
+        s.push_str(&format!("outputs: {:?}\n", self.outputs));
+        s
+    }
+}
+
+/// Shape inference for every op. Panics with a descriptive message on
+/// violation (builder-time invariant).
+pub fn infer_shape(op: &Op, inputs: &[&Shape]) -> Shape {
+    match op {
+        Op::Input { .. } | Op::Weight { .. } | Op::Const { .. } => {
+            unreachable!("leaves carry explicit shapes")
+        }
+        _ if op.is_elementwise_unary() => inputs[0].clone(),
+        _ if op.is_elementwise_binary() => inputs[0]
+            .broadcast(inputs[1])
+            .unwrap_or_else(|| panic!("cannot broadcast {:?} with {:?}", inputs[0], inputs[1])),
+        Op::MatMul => {
+            let (a, b) = (inputs[0], inputs[1]);
+            assert!(a.rank() >= 2 && b.rank() >= 2, "matmul needs rank>=2");
+            let (m, k1) = (a.dims[a.rank() - 2], a.dims[a.rank() - 1]);
+            let (k2, n) = (b.dims[b.rank() - 2], b.dims[b.rank() - 1]);
+            assert_eq!(k1, k2, "matmul inner dims {k1} != {k2}");
+            let lead_a = Shape::new(&a.dims[..a.rank() - 2]);
+            let lead_b = Shape::new(&b.dims[..b.rank() - 2]);
+            let lead = lead_a
+                .broadcast(&lead_b)
+                .unwrap_or_else(|| panic!("matmul batch dims mismatch"));
+            let mut dims = lead.dims;
+            dims.push(m);
+            dims.push(n);
+            Shape { dims }
+        }
+        Op::Transpose => {
+            let a = inputs[0];
+            assert!(a.rank() >= 2);
+            let mut dims = a.dims.clone();
+            let r = dims.len();
+            dims.swap(r - 2, r - 1);
+            Shape { dims }
+        }
+        Op::Reshape { target } => {
+            let t = Shape::new(target);
+            assert_eq!(t.numel(), inputs[0].numel(), "reshape element count mismatch");
+            t
+        }
+        Op::ReduceSum { axis } | Op::ReduceMax { axis } => {
+            let a = inputs[0];
+            assert!(*axis < a.rank(), "reduce axis out of range");
+            let mut dims = a.dims.clone();
+            dims[*axis] = 1; // keepdims semantics
+            Shape { dims }
+        }
+        Op::Gather => {
+            let (table, ids) = (inputs[0], inputs[1]);
+            assert_eq!(table.rank(), 2, "gather table must be [vocab, hidden]");
+            let mut dims = ids.dims.clone();
+            dims.push(table.dims[1]);
+            Shape { dims }
+        }
+        // Elementwise ops are handled by the guard arms above; rustc cannot
+        // see that, so make exhaustiveness explicit.
+        _ => unreachable!("elementwise op fell through guards: {op:?}"),
+    }
+}
+
+/// Rebuild helper: map old node ids to new ones while rewriting.
+pub struct GraphRewriter {
+    pub out: Graph,
+    map: HashMap<NodeId, NodeId>,
+}
+
+impl GraphRewriter {
+    pub fn new() -> Self {
+        GraphRewriter { out: Graph::new(), map: HashMap::new() }
+    }
+
+    /// Copy `node` (with remapped inputs) unless already mapped.
+    pub fn copy(&mut self, old_id: NodeId, node: &Node) -> NodeId {
+        if let Some(&m) = self.map.get(&old_id) {
+            return m;
+        }
+        let inputs: Vec<NodeId> = node.inputs.iter().map(|i| self.map[i]).collect();
+        let new_id = self.out.push(Node {
+            op: node.op.clone(),
+            inputs,
+            shape: node.shape.clone(),
+            dtype: node.dtype,
+        });
+        self.map.insert(old_id, new_id);
+        new_id
+    }
+
+    /// Force old_id to map to an existing new node (for replacements).
+    pub fn alias(&mut self, old_id: NodeId, new_id: NodeId) {
+        self.map.insert(old_id, new_id);
+    }
+
+    pub fn lookup(&self, old_id: NodeId) -> Option<NodeId> {
+        self.map.get(&old_id).copied()
+    }
+
+    pub fn finish(mut self, old_outputs: &[NodeId]) -> Graph {
+        self.out.outputs = old_outputs.iter().map(|o| self.map[o]).collect();
+        self.out
+    }
+}
+
+impl Default for GraphRewriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_infer() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 8], DType::F32);
+        let w = g.weight("w", &[8, 16]);
+        let m = g.matmul(a, w);
+        assert_eq!(g.nodes[m].shape.dims, vec![4, 16]);
+        let b = g.weight("b", &[16]);
+        let o = g.add(m, b); // broadcast [4,16] + [16]
+        assert_eq!(g.nodes[o].shape.dims, vec![4, 16]);
+    }
+
+    #[test]
+    fn softmax_is_five_primitives() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 8], DType::F32);
+        let s = g.softmax(x, 1);
+        g.mark_output(s);
+        assert_eq!(g.num_ops(), 5); // reduce_max, sub, exp, reduce_sum, div
+        assert_eq!(g.nodes[s].shape.dims, vec![2, 8]);
+    }
+
+    #[test]
+    fn layernorm_shape_preserved() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[3, 16], DType::F32);
+        let ga = g.weight("g", &[16]);
+        let be = g.weight("b", &[16]);
+        let o = g.layernorm(x, ga, be, 1e-12);
+        assert_eq!(g.nodes[o].shape.dims, vec![3, 16]);
+    }
+
+    #[test]
+    fn users_and_live() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let c = g.add(a, b);
+        let _dead = g.mul(a, b);
+        g.mark_output(c);
+        let users = g.users();
+        assert_eq!(users[a].len(), 2);
+        let live = g.live_set();
+        assert!(live[c] && !live[_dead]);
+    }
+
+    #[test]
+    fn batched_matmul() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 4, 8, 16], DType::F32);
+        let b = g.input("b", &[2, 4, 16, 8], DType::F32);
+        let m = g.matmul(a, b);
+        assert_eq!(g.nodes[m].shape.dims, vec![2, 4, 8, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dims")]
+    fn matmul_mismatch_panics() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 8], DType::F32);
+        let b = g.input("b", &[9, 4], DType::F32);
+        g.matmul(a, b);
+    }
+
+    #[test]
+    fn gather_shape() {
+        let mut g = Graph::new();
+        let t = g.weight("emb", &[100, 32]);
+        let ids = g.input("ids", &[2, 7], DType::I32);
+        let e = g.add_op(Op::Gather, &[t, ids]);
+        assert_eq!(g.nodes[e].shape.dims, vec![2, 7, 32]);
+        assert_eq!(g.nodes[e].dtype, DType::F32);
+    }
+}

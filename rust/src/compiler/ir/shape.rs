@@ -1,0 +1,124 @@
+//! Shapes, dtypes, and NumPy-style broadcasting.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape {
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape { dims: dims.to_vec() }
+    }
+
+    pub fn scalar() -> Self {
+        Shape { dims: vec![] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn size_bytes(&self, dtype: DType) -> usize {
+        self.numel() * dtype.size_bytes()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    /// NumPy broadcasting. Returns None if incompatible.
+    pub fn broadcast(&self, other: &Shape) -> Option<Shape> {
+        let r = self.rank().max(other.rank());
+        let mut dims = vec![0usize; r];
+        for i in 0..r {
+            let a = if i < r - self.rank() { 1 } else { self.dims[i - (r - self.rank())] };
+            let b = if i < r - other.rank() { 1 } else { other.dims[i - (r - other.rank())] };
+            dims[i] = if a == b {
+                a
+            } else if a == 1 {
+                b
+            } else if b == 1 {
+                a
+            } else {
+                return None;
+            };
+        }
+        Some(Shape { dims })
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    /// Strides for reading `self` as if broadcast to `target` (0-stride on
+    /// broadcast axes). Panics if not broadcastable to target.
+    pub fn broadcast_strides(&self, target: &Shape) -> Vec<usize> {
+        let own = self.strides();
+        let r = target.rank();
+        let off = r - self.rank();
+        let mut out = vec![0usize; r];
+        for i in 0..self.rank() {
+            if self.dims[i] == target.dims[i + off] {
+                out[i + off] = own[i];
+            } else {
+                assert_eq!(self.dims[i], 1, "not broadcastable to target");
+                out[i + off] = 0;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_rules() {
+        let a = Shape::new(&[4, 16]);
+        let b = Shape::new(&[16]);
+        assert_eq!(a.broadcast(&b).unwrap().dims, vec![4, 16]);
+        let c = Shape::new(&[4, 1]);
+        assert_eq!(a.broadcast(&c).unwrap().dims, vec![4, 16]);
+        let bad = Shape::new(&[3]);
+        assert!(a.broadcast(&bad).is_none());
+        assert_eq!(Shape::scalar().broadcast(&a).unwrap().dims, vec![4, 16]);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::scalar().strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn broadcast_strides_zero_on_expanded() {
+        let v = Shape::new(&[16]);
+        let t = Shape::new(&[4, 16]);
+        assert_eq!(v.broadcast_strides(&t), vec![0, 1]);
+        let col = Shape::new(&[4, 1]);
+        assert_eq!(col.broadcast_strides(&t), vec![1, 0]);
+    }
+}

@@ -1,0 +1,137 @@
+//! The CANAO compiler (the paper's §2.2 "Compiler Code Generation"):
+//!
+//! 1. graph optimizations (`passes`) — incl. the computation-law rewrites;
+//! 2. LP-Fusion (`fusion`) — fusion-candidate identification + partition;
+//! 3. polyhedral-lite analysis (`poly`) + code generation (`codegen`) +
+//!    auto-tuning (`tuning`) — the Fig. 4 variant machinery;
+//! 4. execution (`exec`) — the fused-plan executor and the reference
+//!    interpreter oracle.
+//!
+//! `compile()` is the front door used by the NAS loop, Table 1 bench, and
+//! the examples.
+
+pub mod codegen;
+pub mod exec;
+pub mod fusion;
+pub mod ir;
+pub mod passes;
+pub mod poly;
+pub mod tuning;
+
+use std::collections::HashMap;
+
+use exec::plan::ScheduleChoices;
+use fusion::{FusionConfig, FusionPlan};
+use ir::Graph;
+use passes::{PassManager, PassStat};
+use tuning::Autotuner;
+
+/// Everything the rest of the system needs from a compiled model.
+#[derive(Debug, Clone)]
+pub struct Compiled {
+    pub graph: Graph,
+    pub plan: FusionPlan,
+    pub schedules: ScheduleChoices,
+    pub pass_stats: Vec<PassStat>,
+    /// Ops in the graph as-built (pre-optimization).
+    pub ops_before: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CompileOptions {
+    pub fusion: FusionConfig,
+    /// Skip the measured autotuner (use static model) — ablation D2.
+    pub model_only_tuning: bool,
+    /// Skip graph optimization passes entirely (for ablations).
+    pub skip_passes: bool,
+}
+
+impl CompileOptions {
+    pub fn no_fusion() -> Self {
+        CompileOptions { fusion: FusionConfig::disabled(), ..Default::default() }
+    }
+}
+
+/// Run the full pipeline on `g`.
+pub fn compile(g: &Graph, opts: &CompileOptions) -> Compiled {
+    let ops_before = g.num_ops();
+    let (optimized, pass_stats) = if opts.skip_passes {
+        (g.clone(), Vec::new())
+    } else {
+        PassManager::standard().run(g)
+    };
+    let plan = fusion::lp_fusion(&optimized, &opts.fusion);
+    let mut tuner = if opts.model_only_tuning {
+        Autotuner::model_only()
+    } else {
+        Autotuner::new()
+    };
+    let (schedules, _) = tuner.tune_plan(&optimized, &plan, 0xC0FFEE);
+    Compiled { graph: optimized, plan, schedules, pass_stats, ops_before }
+}
+
+impl Compiled {
+    /// Execute on host (the compiler's own executor, not PJRT).
+    pub fn run(&self, feeds: &HashMap<String, Vec<f32>>) -> Vec<exec::Tensor> {
+        exec::plan::execute_plan(&self.graph, &self.plan, feeds, &self.schedules)
+    }
+
+    /// The paper's fusion-rate metrics: (ops, blocks, ops/block).
+    pub fn fusion_summary(&self) -> (usize, usize, f64) {
+        let ops = self.plan.num_ops();
+        let blocks = self.plan.num_blocks();
+        (ops, blocks, ops as f64 / blocks.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use ir::DType;
+
+    #[test]
+    fn full_pipeline_on_fig2b() {
+        // Fig. 2b ③ end-to-end: algebraic rewrite + fusion -> 1 block.
+        let mut g = Graph::new();
+        let star = g.input("star", &[64], DType::F32);
+        let f = g.weight("F", &[64]);
+        let gg = g.weight("G", &[64]);
+        let h = g.weight("H", &[64]);
+        let sf = g.add(star, f);
+        let m1 = g.mul(sf, gg);
+        let m2 = g.mul(sf, h);
+        let out = g.add(m1, m2);
+        g.mark_output(out);
+
+        let c = compile(&g, &CompileOptions::default());
+        assert_eq!(c.ops_before, 4);
+        let (ops, blocks, _) = c.fusion_summary();
+        assert_eq!(ops, 3); // rewritten to (star+F)*(G+H)
+        assert_eq!(blocks, 1); // fused to a single block
+
+        // Numerics: run vs interpreter on original graph.
+        let mut feeds = HashMap::new();
+        for (name, n) in [("star", 64), ("F", 64), ("G", 64), ("H", 64)] {
+            feeds.insert(
+                name.to_string(),
+                (0..n).map(|i| ((i * 7 + 3) % 11) as f32 * 0.25 - 1.0).collect(),
+            );
+        }
+        let got = c.run(&feeds);
+        let expect = exec::interp::eval_graph(&g, &feeds);
+        crate::util::check::assert_close(&got[0].data, &expect[0].data, 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn no_fusion_options() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[16], DType::F32);
+        let b = g.weight("b", &[16]);
+        let x = g.add(a, b);
+        let y = g.gelu(x);
+        g.mark_output(y);
+        let fused = compile(&g, &CompileOptions::default());
+        let unfused = compile(&g, &CompileOptions::no_fusion());
+        assert!(fused.plan.num_blocks() < unfused.plan.num_blocks());
+    }
+}

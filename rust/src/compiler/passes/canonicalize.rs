@@ -1,0 +1,65 @@
+//! Canonicalization: order commutative operands deterministically so CSE
+//! and the algebraic matcher see one spelling of each expression
+//! (the paper's "commutative law" exploitation).
+
+use super::Pass;
+use crate::compiler::ir::{Graph, GraphRewriter};
+
+pub struct Canonicalize;
+
+impl Pass for Canonicalize {
+    fn name(&self) -> &'static str {
+        "canonicalize"
+    }
+
+    fn run(&self, g: &Graph) -> Graph {
+        let mut rw = GraphRewriter::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            let mut n = node.clone();
+            if n.op.is_commutative() && n.inputs.len() == 2 {
+                let a = rw.lookup(n.inputs[0]).expect("topo");
+                let b = rw.lookup(n.inputs[1]).expect("topo");
+                // Sort by (new) id: stable because ids are topo-ordered.
+                if a > b {
+                    n.inputs.swap(0, 1);
+                }
+            }
+            rw.copy(id, &n);
+        }
+        rw.finish(&g.outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::DType;
+    use crate::compiler::passes::cse::Cse;
+
+    #[test]
+    fn commutative_reorder_enables_cse() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let x = g.add(a, b);
+        let y = g.add(b, a); // same value, different spelling
+        let z = g.mul(x, y);
+        g.mark_output(z);
+        // CSE alone can't merge.
+        assert_eq!(Cse.run(&g).num_ops(), 3);
+        // After canonicalization it can.
+        let canon = Canonicalize.run(&g);
+        assert_eq!(Cse.run(&canon).num_ops(), 2);
+    }
+
+    #[test]
+    fn non_commutative_untouched() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let x = g.sub(a, b);
+        g.mark_output(x);
+        let out = Canonicalize.run(&g);
+        assert_eq!(out.nodes[x].inputs, vec![a, b]);
+    }
+}

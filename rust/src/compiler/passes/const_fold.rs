@@ -1,0 +1,201 @@
+//! Constant folding + algebraic identities with scalar constants:
+//! c1 (op) c2 -> c3,  x*1 -> x,  x+0 -> x,  x-0 -> x,  x/1 -> x,  x*0 -> 0.
+//!
+//! "Eliminating unnecessary computations by analyzing the computation
+//! pattern" (§2.2). Only scalar consts exist in this IR; tensor-weight
+//! folding happens at AOT time in XLA instead.
+
+use super::Pass;
+use crate::compiler::ir::{Graph, GraphRewriter, Node, Op};
+
+pub struct ConstFold;
+
+fn const_value(g: &Graph, id: usize) -> Option<f32> {
+    match g.nodes[id].op {
+        Op::Const { value } => Some(value),
+        _ => None,
+    }
+}
+
+impl Pass for ConstFold {
+    fn name(&self) -> &'static str {
+        "const_fold"
+    }
+
+    fn run(&self, g: &Graph) -> Graph {
+        let mut rw = GraphRewriter::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            // Evaluate on ORIGINAL graph ids (stable), emit into rewriter.
+            let folded: Option<FoldResult> = fold(g, id, node);
+            match folded {
+                Some(FoldResult::Scalar(v)) => {
+                    let c = rw.out.constant(v);
+                    rw.alias(id, c);
+                }
+                Some(FoldResult::Forward(src)) => {
+                    let m = rw.lookup(src).expect("topo");
+                    rw.alias(id, m);
+                }
+                None => {
+                    rw.copy(id, node);
+                }
+            }
+        }
+        rw.finish(&g.outputs)
+    }
+}
+
+enum FoldResult {
+    Scalar(f32),
+    Forward(usize),
+}
+
+fn fold(g: &Graph, _id: usize, node: &Node) -> Option<FoldResult> {
+    if node.op.is_elementwise_binary() {
+        let (a, b) = (node.inputs[0], node.inputs[1]);
+        let (ca, cb) = (const_value(g, a), const_value(g, b));
+        // Full fold.
+        if let (Some(x), Some(y)) = (ca, cb) {
+            let v = match node.op {
+                Op::Add => x + y,
+                Op::Sub => x - y,
+                Op::Mul => x * y,
+                Op::Div => x / y,
+                Op::Max => x.max(y),
+                _ => unreachable!(),
+            };
+            return Some(FoldResult::Scalar(v));
+        }
+        // Identities. Only safe when the surviving operand already has the
+        // result shape (dropping a broadcast would change the shape).
+        let same_shape = |keep: usize| g.nodes[keep].shape == node.shape;
+        match (&node.op, ca, cb) {
+            (Op::Mul, Some(c), _) if c == 1.0 && same_shape(b) => {
+                return Some(FoldResult::Forward(b))
+            }
+            (Op::Mul, _, Some(c)) if c == 1.0 && same_shape(a) => {
+                return Some(FoldResult::Forward(a))
+            }
+            (Op::Add, Some(c), _) if c == 0.0 && same_shape(b) => {
+                return Some(FoldResult::Forward(b))
+            }
+            (Op::Add, _, Some(c)) if c == 0.0 && same_shape(a) => {
+                return Some(FoldResult::Forward(a))
+            }
+            (Op::Sub, _, Some(c)) if c == 0.0 && same_shape(a) => {
+                return Some(FoldResult::Forward(a))
+            }
+            (Op::Div, _, Some(c)) if c == 1.0 && same_shape(a) => {
+                return Some(FoldResult::Forward(a))
+            }
+            _ => {}
+        }
+    }
+    if node.op.is_elementwise_unary() {
+        if let Some(x) = const_value(g, node.inputs[0]) {
+            let v = match node.op {
+                Op::Neg => -x,
+                Op::Exp => x.exp(),
+                Op::Erf => erf(x),
+                Op::Tanh => x.tanh(),
+                Op::Rsqrt => 1.0 / x.sqrt(),
+                Op::Recip => 1.0 / x,
+                _ => unreachable!(),
+            };
+            return Some(FoldResult::Scalar(v));
+        }
+    }
+    None
+}
+
+/// Abramowitz–Stegun rational erf approximation (|err| < 1.5e-7) — the same
+/// formula the exec interpreter uses, so folds agree with runtime values.
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::DType;
+    use crate::compiler::passes::dce::Dce;
+
+    #[test]
+    fn folds_const_arith() {
+        let mut g = Graph::new();
+        let c1 = g.constant(2.0);
+        let c2 = g.constant(3.0);
+        let s = g.mul(c1, c2);
+        let a = g.input("a", &[4], DType::F32);
+        let o = g.mul(a, s);
+        g.mark_output(o);
+        let out = Dce.run(&ConstFold.run(&g));
+        // mul(a, const 6)
+        assert_eq!(out.num_ops(), 1);
+        let has_six = out
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::Const { value } if value == 6.0));
+        assert!(has_six, "{}", out.dump());
+    }
+
+    #[test]
+    fn identity_elision() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let one = g.constant(1.0);
+        let zero = g.constant(0.0);
+        let x = g.mul(a, one);
+        let y = g.add(x, zero);
+        let z = g.sub(y, zero);
+        let w = g.div(z, one);
+        g.mark_output(w);
+        let out = Dce.run(&ConstFold.run(&g));
+        assert_eq!(out.num_ops(), 0, "{}", out.dump());
+    }
+
+    #[test]
+    fn broadcast_identity_not_elided() {
+        // scalar*1 where the scalar is broadcast UP must not be forwarded.
+        let mut g = Graph::new();
+        let a = g.input("a", &[1], DType::F32);
+        let ones = g.input("ones", &[4], DType::F32);
+        let x = g.mul(a, ones); // [4]
+        g.mark_output(x);
+        let out = ConstFold.run(&g);
+        assert_eq!(out.nodes[out.outputs[0]].shape.dims, vec![4]);
+    }
+
+    #[test]
+    fn unary_fold() {
+        let mut g = Graph::new();
+        let c = g.constant(0.0);
+        let e = g.add_op(Op::Exp, &[c]);
+        let a = g.input("a", &[2], DType::F32);
+        let o = g.mul(a, e);
+        g.mark_output(o);
+        let out = ConstFold.run(&g);
+        let has_one = out
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::Const { value } if value == 1.0));
+        assert!(has_one);
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // vs known values
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,96 @@
+//! Common subexpression elimination: structurally identical nodes merge.
+
+use std::collections::HashMap;
+
+use super::Pass;
+use crate::compiler::ir::{Graph, GraphRewriter, Op};
+
+pub struct Cse;
+
+/// Structural key for a node after input remapping.
+fn key(op: &Op, inputs: &[usize]) -> Option<String> {
+    // Inputs/weights are never merged by name here (they are unique by
+    // construction); consts merge by value.
+    match op {
+        Op::Input { .. } | Op::Weight { .. } => None,
+        Op::Const { value } => Some(format!("const:{}", value.to_bits())),
+        _ => Some(format!("{op:?}:{inputs:?}")),
+    }
+}
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, g: &Graph) -> Graph {
+        let mut rw = GraphRewriter::new();
+        let mut seen: HashMap<String, usize> = HashMap::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            let mapped_inputs: Vec<usize> =
+                node.inputs.iter().map(|i| rw.lookup(*i).expect("topo order")).collect();
+            match key(&node.op, &mapped_inputs) {
+                Some(k) => {
+                    if let Some(&existing) = seen.get(&k) {
+                        rw.alias(id, existing);
+                    } else {
+                        let new_id = rw.copy(id, node);
+                        seen.insert(k, new_id);
+                    }
+                }
+                None => {
+                    rw.copy(id, node);
+                }
+            }
+        }
+        rw.finish(&g.outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::DType;
+
+    #[test]
+    fn merges_identical_subtrees() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let x = g.add(a, b);
+        let y = g.add(a, b); // identical
+        let z = g.mul(x, y);
+        g.mark_output(z);
+        let out = Cse.run(&g);
+        // add appears once; mul(x, x)
+        assert_eq!(out.num_ops(), 2);
+    }
+
+    #[test]
+    fn merges_transitively() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let x1 = g.add_op(Op::Exp, &[a]);
+        let x2 = g.add_op(Op::Exp, &[a]);
+        let y1 = g.add_op(Op::Tanh, &[x1]);
+        let y2 = g.add_op(Op::Tanh, &[x2]);
+        let z = g.add(y1, y2);
+        g.mark_output(z);
+        let out = Cse.run(&g);
+        assert_eq!(out.num_ops(), 3); // exp, tanh, add
+    }
+
+    #[test]
+    fn consts_merge_by_value() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let c1 = g.constant(2.0);
+        let c2 = g.constant(2.0);
+        let x = g.mul(a, c1);
+        let y = g.mul(a, c2);
+        let z = g.add(x, y);
+        g.mark_output(z);
+        let out = Cse.run(&g);
+        assert_eq!(out.num_ops(), 2); // mul, add
+    }
+}

@@ -1,0 +1,56 @@
+//! Dead code elimination: drop nodes unreachable from the outputs.
+
+use super::Pass;
+use crate::compiler::ir::{Graph, GraphRewriter};
+
+pub struct Dce;
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, g: &Graph) -> Graph {
+        let live = g.live_set();
+        let mut rw = GraphRewriter::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            if live[id] {
+                rw.copy(id, node);
+            }
+        }
+        rw.finish(&g.outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::DType;
+
+    #[test]
+    fn removes_dead_nodes() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let live = g.add(a, b);
+        let _dead1 = g.mul(a, b);
+        let _dead2 = g.sub(a, b);
+        g.mark_output(live);
+        let out = Dce.run(&g);
+        assert_eq!(out.nodes.len(), 3); // a, b, add
+        assert_eq!(out.num_ops(), 1);
+    }
+
+    #[test]
+    fn keeps_all_outputs() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let x = g.add_op(crate::compiler::ir::Op::Exp, &[a]);
+        let y = g.add_op(crate::compiler::ir::Op::Tanh, &[a]);
+        g.mark_output(x);
+        g.mark_output(y);
+        let out = Dce.run(&g);
+        assert_eq!(out.num_ops(), 2);
+        assert_eq!(out.outputs.len(), 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! Layout simplification: cancel and collapse data-movement ops.
+//!
+//!   transpose(transpose(x))      -> x
+//!   reshape(reshape(x, a), b)    -> reshape(x, b)
+//!   reshape(x, shape_of(x))      -> x
+//!
+//! These arise naturally from the model builder's head-split/merge
+//! sequences; removing them cuts launched blocks (transposes never fuse),
+//! which the device model prices directly.
+
+use super::Pass;
+use crate::compiler::ir::{Graph, GraphRewriter, Op};
+
+pub struct LayoutSimplify;
+
+impl Pass for LayoutSimplify {
+    fn name(&self) -> &'static str {
+        "layout"
+    }
+
+    fn run(&self, g: &Graph) -> Graph {
+        let mut rw = GraphRewriter::new();
+        for (id, node) in g.nodes.iter().enumerate() {
+            match &node.op {
+                Op::Transpose => {
+                    let src = node.inputs[0];
+                    if g.nodes[src].op == Op::Transpose {
+                        // transpose∘transpose = id (both swap the same last
+                        // two axes).
+                        let orig = g.nodes[src].inputs[0];
+                        let mapped = rw.lookup(orig).expect("topo");
+                        rw.alias(id, mapped);
+                        continue;
+                    }
+                    rw.copy(id, node);
+                }
+                Op::Reshape { target } => {
+                    let src = node.inputs[0];
+                    // reshape to the producer's own shape -> forward.
+                    if g.nodes[src].shape.dims == *target {
+                        let mapped = rw.lookup(src).expect("topo");
+                        rw.alias(id, mapped);
+                        continue;
+                    }
+                    // reshape(reshape(x)) -> reshape(x, final target).
+                    if let Op::Reshape { .. } = g.nodes[src].op {
+                        let orig = g.nodes[src].inputs[0];
+                        let mapped = rw.lookup(orig).expect("topo");
+                        if g.nodes[orig].shape.dims == *target {
+                            rw.alias(id, mapped);
+                        } else {
+                            let new_id = rw
+                                .out
+                                .add_op(Op::Reshape { target: target.clone() }, &[mapped]);
+                            rw.alias(id, new_id);
+                        }
+                        continue;
+                    }
+                    rw.copy(id, node);
+                }
+                _ => {
+                    rw.copy(id, node);
+                }
+            }
+        }
+        rw.finish(&g.outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::DType;
+    use crate::compiler::passes::dce::Dce;
+
+    #[test]
+    fn double_transpose_cancels() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 8], DType::F32);
+        let t1 = g.add_op(Op::Transpose, &[a]);
+        let t2 = g.add_op(Op::Transpose, &[t1]);
+        let o = g.add(t2, a);
+        g.mark_output(o);
+        let out = Dce.run(&LayoutSimplify.run(&g));
+        assert_eq!(out.num_ops(), 1, "{}", out.dump()); // just the add
+    }
+
+    #[test]
+    fn reshape_chain_collapses() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 8], DType::F32);
+        let r1 = g.add_op(Op::Reshape { target: vec![32] }, &[a]);
+        let r2 = g.add_op(Op::Reshape { target: vec![8, 4] }, &[r1]);
+        g.mark_output(r2);
+        let out = Dce.run(&LayoutSimplify.run(&g));
+        assert_eq!(out.num_ops(), 1, "{}", out.dump());
+        assert_eq!(out.nodes[out.outputs[0]].shape.dims, vec![8, 4]);
+    }
+
+    #[test]
+    fn reshape_roundtrip_cancels() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 8], DType::F32);
+        let r1 = g.add_op(Op::Reshape { target: vec![32] }, &[a]);
+        let r2 = g.add_op(Op::Reshape { target: vec![4, 8] }, &[r1]);
+        let o = g.add(r2, a);
+        g.mark_output(o);
+        let out = Dce.run(&LayoutSimplify.run(&g));
+        assert_eq!(out.num_ops(), 1, "{}", out.dump());
+    }
+
+    #[test]
+    fn identity_reshape_forwards() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 8], DType::F32);
+        let r = g.add_op(Op::Reshape { target: vec![4, 8] }, &[a]);
+        g.mark_output(r);
+        let out = LayoutSimplify.run(&g);
+        assert_eq!(out.num_ops(), 0, "{}", out.dump());
+    }
+
+    #[test]
+    fn single_transpose_kept() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 8], DType::F32);
+        let t = g.add_op(Op::Transpose, &[a]);
+        g.mark_output(t);
+        let out = LayoutSimplify.run(&g);
+        assert_eq!(out.num_ops(), 1);
+    }
+
+    #[test]
+    fn semantics_preserved_on_bert_layer() {
+        use crate::compiler::exec::interp::eval_graph;
+        use crate::model::{build_encoder, BertConfig};
+        use std::collections::HashMap;
+
+        let cfg = BertConfig { vocab: 32, seq: 4, layers: 1, hidden: 8, heads: 2, inter: 16 };
+        let g = build_encoder(&cfg);
+        let mut feeds: HashMap<String, Vec<f32>> = HashMap::new();
+        let mut rng = crate::util::rng::Rng::new(4);
+        for node in &g.nodes {
+            if let Op::Input { name } | Op::Weight { name } = &node.op {
+                let v = if name.starts_with("mask") {
+                    vec![0.0; node.shape.numel()]
+                } else if name.ends_with("gamma") {
+                    vec![1.0; node.shape.numel()]
+                } else if node.dtype == DType::I32 {
+                    (0..node.shape.numel()).map(|_| rng.below(16) as f32).collect()
+                } else {
+                    (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 0.1)).collect()
+                };
+                feeds.insert(name.clone(), v);
+            }
+        }
+        let expect = eval_graph(&g, &feeds);
+        let simplified = Dce.run(&LayoutSimplify.run(&g));
+        assert!(simplified.num_ops() <= g.num_ops());
+        let got = eval_graph(&simplified, &feeds);
+        crate::util::check::assert_close(&got[0].data, &expect[0].data, 1e-4, 1e-5).unwrap();
+    }
+}

@@ -1,0 +1,89 @@
+//! Graph optimization passes (S2) — step 1 of the paper's compiler code
+//! generation: "generate a computational graph ... and apply multiple
+//! optimizations on this graph".
+//!
+//! Passes are pure graph→graph functions; `PassManager` runs them to a
+//! fixpoint and records per-pass op-count deltas (surfaced by the
+//! fig2_fusion example and the NAS latency feedback).
+
+pub mod algebraic;
+pub mod canonicalize;
+pub mod const_fold;
+pub mod cse;
+pub mod dce;
+pub mod layout;
+
+use super::ir::Graph;
+
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &Graph) -> Graph;
+}
+
+#[derive(Debug, Clone)]
+pub struct PassStat {
+    pub pass: &'static str,
+    pub ops_before: usize,
+    pub ops_after: usize,
+}
+
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    pub max_iters: usize,
+}
+
+impl PassManager {
+    /// The standard CANAO pre-fusion pipeline.
+    pub fn standard() -> Self {
+        PassManager {
+            passes: vec![
+                Box::new(canonicalize::Canonicalize),
+                Box::new(const_fold::ConstFold),
+                Box::new(layout::LayoutSimplify),
+                Box::new(algebraic::AlgebraicRewrite),
+                Box::new(cse::Cse),
+                Box::new(dce::Dce),
+            ],
+            max_iters: 8,
+        }
+    }
+
+    /// Run all passes repeatedly until no pass changes the op count.
+    pub fn run(&self, g: &Graph) -> (Graph, Vec<PassStat>) {
+        let mut cur = g.clone();
+        let mut stats = Vec::new();
+        for _ in 0..self.max_iters {
+            let before_ops = cur.num_ops();
+            for p in &self.passes {
+                let b = cur.num_ops();
+                cur = p.run(&cur);
+                stats.push(PassStat { pass: p.name(), ops_before: b, ops_after: cur.num_ops() });
+            }
+            if cur.num_ops() == before_ops {
+                break;
+            }
+        }
+        (cur, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::{DType, Graph};
+
+    #[test]
+    fn pipeline_reaches_fixpoint() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let one = g.constant(1.0);
+        let x = g.mul(a, one); // folds to a
+        let y = g.add(x, x); // stays
+        let z = g.add(x, x); // CSE with y
+        let w = g.add(y, z); // becomes add(y, y)
+        g.mark_output(w);
+        let (out, stats) = PassManager::standard().run(&g);
+        assert!(out.num_ops() <= 2, "{}", out.dump());
+        assert!(!stats.is_empty());
+    }
+}

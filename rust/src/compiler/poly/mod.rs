@@ -1,0 +1,297 @@
+//! Polyhedral-lite loop analysis (S4) — the paper's "Polyhedral-based Code
+//! Generation" (§2.2, Fig. 4).
+//!
+//! LP-Fusion groups layers with *different* output shapes (e.g. a [M,N]
+//! elementwise op with a [N] row op). At code level their loop nests
+//! differ, so the compiler must (a) prove the fusion legal and (b) choose
+//! among legal loop schedules. This module implements the restricted
+//! polyhedral machinery that the DNN domain needs:
+//!
+//! * iteration domains as dense rectangles (all DNN loops here are such);
+//! * affine access functions (row-major strides, 0-stride = broadcast);
+//! * a dependence test specialized to elementwise/broadcast accesses;
+//! * schedule enumeration for fused elementwise blocks: the row-major
+//!   recompute schedule (`fuse_add`) and the hoisted loop-permuted
+//!   schedule (`fuse_add'`), exactly the two versions of Fig. 4. The
+//!   autotuner (S6) picks between them empirically.
+
+use crate::compiler::fusion::{BlockKind, FusedBlock};
+use crate::compiler::ir::{Graph, NodeId, Shape};
+
+/// A dense rectangular iteration domain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterDomain {
+    pub extents: Vec<usize>,
+}
+
+impl IterDomain {
+    pub fn from_shape(s: &Shape) -> Self {
+        IterDomain { extents: s.dims.clone() }
+    }
+
+    pub fn points(&self) -> usize {
+        self.extents.iter().product()
+    }
+}
+
+/// Affine access: element index = sum_i coord[i] * strides[i]. A 0 stride
+/// on axis i means the operand is broadcast along i.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Access {
+    pub strides: Vec<usize>,
+}
+
+impl Access {
+    pub fn identity(shape: &Shape) -> Self {
+        Access { strides: shape.strides() }
+    }
+
+    pub fn broadcast(operand: &Shape, target: &Shape) -> Self {
+        Access { strides: operand.broadcast_strides(target) }
+    }
+
+    /// Is this operand invariant along `axis` (stride 0)?
+    pub fn invariant_along(&self, axis: usize) -> bool {
+        self.strides.get(axis).copied() == Some(0)
+    }
+
+    /// Contiguous (stride 1) along `axis`? Drives the locality cost model.
+    pub fn contiguous_along(&self, axis: usize) -> bool {
+        self.strides.get(axis).copied() == Some(1)
+    }
+}
+
+/// Dependence test for two accesses within a fused elementwise block:
+/// a producer write at iteration I is read by the consumer at iteration J;
+/// for identity/broadcast accesses the only dependence is I == J (loop-
+/// independent), which any loop permutation preserves. Returns true when
+/// the pair is fusable at all loop depths.
+pub fn loop_independent(write: &Access, read: &Access) -> bool {
+    // Broadcast reads (stride-0 axes) read the *same* element from many
+    // iterations; that is still loop-independent w.r.t. the producer as
+    // long as the producer wrote it before the consumer's first read —
+    // guaranteed by statement order inside the fused body. Identity-vs-
+    // identity is trivially I == J. Anything non-affine would have been
+    // rejected earlier, so the check is structural:
+    write.strides.len() == read.strides.len()
+}
+
+/// Verify a fused block's internal edges are all loop-independent — the
+/// legality invariant LP-Fusion's op policy is designed to guarantee.
+/// (Property-tested in rust/tests/proptest_invariants.rs.)
+pub fn fusion_legal(g: &Graph, block: &FusedBlock) -> bool {
+    if !matches!(
+        block.kind,
+        BlockKind::ElementwiseChain | BlockKind::BroadcastElementwise
+    ) {
+        // Reductions/matmuls use fixed specialized schedules; their
+        // legality is by construction.
+        return true;
+    }
+    let out_shape = block_output_shape(g, block);
+    for &n in &block.nodes {
+        let w = Access::broadcast(&g.nodes[n].shape, &out_shape);
+        for &i in &g.nodes[n].inputs {
+            if block.nodes.contains(&i) {
+                let r = Access::broadcast(&g.nodes[i].shape, &out_shape);
+                if !loop_independent(&r, &w) {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// The iteration domain of an elementwise block = its (single) output shape.
+pub fn block_output_shape(g: &Graph, block: &FusedBlock) -> Shape {
+    let last = *block.nodes.last().expect("non-empty block");
+    g.nodes[last].shape.clone()
+}
+
+/// A loop schedule for a fused elementwise block over a 2-D domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    /// Fig. 4 `fuse_add`: i (rows) outer, j (cols) inner. Row-invariant
+    /// subexpressions are *recomputed* every row; all accesses row-major.
+    RowRecompute,
+    /// Fig. 4 `fuse_add'`: j outer, i inner, row-invariant subexpressions
+    /// hoisted to the j loop. No redundant compute, but [M,N] operands are
+    /// walked column-major (bad locality).
+    HoistedColMajor,
+}
+
+/// Enumerate the legal schedules for a block. Both Fig. 4 variants exist
+/// exactly when the block is 2-D elementwise and some operand is
+/// row-invariant (i.e. broadcast along axis 0) — otherwise hoisting has
+/// nothing to hoist and only the row-major schedule is emitted.
+pub fn schedules_for(g: &Graph, block: &FusedBlock) -> Vec<Schedule> {
+    let out = block_output_shape(g, block);
+    if out.rank() != 2
+        || !matches!(
+            block.kind,
+            BlockKind::BroadcastElementwise | BlockKind::ElementwiseChain
+        )
+    {
+        return vec![Schedule::RowRecompute];
+    }
+    let any_row_invariant = block_external_inputs(g, block).iter().any(|&i| {
+        let acc = Access::broadcast(&g.nodes[i].shape, &out);
+        acc.invariant_along(0)
+    });
+    // Permuting an elementwise 2-D nest is always legal (loop-independent
+    // deps only — `fusion_legal`), so the choice is purely a cost question.
+    if any_row_invariant {
+        vec![Schedule::RowRecompute, Schedule::HoistedColMajor]
+    } else {
+        vec![Schedule::RowRecompute]
+    }
+}
+
+fn block_external_inputs(g: &Graph, block: &FusedBlock) -> Vec<NodeId> {
+    let mut v = Vec::new();
+    for &n in &block.nodes {
+        for &i in &g.nodes[n].inputs {
+            if !block.nodes.contains(&i) && !v.contains(&i) && !g.nodes[i].shape.is_scalar() {
+                v.push(i);
+            }
+        }
+    }
+    v
+}
+
+/// Static cost estimate for a schedule (used to seed the autotuner and as
+/// the device simulator's locality adjustment):
+/// * RowRecompute: redundant FLOPs = (#invariant ops) × M×N instead of ×N,
+///   all accesses sequential.
+/// * HoistedColMajor: minimal FLOPs, but [M,N] operands walked with
+///   stride N (a cache line is reused only every M elements).
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleCost {
+    pub flops: f64,
+    /// Effective memory cost in "element accesses", weighted by locality:
+    /// a strided access costs `stride_penalty` × more than sequential.
+    pub mem_cost: f64,
+}
+
+pub fn schedule_cost(
+    g: &Graph,
+    block: &FusedBlock,
+    sched: Schedule,
+    stride_penalty: f64,
+) -> ScheduleCost {
+    let out = block_output_shape(g, block);
+    let (m, n) = if out.rank() == 2 { (out.dims[0], out.dims[1]) } else { (1, out.numel()) };
+    let inputs = block_external_inputs(g, block);
+    let invariant_ops = block
+        .nodes
+        .iter()
+        .filter(|&&nid| {
+            // An op is row-invariant if its shape broadcasts with stride 0
+            // along axis 0 of the output.
+            let acc = Access::broadcast(&g.nodes[nid].shape, &out);
+            acc.invariant_along(0)
+        })
+        .count() as f64;
+    let variant_ops = block.nodes.len() as f64 - invariant_ops;
+
+    match sched {
+        Schedule::RowRecompute => {
+            let flops = (variant_ops + invariant_ops) * (m as f64) * (n as f64);
+            // All operands walked along their contiguous axis.
+            let mem: f64 = inputs
+                .iter()
+                .map(|&i| g.nodes[i].shape.numel() as f64)
+                .sum::<f64>()
+                + out.numel() as f64;
+            ScheduleCost { flops, mem_cost: mem }
+        }
+        Schedule::HoistedColMajor => {
+            let flops = variant_ops * (m as f64) * (n as f64) + invariant_ops * (n as f64);
+            // Full-rank operands are walked column-major: penalized.
+            let mut mem = 0.0;
+            for &i in &inputs {
+                let acc = Access::broadcast(&g.nodes[i].shape, &out);
+                let numel = g.nodes[i].shape.numel() as f64;
+                if acc.invariant_along(0) {
+                    mem += numel; // read once per j
+                } else {
+                    mem += numel * stride_penalty;
+                }
+            }
+            mem += out.numel() as f64 * stride_penalty;
+            ScheduleCost { flops, mem_cost: mem }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::fusion::{lp_fusion, FusionConfig};
+    use crate::compiler::ir::{DType, Graph};
+
+    fn fig4_graph(m: usize, n: usize) -> (Graph, FusedBlock) {
+        let mut g = Graph::new();
+        let a = g.input("A", &[m, n], DType::F32);
+        let b = g.input("B", &[m, n], DType::F32);
+        let c = g.input("C", &[n], DType::F32);
+        let d = g.input("D", &[n], DType::F32);
+        let m1 = g.mul(a, b);
+        let m2 = g.mul(c, d);
+        let out = g.add(m1, m2);
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        let blk = plan.blocks[0].clone();
+        (g, blk)
+    }
+
+    #[test]
+    fn fig4_has_both_schedules() {
+        let (g, blk) = fig4_graph(64, 64);
+        let scheds = schedules_for(&g, &blk);
+        assert_eq!(
+            scheds,
+            vec![Schedule::RowRecompute, Schedule::HoistedColMajor]
+        );
+    }
+
+    #[test]
+    fn same_shape_chain_has_single_schedule() {
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 8], DType::F32);
+        let b = g.input("B", &[8, 8], DType::F32);
+        let x = g.add(a, b);
+        let y = g.mul(x, a);
+        g.mark_output(y);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let scheds = schedules_for(&g, &plan.blocks[0]);
+        assert_eq!(scheds, vec![Schedule::RowRecompute]);
+    }
+
+    #[test]
+    fn fusion_legality_holds_for_lp_blocks() {
+        let (g, blk) = fig4_graph(16, 32);
+        assert!(fusion_legal(&g, &blk));
+    }
+
+    #[test]
+    fn cost_model_tradeoff() {
+        // Hoisted does fewer FLOPs but pays strided memory cost.
+        let (g, blk) = fig4_graph(256, 256);
+        let row = schedule_cost(&g, &blk, Schedule::RowRecompute, 8.0);
+        let hoist = schedule_cost(&g, &blk, Schedule::HoistedColMajor, 8.0);
+        assert!(hoist.flops < row.flops);
+        assert!(hoist.mem_cost > row.mem_cost);
+    }
+
+    #[test]
+    fn broadcast_access_strides() {
+        let row = Shape::new(&[16]);
+        let target = Shape::new(&[4, 16]);
+        let acc = Access::broadcast(&row, &target);
+        assert!(acc.invariant_along(0));
+        assert!(acc.contiguous_along(1));
+    }
+}

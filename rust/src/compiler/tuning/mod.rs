@@ -1,0 +1,207 @@
+//! Auto-tuning (S6): empirically select the loop schedule per fused block
+//! (§2.2: "our compiler ... generates both versions and employs
+//! auto-tuning to dynamically select the optimal version").
+//!
+//! For every block with more than one legal schedule (the Fig. 4 kind),
+//! the tuner executes the *generated code* (the compiled tape) under each
+//! schedule on representative buffers, times it, and caches the winner
+//! keyed by (block fingerprint, domain shape).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::compiler::codegen::tape::compile_block;
+use crate::compiler::exec::plan::ScheduleChoices;
+use crate::compiler::exec::tensor::Tensor;
+use crate::compiler::fusion::{FusedBlock, FusionPlan};
+use crate::compiler::ir::Graph;
+use crate::compiler::poly::{schedule_cost, schedules_for, Schedule};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub block_id: usize,
+    pub candidates: Vec<(Schedule, f64)>, // (schedule, seconds per exec)
+    pub chosen: Schedule,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Autotuner {
+    /// (fingerprint, dims) -> schedule
+    cache: HashMap<(String, Vec<usize>), Schedule>,
+    /// Minimum per-candidate measurement repetitions.
+    pub reps: usize,
+    /// If true, skip measurement and use the static polyhedral cost model
+    /// (ablation D2: model-only selection).
+    pub model_only: bool,
+}
+
+impl Autotuner {
+    pub fn new() -> Self {
+        Autotuner { cache: HashMap::new(), reps: 3, model_only: false }
+    }
+
+    pub fn model_only() -> Self {
+        Autotuner { cache: HashMap::new(), reps: 0, model_only: true }
+    }
+
+    /// Tune every multi-schedule block of the plan; returns the per-block
+    /// choices for `execute_plan` plus reports for logging.
+    pub fn tune_plan(
+        &mut self,
+        g: &Graph,
+        plan: &FusionPlan,
+        seed: u64,
+    ) -> (ScheduleChoices, Vec<TuneReport>) {
+        let mut choices = ScheduleChoices::new();
+        let mut reports = Vec::new();
+        for block in &plan.blocks {
+            let scheds = schedules_for(g, block);
+            if scheds.len() < 2 {
+                choices.insert(block.id, *scheds.first().unwrap_or(&Schedule::RowRecompute));
+                continue;
+            }
+            let report = self.tune_block(g, block, &scheds, seed);
+            choices.insert(block.id, report.chosen);
+            reports.push(report);
+        }
+        (choices, reports)
+    }
+
+    pub fn tune_block(
+        &mut self,
+        g: &Graph,
+        block: &FusedBlock,
+        scheds: &[Schedule],
+        seed: u64,
+    ) -> TuneReport {
+        let fp = fingerprint(g, block);
+        let dims = crate::compiler::poly::block_output_shape(g, block).dims;
+        if let Some(&cached) = self.cache.get(&(fp.clone(), dims.clone())) {
+            return TuneReport { block_id: block.id, candidates: vec![], chosen: cached };
+        }
+
+        let chosen;
+        let mut candidates = Vec::new();
+        if self.model_only {
+            // Static polyhedral cost model: convert to a scalar proxy
+            // (flops + weighted memory cost).
+            let mut best = (f64::INFINITY, scheds[0]);
+            for &s in scheds {
+                let c = schedule_cost(g, block, s, 8.0);
+                let proxy = c.flops + 4.0 * c.mem_cost;
+                candidates.push((s, proxy));
+                if proxy < best.0 {
+                    best = (proxy, s);
+                }
+            }
+            chosen = best.1;
+        } else {
+            let tape = compile_block(g, block);
+            let mut rng = Rng::new(seed);
+            let bufs: Vec<Tensor> = tape
+                .inputs
+                .iter()
+                .map(|&i| Tensor::randn(&g.nodes[i].shape.dims, &mut rng, 1.0))
+                .collect();
+            let refs: Vec<&Tensor> = bufs.iter().collect();
+            let mut best = (f64::INFINITY, scheds[0]);
+            for &s in scheds {
+                // Warm-up once, then take the best of `reps` runs (min is
+                // the robust estimator for single-threaded kernels).
+                let _ = tape.execute(&refs, s);
+                let mut t_best = f64::INFINITY;
+                for _ in 0..self.reps.max(1) {
+                    let t0 = Instant::now();
+                    let out = tape.execute(&refs, s);
+                    let dt = t0.elapsed().as_secs_f64();
+                    std::hint::black_box(out);
+                    t_best = t_best.min(dt);
+                }
+                candidates.push((s, t_best));
+                if t_best < best.0 {
+                    best = (t_best, s);
+                }
+            }
+            chosen = best.1;
+        }
+
+        self.cache.insert((fp, dims), chosen);
+        TuneReport { block_id: block.id, candidates, chosen }
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Structural fingerprint of a block (op sequence + input ranks) — blocks
+/// with the same fingerprint and domain share a tuned choice.
+fn fingerprint(g: &Graph, block: &FusedBlock) -> String {
+    let mut s = String::new();
+    for &n in &block.nodes {
+        s.push_str(g.nodes[n].op.mnemonic());
+        s.push('/');
+        for &i in &g.nodes[n].inputs {
+            s.push_str(&format!("{}", g.nodes[i].shape.rank()));
+        }
+        s.push(';');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::fusion::{lp_fusion, FusionConfig};
+    use crate::compiler::ir::{DType, Graph};
+
+    fn fig4_graph(m: usize, n: usize) -> (Graph, FusionPlan) {
+        let mut g = Graph::new();
+        let a = g.input("A", &[m, n], DType::F32);
+        let b = g.input("B", &[m, n], DType::F32);
+        let c = g.input("C", &[n], DType::F32);
+        let d = g.input("D", &[n], DType::F32);
+        let m1 = g.mul(a, b);
+        let m2 = g.mul(c, d);
+        let out = g.add(m1, m2);
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        (g, plan)
+    }
+
+    #[test]
+    fn tuner_measures_both_candidates() {
+        let (g, plan) = fig4_graph(64, 64);
+        let mut t = Autotuner::new();
+        let (choices, reports) = t.tune_plan(&g, &plan, 7);
+        assert_eq!(choices.len(), 1);
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].candidates.len(), 2);
+    }
+
+    #[test]
+    fn cache_hits_skip_measurement() {
+        let (g, plan) = fig4_graph(32, 32);
+        let mut t = Autotuner::new();
+        let _ = t.tune_plan(&g, &plan, 7);
+        assert_eq!(t.cache_len(), 1);
+        let (_, reports) = t.tune_plan(&g, &plan, 7);
+        // Cached: report has no fresh measurements.
+        assert!(reports.iter().all(|r| r.candidates.is_empty()));
+    }
+
+    #[test]
+    fn model_only_prefers_hoisted_flops_when_mem_equalish() {
+        // With a small stride penalty, the model's proxy should favor the
+        // schedule with fewer flops for heavily invariant blocks.
+        let (g, plan) = fig4_graph(512, 8);
+        let mut t = Autotuner::model_only();
+        let (choices, _) = t.tune_plan(&g, &plan, 1);
+        // Either answer is defensible; assert only that a decision is made
+        // deterministically.
+        let c1 = choices[&plan.blocks[0].id];
+        let (choices2, _) = Autotuner::model_only().tune_plan(&g, &plan, 2);
+        assert_eq!(c1, choices2[&plan.blocks[0].id]);
+    }
+}

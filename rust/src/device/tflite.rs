@@ -1,0 +1,67 @@
+//! TFLite baseline execution model (S8).
+//!
+//! TFLite (the paper's only viable comparator: "only TFLite supports
+//! deploying BERT models on mobile CPU ... no other frameworks can even
+//! support BERT models on mobile CPU") executes the op graph through an
+//! interpreter with a *fixed* fusion repertoire — effectively
+//! matmul+bias+activation and small elementwise pairs — and reference
+//! kernels. We model it as LP-Fusion restricted to 3-op blocks with a
+//! small footprint budget, priced on the `tflite_cpu` profile.
+
+use super::{plan_latency, DeviceProfile, Latency};
+use crate::compiler::fusion::{lp_fusion, FusionConfig};
+use crate::compiler::ir::Graph;
+use crate::compiler::passes::PassManager;
+use crate::model::{build_encoder, BertConfig};
+
+/// TFLite's fixed fusion repertoire as a FusionConfig.
+pub fn tflite_fusion_config() -> FusionConfig {
+    FusionConfig {
+        enabled: true,
+        fuse_matmul: true,
+        footprint_budget: 256 << 10, // small scratch buffers only
+        max_block_ops: 3,            // matmul+bias+act and similar pairs
+    }
+}
+
+/// End-to-end TFLite CPU latency for a model config.
+pub fn tflite_latency(cfg: &BertConfig) -> Latency {
+    let g = build_encoder(cfg);
+    tflite_latency_graph(&g)
+}
+
+pub fn tflite_latency_graph(g: &Graph) -> Latency {
+    // TFLite converters run standard graph cleanups too (fold, CSE, DCE).
+    let (optimized, _) = PassManager::standard().run(g);
+    let plan = lp_fusion(&optimized, &tflite_fusion_config());
+    plan_latency(&optimized, &plan, &DeviceProfile::tflite_cpu())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tflite_blocks_capped_at_three_ops() {
+        let cfg = BertConfig { vocab: 64, seq: 16, layers: 1, hidden: 32, heads: 2, inter: 64 };
+        let g = build_encoder(&cfg);
+        let (optimized, _) = PassManager::standard().run(&g);
+        let plan = lp_fusion(&optimized, &tflite_fusion_config());
+        for b in &plan.blocks {
+            assert!(b.nodes.len() <= 3, "{:?}", b.nodes);
+        }
+    }
+
+    #[test]
+    fn tflite_slower_than_canao_fused_cpu() {
+        use crate::compiler::{compile, CompileOptions};
+        let cfg = BertConfig::distilbert();
+        let g = build_encoder(&cfg);
+        let fused = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+        let canao = plan_latency(&fused.graph, &fused.plan, &DeviceProfile::s865_cpu());
+        let tfl = tflite_latency(&cfg);
+        let speedup = tfl.ms() / canao.ms();
+        // Paper Table 1: 1.8x on DistilBERT-CPU. Accept a generous band.
+        assert!(speedup > 1.3 && speedup < 3.0, "speedup {speedup}");
+    }
+}

@@ -1,0 +1,30 @@
+//! # CANAO-RS
+//!
+//! Reproduction of *"A Compression-Compilation Framework for On-mobile
+//! Real-time BERT Applications"* (IJCAI 2021) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the CANAO framework itself: the compiler
+//!   (graph passes, LP-Fusion, polyhedral variant codegen, autotuning),
+//!   the compiler-in-the-loop NAS (RNN controller + REINFORCE), the
+//!   mobile-device latency simulator, and the serving runtime (QA +
+//!   text generation) that executes AOT-compiled models via PJRT.
+//! * **L2 (python/compile/model.py)** — the searched BERT-variant family
+//!   in JAX, lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   hot-spots (attention, FFN, residual-layernorm, Fig. 4 fused add).
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod compiler;
+pub mod device;
+pub mod model;
+pub mod nas;
+pub mod reports;
+pub mod runtime;
+pub mod serving;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+
+pub use reports::{bench_table1, bench_table2, table1_rows};

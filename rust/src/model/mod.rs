@@ -1,0 +1,238 @@
+//! BERT-variant graph builder (S15): constructs the compiler-IR
+//! computational graph for any point in the NAS search space, mirroring
+//! the L2 JAX model (python/compile/model.py) op for op.
+//!
+//! This is what the compiler-in-the-loop NAS compiles and costs: the
+//! controller proposes a `BertConfig`, `build_encoder` emits the graph,
+//! `compiler::compile` fuses it, and the device simulator prices it.
+
+use crate::compiler::ir::{DType, Graph, NodeId, Op};
+
+/// Architectural hyper-parameters — the §2.1 search space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BertConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub inter: usize,
+}
+
+impl BertConfig {
+    /// BERT_BASE (Devlin et al.) — the paper's Table 1 row 2.
+    pub fn bert_base() -> Self {
+        BertConfig { vocab: 30522, seq: 128, layers: 12, hidden: 768, heads: 12, inter: 3072 }
+    }
+
+    /// DistilBERT (Sanh et al.) — Table 1 row 1.
+    pub fn distilbert() -> Self {
+        BertConfig { vocab: 30522, seq: 128, layers: 6, hidden: 768, heads: 12, inter: 3072 }
+    }
+
+    /// MobileBERT-class (Sun et al.): 24 thin layers, 128 hidden with
+    /// bottlenecks — approximated here by its effective compute shape.
+    pub fn mobilebert() -> Self {
+        BertConfig { vocab: 30522, seq: 128, layers: 24, hidden: 512, heads: 4, inter: 512 }
+    }
+
+    /// CANAOBERT, the paper's searched model (#FLOPs 4.6G at seq 128).
+    /// The paper doesn't publish the exact dims; this shape matches the
+    /// reported FLOPs (4.63G here vs 4.6G) and the "fewer layers first,
+    /// then tuned sizes" recipe of §2.
+    pub fn canaobert() -> Self {
+        BertConfig { vocab: 30522, seq: 128, layers: 6, hidden: 512, heads: 8, inter: 1792 }
+    }
+
+    /// The small on-device demo model exported by aot.py ("qa").
+    pub fn demo_qa() -> Self {
+        BertConfig { vocab: 2048, seq: 128, layers: 4, hidden: 256, heads: 4, inter: 1024 }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Encoder forward FLOPs (2*MACs) — matches model.py::flops and the
+    /// paper's #FLOPs column (BERT_BASE @128 -> 22.4G vs paper 21.8G).
+    pub fn flops(&self) -> u64 {
+        let (s, h, i) = (self.seq as u64, self.hidden as u64, self.inter as u64);
+        let per_layer = 2 * s * h * h * 4 + 2 * s * s * h * 2 + 2 * s * h * i * 2;
+        self.layers as u64 * per_layer
+    }
+
+    /// Parameter count (encoder + embeddings).
+    pub fn params(&self) -> u64 {
+        let (v, s, h, i) = (
+            self.vocab as u64,
+            self.seq as u64,
+            self.hidden as u64,
+            self.inter as u64,
+        );
+        let embed = v * h + s * h + 2 * h;
+        let per_layer = 4 * h * h + 4 * h + 2 * h * i + i + h + 4 * h;
+        embed + self.layers as u64 * per_layer
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.hidden % self.heads != 0 {
+            return Err(format!("hidden {} % heads {} != 0", self.hidden, self.heads));
+        }
+        if self.layers == 0 || self.hidden == 0 || self.inter == 0 {
+            return Err("zero-sized dimension".into());
+        }
+        Ok(())
+    }
+}
+
+/// Build the full encoder graph for `cfg` (batch 1, per-head attention
+/// expressed with explicit transpose/reshape so fusion sees the real op
+/// stream). Returns the graph; the final hidden states are its output.
+pub fn build_encoder(cfg: &BertConfig) -> Graph {
+    let mut g = Graph::new();
+    let (s, h) = (cfg.seq, cfg.hidden);
+
+    // Embeddings: token + position + layernorm. (Type embeddings omitted
+    // in the cost graph: identical shape/cost to position embeddings.)
+    let tok_table = g.weight("embed/token", &[cfg.vocab, h]);
+    let ids = g.input("input_ids", &[s], DType::I32);
+    let tok = g.add_op(Op::Gather, &[tok_table, ids]);
+    let pos = g.weight("embed/position", &[s, h]);
+    let emb = g.add(tok, pos);
+    let ln_g = g.weight("embed/ln_gamma", &[h]);
+    let ln_b = g.weight("embed/ln_beta", &[h]);
+    let mut x = g.layernorm(emb, ln_g, ln_b, 1e-12);
+
+    for l in 0..cfg.layers {
+        x = encoder_layer(&mut g, cfg, x, l);
+    }
+    g.mark_output(x);
+    g
+}
+
+/// One transformer layer: per-head attention + FFN, all from primitives.
+fn encoder_layer(g: &mut Graph, cfg: &BertConfig, x: NodeId, l: usize) -> NodeId {
+    let (s, h, a) = (cfg.seq, cfg.hidden, cfg.heads);
+    let dh = cfg.head_dim();
+    let p = format!("layer{l}");
+
+    let proj = |g: &mut Graph, x: NodeId, name: &str| -> NodeId {
+        let w = g.weight(&format!("{p}/w{name}"), &[h, h]);
+        let b = g.weight(&format!("{p}/b{name}"), &[h]);
+        let mm = g.matmul(x, w);
+        g.add(mm, b)
+    };
+    let q = proj(g, x, "q");
+    let k = proj(g, x, "k");
+    let v = proj(g, x, "v");
+
+    // Split heads: [s, h] -> [a, s, dh] (reshape + transpose pair).
+    let split = |g: &mut Graph, t: NodeId| -> NodeId {
+        let r = g.add_op(Op::Reshape { target: vec![s, a, dh] }, &[t]);
+        // [s, a, dh] -> [a, s, dh] modeled as transpose of the leading pair
+        // via reshape round-trip; cost-wise a permute of s*h elements.
+        let r2 = g.add_op(Op::Reshape { target: vec![a, s, dh] }, &[r]);
+        r2
+    };
+    let qh = split(g, q);
+    let kh = split(g, k);
+    let vh = split(g, v);
+
+    // scores = Q @ K^T * 1/sqrt(dh): [a, s, s]
+    let kt = g.add_op(Op::Transpose, &[kh]);
+    let scores = g.matmul(qh, kt);
+    let scale = g.constant(1.0 / (dh as f32).sqrt());
+    let scaled = g.mul(scores, scale);
+    // mask add: [s] broadcast — model padding-mask application
+    let mask = g.input(&format!("mask{l}"), &[s], DType::F32);
+    let masked = g.add(scaled, mask);
+    let probs = g.softmax(masked, 2);
+    // ctx = P @ V: [a, s, dh] -> merge heads -> [s, h]
+    let ctx = g.matmul(probs, vh);
+    let merged = g.add_op(Op::Reshape { target: vec![s, h] }, &[ctx]);
+
+    let wo = g.weight(&format!("{p}/wo"), &[h, h]);
+    let bo = g.weight(&format!("{p}/bo"), &[h]);
+    let om = g.matmul(merged, wo);
+    let ob = g.add(om, bo);
+
+    // Residual + LN.
+    let res1 = g.add(ob, x);
+    let g1 = g.weight(&format!("{p}/attn_ln_gamma"), &[cfg.hidden]);
+    let b1 = g.weight(&format!("{p}/attn_ln_beta"), &[cfg.hidden]);
+    let x1 = g.layernorm(res1, g1, b1, 1e-12);
+
+    // FFN: matmul -> bias -> gelu -> matmul -> bias.
+    let w1 = g.weight(&format!("{p}/w1"), &[cfg.hidden, cfg.inter]);
+    let bb1 = g.weight(&format!("{p}/b1"), &[cfg.inter]);
+    let m1 = g.matmul(x1, w1);
+    let a1 = g.add(m1, bb1);
+    let act = g.gelu(a1);
+    let w2 = g.weight(&format!("{p}/w2"), &[cfg.inter, cfg.hidden]);
+    let bb2 = g.weight(&format!("{p}/b2"), &[cfg.hidden]);
+    let m2 = g.matmul(act, w2);
+    let a2 = g.add(m2, bb2);
+
+    let res2 = g.add(a2, x1);
+    let g2 = g.weight(&format!("{p}/ffn_ln_gamma"), &[cfg.hidden]);
+    let b2n = g.weight(&format!("{p}/ffn_ln_beta"), &[cfg.hidden]);
+    g.layernorm(res2, g2, b2n, 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+
+    #[test]
+    fn flops_match_paper_column() {
+        // Paper Table 1: BERT_BASE 21.8G, DistilBERT 10.9G, CANAOBERT 4.6G.
+        let bb = BertConfig::bert_base().flops() as f64 / 1e9;
+        let db = BertConfig::distilbert().flops() as f64 / 1e9;
+        let cb = BertConfig::canaobert().flops() as f64 / 1e9;
+        assert!((bb - 21.8).abs() / 21.8 < 0.10, "{bb}");
+        assert!((db - 10.9).abs() / 10.9 < 0.10, "{db}");
+        assert!((cb - 4.6).abs() / 4.6 < 0.25, "{cb}");
+    }
+
+    #[test]
+    fn bert_base_param_count() {
+        // ~110M params.
+        let p = BertConfig::bert_base().params() as f64 / 1e6;
+        assert!((85.0..125.0).contains(&p), "{p}M");
+    }
+
+    #[test]
+    fn demo_graph_builds_and_fuses() {
+        let cfg = BertConfig { vocab: 128, seq: 16, layers: 2, hidden: 32, heads: 2, inter: 64 };
+        let g = build_encoder(&cfg);
+        assert!(g.num_ops() > 60, "{}", g.num_ops());
+        let fused = compile(&g, &CompileOptions::default());
+        let unfused = compile(&g, &CompileOptions::no_fusion());
+        // Fusion must substantially reduce the number of launched blocks.
+        assert!(
+            (fused.plan.num_blocks() as f64) < 0.55 * unfused.plan.num_blocks() as f64,
+            "fused {} vs unfused {}",
+            fused.plan.num_blocks(),
+            unfused.plan.num_blocks()
+        );
+    }
+
+    #[test]
+    fn layer_count_scales_ops_linearly() {
+        let mk = |layers| {
+            let cfg = BertConfig { vocab: 64, seq: 8, layers, hidden: 16, heads: 2, inter: 32 };
+            build_encoder(&cfg).num_ops()
+        };
+        let d1 = mk(2) - mk(1);
+        let d2 = mk(3) - mk(2);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn validate_rejects_bad_heads() {
+        let mut cfg = BertConfig::bert_base();
+        cfg.heads = 7;
+        assert!(cfg.validate().is_err());
+    }
+}

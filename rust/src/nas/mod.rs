@@ -1,0 +1,14 @@
+//! Compiler-aware neural architecture optimization (CANAO) — S9–S11.
+//!
+//! * `controller` — the RNN policy (REINFORCE, manual BPTT);
+//! * `trainer` — accuracy estimation (surrogate fit to published GLUE
+//!   points; the *real* fine-tune path is `crate::train`);
+//! * `search` — the two-phase, compiler-in-the-loop search driver (Fig. 3).
+
+pub mod controller;
+pub mod search;
+pub mod trainer;
+
+pub use controller::{Controller, StepSpec};
+pub use search::{Search, SearchConfig, SearchResult};
+pub use trainer::{surrogate_mean, surrogate_score, GlueTask, ALL_TASKS};

@@ -1,0 +1,266 @@
+//! The compiler-aware NAS loop (S11) — Fig. 3 of the paper.
+//!
+//! Two-phase search (§2): phase 1 determines the number of transformer
+//! blocks ("layer number affects the accuracy the most"); phase 2
+//! optimizes the per-model sizes. The latency half of the reward comes
+//! from *compiling* each candidate (passes + LP-Fusion + tuning) and
+//! pricing the fused plan on the target device simulator — the compiler
+//! is inside the search loop, which is the paper's headline idea.
+
+use std::collections::HashMap;
+
+use super::controller::{Controller, StepSpec};
+use super::trainer::surrogate_mean;
+use crate::compiler::{compile, CompileOptions};
+use crate::device::{plan_latency, DeviceProfile};
+use crate::model::{build_encoder, BertConfig};
+use crate::util::rng::Rng;
+
+/// §2.1 search space.
+pub const LAYER_CHOICES: [usize; 6] = [2, 4, 6, 8, 10, 12];
+pub const HIDDEN_CHOICES: [usize; 6] = [128, 192, 256, 384, 512, 768];
+pub const INTER_CHOICES: [usize; 6] = [512, 768, 1024, 1536, 2048, 3072];
+
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub device: DeviceProfile,
+    /// Real-time latency target in ms (45 ms in the paper's demo).
+    pub target_ms: f64,
+    /// Latency penalty weight λ in the reward.
+    pub lambda: f32,
+    pub phase1_iters: usize,
+    pub phase2_iters: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// Ablation D3: drop the latency term (accuracy-only NAS).
+    pub accuracy_only: bool,
+    /// Ablation D4: joint search instead of two-phase.
+    pub joint: bool,
+    /// Ablation D1: evaluate latency WITHOUT LP-Fusion in the loop.
+    pub no_fusion_in_loop: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            device: DeviceProfile::s865_cpu(),
+            target_ms: 45.0,
+            lambda: 1.0,
+            phase1_iters: 20,
+            phase2_iters: 40,
+            batch: 8,
+            seed: 0xCA_A0,
+            accuracy_only: false,
+            joint: false,
+            no_fusion_in_loop: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub cfg: BertConfig,
+    pub accuracy: f32,
+    pub latency_ms: f64,
+    pub reward: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: Candidate,
+    pub history: Vec<Candidate>,
+    /// Reward trajectory (mean per controller update).
+    pub reward_curve: Vec<f32>,
+    pub evaluations: usize,
+}
+
+fn decisions_to_cfg(layers: usize, hidden_idx: usize, inter_idx: usize) -> BertConfig {
+    let hidden = HIDDEN_CHOICES[hidden_idx];
+    BertConfig {
+        vocab: 30522,
+        seq: 128,
+        layers,
+        hidden,
+        heads: (hidden / 64).max(1),
+        inter: INTER_CHOICES[inter_idx],
+    }
+}
+
+/// The NAS driver with a latency cache (compiling BERT_BASE-sized graphs
+/// is the expensive part of an iteration; candidates repeat often).
+pub struct Search {
+    pub cfg: SearchConfig,
+    latency_cache: HashMap<BertConfig, f64>,
+    pub evaluations: usize,
+}
+
+impl Search {
+    pub fn new(cfg: SearchConfig) -> Self {
+        Search { cfg, latency_cache: HashMap::new(), evaluations: 0 }
+    }
+
+    /// Compile (with or without fusion, per ablation) and price a config.
+    pub fn latency_ms(&mut self, cfg: &BertConfig) -> f64 {
+        if let Some(&l) = self.latency_cache.get(cfg) {
+            return l;
+        }
+        let g = build_encoder(cfg);
+        let opts = if self.cfg.no_fusion_in_loop {
+            CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() }
+        } else {
+            CompileOptions { model_only_tuning: true, ..Default::default() }
+        };
+        let compiled = compile(&g, &opts);
+        let lat = plan_latency(&compiled.graph, &compiled.plan, &self.cfg.device).ms();
+        self.latency_cache.insert(*cfg, lat);
+        self.evaluations += 1;
+        lat
+    }
+
+    pub fn evaluate(&mut self, cfg: &BertConfig) -> Candidate {
+        let accuracy = surrogate_mean(cfg, self.cfg.seed);
+        let latency_ms = self.latency_ms(cfg);
+        let penalty = if self.cfg.accuracy_only {
+            0.0
+        } else {
+            self.cfg.lambda * ((latency_ms / self.cfg.target_ms).max(1.0) as f32 - 1.0)
+        };
+        // Normalized accuracy (GLUE mean / 100) minus the latency hinge.
+        let reward = accuracy / 100.0 - penalty;
+        Candidate { cfg: *cfg, accuracy, latency_ms, reward }
+    }
+
+    /// Run the full two-phase (or joint) search.
+    pub fn run(&mut self) -> SearchResult {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut history: Vec<Candidate> = Vec::new();
+        let mut reward_curve = Vec::new();
+
+        // ---- Phase 1: layer count (sizes at mid defaults) --------------
+        let fixed_layers = if self.cfg.joint {
+            None
+        } else {
+            let mut ctrl = Controller::new(
+                vec![StepSpec { name: "layers".into(), choices: LAYER_CHOICES.len() }],
+                self.cfg.seed,
+            );
+            for _ in 0..self.cfg.phase1_iters {
+                let mut batch = Vec::new();
+                let mut rsum = 0.0;
+                for _ in 0..self.cfg.batch {
+                    let s = ctrl.sample(&mut rng);
+                    let cfg = decisions_to_cfg(LAYER_CHOICES[s.decisions[0]], 3, 3);
+                    let cand = self.evaluate(&cfg);
+                    rsum += cand.reward;
+                    batch.push((s.decisions, cand.reward));
+                    history.push(cand);
+                }
+                ctrl.update(&batch);
+                reward_curve.push(rsum / self.cfg.batch as f32);
+            }
+            Some(LAYER_CHOICES[ctrl.greedy()[0]])
+        };
+
+        // ---- Phase 2: sizes (hidden, inter), layers fixed or joint -----
+        let mut steps = Vec::new();
+        if fixed_layers.is_none() {
+            steps.push(StepSpec { name: "layers".into(), choices: LAYER_CHOICES.len() });
+        }
+        steps.push(StepSpec { name: "hidden".into(), choices: HIDDEN_CHOICES.len() });
+        steps.push(StepSpec { name: "inter".into(), choices: INTER_CHOICES.len() });
+        let mut ctrl = Controller::new(steps, self.cfg.seed.wrapping_add(1));
+
+        for _ in 0..self.cfg.phase2_iters {
+            let mut batch = Vec::new();
+            let mut rsum = 0.0;
+            for _ in 0..self.cfg.batch {
+                let s = ctrl.sample(&mut rng);
+                let (layers, hi, ii) = match fixed_layers {
+                    Some(l) => (l, s.decisions[0], s.decisions[1]),
+                    None => (LAYER_CHOICES[s.decisions[0]], s.decisions[1], s.decisions[2]),
+                };
+                let cfg = decisions_to_cfg(layers, hi, ii);
+                let cand = self.evaluate(&cfg);
+                rsum += cand.reward;
+                batch.push((s.decisions, cand.reward));
+                history.push(cand);
+            }
+            ctrl.update(&batch);
+            reward_curve.push(rsum / self.cfg.batch as f32);
+        }
+
+        // Best = argmax reward over everything evaluated (the paper keeps
+        // the best sampled architecture, not the final policy mode).
+        let best = history
+            .iter()
+            .max_by(|a, b| a.reward.total_cmp(&b.reward))
+            .expect("non-empty history")
+            .clone();
+        SearchResult { best, history, reward_curve, evaluations: self.evaluations }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig {
+            phase1_iters: 4,
+            phase2_iters: 6,
+            batch: 4,
+            target_ms: 60.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn search_returns_feasible_architecture() {
+        let mut s = Search::new(quick_cfg());
+        let res = s.run();
+        assert!(res.best.cfg.validate().is_ok());
+        assert!(!res.history.is_empty());
+        assert!(res.best.reward >= res.history[0].reward - 1e-6);
+    }
+
+    #[test]
+    fn latency_cache_reused() {
+        let mut s = Search::new(quick_cfg());
+        let cfg = BertConfig::canaobert();
+        let a = s.latency_ms(&cfg);
+        let evals = s.evaluations;
+        let b = s.latency_ms(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(s.evaluations, evals);
+    }
+
+    #[test]
+    fn latency_constraint_steers_search() {
+        // With a harsh latency target the search must settle on a smaller
+        // model than accuracy-only search does.
+        let mut tight = Search::new(SearchConfig {
+            target_ms: 20.0,
+            lambda: 4.0,
+            ..quick_cfg()
+        });
+        let mut acc_only = Search::new(SearchConfig {
+            accuracy_only: true,
+            ..quick_cfg()
+        });
+        let rt = tight.run();
+        let ra = acc_only.run();
+        assert!(
+            rt.best.cfg.flops() <= ra.best.cfg.flops(),
+            "tight {:?} vs acc-only {:?}",
+            rt.best.cfg,
+            ra.best.cfg
+        );
+    }
+
+    #[test]
+    fn joint_mode_runs() {
+        let mut s = Search::new(SearchConfig { joint: true, ..quick_cfg() });
+        let res = s.run();
+        assert!(res.best.cfg.validate().is_ok());
+    }
+}

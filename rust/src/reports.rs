@@ -1,0 +1,163 @@
+//! Shared report generators for the paper's tables — used by the CLI
+//! (`canao table1` / `table2`), the examples, and the bench harness, so
+//! every surface prints exactly the same rows.
+
+use std::io::Write;
+
+use crate::compiler::{compile, CompileOptions};
+use crate::device::{plan_latency, tflite, DeviceProfile};
+use crate::model::{build_encoder, BertConfig};
+use crate::nas::trainer::{anchors, surrogate_score, ALL_TASKS};
+
+/// One Table 1 row, fully computed.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub name: &'static str,
+    pub gflops: f64,
+    pub tflite_cpu_ms: f64,
+    pub nofuse_cpu_ms: f64,
+    pub nofuse_gpu_ms: f64,
+    pub fuse_cpu_ms: f64,
+    pub fuse_gpu_ms: f64,
+}
+
+impl Table1Row {
+    pub fn speedups(&self) -> [f64; 4] {
+        [
+            self.tflite_cpu_ms / self.nofuse_cpu_ms,
+            self.tflite_cpu_ms / self.nofuse_gpu_ms,
+            self.tflite_cpu_ms / self.fuse_cpu_ms,
+            self.tflite_cpu_ms / self.fuse_gpu_ms,
+        ]
+    }
+}
+
+pub fn table1_rows() -> Vec<Table1Row> {
+    let models: [(&'static str, BertConfig); 3] = [
+        ("DistilBERT", BertConfig::distilbert()),
+        ("BERT_BASE", BertConfig::bert_base()),
+        ("CANAOBERT", BertConfig::canaobert()),
+    ];
+    let cpu = DeviceProfile::s865_cpu();
+    let gpu = DeviceProfile::s865_gpu();
+    models
+        .into_iter()
+        .map(|(name, cfg)| {
+            let g = build_encoder(&cfg);
+            let fused = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+            let unfused =
+                compile(&g, &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() });
+            Table1Row {
+                name,
+                gflops: cfg.flops() as f64 / 1e9,
+                tflite_cpu_ms: tflite::tflite_latency_graph(&g).ms(),
+                nofuse_cpu_ms: plan_latency(&unfused.graph, &unfused.plan, &cpu).ms(),
+                nofuse_gpu_ms: plan_latency(&unfused.graph, &unfused.plan, &gpu).ms(),
+                fuse_cpu_ms: plan_latency(&fused.graph, &fused.plan, &cpu).ms(),
+                fuse_gpu_ms: plan_latency(&fused.graph, &fused.plan, &gpu).ms(),
+            }
+        })
+        .collect()
+}
+
+/// Print Table 1 in the paper's layout (+ the headline 7.8x line).
+pub fn bench_table1(out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(
+        out,
+        "Table 1: inference latency, CANAO vs TFLite (simulated Snapdragon 865, seq=128)"
+    )?;
+    writeln!(
+        out,
+        "{:<12} {:>7} | {:>11} | {:>9} {:>5} {:>9} {:>5} | {:>9} {:>5} {:>9} {:>5}",
+        "Model", "#FLOPs", "TFLite CPU", "nf CPU", "x", "nf GPU", "x", "fused CPU", "x", "fused GPU", "x"
+    )?;
+    let rows = table1_rows();
+    for r in &rows {
+        let s = r.speedups();
+        writeln!(
+            out,
+            "{:<12} {:>6.1}G | {:>9.0}ms | {:>7.0}ms {:>4.1}x {:>7.0}ms {:>4.1}x | {:>7.0}ms {:>4.1}x {:>7.0}ms {:>4.1}x",
+            r.name, r.gflops, r.tflite_cpu_ms, r.nofuse_cpu_ms, s[0], r.nofuse_gpu_ms, s[1],
+            r.fuse_cpu_ms, s[2], r.fuse_gpu_ms, s[3]
+        )?;
+    }
+    // Headline: BERT_BASE on TFLite CPU vs CANAOBERT fused GPU.
+    let bert_tfl = rows.iter().find(|r| r.name == "BERT_BASE").unwrap().tflite_cpu_ms;
+    let canao_gpu = rows.iter().find(|r| r.name == "CANAOBERT").unwrap().fuse_gpu_ms;
+    writeln!(
+        out,
+        "headline: BERT_BASE TFLite-CPU {bert_tfl:.0}ms vs CANAOBERT fused-GPU {canao_gpu:.0}ms \
+         = {:.1}x (paper: 352ms vs 45ms = 7.8x)",
+        bert_tfl / canao_gpu
+    )?;
+    Ok(())
+}
+
+/// Print Table 2 (GLUE accuracy) from the trainer surrogate.
+pub fn bench_table2(out: &mut dyn Write) -> anyhow::Result<()> {
+    writeln!(out, "Table 2: GLUE dev accuracy (surrogate anchored to published points)")?;
+    write!(out, "{:<12}", "Model")?;
+    for t in ALL_TASKS {
+        write!(out, " {:>8}", t.name())?;
+    }
+    writeln!(out)?;
+    for a in anchors() {
+        write!(out, "{:<12}", a.name)?;
+        for t in ALL_TASKS {
+            write!(out, " {:>8.1}", surrogate_score(&a.cfg, t, 0))?;
+        }
+        writeln!(out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_matches_paper() {
+        // The qualitative pattern of Table 1 must hold (see EXPERIMENTS.md
+        // for the quantitative side-by-side):
+        for r in table1_rows() {
+            let s = r.speedups();
+            // Without fusion: modest CPU gain (paper 1.1-1.3x)...
+            assert!(s[0] > 1.0 && s[0] < 1.6, "{}: nf cpu {:.2}", r.name, s[0]);
+            // ...and GPU *slower* than TFLite CPU (paper 0.6-0.9x).
+            assert!(s[1] < 1.0, "{}: nf gpu {:.2}", r.name, s[1]);
+            // With fusion: CPU 1.6-2.4x (paper 1.8-2.0x)...
+            assert!(s[2] > 1.5 && s[2] < 2.6, "{}: fused cpu {:.2}", r.name, s[2]);
+            // ...and GPU the fastest (paper 2.2-2.4x). For the smallest
+            // model the CPU/GPU gap is within noise (paper: 49 vs 45 ms),
+            // so allow a 10% band there.
+            assert!(s[3] > 1.7, "{}: fused gpu {:.2}", r.name, s[3]);
+            assert!(
+                r.fuse_gpu_ms < 1.10 * r.fuse_cpu_ms,
+                "{}: gpu {:.0} vs cpu {:.0}",
+                r.name,
+                r.fuse_gpu_ms,
+                r.fuse_cpu_ms
+            );
+        }
+    }
+
+    #[test]
+    fn headline_speedup_in_band() {
+        let rows = table1_rows();
+        let bert_tfl = rows.iter().find(|r| r.name == "BERT_BASE").unwrap().tflite_cpu_ms;
+        let canao_gpu = rows.iter().find(|r| r.name == "CANAOBERT").unwrap().fuse_gpu_ms;
+        let headline = bert_tfl / canao_gpu;
+        // Paper: 7.8x. Accept the band that preserves the claim's shape.
+        assert!(headline > 5.0 && headline < 12.0, "headline {headline:.1}");
+    }
+
+    #[test]
+    fn tables_print_without_error() {
+        let mut buf = Vec::new();
+        bench_table1(&mut buf).unwrap();
+        bench_table2(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("CANAOBERT"));
+        assert!(s.contains("MNLI-m"));
+    }
+}

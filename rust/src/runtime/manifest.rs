@@ -1,0 +1,194 @@
+//! Typed view of artifacts/manifest.json (produced by aot.py), parsed with
+//! the in-tree JSON substrate.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub params_file: String,
+    pub params: Vec<ParamEntry>,
+    pub flops: u64,
+    /// Raw config dict (vocab/seq/layers/hidden/heads/inter/...).
+    pub config: BTreeMap<String, usize>,
+}
+
+impl ModelEntry {
+    pub fn cfg(&self, key: &str) -> usize {
+        *self.config.get(key).unwrap_or(&0)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecEntry {
+    pub hlo: String,
+    pub model: String,
+    pub extra_inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    pub returns_params: bool,
+    /// Indices (into params ++ extras) that survived JAX's unused-argument
+    /// pruning; the compiled program takes exactly these, in order.
+    /// None = all inputs kept (older manifests).
+    pub kept_inputs: Option<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelEntry>,
+    pub executables: BTreeMap<String, ExecEntry>,
+}
+
+fn shape_of(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models not an object")? {
+            let mut params = Vec::new();
+            for p in m.req("params")?.as_arr().context("params not array")? {
+                params.push(ParamEntry {
+                    name: p.req("name")?.as_str().context("name")?.to_string(),
+                    shape: shape_of(p.req("shape")?),
+                    offset: p.req("offset")?.as_usize().context("offset")?,
+                    nbytes: p.req("nbytes")?.as_usize().context("nbytes")?,
+                });
+            }
+            let mut config = BTreeMap::new();
+            if let Some(obj) = m.req("config")?.as_obj() {
+                for (k, v) in obj {
+                    if let Some(n) = v.as_usize() {
+                        config.insert(k.clone(), n);
+                    }
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    params_file: m.req("params_file")?.as_str().context("pf")?.to_string(),
+                    params,
+                    flops: m.get("flops").and_then(|f| f.as_f64()).unwrap_or(0.0) as u64,
+                    config,
+                },
+            );
+        }
+
+        let mut executables = BTreeMap::new();
+        for (name, e) in j.req("executables")?.as_obj().context("execs")? {
+            let mut extra_inputs = Vec::new();
+            for i in e.req("extra_inputs")?.as_arr().context("extra_inputs")? {
+                extra_inputs.push(IoSpec {
+                    name: i.req("name")?.as_str().context("in name")?.to_string(),
+                    shape: shape_of(i.req("shape")?),
+                    dtype: i.req("dtype")?.as_str().context("dtype")?.to_string(),
+                });
+            }
+            let outputs = e
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .filter_map(|o| o.as_str().map(|s| s.to_string()))
+                .collect();
+            let kept_inputs = e.get("kept_inputs").and_then(|k| k.as_arr()).map(|a| {
+                a.iter().filter_map(|v| v.as_usize()).collect::<Vec<_>>()
+            });
+            executables.insert(
+                name.clone(),
+                ExecEntry {
+                    hlo: e.req("hlo")?.as_str().context("hlo")?.to_string(),
+                    model: e.req("model")?.as_str().context("model")?.to_string(),
+                    extra_inputs,
+                    outputs,
+                    returns_params: e
+                        .get("returns_params")
+                        .and_then(|b| b.as_bool())
+                        .unwrap_or(false),
+                    kept_inputs,
+                },
+            );
+        }
+        Ok(Manifest { models, executables })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "m": {
+          "config": {"vocab": 64, "seq": 8, "layers": 1, "hidden": 16, "heads": 2, "inter": 32},
+          "params_file": "params_m.bin",
+          "flops": 1000,
+          "params": [
+            {"name": "w", "shape": [16, 16], "dtype": "f32", "offset": 0, "nbytes": 1024}
+          ]
+        }
+      },
+      "executables": {
+        "e": {
+          "hlo": "e.hlo.txt", "model": "m",
+          "extra_inputs": [{"name": "ids", "shape": [1, 8], "dtype": "i32"}],
+          "outputs": ["logits"], "returns_params": false, "sha256_16": "x"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models["m"].cfg("hidden"), 16);
+        assert_eq!(m.models["m"].params[0].nbytes, 1024);
+        assert_eq!(m.executables["e"].extra_inputs[0].dtype, "i32");
+        assert!(!m.executables["e"].returns_params);
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse(r#"{"models": {}}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(p) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.executables.contains_key("qa_b1"));
+            assert!(m.models.contains_key("gen"));
+            // ABI sanity: params blob entries are contiguous.
+            for model in m.models.values() {
+                let mut off = 0;
+                for p in &model.params {
+                    assert_eq!(p.offset, off);
+                    off += p.nbytes;
+                }
+            }
+        }
+    }
+}

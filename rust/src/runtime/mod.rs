@@ -1,0 +1,222 @@
+//! PJRT runtime (S12): loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + manifest + raw param blobs) and
+//! executes them on the `xla` crate's PJRT CPU client.
+//!
+//! Python never runs here — `make artifacts` is the only Python step; the
+//! serving/training hot paths are pure Rust + PJRT.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ExecEntry, Manifest, ModelEntry, ParamEntry};
+
+/// A loaded + compiled AOT executable with its manifest metadata.
+pub struct Executable {
+    pub name: String,
+    pub entry: ExecEntry,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Execute with `params` (empty slice for param-less artifacts)
+    /// followed by the extra inputs. Returns the decomposed output tuple.
+    pub fn run(&self, params: &[xla::Literal], extras: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let expected = self.entry.extra_inputs.len();
+        if extras.len() != expected {
+            bail!(
+                "{}: expected {} extra inputs, got {}",
+                self.name,
+                expected,
+                extras.len()
+            );
+        }
+        // execute::<L: Borrow<Literal>> accepts &[&Literal] — params are
+        // passed by reference, no copies on the hot path.
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + extras.len());
+        args.extend(params.iter());
+        args.extend(extras.iter());
+        // JAX prunes arguments the traced function never reads; feed only
+        // the surviving ones (manifest `kept_inputs`).
+        if let Some(kept) = &self.entry.kept_inputs {
+            args = kept
+                .iter()
+                .map(|&i| {
+                    args.get(i).copied().ok_or_else(|| {
+                        anyhow::anyhow!("{}: kept input {i} out of range", self.name)
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Hot-path variant: parameters are DEVICE-RESIDENT buffers uploaded
+    /// once (`Runtime::load_params_buffers`); only the small extras cross
+    /// the host/device boundary per call. §Perf: this removes a ~15 MB
+    /// host->device literal upload from every qa_b1 invocation.
+    pub fn run_device(
+        &self,
+        params: &[xla::PjRtBuffer],
+        extras: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let expected = self.entry.extra_inputs.len();
+        if extras.len() != expected {
+            bail!("{}: expected {expected} extra inputs, got {}", self.name, extras.len());
+        }
+        let extra_bufs: Vec<xla::PjRtBuffer> = extras
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(params.len() + extra_bufs.len());
+        args.extend(params.iter());
+        args.extend(extra_bufs.iter());
+        if let Some(kept) = &self.entry.kept_inputs {
+            args = kept
+                .iter()
+                .map(|&i| {
+                    args.get(i).copied().ok_or_else(|| {
+                        anyhow::anyhow!("{}: kept input {i} out of range", self.name)
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// The artifact registry: manifest + compiled executables + param sets.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (the default) or a custom directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { dir, manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return an executable by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let entry = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable {name:?}"))?
+            .clone();
+        let path = self.dir.join(&entry.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let arc =
+            Arc::new(Executable { name: name.to_string(), entry, exe, client: self.client.clone() });
+        self.cache.insert(name.to_string(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    /// Load a model's parameters from its raw blob as a Literal list in
+    /// manifest (= ABI) order.
+    pub fn load_params(&self, model: &str) -> Result<Vec<xla::Literal>> {
+        let m = self
+            .manifest
+            .models
+            .get(model)
+            .with_context(|| format!("unknown model {model:?}"))?;
+        let raw = std::fs::read(self.dir.join(&m.params_file))?;
+        let mut out = Vec::with_capacity(m.params.len());
+        for p in &m.params {
+            let bytes = raw
+                .get(p.offset..p.offset + p.nbytes)
+                .with_context(|| format!("params blob too short at {}", p.name))?;
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let lit = xla::Literal::vec1(&floats);
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            out.push(if dims.is_empty() { lit } else { lit.reshape(&dims)? });
+        }
+        Ok(out)
+    }
+}
+
+impl Runtime {
+    /// Upload one literal to a device buffer.
+    pub fn upload(&self, l: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, l)?)
+    }
+
+    /// Upload a model's parameters to the device ONCE; the returned
+    /// buffers are reused by every `Executable::run_device` call.
+    pub fn load_params_buffers(&self, model: &str) -> Result<Vec<xla::PjRtBuffer>> {
+        let m = self
+            .manifest
+            .models
+            .get(model)
+            .with_context(|| format!("unknown model {model:?}"))?;
+        let raw = std::fs::read(self.dir.join(&m.params_file))?;
+        let mut out = Vec::with_capacity(m.params.len());
+        for p in &m.params {
+            let bytes = raw
+                .get(p.offset..p.offset + p.nbytes)
+                .with_context(|| format!("params blob too short at {}", p.name))?;
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.push(self.client.buffer_from_host_buffer(&floats, &p.shape, None)?);
+        }
+        Ok(out)
+    }
+}
+
+// ---- Literal construction helpers used across serving/train ------------
+
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 tensor from a literal.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}

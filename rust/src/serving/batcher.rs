@@ -1,0 +1,246 @@
+//! Dynamic batcher: coalesce concurrent requests into fixed-shape batches.
+//!
+//! Policy: drain the queue up to `max_batch`; if fewer than `min_batch`
+//! requests are waiting, wait up to `max_wait` for more before running.
+//! Generic over `BatchModel` so unit tests run without PJRT.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::stats::LatencyHistogram;
+
+/// A model that can run a batch of work items.
+///
+/// Only `Send` (not `Sync`) is required: the batcher takes *ownership* of
+/// the model and moves it into its single worker thread, so all PJRT
+/// handles (which are not thread-safe in the `xla` crate's type system)
+/// are used from exactly one thread after construction.
+pub trait BatchModel<Req: Send + 'static, Resp: Send + 'static>: Send + 'static {
+    fn max_batch(&self) -> usize;
+    fn run_batch(&self, items: &[Req]) -> Vec<Resp>;
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherOptions {
+    pub max_wait: Duration,
+    /// Don't wait if at least this many requests are queued.
+    pub min_batch: usize,
+}
+
+impl Default for BatcherOptions {
+    fn default() -> Self {
+        BatcherOptions { max_wait: Duration::from_millis(5), min_batch: 2 }
+    }
+}
+
+struct Job<Req, Resp> {
+    req: Req,
+    reply: Sender<Resp>,
+    enqueued: Instant,
+}
+
+pub struct Batcher<Req: Send + 'static, Resp: Send + 'static> {
+    tx: Sender<Job<Req, Resp>>,
+    pub metrics: Arc<Mutex<BatcherMetrics>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+#[derive(Debug, Default)]
+pub struct BatcherMetrics {
+    pub batches: usize,
+    pub requests: usize,
+    pub batch_sizes: Vec<usize>,
+    pub queue_latency: LatencyHistogram,
+    pub total_latency: LatencyHistogram,
+}
+
+impl BatcherMetrics {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
+    pub fn new<M: BatchModel<Req, Resp>>(model: M, opts: BatcherOptions) -> Self {
+        let (tx, rx) = channel::<Job<Req, Resp>>();
+        let metrics = Arc::new(Mutex::new(BatcherMetrics::default()));
+        let m2 = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("canao-batcher".into())
+            .spawn(move || worker_loop(rx, model, opts, m2))
+            .expect("spawn batcher");
+        Batcher { tx, metrics, worker: Some(worker) }
+    }
+
+    /// Submit a request; the returned receiver yields the response.
+    pub fn submit(&self, req: Req) -> Receiver<Resp> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job { req, reply, enqueued: Instant::now() })
+            .expect("batcher worker alive");
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, req: Req) -> Resp {
+        self.submit(req).recv().expect("batcher reply")
+    }
+}
+
+impl<Req: Send + 'static, Resp: Send + 'static> Drop for Batcher<Req, Resp> {
+    fn drop(&mut self) {
+        // Closing tx ends the worker loop.
+        let (dummy_tx, _) = channel::<Job<Req, Resp>>();
+        drop(std::mem::replace(&mut self.tx, dummy_tx));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Resp>>(
+    rx: Receiver<Job<Req, Resp>>,
+    model: M,
+    opts: BatcherOptions,
+    metrics: Arc<Mutex<BatcherMetrics>>,
+) {
+    loop {
+        // Block for the first job.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + opts.max_wait;
+        // Accumulate until full, or until deadline when under min_batch.
+        while jobs.len() < model.max_batch() {
+            if jobs.len() >= opts.min_batch {
+                match rx.try_recv() {
+                    Ok(j) => jobs.push(j),
+                    Err(_) => break,
+                }
+            } else {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => jobs.push(j),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+
+        let started = Instant::now();
+        let mut reqs = Vec::with_capacity(jobs.len());
+        let mut replies = Vec::with_capacity(jobs.len());
+        let mut enqueued = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            reqs.push(j.req);
+            replies.push(j.reply);
+            enqueued.push(j.enqueued);
+        }
+
+        let responses = model.run_batch(&reqs);
+        debug_assert_eq!(responses.len(), replies.len());
+
+        {
+            let mut m = metrics.lock().unwrap();
+            m.batches += 1;
+            m.requests += reqs.len();
+            m.batch_sizes.push(reqs.len());
+            for &t in &enqueued {
+                m.queue_latency.record(started.duration_since(t));
+                m.total_latency.record(t.elapsed());
+            }
+        }
+        for (resp, reply) in responses.into_iter().zip(replies) {
+            let _ = reply.send(resp); // receiver may have given up: fine
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Doubler;
+
+    impl BatchModel<u32, u32> for Doubler {
+        fn max_batch(&self) -> usize {
+            4
+        }
+
+        fn run_batch(&self, items: &[u32]) -> Vec<u32> {
+            items.iter().map(|x| x * 2).collect()
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = Batcher::new(Doubler, BatcherOptions::default());
+        assert_eq!(b.call(21), 42);
+    }
+
+    #[test]
+    fn concurrent_requests_batch_together() {
+        let b = Arc::new(Batcher::new(
+            Doubler,
+            BatcherOptions { max_wait: Duration::from_millis(30), min_batch: 4 },
+        ));
+        let mut rxs = Vec::new();
+        for i in 0..8u32 {
+            rxs.push(b.submit(i));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap(), (i as u32) * 2);
+        }
+        let m = b.metrics.lock().unwrap();
+        assert_eq!(m.requests, 8);
+        assert!(m.batches <= 4, "batches {}", m.batches);
+        assert!(m.mean_batch_size() >= 2.0, "{}", m.mean_batch_size());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        struct Checker;
+        impl BatchModel<u32, usize> for Checker {
+            fn max_batch(&self) -> usize {
+                2
+            }
+            fn run_batch(&self, items: &[u32]) -> Vec<usize> {
+                assert!(items.len() <= 2);
+                items.iter().map(|_| items.len()).collect()
+            }
+        }
+        let b = Arc::new(Batcher::new(Checker, BatcherOptions::default()));
+        let rxs: Vec<_> = (0..10u32).map(|i| b.submit(i)).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap() <= 2);
+        }
+    }
+
+    #[test]
+    fn metrics_latency_recorded() {
+        let b = Batcher::new(Doubler, BatcherOptions::default());
+        for i in 0..5 {
+            b.call(i);
+        }
+        let mut m = b.metrics.lock().unwrap();
+        assert_eq!(m.total_latency.len(), 5);
+        assert!(m.total_latency.percentile(50.0) < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn drop_shuts_worker_down() {
+        let b = Batcher::new(Doubler, BatcherOptions::default());
+        assert_eq!(b.call(1), 2);
+        drop(b); // must not hang
+    }
+}

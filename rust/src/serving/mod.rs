@@ -1,0 +1,16 @@
+//! Serving runtime (S14): the on-device application layer from the
+//! paper's demo (§3.2) — Question Answering and Text Generation — built
+//! as a router + dynamic batcher over the PJRT executables.
+//!
+//! The paper runs single requests on a phone; a deployable framework also
+//! needs concurrency, so the batcher coalesces queued requests into the
+//! b8 executable when load is high and falls back to b1 when it isn't
+//! (bucketed static shapes — the standard PJRT-style serving pattern).
+
+pub mod batcher;
+pub mod qa;
+pub mod textgen;
+
+pub use batcher::{Batcher, BatcherOptions, BatchModel};
+pub use qa::{QaEngine, QaRequest, QaResponse};
+pub use textgen::{GenEngine, GenRequest, GenResponse};

@@ -1,0 +1,231 @@
+//! Question-Answering engine — the paper's Fig. 1 (left) demo: "type a
+//! random question that is related to the paragraph, it will automatically
+//! highlight the answer in the text."
+//!
+//! Pipeline: WordPiece-encode (question, context) as a BERT pair, run the
+//! AOT QA executable (b1 or b8), pick the best legal span (start <= end,
+//! inside the context segment, bounded length), decode back to text.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::batcher::BatchModel;
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
+use crate::tokenizer::Tokenizer;
+
+#[derive(Debug, Clone)]
+pub struct QaRequest {
+    pub question: String,
+    pub context: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct QaResponse {
+    pub answer: String,
+    pub start_token: usize,
+    pub end_token: usize,
+    pub score: f32,
+}
+
+pub struct QaEngine {
+    pub tokenizer: Arc<Tokenizer>,
+    exe_b1: Arc<Executable>,
+    exe_b8: Arc<Executable>,
+    /// Device-resident parameters, uploaded once (§Perf).
+    params: Vec<xla::PjRtBuffer>,
+    pub seq: usize,
+    pub max_answer_tokens: usize,
+    /// Largest batch the batcher should form (see `calibrate`).
+    batch_cap: usize,
+}
+
+impl QaEngine {
+    pub fn new(rt: &mut Runtime, tokenizer: Arc<Tokenizer>) -> Result<Self> {
+        let exe_b1 = rt.load("qa_b1")?;
+        let exe_b8 = rt.load("qa_b8")?;
+        let params = rt.load_params_buffers("qa")?;
+        let seq = rt.manifest.models["qa"].cfg("seq");
+        Ok(QaEngine {
+            tokenizer,
+            exe_b1,
+            exe_b8,
+            params,
+            seq,
+            max_answer_tokens: 30,
+            batch_cap: 8,
+        })
+    }
+
+    /// §Perf: on the CPU PJRT backend the interpret-mode Pallas grid runs
+    /// its (batch x heads) steps sequentially, so the b8 executable can be
+    /// SLOWER per request than eight b1 calls (XLA parallelizes b1's
+    /// intra-op work across cores instead). Measure both once at startup
+    /// and cap the batcher accordingly — the paper's auto-tuning idea
+    /// applied at the serving layer.
+    pub fn calibrate(&mut self) -> Result<()> {
+        let req = QaRequest { question: "warm".into(), context: "up".into() };
+        // Warm both executables, then time.
+        let _ = self.answer_batch(std::slice::from_ref(&req))?;
+        let reqs8 = vec![req.clone(); 8];
+        let _ = self.answer_batch(&reqs8)?;
+        let t1 = std::time::Instant::now();
+        let _ = self.answer_batch(std::slice::from_ref(&req))?;
+        let d1 = t1.elapsed();
+        let t8 = std::time::Instant::now();
+        let _ = self.answer_batch(&reqs8)?;
+        let d8 = t8.elapsed();
+        self.batch_cap = if d8 < d1 * 8 { 8 } else { 1 };
+        Ok(())
+    }
+
+    pub fn batch_cap(&self) -> usize {
+        self.batch_cap
+    }
+
+    /// Answer a batch (any size; internally padded to 1 or 8).
+    pub fn answer_batch(&self, reqs: &[QaRequest]) -> Result<Vec<QaResponse>> {
+        assert!(!reqs.is_empty());
+        let (exe, b) = if reqs.len() == 1 {
+            (&self.exe_b1, 1)
+        } else {
+            (&self.exe_b8, 8)
+        };
+        assert!(reqs.len() <= b, "batch {} exceeds bucket {b}", reqs.len());
+
+        let mut ids = vec![0i32; b * self.seq];
+        let mut tts = vec![0i32; b * self.seq];
+        let mut masks = vec![0.0f32; b * self.seq];
+        let mut spans = Vec::new(); // (b_start, used, row_ids)
+        for (r, req) in reqs.iter().enumerate() {
+            let (rid, rtt, rmask, b_start) =
+                self.tokenizer.encode_pair(&req.question, &req.context, self.seq);
+            let used = rmask.iter().filter(|&&m| m > 0.0).count();
+            ids[r * self.seq..(r + 1) * self.seq].copy_from_slice(&rid);
+            tts[r * self.seq..(r + 1) * self.seq].copy_from_slice(&rtt);
+            masks[r * self.seq..(r + 1) * self.seq].copy_from_slice(&rmask);
+            spans.push((b_start, used, rid));
+        }
+        // Pad rows replicate row 0's mask=0 default (all zeros is fine:
+        // the model's mask zeroes attention and outputs are discarded).
+        // Keep at least one attended position to avoid NaNs.
+        for r in reqs.len()..b {
+            masks[r * self.seq] = 1.0;
+        }
+
+        let out = exe.run_device(
+            &self.params,
+            &[
+                lit_i32(&ids, &[b, self.seq])?,
+                lit_i32(&tts, &[b, self.seq])?,
+                lit_f32(&masks, &[b, self.seq])?,
+            ],
+        )?;
+        let start_logits = to_vec_f32(&out[0])?;
+        let end_logits = to_vec_f32(&out[1])?;
+
+        let mut resps = Vec::with_capacity(reqs.len());
+        for (r, (b_start, used, rid)) in spans.iter().enumerate() {
+            let s_row = &start_logits[r * self.seq..(r + 1) * self.seq];
+            let e_row = &end_logits[r * self.seq..(r + 1) * self.seq];
+            let (s, e, score) = best_span(s_row, e_row, *b_start, used - 1, self.max_answer_tokens);
+            let answer_ids: Vec<u32> = rid[s..=e].iter().map(|&i| i as u32).collect();
+            resps.push(QaResponse {
+                answer: self.tokenizer.decode(&answer_ids),
+                start_token: s,
+                end_token: e,
+                score,
+            });
+        }
+        Ok(resps)
+    }
+}
+
+/// Highest start+end logit pair with s <= e, both within the context
+/// segment [ctx_start, ctx_end), and e - s < max_len.
+pub fn best_span(
+    start_logits: &[f32],
+    end_logits: &[f32],
+    ctx_start: usize,
+    ctx_end: usize,
+    max_len: usize,
+) -> (usize, usize, f32) {
+    let mut best = (ctx_start, ctx_start, f32::NEG_INFINITY);
+    for s in ctx_start..ctx_end {
+        for e in s..ctx_end.min(s + max_len) {
+            let score = start_logits[s] + end_logits[e];
+            if score > best.2 {
+                best = (s, e, score);
+            }
+        }
+    }
+    best
+}
+
+// SAFETY: the `xla` crate's FFI handles (PjRtLoadedExecutable, Literal,
+// PjRtClient's Rc) are not marked Send. The batcher *moves* the engine into
+// its single worker thread at construction and every subsequent PJRT call
+// happens on that one thread; no handle is ever used from two threads.
+// Callers must not retain aliases to this engine's executables (obtain a
+// fresh Runtime for other threads).
+unsafe impl Send for QaEngine {}
+
+/// Adapter: a QaEngine is a batch model for the dynamic batcher.
+impl BatchModel<QaRequest, QaResponse> for QaEngine {
+    fn max_batch(&self) -> usize {
+        self.batch_cap
+    }
+
+    fn run_batch(&self, items: &[QaRequest]) -> Vec<QaResponse> {
+        match self.answer_batch(items) {
+            Ok(r) => r,
+            Err(e) => items
+                .iter()
+                .map(|_| QaResponse {
+                    answer: format!("<error: {e}>"),
+                    start_token: 0,
+                    end_token: 0,
+                    score: f32::NEG_INFINITY,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_span_respects_bounds() {
+        let n = 10;
+        let mut s = vec![0.0f32; n];
+        let mut e = vec![0.0f32; n];
+        s[2] = 5.0; // outside context (ctx starts at 4): must be ignored
+        e[9] = 5.0;
+        s[5] = 3.0;
+        e[6] = 3.0;
+        let (bs, be, _) = best_span(&s, &e, 4, 9, 30);
+        assert_eq!((bs, be), (5, 6));
+    }
+
+    #[test]
+    fn best_span_length_cap() {
+        let n = 20;
+        let mut s = vec![0.0f32; n];
+        let mut e = vec![0.0f32; n];
+        s[1] = 10.0;
+        e[19] = 10.0; // would be a 19-token span
+        e[3] = 1.0;
+        let (bs, be, _) = best_span(&s, &e, 0, 20, 4);
+        assert!(be - bs < 4, "{bs}..{be}");
+    }
+
+    #[test]
+    fn best_span_start_not_after_end() {
+        let s = vec![0.0, 9.0, 0.0];
+        let e = vec![9.0, 0.0, 1.0];
+        let (bs, be, _) = best_span(&s, &e, 0, 3, 30);
+        assert!(bs <= be);
+    }
+}

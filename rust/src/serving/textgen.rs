@@ -1,0 +1,106 @@
+//! Text-generation engine — the paper's Fig. 1 (right) demo: "given a
+//! starting sentence, it can automatically generate new sentences by
+//! word."
+//!
+//! Autoregressive decode over the causal-LM executable (gen_b1): at each
+//! step the full (static-shape) sequence is re-run and the next token is
+//! sampled from the logits at the last attended position. (No KV cache:
+//! the AOT artifact has a fixed [1, seq] signature; re-running the full
+//! forward keeps the Rust side trivially correct. The device-simulated
+//! numbers in Table 1 are per-forward, matching the paper's setup.)
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub text: String,
+    pub tokens_generated: usize,
+    /// Per-token forward latencies (for the demo's tokens/s display).
+    pub per_token_ms: Vec<f64>,
+}
+
+pub struct GenEngine {
+    pub tokenizer: Arc<Tokenizer>,
+    exe: Arc<Executable>,
+    /// Device-resident parameters, uploaded once (§Perf).
+    params: Vec<xla::PjRtBuffer>,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl GenEngine {
+    pub fn new(rt: &mut Runtime, tokenizer: Arc<Tokenizer>) -> Result<Self> {
+        let exe = rt.load("gen_b1")?;
+        let params = rt.load_params_buffers("gen")?;
+        let seq = rt.manifest.models["gen"].cfg("seq");
+        let vocab = rt.manifest.models["gen"].cfg("vocab");
+        Ok(GenEngine { tokenizer, exe, params, seq, vocab })
+    }
+
+    /// Replace parameters (e.g. after LM fine-tuning via crate::train):
+    /// uploads the trained literals to the device once.
+    pub fn set_params(&mut self, rt: &Runtime, params: &[xla::Literal]) -> anyhow::Result<()> {
+        self.params =
+            params.iter().map(|l| rt.upload(l)).collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResponse> {
+        let mut rng = Rng::new(req.seed);
+        let mut ids: Vec<i32> = self
+            .tokenizer
+            .encode(&req.prompt)
+            .iter()
+            .map(|&t| (t as i32).min(self.vocab as i32 - 1))
+            .collect();
+        if ids.is_empty() {
+            ids.push(crate::tokenizer::CLS as i32);
+        }
+        if ids.len() >= self.seq {
+            ids.truncate(self.seq - 1);
+        }
+
+        let mut per_token_ms = Vec::new();
+        let mut generated = 0usize;
+        while generated < req.max_new_tokens && ids.len() < self.seq {
+            let used = ids.len();
+            let mut padded = ids.clone();
+            padded.resize(self.seq, 0);
+            let mut mask = vec![0.0f32; self.seq];
+            for m in mask.iter_mut().take(used) {
+                *m = 1.0;
+            }
+            let t0 = std::time::Instant::now();
+            let out = self.exe.run_device(
+                &self.params,
+                &[lit_i32(&padded, &[1, self.seq])?, lit_f32(&mask, &[1, self.seq])?],
+            )?;
+            per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let logits = to_vec_f32(&out[0])?; // [1, seq, vocab]
+            let last = &logits[(used - 1) * self.vocab..used * self.vocab];
+            let next = rng.sample_logits(last, req.temperature) as i32;
+            ids.push(next);
+            generated += 1;
+        }
+
+        let text = self
+            .tokenizer
+            .decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
+        Ok(GenResponse { text, tokens_generated: generated, per_token_ms })
+    }
+}

@@ -1,0 +1,343 @@
+//! WordPiece tokenizer (S13) — the text front-end of the QA and
+//! text-generation demos (Fig. 1 of the paper).
+//!
+//! Implements the BERT tokenization pipeline: basic whitespace +
+//! punctuation pre-tokenization, lowercase, then greedy longest-match
+//! WordPiece with `##` continuation pieces. The vocabulary is *built* (not
+//! shipped): `Vocab::build` derives pieces from a corpus by frequency —
+//! whole words first, then suffix pieces — capped to the embedding size
+//! the AOT models were exported with (2048).
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const CLS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const MASK: u32 = 4;
+pub const SPECIALS: [&str; 5] = ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "[MASK]"];
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    pub id_of: HashMap<String, u32>,
+    pub piece_of: Vec<String>,
+}
+
+impl Vocab {
+    /// Build a vocab from corpus text, capped at `max_size` entries.
+    ///
+    /// Order: specials, single characters (coverage floor), frequent whole
+    /// words, then frequent `##` suffix pieces (2..4 chars) for splitting
+    /// unseen words.
+    pub fn build(corpus: &str, max_size: usize) -> Vocab {
+        let mut word_freq: HashMap<String, usize> = HashMap::new();
+        let mut char_set: Vec<char> = Vec::new();
+        for token in pre_tokenize(corpus) {
+            *word_freq.entry(token.clone()).or_default() += 1;
+            for c in token.chars() {
+                if !char_set.contains(&c) {
+                    char_set.push(c);
+                }
+            }
+        }
+        char_set.sort();
+
+        // Suffix piece frequencies.
+        let mut suffix_freq: HashMap<String, usize> = HashMap::new();
+        for (w, f) in &word_freq {
+            let chars: Vec<char> = w.chars().collect();
+            for start in 1..chars.len() {
+                for len in 2..=4usize {
+                    if start + len > chars.len() {
+                        break;
+                    }
+                    let piece: String = chars[start..start + len].iter().collect();
+                    *suffix_freq.entry(piece).or_default() += f;
+                }
+            }
+        }
+
+        let mut pieces: Vec<String> = SPECIALS.iter().map(|s| s.to_string()).collect();
+        for c in &char_set {
+            pieces.push(c.to_string());
+        }
+        for c in &char_set {
+            pieces.push(format!("##{c}"));
+        }
+
+        let mut words: Vec<(&String, &usize)> = word_freq.iter().collect();
+        words.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+        for (w, _) in words {
+            if pieces.len() >= max_size * 7 / 8 {
+                break;
+            }
+            if w.chars().count() > 1 && !pieces.contains(w) {
+                pieces.push(w.clone());
+            }
+        }
+
+        let mut sufs: Vec<(&String, &usize)> = suffix_freq.iter().collect();
+        sufs.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+        for (s, _) in sufs {
+            if pieces.len() >= max_size {
+                break;
+            }
+            let tagged = format!("##{s}");
+            if !pieces.contains(&tagged) {
+                pieces.push(tagged);
+            }
+        }
+
+        let id_of = pieces
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.clone(), i as u32))
+            .collect();
+        Vocab { id_of, piece_of: pieces }
+    }
+
+    pub fn len(&self) -> usize {
+        self.piece_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.piece_of.is_empty()
+    }
+
+    /// Save in BERT's one-piece-per-line format.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.piece_of.join("\n"))
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Vocab> {
+        let text = std::fs::read_to_string(path)?;
+        let piece_of: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let id_of = piece_of
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.clone(), i as u32))
+            .collect();
+        Ok(Vocab { id_of, piece_of })
+    }
+}
+
+/// Lowercase + split on whitespace, splitting punctuation into single
+/// tokens (BERT's BasicTokenizer).
+pub fn pre_tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_whitespace() {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+        } else if c.is_ascii_punctuation() {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+            out.push(c.to_string());
+        } else {
+            cur.extend(c.to_lowercase());
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+pub struct Tokenizer {
+    pub vocab: Vocab,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: Vocab) -> Self {
+        Tokenizer { vocab }
+    }
+
+    /// Greedy longest-match WordPiece on one pre-token.
+    fn wordpiece(&self, word: &str) -> Vec<u32> {
+        let chars: Vec<char> = word.chars().collect();
+        let mut ids = Vec::new();
+        let mut start = 0;
+        while start < chars.len() {
+            let mut end = chars.len();
+            let mut found = None;
+            while end > start {
+                let piece: String = chars[start..end].iter().collect();
+                let candidate = if start == 0 { piece } else { format!("##{piece}") };
+                if let Some(&id) = self.vocab.id_of.get(&candidate) {
+                    found = Some((id, end));
+                    break;
+                }
+                end -= 1;
+            }
+            match found {
+                Some((id, e)) => {
+                    ids.push(id);
+                    start = e;
+                }
+                None => return vec![UNK],
+            }
+        }
+        ids
+    }
+
+    /// Tokenize free text to ids (no specials).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        pre_tokenize(text)
+            .iter()
+            .flat_map(|w| self.wordpiece(w))
+            .collect()
+    }
+
+    /// BERT pair encoding: [CLS] a [SEP] b [SEP], padded/truncated to
+    /// `seq`, with token-type ids and attention mask.
+    pub fn encode_pair(
+        &self,
+        a: &str,
+        b: &str,
+        seq: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<f32>, usize) {
+        let ta = self.encode(a);
+        let tb = self.encode(b);
+        let mut ids = vec![CLS as i32];
+        let mut tt = vec![0i32];
+        for &t in ta.iter().take(seq.saturating_sub(3) / 2) {
+            ids.push(t as i32);
+            tt.push(0);
+        }
+        ids.push(SEP as i32);
+        tt.push(0);
+        let b_start = ids.len();
+        for &t in tb.iter().take(seq.saturating_sub(ids.len() + 1)) {
+            ids.push(t as i32);
+            tt.push(1);
+        }
+        ids.push(SEP as i32);
+        tt.push(1);
+        let used = ids.len();
+        let mut mask = vec![1.0f32; used];
+        ids.resize(seq, PAD as i32);
+        tt.resize(seq, 0);
+        mask.resize(seq, 0.0);
+        (ids, tt, mask, b_start)
+    }
+
+    /// Decode ids to text (## pieces joined, specials skipped).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            let piece = self
+                .vocab
+                .piece_of
+                .get(id as usize)
+                .map(|s| s.as_str())
+                .unwrap_or("[UNK]");
+            if SPECIALS.contains(&piece) {
+                continue;
+            }
+            if let Some(cont) = piece.strip_prefix("##") {
+                out.push_str(cont);
+            } else {
+                if !out.is_empty() {
+                    out.push(' ');
+                }
+                out.push_str(piece);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the quick brown fox jumps over the lazy dog. \
+        the dog sleeps. a fox is quick and brown. question answering \
+        systems read a paragraph and answer a question about the text.";
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(Vocab::build(CORPUS, 512))
+    }
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let t = tok();
+        assert_eq!(t.vocab.id_of["[PAD]"], PAD);
+        assert_eq!(t.vocab.id_of["[UNK]"], UNK);
+        assert_eq!(t.vocab.id_of["[CLS]"], CLS);
+        assert_eq!(t.vocab.id_of["[SEP]"], SEP);
+    }
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = tok();
+        let ids = t.encode("the quick fox");
+        assert!(ids.iter().all(|&i| i != UNK));
+        assert_eq!(t.decode(&ids), "the quick fox");
+    }
+
+    #[test]
+    fn unseen_word_splits_into_pieces() {
+        let t = tok();
+        // "quickest" is unseen but 'quick' + suffix pieces exist.
+        let ids = t.encode("quickest");
+        assert!(ids.len() >= 2, "{ids:?}");
+        assert!(ids.iter().all(|&i| i != UNK));
+        assert_eq!(t.decode(&ids), "quickest");
+    }
+
+    #[test]
+    fn char_coverage_prevents_unk_for_ascii() {
+        let t = tok();
+        let ids = t.encode("zzzqqq");
+        // Characters are in the corpus alphabet? z/q appear in
+        // quick/lazy; so full char fallback works.
+        assert!(ids.iter().all(|&i| i != UNK), "{ids:?}");
+    }
+
+    #[test]
+    fn pair_encoding_layout() {
+        let t = tok();
+        let (ids, tt, mask, b_start) = t.encode_pair("a question", "the text has an answer", 32);
+        assert_eq!(ids.len(), 32);
+        assert_eq!(ids[0], CLS as i32);
+        assert_eq!(tt[0], 0);
+        assert!(b_start > 1);
+        assert_eq!(tt[b_start], 1);
+        let used = mask.iter().filter(|&&m| m > 0.0).count();
+        assert!(used < 32);
+        assert_eq!(ids[used - 1], SEP as i32);
+        assert!(ids[used..].iter().all(|&i| i == PAD as i32));
+    }
+
+    #[test]
+    fn truncation_respects_seq() {
+        let t = tok();
+        let long = "the quick brown fox ".repeat(50);
+        let (ids, _, mask, _) = t.encode_pair(&long, &long, 16);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(mask.len(), 16);
+    }
+
+    #[test]
+    fn vocab_capped_and_saveable() {
+        let v = Vocab::build(CORPUS, 64);
+        assert!(v.len() <= 64);
+        let dir = std::env::temp_dir().join("canao_vocab_test.txt");
+        v.save(&dir).unwrap();
+        let v2 = Vocab::load(&dir).unwrap();
+        assert_eq!(v.piece_of, v2.piece_of);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn pre_tokenize_punctuation() {
+        assert_eq!(
+            pre_tokenize("Hello, world!"),
+            vec!["hello", ",", "world", "!"]
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Training driver (S16): Rust owns the loop; the gradient step is the AOT
+//! `train_*_b8` executable (fwd+bwd+SGD fused into one HLO module by JAX
+//! at build time). Parameters live as PJRT literals and are fed back each
+//! step — Python never runs.
+//!
+//! Two workloads:
+//! * `finetune` — synthetic sequence classification (trigger-token task),
+//!   the stand-in for the paper's GLUE fine-tuning stage;
+//! * `lm` — next-token LM on the tiny corpus, which the text-generation
+//!   demo uses to get non-random weights.
+
+use anyhow::Result;
+
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub final_loss: f32,
+    pub initial_loss: f32,
+    pub seconds: f64,
+}
+
+impl TrainReport {
+    pub fn improved(&self) -> bool {
+        self.final_loss < self.initial_loss
+    }
+}
+
+/// The synthetic classification task: label = 1 iff the trigger token
+/// appears in the sequence. Positives carry the trigger in ~1/4 of the
+/// positions so the mean-pooled representation shifts measurably from
+/// step one (a single occurrence diluted by 1/seq trains far slower —
+/// this is an e2e plumbing check, not a hard benchmark).
+pub const TRIGGER_TOKEN: i32 = 7;
+
+pub fn make_cls_batch(
+    rng: &mut Rng,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+    let mut ids = Vec::with_capacity(batch * seq);
+    let mut labels = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let positive = b % 2 == 0; // balanced
+        let mut row: Vec<i32> = (0..seq)
+            .map(|_| {
+                let mut t = rng.below(vocab) as i32;
+                if t == TRIGGER_TOKEN {
+                    t += 1; // keep negatives clean
+                }
+                t
+            })
+            .collect();
+        if positive {
+            for _ in 0..(seq / 4).max(1) {
+                let pos = rng.below(seq);
+                row[pos] = TRIGGER_TOKEN;
+            }
+        }
+        ids.extend_from_slice(&row);
+        labels.push(positive as i32);
+    }
+    let tt = vec![0i32; batch * seq];
+    let mask = vec![1.0f32; batch * seq];
+    (ids, tt, mask, labels)
+}
+
+/// Fine-tune the `cls` model for `steps` steps; returns the loss curve.
+pub fn finetune_cls(rt: &mut Runtime, steps: usize, lr: f32, seed: u64) -> Result<TrainReport> {
+    let exe = rt.load("train_cls_b8")?;
+    let mut params = rt.load_params("cls")?;
+    let m = &rt.manifest.models["cls"];
+    let (seq, vocab) = (m.cfg("seq"), m.cfg("vocab"));
+    let n_params = params.len();
+    let mut rng = Rng::new(seed);
+
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (ids, tt, mask, labels) = make_cls_batch(&mut rng, 8, seq, vocab);
+        let out = exe.run(
+            &params,
+            &[
+                lit_i32(&ids, &[8, seq])?,
+                lit_i32(&tt, &[8, seq])?,
+                lit_f32(&mask, &[8, seq])?,
+                lit_i32(&labels, &[8])?,
+                lit_scalar_f32(lr),
+            ],
+        )?;
+        debug_assert_eq!(out.len(), n_params + 1);
+        let loss = to_vec_f32(&out[n_params])?[0];
+        losses.push(loss);
+        let mut out = out;
+        let _loss_lit = out.pop();
+        params = out;
+    }
+
+    Ok(TrainReport {
+        initial_loss: *losses.first().unwrap_or(&f32::NAN),
+        final_loss: *losses.last().unwrap_or(&f32::NAN),
+        steps,
+        seconds: t0.elapsed().as_secs_f64(),
+        losses,
+    })
+}
+
+/// Evaluate classification accuracy of current `cls` params on fresh data.
+pub fn eval_cls(rt: &mut Runtime, params: &[xla::Literal], batches: usize, seed: u64) -> Result<f32> {
+    let exe = rt.load("cls_b8")?;
+    let m = &rt.manifest.models["cls"];
+    let (seq, vocab, classes) = (m.cfg("seq"), m.cfg("vocab"), 2usize);
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..batches {
+        let (ids, tt, mask, labels) = make_cls_batch(&mut rng, 8, seq, vocab);
+        let out = exe.run(
+            params,
+            &[lit_i32(&ids, &[8, seq])?, lit_i32(&tt, &[8, seq])?, lit_f32(&mask, &[8, seq])?],
+        )?;
+        let logits = to_vec_f32(&out[0])?; // [8, 2]
+        for b in 0..8 {
+            let row = &logits[b * classes..(b + 1) * classes];
+            let pred = if row[1] > row[0] { 1 } else { 0 };
+            correct += (pred == labels[b]) as usize;
+            total += 1;
+        }
+    }
+    Ok(correct as f32 / total as f32)
+}
+
+/// Fine-tune the causal LM on corpus windows; returns params for the
+/// text-generation engine plus the loss curve.
+pub fn train_lm(
+    rt: &mut Runtime,
+    corpus_ids: &[i32],
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(Vec<xla::Literal>, TrainReport)> {
+    let exe = rt.load("train_lm_b8")?;
+    let mut params = rt.load_params("gen")?;
+    let m = &rt.manifest.models["gen"];
+    let seq = m.cfg("seq");
+    let n_params = params.len();
+    anyhow::ensure!(
+        corpus_ids.len() > seq + 1,
+        "corpus too small: {} tokens for seq {seq}",
+        corpus_ids.len()
+    );
+    let mut rng = Rng::new(seed);
+
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let mut ids = Vec::with_capacity(8 * seq);
+        for _ in 0..8 {
+            let start = rng.below(corpus_ids.len() - seq);
+            ids.extend_from_slice(&corpus_ids[start..start + seq]);
+        }
+        let mask = vec![1.0f32; 8 * seq];
+        let out = exe.run(
+            &params,
+            &[lit_i32(&ids, &[8, seq])?, lit_f32(&mask, &[8, seq])?, lit_scalar_f32(lr)],
+        )?;
+        let loss = to_vec_f32(&out[n_params])?[0];
+        losses.push(loss);
+        let mut out = out;
+        out.pop();
+        params = out;
+    }
+
+    let report = TrainReport {
+        initial_loss: *losses.first().unwrap_or(&f32::NAN),
+        final_loss: *losses.last().unwrap_or(&f32::NAN),
+        steps,
+        seconds: t0.elapsed().as_secs_f64(),
+        losses,
+    };
+    Ok((params, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cls_batch_is_balanced_and_clean() {
+        let mut rng = Rng::new(3);
+        let (ids, tt, mask, labels) = make_cls_batch(&mut rng, 8, 16, 64);
+        assert_eq!(ids.len(), 8 * 16);
+        assert_eq!(labels.iter().filter(|&&l| l == 1).count(), 4);
+        assert!(tt.iter().all(|&t| t == 0));
+        assert!(mask.iter().all(|&m| m == 1.0));
+        for b in 0..8 {
+            let row = &ids[b * 16..(b + 1) * 16];
+            let has_trigger = row.contains(&TRIGGER_TOKEN);
+            assert_eq!(has_trigger, labels[b] == 1, "row {b}");
+        }
+    }
+
+    #[test]
+    fn batches_vary_across_steps() {
+        let mut rng = Rng::new(4);
+        let (a, ..) = make_cls_batch(&mut rng, 8, 16, 64);
+        let (b, ..) = make_cls_batch(&mut rng, 8, 16, 64);
+        assert_ne!(a, b);
+    }
+}

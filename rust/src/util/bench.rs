@@ -1,0 +1,155 @@
+//! Micro-benchmark harness (substrate — criterion is unavailable offline).
+//!
+//! Mimics criterion's workflow: warm-up, calibrated iteration count, robust
+//! statistics (median + MAD), and a stable one-line report. Used by every
+//! target under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} median {:>12} mean  (±{:>10}, {} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.mad),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the iteration count to fill
+/// `target_time`. Returns robust statistics over per-iteration samples.
+pub fn bench<F: FnMut()>(name: &str, target_time: Duration, mut f: F) -> BenchStats {
+    // Warm-up: run until ~10% of the target time is spent, at least once.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_start.elapsed() < target_time / 10 || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
+
+    // Choose a sample count: aim for >= 10 samples, each sample 1+ calls.
+    let est_total = per_iter.max(Duration::from_nanos(1));
+    let samples = ((target_time.as_nanos() / est_total.as_nanos().max(1)) as usize)
+        .clamp(10, 10_000);
+
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+
+    times.sort();
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let max = *times.last().unwrap();
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let mut devs: Vec<i128> = times
+        .iter()
+        .map(|t| (t.as_nanos() as i128 - median.as_nanos() as i128).abs())
+        .collect();
+    devs.sort();
+    let mad = Duration::from_nanos(devs[devs.len() / 2] as u64);
+
+    BenchStats {
+        name: name.to_string(),
+        iters: samples,
+        mean,
+        median,
+        min,
+        max,
+        mad,
+    }
+}
+
+/// A bench "group" that prints a header and collects rows; mirrors
+/// criterion's group output enough for `cargo bench | tee` logs.
+pub struct Group {
+    pub title: String,
+    pub rows: Vec<BenchStats>,
+    target: Duration,
+}
+
+impl Group {
+    pub fn new(title: &str) -> Self {
+        println!("\n== {title} ==");
+        Group {
+            title: title.to_string(),
+            rows: Vec::new(),
+            target: Duration::from_millis(300),
+        }
+    }
+
+    pub fn with_target(title: &str, target: Duration) -> Self {
+        let mut g = Self::new(title);
+        g.target = target;
+        g
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchStats {
+        let stats = bench(name, self.target, f);
+        println!("  {}", stats.report());
+        self.rows.push(stats);
+        self.rows.last().unwrap()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop-ish", Duration::from_millis(20), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,78 @@
+//! Lightweight property-based testing helper (substrate — proptest is
+//! unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen`; on failure it re-raises with the failing seed and a
+//! debug dump of the input so the case is reproducible. Shrinking is
+//! intentionally omitted — generators here produce small inputs already.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` generated inputs. Panics with the failing input
+/// (and the per-case seed) on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case} (seed {case_seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("mismatch at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(1, 50, |r| r.below(100), |&n| {
+            if n < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 50, |r| r.below(10), |&n| {
+            if n < 5 {
+                Ok(())
+            } else {
+                Err(format!("{n} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn close_check() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.000001], 1e-5, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Tiny CLI argument parser (substrate — clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and generated usage text. Used by `main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` minus the program name. `bool_flags` lists
+    /// flags that take no value.
+    pub fn parse(raw: impl Iterator<Item = String>, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.bools.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.bools.push(rest.to_string());
+                    } else {
+                        out.flags.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.bools.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.bools.iter().any(|b| b == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], bools: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), bools)
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--x", "1", "--y=2", "pos"], &[]);
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.get("y"), Some("2"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["--verbose", "--n", "3"], &["verbose"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag_is_bool() {
+        let a = parse(&["--x", "1", "--flag"], &[]);
+        assert!(a.has("flag"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+    }
+}

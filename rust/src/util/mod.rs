@@ -1,0 +1,11 @@
+//! In-tree substrates replacing crates that are unavailable offline:
+//! JSON (serde_json), RNG (rand), bench harness (criterion), CLI (clap),
+//! property testing (proptest), thread pool (tokio), metrics.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

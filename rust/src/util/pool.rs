@@ -1,0 +1,130 @@
+//! Minimal thread pool (substrate — tokio is unavailable offline, and the
+//! serving path only needs bounded worker concurrency, not async I/O).
+//!
+//! Jobs are boxed closures; `Pool::scope`-style joining is provided via
+//! `wait_idle`. The serving engine uses one pool for tokenization and one
+//! worker thread per PJRT executable (PJRT execution is internally
+//! multi-threaded already).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+pub struct Pool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    submitted: AtomicUsize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Msg>>> = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::Builder::new()
+                    .name(format!("canao-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { tx, workers, pending, submitted: AtomicUsize::new(0) }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    pub fn jobs_submitted(&self) -> usize {
+        self.submitted.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.jobs_submitted(), 100);
+    }
+
+    #[test]
+    fn parallel_speedup_observable() {
+        // Not a perf assertion — just that work really runs on >1 thread.
+        let pool = Pool::new(4);
+        let ids = Arc::new(Mutex::new(std::collections::HashSet::new()));
+        for _ in 0..32 {
+            let ids = Arc::clone(&ids);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        pool.wait_idle();
+        assert!(ids.lock().unwrap().len() > 1);
+    }
+}

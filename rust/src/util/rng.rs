@@ -1,0 +1,193 @@
+//! Deterministic RNG (substrate — the `rand` crate is unavailable offline).
+//!
+//! SplitMix64 core with helpers used across the repo: uniform floats,
+//! ranges, normal sampling (Box–Muller), categorical sampling from logits,
+//! and shuffling. Everything is seed-reproducible, which the NAS search,
+//! the synthetic data generators, and the property tests all rely on.
+
+/// SplitMix64 — tiny, fast, passes BigCrush when used as a stream.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second normal from Box–Muller.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        // Lemire-style rejection-free is overkill here; modulo bias is
+        // negligible for our n << 2^64.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi > lo);
+        lo + (self.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        let (mut u1, u2) = (self.f64(), self.f64());
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * th.sin());
+        r * th.cos()
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Sample an index from unnormalized logits with a temperature.
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32) -> usize {
+        assert!(!logits.is_empty());
+        if temperature <= 1e-6 {
+            // Greedy.
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap();
+        }
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = logits
+            .iter()
+            .map(|&l| (((l - max) / temperature) as f64).exp())
+            .collect();
+        let total: f64 = exps.iter().sum();
+        let mut t = self.f64() * total;
+        for (i, e) in exps.iter().enumerate() {
+            t -= e;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        exps.len() - 1
+    }
+
+    /// Sample from explicit probabilities (must sum to ~1).
+    pub fn sample_probs(&mut self, probs: &[f32]) -> usize {
+        let mut t = self.f64() as f32;
+        for (i, p) in probs.iter().enumerate() {
+            t -= p;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 1.0).abs() < 0.1, "{var}");
+    }
+
+    #[test]
+    fn sample_logits_greedy() {
+        let mut r = Rng::new(3);
+        assert_eq!(r.sample_logits(&[0.0, 5.0, 1.0], 0.0), 1);
+    }
+
+    #[test]
+    fn sample_logits_distribution() {
+        let mut r = Rng::new(4);
+        let logits = [0.0f32, 2.0, 0.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..5000 {
+            counts[r.sample_logits(&logits, 1.0)] += 1;
+        }
+        // P(1) = e^2 / (e^2 + 2) ≈ 0.787
+        assert!(counts[1] > 3500, "{counts:?}");
+        assert!(counts[0] > 200 && counts[2] > 200, "{counts:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(6);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

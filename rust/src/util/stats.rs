@@ -1,0 +1,134 @@
+//! Latency/throughput metrics for the serving path and benches.
+
+use std::time::Duration;
+
+/// Online reservoir of latency samples with percentile queries.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyHistogram {
+    samples_us: Vec<u64>,
+    sorted: bool,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_us.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> Duration {
+        assert!(!self.samples_us.is_empty(), "empty histogram");
+        self.ensure_sorted();
+        let rank = ((p / 100.0) * (self.samples_us.len() - 1) as f64).round() as usize;
+        Duration::from_micros(self.samples_us[rank.min(self.samples_us.len() - 1)])
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(
+            self.samples_us.iter().sum::<u64>() / self.samples_us.len() as u64,
+        )
+    }
+
+    pub fn summary(&mut self) -> String {
+        if self.is_empty() {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:?} p50={:?} p90={:?} p99={:?}",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0),
+        )
+    }
+}
+
+/// Simple mean/std accumulator (Welford).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert!(h.percentile(50.0) <= h.percentile(90.0));
+        assert!(h.percentile(90.0) <= h.percentile(99.0));
+        assert_eq!(h.percentile(100.0), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.var() - var).abs() < 1e-12);
+    }
+}

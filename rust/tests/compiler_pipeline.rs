@@ -1,0 +1,155 @@
+//! Integration tests over the full compiler pipeline: passes -> LP-Fusion
+//! -> codegen -> plan execution, on realistic transformer graphs, checked
+//! against the reference interpreter.
+
+use std::collections::HashMap;
+
+use canao::compiler::exec::interp::eval_graph;
+use canao::compiler::fusion::{lp_fusion, BlockKind, FusionConfig};
+use canao::compiler::ir::{DType, Graph, Op};
+use canao::compiler::poly::fusion_legal;
+use canao::compiler::{compile, CompileOptions};
+use canao::model::{build_encoder, BertConfig};
+use canao::util::check::assert_close;
+use canao::util::rng::Rng;
+
+fn feeds_for(g: &Graph, seed: u64) -> HashMap<String, Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut feeds = HashMap::new();
+    for node in &g.nodes {
+        match &node.op {
+            Op::Input { name } => {
+                let data: Vec<f32> = if node.dtype == DType::I32 {
+                    (0..node.shape.numel()).map(|_| rng.below(32) as f32).collect()
+                } else if name.starts_with("mask") {
+                    vec![0.0; node.shape.numel()] // additive mask: attend all
+                } else {
+                    (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+                };
+                feeds.insert(name.clone(), data);
+            }
+            Op::Weight { name } => {
+                let data: Vec<f32> = if name.ends_with("gamma") {
+                    vec![1.0; node.shape.numel()]
+                } else if name.ends_with("beta") || name.contains("/b") {
+                    vec![0.0; node.shape.numel()]
+                } else {
+                    (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 0.05)).collect()
+                };
+                feeds.insert(name.clone(), data);
+            }
+            _ => {}
+        }
+    }
+    feeds
+}
+
+/// A one-layer transformer encoder, compiled with fusion, must produce the
+/// same numbers as the unfused reference interpreter on the ORIGINAL graph
+/// — semantics preservation across the entire pipeline.
+#[test]
+fn tiny_bert_fused_execution_matches_interpreter() {
+    let cfg = BertConfig { vocab: 64, seq: 8, layers: 1, hidden: 16, heads: 2, inter: 32 };
+    let g = build_encoder(&cfg);
+    let feeds = feeds_for(&g, 42);
+    let expect = eval_graph(&g, &feeds);
+
+    for opts in [
+        CompileOptions::default(),
+        CompileOptions::no_fusion(),
+        CompileOptions { skip_passes: true, ..Default::default() },
+        CompileOptions { model_only_tuning: true, ..Default::default() },
+    ] {
+        let c = compile(&g, &opts);
+        let got = c.run(&feeds);
+        assert_eq!(got.len(), expect.len());
+        for (e, o) in expect.iter().zip(&got) {
+            assert_close(&o.data, &e.data, 2e-3, 2e-3).unwrap();
+        }
+    }
+}
+
+#[test]
+fn two_layer_bert_matches_too() {
+    let cfg = BertConfig { vocab: 32, seq: 4, layers: 2, hidden: 8, heads: 2, inter: 16 };
+    let g = build_encoder(&cfg);
+    let feeds = feeds_for(&g, 7);
+    let expect = eval_graph(&g, &feeds);
+    let c = compile(&g, &CompileOptions::default());
+    let got = c.run(&feeds);
+    assert_close(&got[0].data, &expect[0].data, 2e-3, 2e-3).unwrap();
+}
+
+/// The fusion statistics the paper reports: fusing a transformer layer
+/// must collapse the softmax (5 ops), each layernorm (12 ops), the GELU
+/// (7 ops) and the residual adds into a handful of blocks.
+#[test]
+fn fusion_collapses_transformer_op_count() {
+    let cfg = BertConfig { vocab: 64, seq: 16, layers: 2, hidden: 32, heads: 2, inter: 64 };
+    let g = build_encoder(&cfg);
+    let fused = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    let (ops, blocks, ratio) = fused.fusion_summary();
+    assert!(ops > 100, "{ops}");
+    assert!(ratio > 2.5, "ops/block only {ratio:.2}");
+    // Per-layer block count should be ~constant.
+    let cfg1 = BertConfig { layers: 1, ..cfg };
+    let g1 = build_encoder(&cfg1);
+    let f1 = compile(&g1, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    let per_layer = blocks - f1.plan.num_blocks();
+    assert!(per_layer > 0 && per_layer < 40, "{per_layer}");
+}
+
+/// Every fused block in a real model graph satisfies the polyhedral
+/// legality invariant.
+#[test]
+fn all_blocks_legal_on_bert_graph() {
+    let cfg = BertConfig { vocab: 64, seq: 8, layers: 2, hidden: 16, heads: 2, inter: 32 };
+    let g = build_encoder(&cfg);
+    let plan = lp_fusion(&g, &FusionConfig::default());
+    for b in &plan.blocks {
+        assert!(fusion_legal(&g, b), "block {} illegal: {:?}", b.id, b.nodes);
+    }
+}
+
+/// The attention core (matmul-softmax-matmul) must be discovered as a
+/// fused block in the real model graph — the paper's key fusion.
+#[test]
+fn attention_core_found_in_bert_graph() {
+    let cfg = BertConfig { vocab: 64, seq: 8, layers: 1, hidden: 16, heads: 2, inter: 32 };
+    let g = build_encoder(&cfg);
+    let plan = lp_fusion(&g, &FusionConfig::default());
+    let attn_blocks = plan
+        .blocks
+        .iter()
+        .filter(|b| b.kind == BlockKind::AttentionCore)
+        .count();
+    assert!(
+        attn_blocks >= 1,
+        "kinds: {:?}",
+        plan.blocks.iter().map(|b| b.kind).collect::<Vec<_>>()
+    );
+}
+
+/// Pass pipeline is idempotent: compiling the optimized graph again
+/// changes nothing.
+#[test]
+fn passes_idempotent_on_bert() {
+    let cfg = BertConfig { vocab: 32, seq: 4, layers: 1, hidden: 8, heads: 2, inter: 16 };
+    let g = build_encoder(&cfg);
+    let c1 = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    let c2 = compile(&c1.graph, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    assert_eq!(c1.graph.num_ops(), c2.graph.num_ops());
+    assert_eq!(c1.plan.num_blocks(), c2.plan.num_blocks());
+}
+
+/// Graph outputs survive every pass combination (no output is optimized
+/// away or aliased to the wrong value).
+#[test]
+fn outputs_preserved_through_passes() {
+    let cfg = BertConfig { vocab: 32, seq: 4, layers: 1, hidden: 8, heads: 2, inter: 16 };
+    let g = build_encoder(&cfg);
+    let c = compile(&g, &CompileOptions::default());
+    assert_eq!(c.graph.outputs.len(), g.outputs.len());
+    let out = &c.graph.nodes[c.graph.outputs[0]];
+    assert_eq!(out.shape, g.nodes[g.outputs[0]].shape);
+}

@@ -1,0 +1,147 @@
+//! Cross-module integration tests that don't need PJRT artifacts:
+//! NAS over the real compiler + device simulator, reports, batcher + mock
+//! model, and CLI-level wiring.
+
+use std::time::Duration;
+
+use canao::device::DeviceProfile;
+use canao::nas::{Search, SearchConfig};
+use canao::serving::batcher::{BatchModel, Batcher, BatcherOptions};
+use canao::table1_rows;
+
+/// The full compiler-in-the-loop NAS produces an architecture meeting the
+/// latency target when one exists, and its latency ordering is consistent
+/// with the device simulator.
+#[test]
+fn nas_finds_latency_feasible_architecture() {
+    let mut s = Search::new(SearchConfig {
+        device: DeviceProfile::s865_cpu(),
+        target_ms: 120.0,
+        lambda: 2.0,
+        phase1_iters: 5,
+        phase2_iters: 8,
+        batch: 6,
+        seed: 99,
+        ..Default::default()
+    });
+    let res = s.run();
+    assert!(
+        res.best.latency_ms < 180.0,
+        "best {:?} at {:.0}ms",
+        res.best.cfg,
+        res.best.latency_ms
+    );
+    assert!(res.best.accuracy > 60.0);
+    // The search must have actually explored (several unique configs).
+    assert!(res.evaluations >= 5, "{}", res.evaluations);
+}
+
+/// Ablation D3: dropping the latency term lets the search drift to bigger
+/// models — the paper's motivation for compiler-aware search.
+#[test]
+fn ablation_accuracy_only_prefers_bigger_models() {
+    let base = SearchConfig {
+        target_ms: 30.0,
+        lambda: 4.0,
+        phase1_iters: 6,
+        phase2_iters: 10,
+        batch: 6,
+        seed: 5,
+        ..Default::default()
+    };
+    let with_lat = Search::new(base.clone()).run();
+    let acc_only = Search::new(SearchConfig { accuracy_only: true, ..base }).run();
+    assert!(
+        acc_only.best.cfg.flops() >= with_lat.best.cfg.flops(),
+        "acc-only {:?} vs constrained {:?}",
+        acc_only.best.cfg,
+        with_lat.best.cfg
+    );
+    assert!(acc_only.best.accuracy >= with_lat.best.accuracy - 0.5);
+}
+
+/// Ablation D1: taking fusion OUT of the latency estimate inflates every
+/// candidate's latency, shifting the reward landscape.
+#[test]
+fn ablation_fusion_in_loop_changes_latency_estimates() {
+    let mk = |no_fusion| {
+        SearchConfig {
+            no_fusion_in_loop: no_fusion,
+            phase1_iters: 1,
+            phase2_iters: 1,
+            batch: 2,
+            ..Default::default()
+        }
+    };
+    let cfg = canao::model::BertConfig::canaobert();
+    let mut with = Search::new(mk(false));
+    let mut without = Search::new(mk(true));
+    let l_with = with.latency_ms(&cfg);
+    let l_without = without.latency_ms(&cfg);
+    assert!(
+        l_without > 1.3 * l_with,
+        "unfused-in-loop {l_without:.0}ms vs fused {l_with:.0}ms"
+    );
+}
+
+/// Table 1 rows are internally consistent: FLOPs ordering matches latency
+/// ordering per column.
+#[test]
+fn table1_rows_consistent() {
+    let rows = table1_rows();
+    assert_eq!(rows.len(), 3);
+    let by = |f: fn(&canao::reports::Table1Row) -> f64| {
+        let mut v: Vec<(String, f64)> =
+            rows.iter().map(|r| (r.name.to_string(), f(r))).collect();
+        v.sort_by(|a, b| a.1.total_cmp(&b.1));
+        v.into_iter().map(|(n, _)| n).collect::<Vec<_>>()
+    };
+    let flops_order = by(|r| r.gflops);
+    assert_eq!(flops_order, by(|r| r.tflite_cpu_ms));
+    assert_eq!(flops_order, by(|r| r.fuse_cpu_ms));
+    assert_eq!(flops_order, by(|r| r.fuse_gpu_ms));
+}
+
+/// Batcher under sustained offered load keeps batching efficiency high.
+#[test]
+fn batcher_sustains_throughput() {
+    struct SlowEcho;
+    impl BatchModel<u64, u64> for SlowEcho {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn run_batch(&self, items: &[u64]) -> Vec<u64> {
+            // Fixed per-batch cost: batching amortizes it.
+            std::thread::sleep(Duration::from_millis(2));
+            items.to_vec()
+        }
+    }
+    let b = std::sync::Arc::new(Batcher::new(
+        SlowEcho,
+        BatcherOptions { max_wait: Duration::from_millis(3), min_batch: 4 },
+    ));
+    let n = 64;
+    let start = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n).map(|i| b.submit(i)).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap(), i as u64);
+    }
+    let elapsed = start.elapsed();
+    let m = b.metrics.lock().unwrap();
+    // 64 sequential 2ms calls would take 128ms+; batching must beat 64ms.
+    assert!(elapsed < Duration::from_millis(64), "{elapsed:?}");
+    assert!(m.mean_batch_size() > 2.0, "{}", m.mean_batch_size());
+}
+
+/// JSON substrate handles the real manifest format end to end.
+#[test]
+fn manifest_roundtrip_through_json_substrate() {
+    use canao::util::json::Json;
+    let j = Json::parse(
+        r#"{"version":1,"models":{},"executables":{}}"#,
+    )
+    .unwrap();
+    assert_eq!(j.get("version").unwrap().as_usize(), Some(1));
+    let dumped = j.dump();
+    assert_eq!(Json::parse(&dumped).unwrap(), j);
+}

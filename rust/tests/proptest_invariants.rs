@@ -1,0 +1,276 @@
+//! Property-based tests (via the in-tree `forall` substrate) on the
+//! compiler's core invariants, driven by randomly generated graphs.
+//!
+//! Invariants:
+//!  P1  semantics: fused-plan execution == reference interpreter, for any
+//!      random elementwise/matmul/reduce DAG and any fusion config;
+//!  P2  algebraic rewrites preserve values;
+//!  P3  every LP-Fusion partition is a valid partition (each op in exactly
+//!      one block, block DAG acyclic, topo-ordered);
+//!  P4  both Fig. 4 schedules agree on every broadcast block;
+//!  P5  the device cost model is monotone: fused latency <= unfused.
+
+use std::collections::HashMap;
+
+use canao::compiler::exec::interp::eval_graph;
+use canao::compiler::exec::plan::execute_plan;
+use canao::compiler::fusion::{lp_fusion, FusionConfig};
+use canao::compiler::ir::{DType, Graph, Op};
+use canao::compiler::passes::PassManager;
+use canao::compiler::poly::{schedules_for, Schedule};
+use canao::device::{plan_latency, DeviceProfile};
+use canao::util::check::{assert_close, forall};
+use canao::util::rng::Rng;
+
+/// Generate a random DAG of elementwise / reduce / matmul ops over a few
+/// leaf tensors, with broadcast-compatible shapes.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    let m = 2 + rng.below(6);
+    let n = 2 + rng.below(6);
+    let full = g.input("x0", &[m, n], DType::F32);
+    let row = g.input("x1", &[n], DType::F32);
+    let full2 = g.weight("w0", &[m, n]);
+    let mut values = vec![full, row, full2];
+
+    let n_ops = 3 + rng.below(10);
+    for _ in 0..n_ops {
+        let a = *rng.choose(&values);
+        let b = *rng.choose(&values);
+        let choice = rng.below(8);
+        let id = match choice {
+            0 => g.add(a, b),
+            1 => g.mul(a, b),
+            2 => g.sub(a, b),
+            3 => g.add_op(Op::Tanh, &[a]),
+            4 => g.add_op(Op::Exp, &[a]),
+            5 => {
+                let c = g.constant(0.5 + rng.f32());
+                g.mul(a, c)
+            }
+            6 => {
+                // max-based (softmax-ish) fragment
+                let r = g.add_op(Op::ReduceMax { axis: g.nodes[a].shape.rank() - 1 }, &[a]);
+                g.sub(a, r)
+            }
+            _ => g.add_op(Op::Max, &[a, b]),
+        };
+        values.push(id);
+    }
+    // 1-2 outputs.
+    let o1 = *rng.choose(&values[3..].to_vec().as_slice());
+    g.mark_output(o1);
+    if rng.below(2) == 0 {
+        let o2 = *rng.choose(&values[3..].to_vec().as_slice());
+        if o2 != o1 {
+            g.mark_output(o2);
+        }
+    }
+    g
+}
+
+fn feeds_for(g: &Graph, rng: &mut Rng) -> HashMap<String, Vec<f32>> {
+    let mut feeds = HashMap::new();
+    for node in &g.nodes {
+        if let Op::Input { name } | Op::Weight { name } = &node.op {
+            feeds.insert(
+                name.clone(),
+                (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+        }
+    }
+    feeds
+}
+
+#[test]
+fn p1_plan_execution_matches_interpreter() {
+    forall(
+        0xA11CE,
+        60,
+        |rng| {
+            let g = random_graph(rng);
+            let feeds = feeds_for(&g, rng);
+            let budget = if rng.below(2) == 0 { 1 << 26 } else { 256 };
+            (g, feeds, budget)
+        },
+        |(g, feeds, budget)| {
+            let expect = eval_graph(g, feeds);
+            let cfg = FusionConfig { footprint_budget: *budget, ..Default::default() };
+            let plan = lp_fusion(g, &cfg);
+            let got = execute_plan(g, &plan, feeds, &HashMap::new());
+            for (e, o) in expect.iter().zip(&got) {
+                assert_close(&o.data, &e.data, 1e-4, 1e-5)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p2_passes_preserve_semantics() {
+    forall(
+        0xBEEF,
+        60,
+        |rng| {
+            let g = random_graph(rng);
+            let feeds = feeds_for(&g, rng);
+            (g, feeds)
+        },
+        |(g, feeds)| {
+            let expect = eval_graph(g, feeds);
+            let (optimized, _) = PassManager::standard().run(g);
+            let got = eval_graph(&optimized, feeds);
+            if optimized.num_ops() > g.num_ops() {
+                return Err(format!(
+                    "passes grew the graph: {} -> {}",
+                    g.num_ops(),
+                    optimized.num_ops()
+                ));
+            }
+            for (e, o) in expect.iter().zip(&got) {
+                assert_close(&o.data, &e.data, 1e-4, 1e-5)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p3_fusion_is_valid_partition() {
+    forall(
+        0xCAFE,
+        80,
+        |rng| random_graph(rng),
+        |g| {
+            let plan = lp_fusion(g, &FusionConfig::default());
+            // Each non-leaf node in exactly one block.
+            let mut seen = std::collections::HashSet::new();
+            for b in &plan.blocks {
+                for &n in &b.nodes {
+                    if !seen.insert(n) {
+                        return Err(format!("node {n} in two blocks"));
+                    }
+                }
+                // Topo order inside the block.
+                for w in b.nodes.windows(2) {
+                    if w[0] >= w[1] {
+                        return Err(format!("block {} not topo-sorted", b.id));
+                    }
+                }
+            }
+            let non_leaf = g.nodes.iter().filter(|n| !n.op.is_leaf()).count();
+            if seen.len() != non_leaf {
+                return Err(format!("covered {} of {} ops", seen.len(), non_leaf));
+            }
+            // Block DAG acyclicity: since blocks are emitted in topo order
+            // of their first node and the merge rule forbids external
+            // users of non-final blocks, it suffices that every block's
+            // inputs come from strictly earlier-emitted values.
+            for b in &plan.blocks {
+                for &i in &b.inputs {
+                    if !g.nodes[i].op.is_leaf() {
+                        let src_block = plan.block_of[&i];
+                        if src_block >= b.id {
+                            return Err(format!("block {} reads from block {src_block}", b.id));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p4_fig4_schedules_agree() {
+    forall(
+        0xD00D,
+        40,
+        |rng| {
+            let m = 1 + rng.below(24);
+            let n = 1 + rng.below(24);
+            let mut g = Graph::new();
+            let a = g.input("a", &[m, n], DType::F32);
+            let b = g.input("b", &[m, n], DType::F32);
+            let c = g.input("c", &[n], DType::F32);
+            let d = g.input("d", &[n], DType::F32);
+            let m1 = g.mul(a, b);
+            let m2 = g.mul(c, d);
+            let s = g.add(m1, m2);
+            let t = g.add_op(Op::Tanh, &[s]);
+            g.mark_output(t);
+            let feeds = feeds_for(&g, rng);
+            (g, feeds)
+        },
+        |(g, feeds)| {
+            let plan = lp_fusion(g, &FusionConfig::default());
+            if plan.blocks.len() != 1 {
+                return Err(format!("expected 1 block, got {}", plan.blocks.len()));
+            }
+            let scheds = schedules_for(g, &plan.blocks[0]);
+            if scheds.len() != 2 {
+                return Err(format!("expected both schedules, got {scheds:?}"));
+            }
+            let mut outs = Vec::new();
+            for s in [Schedule::RowRecompute, Schedule::HoistedColMajor] {
+                let mut choice = HashMap::new();
+                choice.insert(plan.blocks[0].id, s);
+                outs.push(execute_plan(g, &plan, feeds, &choice));
+            }
+            assert_close(&outs[0][0].data, &outs[1][0].data, 1e-5, 1e-6)
+        },
+    );
+}
+
+#[test]
+fn p5_fusion_never_slower_in_cost_model() {
+    forall(
+        0xFEED,
+        40,
+        |rng| random_graph(rng),
+        |g| {
+            let fused = lp_fusion(g, &FusionConfig::default());
+            let unfused = lp_fusion(g, &FusionConfig::disabled());
+            for dev in [DeviceProfile::s865_cpu(), DeviceProfile::s865_gpu()] {
+                let lf = plan_latency(g, &fused, &dev);
+                let lu = plan_latency(g, &unfused, &dev);
+                if lf.total_s > lu.total_s * 1.0001 {
+                    return Err(format!(
+                        "{}: fused {:.3}ms > unfused {:.3}ms",
+                        dev.name,
+                        lf.ms(),
+                        lu.ms()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p6_tokenizer_roundtrip_on_corpus_words() {
+    use canao::tokenizer::{Tokenizer, Vocab};
+    let corpus = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/data/tiny_corpus.txt"),
+    )
+    .unwrap();
+    let tok = Tokenizer::new(Vocab::build(&corpus, 2048));
+    let words: Vec<String> = canao::tokenizer::pre_tokenize(&corpus);
+    forall(
+        0x70C,
+        100,
+        |rng| {
+            let k = 1 + rng.below(12);
+            (0..k).map(|_| rng.choose(&words).clone()).collect::<Vec<_>>().join(" ")
+        },
+        |text| {
+            let ids = tok.encode(text);
+            let decoded = tok.decode(&ids);
+            if decoded != *text {
+                return Err(format!("{text:?} -> {decoded:?}"));
+            }
+            Ok(())
+        },
+    );
+}

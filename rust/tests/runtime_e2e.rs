@@ -1,0 +1,201 @@
+//! End-to-end PJRT tests: load the AOT artifacts, execute, validate
+//! numerics and the full QA / text-gen / fine-tune paths.
+//!
+//! Requires `make artifacts` to have run (skips otherwise, so `cargo test`
+//! stays green in a fresh checkout).
+
+use std::sync::Arc;
+
+use canao::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use canao::serving::{GenEngine, GenRequest, QaEngine, QaRequest};
+use canao::tokenizer::{Tokenizer, Vocab};
+use canao::train;
+use canao::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn corpus_tokenizer() -> Arc<Tokenizer> {
+    let corpus = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/data/tiny_corpus.txt"),
+    )
+    .expect("corpus");
+    Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)))
+}
+
+/// The Fig. 4 micro artifact: out = a*b + broadcast(c*d). Checked against
+/// exact Rust arithmetic — proves HLO-text round-trip numerics.
+#[test]
+fn fused_add_micro_numerics() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let exe = rt.load("fused_add_micro").unwrap();
+
+    let (m, n) = (64, 96);
+    let mut rng = Rng::new(42);
+    let a: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let b: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let c: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let d: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    let out = exe
+        .run(
+            &[],
+            &[
+                lit_f32(&a, &[m, n]).unwrap(),
+                lit_f32(&b, &[m, n]).unwrap(),
+                lit_f32(&c, &[n]).unwrap(),
+                lit_f32(&d, &[n]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(got.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let expect = a[i * n + j] * b[i * n + j] + c[j] * d[j];
+            let g = got[i * n + j];
+            assert!((g - expect).abs() < 1e-5, "({i},{j}): {g} vs {expect}");
+        }
+    }
+}
+
+#[test]
+fn qa_forward_shapes_and_masking() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let exe = rt.load("qa_b1").unwrap();
+    let params = rt.load_params("qa").unwrap();
+    let seq = rt.manifest.models["qa"].cfg("seq");
+
+    let ids = vec![5i32; seq];
+    let tt = vec![0i32; seq];
+    let mut mask = vec![0.0f32; seq];
+    for m in mask.iter_mut().take(10) {
+        *m = 1.0;
+    }
+    let out = exe
+        .run(
+            &params,
+            &[
+                lit_i32(&ids, &[1, seq]).unwrap(),
+                lit_i32(&tt, &[1, seq]).unwrap(),
+                lit_f32(&mask, &[1, seq]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let start = to_vec_f32(&out[0]).unwrap();
+    let end = to_vec_f32(&out[1]).unwrap();
+    assert_eq!(start.len(), seq);
+    // Padded positions are forced to -1e9 by the QA head.
+    assert!(start[0].is_finite() && start[0] > -1e8);
+    assert!(start[20] < -1e8 && end[20] < -1e8);
+}
+
+#[test]
+fn qa_engine_answers_from_context() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let engine = QaEngine::new(&mut rt, corpus_tokenizer()).unwrap();
+    let reqs = vec![QaRequest {
+        question: "what reduces the kernels ?".into(),
+        context: "layer fusion reduces the number of kernels and the memory traffic .".into(),
+    }];
+    let resp = &engine.answer_batch(&reqs).unwrap()[0];
+    // Weights are random-init: the exact span is arbitrary, but it must be
+    // a legal span inside the context with decodable text.
+    assert!(resp.start_token <= resp.end_token);
+    assert!(resp.score.is_finite());
+    assert!(!resp.answer.is_empty());
+}
+
+#[test]
+fn qa_batch8_matches_single() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let engine = QaEngine::new(&mut rt, corpus_tokenizer()).unwrap();
+    let req = QaRequest {
+        question: "what loads the program ?".into(),
+        context: "the runtime loads the compiled program and executes it on the device .".into(),
+    };
+    let single = &engine.answer_batch(std::slice::from_ref(&req)).unwrap()[0];
+    let batch = engine.answer_batch(&vec![req.clone(); 8]).unwrap();
+    for b in &batch {
+        assert_eq!(b.start_token, single.start_token, "batch vs single span start");
+        assert_eq!(b.end_token, single.end_token);
+        assert!((b.score - single.score).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn textgen_produces_tokens() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let engine = GenEngine::new(&mut rt, corpus_tokenizer()).unwrap();
+    let resp = engine
+        .generate(&GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 5,
+            temperature: 0.0,
+            seed: 1,
+        })
+        .unwrap();
+    assert_eq!(resp.tokens_generated, 5);
+    assert_eq!(resp.per_token_ms.len(), 5);
+    assert!(!resp.text.is_empty());
+}
+
+#[test]
+fn textgen_greedy_is_deterministic() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let engine = GenEngine::new(&mut rt, corpus_tokenizer()).unwrap();
+    let req =
+        GenRequest { prompt: "the device".into(), max_new_tokens: 4, temperature: 0.0, seed: 1 };
+    let a = engine.generate(&req).unwrap();
+    let b = engine.generate(&GenRequest { seed: 99, ..req.clone() }).unwrap();
+    assert_eq!(a.text, b.text, "greedy decode must ignore the seed");
+}
+
+#[test]
+fn finetune_cls_loss_decreases() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let report = train::finetune_cls(&mut rt, 12, 0.05, 7).unwrap();
+    assert_eq!(report.steps, 12);
+    // First loss ~ ln(2) for a 2-class random-init head.
+    assert!((report.initial_loss - 0.693).abs() < 0.3, "{}", report.initial_loss);
+    assert!(report.improved(), "{} -> {}", report.initial_loss, report.final_loss);
+}
+
+#[test]
+fn train_lm_loss_decreases_on_corpus() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let tok = corpus_tokenizer();
+    let corpus = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/data/tiny_corpus.txt"),
+    )
+    .unwrap();
+    let ids: Vec<i32> = tok.encode(&corpus).iter().map(|&t| t as i32).collect();
+    let (_params, report) = train::train_lm(&mut rt, &ids, 10, 0.3, 3).unwrap();
+    // Initial loss near ln(vocab) for random init.
+    let vocab = rt.manifest.models["gen"].cfg("vocab") as f32;
+    assert!((report.initial_loss - vocab.ln()).abs() < 1.5, "{}", report.initial_loss);
+    assert!(report.improved(), "{} -> {}", report.initial_loss, report.final_loss);
+}
