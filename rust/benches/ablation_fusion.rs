@@ -61,11 +61,11 @@ fn main() {
     );
     let mut g = Group::with_target("host plan execution", Duration::from_millis(1200));
     let f = g.bench("fused", || {
-        black_box(fused.run(&feeds));
+        black_box(fused.run(&feeds).unwrap());
     });
     let f_med = f.median;
     let u = g.bench("unfused", || {
-        black_box(unfused.run(&feeds));
+        black_box(unfused.run(&feeds).unwrap());
     });
     println!(
         "  -> host-executor fused/unfused ratio: {:.2}x (see header note; \

@@ -1,39 +1,121 @@
-//! Bench: serving path through real PJRT executables — single-request
-//! latency (the paper's real-time claim), batch-8 amortization, dynamic-
-//! batcher throughput under load, and text-gen tokens/s.
+//! Bench: the serving path end to end.
 //!
-//! Requires artifacts; prints a notice and exits cleanly otherwise.
+//! Section 1 (always runs): the NATIVE backend — compiler-IR models on
+//! the wave-parallel arena executor — single-request latency vs thread
+//! count, dynamic-batcher throughput under concurrent load, and the
+//! arena planner's peak-memory win over per-node materialization.
 //!
-//! Run: make artifacts && cargo bench --bench serving_throughput
+//! Section 2 (needs `make artifacts`): the PJRT backend — single-request
+//! latency, batch-8 amortization, batcher throughput, and text-gen
+//! tokens/s through the real AOT executables.
+//!
+//! Run: cargo bench --bench serving_throughput
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use canao::model::BertConfig;
 use canao::runtime::Runtime;
 use canao::serving::batcher::{Batcher, BatcherOptions};
-use canao::serving::{GenEngine, GenRequest, QaEngine, QaRequest};
+use canao::serving::{GenEngine, GenRequest, NativeQaEngine, QaEngine, QaRequest};
 use canao::tokenizer::{Tokenizer, Vocab};
 use canao::util::bench::{bench, fmt_dur};
 
-fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("serving_throughput: artifacts missing — run `make artifacts` first. skipping.");
-        return Ok(());
+const FALLBACK_CORPUS: &str = "layer fusion reduces the number of kernels and the memory \
+    traffic . the runtime loads the compiled program and executes it on the device . \
+    the quick brown fox jumps over the lazy dog .";
+
+fn corpus_tokenizer() -> Arc<Tokenizer> {
+    let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")
+        .unwrap_or_else(|_| FALLBACK_CORPUS.to_string());
+    Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)))
+}
+
+fn demo_request() -> QaRequest {
+    QaRequest {
+        question: "what reduces the number of kernels ?".into(),
+        context: "layer fusion reduces the number of kernels and the memory traffic . \
+                  the runtime loads the compiled program and executes it on the device ."
+            .into(),
     }
-    let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")?;
-    let tok = Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)));
+}
+
+fn native_section(tok: Arc<Tokenizer>) {
+    println!("== native backend: wave-parallel arena executor ==");
+    let cfg = BertConfig { vocab: 2048, seq: 64, layers: 2, hidden: 128, heads: 4, inter: 512 };
+    let req = demo_request();
+
+    // Arena memory: the executor's footprint vs per-node materialization.
+    let probe = NativeQaEngine::new(Arc::clone(&tok), cfg, 1);
+    let stats = probe.exec_stats().expect("exec stats");
+    println!(
+        "arena: peak {:.2} MB vs per-node baseline {:.2} MB ({:.2}x smaller), \
+         slab {:.2} MB, {} waves (widest {})",
+        stats.peak_arena_bytes as f64 / 1e6,
+        stats.naive_bytes as f64 / 1e6,
+        stats.naive_bytes as f64 / stats.peak_arena_bytes.max(1) as f64,
+        stats.slab_bytes as f64 / 1e6,
+        stats.waves,
+        stats.max_wave_width,
+    );
+    assert!(
+        stats.peak_arena_bytes < stats.naive_bytes,
+        "arena peak must beat per-node materialization"
+    );
+
+    // Single-request latency vs executor thread count.
+    let mut t1_median = Duration::from_secs(0);
+    for threads in [1usize, 2, 4] {
+        let engine = NativeQaEngine::new(Arc::clone(&tok), cfg, threads);
+        let s = bench(
+            &format!("native_qa_t{threads}"),
+            Duration::from_millis(800),
+            || {
+                let _ = engine.answer(&req).unwrap();
+            },
+        );
+        if threads == 1 {
+            t1_median = s.median;
+        }
+        println!(
+            "native qa, {threads} thread(s): {} median ({:.2}x vs 1 thread)",
+            fmt_dur(s.median),
+            t1_median.as_secs_f64() / s.median.as_secs_f64().max(1e-12),
+        );
+    }
+
+    // Dynamic batcher under concurrent load, native model underneath.
+    let engine = NativeQaEngine::new(tok, cfg, 2);
+    let batcher = Arc::new(Batcher::new(
+        engine,
+        BatcherOptions { max_wait: Duration::from_millis(4), min_batch: 4 },
+    ));
+    let n = 64;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n).map(|_| batcher.submit(req.clone())).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed();
+    let mut m = batcher.metrics.lock().unwrap();
+    println!(
+        "native batched serving: {n} reqs in {} = {:.1} req/s (mean batch {:.1})",
+        fmt_dur(wall),
+        n as f64 / wall.as_secs_f64(),
+        m.mean_batch_size()
+    );
+    println!("                        {}", m.total_latency.summary());
+}
+
+fn pjrt_section(tok: Arc<Tokenizer>) -> anyhow::Result<()> {
+    println!("\n== pjrt backend: AOT artifacts ==");
+    let req = demo_request();
     let mut rt = Runtime::open("artifacts")?;
     println!("platform: {}", rt.platform());
 
     let mut engine = QaEngine::new(&mut rt, Arc::clone(&tok))?;
     engine.calibrate()?;
     println!("calibrated batch cap: {}", engine.batch_cap());
-    let req = QaRequest {
-        question: "what reduces the number of kernels ?".into(),
-        context: "layer fusion reduces the number of kernels and the memory traffic . \
-                  the runtime loads the compiled program and executes it on the device ."
-            .into(),
-    };
 
     // Single-request latency (the paper's per-inference number).
     let s1 = bench("qa_b1", Duration::from_secs(2), || {
@@ -90,5 +172,17 @@ fn main() -> anyhow::Result<()> {
         mean_ms,
         1e3 / mean_ms
     );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let tok = corpus_tokenizer();
+    native_section(Arc::clone(&tok));
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        pjrt_section(tok)?;
+    } else {
+        println!("\npjrt section skipped: artifacts missing — run `make artifacts` first.");
+    }
     Ok(())
 }

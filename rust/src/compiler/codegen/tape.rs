@@ -8,7 +8,7 @@
 //! per column (Fig. 4 `fuse_add'`), the row schedule recomputes them
 //! (Fig. 4 `fuse_add`).
 
-use crate::compiler::exec::tensor::Tensor;
+use crate::compiler::exec::tensor::{Tensor, View};
 use crate::compiler::fusion::FusedBlock;
 use crate::compiler::ir::{Graph, NodeId, Op, Shape};
 use crate::compiler::passes::const_fold::erf;
@@ -150,7 +150,7 @@ pub fn compile_block(g: &Graph, block: &FusedBlock) -> BlockTape {
 impl BlockTape {
     /// Evaluate the full tape at a flat set of per-input offsets.
     #[inline]
-    fn eval_at(&self, regs: &mut [f32], offsets: &[usize], bufs: &[&Tensor]) {
+    fn eval_at(&self, regs: &mut [f32], offsets: &[usize], bufs: &[View]) {
         for (i, inst) in self.insts.iter().enumerate() {
             regs[i] = match *inst {
                 TapeInst::Load { input } => bufs[input].data[offsets[input]],
@@ -161,36 +161,73 @@ impl BlockTape {
         }
     }
 
-    /// Execute under `sched`, producing one tensor per block output.
-    /// `bufs` must align with `self.inputs`.
+    /// Execute under `sched`, producing one owned tensor per block output
+    /// (compat surface for the tuner and benches). `bufs` must align with
+    /// `self.inputs`.
+    pub fn execute(&self, bufs: &[&Tensor], sched: Schedule) -> Vec<Tensor> {
+        let views: Vec<View> = bufs.iter().map(|t| t.view()).collect();
+        self.execute_views(&views, sched)
+    }
+
+    /// As `execute`, over borrowed views.
+    pub fn execute_views(&self, bufs: &[View], sched: Schedule) -> Vec<Tensor> {
+        let numel = self.domain.numel();
+        let mut storage: Vec<Vec<f32>> =
+            self.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
+        {
+            let mut outs: Vec<&mut [f32]> =
+                storage.iter_mut().map(|v| v.as_mut_slice()).collect();
+            self.execute_into(bufs, sched, &mut outs);
+        }
+        storage
+            .into_iter()
+            .map(|data| Tensor { shape: self.domain.clone(), data })
+            .collect()
+    }
+
+    /// Execute under `sched` into caller-owned output buffers (one full
+    /// `domain.numel()`-sized slice per block output, aligned with
+    /// `output_regs`) — the arena executor's entry point: outputs land
+    /// directly in their planned slab regions, no copies.
     ///
     /// Perf note (§Perf in EXPERIMENTS.md): 2-D domains take vectorized
     /// fast paths — one instruction-dispatch per tape register per ROW
     /// (row schedule) or per COLUMN (hoisted schedule) instead of per
     /// element, exactly what real codegen emits as SIMD loops. Memory
     /// access order (the schedules' defining property) is unchanged.
-    pub fn execute(&self, bufs: &[&Tensor], sched: Schedule) -> Vec<Tensor> {
+    pub fn execute_into(&self, bufs: &[View], sched: Schedule, outs: &mut [&mut [f32]]) {
         assert_eq!(bufs.len(), self.inputs.len());
+        assert_eq!(outs.len(), self.output_regs.len());
         if self.domain.rank() == 2 {
-            return match sched {
-                Schedule::RowRecompute => self.execute_rows_vectorized(bufs),
-                Schedule::HoistedColMajor => self.execute_cols_vectorized(bufs),
-            };
+            match sched {
+                Schedule::RowRecompute => {
+                    self.execute_rows_into(bufs, 0, self.domain.dims[0], outs)
+                }
+                Schedule::HoistedColMajor => self.execute_cols_into(bufs, outs),
+            }
+            return;
         }
-        self.execute_scalar(bufs, sched)
+        self.execute_scalar_into(bufs, sched, outs);
     }
 
-    /// Row schedule, vectorized: walk rows; evaluate each register across
-    /// the whole row (sequential access; broadcast rows re-read per row =
-    /// the fuse_add recompute semantics).
-    fn execute_rows_vectorized(&self, bufs: &[&Tensor]) -> Vec<Tensor> {
-        let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
-        let numel = m * n;
-        let mut outs: Vec<Vec<f32>> =
-            self.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
+    /// Row schedule, vectorized, over the row range `[row0, row1)`: walk
+    /// rows; evaluate each register across the whole row (sequential
+    /// access; broadcast rows re-read per row = the fuse_add recompute
+    /// semantics). `outs[oi]` covers exactly the requested rows (length
+    /// `(row1 - row0) * n`), which is what lets the wave executor split
+    /// one block's rows across threads with plain `split_at_mut`.
+    pub fn execute_rows_into(
+        &self,
+        bufs: &[View],
+        row0: usize,
+        row1: usize,
+        outs: &mut [&mut [f32]],
+    ) {
+        assert_eq!(self.domain.rank(), 2, "row execution needs a 2-D domain");
+        let n = self.domain.dims[1];
         let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; self.insts.len()];
 
-        for i in 0..m {
+        for i in row0..row1 {
             for (ri, inst) in self.insts.iter().enumerate() {
                 match *inst {
                     TapeInst::Load { input } => {
@@ -227,23 +264,18 @@ impl BlockTape {
                     }
                 }
             }
+            let base = (i - row0) * n;
             for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
-                outs[oi][i * n..(i + 1) * n].copy_from_slice(&regs[r]);
+                outs[oi][base..base + n].copy_from_slice(&regs[r]);
             }
         }
-        outs.into_iter()
-            .map(|data| Tensor { shape: self.domain.clone(), data })
-            .collect()
     }
 
     /// Hoisted schedule, vectorized: walk columns; row-invariant registers
     /// computed once per column (scalars), variant registers evaluated
     /// down the column (stride-n access = the fuse_add' locality cost).
-    fn execute_cols_vectorized(&self, bufs: &[&Tensor]) -> Vec<Tensor> {
+    fn execute_cols_into(&self, bufs: &[View], outs: &mut [&mut [f32]]) {
         let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
-        let numel = m * n;
-        let mut outs: Vec<Vec<f32>> =
-            self.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
         let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; m]; self.insts.len()];
         let mut hoisted = vec![0.0f32; self.insts.len()];
 
@@ -332,16 +364,11 @@ impl BlockTape {
                 }
             }
         }
-        outs.into_iter()
-            .map(|data| Tensor { shape: self.domain.clone(), data })
-            .collect()
     }
 
     /// Generic per-element path for non-2-D domains.
-    fn execute_scalar(&self, bufs: &[&Tensor], sched: Schedule) -> Vec<Tensor> {
+    fn execute_scalar_into(&self, bufs: &[View], sched: Schedule, outs: &mut [&mut [f32]]) {
         let numel = self.domain.numel();
-        let mut outs: Vec<Vec<f32>> =
-            self.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
         let mut regs = vec![0.0f32; self.insts.len()];
 
         match (sched, self.domain.rank()) {
@@ -417,10 +444,6 @@ impl BlockTape {
                 }
             }
         }
-
-        outs.into_iter()
-            .map(|data| Tensor { shape: self.domain.clone(), data })
-            .collect()
     }
 
     /// FLOPs per full execution under a schedule (compute ops only).

@@ -6,19 +6,46 @@
 
 use std::collections::HashMap;
 
-use super::tensor::{for_each_coord, Tensor};
-use crate::compiler::ir::{Graph, Op, Shape};
+use super::tensor::{for_each_coord, Tensor, View};
+use super::ExecError;
+use crate::compiler::ir::{Graph, Node, Op, Shape};
 use crate::compiler::passes::const_fold::erf;
+
+/// Fetch and validate a leaf's feed — shared by all three executors so
+/// malformed requests fail the same typed way everywhere.
+pub fn leaf_tensor(node: &Node, feeds: &HashMap<String, Vec<f32>>) -> Result<Tensor, ExecError> {
+    match &node.op {
+        Op::Input { name } | Op::Weight { name } => {
+            let data = feeds
+                .get(name)
+                .ok_or_else(|| ExecError::MissingFeed { name: name.clone() })?;
+            let expected = node.shape.numel();
+            if data.len() != expected {
+                return Err(ExecError::FeedShape {
+                    name: name.clone(),
+                    expected,
+                    got: data.len(),
+                });
+            }
+            Ok(Tensor { shape: node.shape.clone(), data: data.clone() })
+        }
+        Op::Const { value } => Ok(Tensor::scalar(*value)),
+        op => unreachable!("leaf_tensor on non-leaf {op:?}"),
+    }
+}
 
 /// Evaluate the graph on named feeds (inputs AND weights by name).
 /// Returns tensors for each graph output, in order.
-pub fn eval_graph(g: &Graph, feeds: &HashMap<String, Vec<f32>>) -> Vec<Tensor> {
+pub fn eval_graph(
+    g: &Graph,
+    feeds: &HashMap<String, Vec<f32>>,
+) -> Result<Vec<Tensor>, ExecError> {
     let mut vals: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
     for (id, _node) in g.nodes.iter().enumerate() {
-        let t = eval_node(g, id, &vals, feeds);
+        let t = eval_node(g, id, &vals, feeds)?;
         vals[id] = Some(t);
     }
-    g.outputs.iter().map(|&o| vals[o].clone().expect("evaluated")).collect()
+    Ok(g.outputs.iter().map(|&o| vals[o].clone().expect("evaluated")).collect())
 }
 
 fn eval_node(
@@ -26,31 +53,24 @@ fn eval_node(
     id: usize,
     vals: &[Option<Tensor>],
     feeds: &HashMap<String, Vec<f32>>,
-) -> Tensor {
+) -> Result<Tensor, ExecError> {
     let node = &g.nodes[id];
     match &node.op {
-        Op::Input { name } | Op::Weight { name } => {
-            let data = feeds
-                .get(name)
-                .unwrap_or_else(|| panic!("missing feed {name:?}"))
-                .clone();
-            Tensor::from_vec(&node.shape.dims, data)
-        }
-        Op::Const { value } => Tensor::scalar(*value),
+        Op::Input { .. } | Op::Weight { .. } | Op::Const { .. } => leaf_tensor(node, feeds),
         op => {
-            let args: Vec<&Tensor> = node
+            let args: Vec<View> = node
                 .inputs
                 .iter()
-                .map(|&i| vals[i].as_ref().expect("topo order"))
+                .map(|&i| vals[i].as_ref().expect("topo order").view())
                 .collect();
-            apply_op(op, &args, &node.shape)
+            Ok(apply_op(op, &args, &node.shape))
         }
     }
 }
 
-/// Evaluate one compute op on concrete tensors — shared by the graph
-/// interpreter and the plan executor's per-node fallback.
-pub fn apply_op(op: &Op, args: &[&Tensor], out_shape: &Shape) -> Tensor {
+/// Evaluate one compute op on concrete tensor views — shared by the graph
+/// interpreter and both plan executors' per-node fallback.
+pub fn apply_op(op: &Op, args: &[View], out_shape: &Shape) -> Tensor {
     let arg = |i: usize| args[i];
     match op {
         Op::Input { .. } | Op::Weight { .. } | Op::Const { .. } => {
@@ -69,18 +89,18 @@ pub fn apply_op(op: &Op, args: &[&Tensor], out_shape: &Shape) -> Tensor {
         Op::Max => map_binary(arg(0), arg(1), out_shape, f32::max),
         Op::MatMul => matmul(arg(0), arg(1), out_shape),
         Op::Transpose => transpose(arg(0)),
-        Op::Reshape { target } => Tensor::from_vec(target, arg(0).data.clone()),
+        Op::Reshape { target } => Tensor::from_vec(target, arg(0).data.to_vec()),
         Op::ReduceSum { axis } => reduce(arg(0), *axis, 0.0, |acc, x| acc + x),
         Op::ReduceMax { axis } => reduce(arg(0), *axis, f32::NEG_INFINITY, f32::max),
         Op::Gather => gather(arg(0), arg(1), out_shape),
     }
 }
 
-fn map_unary(t: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+fn map_unary(t: View, f: impl Fn(f32) -> f32) -> Tensor {
     Tensor { shape: t.shape.clone(), data: t.data.iter().map(|&x| f(x)).collect() }
 }
 
-fn map_binary(a: &Tensor, b: &Tensor, out_shape: &Shape, f: impl Fn(f32, f32) -> f32) -> Tensor {
+fn map_binary(a: View, b: View, out_shape: &Shape, f: impl Fn(f32, f32) -> f32) -> Tensor {
     let ra = a.bcast_reader(out_shape);
     let rb = b.bcast_reader(out_shape);
     let mut out = Vec::with_capacity(out_shape.numel());
@@ -88,7 +108,7 @@ fn map_binary(a: &Tensor, b: &Tensor, out_shape: &Shape, f: impl Fn(f32, f32) ->
     Tensor { shape: out_shape.clone(), data: out }
 }
 
-fn matmul(a: &Tensor, b: &Tensor, out_shape: &Shape) -> Tensor {
+fn matmul(a: View, b: View, out_shape: &Shape) -> Tensor {
     let ar = a.shape.rank();
     let br = b.shape.rank();
     let (m, k) = (a.shape.dims[ar - 2], a.shape.dims[ar - 1]);
@@ -136,7 +156,7 @@ fn matmul(a: &Tensor, b: &Tensor, out_shape: &Shape) -> Tensor {
     Tensor { shape: out_shape.clone(), data: out }
 }
 
-fn transpose(a: &Tensor) -> Tensor {
+fn transpose(a: View) -> Tensor {
     let r = a.shape.rank();
     let mut dims = a.shape.dims.clone();
     dims.swap(r - 2, r - 1);
@@ -154,7 +174,7 @@ fn transpose(a: &Tensor) -> Tensor {
     Tensor { shape: Shape { dims }, data: out }
 }
 
-fn reduce(a: &Tensor, axis: usize, init: f32, f: impl Fn(f32, f32) -> f32) -> Tensor {
+fn reduce(a: View, axis: usize, init: f32, f: impl Fn(f32, f32) -> f32) -> Tensor {
     let mut dims = a.shape.dims.clone();
     let extent = dims[axis];
     dims[axis] = 1;
@@ -174,11 +194,11 @@ fn reduce(a: &Tensor, axis: usize, init: f32, f: impl Fn(f32, f32) -> f32) -> Te
     Tensor { shape: out_shape, data: out }
 }
 
-fn gather(table: &Tensor, ids: &Tensor, out_shape: &Shape) -> Tensor {
+fn gather(table: View, ids: View, out_shape: &Shape) -> Tensor {
     let h = table.shape.dims[1];
     let v = table.shape.dims[0];
     let mut out = Vec::with_capacity(out_shape.numel());
-    for &idf in &ids.data {
+    for &idf in ids.data {
         let idx = (idf as usize).min(v - 1);
         out.extend_from_slice(&table.data[idx * h..(idx + 1) * h]);
     }
@@ -204,8 +224,36 @@ mod tests {
         let out = eval_graph(
             &g,
             &feeds(&[("a", vec![1., 2., 3., 4., 5., 6.]), ("b", vec![10., 20., 30.])]),
-        );
+        )
+        .unwrap();
         assert_eq!(out[0].data, vec![11., 22., 33., 14., 25., 36.]);
+    }
+
+    #[test]
+    fn missing_feed_is_typed_error() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2], DType::F32);
+        let b = g.input("b", &[2], DType::F32);
+        let o = g.add(a, b);
+        g.mark_output(o);
+        let err = eval_graph(&g, &feeds(&[("a", vec![1., 2.])])).unwrap_err();
+        assert_eq!(err, crate::compiler::exec::ExecError::MissingFeed { name: "b".into() });
+    }
+
+    #[test]
+    fn wrong_length_feed_is_typed_error() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        g.mark_output(a);
+        let err = eval_graph(&g, &feeds(&[("a", vec![1., 2.])])).unwrap_err();
+        assert_eq!(
+            err,
+            crate::compiler::exec::ExecError::FeedShape {
+                name: "a".into(),
+                expected: 4,
+                got: 2
+            }
+        );
     }
 
     #[test]
@@ -218,7 +266,8 @@ mod tests {
         let out = eval_graph(
             &g,
             &feeds(&[("a", vec![1., 2., 3., 4.]), ("b", vec![1., 1., 1., 1.])]),
-        );
+        )
+        .unwrap();
         assert_eq!(out[0].data, vec![3., 3., 7., 7.]);
     }
 
@@ -232,7 +281,7 @@ mod tests {
         g.mark_output(o);
         let av: Vec<f32> = (0..12).map(|x| x as f32).collect();
         let bv = vec![1., 0., 0., 1., 1., 1.];
-        let out = eval_graph(&g, &feeds(&[("a", av), ("b", bv)]));
+        let out = eval_graph(&g, &feeds(&[("a", av), ("b", bv)])).unwrap();
         // row [0,1,2] @ b = [0*1+1*0+2*1, 0*0+1*1+2*1] = [2, 3]
         assert_eq!(out[0].shape.dims, vec![2, 2, 2]);
         assert_eq!(&out[0].data[..2], &[2., 3.]);
@@ -244,7 +293,8 @@ mod tests {
         let x = g.input("x", &[2, 4], DType::F32);
         let s = g.softmax(x, 1);
         g.mark_output(s);
-        let out = eval_graph(&g, &feeds(&[("x", vec![1., 2., 3., 4., -1., 0., 1., 2.])]));
+        let out =
+            eval_graph(&g, &feeds(&[("x", vec![1., 2., 3., 4., -1., 0., 1., 2.])])).unwrap();
         for row in 0..2 {
             let s: f32 = out[0].data[row * 4..row * 4 + 4].iter().sum();
             assert!((s - 1.0).abs() < 1e-5);
@@ -263,7 +313,8 @@ mod tests {
         let out = eval_graph(
             &g,
             &feeds(&[("x", xv), ("g", vec![1.0; 8]), ("b", vec![0.0; 8])]),
-        );
+        )
+        .unwrap();
         for row in 0..2 {
             let r = &out[0].data[row * 8..row * 8 + 8];
             let mean: f32 = r.iter().sum::<f32>() / 8.0;
@@ -280,7 +331,7 @@ mod tests {
         let t = g.add_op(Op::Transpose, &[a]);
         let r = g.add_op(Op::ReduceSum { axis: 1 }, &[t]);
         g.mark_output(r);
-        let out = eval_graph(&g, &feeds(&[("a", vec![1., 2., 3., 4., 5., 6.])]));
+        let out = eval_graph(&g, &feeds(&[("a", vec![1., 2., 3., 4., 5., 6.])])).unwrap();
         // t = [[1,4],[2,5],[3,6]]; sum rows = [5,7,9]
         assert_eq!(out[0].shape.dims, vec![3, 1]);
         assert_eq!(out[0].data, vec![5., 7., 9.]);
@@ -296,7 +347,8 @@ mod tests {
         let out = eval_graph(
             &g,
             &feeds(&[("emb", vec![0., 0., 1., 1., 2., 2.]), ("ids", vec![2., 0.])]),
-        );
+        )
+        .unwrap();
         assert_eq!(out[0].data, vec![2., 2., 0., 0.]);
     }
 
@@ -306,7 +358,7 @@ mod tests {
         let x = g.input("x", &[3], DType::F32);
         let o = g.gelu(x);
         g.mark_output(o);
-        let out = eval_graph(&g, &feeds(&[("x", vec![0.0, 1.0, -1.0])]));
+        let out = eval_graph(&g, &feeds(&[("x", vec![0.0, 1.0, -1.0])])).unwrap();
         // gelu(0)=0, gelu(1)≈0.8413, gelu(-1)≈-0.1587
         assert!(out[0].data[0].abs() < 1e-6);
         assert!((out[0].data[1] - 0.8413).abs() < 1e-3);

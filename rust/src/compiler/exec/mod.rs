@@ -1,13 +1,67 @@
-//! Execution of compiled graphs (S5b): the reference node-by-node
-//! interpreter (`interp`) and the fused-plan executor (`plan`).
+//! Execution of compiled graphs (S5b).
 //!
-//! The interpreter is the semantic oracle: every fusion/codegen decision is
-//! validated against it (unit, integration, and property tests). The plan
-//! executor runs the LP-Fused blocks through native kernels and is what the
-//! autotuner times.
+//! Three executors share one kernel library:
+//!
+//! * [`interp`] — the reference node-by-node interpreter, the semantic
+//!   oracle every fusion/codegen decision is validated against (unit,
+//!   integration, and property tests). Materializes every intermediate.
+//! * [`plan`] — the sequential fused-plan executor: runs LP-Fused blocks
+//!   through the compiled tape / native reduction kernels, holding values
+//!   in a per-node map. Simple, and the baseline the parallel executor is
+//!   differential-tested against.
+//! * [`parallel`] — the production host executor. Two subsystems:
+//!
+//!   1. **Wave scheduler** ([`parallel::block_waves`]): the block DAG is
+//!      partitioned into dependency levels ("waves"); all blocks of a wave
+//!      are independent and run concurrently on scoped threads. A wave
+//!      with a single wide 2-D elementwise block is instead split by rows
+//!      across threads (intra-block parallelism through the tape).
+//!   2. **Arena planner** ([`arena::plan_arena`]): per-tensor liveness is
+//!      computed over the wave schedule and every materialized value is
+//!      assigned an offset in one shared slab ([`crate::util::pool::Slab`])
+//!      by first-fit interval allocation. Buffers are reused as soon as
+//!      their last reader's wave has completed, so peak memory is the max
+//!      *live* set — not the sum of all intermediates, which is the
+//!      paper's fusion memory win carried through to the executor.
+//!
+//! Bad feeds are typed errors ([`ExecError`]), not panics, so the serving
+//! layer can reject malformed requests instead of dying.
+//!
+//! Correctness contract (property-tested in `tests/exec_differential.rs`):
+//! for every graph, fusion config, schedule choice, and thread count,
+//! all three executors produce the same outputs.
 
+pub mod arena;
 pub mod interp;
+pub mod parallel;
 pub mod plan;
 pub mod tensor;
 
-pub use tensor::Tensor;
+pub use parallel::{execute_plan_parallel, execute_plan_parallel_stats, ExecStats};
+pub use tensor::{Tensor, View};
+
+use std::fmt;
+
+/// Typed executor failure: everything a *caller* can get wrong. Internal
+/// invariant violations still panic (they are compiler bugs, not inputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// A graph `Input`/`Weight` has no entry in the feed map.
+    MissingFeed { name: String },
+    /// A feed exists but its length does not match the leaf's shape.
+    FeedShape { name: String, expected: usize, got: usize },
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::MissingFeed { name } => write!(f, "missing feed {name:?}"),
+            ExecError::FeedShape { name, expected, got } => write!(
+                f,
+                "feed {name:?} has {got} elements, shape needs {expected}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}

@@ -1,0 +1,546 @@
+//! Wave-scheduled parallel executor with arena-planned buffers — the
+//! production host execution path.
+//!
+//! The `FusionPlan`'s block DAG is partitioned into dependency levels
+//! ("waves", [`block_waves`]): every block of wave `w` depends only on
+//! blocks of waves `< w`, so a wave's blocks run concurrently on scoped
+//! threads. Between waves there is a barrier (the `thread::scope` join),
+//! which is also what makes the arena's wave-granular liveness sound.
+//!
+//! All materialized values live in one flat [`Slab`] at offsets chosen by
+//! the arena planner ([`super::arena`]); kernels read inputs as [`View`]s
+//! of earlier waves' regions and write outputs straight into their own
+//! regions — no per-node allocation, no result copies (except the
+//! per-node fallback, which computes into scratch first).
+//!
+//! A wave consisting of a single wide 2-D elementwise block does not have
+//! to run on one core: the row-recompute schedule evaluates rows
+//! independently, so the executor splits the block's rows across threads
+//! ([`Schedule::row_parallelizable`]) and hands each thread a disjoint
+//! `split_at_mut` chunk of the output regions.
+//!
+//! Numerics are bitwise-identical to the sequential [`super::plan`]
+//! executor: both run the same tapes and the same native kernels in the
+//! same per-element order (asserted by `tests/exec_differential.rs`).
+
+use std::collections::HashMap;
+
+use super::arena::{plan_arena, ArenaPlan};
+use super::interp::{apply_op, leaf_tensor};
+use super::plan::{
+    layernorm_rows, match_layernorm, match_softmax, row_split, softmax_rows,
+    LayernormPattern, ScheduleChoices, SoftmaxPattern,
+};
+use super::tensor::{Tensor, View};
+use super::ExecError;
+use crate::compiler::codegen::tape::{compile_block, BlockTape};
+use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
+use crate::compiler::ir::{Graph, NodeId};
+use crate::compiler::poly::{block_output_shape, Schedule};
+use crate::util::pool::{SharedSlab, Slab};
+
+/// Below this many output elements a wave runs inline: thread spawn costs
+/// more than the compute it would hide.
+const PAR_MIN_WAVE_ELEMS: usize = 2048;
+/// Minimum rows per thread before a single block is row-split.
+const PAR_MIN_ROWS_PER_THREAD: usize = 4;
+
+/// What one execution observed — surfaced so benches and serving can
+/// report the arena memory win and the schedule shape.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecStats {
+    pub waves: usize,
+    pub max_wave_width: usize,
+    /// Max simultaneously-live bytes under arena planning.
+    pub peak_arena_bytes: usize,
+    /// Bytes the per-node materialization baseline holds (every block
+    /// output resident at once — the old `HashMap<NodeId, Tensor>` model).
+    pub naive_bytes: usize,
+    /// Actual slab allocation (>= peak; first-fit fragmentation).
+    pub slab_bytes: usize,
+    pub threads: usize,
+}
+
+/// Partition the plan's blocks into dependency levels. `waves[w]` holds
+/// indices into `plan.blocks`; every input of a wave-`w` block is a leaf
+/// or an output of a block in some wave `< w`.
+pub fn block_waves(plan: &FusionPlan) -> Vec<Vec<usize>> {
+    let n = plan.blocks.len();
+    let mut level = vec![0usize; n];
+    for (bi, block) in plan.blocks.iter().enumerate() {
+        let mut l = 0usize;
+        for &inp in &block.inputs {
+            if let Some(&src) = plan.block_of.get(&inp) {
+                if src != bi {
+                    // Blocks are topologically ordered, so src < bi and
+                    // level[src] is final.
+                    l = l.max(level[src] + 1);
+                }
+            }
+        }
+        level[bi] = l;
+    }
+    let depth = level.iter().copied().max().map_or(0, |m| m + 1);
+    let mut waves = vec![Vec::new(); depth];
+    for (bi, &l) in level.iter().enumerate() {
+        waves[l].push(bi);
+    }
+    waves
+}
+
+/// Execute the plan on `threads` worker threads (1 = sequential wave
+/// order, same numerics). See module docs.
+pub fn execute_plan_parallel(
+    g: &Graph,
+    plan: &FusionPlan,
+    feeds: &HashMap<String, Vec<f32>>,
+    schedules: &ScheduleChoices,
+    threads: usize,
+) -> Result<Vec<Tensor>, ExecError> {
+    execute_plan_parallel_stats(g, plan, feeds, schedules, threads).map(|(t, _)| t)
+}
+
+/// As [`execute_plan_parallel`], also returning schedule/memory stats.
+pub fn execute_plan_parallel_stats(
+    g: &Graph,
+    plan: &FusionPlan,
+    feeds: &HashMap<String, Vec<f32>>,
+    schedules: &ScheduleChoices,
+    threads: usize,
+) -> Result<(Vec<Tensor>, ExecStats), ExecError> {
+    let threads = threads.max(1);
+
+    // Validate + materialize leaves up front: a malformed request fails
+    // here, typed, before any thread is spawned.
+    let mut leaf: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for (id, node) in g.nodes.iter().enumerate() {
+        if node.op.is_leaf() {
+            leaf[id] = Some(leaf_tensor(node, feeds)?);
+        }
+    }
+
+    let waves = block_waves(plan);
+    let arena = plan_arena(g, plan, &waves);
+    let kernels: Vec<Kernel> = plan.blocks.iter().map(|b| prepare_kernel(g, b)).collect();
+    let stats = ExecStats {
+        waves: waves.len(),
+        max_wave_width: waves.iter().map(|w| w.len()).max().unwrap_or(0),
+        peak_arena_bytes: arena.peak_bytes(),
+        naive_bytes: arena.naive_bytes(),
+        slab_bytes: arena.slab_bytes(),
+        threads,
+    };
+
+    let mut slab = Slab::new(arena.slab_len);
+    let shared = slab.shared();
+
+    for wave in &waves {
+        let wave_elems: usize = wave
+            .iter()
+            .flat_map(|&bi| plan.blocks[bi].outputs.iter())
+            .map(|&o| g.nodes[o].shape.numel())
+            .sum();
+        let par = threads > 1 && wave_elems >= PAR_MIN_WAVE_ELEMS;
+
+        if par && wave.len() == 1 {
+            let bi = wave[0];
+            let sched = sched_of(schedules, plan, bi);
+            if row_parallel(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, &arena, threads)
+            {
+                continue;
+            }
+        }
+
+        if !par || wave.len() == 1 {
+            for &bi in wave {
+                let sched = sched_of(schedules, plan, bi);
+                run_block(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, &arena);
+            }
+        } else {
+            let nt = threads.min(wave.len());
+            let (leaf_ref, arena_ref, kernels_ref) = (&leaf, &arena, &kernels);
+            std::thread::scope(|scope| {
+                for t in 0..nt {
+                    let blocks: Vec<usize> = wave.iter().copied().skip(t).step_by(nt).collect();
+                    scope.spawn(move || {
+                        for bi in blocks {
+                            let sched = sched_of(schedules, plan, bi);
+                            run_block(
+                                g,
+                                &plan.blocks[bi],
+                                &kernels_ref[bi],
+                                sched,
+                                leaf_ref,
+                                shared,
+                                arena_ref,
+                            );
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    let outputs = g
+        .outputs
+        .iter()
+        .map(|&o| {
+            if let Some(t) = &leaf[o] {
+                return t.clone();
+            }
+            let r = arena.regions[&o];
+            // SAFETY: every writer joined at its wave barrier; graph
+            // outputs are never freed, so the region still holds `o`.
+            let data = unsafe { shared.read(r.offset, r.len) }.to_vec();
+            Tensor { shape: g.nodes[o].shape.clone(), data }
+        })
+        .collect();
+    Ok((outputs, stats))
+}
+
+fn sched_of(schedules: &ScheduleChoices, plan: &FusionPlan, bi: usize) -> Schedule {
+    schedules
+        .get(&plan.blocks[bi].id)
+        .copied()
+        .unwrap_or(Schedule::RowRecompute)
+}
+
+/// Per-block dispatch, resolved once before execution so worker threads
+/// never re-derive patterns or recompile tapes.
+enum Kernel {
+    Tape(BlockTape),
+    Softmax(SoftmaxPattern),
+    Layernorm(LayernormPattern),
+    Fallback,
+}
+
+fn prepare_kernel(g: &Graph, block: &FusedBlock) -> Kernel {
+    match block.kind {
+        BlockKind::ElementwiseChain | BlockKind::BroadcastElementwise => {
+            // Same multi-output broadcast-shape caveat as the sequential
+            // executor: the tape writes every output over the full domain.
+            let domain = block_output_shape(g, block);
+            if block.outputs.iter().any(|&o| g.nodes[o].shape != domain) {
+                return Kernel::Fallback;
+            }
+            Kernel::Tape(compile_block(g, block))
+        }
+        BlockKind::Reduction => {
+            if let Some(p) = match_softmax(g, block) {
+                return Kernel::Softmax(p);
+            }
+            if let Some(p) = match_layernorm(g, block) {
+                return Kernel::Layernorm(p);
+            }
+            Kernel::Fallback
+        }
+        _ => Kernel::Fallback,
+    }
+}
+
+/// Read a value: leaves from the feed tensors, everything else from its
+/// arena region.
+fn value_view<'a>(
+    g: &'a Graph,
+    nid: NodeId,
+    leaf: &'a [Option<Tensor>],
+    slab: SharedSlab<'a>,
+    arena: &'a ArenaPlan,
+) -> View<'a> {
+    if let Some(t) = &leaf[nid] {
+        return t.view();
+    }
+    let r = arena.regions[&nid];
+    // SAFETY: `nid` was produced in an earlier wave (the wave barrier
+    // ordered that write before this read) and its region is not reused
+    // while it is still live — the arena plan's no-overlap guarantee.
+    View { shape: &g.nodes[nid].shape, data: unsafe { slab.read(r.offset, r.len) } }
+}
+
+fn out_region<'a>(slab: SharedSlab<'a>, arena: &ArenaPlan, nid: NodeId) -> &'a mut [f32] {
+    let r = arena.regions[&nid];
+    // SAFETY: this value is born in the current wave; the planner gives
+    // same-wave values disjoint regions and never hands a live region to
+    // a reader, so this write aliases nothing.
+    unsafe { slab.write(r.offset, r.len) }
+}
+
+fn run_block(
+    g: &Graph,
+    block: &FusedBlock,
+    kernel: &Kernel,
+    sched: Schedule,
+    leaf: &[Option<Tensor>],
+    slab: SharedSlab<'_>,
+    arena: &ArenaPlan,
+) {
+    match kernel {
+        Kernel::Tape(tape) => {
+            let bufs: Vec<View> = tape
+                .inputs
+                .iter()
+                .map(|&i| value_view(g, i, leaf, slab, arena))
+                .collect();
+            let mut outs: Vec<&mut [f32]> = block
+                .outputs
+                .iter()
+                .map(|&o| out_region(slab, arena, o))
+                .collect();
+            tape.execute_into(&bufs, sched, &mut outs);
+        }
+        Kernel::Softmax(p) => {
+            let x = value_view(g, p.x, leaf, slab, arena);
+            let (rows, cols) = row_split(&g.nodes[p.out].shape);
+            softmax_rows(x.data, rows, cols, out_region(slab, arena, p.out));
+        }
+        Kernel::Layernorm(p) => {
+            let x = value_view(g, p.x, leaf, slab, arena);
+            let ga = value_view(g, p.gamma, leaf, slab, arena);
+            let be = value_view(g, p.beta, leaf, slab, arena);
+            let (rows, cols) = row_split(&g.nodes[p.out].shape);
+            layernorm_rows(
+                x.data,
+                ga.data,
+                be.data,
+                p.eps,
+                rows,
+                cols,
+                out_region(slab, arena, p.out),
+            );
+        }
+        Kernel::Fallback => {
+            // Per-node execution with block-local scratch; only the block
+            // outputs are copied into their regions.
+            let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
+            for &n in &block.nodes {
+                let node = &g.nodes[n];
+                let t = {
+                    let args: Vec<View> = node
+                        .inputs
+                        .iter()
+                        .map(|&i| match scratch.get(&i) {
+                            Some(s) => s.view(),
+                            None => value_view(g, i, leaf, slab, arena),
+                        })
+                        .collect();
+                    apply_op(&node.op, &args, &node.shape)
+                };
+                scratch.insert(n, t);
+            }
+            for &o in &block.outputs {
+                out_region(slab, arena, o).copy_from_slice(&scratch[&o].data);
+            }
+        }
+    }
+}
+
+/// Split a lone 2-D elementwise block's rows across threads. Returns
+/// false (nothing executed) when the kernel/schedule/shape doesn't allow
+/// row splitting — the caller then falls back to whole-block execution.
+#[allow(clippy::too_many_arguments)]
+fn row_parallel(
+    g: &Graph,
+    block: &FusedBlock,
+    kernel: &Kernel,
+    sched: Schedule,
+    leaf: &[Option<Tensor>],
+    slab: SharedSlab<'_>,
+    arena: &ArenaPlan,
+    threads: usize,
+) -> bool {
+    let tape = match kernel {
+        Kernel::Tape(t) => t,
+        _ => return false,
+    };
+    if !sched.row_parallelizable() || tape.domain.rank() != 2 {
+        return false;
+    }
+    let (m, n) = (tape.domain.dims[0], tape.domain.dims[1]);
+    let nt = threads.min(m / PAR_MIN_ROWS_PER_THREAD);
+    if nt < 2 {
+        return false;
+    }
+
+    let bufs: Vec<View> = tape
+        .inputs
+        .iter()
+        .map(|&i| value_view(g, i, leaf, slab, arena))
+        .collect();
+    let mut rest: Vec<&mut [f32]> = block
+        .outputs
+        .iter()
+        .map(|&o| out_region(slab, arena, o))
+        .collect();
+
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let bufs = &bufs;
+        let mut row0 = 0usize;
+        while row0 < m {
+            let row1 = (row0 + chunk).min(m);
+            let take = (row1 - row0) * n;
+            let cur = std::mem::take(&mut rest);
+            let mut mine = Vec::with_capacity(cur.len());
+            let mut next = Vec::with_capacity(cur.len());
+            for out in cur {
+                let (head, tail) = out.split_at_mut(take);
+                mine.push(head);
+                next.push(tail);
+            }
+            rest = next;
+            scope.spawn(move || {
+                let mut mine = mine;
+                tape.execute_rows_into(bufs, row0, row1, &mut mine);
+            });
+            row0 = row1;
+        }
+    });
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::exec::interp::eval_graph;
+    use crate::compiler::exec::plan::execute_plan;
+    use crate::compiler::fusion::{lp_fusion, FusionConfig};
+    use crate::compiler::ir::{DType, Graph, Op};
+    use crate::util::check::assert_close;
+    use crate::util::rng::Rng;
+
+    fn feeds_for(g: &Graph, seed: u64) -> HashMap<String, Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut feeds = HashMap::new();
+        for node in &g.nodes {
+            if let Op::Input { name } | Op::Weight { name } = &node.op {
+                feeds.insert(
+                    name.clone(),
+                    (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                );
+            }
+        }
+        feeds
+    }
+
+    fn wide_graph(m: usize, n: usize) -> Graph {
+        // Two independent chains joined at the end: 2 blocks in one wave.
+        let mut g = Graph::new();
+        let a = g.input("a", &[m, n], DType::F32);
+        let b = g.input("b", &[m, n], DType::F32);
+        let t1 = g.add_op(Op::Transpose, &[a]); // blocks its own fusion
+        let c1 = g.add_op(Op::Tanh, &[t1]);
+        let t2 = g.add_op(Op::Transpose, &[b]);
+        let c2 = g.add_op(Op::Exp, &[t2]);
+        let o = g.add(c1, c2);
+        g.mark_output(o);
+        g
+    }
+
+    #[test]
+    fn waves_respect_dependencies() {
+        let g = wide_graph(8, 8);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let waves = block_waves(&plan);
+        let mut wave_of = vec![0usize; plan.blocks.len()];
+        for (w, bs) in waves.iter().enumerate() {
+            for &b in bs {
+                wave_of[b] = w;
+            }
+        }
+        for (bi, block) in plan.blocks.iter().enumerate() {
+            for &i in &block.inputs {
+                if let Some(&src) = plan.block_of.get(&i) {
+                    assert!(
+                        wave_of[src] < wave_of[bi],
+                        "block {bi} (wave {}) reads block {src} (wave {})",
+                        wave_of[bi],
+                        wave_of[src]
+                    );
+                }
+            }
+        }
+        // The two independent chains must share a wave somewhere.
+        assert!(waves.iter().any(|w| w.len() >= 2), "{waves:?}");
+    }
+
+    #[test]
+    fn parallel_matches_sequential_and_interp() {
+        let g = wide_graph(32, 48);
+        let feeds = feeds_for(&g, 3);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let expect = eval_graph(&g, &feeds).unwrap();
+        let seq = execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap();
+        for threads in [1, 2, 4] {
+            let got =
+                execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), threads).unwrap();
+            assert_eq!(got.len(), expect.len());
+            for (gt, st) in got.iter().zip(&seq) {
+                assert_eq!(gt.data, st.data, "parallel != sequential at {threads} threads");
+            }
+            for (gt, et) in got.iter().zip(&expect) {
+                assert_close(&gt.data, &et.data, 1e-4, 1e-5).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn row_parallel_single_block_matches() {
+        // One big fused elementwise block: exercises the row-split path
+        // (m = 512 rows >> threads).
+        let mut g = Graph::new();
+        let a = g.input("a", &[512, 16], DType::F32);
+        let b = g.input("b", &[16], DType::F32);
+        let x = g.add(a, b);
+        let y = g.add_op(Op::Tanh, &[x]);
+        g.mark_output(y);
+        let feeds = feeds_for(&g, 7);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        let seq = execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap();
+        for threads in [2, 4] {
+            let got =
+                execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), threads).unwrap();
+            assert_eq!(got[0].data, seq[0].data);
+        }
+    }
+
+    #[test]
+    fn stats_report_arena_win() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[64, 64], DType::F32);
+        let mut x = g.add_op(Op::Transpose, &[a]);
+        for _ in 0..6 {
+            x = g.add_op(Op::Transpose, &[x]); // unfusable chain
+        }
+        g.mark_output(x);
+        let feeds = feeds_for(&g, 9);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let (_, stats) =
+            execute_plan_parallel_stats(&g, &plan, &feeds, &HashMap::new(), 2).unwrap();
+        assert_eq!(stats.waves, 7);
+        assert!(stats.peak_arena_bytes < stats.naive_bytes);
+        assert!(stats.slab_bytes >= stats.peak_arena_bytes);
+    }
+
+    #[test]
+    fn leaf_output_and_errors() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let o = g.add(a, b);
+        g.mark_output(a); // leaf as graph output
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+
+        let mut feeds = HashMap::new();
+        feeds.insert("a".to_string(), vec![1.0; 4]);
+        let err =
+            execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), 2).unwrap_err();
+        assert_eq!(err, ExecError::MissingFeed { name: "b".into() });
+
+        feeds.insert("b".to_string(), vec![2.0; 4]);
+        let out = execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), 2).unwrap();
+        assert_eq!(out[0].data, vec![1.0; 4]);
+        assert_eq!(out[1].data, vec![3.0; 4]);
+    }
+}

@@ -1,22 +1,28 @@
-//! Fused-plan executor: runs a `FusionPlan` block by block.
+//! Sequential fused-plan executor: runs a `FusionPlan` block by block,
+//! holding every materialized value in a per-node map.
 //!
 //! Dispatch per block kind:
 //! * Elementwise blocks -> compiled `BlockTape` under the (auto-tuned or
 //!   given) Fig. 4 schedule — one pass over memory instead of one per op.
-//! * Reduction blocks matching softmax / layernorm -> native kernels.
+//! * Reduction blocks matching softmax / layernorm -> native kernels
+//!   (pattern matchers and row kernels live here and are shared with the
+//!   wave-parallel executor).
 //! * Everything else -> per-node fallback via `interp::apply_op`
-//!   (always correct; the perf-critical inference path runs on PJRT).
+//!   (always correct; the perf-critical inference path runs on
+//!   `exec::parallel` or PJRT).
 //!
-//! Correctness contract (tested): for every graph and every config,
-//! `execute_plan` output == `interp::eval_graph` output.
+//! Correctness contract (tested, incl. `tests/exec_differential.rs`): for
+//! every graph and every config, `execute_plan` output ==
+//! `interp::eval_graph` output == `parallel::execute_plan_parallel` output.
 
 use std::collections::HashMap;
 
-use super::interp::apply_op;
-use super::tensor::Tensor;
+use super::interp::{apply_op, leaf_tensor};
+use super::tensor::{Tensor, View};
+use super::ExecError;
 use crate::compiler::codegen::tape::compile_block;
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
-use crate::compiler::ir::{Graph, NodeId, Op};
+use crate::compiler::ir::{Graph, NodeId, Op, Shape};
 use crate::compiler::poly::Schedule;
 
 /// Per-block schedule choices (from the autotuner); defaults to
@@ -28,23 +34,13 @@ pub fn execute_plan(
     plan: &FusionPlan,
     feeds: &HashMap<String, Vec<f32>>,
     schedules: &ScheduleChoices,
-) -> Vec<Tensor> {
+) -> Result<Vec<Tensor>, ExecError> {
     let mut vals: HashMap<NodeId, Tensor> = HashMap::new();
 
     // Materialize leaves.
     for (id, node) in g.nodes.iter().enumerate() {
-        match &node.op {
-            Op::Input { name } | Op::Weight { name } => {
-                let data = feeds
-                    .get(name)
-                    .unwrap_or_else(|| panic!("missing feed {name:?}"))
-                    .clone();
-                vals.insert(id, Tensor::from_vec(&node.shape.dims, data));
-            }
-            Op::Const { value } => {
-                vals.insert(id, Tensor::scalar(*value));
-            }
-            _ => {}
+        if node.op.is_leaf() {
+            vals.insert(id, leaf_tensor(node, feeds)?);
         }
     }
 
@@ -53,7 +49,7 @@ pub fn execute_plan(
         execute_block(g, block, sched, &mut vals);
     }
 
-    g.outputs.iter().map(|o| vals[o].clone()).collect()
+    Ok(g.outputs.iter().map(|o| vals[o].clone()).collect())
 }
 
 pub fn execute_block(
@@ -75,19 +71,37 @@ pub fn execute_block(
                 return;
             }
             let tape = compile_block(g, block);
-            let bufs: Vec<&Tensor> = tape.inputs.iter().map(|i| &vals[i]).collect();
-            let outs = tape.execute(&bufs, sched);
+            let outs = {
+                let bufs: Vec<View> = tape.inputs.iter().map(|i| vals[i].view()).collect();
+                tape.execute_views(&bufs, sched)
+            };
             let keys: Vec<NodeId> = tape.output_regs.iter().map(|&(n, _)| n).collect();
             for (key, out) in keys.into_iter().zip(outs) {
                 vals.insert(key, out);
             }
         }
         BlockKind::Reduction => {
-            if let Some(()) = try_native_softmax(g, block, vals) {
-                return;
+            if let Some(p) = match_softmax(g, block) {
+                if let Some(xt) = vals.get(&p.x) {
+                    let shape = g.nodes[p.out].shape.clone();
+                    let (rows, cols) = row_split(&shape);
+                    let mut out = vec![0.0f32; shape.numel()];
+                    softmax_rows(&xt.data, rows, cols, &mut out);
+                    vals.insert(p.out, Tensor { shape, data: out });
+                    return;
+                }
             }
-            if let Some(()) = try_native_layernorm(g, block, vals) {
-                return;
+            if let Some(p) = match_layernorm(g, block) {
+                if let (Some(xt), Some(gt), Some(bt)) =
+                    (vals.get(&p.x), vals.get(&p.gamma), vals.get(&p.beta))
+                {
+                    let shape = g.nodes[p.out].shape.clone();
+                    let (rows, cols) = row_split(&shape);
+                    let mut out = vec![0.0f32; shape.numel()];
+                    layernorm_rows(&xt.data, &gt.data, &bt.data, p.eps, rows, cols, &mut out);
+                    vals.insert(p.out, Tensor { shape, data: out });
+                    return;
+                }
             }
             fallback(g, block, vals);
         }
@@ -100,20 +114,32 @@ pub fn execute_block(
 fn fallback(g: &Graph, block: &FusedBlock, vals: &mut HashMap<NodeId, Tensor>) {
     for &n in &block.nodes {
         let node = &g.nodes[n];
-        let args: Vec<&Tensor> = node.inputs.iter().map(|i| &vals[i]).collect();
-        let out = apply_op(&node.op, &args, &node.shape);
+        let out = {
+            let args: Vec<View> = node.inputs.iter().map(|i| vals[i].view()).collect();
+            apply_op(&node.op, &args, &node.shape)
+        };
         vals.insert(n, out);
     }
 }
 
-/// Detect the exact softmax idiom the graph builder emits
-/// (reduce_max -> sub -> exp -> reduce_sum -> div over the last axis)
-/// and run a single-pass native kernel.
-fn try_native_softmax(
-    g: &Graph,
-    block: &FusedBlock,
-    vals: &mut HashMap<NodeId, Tensor>,
-) -> Option<()> {
+// ---- shared reduction patterns and kernels ------------------------------
+//
+// Detection is separated from execution so the sequential executor (owned
+// tensors) and the wave-parallel executor (slab views) reuse the same
+// structural matchers and the same row kernels — bitwise-identical
+// numerics between the two, which the differential harness asserts.
+
+/// The exact softmax idiom the graph builder emits
+/// (reduce_max -> sub -> exp -> reduce_sum -> div over the last axis).
+#[derive(Debug, Clone, Copy)]
+pub struct SoftmaxPattern {
+    /// External input the softmax normalizes.
+    pub x: NodeId,
+    /// The block's output node (the div).
+    pub out: NodeId,
+}
+
+pub fn match_softmax(g: &Graph, block: &FusedBlock) -> Option<SoftmaxPattern> {
     if block.nodes.len() != 5 || block.outputs.len() != 1 {
         return None;
     }
@@ -143,13 +169,24 @@ fn try_native_softmax(
     if axis != shape.rank() - 1 {
         return None;
     }
+    Some(SoftmaxPattern { x, out: div })
+}
 
-    let xt = vals.get(&x)?.clone();
-    let cols = *shape.dims.last().unwrap();
-    let rows = shape.numel() / cols;
-    let mut out = vec![0.0f32; shape.numel()];
+/// Split a row-kernel output shape into (rows, cols): the last axis is
+/// the kernel's row, everything above it is flattened. Both executors
+/// derive their softmax/layernorm iteration space through this one
+/// function so they can never diverge.
+pub fn row_split(shape: &Shape) -> (usize, usize) {
+    let cols = *shape.dims.last().expect("row kernels need rank >= 1");
+    (shape.numel() / cols, cols)
+}
+
+/// Single-pass numerically-stable softmax over contiguous rows.
+pub fn softmax_rows(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
     for r in 0..rows {
-        let row = &xt.data[r * cols..(r + 1) * cols];
+        let row = &x[r * cols..(r + 1) * cols];
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut total = 0.0f32;
         let orow = &mut out[r * cols..(r + 1) * cols];
@@ -162,17 +199,20 @@ fn try_native_softmax(
             *o *= inv;
         }
     }
-    vals.insert(div, Tensor { shape: shape.clone(), data: out });
-    Some(())
 }
 
-/// Detect the layernorm idiom from `Graph::layernorm` (two reduce_sums,
-/// rsqrt, centered square) and run a two-pass native kernel.
-fn try_native_layernorm(
-    g: &Graph,
-    block: &FusedBlock,
-    vals: &mut HashMap<NodeId, Tensor>,
-) -> Option<()> {
+/// The layernorm idiom from `Graph::layernorm` (two reduce_sums, rsqrt,
+/// centered square).
+#[derive(Debug, Clone, Copy)]
+pub struct LayernormPattern {
+    pub x: NodeId,
+    pub gamma: NodeId,
+    pub beta: NodeId,
+    pub eps: f32,
+    pub out: NodeId,
+}
+
+pub fn match_layernorm(g: &Graph, block: &FusedBlock) -> Option<LayernormPattern> {
     // Structural fingerprint: 2x ReduceSum, 1x Rsqrt, final add; input x is
     // the ReduceSum operand that is also used by a Sub.
     if block.outputs.len() != 1 {
@@ -222,27 +262,33 @@ fn try_native_layernorm(
             _ => return None,
         },
     };
+    Some(LayernormPattern { x, gamma, beta, eps, out: out_id })
+}
 
-    let xt = vals.get(&x)?.clone();
-    let gt = vals.get(&gamma)?.clone();
-    let bt = vals.get(&beta)?.clone();
-    let shape = g.nodes[out_id].shape.clone();
-    let cols = *shape.dims.last().unwrap();
-    let rows = shape.numel() / cols;
-    let mut out = vec![0.0f32; shape.numel()];
+/// Two-pass layernorm over contiguous rows; gamma/beta broadcast by
+/// modulo (handles [cols] and scalar parameters alike).
+pub fn layernorm_rows(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
     for r in 0..rows {
-        let row = &xt.data[r * cols..(r + 1) * cols];
+        let row = &x[r * cols..(r + 1) * cols];
         let mean: f32 = row.iter().sum::<f32>() / cols as f32;
         let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
         let rs = 1.0 / (var + eps).sqrt();
         let orow = &mut out[r * cols..(r + 1) * cols];
         for j in 0..cols {
-            orow[j] = (row[j] - mean) * rs * gt.data[j % gt.data.len()]
-                + bt.data[j % bt.data.len()];
+            orow[j] =
+                (row[j] - mean) * rs * gamma[j % gamma.len()] + beta[j % beta.len()];
         }
     }
-    vals.insert(out_id, Tensor { shape, data: out });
-    Some(())
 }
 
 #[cfg(test)]
@@ -272,9 +318,9 @@ mod tests {
 
     fn check_plan_matches_interp(g: &Graph, cfg: &FusionConfig, seed: u64) {
         let feeds = feeds_for(g, seed);
-        let expect = eval_graph(g, &feeds);
+        let expect = eval_graph(g, &feeds).unwrap();
         let plan = lp_fusion(g, cfg);
-        let got = execute_plan(g, &plan, &feeds, &HashMap::new());
+        let got = execute_plan(g, &plan, &feeds, &HashMap::new()).unwrap();
         assert_eq!(expect.len(), got.len());
         for (e, o) in expect.iter().zip(&got) {
             assert_close(&o.data, &e.data, 1e-4, 1e-5).unwrap();
@@ -328,12 +374,12 @@ mod tests {
         let out = g.add(m1, m2);
         g.mark_output(out);
         let feeds = feeds_for(&g, 21);
-        let expect = eval_graph(&g, &feeds);
+        let expect = eval_graph(&g, &feeds).unwrap();
         let plan = lp_fusion(&g, &FusionConfig::default());
         for sched in [Schedule::RowRecompute, Schedule::HoistedColMajor] {
             let mut choice = HashMap::new();
             choice.insert(plan.blocks[0].id, sched);
-            let got = execute_plan(&g, &plan, &feeds, &choice);
+            let got = execute_plan(&g, &plan, &feeds, &choice).unwrap();
             assert_close(&got[0].data, &expect[0].data, 1e-5, 1e-6).unwrap();
         }
     }
@@ -350,5 +396,27 @@ mod tests {
         g.mark_output(act);
         check_plan_matches_interp(&g, &FusionConfig::disabled(), 31);
         check_plan_matches_interp(&g, &FusionConfig::default(), 32);
+    }
+
+    #[test]
+    fn malformed_feeds_are_rejected_not_panicked() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let o = g.add(a, b);
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+
+        let mut feeds = HashMap::new();
+        feeds.insert("a".to_string(), vec![1.0; 4]);
+        let err = execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap_err();
+        assert_eq!(err, ExecError::MissingFeed { name: "b".into() });
+
+        feeds.insert("b".to_string(), vec![1.0; 3]); // wrong length
+        let err = execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap_err();
+        assert_eq!(
+            err,
+            ExecError::FeedShape { name: "b".into(), expected: 4, got: 3 }
+        );
     }
 }

@@ -41,6 +41,33 @@ impl Tensor {
     /// Read with broadcasting against a target shape: `idx` indexes the
     /// target's flattened space; stride-0 axes replicate.
     pub fn bcast_reader<'a>(&'a self, target: &Shape) -> impl Fn(&[usize]) -> f32 + 'a {
+        self.view().bcast_reader(target)
+    }
+
+    /// Borrow as a `View` (the form all kernels consume, so slab-resident
+    /// and owned tensors go down the same code paths).
+    pub fn view(&self) -> View<'_> {
+        View { shape: &self.shape, data: &self.data }
+    }
+}
+
+/// Borrowed tensor: a shape plus a data slice. This is what kernels read —
+/// the slice may come from an owned `Tensor`, a feed, or a region of the
+/// executor's arena slab.
+#[derive(Debug, Clone, Copy)]
+pub struct View<'a> {
+    pub shape: &'a Shape,
+    pub data: &'a [f32],
+}
+
+impl<'a> View<'a> {
+    pub fn numel(self) -> usize {
+        self.data.len()
+    }
+
+    /// Read with broadcasting against a target shape (stride-0 axes
+    /// replicate).
+    pub fn bcast_reader(self, target: &Shape) -> impl Fn(&[usize]) -> f32 + 'a {
         let strides = self.shape.broadcast_strides(target);
         move |coords: &[usize]| {
             let mut off = 0usize;

@@ -71,9 +71,44 @@ pub fn compile(g: &Graph, opts: &CompileOptions) -> Compiled {
 }
 
 impl Compiled {
-    /// Execute on host (the compiler's own executor, not PJRT).
-    pub fn run(&self, feeds: &HashMap<String, Vec<f32>>) -> Vec<exec::Tensor> {
+    /// Execute on host with the sequential plan executor (the reference
+    /// fused execution; bad feeds are typed errors, not panics).
+    pub fn run(
+        &self,
+        feeds: &HashMap<String, Vec<f32>>,
+    ) -> Result<Vec<exec::Tensor>, exec::ExecError> {
         exec::plan::execute_plan(&self.graph, &self.plan, feeds, &self.schedules)
+    }
+
+    /// Execute on host with the wave-parallel arena executor on `threads`
+    /// worker threads — the production host path.
+    pub fn run_parallel(
+        &self,
+        feeds: &HashMap<String, Vec<f32>>,
+        threads: usize,
+    ) -> Result<Vec<exec::Tensor>, exec::ExecError> {
+        exec::parallel::execute_plan_parallel(
+            &self.graph,
+            &self.plan,
+            feeds,
+            &self.schedules,
+            threads,
+        )
+    }
+
+    /// As [`Compiled::run_parallel`], also returning wave/arena stats.
+    pub fn run_parallel_stats(
+        &self,
+        feeds: &HashMap<String, Vec<f32>>,
+        threads: usize,
+    ) -> Result<(Vec<exec::Tensor>, exec::ExecStats), exec::ExecError> {
+        exec::parallel::execute_plan_parallel_stats(
+            &self.graph,
+            &self.plan,
+            feeds,
+            &self.schedules,
+            threads,
+        )
     }
 
     /// The paper's fusion-rate metrics: (ops, blocks, ops/block).
@@ -117,9 +152,14 @@ mod tests {
                 (0..n).map(|i| ((i * 7 + 3) % 11) as f32 * 0.25 - 1.0).collect(),
             );
         }
-        let got = c.run(&feeds);
-        let expect = exec::interp::eval_graph(&g, &feeds);
+        let got = c.run(&feeds).unwrap();
+        let expect = exec::interp::eval_graph(&g, &feeds).unwrap();
         crate::util::check::assert_close(&got[0].data, &expect[0].data, 1e-5, 1e-6).unwrap();
+        // The parallel executor agrees bitwise with the sequential one.
+        for threads in [1, 2, 4] {
+            let par = c.run_parallel(&feeds, threads).unwrap();
+            assert_eq!(par[0].data, got[0].data);
+        }
     }
 
     #[test]

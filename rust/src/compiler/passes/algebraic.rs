@@ -225,8 +225,8 @@ mod tests {
         feeds.insert("G".into(), (0..8).map(|i| (i as f32).sin()).collect());
         feeds.insert("H".into(), (0..8).map(|i| (i as f32).cos()).collect());
 
-        let pre = eval_graph(&g, &feeds);
-        let post = eval_graph(&opt, &feeds);
+        let pre = eval_graph(&g, &feeds).unwrap();
+        let post = eval_graph(&opt, &feeds).unwrap();
         crate::util::check::assert_close(&pre[0].data, &post[0].data, 1e-5, 1e-6).unwrap();
     }
 }

@@ -153,10 +153,10 @@ mod tests {
                 feeds.insert(name.clone(), v);
             }
         }
-        let expect = eval_graph(&g, &feeds);
+        let expect = eval_graph(&g, &feeds).unwrap();
         let simplified = Dce.run(&LayoutSimplify.run(&g));
         assert!(simplified.num_ops() <= g.num_ops());
-        let got = eval_graph(&simplified, &feeds);
+        let got = eval_graph(&simplified, &feeds).unwrap();
         crate::util::check::assert_close(&got[0].data, &expect[0].data, 1e-4, 1e-5).unwrap();
     }
 }

@@ -121,6 +121,18 @@ pub enum Schedule {
     HoistedColMajor,
 }
 
+impl Schedule {
+    /// Whether disjoint row ranges of the 2-D domain may execute
+    /// concurrently under this schedule. Row-recompute evaluates every
+    /// row independently (its redundant per-row recompute is exactly what
+    /// makes it embarrassingly parallel); the hoisted schedule shares
+    /// per-column hoisted registers across the row loop, so it splits
+    /// over columns, not rows — not exploited by the wave executor yet.
+    pub fn row_parallelizable(self) -> bool {
+        matches!(self, Schedule::RowRecompute)
+    }
+}
+
 /// Enumerate the legal schedules for a block. Both Fig. 4 variants exist
 /// exactly when the block is 2-D elementwise and some operand is
 /// row-invariant (i.e. broadcast along axis 0) — otherwise hoisting has
@@ -284,6 +296,12 @@ mod tests {
         let hoist = schedule_cost(&g, &blk, Schedule::HoistedColMajor, 8.0);
         assert!(hoist.flops < row.flops);
         assert!(hoist.mem_cost > row.mem_cost);
+    }
+
+    #[test]
+    fn row_parallelism_follows_schedule_semantics() {
+        assert!(Schedule::RowRecompute.row_parallelizable());
+        assert!(!Schedule::HoistedColMajor.row_parallelizable());
     }
 
     #[test]

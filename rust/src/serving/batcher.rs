@@ -50,6 +50,9 @@ pub struct Batcher<Req: Send + 'static, Resp: Send + 'static> {
 pub struct BatcherMetrics {
     pub batches: usize,
     pub requests: usize,
+    /// Replies actually delivered (== `requests` unless a caller dropped
+    /// its receiver before the reply arrived).
+    pub responses: usize,
     pub batch_sizes: Vec<usize>,
     pub queue_latency: LatencyHistogram,
     pub total_latency: LatencyHistogram,
@@ -89,6 +92,14 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
     /// Convenience: submit and wait.
     pub fn call(&self, req: Req) -> Resp {
         self.submit(req).recv().expect("batcher reply")
+    }
+
+    /// Stop accepting requests, drain everything already queued (every
+    /// in-flight request still gets its reply), and join the worker.
+    /// Equivalent to dropping the batcher; named so shutdown-correctness
+    /// tests read as what they assert.
+    pub fn shutdown(self) {
+        drop(self);
     }
 }
 
@@ -150,6 +161,8 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
         let responses = model.run_batch(&reqs);
         debug_assert_eq!(responses.len(), replies.len());
 
+        // Batch metrics land BEFORE the replies go out, so a caller that
+        // observes its reply also observes the metrics for its batch.
         {
             let mut m = metrics.lock().unwrap();
             m.batches += 1;
@@ -160,9 +173,15 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
                 m.total_latency.record(t.elapsed());
             }
         }
+        let mut delivered = 0usize;
         for (resp, reply) in responses.into_iter().zip(replies) {
-            let _ = reply.send(resp); // receiver may have given up: fine
+            if reply.send(resp).is_ok() {
+                delivered += 1; // receiver may have given up: fine
+            }
         }
+        // Delivery count is only exact after `shutdown()`/drop has joined
+        // the worker (stress tests read it there).
+        metrics.lock().unwrap().responses += delivered;
     }
 }
 

@@ -1,16 +1,57 @@
 //! Serving runtime (S14): the on-device application layer from the
 //! paper's demo (§3.2) — Question Answering and Text Generation — built
-//! as a router + dynamic batcher over the PJRT executables.
+//! as a router + dynamic batcher over two interchangeable backends:
 //!
-//! The paper runs single requests on a phone; a deployable framework also
-//! needs concurrency, so the batcher coalesces queued requests into the
-//! b8 executable when load is high and falls back to b1 when it isn't
-//! (bucketed static shapes — the standard PJRT-style serving pattern).
+//! * **PJRT** (`QaEngine` / `GenEngine`): the AOT artifacts produced by
+//!   `make artifacts`, executed through the `xla` crate. Requires the
+//!   real PJRT runtime.
+//! * **Native** (`NativeQaEngine` / `NativeGenEngine`): the same model
+//!   family built as compiler IR, LP-fused, and executed on the in-tree
+//!   **wave-parallel arena executor** (`compiler::exec::parallel`). No
+//!   artifacts or PJRT needed — this is what the benches, stress tests,
+//!   and artifact-less deployments run, and it is how real serving
+//!   traffic exercises the executor end to end.
+//!
+//! The batcher coalesces queued requests into batches when load is high
+//! and falls back to singles when it isn't (bucketed static shapes — the
+//! standard PJRT-style serving pattern).
 
 pub mod batcher;
 pub mod qa;
 pub mod textgen;
 
-pub use batcher::{Batcher, BatcherOptions, BatchModel};
-pub use qa::{QaEngine, QaRequest, QaResponse};
-pub use textgen::{GenEngine, GenRequest, GenResponse};
+use std::collections::HashMap;
+
+use crate::compiler::ir::{Graph, Op};
+use crate::util::rng::Rng;
+
+pub use batcher::{BatchModel, Batcher, BatcherOptions};
+pub use qa::{NativeQaEngine, QaEngine, QaRequest, QaResponse};
+pub use textgen::{GenEngine, GenRequest, GenResponse, NativeGenEngine};
+
+/// Additive attention-mask value for padded key positions (finite, so
+/// softmax rows stay NaN-free even when fully masked).
+pub(crate) const NEG_MASK: f32 = -1.0e4;
+
+/// Deterministic parameter set for a native-backend model: layernorm
+/// gammas 1, betas 0, everything else small-normal. (The native engines
+/// demonstrate/benchmark the serving + executor stack; swap in trained
+/// parameters by name to serve a real checkpoint.)
+pub(crate) fn init_weights(g: &Graph, seed: u64) -> HashMap<String, Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut weights = HashMap::new();
+    for node in &g.nodes {
+        if let Op::Weight { name } = &node.op {
+            let n = node.shape.numel();
+            let data = if name.ends_with("gamma") {
+                vec![1.0; n]
+            } else if name.ends_with("beta") {
+                vec![0.0; n]
+            } else {
+                (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect()
+            };
+            weights.insert(name.clone(), data);
+        }
+    }
+    weights
+}

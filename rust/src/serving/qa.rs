@@ -3,14 +3,20 @@
 //! highlight the answer in the text."
 //!
 //! Pipeline: WordPiece-encode (question, context) as a BERT pair, run the
-//! AOT QA executable (b1 or b8), pick the best legal span (start <= end,
-//! inside the context segment, bounded length), decode back to text.
+//! model (AOT QA executable b1/b8 on PJRT, or the compiler-IR encoder +
+//! span head on the wave-parallel arena executor), pick the best legal
+//! span (start <= end, inside the context segment, bounded length),
+//! decode back to text.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::batcher::BatchModel;
+use crate::compiler::exec::ExecError;
+use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::model::{build_encoder, BertConfig};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::tokenizer::Tokenizer;
 
@@ -162,6 +168,166 @@ pub fn best_span(
     best
 }
 
+// ---- native backend -----------------------------------------------------
+
+/// The QA graph: the demo encoder plus a span head projecting each
+/// position's hidden state to (start, end) logits.
+fn qa_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
+    let mut g = build_encoder(cfg);
+    let x = *g.outputs.last().expect("encoder output");
+    let w = g.weight("qa/w_span", &[cfg.hidden, 2]);
+    let b = g.weight("qa/b_span", &[2]);
+    let mm = g.matmul(x, w);
+    let logits = g.add(mm, b); // [seq, 2]
+    // The span logits are the ONLY output: keeping the encoder's hidden
+    // states as a second output would copy them out of the slab per
+    // request and pin their arena region forever (graph outputs are
+    // never freed).
+    g.outputs.clear();
+    g.mark_output(logits);
+    g
+}
+
+/// PJRT-free QA engine: compiles the QA graph once (passes + LP-Fusion +
+/// schedule tuning) and serves every request through the wave-parallel
+/// arena executor. This is the path benches, stress tests, and
+/// artifact-less deployments use; parameters are deterministic
+/// placeholders unless replaced by name (see `serving::init_weights`).
+pub struct NativeQaEngine {
+    pub tokenizer: Arc<Tokenizer>,
+    compiled: Compiled,
+    weights: HashMap<String, Vec<f32>>,
+    cfg: BertConfig,
+    pub max_answer_tokens: usize,
+    /// Worker threads per request in the wave executor.
+    pub threads: usize,
+    batch_cap: usize,
+}
+
+impl NativeQaEngine {
+    pub fn new(tokenizer: Arc<Tokenizer>, cfg: BertConfig, threads: usize) -> Self {
+        let g = qa_graph(&cfg);
+        let compiled =
+            compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+        let weights = super::init_weights(&compiled.graph, 0x0A11_CE5E);
+        NativeQaEngine {
+            tokenizer,
+            compiled,
+            weights,
+            cfg,
+            max_answer_tokens: 30,
+            threads: threads.max(1),
+            batch_cap: 8,
+        }
+    }
+
+    /// Small default configuration (the aot.py "qa" demo shape).
+    pub fn demo(tokenizer: Arc<Tokenizer>, threads: usize) -> Self {
+        Self::new(tokenizer, BertConfig::demo_qa(), threads)
+    }
+
+    /// Replace a parameter by name (e.g. with trained values).
+    pub fn set_weight(&mut self, name: &str, data: Vec<f32>) -> Result<(), ExecError> {
+        match self.weights.get(name) {
+            Some(old) if old.len() == data.len() => {
+                self.weights.insert(name.to_string(), data);
+                Ok(())
+            }
+            Some(old) => Err(ExecError::FeedShape {
+                name: name.to_string(),
+                expected: old.len(),
+                got: data.len(),
+            }),
+            None => Err(ExecError::MissingFeed { name: name.to_string() }),
+        }
+    }
+
+    pub fn batch_cap(&self) -> usize {
+        self.batch_cap
+    }
+
+    /// Wave/arena statistics for one representative request — what the
+    /// serving bench reports as the executor's memory win.
+    pub fn exec_stats(&self) -> Result<crate::compiler::exec::ExecStats, ExecError> {
+        let (ids, _tt, mask, _b_start) =
+            self.tokenizer.encode_pair("warm", "up", self.cfg.seq);
+        let feeds = self.feeds_from(&ids, &mask);
+        self.compiled
+            .run_parallel_stats(&feeds, self.threads)
+            .map(|(_, stats)| stats)
+    }
+
+    /// Build the executor feed map from an already-encoded request, so
+    /// the ids used for span decoding and the ids fed to the model are
+    /// one and the same.
+    fn feeds_from(&self, ids: &[i32], mask: &[f32]) -> HashMap<String, Vec<f32>> {
+        let mut feeds = self.weights.clone();
+        let cap = self.cfg.vocab as i32 - 1;
+        feeds.insert(
+            "input_ids".to_string(),
+            ids.iter().map(|&i| i.min(cap) as f32).collect(),
+        );
+        let add_mask: Vec<f32> =
+            mask.iter().map(|&m| if m > 0.0 { 0.0 } else { super::NEG_MASK }).collect();
+        for l in 0..self.cfg.layers {
+            feeds.insert(format!("mask{l}"), add_mask.clone());
+        }
+        feeds
+    }
+
+    /// Answer one request on the parallel executor. Malformed model state
+    /// surfaces as a typed `ExecError` instead of a panic.
+    pub fn answer(&self, req: &QaRequest) -> Result<QaResponse, ExecError> {
+        let seq = self.cfg.seq;
+        let (ids, _tt, mask, b_start) =
+            self.tokenizer.encode_pair(&req.question, &req.context, seq);
+        let used = mask.iter().filter(|&&m| m > 0.0).count();
+        let feeds = self.feeds_from(&ids, &mask);
+        let outs = self.compiled.run_parallel(&feeds, self.threads)?;
+        let logits = outs.last().expect("qa graph has outputs"); // [seq, 2]
+
+        let mut s_row = vec![0.0f32; seq];
+        let mut e_row = vec![0.0f32; seq];
+        for i in 0..seq {
+            s_row[i] = logits.data[i * 2];
+            e_row[i] = logits.data[i * 2 + 1];
+        }
+        let (s, e, score) =
+            best_span(&s_row, &e_row, b_start, used.saturating_sub(1), self.max_answer_tokens);
+        let answer_ids: Vec<u32> = ids[s..=e].iter().map(|&i| i as u32).collect();
+        Ok(QaResponse {
+            answer: self.tokenizer.decode(&answer_ids),
+            start_token: s,
+            end_token: e,
+            score,
+        })
+    }
+}
+
+/// Adapter: the native engine is a batch model for the dynamic batcher.
+/// Batch items run sequentially; each item's graph execution is itself
+/// wave-parallel across `threads` cores.
+impl BatchModel<QaRequest, QaResponse> for NativeQaEngine {
+    fn max_batch(&self) -> usize {
+        self.batch_cap
+    }
+
+    fn run_batch(&self, items: &[QaRequest]) -> Vec<QaResponse> {
+        items
+            .iter()
+            .map(|req| match self.answer(req) {
+                Ok(r) => r,
+                Err(e) => QaResponse {
+                    answer: format!("<error: {e}>"),
+                    start_token: 0,
+                    end_token: 0,
+                    score: f32::NEG_INFINITY,
+                },
+            })
+            .collect()
+    }
+}
+
 // SAFETY: the `xla` crate's FFI handles (PjRtLoadedExecutable, Literal,
 // PjRtClient's Rc) are not marked Send. The batcher *moves* the engine into
 // its single worker thread at construction and every subsequent PJRT call
@@ -227,5 +393,47 @@ mod tests {
         let e = vec![9.0, 0.0, 1.0];
         let (bs, be, _) = best_span(&s, &e, 0, 3, 30);
         assert!(bs <= be);
+    }
+
+    fn tiny_native_engine(threads: usize) -> NativeQaEngine {
+        use crate::tokenizer::{Tokenizer, Vocab};
+        let corpus = "the quick brown fox jumps over the lazy dog . \
+                      layer fusion reduces the number of kernels .";
+        let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 256)));
+        let cfg = BertConfig { vocab: 256, seq: 16, layers: 1, hidden: 8, heads: 2, inter: 16 };
+        NativeQaEngine::new(tok, cfg, threads)
+    }
+
+    #[test]
+    fn native_engine_answers_within_context() {
+        let eng = tiny_native_engine(2);
+        let req = QaRequest {
+            question: "what reduces kernels ?".into(),
+            context: "layer fusion reduces the number of kernels".into(),
+        };
+        let resp = eng.answer(&req).unwrap();
+        assert!(resp.start_token <= resp.end_token);
+        assert!(resp.score.is_finite());
+        // Identical numerics regardless of thread count.
+        let resp1 = tiny_native_engine(1).answer(&req).unwrap();
+        assert_eq!((resp.start_token, resp.end_token), (resp1.start_token, resp1.end_token));
+        assert_eq!(resp.answer, resp1.answer);
+    }
+
+    #[test]
+    fn native_engine_reports_arena_win() {
+        let eng = tiny_native_engine(2);
+        let stats = eng.exec_stats().unwrap();
+        assert!(stats.peak_arena_bytes <= stats.naive_bytes);
+        assert!(stats.waves > 0);
+    }
+
+    #[test]
+    fn native_engine_rejects_bad_weight_shapes() {
+        let mut eng = tiny_native_engine(1);
+        let err = eng.set_weight("qa/w_span", vec![0.0; 3]).unwrap_err();
+        assert!(matches!(err, crate::compiler::exec::ExecError::FeedShape { .. }));
+        let err = eng.set_weight("not/a/weight", vec![0.0; 3]).unwrap_err();
+        assert!(matches!(err, crate::compiler::exec::ExecError::MissingFeed { .. }));
     }
 }

@@ -9,10 +9,14 @@
 //! forward keeps the Rust side trivially correct. The device-simulated
 //! numbers in Table 1 are per-forward, matching the paper's setup.)
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::compiler::exec::ExecError;
+use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::model::{build_encoder, BertConfig};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
@@ -102,5 +106,141 @@ impl GenEngine {
             .tokenizer
             .decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
         Ok(GenResponse { text, tokens_generated: generated, per_token_ms })
+    }
+}
+
+// ---- native backend -----------------------------------------------------
+
+/// The generation graph: the encoder plus an LM head projecting each
+/// position's hidden state to vocabulary logits.
+fn lm_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
+    let mut g = build_encoder(cfg);
+    let x = *g.outputs.last().expect("encoder output");
+    let w = g.weight("lm/w_head", &[cfg.hidden, cfg.vocab]);
+    let logits = g.matmul(x, w); // [seq, vocab]
+    // Logits are the only output (see qa_graph: a retained hidden-state
+    // output would be copied per step and never freed by the arena).
+    g.outputs.clear();
+    g.mark_output(logits);
+    g
+}
+
+/// PJRT-free text-generation engine with the same request/response types
+/// and decode loop as [`GenEngine`]: at each step the full static-shape
+/// sequence is re-run on the wave-parallel arena executor and the next
+/// token is sampled from the logits at the last attended position.
+/// (Bidirectional attention over the attended prefix — this mirrors the
+/// AOT `gen_b1` interface and timing shape, not its causal mask.)
+pub struct NativeGenEngine {
+    pub tokenizer: Arc<Tokenizer>,
+    compiled: Compiled,
+    weights: HashMap<String, Vec<f32>>,
+    cfg: BertConfig,
+    /// Worker threads per forward in the wave executor.
+    pub threads: usize,
+}
+
+impl NativeGenEngine {
+    pub fn new(tokenizer: Arc<Tokenizer>, cfg: BertConfig, threads: usize) -> Self {
+        let g = lm_graph(&cfg);
+        let compiled =
+            compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+        let weights = super::init_weights(&compiled.graph, 0x6E6E_57A7);
+        NativeGenEngine { tokenizer, compiled, weights, cfg, threads: threads.max(1) }
+    }
+
+    /// Small default configuration for demos and benches.
+    pub fn demo(tokenizer: Arc<Tokenizer>, threads: usize) -> Self {
+        let cfg = BertConfig { vocab: 2048, seq: 64, layers: 2, hidden: 128, heads: 4, inter: 512 };
+        Self::new(tokenizer, cfg, threads)
+    }
+
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResponse, ExecError> {
+        let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
+        let mut rng = Rng::new(req.seed);
+        let mut ids: Vec<i32> = self
+            .tokenizer
+            .encode(&req.prompt)
+            .iter()
+            .map(|&t| (t as i32).min(vocab as i32 - 1))
+            .collect();
+        if ids.is_empty() {
+            ids.push(crate::tokenizer::CLS as i32);
+        }
+        if ids.len() >= seq {
+            ids.truncate(seq - 1);
+        }
+
+        let mut per_token_ms = Vec::new();
+        let mut generated = 0usize;
+        // Weights are loop-invariant; only input_ids/mask change per step.
+        let mut feeds = self.weights.clone();
+        while generated < req.max_new_tokens && ids.len() < seq {
+            let used = ids.len();
+            let mut padded: Vec<f32> = ids.iter().map(|&i| i as f32).collect();
+            padded.resize(seq, 0.0);
+            feeds.insert("input_ids".to_string(), padded);
+            let mask: Vec<f32> = (0..seq)
+                .map(|i| if i < used { 0.0 } else { super::NEG_MASK })
+                .collect();
+            for l in 0..self.cfg.layers {
+                feeds.insert(format!("mask{l}"), mask.clone());
+            }
+
+            let t0 = std::time::Instant::now();
+            let outs = self.compiled.run_parallel(&feeds, self.threads)?;
+            per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let logits = outs.last().expect("lm graph has outputs"); // [seq, vocab]
+            let last = &logits.data[(used - 1) * vocab..used * vocab];
+            let next = rng.sample_logits(last, req.temperature) as i32;
+            ids.push(next.min(vocab as i32 - 1));
+            generated += 1;
+        }
+
+        let text = self
+            .tokenizer
+            .decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
+        Ok(GenResponse { text, tokens_generated: generated, per_token_ms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{Tokenizer, Vocab};
+
+    fn tiny_engine(threads: usize) -> NativeGenEngine {
+        let corpus = "the quick brown fox jumps over the lazy dog . \
+                      the model generates new sentences word by word .";
+        let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 256)));
+        let cfg = BertConfig { vocab: 256, seq: 12, layers: 1, hidden: 8, heads: 2, inter: 16 };
+        NativeGenEngine::new(tok, cfg, threads)
+    }
+
+    #[test]
+    fn native_generation_is_deterministic_across_threads() {
+        let req = GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 11,
+        };
+        let r1 = tiny_engine(1).generate(&req).unwrap();
+        let r2 = tiny_engine(4).generate(&req).unwrap();
+        assert_eq!(r1.tokens_generated, 4);
+        assert_eq!(r1.text, r2.text, "wave executor must not change sampling");
+        assert_eq!(r1.per_token_ms.len(), 4);
+    }
+
+    #[test]
+    fn native_generation_respects_sequence_cap() {
+        let req = GenRequest {
+            prompt: "the quick brown fox jumps over the lazy dog".into(),
+            max_new_tokens: 64,
+            temperature: 0.5,
+            seed: 3,
+        };
+        let r = tiny_engine(2).generate(&req).unwrap();
+        assert!(r.tokens_generated < 64, "seq cap must stop generation");
     }
 }

@@ -1,15 +1,96 @@
-//! Minimal thread pool (substrate — tokio is unavailable offline, and the
-//! serving path only needs bounded worker concurrency, not async I/O).
+//! Worker/buffer substrate for the parallel executor and the serving
+//! layer (tokio/rayon are unavailable offline):
 //!
-//! Jobs are boxed closures; `Pool::scope`-style joining is provided via
-//! `wait_idle`. The serving engine uses one pool for tokenization and one
-//! worker thread per PJRT executable (PJRT execution is internally
-//! multi-threaded already).
+//! * [`Pool`] — a minimal thread pool: boxed-closure jobs with
+//!   `wait_idle` joining. Used for bounded worker concurrency.
+//! * [`Slab`] / [`SharedSlab`] — one flat f32 allocation that backs the
+//!   arena-planned executor buffers. The arena planner
+//!   (`compiler::exec::arena`) assigns every materialized tensor an
+//!   `(offset, len)` region; `SharedSlab` hands out disjoint `&[f32]` /
+//!   `&mut [f32]` regions across the wave executor's scoped threads.
+//!   Safety is the planner's no-overlap guarantee — see the `unsafe`
+//!   accessor contracts below.
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Flat f32 storage for offset-assigned tensor regions.
+pub struct Slab {
+    data: Vec<f32>,
+}
+
+impl Slab {
+    pub fn new(len: usize) -> Slab {
+        Slab { data: vec![0.0f32; len] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Borrow the whole slab as a shareable handle. The `&mut` receiver
+    /// guarantees no other safe borrow of the storage exists while
+    /// `SharedSlab` copies are alive.
+    pub fn shared(&mut self) -> SharedSlab<'_> {
+        SharedSlab {
+            ptr: self.data.as_mut_ptr(),
+            len: self.data.len(),
+            _marker: PhantomData,
+        }
+    }
+}
+
+/// Copyable handle to a `Slab` that can be sent across scoped threads.
+/// All region accessors are `unsafe`: the caller (the wave executor)
+/// must guarantee that, at any instant, a region handed out with
+/// [`SharedSlab::write`] overlaps neither another live `write` region nor
+/// any live [`SharedSlab::read`] region. The arena planner provides
+/// exactly that guarantee: values live in the same wave never share
+/// offsets, and a region is only reused after its last reader's wave has
+/// completed.
+#[derive(Clone, Copy)]
+pub struct SharedSlab<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: the raw pointer is only dereferenced through the region
+// accessors, whose contracts forbid concurrent aliasing writes.
+unsafe impl Send for SharedSlab<'_> {}
+unsafe impl Sync for SharedSlab<'_> {}
+
+impl<'a> SharedSlab<'a> {
+    pub fn len(self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.len == 0
+    }
+
+    /// Read a region. SAFETY: no thread may concurrently `write` an
+    /// overlapping region.
+    pub unsafe fn read(self, offset: usize, len: usize) -> &'a [f32] {
+        assert!(offset + len <= self.len, "slab read out of bounds");
+        std::slice::from_raw_parts(self.ptr.add(offset), len)
+    }
+
+    /// Write a region. SAFETY: the region must be exclusive — no
+    /// concurrent `read` or `write` may overlap it.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn write(self, offset: usize, len: usize) -> &'a mut [f32] {
+        assert!(offset + len <= self.len, "slab write out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
+    }
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -110,6 +191,37 @@ mod tests {
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::Relaxed), 100);
         assert_eq!(pool.jobs_submitted(), 100);
+    }
+
+    #[test]
+    fn slab_disjoint_regions_across_threads() {
+        let mut slab = Slab::new(64);
+        let shared = slab.shared();
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                s.spawn(move || {
+                    // SAFETY: regions [16t, 16t+16) are pairwise disjoint.
+                    let region = unsafe { shared.write(t * 16, 16) };
+                    for (i, v) in region.iter_mut().enumerate() {
+                        *v = (t * 16 + i) as f32;
+                    }
+                });
+            }
+        });
+        // SAFETY: all writers joined.
+        let all = unsafe { shared.read(0, 64) };
+        for (i, &v) in all.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slab_bounds_checked() {
+        let mut slab = Slab::new(8);
+        let shared = slab.shared();
+        // SAFETY: sole accessor; the call must panic on bounds.
+        let _ = unsafe { shared.read(4, 8) };
     }
 
     #[test]

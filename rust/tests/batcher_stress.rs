@@ -1,0 +1,110 @@
+//! Batcher concurrency stress: many producer threads submitting through
+//! one `Batcher` concurrently. Asserts no response is lost, duplicated,
+//! or cross-wired; that `BatcherMetrics` counts add up exactly; and that
+//! shutdown joins cleanly with the queue drained (the test would hang or
+//! panic otherwise).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use canao::serving::batcher::{BatchModel, Batcher, BatcherOptions};
+
+/// Tags each request with the batch it ran in; the payload echo proves
+/// responses reach the submitter that asked.
+struct TaggingEcho;
+
+impl BatchModel<(u32, u32), (u32, u32, usize)> for TaggingEcho {
+    fn max_batch(&self) -> usize {
+        8
+    }
+
+    fn run_batch(&self, items: &[(u32, u32)]) -> Vec<(u32, u32, usize)> {
+        // A little jitter so batches of every size form under load.
+        std::thread::sleep(Duration::from_micros(200));
+        items.iter().map(|&(p, s)| (p, s, items.len())).collect()
+    }
+}
+
+#[test]
+fn producers_never_lose_or_cross_responses() {
+    const PRODUCERS: u32 = 8;
+    const PER_PRODUCER: u32 = 50;
+
+    let batcher = Arc::new(Batcher::new(
+        TaggingEcho,
+        BatcherOptions { max_wait: Duration::from_millis(2), min_batch: 4 },
+    ));
+    let metrics = Arc::clone(&batcher.metrics);
+
+    std::thread::scope(|scope| {
+        for p in 0..PRODUCERS {
+            let batcher = Arc::clone(&batcher);
+            scope.spawn(move || {
+                // Submit a burst, then await all replies — forces real
+                // cross-producer interleaving in the queue.
+                let rxs: Vec<_> =
+                    (0..PER_PRODUCER).map(|s| (s, batcher.submit((p, s)))).collect();
+                for (s, rx) in rxs {
+                    let (rp, rs, batch_len) = rx.recv().expect("reply must arrive");
+                    assert_eq!((rp, rs), (p, s), "response cross-wired");
+                    assert!(batch_len >= 1 && batch_len <= 8);
+                }
+            });
+        }
+    });
+
+    // Clean shutdown: worker drained and joined (hangs the test if not).
+    match Arc::try_unwrap(batcher) {
+        Ok(b) => b.shutdown(),
+        Err(_) => panic!("all producers done; batcher must be uniquely owned"),
+    }
+
+    let total = (PRODUCERS * PER_PRODUCER) as usize;
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.requests, total, "every submitted request counted");
+    assert_eq!(m.responses, total, "every reply delivered exactly once");
+    assert_eq!(
+        m.batch_sizes.iter().sum::<usize>(),
+        total,
+        "batch sizes partition the requests"
+    );
+    assert_eq!(m.batch_sizes.len(), m.batches);
+    assert!(m.batches <= total, "batching never inflates batch count");
+    assert!(
+        m.batch_sizes.iter().all(|&s| (1..=8).contains(&s)),
+        "batch size bounds: {:?}",
+        &m.batch_sizes[..m.batch_sizes.len().min(16)]
+    );
+    assert!(m.mean_batch_size() >= 1.0);
+    assert_eq!(m.queue_latency.len(), total);
+    assert_eq!(m.total_latency.len(), total);
+}
+
+/// Dropping receivers must not wedge the worker or corrupt counts.
+#[test]
+fn abandoned_receivers_are_tolerated() {
+    let batcher = Batcher::new(
+        TaggingEcho,
+        BatcherOptions { max_wait: Duration::from_millis(1), min_batch: 2 },
+    );
+    let metrics = Arc::clone(&batcher.metrics);
+
+    // Half the callers give up immediately.
+    let mut kept = Vec::new();
+    for s in 0..20u32 {
+        let rx = batcher.submit((0, s));
+        if s % 2 == 0 {
+            kept.push((s, rx));
+        } // odd receivers dropped here
+    }
+    for (s, rx) in kept {
+        let (_, rs, _) = rx.recv().unwrap();
+        assert_eq!(rs, s);
+    }
+    batcher.shutdown();
+
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.requests, 20);
+    assert!(m.responses >= 10, "kept receivers all answered: {}", m.responses);
+    assert!(m.responses <= 20);
+}

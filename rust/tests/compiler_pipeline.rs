@@ -52,7 +52,7 @@ fn tiny_bert_fused_execution_matches_interpreter() {
     let cfg = BertConfig { vocab: 64, seq: 8, layers: 1, hidden: 16, heads: 2, inter: 32 };
     let g = build_encoder(&cfg);
     let feeds = feeds_for(&g, 42);
-    let expect = eval_graph(&g, &feeds);
+    let expect = eval_graph(&g, &feeds).unwrap();
 
     for opts in [
         CompileOptions::default(),
@@ -61,7 +61,7 @@ fn tiny_bert_fused_execution_matches_interpreter() {
         CompileOptions { model_only_tuning: true, ..Default::default() },
     ] {
         let c = compile(&g, &opts);
-        let got = c.run(&feeds);
+        let got = c.run(&feeds).unwrap();
         assert_eq!(got.len(), expect.len());
         for (e, o) in expect.iter().zip(&got) {
             assert_close(&o.data, &e.data, 2e-3, 2e-3).unwrap();
@@ -74,9 +74,9 @@ fn two_layer_bert_matches_too() {
     let cfg = BertConfig { vocab: 32, seq: 4, layers: 2, hidden: 8, heads: 2, inter: 16 };
     let g = build_encoder(&cfg);
     let feeds = feeds_for(&g, 7);
-    let expect = eval_graph(&g, &feeds);
+    let expect = eval_graph(&g, &feeds).unwrap();
     let c = compile(&g, &CompileOptions::default());
-    let got = c.run(&feeds);
+    let got = c.run(&feeds).unwrap();
     assert_close(&got[0].data, &expect[0].data, 2e-3, 2e-3).unwrap();
 }
 

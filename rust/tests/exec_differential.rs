@@ -1,0 +1,355 @@
+//! Differential test harness for the executors (via the in-tree `forall`
+//! substrate): for randomly generated graphs — elementwise/broadcast/
+//! reduce DAGs, attention-shaped graphs, and whole tiny BERT encoders —
+//! and for every fusion budget, schedule variant, and thread count, the
+//! three executors must agree:
+//!
+//!   interp::eval_graph  ==  plan::execute_plan  ==  execute_plan_parallel
+//!
+//! Sequential-vs-parallel agreement is asserted BITWISE (they run the
+//! same tapes and native kernels in the same per-element order); both are
+//! compared to the interpreter with tolerance (fused kernels reassociate).
+//!
+//! The generators extend `proptest_invariants.rs`'s `random_graph` with
+//! matmul/transpose/softmax structure so every block kind — tape,
+//! native softmax/layernorm, attention-core fallback — is exercised.
+
+use std::collections::HashMap;
+
+use canao::compiler::exec::interp::eval_graph;
+use canao::compiler::exec::parallel::{
+    block_waves, execute_plan_parallel, execute_plan_parallel_stats,
+};
+use canao::compiler::exec::plan::execute_plan;
+use canao::compiler::exec::ExecError;
+use canao::compiler::fusion::{lp_fusion, FusionConfig, FusionPlan};
+use canao::compiler::ir::{DType, Graph, Op};
+use canao::compiler::poly::Schedule;
+use canao::model::{build_encoder, BertConfig};
+use canao::util::check::{assert_close, forall};
+use canao::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Random elementwise/broadcast/reduce DAG (the `proptest_invariants.rs`
+/// generator, extended with an occasional matmul-through-transpose pair
+/// so non-fusable and fallback blocks appear).
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new();
+    let m = 2 + rng.below(6);
+    let n = 2 + rng.below(6);
+    let full = g.input("x0", &[m, n], DType::F32);
+    let row = g.input("x1", &[n], DType::F32);
+    let full2 = g.weight("w0", &[m, n]);
+    let mut values = vec![full, row, full2];
+
+    // Side branches whose shapes ([k,k]) would break the broadcast pool:
+    // they become extra graph outputs instead of new operands.
+    let mut extras: Vec<usize> = Vec::new();
+
+    let n_ops = 3 + rng.below(10);
+    for _ in 0..n_ops {
+        let a = *rng.choose(&values);
+        let b = *rng.choose(&values);
+        let choice = rng.below(10);
+        match choice {
+            0 => values.push(g.add(a, b)),
+            1 => values.push(g.mul(a, b)),
+            2 => values.push(g.sub(a, b)),
+            3 => values.push(g.add_op(Op::Tanh, &[a])),
+            4 => values.push(g.add_op(Op::Exp, &[a])),
+            5 => {
+                let c = g.constant(0.5 + rng.f32());
+                values.push(g.mul(a, c));
+            }
+            6 => {
+                // max-based (softmax-ish) fragment
+                let r = g.add_op(Op::ReduceMax { axis: g.nodes[a].shape.rank() - 1 }, &[a]);
+                values.push(g.sub(a, r));
+            }
+            7 => values.push(g.add_op(Op::Max, &[a, b])),
+            8 => {
+                // full softmax over the last axis: native-kernel block
+                values.push(g.softmax(a, g.nodes[a].shape.rank() - 1));
+            }
+            _ => {
+                if g.nodes[a].shape.rank() == 2 {
+                    // attention-ish: transpose (unfusable) + matmul
+                    // (fallback block) + softmax over the [k,k] scores
+                    let at = g.add_op(Op::Transpose, &[a]);
+                    let mm = g.matmul(a, at);
+                    extras.push(g.softmax(mm, 1));
+                } else {
+                    values.push(g.add(a, b));
+                }
+            }
+        }
+    }
+    // 1-2 outputs from the op results (never the raw leaves).
+    let mut candidates: Vec<usize> = values[3..].to_vec();
+    candidates.extend(extras.iter().copied());
+    let o1 = *rng.choose(&candidates);
+    g.mark_output(o1);
+    if rng.below(2) == 0 {
+        let o2 = *rng.choose(&candidates);
+        if o2 != o1 {
+            g.mark_output(o2);
+        }
+    }
+    g
+}
+
+fn feeds_for(g: &Graph, rng: &mut Rng) -> HashMap<String, Vec<f32>> {
+    let mut feeds = HashMap::new();
+    for node in &g.nodes {
+        if let Op::Input { name } | Op::Weight { name } = &node.op {
+            feeds.insert(
+                name.clone(),
+                (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            );
+        }
+    }
+    feeds
+}
+
+/// Force every block of the plan to one schedule (blocks whose domain
+/// isn't 2-D simply ignore the hoisted choice — also worth covering).
+fn force_schedule(plan: &FusionPlan, sched: Schedule) -> HashMap<usize, Schedule> {
+    plan.blocks.iter().map(|b| (b.id, sched)).collect()
+}
+
+fn check_all_executors(
+    g: &Graph,
+    plan: &FusionPlan,
+    feeds: &HashMap<String, Vec<f32>>,
+    schedules: &HashMap<usize, Schedule>,
+) -> Result<(), String> {
+    let expect = eval_graph(g, feeds).map_err(|e| e.to_string())?;
+    let seq = execute_plan(g, plan, feeds, schedules).map_err(|e| e.to_string())?;
+    if seq.len() != expect.len() {
+        return Err(format!("output count {} vs {}", seq.len(), expect.len()));
+    }
+    for (s, e) in seq.iter().zip(&expect) {
+        assert_close(&s.data, &e.data, 1e-4, 1e-5)?;
+    }
+    for &threads in &THREAD_COUNTS {
+        let par = execute_plan_parallel(g, plan, feeds, schedules, threads)
+            .map_err(|e| e.to_string())?;
+        for (i, (p, s)) in par.iter().zip(&seq).enumerate() {
+            if p.data != s.data {
+                return Err(format!(
+                    "output {i}: parallel({threads} threads) differs bitwise from sequential"
+                ));
+            }
+            if p.shape != s.shape {
+                return Err(format!("output {i}: shape mismatch"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn d1_random_graphs_all_executors_agree() {
+    forall(
+        0xD1FF,
+        50,
+        |rng| {
+            let g = random_graph(rng);
+            let feeds = feeds_for(&g, rng);
+            let budget = if rng.below(2) == 0 { 1 << 26 } else { 256 };
+            (g, feeds, budget)
+        },
+        |(g, feeds, budget)| {
+            let cfg = FusionConfig { footprint_budget: *budget, ..Default::default() };
+            let plan = lp_fusion(g, &cfg);
+            check_all_executors(g, &plan, feeds, &HashMap::new())
+        },
+    );
+}
+
+#[test]
+fn d2_every_schedule_variant_agrees() {
+    forall(
+        0x5C4E,
+        30,
+        |rng| {
+            let g = random_graph(rng);
+            let feeds = feeds_for(&g, rng);
+            (g, feeds)
+        },
+        |(g, feeds)| {
+            let plan = lp_fusion(g, &FusionConfig::default());
+            for sched in [Schedule::RowRecompute, Schedule::HoistedColMajor] {
+                let choices = force_schedule(&plan, sched);
+                check_all_executors(g, &plan, feeds, &choices)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn d3_disabled_fusion_agrees() {
+    forall(
+        0x0FF,
+        25,
+        |rng| {
+            let g = random_graph(rng);
+            let feeds = feeds_for(&g, rng);
+            (g, feeds)
+        },
+        |(g, feeds)| {
+            let plan = lp_fusion(g, &FusionConfig::disabled());
+            check_all_executors(g, &plan, feeds, &HashMap::new())
+        },
+    );
+}
+
+/// Whole tiny BERT encoders: attention cores, layernorms, GELU, residual
+/// structure — the real op stream the serving path executes.
+#[test]
+fn d4_tiny_bert_encoders_agree() {
+    forall(
+        0xBE47,
+        6,
+        |rng| {
+            let heads = 1 + rng.below(2);
+            let cfg = BertConfig {
+                vocab: 32 + rng.below(64),
+                seq: 2 + rng.below(6),
+                layers: 1 + rng.below(2),
+                hidden: heads * (4 + rng.below(3) * 4),
+                heads,
+                inter: 8 + rng.below(24),
+            };
+            let g = build_encoder(&cfg);
+            let mut feeds = HashMap::new();
+            for node in &g.nodes {
+                if let Op::Input { name } | Op::Weight { name } = &node.op {
+                    let v = if name.starts_with("mask") {
+                        vec![0.0; node.shape.numel()]
+                    } else if name.ends_with("gamma") {
+                        vec![1.0; node.shape.numel()]
+                    } else if node.dtype == DType::I32 {
+                        (0..node.shape.numel())
+                            .map(|_| rng.below(32) as f32)
+                            .collect()
+                    } else {
+                        (0..node.shape.numel())
+                            .map(|_| rng.normal_f32(0.0, 0.05))
+                            .collect()
+                    };
+                    feeds.insert(name.clone(), v);
+                }
+            }
+            (g, feeds)
+        },
+        |(g, feeds)| {
+            let plan = lp_fusion(g, &FusionConfig::default());
+            let expect = eval_graph(g, feeds).map_err(|e| e.to_string())?;
+            let seq = execute_plan(g, &plan, feeds, &HashMap::new()).map_err(|e| e.to_string())?;
+            assert_close(&seq[0].data, &expect[0].data, 2e-3, 2e-3)?;
+            for &threads in &THREAD_COUNTS {
+                let par = execute_plan_parallel(g, &plan, feeds, &HashMap::new(), threads)
+                    .map_err(|e| e.to_string())?;
+                if par[0].data != seq[0].data {
+                    return Err(format!("{threads}-thread run differs from sequential"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The arena invariants under load: peak <= naive on every random graph,
+/// and the wave partition respects block dependencies.
+#[test]
+fn d5_arena_and_waves_invariants() {
+    forall(
+        0xA4E4A,
+        40,
+        |rng| {
+            let g = random_graph(rng);
+            let feeds = feeds_for(&g, rng);
+            (g, feeds)
+        },
+        |(g, feeds)| {
+            let plan = lp_fusion(g, &FusionConfig::default());
+            let waves = block_waves(&plan);
+            let mut wave_of = vec![0usize; plan.blocks.len()];
+            for (w, bs) in waves.iter().enumerate() {
+                for &b in bs {
+                    wave_of[b] = w;
+                }
+            }
+            for (bi, block) in plan.blocks.iter().enumerate() {
+                for inp in &block.inputs {
+                    if let Some(&src) = plan.block_of.get(inp) {
+                        if wave_of[src] >= wave_of[bi] {
+                            return Err(format!(
+                                "block {bi} in wave {} reads block {src} in wave {}",
+                                wave_of[bi], wave_of[src]
+                            ));
+                        }
+                    }
+                }
+            }
+            let (_, stats) = execute_plan_parallel_stats(g, &plan, feeds, &HashMap::new(), 2)
+                .map_err(|e| e.to_string())?;
+            if stats.peak_arena_bytes > stats.naive_bytes {
+                return Err(format!(
+                    "arena peak {} exceeds per-node baseline {}",
+                    stats.peak_arena_bytes, stats.naive_bytes
+                ));
+            }
+            if stats.slab_bytes < stats.peak_arena_bytes {
+                return Err("slab smaller than peak".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Malformed feeds are typed errors from every executor — the serving
+/// layer depends on this to reject bad requests instead of dying.
+#[test]
+fn d6_malformed_feeds_rejected_everywhere() {
+    let mut g = Graph::new();
+    let a = g.input("a", &[4, 4], DType::F32);
+    let b = g.weight("w", &[4]);
+    let x = g.add(a, b);
+    let y = g.softmax(x, 1);
+    g.mark_output(y);
+    let plan = lp_fusion(&g, &FusionConfig::default());
+
+    // Missing feed.
+    let mut feeds: HashMap<String, Vec<f32>> = HashMap::new();
+    feeds.insert("a".to_string(), vec![0.5; 16]);
+    let want = ExecError::MissingFeed { name: "w".into() };
+    assert_eq!(eval_graph(&g, &feeds).unwrap_err(), want);
+    assert_eq!(execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap_err(), want);
+    for threads in THREAD_COUNTS {
+        assert_eq!(
+            execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), threads).unwrap_err(),
+            want
+        );
+    }
+
+    // Wrong-length feed.
+    feeds.insert("w".to_string(), vec![0.5; 3]);
+    let want = ExecError::FeedShape { name: "w".into(), expected: 4, got: 3 };
+    assert_eq!(eval_graph(&g, &feeds).unwrap_err(), want);
+    assert_eq!(execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap_err(), want);
+    for threads in THREAD_COUNTS {
+        assert_eq!(
+            execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), threads).unwrap_err(),
+            want
+        );
+    }
+
+    // Fixed feeds execute fine afterwards.
+    feeds.insert("w".to_string(), vec![0.5; 4]);
+    let out = execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), 2).unwrap();
+    assert_eq!(out[0].shape.dims, vec![4, 4]);
+}

@@ -94,10 +94,11 @@ fn p1_plan_execution_matches_interpreter() {
             (g, feeds, budget)
         },
         |(g, feeds, budget)| {
-            let expect = eval_graph(g, feeds);
+            let expect = eval_graph(g, feeds).map_err(|e| e.to_string())?;
             let cfg = FusionConfig { footprint_budget: *budget, ..Default::default() };
             let plan = lp_fusion(g, &cfg);
-            let got = execute_plan(g, &plan, feeds, &HashMap::new());
+            let got =
+                execute_plan(g, &plan, feeds, &HashMap::new()).map_err(|e| e.to_string())?;
             for (e, o) in expect.iter().zip(&got) {
                 assert_close(&o.data, &e.data, 1e-4, 1e-5)?;
             }
@@ -117,9 +118,9 @@ fn p2_passes_preserve_semantics() {
             (g, feeds)
         },
         |(g, feeds)| {
-            let expect = eval_graph(g, feeds);
+            let expect = eval_graph(g, feeds).map_err(|e| e.to_string())?;
             let (optimized, _) = PassManager::standard().run(g);
-            let got = eval_graph(&optimized, feeds);
+            let got = eval_graph(&optimized, feeds).map_err(|e| e.to_string())?;
             if optimized.num_ops() > g.num_ops() {
                 return Err(format!(
                     "passes grew the graph: {} -> {}",
@@ -215,7 +216,7 @@ fn p4_fig4_schedules_agree() {
             for s in [Schedule::RowRecompute, Schedule::HoistedColMajor] {
                 let mut choice = HashMap::new();
                 choice.insert(plan.blocks[0].id, s);
-                outs.push(execute_plan(g, &plan, feeds, &choice));
+                outs.push(execute_plan(g, &plan, feeds, &choice).map_err(|e| e.to_string())?);
             }
             assert_close(&outs[0][0].data, &outs[1][0].data, 1e-5, 1e-6)
         },

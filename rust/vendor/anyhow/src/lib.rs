@@ -1,0 +1,146 @@
+//! Vendored subset of the `anyhow` API (substrate — crates.io is
+//! unavailable offline). Covers what this workspace uses: `Result`,
+//! `Error`, `anyhow!`, `bail!`, `ensure!`, and the `Context` extension
+//! trait on `Result` and `Option`. Error values carry a flattened message
+//! (the source chain is rendered into the string at conversion time).
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as the
+/// real crate, so `anyhow::Result<T>` and `Result<T, E>` both work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` lowers to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes this blanket conversion coherent (same trick as the real
+// anyhow crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the source chain into one message.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let r: std::result::Result<u32, std::io::Error> = Err(std::io::Error::other("boom"));
+        let e = r.with_context(|| "reading thing").unwrap_err();
+        assert!(e.to_string().starts_with("reading thing: "), "{e}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+}

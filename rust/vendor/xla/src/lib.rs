@@ -1,0 +1,230 @@
+//! API-compatible stub of the `xla` crate's PJRT surface (substrate — the
+//! real crate needs a prebuilt XLA C library that is unavailable offline).
+//!
+//! `Literal` is a real host-side container (so the `lit_*` helpers and any
+//! host-only code paths work), but `PjRtClient::cpu()` reports the backend
+//! as unavailable: everything downstream of client construction is
+//! type-checked, never executed. Serving and tests that need real compute
+//! run on the in-tree wave-parallel plan executor instead.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT backend unavailable: built against the vendored xla stub \
+         (no XLA C library in this environment)"
+            .to_string(),
+    )
+}
+
+// ---- host literals ------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a `Literal` can hold.
+pub trait NativeType: Copy + Sized {
+    fn to_data(v: Vec<Self>) -> Data;
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_data(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_data(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host tensor literal: element data + dims (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::to_data(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::to_data(vec![v]), dims: vec![] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data).ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { data: Data::Tuple(elems), dims: vec![] }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+// ---- PJRT stubs ---------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_literal() {
+        let t = Literal::tuple(vec![Literal::scalar(1i32), Literal::scalar(2.0f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
