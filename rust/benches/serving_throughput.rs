@@ -14,6 +14,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use canao::compress::CompressionConfig;
 use canao::model::BertConfig;
 use canao::runtime::Runtime;
 use canao::serving::batcher::{Batcher, BatcherOptions};
@@ -65,6 +66,7 @@ fn native_section(tok: Arc<Tokenizer>) {
 
     // Single-request latency vs executor thread count.
     let mut t1_median = Duration::from_secs(0);
+    let mut fp32_t2_median = Duration::from_secs(0);
     for threads in [1usize, 2, 4] {
         let engine = NativeQaEngine::new(Arc::clone(&tok), cfg, threads);
         let s = bench(
@@ -77,10 +79,37 @@ fn native_section(tok: Arc<Tokenizer>) {
         if threads == 1 {
             t1_median = s.median;
         }
+        if threads == 2 {
+            fp32_t2_median = s.median;
+        }
         println!(
             "native qa, {threads} thread(s): {} median ({:.2}x vs 1 thread)",
             fmt_dur(s.median),
             t1_median.as_secs_f64() / s.median.as_secs_f64().max(1e-12),
+        );
+    }
+
+    // Compression rows: the same model served pruned and pruned+int8
+    // (numerics vs fp32 asserted in tests/compress_differential.rs).
+    for (label, comp) in [
+        ("pruned", CompressionConfig::pruned(0.5, 0.5)),
+        ("pruned+int8", CompressionConfig::pruned_int8(0.5, 0.5)),
+    ] {
+        let engine = NativeQaEngine::with_compression(Arc::clone(&tok), cfg, 2, comp);
+        let s = bench(
+            &format!("native_qa_{label}_t2"),
+            Duration::from_millis(800),
+            || {
+                let _ = engine.answer(&req).unwrap();
+            },
+        );
+        println!(
+            "native qa, {label} @2 threads: {} median ({:.2}x vs fp32 @2), \
+             params {:.2}M -> {:.2}M",
+            fmt_dur(s.median),
+            fp32_t2_median.as_secs_f64() / s.median.as_secs_f64().max(1e-12),
+            engine.report.params_before as f64 / 1e6,
+            engine.report.params_after as f64 / 1e6,
         );
     }
 

@@ -11,27 +11,12 @@ use super::ExecError;
 use crate::compiler::ir::{Graph, Node, Op, Shape};
 use crate::compiler::passes::const_fold::erf;
 
-/// Fetch and validate a leaf's feed — shared by all three executors so
-/// malformed requests fail the same typed way everywhere.
+/// Fetch and validate a leaf's feed as an owned tensor (the interpreter
+/// materializes everything). Validation lives in [`super::leaf_value`],
+/// shared with the plan executors' zero-copy leaf path.
 pub fn leaf_tensor(node: &Node, feeds: &HashMap<String, Vec<f32>>) -> Result<Tensor, ExecError> {
-    match &node.op {
-        Op::Input { name } | Op::Weight { name } => {
-            let data = feeds
-                .get(name)
-                .ok_or_else(|| ExecError::MissingFeed { name: name.clone() })?;
-            let expected = node.shape.numel();
-            if data.len() != expected {
-                return Err(ExecError::FeedShape {
-                    name: name.clone(),
-                    expected,
-                    got: data.len(),
-                });
-            }
-            Ok(Tensor { shape: node.shape.clone(), data: data.clone() })
-        }
-        Op::Const { value } => Ok(Tensor::scalar(*value)),
-        op => unreachable!("leaf_tensor on non-leaf {op:?}"),
-    }
+    let lv = super::leaf_value(node, &super::Feeds::single(feeds))?;
+    Ok(Tensor { shape: node.shape.clone(), data: lv.as_slice().to_vec() })
 }
 
 /// Evaluate the graph on named feeds (inputs AND weights by name).
@@ -40,12 +25,24 @@ pub fn eval_graph(
     g: &Graph,
     feeds: &HashMap<String, Vec<f32>>,
 ) -> Result<Vec<Tensor>, ExecError> {
+    let vals = eval_graph_values(g, feeds)?;
+    Ok(g.outputs.iter().map(|&o| vals[o].clone()).collect())
+}
+
+/// Evaluate the graph and return EVERY node's value (index = node id).
+/// This is the observation hook the compression calibrator uses to record
+/// activation ranges at quantized matmul inputs (`compress::quant`); the
+/// memory cost is the interpreter's usual materialize-everything model.
+pub fn eval_graph_values(
+    g: &Graph,
+    feeds: &HashMap<String, Vec<f32>>,
+) -> Result<Vec<Tensor>, ExecError> {
     let mut vals: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
     for (id, _node) in g.nodes.iter().enumerate() {
         let t = eval_node(g, id, &vals, feeds)?;
         vals[id] = Some(t);
     }
-    Ok(g.outputs.iter().map(|&o| vals[o].clone().expect("evaluated")).collect())
+    Ok(vals.into_iter().map(|v| v.expect("evaluated")).collect())
 }
 
 fn eval_node(

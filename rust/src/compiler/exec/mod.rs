@@ -37,10 +37,121 @@ pub mod parallel;
 pub mod plan;
 pub mod tensor;
 
-pub use parallel::{execute_plan_parallel, execute_plan_parallel_stats, ExecStats};
-pub use tensor::{Tensor, View};
+pub use parallel::{execute_plan_parallel, execute_plan_parallel_stats, ExecStats, PreparedExec};
+pub use tensor::{matmul_i8, QuantizedTensor, Tensor, View};
 
+use std::collections::HashMap;
 use std::fmt;
+
+use crate::compiler::ir::{Node, NodeId, Op};
+
+/// Layered read-only feed lookup: per-request inputs resolved over a
+/// persistent weight map, with no copying. Serving keeps its weights in
+/// one long-lived map and builds only the tiny request map (ids + masks)
+/// per forward — previously every forward deep-copied the whole weight
+/// set into a merged map (ROADMAP open item).
+#[derive(Debug, Clone, Copy)]
+pub struct Feeds<'a> {
+    request: &'a HashMap<String, Vec<f32>>,
+    base: Option<&'a HashMap<String, Vec<f32>>>,
+}
+
+impl<'a> Feeds<'a> {
+    /// A single flat map (the historical call shape).
+    pub fn single(m: &'a HashMap<String, Vec<f32>>) -> Self {
+        Feeds { request: m, base: None }
+    }
+
+    /// `request` entries shadow `base` entries of the same name.
+    pub fn layered(
+        request: &'a HashMap<String, Vec<f32>>,
+        base: &'a HashMap<String, Vec<f32>>,
+    ) -> Self {
+        Feeds { request, base: Some(base) }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&'a [f32]> {
+        if let Some(v) = self.request.get(name) {
+            return Some(v.as_slice());
+        }
+        self.base.and_then(|b| b.get(name)).map(|v| v.as_slice())
+    }
+}
+
+/// A leaf's runtime value: feed data borrowed straight from the caller's
+/// maps (kernels consume `View`s, so no copy is ever needed), or an
+/// inline constant.
+#[derive(Debug, Clone, Copy)]
+pub enum LeafValue<'a> {
+    Slice(&'a [f32]),
+    Scalar(f32),
+}
+
+impl LeafValue<'_> {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            LeafValue::Slice(s) => s,
+            LeafValue::Scalar(v) => std::slice::from_ref(v),
+        }
+    }
+}
+
+/// Fetch and validate a leaf's feed as a borrowed value — shared by all
+/// executors so malformed requests fail the same typed way everywhere.
+pub fn leaf_value<'a>(node: &Node, feeds: &Feeds<'a>) -> Result<LeafValue<'a>, ExecError> {
+    match &node.op {
+        Op::Input { name } | Op::Weight { name } => {
+            let data = feeds
+                .get(name)
+                .ok_or_else(|| ExecError::MissingFeed { name: name.clone() })?;
+            let expected = node.shape.numel();
+            if data.len() != expected {
+                return Err(ExecError::FeedShape {
+                    name: name.clone(),
+                    expected,
+                    got: data.len(),
+                });
+            }
+            Ok(LeafValue::Slice(data))
+        }
+        Op::Const { value } => Ok(LeafValue::Scalar(*value)),
+        op => unreachable!("leaf_value on non-leaf {op:?}"),
+    }
+}
+
+/// INT8 side table for the compression subsystem: per-channel quantized
+/// weights keyed by their leaf node id, plus optional calibrated static
+/// activation scales keyed by matmul node id (absent entries = dynamic
+/// per-row quantization). Built once per model by
+/// `Compiled::quantize_weights` / `compress::quant`; both plan executors
+/// consult it when dispatching matmul nodes.
+#[derive(Debug, Clone, Default)]
+pub struct QuantizedWeights {
+    pub by_node: HashMap<NodeId, QuantizedTensor>,
+    pub act_scale: HashMap<NodeId, f32>,
+}
+
+impl QuantizedWeights {
+    pub fn is_empty(&self) -> bool {
+        self.by_node.is_empty()
+    }
+}
+
+/// Shared executor dispatch: `Some((quantized rhs, static act scale))`
+/// when node `n` is a matmul whose RHS weight has an int8 entry.
+pub(crate) fn quant_matmul<'q>(
+    g: &crate::compiler::ir::Graph,
+    n: NodeId,
+    quant: Option<&'q QuantizedWeights>,
+) -> Option<(&'q QuantizedTensor, Option<f32>)> {
+    let q = quant?;
+    let node = &g.nodes[n];
+    if node.op != Op::MatMul {
+        return None;
+    }
+    let qt = q.by_node.get(node.inputs.get(1)?)?;
+    Some((qt, q.act_scale.get(&n).copied()))
+}
 
 /// Typed executor failure: everything a *caller* can get wrong. Internal
 /// invariant violations still panic (they are compiler bugs, not inputs).

@@ -22,17 +22,25 @@
 //! Numerics are bitwise-identical to the sequential [`super::plan`]
 //! executor: both run the same tapes and the same native kernels in the
 //! same per-element order (asserted by `tests/exec_differential.rs`).
+//!
+//! The feed-independent parts of execution — waves, arena plan, compiled
+//! kernels — live in [`PreparedExec`] so steady-state serving derives
+//! them once per model instead of once per request, and leaf data is
+//! *borrowed* from the caller's feed maps ([`super::Feeds`] /
+//! [`super::LeafValue`]) instead of deep-copied. Matmul nodes whose RHS
+//! weight appears in an int8 table ([`super::QuantizedWeights`]) dispatch
+//! to the quantized kernel (`compress` subsystem).
 
 use std::collections::HashMap;
 
 use super::arena::{plan_arena, ArenaPlan};
-use super::interp::{apply_op, leaf_tensor};
+use super::interp::apply_op;
 use super::plan::{
     layernorm_rows, match_layernorm, match_softmax, row_split, softmax_rows,
     LayernormPattern, ScheduleChoices, SoftmaxPattern,
 };
-use super::tensor::{Tensor, View};
-use super::ExecError;
+use super::tensor::{matmul_i8, Tensor, View};
+use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, QuantizedWeights};
 use crate::compiler::codegen::tape::{compile_block, BlockTape};
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId};
@@ -88,6 +96,29 @@ pub fn block_waves(plan: &FusionPlan) -> Vec<Vec<usize>> {
     waves
 }
 
+/// Everything about executing `(graph, plan)` that is independent of the
+/// feeds: the wave schedule, the arena plan, and the per-block compiled
+/// kernels (tapes / matched native patterns). All three are pure
+/// functions of the compiled artifact, so serving caches one
+/// `PreparedExec` on [`crate::compiler::Compiled`] and stops re-deriving
+/// them on every request (ROADMAP open item); the one-shot entry points
+/// below build a throwaway instance.
+#[derive(Debug, Clone)]
+pub struct PreparedExec {
+    pub waves: Vec<Vec<usize>>,
+    pub arena: ArenaPlan,
+    kernels: Vec<Kernel>,
+}
+
+impl PreparedExec {
+    pub fn new(g: &Graph, plan: &FusionPlan) -> Self {
+        let waves = block_waves(plan);
+        let arena = plan_arena(g, plan, &waves);
+        let kernels = plan.blocks.iter().map(|b| prepare_kernel(g, b)).collect();
+        PreparedExec { waves, arena, kernels }
+    }
+}
+
 /// Execute the plan on `threads` worker threads (1 = sequential wave
 /// order, same numerics). See module docs.
 pub fn execute_plan_parallel(
@@ -108,20 +139,34 @@ pub fn execute_plan_parallel_stats(
     schedules: &ScheduleChoices,
     threads: usize,
 ) -> Result<(Vec<Tensor>, ExecStats), ExecError> {
+    let prep = PreparedExec::new(g, plan);
+    execute_prepared(g, plan, &prep, &Feeds::single(feeds), schedules, threads, None)
+}
+
+/// The full-control entry point: a cached [`PreparedExec`], layered feeds
+/// (leaf data borrowed, never copied), and an optional int8 weight table
+/// (the compression subsystem's quantized execution path).
+pub fn execute_prepared(
+    g: &Graph,
+    plan: &FusionPlan,
+    prep: &PreparedExec,
+    feeds: &Feeds<'_>,
+    schedules: &ScheduleChoices,
+    threads: usize,
+    quant: Option<&QuantizedWeights>,
+) -> Result<(Vec<Tensor>, ExecStats), ExecError> {
     let threads = threads.max(1);
 
-    // Validate + materialize leaves up front: a malformed request fails
-    // here, typed, before any thread is spawned.
-    let mut leaf: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    // Validate + borrow leaves up front: a malformed request fails here,
+    // typed, before any thread is spawned.
+    let mut leaf: Vec<Option<LeafValue>> = vec![None; g.nodes.len()];
     for (id, node) in g.nodes.iter().enumerate() {
         if node.op.is_leaf() {
-            leaf[id] = Some(leaf_tensor(node, feeds)?);
+            leaf[id] = Some(leaf_value(node, feeds)?);
         }
     }
 
-    let waves = block_waves(plan);
-    let arena = plan_arena(g, plan, &waves);
-    let kernels: Vec<Kernel> = plan.blocks.iter().map(|b| prepare_kernel(g, b)).collect();
+    let (waves, arena, kernels) = (&prep.waves, &prep.arena, &prep.kernels);
     let stats = ExecStats {
         waves: waves.len(),
         max_wave_width: waves.iter().map(|w| w.len()).max().unwrap_or(0),
@@ -134,7 +179,7 @@ pub fn execute_plan_parallel_stats(
     let mut slab = Slab::new(arena.slab_len);
     let shared = slab.shared();
 
-    for wave in &waves {
+    for wave in waves {
         let wave_elems: usize = wave
             .iter()
             .flat_map(|&bi| plan.blocks[bi].outputs.iter())
@@ -145,7 +190,7 @@ pub fn execute_plan_parallel_stats(
         if par && wave.len() == 1 {
             let bi = wave[0];
             let sched = sched_of(schedules, plan, bi);
-            if row_parallel(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, &arena, threads)
+            if row_parallel(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, arena, threads)
             {
                 continue;
             }
@@ -154,11 +199,11 @@ pub fn execute_plan_parallel_stats(
         if !par || wave.len() == 1 {
             for &bi in wave {
                 let sched = sched_of(schedules, plan, bi);
-                run_block(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, &arena);
+                run_block(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, arena, quant);
             }
         } else {
             let nt = threads.min(wave.len());
-            let (leaf_ref, arena_ref, kernels_ref) = (&leaf, &arena, &kernels);
+            let leaf_ref = &leaf;
             std::thread::scope(|scope| {
                 for t in 0..nt {
                     let blocks: Vec<usize> = wave.iter().copied().skip(t).step_by(nt).collect();
@@ -168,11 +213,12 @@ pub fn execute_plan_parallel_stats(
                             run_block(
                                 g,
                                 &plan.blocks[bi],
-                                &kernels_ref[bi],
+                                &kernels[bi],
                                 sched,
                                 leaf_ref,
                                 shared,
-                                arena_ref,
+                                arena,
+                                quant,
                             );
                         }
                     });
@@ -185,8 +231,11 @@ pub fn execute_plan_parallel_stats(
         .outputs
         .iter()
         .map(|&o| {
-            if let Some(t) = &leaf[o] {
-                return t.clone();
+            if let Some(lv) = &leaf[o] {
+                return Tensor {
+                    shape: g.nodes[o].shape.clone(),
+                    data: lv.as_slice().to_vec(),
+                };
             }
             let r = arena.regions[&o];
             // SAFETY: every writer joined at its wave barrier; graph
@@ -205,8 +254,9 @@ fn sched_of(schedules: &ScheduleChoices, plan: &FusionPlan, bi: usize) -> Schedu
         .unwrap_or(Schedule::RowRecompute)
 }
 
-/// Per-block dispatch, resolved once before execution so worker threads
-/// never re-derive patterns or recompile tapes.
+/// Per-block dispatch, resolved once at [`PreparedExec::new`] time so
+/// worker threads never re-derive patterns or recompile tapes.
+#[derive(Debug, Clone)]
 enum Kernel {
     Tape(BlockTape),
     Softmax(SoftmaxPattern),
@@ -238,17 +288,17 @@ fn prepare_kernel(g: &Graph, block: &FusedBlock) -> Kernel {
     }
 }
 
-/// Read a value: leaves from the feed tensors, everything else from its
-/// arena region.
+/// Read a value: leaves from the borrowed feed slices, everything else
+/// from its arena region.
 fn value_view<'a>(
     g: &'a Graph,
     nid: NodeId,
-    leaf: &'a [Option<Tensor>],
+    leaf: &'a [Option<LeafValue<'a>>],
     slab: SharedSlab<'a>,
     arena: &'a ArenaPlan,
 ) -> View<'a> {
-    if let Some(t) = &leaf[nid] {
-        return t.view();
+    if let Some(lv) = &leaf[nid] {
+        return View { shape: &g.nodes[nid].shape, data: lv.as_slice() };
     }
     let r = arena.regions[&nid];
     // SAFETY: `nid` was produced in an earlier wave (the wave barrier
@@ -265,14 +315,16 @@ fn out_region<'a>(slab: SharedSlab<'a>, arena: &ArenaPlan, nid: NodeId) -> &'a m
     unsafe { slab.write(r.offset, r.len) }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_block(
     g: &Graph,
     block: &FusedBlock,
     kernel: &Kernel,
     sched: Schedule,
-    leaf: &[Option<Tensor>],
+    leaf: &[Option<LeafValue>],
     slab: SharedSlab<'_>,
     arena: &ArenaPlan,
+    quant: Option<&QuantizedWeights>,
 ) {
     match kernel {
         Kernel::Tape(tape) => {
@@ -310,20 +362,24 @@ fn run_block(
         }
         Kernel::Fallback => {
             // Per-node execution with block-local scratch; only the block
-            // outputs are copied into their regions.
+            // outputs are copied into their regions. Matmuls whose RHS
+            // weight has an int8 entry run the quantized kernel — the
+            // exact dispatch the sequential executor makes, keeping the
+            // two bitwise identical under compression.
             let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
             for &n in &block.nodes {
                 let node = &g.nodes[n];
                 let t = {
-                    let args: Vec<View> = node
-                        .inputs
-                        .iter()
-                        .map(|&i| match scratch.get(&i) {
-                            Some(s) => s.view(),
-                            None => value_view(g, i, leaf, slab, arena),
-                        })
-                        .collect();
-                    apply_op(&node.op, &args, &node.shape)
+                    let arg = |i: NodeId| match scratch.get(&i) {
+                        Some(s) => s.view(),
+                        None => value_view(g, i, leaf, slab, arena),
+                    };
+                    if let Some((qt, scale)) = quant_matmul(g, n, quant) {
+                        matmul_i8(arg(node.inputs[0]), qt, scale, &node.shape)
+                    } else {
+                        let args: Vec<View> = node.inputs.iter().map(|&i| arg(i)).collect();
+                        apply_op(&node.op, &args, &node.shape)
+                    }
                 };
                 scratch.insert(n, t);
             }
@@ -343,7 +399,7 @@ fn row_parallel(
     block: &FusedBlock,
     kernel: &Kernel,
     sched: Schedule,
-    leaf: &[Option<Tensor>],
+    leaf: &[Option<LeafValue>],
     slab: SharedSlab<'_>,
     arena: &ArenaPlan,
     threads: usize,
@@ -520,6 +576,58 @@ mod tests {
         assert_eq!(stats.waves, 7);
         assert!(stats.peak_arena_bytes < stats.naive_bytes);
         assert!(stats.slab_bytes >= stats.peak_arena_bytes);
+    }
+
+    #[test]
+    fn prepared_exec_reuse_matches_one_shot() {
+        let g = wide_graph(16, 24);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let prep = PreparedExec::new(&g, &plan);
+        let one_shot_feeds = feeds_for(&g, 5);
+        let fresh =
+            execute_plan_parallel(&g, &plan, &one_shot_feeds, &HashMap::new(), 2).unwrap();
+        // Same PreparedExec serves many requests with identical results.
+        for _ in 0..3 {
+            let (got, stats) = execute_prepared(
+                &g,
+                &plan,
+                &prep,
+                &Feeds::single(&one_shot_feeds),
+                &HashMap::new(),
+                2,
+                None,
+            )
+            .unwrap();
+            assert_eq!(got[0].data, fresh[0].data);
+            assert_eq!(stats.waves, prep.waves.len());
+        }
+    }
+
+    #[test]
+    fn layered_feeds_shadow_base() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let w = g.weight("w", &[4]);
+        let o = g.add(a, w);
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let prep = PreparedExec::new(&g, &plan);
+        let mut base = HashMap::new();
+        base.insert("w".to_string(), vec![1.0; 4]);
+        base.insert("a".to_string(), vec![9.0; 4]); // shadowed below
+        let mut request = HashMap::new();
+        request.insert("a".to_string(), vec![2.0; 4]);
+        let (out, _) = execute_prepared(
+            &g,
+            &plan,
+            &prep,
+            &Feeds::layered(&request, &base),
+            &HashMap::new(),
+            1,
+            None,
+        )
+        .unwrap();
+        assert_eq!(out[0].data, vec![3.0; 4]);
     }
 
     #[test]

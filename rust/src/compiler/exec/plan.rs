@@ -17,9 +17,9 @@
 
 use std::collections::HashMap;
 
-use super::interp::{apply_op, leaf_tensor};
-use super::tensor::{Tensor, View};
-use super::ExecError;
+use super::interp::apply_op;
+use super::tensor::{matmul_i8, Tensor, View};
+use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, QuantizedWeights};
 use crate::compiler::codegen::tape::compile_block;
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId, Op, Shape};
@@ -35,28 +35,73 @@ pub fn execute_plan(
     feeds: &HashMap<String, Vec<f32>>,
     schedules: &ScheduleChoices,
 ) -> Result<Vec<Tensor>, ExecError> {
-    let mut vals: HashMap<NodeId, Tensor> = HashMap::new();
+    execute_plan_with(g, plan, &Feeds::single(feeds), schedules, None)
+}
 
-    // Materialize leaves.
+/// Full-control entry point: layered feeds (leaf data is *borrowed* from
+/// the caller's maps — no weight copies) and an optional int8 weight
+/// table (the compression subsystem's quantized execution).
+pub fn execute_plan_with(
+    g: &Graph,
+    plan: &FusionPlan,
+    feeds: &Feeds<'_>,
+    schedules: &ScheduleChoices,
+    quant: Option<&QuantizedWeights>,
+) -> Result<Vec<Tensor>, ExecError> {
+    // Validate + borrow leaves up front (typed errors before any work).
+    let mut leaf: Vec<Option<LeafValue>> = vec![None; g.nodes.len()];
     for (id, node) in g.nodes.iter().enumerate() {
         if node.op.is_leaf() {
-            vals.insert(id, leaf_tensor(node, feeds)?);
+            leaf[id] = Some(leaf_value(node, feeds)?);
         }
     }
 
+    let mut vals: HashMap<NodeId, Tensor> = HashMap::new();
     for block in &plan.blocks {
         let sched = schedules.get(&block.id).copied().unwrap_or(Schedule::RowRecompute);
-        execute_block(g, block, sched, &mut vals);
+        execute_block(g, block, sched, &leaf, &mut vals, quant);
     }
 
-    Ok(g.outputs.iter().map(|o| vals[o].clone()).collect())
+    Ok(g
+        .outputs
+        .iter()
+        .map(|&o| match &leaf[o] {
+            Some(lv) => Tensor { shape: g.nodes[o].shape.clone(), data: lv.as_slice().to_vec() },
+            None => vals[&o].clone(),
+        })
+        .collect())
+}
+
+/// Read a value: leaves from the borrowed feeds, everything else from the
+/// per-node map of block outputs.
+fn try_view<'a>(
+    g: &'a Graph,
+    nid: NodeId,
+    leaf: &'a [Option<LeafValue<'a>>],
+    vals: &'a HashMap<NodeId, Tensor>,
+) -> Option<View<'a>> {
+    if let Some(lv) = &leaf[nid] {
+        return Some(View { shape: &g.nodes[nid].shape, data: lv.as_slice() });
+    }
+    vals.get(&nid).map(|t| t.view())
+}
+
+fn value_view<'a>(
+    g: &'a Graph,
+    nid: NodeId,
+    leaf: &'a [Option<LeafValue<'a>>],
+    vals: &'a HashMap<NodeId, Tensor>,
+) -> View<'a> {
+    try_view(g, nid, leaf, vals).expect("value computed before use (topo order)")
 }
 
 pub fn execute_block(
     g: &Graph,
     block: &FusedBlock,
     sched: Schedule,
+    leaf: &[Option<LeafValue>],
     vals: &mut HashMap<NodeId, Tensor>,
+    quant: Option<&QuantizedWeights>,
 ) {
     match block.kind {
         BlockKind::ElementwiseChain | BlockKind::BroadcastElementwise => {
@@ -67,12 +112,13 @@ pub fn execute_block(
             // (rare, multi-output) blocks.
             let domain = crate::compiler::poly::block_output_shape(g, block);
             if block.outputs.iter().any(|&o| g.nodes[o].shape != domain) {
-                fallback(g, block, vals);
+                fallback(g, block, leaf, vals, quant);
                 return;
             }
             let tape = compile_block(g, block);
             let outs = {
-                let bufs: Vec<View> = tape.inputs.iter().map(|i| vals[i].view()).collect();
+                let bufs: Vec<View> =
+                    tape.inputs.iter().map(|&i| value_view(g, i, leaf, vals)).collect();
                 tape.execute_views(&bufs, sched)
             };
             let keys: Vec<NodeId> = tape.output_regs.iter().map(|&(n, _)| n).collect();
@@ -82,41 +128,57 @@ pub fn execute_block(
         }
         BlockKind::Reduction => {
             if let Some(p) = match_softmax(g, block) {
-                if let Some(xt) = vals.get(&p.x) {
+                if let Some(xt) = try_view(g, p.x, leaf, vals) {
                     let shape = g.nodes[p.out].shape.clone();
                     let (rows, cols) = row_split(&shape);
                     let mut out = vec![0.0f32; shape.numel()];
-                    softmax_rows(&xt.data, rows, cols, &mut out);
+                    softmax_rows(xt.data, rows, cols, &mut out);
                     vals.insert(p.out, Tensor { shape, data: out });
                     return;
                 }
             }
             if let Some(p) = match_layernorm(g, block) {
-                if let (Some(xt), Some(gt), Some(bt)) =
-                    (vals.get(&p.x), vals.get(&p.gamma), vals.get(&p.beta))
-                {
+                if let (Some(xt), Some(gt), Some(bt)) = (
+                    try_view(g, p.x, leaf, vals),
+                    try_view(g, p.gamma, leaf, vals),
+                    try_view(g, p.beta, leaf, vals),
+                ) {
                     let shape = g.nodes[p.out].shape.clone();
                     let (rows, cols) = row_split(&shape);
                     let mut out = vec![0.0f32; shape.numel()];
-                    layernorm_rows(&xt.data, &gt.data, &bt.data, p.eps, rows, cols, &mut out);
+                    layernorm_rows(xt.data, gt.data, bt.data, p.eps, rows, cols, &mut out);
                     vals.insert(p.out, Tensor { shape, data: out });
                     return;
                 }
             }
-            fallback(g, block, vals);
+            fallback(g, block, leaf, vals, quant);
         }
-        _ => fallback(g, block, vals),
+        _ => fallback(g, block, leaf, vals, quant),
     }
 }
 
 /// Per-node fallback inside a block (semantically the unfused execution,
-/// restricted to the block's members).
-fn fallback(g: &Graph, block: &FusedBlock, vals: &mut HashMap<NodeId, Tensor>) {
+/// restricted to the block's members). Matmul nodes whose RHS weight has
+/// an int8 entry dispatch to the quantized kernel — the same dispatch the
+/// wave-parallel executor makes, so the two stay bitwise identical.
+fn fallback(
+    g: &Graph,
+    block: &FusedBlock,
+    leaf: &[Option<LeafValue>],
+    vals: &mut HashMap<NodeId, Tensor>,
+    quant: Option<&QuantizedWeights>,
+) {
     for &n in &block.nodes {
         let node = &g.nodes[n];
         let out = {
-            let args: Vec<View> = node.inputs.iter().map(|i| vals[i].view()).collect();
-            apply_op(&node.op, &args, &node.shape)
+            if let Some((qt, scale)) = quant_matmul(g, n, quant) {
+                let lhs = value_view(g, node.inputs[0], leaf, vals);
+                matmul_i8(lhs, qt, scale, &node.shape)
+            } else {
+                let args: Vec<View> =
+                    node.inputs.iter().map(|&i| value_view(g, i, leaf, vals)).collect();
+                apply_op(&node.op, &args, &node.shape)
+            }
         };
         vals.insert(n, out);
     }

@@ -79,6 +79,127 @@ impl<'a> View<'a> {
     }
 }
 
+/// Per-channel symmetric INT8 tensor — the compression subsystem's weight
+/// representation (paper §2.1: post-training quantization as the second
+/// half of the compression-compilation co-design).
+///
+/// Layout: row-major `i8` payload with one fp32 scale per *output
+/// channel* (the last axis of a `[k, n]` matmul weight), so
+/// `fp32[i, j] ≈ data[i, j] as f32 * scales[j]`. Symmetric (no zero
+/// point): the int8 matmul kernel stays a pure `i8 x i8 -> i32` dot with
+/// a single fp32 rescale at the end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedTensor {
+    pub shape: Shape,
+    pub data: Vec<i8>,
+    /// One scale per last-axis column; `scales.len() == shape.dims[1]`.
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedTensor {
+    /// Quantize a rank-2 weight `[k, n]` symmetrically per output column:
+    /// `scale[j] = max_i |w[i, j]| / 127`.
+    pub fn per_channel(w: View) -> QuantizedTensor {
+        assert_eq!(w.shape.rank(), 2, "per-channel quantization needs a [k, n] weight");
+        let (k, n) = (w.shape.dims[0], w.shape.dims[1]);
+        let mut scales = vec![1.0f32; n];
+        for (j, s) in scales.iter_mut().enumerate() {
+            let mut m = 0.0f32;
+            for i in 0..k {
+                m = m.max(w.data[i * n + j].abs());
+            }
+            if m > 0.0 {
+                *s = m / 127.0;
+            }
+        }
+        let mut data = vec![0i8; k * n];
+        for i in 0..k {
+            for j in 0..n {
+                let q = (w.data[i * n + j] / scales[j]).round();
+                data[i * n + j] = q.clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantizedTensor { shape: w.shape.clone(), data, scales }
+    }
+
+    /// Reconstruct the fp32 tensor (each element within scale/2 of the
+    /// original — asserted in tests).
+    pub fn dequantize(&self) -> Tensor {
+        let n = self.shape.dims[1];
+        let data = self
+            .data
+            .iter()
+            .enumerate()
+            .map(|(idx, &q)| q as f32 * self.scales[idx % n])
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Payload bytes (1 per element + 4 per channel scale).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+}
+
+/// INT8 matmul: `lhs [.., m, k]` fp32 activations x per-channel quantized
+/// `rhs [k, n]` weight -> fp32 `[.., m, n]`.
+///
+/// Each lhs row is quantized symmetrically on the fly (`absmax/127`, or
+/// the calibrated static `act_scale` when the compression calibrator
+/// provides one), the dot products accumulate in `i32`, and one fp32
+/// multiply per output (`row_scale * scales[j]`) rescales back. This is
+/// the kernel both plan executors dispatch to for matmul nodes whose RHS
+/// weight carries an int8 entry — see `exec::plan` / `exec::parallel`.
+pub fn matmul_i8(
+    lhs: View,
+    rhs: &QuantizedTensor,
+    act_scale: Option<f32>,
+    out_shape: &Shape,
+) -> Tensor {
+    let (k, n) = (rhs.shape.dims[0], rhs.shape.dims[1]);
+    debug_assert_eq!(lhs.shape.dims.last().copied(), Some(k), "lhs inner dim != k");
+    let rows = lhs.numel() / k;
+    debug_assert_eq!(out_shape.numel(), rows * n, "out shape mismatch");
+
+    let mut out = vec![0.0f32; rows * n];
+    let mut qa = vec![0i8; k];
+    let mut acc = vec![0i32; n];
+    for r in 0..rows {
+        let arow = &lhs.data[r * k..(r + 1) * k];
+        let s_a = match act_scale {
+            Some(s) => s,
+            None => {
+                let m = arow.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                if m > 0.0 {
+                    m / 127.0
+                } else {
+                    1.0
+                }
+            }
+        };
+        let inv = 1.0 / s_a;
+        for (q, &a) in qa.iter_mut().zip(arow) {
+            *q = (a * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+        acc.fill(0);
+        for kk in 0..k {
+            let av = qa[kk] as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &rhs.data[kk * n..(kk + 1) * n];
+            for (a, &b) in acc.iter_mut().zip(brow) {
+                *a += av * b as i32;
+            }
+        }
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = acc[j] as f32 * (s_a * rhs.scales[j]);
+        }
+    }
+    Tensor { shape: out_shape.clone(), data: out }
+}
+
 /// Iterate all coordinates of `shape` in row-major order.
 pub fn for_each_coord(shape: &Shape, mut f: impl FnMut(&[usize])) {
     let r = shape.rank();
@@ -120,6 +241,79 @@ mod tests {
         let mut seen = Vec::new();
         for_each_coord(&s, |c| seen.push(c.to_vec()));
         assert_eq!(seen, vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]);
+    }
+
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn per_channel_quantization_round_trip() {
+        let mut rng = Rng::new(42);
+        let w = Tensor::randn(&[8, 6], &mut rng, 0.3);
+        let q = QuantizedTensor::per_channel(w.view());
+        assert_eq!(q.scales.len(), 6);
+        let d = q.dequantize();
+        for (j, (&orig, &deq)) in w.data.iter().zip(&d.data).enumerate() {
+            let tol = q.scales[j % 6] * 0.5 + 1e-7;
+            assert!((orig - deq).abs() <= tol, "elem {j}: {orig} vs {deq}");
+        }
+        // Int8 storage is ~4x smaller than fp32.
+        assert!(q.size_bytes() < w.data.len() * 4 / 2);
+    }
+
+    #[test]
+    fn quantize_zero_column_is_safe() {
+        let w = Tensor::from_vec(&[2, 2], vec![0.0, 1.0, 0.0, -2.0]);
+        let q = QuantizedTensor::per_channel(w.view());
+        assert_eq!(q.scales[0], 1.0); // all-zero column keeps the default scale
+        assert_eq!(q.data[0], 0);
+        assert_eq!(q.data[2], 0);
+    }
+
+    #[test]
+    fn matmul_i8_close_to_fp32() {
+        let mut rng = Rng::new(7);
+        let a = Tensor::randn(&[5, 16], &mut rng, 1.0);
+        let w = Tensor::randn(&[16, 4], &mut rng, 0.2);
+        let q = QuantizedTensor::per_channel(w.view());
+        let out_shape = Shape::new(&[5, 4]);
+        let got = matmul_i8(a.view(), &q, None, &out_shape);
+        // fp32 reference
+        let mut expect = vec![0.0f32; 5 * 4];
+        for i in 0..5 {
+            for j in 0..4 {
+                for k in 0..16 {
+                    expect[i * 4 + j] += a.data[i * 16 + k] * w.data[k * 4 + j];
+                }
+            }
+        }
+        for (g, e) in got.data.iter().zip(&expect) {
+            assert!((g - e).abs() < 0.05 + 0.05 * e.abs(), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn matmul_i8_batched_lhs() {
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[2, 3, 4], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 2], &mut rng, 0.5);
+        let q = QuantizedTensor::per_channel(w.view());
+        let out_shape = Shape::new(&[2, 3, 2]);
+        let got = matmul_i8(a.view(), &q, None, &out_shape);
+        assert_eq!(got.data.len(), 12);
+        assert!(got.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn matmul_i8_static_scale_matches_dynamic_on_uniform_rows() {
+        // When every row shares the same absmax, the calibrated static
+        // scale equals the dynamic per-row scale bit for bit.
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 2.0, -1.0]);
+        let w = Tensor::from_vec(&[2, 2], vec![0.5, 0.25, -0.5, 0.125]);
+        let q = QuantizedTensor::per_channel(w.view());
+        let out_shape = Shape::new(&[2, 2]);
+        let dynamic = matmul_i8(a.view(), &q, None, &out_shape);
+        let fixed = matmul_i8(a.view(), &q, Some(2.0 / 127.0), &out_shape);
+        assert_eq!(dynamic.data, fixed.data);
     }
 
     #[test]

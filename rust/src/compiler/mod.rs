@@ -19,12 +19,17 @@ pub mod poly;
 pub mod tuning;
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use exec::plan::ScheduleChoices;
+use exec::{Feeds, PreparedExec, QuantizedWeights};
 use fusion::{FusionConfig, FusionPlan};
 use ir::Graph;
 use passes::{PassManager, PassStat};
 use tuning::Autotuner;
+
+use crate::compress::quant::{quant_sites, QuantSite};
+use crate::compress::CompressionConfig;
 
 /// Everything the rest of the system needs from a compiled model.
 #[derive(Debug, Clone)]
@@ -35,6 +40,14 @@ pub struct Compiled {
     pub pass_stats: Vec<PassStat>,
     /// Ops in the graph as-built (pre-optimization).
     pub ops_before: usize,
+    /// INT8-eligible matmul sites (rank-2 weight RHS leaves), non-empty
+    /// iff compiled with `compression.int8` — the executors consult the
+    /// quantized table built from these by [`Compiled::quantize_weights`].
+    pub quant_sites: Vec<QuantSite>,
+    /// Feed-independent execution state (waves + arena plan + compiled
+    /// block kernels), derived lazily once and reused by every
+    /// `run_parallel*` call — serving's per-request overhead fix.
+    prepared: OnceLock<PreparedExec>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -44,6 +57,12 @@ pub struct CompileOptions {
     pub model_only_tuning: bool,
     /// Skip graph optimization passes entirely (for ablations).
     pub skip_passes: bool,
+    /// §2.1 model compression. Structured pruning is a *graph-level*
+    /// transform applied before `compile` (see `compress::compress_encoder`
+    /// — the graph handed in already has the smaller tensors); the int8
+    /// flag makes `compile` record the quantizable matmul sites so the
+    /// executors can run them on the int8 kernel.
+    pub compression: CompressionConfig,
 }
 
 impl CompileOptions {
@@ -67,10 +86,24 @@ pub fn compile(g: &Graph, opts: &CompileOptions) -> Compiled {
         Autotuner::new()
     };
     let (schedules, _) = tuner.tune_plan(&optimized, &plan, 0xC0FFEE);
-    Compiled { graph: optimized, plan, schedules, pass_stats, ops_before }
+    let quant_sites = if opts.compression.int8 { quant_sites(&optimized) } else { Vec::new() };
+    Compiled {
+        graph: optimized,
+        plan,
+        schedules,
+        pass_stats,
+        ops_before,
+        quant_sites,
+        prepared: OnceLock::new(),
+    }
 }
 
 impl Compiled {
+    /// The cached feed-independent execution state (built on first use).
+    pub fn prepared(&self) -> &PreparedExec {
+        self.prepared.get_or_init(|| PreparedExec::new(&self.graph, &self.plan))
+    }
+
     /// Execute on host with the sequential plan executor (the reference
     /// fused execution; bad feeds are typed errors, not panics).
     pub fn run(
@@ -80,6 +113,16 @@ impl Compiled {
         exec::plan::execute_plan(&self.graph, &self.plan, feeds, &self.schedules)
     }
 
+    /// As [`Compiled::run`], with layered feeds and an optional int8
+    /// weight table.
+    pub fn run_with(
+        &self,
+        feeds: &Feeds<'_>,
+        quant: Option<&QuantizedWeights>,
+    ) -> Result<Vec<exec::Tensor>, exec::ExecError> {
+        exec::plan::execute_plan_with(&self.graph, &self.plan, feeds, &self.schedules, quant)
+    }
+
     /// Execute on host with the wave-parallel arena executor on `threads`
     /// worker threads — the production host path.
     pub fn run_parallel(
@@ -87,13 +130,7 @@ impl Compiled {
         feeds: &HashMap<String, Vec<f32>>,
         threads: usize,
     ) -> Result<Vec<exec::Tensor>, exec::ExecError> {
-        exec::parallel::execute_plan_parallel(
-            &self.graph,
-            &self.plan,
-            feeds,
-            &self.schedules,
-            threads,
-        )
+        self.run_parallel_with(&Feeds::single(feeds), threads, None).map(|(t, _)| t)
     }
 
     /// As [`Compiled::run_parallel`], also returning wave/arena stats.
@@ -102,13 +139,34 @@ impl Compiled {
         feeds: &HashMap<String, Vec<f32>>,
         threads: usize,
     ) -> Result<(Vec<exec::Tensor>, exec::ExecStats), exec::ExecError> {
-        exec::parallel::execute_plan_parallel_stats(
+        self.run_parallel_with(&Feeds::single(feeds), threads, None)
+    }
+
+    /// The full-control parallel entry: cached [`PreparedExec`], layered
+    /// borrowed feeds, optional int8 weights. Every serving forward goes
+    /// through here.
+    pub fn run_parallel_with(
+        &self,
+        feeds: &Feeds<'_>,
+        threads: usize,
+        quant: Option<&QuantizedWeights>,
+    ) -> Result<(Vec<exec::Tensor>, exec::ExecStats), exec::ExecError> {
+        exec::parallel::execute_prepared(
             &self.graph,
             &self.plan,
+            self.prepared(),
             feeds,
             &self.schedules,
             threads,
+            quant,
         )
+    }
+
+    /// Build the executor's int8 side table from this model's quant sites
+    /// and a named weight map (per-channel symmetric, see
+    /// `compress::quant`). Empty when compiled without `compression.int8`.
+    pub fn quantize_weights(&self, weights: &HashMap<String, Vec<f32>>) -> QuantizedWeights {
+        crate::compress::quant::quantize_sites(&self.graph, &self.quant_sites, weights)
     }
 
     /// The paper's fusion-rate metrics: (ops, blocks, ops/block).

@@ -1,0 +1,215 @@
+//! Model compression (the paper's §2.1) — the *compression* half of the
+//! compression-compilation co-design framework.
+//!
+//! The paper's CANAO flow generates "the optimal compressed model that
+//! balances both accuracy and latency"; the two structured-compression
+//! mechanisms it relies on (and that CoCoPIE-style mobile frameworks use
+//! for real-time BERT) are implemented here, co-designed with the
+//! compiler so every downstream stage sees the *real* compressed shapes:
+//!
+//! * [`prune`] — **structured pruning**: magnitude-based attention-head
+//!   pruning and FFN column/row pruning. This is a graph-level transform:
+//!   it rewrites the weight tensors (slicing whole head blocks / FFN
+//!   channels) and rebuilds the encoder graph with genuinely smaller
+//!   tensor shapes (`model::build_encoder_with`), so LP-Fusion, the
+//!   arena planner, and the device simulator all price the pruned model —
+//!   not a masked one. The residual stream stays `hidden`-wide, so a
+//!   pruned encoder is a drop-in replacement for the dense one.
+//! * [`quant`] — **post-training INT8 quantization**: per-channel
+//!   symmetric weight quantization calibrated from the model's weight
+//!   feeds ([`crate::compiler::exec::QuantizedTensor`]), per-row dynamic
+//!   (or statically calibrated, see [`quant::calibrate_activations`])
+//!   activation quantization, and the `i8 x i8 -> i32 -> f32` matmul
+//!   kernel ([`crate::compiler::exec::matmul_i8`]) that both the
+//!   sequential and the wave-parallel plan executors dispatch to.
+//!
+//! How compression threads through the stack:
+//!
+//! 1. [`compress_encoder`] prunes the model (weights + graph) up front;
+//! 2. `compiler::compile` takes a [`CompressionConfig`] on its options
+//!    and records the int8-eligible matmul sites on `Compiled`;
+//! 3. `Compiled::quantize_weights` builds the executor's int8 table;
+//! 4. `nas::search` exposes the same knobs (heads kept, FFN keep ratio,
+//!    int8 on/off) as controller decision steps, pricing candidates from
+//!    the compressed shapes;
+//! 5. `serving::{NativeQaEngine, NativeGenEngine}::with_compression`
+//!    serve the compressed model, and `benches/table1_latency` reports
+//!    fp32 vs pruned vs pruned+int8 rows.
+//!
+//! Numerics contract (`tests/compress_differential.rs`): a pruned model
+//! is *bitwise equal* to the hand-shrunk reference model built directly
+//! at the smaller dims from the same kept slices; int8 outputs stay
+//! within a documented tolerance of fp32; and sequential vs parallel
+//! execution of a compressed model stays bitwise identical.
+
+pub mod prune;
+pub mod quant;
+
+use std::collections::HashMap;
+
+use crate::compiler::ir::Graph;
+use crate::model::{build_encoder, BertConfig};
+
+pub use prune::{LayerPrune, PruneSpec};
+pub use quant::{quant_sites, QuantSite};
+
+/// What to compress. `Default` = no compression (dense fp32).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CompressionConfig {
+    /// Structured pruning (heads + FFN channels); `None` keeps the model
+    /// dense.
+    pub prune: Option<PruneSpec>,
+    /// Post-training INT8 quantization of the rank-2 matmul weights.
+    pub int8: bool,
+}
+
+impl CompressionConfig {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn pruned(head_keep: f32, ffn_keep: f32) -> Self {
+        CompressionConfig { prune: Some(PruneSpec { head_keep, ffn_keep }), int8: false }
+    }
+
+    pub fn pruned_int8(head_keep: f32, ffn_keep: f32) -> Self {
+        CompressionConfig { prune: Some(PruneSpec { head_keep, ffn_keep }), int8: true }
+    }
+
+    pub fn int8_only() -> Self {
+        CompressionConfig { prune: None, int8: true }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.prune.is_none() && !self.int8
+    }
+}
+
+/// What compression did to the model (for benches and reports).
+#[derive(Debug, Clone)]
+pub struct CompressionReport {
+    /// Fp32 parameter count before/after structured pruning.
+    pub params_before: usize,
+    pub params_after: usize,
+    /// Post-pruning parameters that int8 actually covers (the rank-2
+    /// matmul weights `quant_sites` finds); 0 when int8 is off.
+    pub quantized_params: usize,
+    /// Per-layer kept indices; empty when no pruning ran.
+    pub layers: Vec<LayerPrune>,
+    pub int8: bool,
+}
+
+impl CompressionReport {
+    /// Model-size reduction factor counting both pruning (fewer
+    /// parameters) and int8 storage. Only the parameters int8 actually
+    /// covers are priced at 1 byte — embeddings, layernorm parameters,
+    /// and biases stay fp32 (per-channel scale overhead, ~1/k of the
+    /// quantized bytes, is ignored).
+    pub fn size_ratio(&self) -> f64 {
+        let before = (self.params_before * 4) as f64;
+        let after_bytes = (self.params_after - self.quantized_params) * 4 + self.quantized_params;
+        before / (after_bytes as f64).max(1.0)
+    }
+}
+
+/// The compression front door: apply the spec's structured pruning to an
+/// encoder-family model, mutating `weights` in place (head/FFN slices
+/// removed) and returning the pruned encoder graph whose tensors have the
+/// genuinely smaller shapes. Non-encoder weights in the map (e.g. a QA or
+/// LM head) pass through untouched — pruning never changes the encoder's
+/// external interface. Quantization happens later, against the *compiled*
+/// graph (`Compiled::quantize_weights`), because the int8 table is keyed
+/// by post-optimization node ids.
+pub fn compress_encoder(
+    cfg: &BertConfig,
+    weights: &mut HashMap<String, Vec<f32>>,
+    spec: &CompressionConfig,
+) -> (Graph, CompressionReport) {
+    let params_before: usize = weights.values().map(|v| v.len()).sum();
+    let (graph, layers) = match &spec.prune {
+        Some(p) => prune::prune_encoder(cfg, weights, p),
+        None => (build_encoder(cfg), Vec::new()),
+    };
+    let params_after: usize = weights.values().map(|v| v.len()).sum();
+    let quantized_params: usize = if spec.int8 {
+        quant::quant_sites(&graph)
+            .iter()
+            .filter_map(|s| weights.get(&s.name))
+            .map(|v| v.len())
+            .sum()
+    } else {
+        0
+    };
+    let report = CompressionReport {
+        params_before,
+        params_after,
+        quantized_params,
+        layers,
+        int8: spec.int8,
+    };
+    (graph, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::Op;
+    use crate::serving::init_weights;
+
+    fn tiny_cfg() -> BertConfig {
+        BertConfig { vocab: 64, seq: 8, layers: 2, hidden: 16, heads: 4, inter: 24 }
+    }
+
+    #[test]
+    fn no_compression_is_identity() {
+        let cfg = tiny_cfg();
+        let g = build_encoder(&cfg);
+        let mut weights = init_weights(&g, 1);
+        let before = weights.clone();
+        let (out, report) = compress_encoder(&cfg, &mut weights, &CompressionConfig::none());
+        assert_eq!(weights, before);
+        assert_eq!(report.params_before, report.params_after);
+        assert_eq!(out.nodes.len(), g.nodes.len());
+        assert!((report.size_ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pruning_shrinks_params_and_report_counts() {
+        let cfg = tiny_cfg();
+        let g = build_encoder(&cfg);
+        let mut weights = init_weights(&g, 2);
+        let spec = CompressionConfig::pruned(0.5, 0.5);
+        let (pruned, report) = compress_encoder(&cfg, &mut weights, &spec);
+        assert!(report.params_after < report.params_before);
+        assert!(report.size_ratio() > 1.0);
+        assert_eq!(report.layers.len(), cfg.layers);
+        for lp in &report.layers {
+            assert_eq!(lp.heads.len(), 2); // 4 heads * 0.5
+            assert_eq!(lp.ffn.len(), 12); // 24 channels * 0.5
+        }
+        // Every pruned weight in the map matches its graph shape.
+        for node in &pruned.nodes {
+            if let Op::Weight { name } = &node.op {
+                assert_eq!(
+                    weights[name].len(),
+                    node.shape.numel(),
+                    "weight {name} shape mismatch after pruning"
+                );
+            }
+        }
+        // Int8 on top shrinks the storage estimate further — but only the
+        // matmul weights it covers count at 1 byte.
+        let spec8 = CompressionConfig::pruned_int8(0.5, 0.5);
+        let g2 = build_encoder(&cfg);
+        let mut w2 = init_weights(&g2, 2);
+        let (_, report8) = compress_encoder(&cfg, &mut w2, &spec8);
+        assert!(report8.quantized_params > 0);
+        assert!(report8.quantized_params < report8.params_after);
+        assert!(
+            report8.size_ratio() > 1.5 * report.size_ratio(),
+            "{} vs {}",
+            report8.size_ratio(),
+            report.size_ratio()
+        );
+    }
+}

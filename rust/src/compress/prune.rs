@@ -1,0 +1,325 @@
+//! Structured pruning (paper §2.1): magnitude-based attention-head
+//! pruning and FFN column/row pruning.
+//!
+//! Both are *structured*: whole heads / whole FFN channels are removed,
+//! so the result is a smaller dense model — exactly what a mobile
+//! compiler can exploit (unstructured sparsity would leave the matmul
+//! shapes unchanged and the compiler nothing to fuse or schedule
+//! differently). The transform has two halves that must agree:
+//!
+//! * **weights** — [`prune_weights`] slices the kept head column blocks
+//!   out of `wq/wk/wv` (and rows out of `wo`, elements out of the
+//!   biases), and the kept channels out of `w1/b1/w2`;
+//! * **graph** — [`prune_encoder`] rebuilds the encoder via
+//!   [`build_encoder_with`] with each layer's kept head count and FFN
+//!   width, so the compiler's shape inference, fusion footprints, arena
+//!   liveness, and device pricing all see the smaller tensors.
+//!
+//! Selection is magnitude-based (the standard structured-pruning
+//! saliency): a head's score is the squared L2 norm of its Q/K/V columns
+//! plus its output-projection rows; an FFN channel's score is the squared
+//! norm of its `w1` column, `b1` element, and `w2` row. Ties break toward
+//! the lower index, and kept indices stay in ascending order so the
+//! pruned model is a pure sub-slice of the dense one — which is what
+//! makes the hand-shrunk-reference differential test bitwise exact.
+
+use std::collections::HashMap;
+
+use crate::compiler::ir::Graph;
+use crate::model::{build_encoder_with, BertConfig, LayerDims};
+
+/// Keep ratios in `(0, 1]`; 1.0 = keep everything.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneSpec {
+    /// Fraction of attention heads to keep (rounded, min 1 head).
+    pub head_keep: f32,
+    /// Fraction of FFN intermediate channels to keep (rounded, min 1).
+    pub ffn_keep: f32,
+}
+
+impl PruneSpec {
+    pub fn heads_kept(&self, cfg: &BertConfig) -> usize {
+        (((cfg.heads as f32) * self.head_keep).round() as usize).clamp(1, cfg.heads)
+    }
+
+    pub fn inter_kept(&self, cfg: &BertConfig) -> usize {
+        (((cfg.inter as f32) * self.ffn_keep).round() as usize).clamp(1, cfg.inter)
+    }
+}
+
+/// One layer's kept indices (ascending).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPrune {
+    pub heads: Vec<usize>,
+    pub ffn: Vec<usize>,
+}
+
+impl LayerPrune {
+    pub fn dims(&self) -> LayerDims {
+        LayerDims { heads: self.heads.len(), inter: self.ffn.len() }
+    }
+}
+
+fn weight<'a>(weights: &'a HashMap<String, Vec<f32>>, name: &str) -> &'a [f32] {
+    weights
+        .get(name)
+        .unwrap_or_else(|| panic!("pruning needs weight {name:?} in the feed map"))
+}
+
+/// Per-head saliency for layer `l`: squared L2 of the head's Q/K/V column
+/// blocks plus its `wo` row block.
+pub fn head_scores(cfg: &BertConfig, weights: &HashMap<String, Vec<f32>>, l: usize) -> Vec<f32> {
+    let (h, a, dh) = (cfg.hidden, cfg.heads, cfg.head_dim());
+    let mut scores = vec![0.0f32; a];
+    for name in ["wq", "wk", "wv"] {
+        let w = weight(weights, &format!("layer{l}/{name}")); // [h, h]
+        for row in 0..h {
+            for (head, s) in scores.iter_mut().enumerate() {
+                for d in 0..dh {
+                    let v = w[row * h + head * dh + d];
+                    *s += v * v;
+                }
+            }
+        }
+    }
+    let wo = weight(weights, &format!("layer{l}/wo")); // [h, h]
+    for row in 0..h {
+        let head = row / dh;
+        for col in 0..h {
+            let v = wo[row * h + col];
+            scores[head] += v * v;
+        }
+    }
+    scores
+}
+
+/// Per-channel saliency for layer `l`'s FFN: squared L2 of the channel's
+/// `w1` column, `b1` element, and `w2` row.
+pub fn ffn_scores(cfg: &BertConfig, weights: &HashMap<String, Vec<f32>>, l: usize) -> Vec<f32> {
+    let (h, i) = (cfg.hidden, cfg.inter);
+    let mut scores = vec![0.0f32; i];
+    let w1 = weight(weights, &format!("layer{l}/w1")); // [h, i]
+    for row in 0..h {
+        for (ch, s) in scores.iter_mut().enumerate() {
+            let v = w1[row * i + ch];
+            *s += v * v;
+        }
+    }
+    let b1 = weight(weights, &format!("layer{l}/b1")); // [i]
+    for (ch, s) in scores.iter_mut().enumerate() {
+        *s += b1[ch] * b1[ch];
+    }
+    let w2 = weight(weights, &format!("layer{l}/w2")); // [i, h]
+    for (ch, s) in scores.iter_mut().enumerate() {
+        for col in 0..h {
+            let v = w2[ch * h + col];
+            *s += v * v;
+        }
+    }
+    scores
+}
+
+/// Indices of the `k` largest scores, ties toward the lower index,
+/// returned ascending.
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    let mut kept = idx[..k.min(idx.len())].to_vec();
+    kept.sort_unstable();
+    kept
+}
+
+/// Decide what every layer keeps, from the dense weights.
+pub fn plan_prune(
+    cfg: &BertConfig,
+    weights: &HashMap<String, Vec<f32>>,
+    spec: &PruneSpec,
+) -> Vec<LayerPrune> {
+    (0..cfg.layers)
+        .map(|l| LayerPrune {
+            heads: top_k(&head_scores(cfg, weights, l), spec.heads_kept(cfg)),
+            ffn: top_k(&ffn_scores(cfg, weights, l), spec.inter_kept(cfg)),
+        })
+        .collect()
+}
+
+fn select_cols(w: &[f32], rows: usize, cols: usize, keep: &[usize]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rows * cols);
+    let mut out = Vec::with_capacity(rows * keep.len());
+    for r in 0..rows {
+        for &c in keep {
+            out.push(w[r * cols + c]);
+        }
+    }
+    out
+}
+
+fn select_rows(w: &[f32], rows: usize, cols: usize, keep: &[usize]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), rows * cols);
+    let mut out = Vec::with_capacity(cols * keep.len());
+    for &r in keep {
+        out.extend_from_slice(&w[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+fn select_elems(w: &[f32], keep: &[usize]) -> Vec<f32> {
+    keep.iter().map(|&i| w[i]).collect()
+}
+
+fn replace(
+    weights: &mut HashMap<String, Vec<f32>>,
+    name: String,
+    f: impl FnOnce(&[f32]) -> Vec<f32>,
+) {
+    let new = f(weight(weights, &name));
+    weights.insert(name, new);
+}
+
+/// Rewrite the weight map in place to the plan's kept slices.
+pub fn prune_weights(
+    cfg: &BertConfig,
+    weights: &mut HashMap<String, Vec<f32>>,
+    plan: &[LayerPrune],
+) {
+    let (h, i, dh) = (cfg.hidden, cfg.inter, cfg.head_dim());
+    for (l, lp) in plan.iter().enumerate() {
+        // Head pruning: the kept heads' column blocks of [h, h] Q/K/V.
+        let cols: Vec<usize> = lp.heads.iter().flat_map(|&a| (a * dh)..((a + 1) * dh)).collect();
+        for nm in ["wq", "wk", "wv"] {
+            replace(weights, format!("layer{l}/{nm}"), |w| select_cols(w, h, h, &cols));
+        }
+        for nm in ["bq", "bk", "bv"] {
+            replace(weights, format!("layer{l}/{nm}"), |w| select_elems(w, &cols));
+        }
+        // Output projection consumes the concatenated heads: prune rows.
+        replace(weights, format!("layer{l}/wo"), |w| select_rows(w, h, h, &cols));
+        // FFN pruning: columns of w1 / elements of b1 / rows of w2.
+        replace(weights, format!("layer{l}/w1"), |w| select_cols(w, h, i, &lp.ffn));
+        replace(weights, format!("layer{l}/b1"), |w| select_elems(w, &lp.ffn));
+        replace(weights, format!("layer{l}/w2"), |w| select_rows(w, i, h, &lp.ffn));
+    }
+}
+
+/// The full structured-pruning transform: plan from magnitudes, slice the
+/// weights, and rebuild the encoder graph at the pruned dimensions.
+pub fn prune_encoder(
+    cfg: &BertConfig,
+    weights: &mut HashMap<String, Vec<f32>>,
+    spec: &PruneSpec,
+) -> (Graph, Vec<LayerPrune>) {
+    let plan = plan_prune(cfg, weights, spec);
+    prune_weights(cfg, weights, &plan);
+    let dims: Vec<LayerDims> = plan.iter().map(|lp| lp.dims()).collect();
+    (build_encoder_with(cfg, &dims), plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::Op;
+    use crate::model::build_encoder;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> BertConfig {
+        BertConfig { vocab: 32, seq: 4, layers: 1, hidden: 8, heads: 2, inter: 8 }
+    }
+
+    fn zero_weights(cfg: &BertConfig) -> HashMap<String, Vec<f32>> {
+        let g = build_encoder(cfg);
+        let mut weights = HashMap::new();
+        for node in &g.nodes {
+            if let Op::Weight { name } = &node.op {
+                weights.insert(name.clone(), vec![0.0; node.shape.numel()]);
+            }
+        }
+        weights
+    }
+
+    #[test]
+    fn top_k_orders_and_breaks_ties_low() {
+        assert_eq!(top_k(&[0.1, 3.0, 2.0, 3.0], 2), vec![1, 3]);
+        assert_eq!(top_k(&[1.0, 1.0, 1.0], 2), vec![0, 1]);
+        assert_eq!(top_k(&[5.0], 3), vec![0]);
+    }
+
+    #[test]
+    fn magnitude_selects_the_loud_head_and_channels() {
+        let cfg = tiny_cfg();
+        let mut weights = zero_weights(&cfg);
+        // Make head 1 (columns 4..8 of [8, 8] wq) loud; head 0 silent.
+        let wq = weights.get_mut("layer0/wq").unwrap();
+        for r in 0..8 {
+            for c in 4..8 {
+                wq[r * 8 + c] = 1.0;
+            }
+        }
+        // Make FFN channels 2 and 5 loud via w2 rows.
+        let w2 = weights.get_mut("layer0/w2").unwrap();
+        for c in 0..8 {
+            w2[2 * 8 + c] = 2.0;
+            w2[5 * 8 + c] = 1.0;
+        }
+        let plan = plan_prune(&cfg, &weights, &PruneSpec { head_keep: 0.5, ffn_keep: 0.25 });
+        assert_eq!(plan[0].heads, vec![1]);
+        assert_eq!(plan[0].ffn, vec![2, 5]);
+    }
+
+    #[test]
+    fn pruned_weight_shapes_match_pruned_graph() {
+        let cfg = BertConfig { vocab: 32, seq: 4, layers: 2, hidden: 8, heads: 2, inter: 8 };
+        let g = build_encoder(&cfg);
+        let mut rng = Rng::new(3);
+        let mut weights = HashMap::new();
+        for node in &g.nodes {
+            if let Op::Weight { name } = &node.op {
+                weights.insert(
+                    name.clone(),
+                    (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                );
+            }
+        }
+        let (pruned, plan) =
+            prune_encoder(&cfg, &mut weights, &PruneSpec { head_keep: 0.5, ffn_keep: 0.5 });
+        assert_eq!(plan.len(), 2);
+        for node in &pruned.nodes {
+            if let Op::Weight { name } = &node.op {
+                assert_eq!(weights[name].len(), node.shape.numel(), "{name}");
+            }
+        }
+        // wq went [8, 8] -> [8, 4]; w1 [8, 8] -> [8, 4]; wo [8, 8] -> [4, 8].
+        assert_eq!(weights["layer0/wq"].len(), 32);
+        assert_eq!(weights["layer0/wo"].len(), 32);
+        assert_eq!(weights["layer1/b1"].len(), 4);
+    }
+
+    #[test]
+    fn keep_everything_is_weight_identity() {
+        let cfg = tiny_cfg();
+        let g = build_encoder(&cfg);
+        let mut rng = Rng::new(5);
+        let mut weights = HashMap::new();
+        for node in &g.nodes {
+            if let Op::Weight { name } = &node.op {
+                weights.insert(
+                    name.clone(),
+                    (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                );
+            }
+        }
+        let before = weights.clone();
+        let (pruned, plan) =
+            prune_encoder(&cfg, &mut weights, &PruneSpec { head_keep: 1.0, ffn_keep: 1.0 });
+        assert_eq!(weights, before, "keep=1.0 must not touch any weight");
+        assert_eq!(plan[0].heads, vec![0, 1]);
+        assert_eq!(pruned.nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn spec_rounding_keeps_at_least_one() {
+        let cfg = tiny_cfg();
+        let spec = PruneSpec { head_keep: 0.01, ffn_keep: 0.01 };
+        assert_eq!(spec.heads_kept(&cfg), 1);
+        assert_eq!(spec.inter_kept(&cfg), 1);
+    }
+}

@@ -1,0 +1,184 @@
+//! Post-training INT8 quantization (paper §2.1) — site discovery,
+//! per-channel weight quantization, and activation calibration.
+//!
+//! What gets quantized: every matmul whose RHS is a rank-2 `Weight` leaf
+//! (the Q/K/V/output projections, both FFN matmuls, and any task head) —
+//! exactly the weights that dominate BERT's parameter count and compute.
+//! Attention's activation-activation matmuls (`QK^T`, `PV`) and the
+//! embedding gather stay fp32: their operands are produced per request
+//! and per-channel weight scales do not apply.
+//!
+//! Scheme (matches the standard mobile dynamic-quantization recipe):
+//! weights are symmetric per *output channel* (`absmax/127` per column,
+//! [`QuantizedTensor::per_channel`]); activations are symmetric per row,
+//! either dynamic (`absmax/127` computed in the kernel per row) or static
+//! from [`calibrate_activations`], which records each quantized matmul's
+//! observed input range over sample feeds. The executors' shared kernel
+//! (`exec::matmul_i8`) accumulates `i8 x i8` products in `i32` and
+//! rescales once per output.
+
+use std::collections::HashMap;
+
+use crate::compiler::exec::interp::eval_graph_values;
+use crate::compiler::exec::{ExecError, QuantizedTensor, QuantizedWeights, View};
+use crate::compiler::ir::{Graph, NodeId, Op};
+
+/// One int8-eligible matmul: the matmul node, its RHS weight leaf, and
+/// the weight's feed name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantSite {
+    pub matmul: NodeId,
+    pub weight: NodeId,
+    pub name: String,
+}
+
+/// Find every int8-eligible matmul in `g`.
+pub fn quant_sites(g: &Graph) -> Vec<QuantSite> {
+    g.nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(id, n)| {
+            if n.op != Op::MatMul {
+                return None;
+            }
+            let w = *n.inputs.get(1)?;
+            match &g.nodes[w].op {
+                Op::Weight { name } if g.nodes[w].shape.rank() == 2 => {
+                    Some(QuantSite { matmul: id, weight: w, name: name.clone() })
+                }
+                _ => None,
+            }
+        })
+        .collect()
+}
+
+/// Build the executor's int8 side table: per-channel quantize each site's
+/// weight from the named feed map. Sites whose weight is missing or
+/// mis-sized are skipped (they simply stay fp32) — quantization must
+/// never turn a servable model into an unservable one.
+pub fn quantize_sites(
+    g: &Graph,
+    sites: &[QuantSite],
+    weights: &HashMap<String, Vec<f32>>,
+) -> QuantizedWeights {
+    let mut qw = QuantizedWeights::default();
+    for site in sites {
+        let Some(data) = weights.get(&site.name) else { continue };
+        let shape = &g.nodes[site.weight].shape;
+        if data.len() != shape.numel() {
+            continue;
+        }
+        qw.by_node
+            .insert(site.weight, QuantizedTensor::per_channel(View { shape, data }));
+    }
+    qw
+}
+
+/// Static activation calibration from sample feeds: run the fp32 model
+/// (reference interpreter) on each feed map, record the absmax seen at
+/// every quantized matmul's LHS, and install `absmax/127` as that
+/// matmul's static activation scale. With static scales the int8 path
+/// skips the per-row absmax reduction — the mobile deployment shape —
+/// at a small accuracy cost vs dynamic (bounded by the calibration
+/// coverage; `tests/compress_differential.rs` checks both stay within
+/// tolerance of fp32).
+pub fn calibrate_activations(
+    g: &Graph,
+    sites: &[QuantSite],
+    qw: &mut QuantizedWeights,
+    sample_feeds: &[HashMap<String, Vec<f32>>],
+) -> Result<(), ExecError> {
+    let mut absmax: HashMap<NodeId, f32> = HashMap::new();
+    for feeds in sample_feeds {
+        let vals = eval_graph_values(g, feeds)?;
+        for site in sites {
+            if !qw.by_node.contains_key(&site.weight) {
+                continue;
+            }
+            let lhs = &vals[g.nodes[site.matmul].inputs[0]];
+            let m = lhs.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let e = absmax.entry(site.matmul).or_insert(0.0);
+            *e = e.max(m);
+        }
+    }
+    for (node, m) in absmax {
+        if m > 0.0 {
+            qw.act_scale.insert(node, m / 127.0);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::{DType, Graph};
+    use crate::model::{build_encoder, BertConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sites_are_weight_rhs_matmuls_only() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[4, 8], DType::F32);
+        let w = g.weight("w", &[8, 8]);
+        let mm = g.matmul(x, w); // eligible
+        let t = g.add_op(Op::Transpose, &[mm]);
+        let att = g.matmul(mm, t); // activation x activation: not eligible
+        let v1 = g.weight("v1", &[4]);
+        let s = g.add(att, v1);
+        g.mark_output(s);
+        let sites = quant_sites(&g);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].name, "w");
+        assert_eq!(sites[0].weight, w);
+    }
+
+    #[test]
+    fn encoder_sites_cover_all_projections() {
+        let cfg = BertConfig { vocab: 32, seq: 4, layers: 2, hidden: 8, heads: 2, inter: 8 };
+        let g = build_encoder(&cfg);
+        // Per layer: wq, wk, wv, wo, w1, w2 = 6 weight matmuls.
+        assert_eq!(quant_sites(&g).len(), 6 * cfg.layers);
+    }
+
+    #[test]
+    fn quantize_sites_skips_missing_and_missized() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 4], DType::F32);
+        let w1 = g.weight("w1", &[4, 4]);
+        let w2 = g.weight("w2", &[4, 4]);
+        let m1 = g.matmul(x, w1);
+        let m2 = g.matmul(m1, w2);
+        g.mark_output(m2);
+        let sites = quant_sites(&g);
+        assert_eq!(sites.len(), 2);
+        let mut weights = HashMap::new();
+        weights.insert("w1".to_string(), vec![0.5; 16]);
+        weights.insert("w2".to_string(), vec![0.5; 3]); // wrong size
+        let qw = quantize_sites(&g, &sites, &weights);
+        assert_eq!(qw.by_node.len(), 1);
+        assert!(qw.by_node.contains_key(&w1));
+        assert!(!qw.by_node.contains_key(&w2));
+    }
+
+    #[test]
+    fn calibration_installs_positive_scales() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 4], DType::F32);
+        let w = g.weight("w", &[4, 3]);
+        let mm = g.matmul(x, w);
+        g.mark_output(mm);
+        let sites = quant_sites(&g);
+        let mut rng = Rng::new(11);
+        let mut weights = HashMap::new();
+        weights.insert("w".to_string(), (0..12).map(|_| rng.normal_f32(0.0, 0.5)).collect());
+        let mut qw = quantize_sites(&g, &sites, &weights);
+        assert!(qw.act_scale.is_empty());
+
+        let mut feeds = weights.clone();
+        feeds.insert("x".to_string(), vec![1.0, -3.0, 2.0, 0.5, 0.1, 0.2, -0.3, 0.4]);
+        calibrate_activations(&g, &sites, &mut qw, std::slice::from_ref(&feeds)).unwrap();
+        let s = qw.act_scale[&mm];
+        assert!((s - 3.0 / 127.0).abs() < 1e-7, "{s}");
+    }
+}

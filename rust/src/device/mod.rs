@@ -20,6 +20,8 @@
 
 pub mod tflite;
 
+use std::collections::HashSet;
+
 use crate::compiler::fusion::{FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId, Op};
 
@@ -29,6 +31,10 @@ pub struct DeviceProfile {
     pub name: &'static str,
     /// Effective FLOP/s for matmul-dominated blocks.
     pub matmul_flops: f64,
+    /// Effective OP/s for INT8 matmul blocks (SDOT on NEON / dp4a-class
+    /// paths): higher than fp32 but well below the 4x theoretical peak
+    /// once requantization overhead is paid.
+    pub int8_matmul_flops: f64,
     /// Effective FLOP/s for elementwise/reduction blocks (vector units).
     pub vector_flops: f64,
     /// Effective main-memory bandwidth (bytes/s) seen by one kernel.
@@ -42,10 +48,12 @@ impl DeviceProfile {
     /// 2x A77 @2.84GHz + 2x @2.42 + 4x A55: ~160 GFLOPS nominal fp32;
     /// well-tuned GEMM reaches ~85%. LPDDR5 ~12 GB/s effective per stream.
     /// Launch = pthread pool wake + arg setup ≈ 90 µs under CANAO.
+    /// INT8 via SDOT: ~2.5x effective over fp32 GEMM at BERT sizes.
     pub fn s865_cpu() -> Self {
         DeviceProfile {
             name: "S865-CPU",
             matmul_flops: 135e9,
+            int8_matmul_flops: 340e9,
             vector_flops: 45e9,
             mem_bw: 12e9,
             launch_overhead_s: 90e-6,
@@ -56,10 +64,12 @@ impl DeviceProfile {
     /// is poor (~30% with hand-tuned OpenCL at these sizes) and each
     /// kernel launch costs ~0.3 ms (command buffer + cache flush) —
     /// which is exactly why unfused BERT is *slower* on GPU (paper §3.4).
+    /// INT8 on Adreno: ~2x (char4 dot paths, less mature than CPU SDOT).
     pub fn s865_gpu() -> Self {
         DeviceProfile {
             name: "S865-GPU",
             matmul_flops: 360e9,
+            int8_matmul_flops: 720e9,
             vector_flops: 120e9,
             // Unfused elementwise kernels get no producer/consumer reuse on
             // the mobile GPU; effective per-kernel DRAM bandwidth is low.
@@ -74,6 +84,7 @@ impl DeviceProfile {
         DeviceProfile {
             name: "TFLite-CPU",
             matmul_flops: 95e9,
+            int8_matmul_flops: 170e9,
             vector_flops: 30e9,
             mem_bw: 12e9,
             launch_overhead_s: 130e-6,
@@ -127,10 +138,42 @@ pub fn block_bytes(g: &Graph, block: &FusedBlock) -> f64 {
 }
 
 pub fn block_cost(g: &Graph, block: &FusedBlock, dev: &DeviceProfile) -> BlockCost {
+    block_cost_with(g, block, dev, None)
+}
+
+/// As [`block_cost`]; when `int8_weights` names the quantized weight
+/// leaves, blocks reading them pay 1 byte/element for those operands and
+/// blocks whose matmul RHS is quantized run at the int8 matmul rate.
+pub fn block_cost_with(
+    g: &Graph,
+    block: &FusedBlock,
+    dev: &DeviceProfile,
+    int8_weights: Option<&HashSet<NodeId>>,
+) -> BlockCost {
     let flops: f64 = block.nodes.iter().map(|&n| node_flops(g, n)).sum();
-    let bytes = block_bytes(g, block);
+    let mut bytes = block_bytes(g, block);
+    if let Some(set) = int8_weights {
+        for &i in &block.inputs {
+            if set.contains(&i) {
+                // fp32 -> int8 storage: 1/4 the traffic for this operand.
+                bytes -= 0.75 * g.nodes[i].shape.size_bytes(g.nodes[i].dtype) as f64;
+            }
+        }
+    }
     let has_matmul = block.nodes.iter().any(|&n| g.nodes[n].op == Op::MatMul);
-    let rate = if has_matmul { dev.matmul_flops } else { dev.vector_flops };
+    let int8_matmul = int8_weights.is_some_and(|set| {
+        block.nodes.iter().any(|&n| {
+            g.nodes[n].op == Op::MatMul
+                && g.nodes[n].inputs.get(1).is_some_and(|w| set.contains(w))
+        })
+    });
+    let rate = if int8_matmul {
+        dev.int8_matmul_flops
+    } else if has_matmul {
+        dev.matmul_flops
+    } else {
+        dev.vector_flops
+    };
     let compute_s = flops / rate;
     let memory_s = bytes / dev.mem_bw;
     let total_s = dev.launch_overhead_s + compute_s.max(memory_s);
@@ -160,9 +203,27 @@ impl Latency {
 }
 
 pub fn plan_latency(g: &Graph, plan: &FusionPlan, dev: &DeviceProfile) -> Latency {
+    plan_latency_compressed(g, plan, dev, false)
+}
+
+/// Latency of a (possibly compressed) plan. Pruning needs no flag — the
+/// pruned graph's smaller shapes already flow through `node_flops` /
+/// `block_bytes`. `int8` prices the quantized execution: every rank-2
+/// matmul weight (the set `compress::quant::quant_sites` quantizes) is
+/// stored int8 and its matmuls run on the device's int8 path. This is
+/// what the NAS loop uses to price compression knobs from shapes alone.
+pub fn plan_latency_compressed(
+    g: &Graph,
+    plan: &FusionPlan,
+    dev: &DeviceProfile,
+    int8: bool,
+) -> Latency {
+    let qset: Option<HashSet<NodeId>> = int8.then(|| {
+        crate::compress::quant::quant_sites(g).iter().map(|s| s.weight).collect()
+    });
     let mut lat = Latency { blocks: plan.blocks.len(), ..Default::default() };
     for b in &plan.blocks {
-        let c = block_cost(g, b, dev);
+        let c = block_cost_with(g, b, dev, qset.as_ref());
         lat.total_s += c.total_s;
         lat.compute_s += c.compute_s;
         lat.memory_s += c.memory_s;
@@ -246,6 +307,31 @@ mod tests {
             lat.overhead_s * 1e3,
             lat.total_s * 1e3
         );
+    }
+
+    #[test]
+    fn compression_lowers_simulated_latency() {
+        use crate::compress::prune::PruneSpec;
+        use crate::model::{build_encoder_with, LayerDims};
+        let cfg = BertConfig::canaobert();
+        let dev = DeviceProfile::s865_cpu();
+        let opts = CompileOptions { model_only_tuning: true, ..Default::default() };
+
+        let dense = compile(&build_encoder(&cfg), &opts);
+        let fp32 = plan_latency(&dense.graph, &dense.plan, &dev).ms();
+        let int8 = plan_latency_compressed(&dense.graph, &dense.plan, &dev, true).ms();
+        assert!(int8 < fp32, "int8 {int8} !< fp32 {fp32}");
+
+        let spec = PruneSpec { head_keep: 0.5, ffn_keep: 0.5 };
+        let dims = vec![
+            LayerDims { heads: spec.heads_kept(&cfg), inter: spec.inter_kept(&cfg) };
+            cfg.layers
+        ];
+        let pruned = compile(&build_encoder_with(&cfg, &dims), &opts);
+        let pr = plan_latency(&pruned.graph, &pruned.plan, &dev).ms();
+        assert!(pr < fp32, "pruned {pr} !< fp32 {fp32}");
+        let both = plan_latency_compressed(&pruned.graph, &pruned.plan, &dev, true).ms();
+        assert!(both < pr, "pruned+int8 {both} !< pruned {pr}");
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — the CANAO framework itself: the compiler
 //!   (graph passes, LP-Fusion, polyhedral variant codegen, autotuning),
-//!   the compiler-in-the-loop NAS (RNN controller + REINFORCE), the
+//!   the compression subsystem (§2.1 structured pruning + post-training
+//!   INT8 quantization, co-designed with the compiler), the
+//!   compiler-in-the-loop NAS (RNN controller + REINFORCE), the
 //!   mobile-device latency simulator, and the serving runtime (QA +
 //!   text generation) that executes AOT-compiled models via PJRT.
 //! * **L2 (python/compile/model.py)** — the searched BERT-variant family
@@ -17,6 +19,7 @@
 //! See DESIGN.md for the system inventory and experiment index.
 
 pub mod compiler;
+pub mod compress;
 pub mod device;
 pub mod model;
 pub mod nas;

@@ -18,8 +18,9 @@
 use std::sync::Arc;
 
 use canao::compiler::{compile, CompileOptions};
-use canao::device::{plan_latency, tflite, DeviceProfile};
-use canao::model::{build_encoder, BertConfig};
+use canao::compress::{CompressionConfig, PruneSpec};
+use canao::device::{plan_latency_compressed, tflite, DeviceProfile};
+use canao::model::{build_encoder, build_encoder_with, BertConfig, LayerDims};
 use canao::nas::{Search, SearchConfig};
 use canao::runtime::Runtime;
 use canao::serving::{
@@ -31,7 +32,10 @@ use canao::util::cli::Args;
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
-    let args = Args::parse(argv.into_iter(), &["no-fusion", "accuracy-only", "joint", "verbose"]);
+    let args = Args::parse(
+        argv.into_iter(),
+        &["no-fusion", "accuracy-only", "joint", "verbose", "int8", "compress"],
+    );
 
     let result = match cmd.as_str() {
         "search" => cmd_search(&args),
@@ -59,8 +63,9 @@ fn print_help() {
          usage: canao <command> [--flags]\n\
          \n\
          commands:\n\
-         \x20 search     compiler-aware NAS    [--target-ms N --device cpu|gpu --iters N]\n\
-         \x20 compile    compile one config    [--layers N --hidden N --inter N --no-fusion]\n\
+         \x20 search     compiler-aware NAS    [--target-ms N --device cpu|gpu --iters N --compress]\n\
+         \x20 compile    compile one config    [--layers N --hidden N --inter N --no-fusion\n\
+         \x20                                   --head-keep F --ffn-keep F --int8]\n\
          \x20 table1     reproduce Table 1 (latency)\n\
          \x20 table2     reproduce Table 2 (GLUE)\n\
          \x20 serve-qa   QA demo               [--question S --context S]\n\
@@ -88,10 +93,15 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
         accuracy_only: args.has("accuracy-only"),
         joint: args.has("joint"),
         no_fusion_in_loop: args.has("no-fusion"),
+        search_compression: args.has("compress"),
     };
     println!(
-        "[search] device={} target={}ms lambda={} two_phase={}",
-        cfg.device.name, cfg.target_ms, cfg.lambda, !cfg.joint
+        "[search] device={} target={}ms lambda={} two_phase={} compression_knobs={}",
+        cfg.device.name,
+        cfg.target_ms,
+        cfg.lambda,
+        !cfg.joint,
+        cfg.search_compression
     );
     let mut search = Search::new(cfg);
     let res = search.run();
@@ -114,6 +124,14 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
         "[search]       accuracy (GLUE-mean surrogate) {:.1}  latency {:.0} ms  reward {:.4}",
         b.accuracy, b.latency_ms, b.reward
     );
+    if !b.compression.is_none() {
+        println!(
+            "[search]       compression: heads x{:.2}  ffn x{:.2}  int8={}",
+            b.compression.head_keep(),
+            b.compression.ffn_keep(),
+            b.compression.int8
+        );
+    }
     Ok(())
 }
 
@@ -128,15 +146,41 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
         inter: args.usize_or("inter", 1792),
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-    let g = build_encoder(&cfg);
+
+    // Compression knobs: prune the shapes the compiler sees, flag int8.
+    let head_keep = args.f64_or("head-keep", 1.0) as f32;
+    let ffn_keep = args.f64_or("ffn-keep", 1.0) as f32;
+    let comp = CompressionConfig {
+        prune: (head_keep < 1.0 || ffn_keep < 1.0)
+            .then_some(PruneSpec { head_keep, ffn_keep }),
+        int8: args.has("int8"),
+    };
+    let g = match &comp.prune {
+        Some(spec) => {
+            let dims = vec![
+                LayerDims { heads: spec.heads_kept(&cfg), inter: spec.inter_kept(&cfg) };
+                cfg.layers
+            ];
+            build_encoder_with(&cfg, &dims)
+        }
+        None => build_encoder(&cfg),
+    };
     let opts = if args.has("no-fusion") {
-        CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() }
+        CompileOptions { model_only_tuning: true, compression: comp, ..CompileOptions::no_fusion() }
     } else {
-        CompileOptions { model_only_tuning: true, ..Default::default() }
+        CompileOptions { model_only_tuning: true, compression: comp, ..Default::default() }
     };
     let c = compile(&g, &opts);
     let (ops, blocks, ratio) = c.fusion_summary();
     println!("[compile] {cfg:?}");
+    if !comp.is_none() {
+        println!(
+            "[compile] compression: heads x{head_keep:.2}  ffn x{ffn_keep:.2}  int8={}  \
+             ({} quantizable matmuls)",
+            comp.int8,
+            c.quant_sites.len()
+        );
+    }
     println!(
         "[compile] ops {} -> {} after passes; {} fused blocks ({ratio:.1} ops/block)",
         c.ops_before, ops, blocks
@@ -147,7 +191,7 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
         c.plan.bytes_saved(&c.graph) as f64 / 1e6
     );
     for dev in [DeviceProfile::s865_cpu(), DeviceProfile::s865_gpu()] {
-        let lat = plan_latency(&c.graph, &c.plan, &dev);
+        let lat = plan_latency_compressed(&c.graph, &c.plan, &dev, comp.int8);
         println!(
             "[compile] {:>10}: {:>7.1} ms  (compute {:.1} overhead {:.1})  eff {:.0}%",
             dev.name,

@@ -85,10 +85,39 @@ impl BertConfig {
     }
 }
 
+/// Per-layer structural dimensions after (optional) structured pruning:
+/// how many attention heads the layer keeps and how wide its FFN is.
+/// `compress::prune` shrinks these; the unpruned model uses
+/// [`LayerDims::of`] for every layer. Head width (`cfg.head_dim()`) is
+/// never pruned — head pruning removes whole heads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerDims {
+    pub heads: usize,
+    pub inter: usize,
+}
+
+impl LayerDims {
+    pub fn of(cfg: &BertConfig) -> Self {
+        LayerDims { heads: cfg.heads, inter: cfg.inter }
+    }
+}
+
 /// Build the full encoder graph for `cfg` (batch 1, per-head attention
 /// expressed with explicit transpose/reshape so fusion sees the real op
 /// stream). Returns the graph; the final hidden states are its output.
 pub fn build_encoder(cfg: &BertConfig) -> Graph {
+    build_encoder_with(cfg, &vec![LayerDims::of(cfg); cfg.layers])
+}
+
+/// As [`build_encoder`], with explicit per-layer dimensions — the entry
+/// point the compression subsystem uses so the compiler (fusion planner,
+/// arena planner, device simulator) sees genuinely smaller tensors after
+/// structured pruning, not masked ones. Layer `l`'s attention width is
+/// `dims[l].heads * cfg.head_dim()` and its FFN width is `dims[l].inter`;
+/// the residual stream stays `cfg.hidden` wide, so pruning never changes
+/// the model's external interface.
+pub fn build_encoder_with(cfg: &BertConfig, dims: &[LayerDims]) -> Graph {
+    assert_eq!(dims.len(), cfg.layers, "one LayerDims per layer");
     let mut g = Graph::new();
     let (s, h) = (cfg.seq, cfg.hidden);
 
@@ -103,22 +132,25 @@ pub fn build_encoder(cfg: &BertConfig) -> Graph {
     let ln_b = g.weight("embed/ln_beta", &[h]);
     let mut x = g.layernorm(emb, ln_g, ln_b, 1e-12);
 
-    for l in 0..cfg.layers {
-        x = encoder_layer(&mut g, cfg, x, l);
+    for (l, d) in dims.iter().enumerate() {
+        x = encoder_layer(&mut g, cfg, x, l, *d);
     }
     g.mark_output(x);
     g
 }
 
 /// One transformer layer: per-head attention + FFN, all from primitives.
-fn encoder_layer(g: &mut Graph, cfg: &BertConfig, x: NodeId, l: usize) -> NodeId {
-    let (s, h, a) = (cfg.seq, cfg.hidden, cfg.heads);
+/// `d` carries the layer's (possibly pruned) head count and FFN width.
+fn encoder_layer(g: &mut Graph, cfg: &BertConfig, x: NodeId, l: usize, d: LayerDims) -> NodeId {
+    let (s, h, a) = (cfg.seq, cfg.hidden, d.heads);
     let dh = cfg.head_dim();
+    // Attention width: kept heads x unpruned per-head dim (== h unpruned).
+    let aw = a * dh;
     let p = format!("layer{l}");
 
     let proj = |g: &mut Graph, x: NodeId, name: &str| -> NodeId {
-        let w = g.weight(&format!("{p}/w{name}"), &[h, h]);
-        let b = g.weight(&format!("{p}/b{name}"), &[h]);
+        let w = g.weight(&format!("{p}/w{name}"), &[h, aw]);
+        let b = g.weight(&format!("{p}/b{name}"), &[aw]);
         let mm = g.matmul(x, w);
         g.add(mm, b)
     };
@@ -126,7 +158,7 @@ fn encoder_layer(g: &mut Graph, cfg: &BertConfig, x: NodeId, l: usize) -> NodeId
     let k = proj(g, x, "k");
     let v = proj(g, x, "v");
 
-    // Split heads: [s, h] -> [a, s, dh] (reshape + transpose pair).
+    // Split heads: [s, aw] -> [a, s, dh] (reshape + transpose pair).
     let split = |g: &mut Graph, t: NodeId| -> NodeId {
         let r = g.add_op(Op::Reshape { target: vec![s, a, dh] }, &[t]);
         // [s, a, dh] -> [a, s, dh] modeled as transpose of the leading pair
@@ -147,11 +179,11 @@ fn encoder_layer(g: &mut Graph, cfg: &BertConfig, x: NodeId, l: usize) -> NodeId
     let mask = g.input(&format!("mask{l}"), &[s], DType::F32);
     let masked = g.add(scaled, mask);
     let probs = g.softmax(masked, 2);
-    // ctx = P @ V: [a, s, dh] -> merge heads -> [s, h]
+    // ctx = P @ V: [a, s, dh] -> merge heads -> [s, aw]
     let ctx = g.matmul(probs, vh);
-    let merged = g.add_op(Op::Reshape { target: vec![s, h] }, &[ctx]);
+    let merged = g.add_op(Op::Reshape { target: vec![s, aw] }, &[ctx]);
 
-    let wo = g.weight(&format!("{p}/wo"), &[h, h]);
+    let wo = g.weight(&format!("{p}/wo"), &[aw, h]);
     let bo = g.weight(&format!("{p}/bo"), &[h]);
     let om = g.matmul(merged, wo);
     let ob = g.add(om, bo);
@@ -163,12 +195,12 @@ fn encoder_layer(g: &mut Graph, cfg: &BertConfig, x: NodeId, l: usize) -> NodeId
     let x1 = g.layernorm(res1, g1, b1, 1e-12);
 
     // FFN: matmul -> bias -> gelu -> matmul -> bias.
-    let w1 = g.weight(&format!("{p}/w1"), &[cfg.hidden, cfg.inter]);
-    let bb1 = g.weight(&format!("{p}/b1"), &[cfg.inter]);
+    let w1 = g.weight(&format!("{p}/w1"), &[cfg.hidden, d.inter]);
+    let bb1 = g.weight(&format!("{p}/b1"), &[d.inter]);
     let m1 = g.matmul(x1, w1);
     let a1 = g.add(m1, bb1);
     let act = g.gelu(a1);
-    let w2 = g.weight(&format!("{p}/w2"), &[cfg.inter, cfg.hidden]);
+    let w2 = g.weight(&format!("{p}/w2"), &[d.inter, cfg.hidden]);
     let bb2 = g.weight(&format!("{p}/b2"), &[cfg.hidden]);
     let m2 = g.matmul(act, w2);
     let a2 = g.add(m2, bb2);
@@ -227,6 +259,34 @@ mod tests {
         let d1 = mk(2) - mk(1);
         let d2 = mk(3) - mk(2);
         assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn pruned_dims_shrink_layer_tensors_not_the_interface() {
+        let cfg = BertConfig { vocab: 64, seq: 8, layers: 2, hidden: 16, heads: 4, inter: 32 };
+        let dims = [LayerDims { heads: 2, inter: 12 }; 2];
+        let g = build_encoder_with(&cfg, &dims);
+        let shape_of = |name: &str| -> Vec<usize> {
+            g.nodes
+                .iter()
+                .find(|n| matches!(&n.op, Op::Weight { name: w } if w == name))
+                .unwrap_or_else(|| panic!("no weight {name}"))
+                .shape
+                .dims
+                .clone()
+        };
+        // Attention width = 2 kept heads x head_dim 4 = 8; FFN width 12.
+        assert_eq!(shape_of("layer0/wq"), vec![16, 8]);
+        assert_eq!(shape_of("layer0/bq"), vec![8]);
+        assert_eq!(shape_of("layer0/wo"), vec![8, 16]);
+        assert_eq!(shape_of("layer1/w1"), vec![16, 12]);
+        assert_eq!(shape_of("layer1/w2"), vec![12, 16]);
+        // The residual stream (and thus the model output) stays [s, h].
+        assert_eq!(g.nodes[*g.outputs.last().unwrap()].shape.dims, vec![8, 16]);
+        // Full dims reproduce the unpruned graph shape-for-shape.
+        let full = build_encoder_with(&cfg, &[LayerDims::of(&cfg); 2]);
+        let reference = build_encoder(&cfg);
+        assert_eq!(full.nodes.len(), reference.nodes.len());
     }
 
     #[test]

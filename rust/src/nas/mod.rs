@@ -10,5 +10,5 @@ pub mod search;
 pub mod trainer;
 
 pub use controller::{Controller, StepSpec};
-pub use search::{Search, SearchConfig, SearchResult};
+pub use search::{CompressionChoice, Search, SearchConfig, SearchResult};
 pub use trainer::{surrogate_mean, surrogate_score, GlueTask, ALL_TASKS};

@@ -12,14 +12,64 @@ use std::collections::HashMap;
 use super::controller::{Controller, StepSpec};
 use super::trainer::surrogate_mean;
 use crate::compiler::{compile, CompileOptions};
-use crate::device::{plan_latency, DeviceProfile};
-use crate::model::{build_encoder, BertConfig};
+use crate::compress::prune::PruneSpec;
+use crate::device::{plan_latency_compressed, DeviceProfile};
+use crate::model::{build_encoder_with, BertConfig, LayerDims};
 use crate::util::rng::Rng;
 
 /// §2.1 search space.
 pub const LAYER_CHOICES: [usize; 6] = [2, 4, 6, 8, 10, 12];
 pub const HIDDEN_CHOICES: [usize; 6] = [128, 192, 256, 384, 512, 768];
 pub const INTER_CHOICES: [usize; 6] = [512, 768, 1024, 1536, 2048, 3072];
+
+/// Compression knobs (enabled by `SearchConfig::search_compression`):
+/// fraction of attention heads / FFN channels kept, and int8 on/off. The
+/// controller picks indices into these; latency comes from compiling the
+/// *compressed shapes* (`build_encoder_with` + `plan_latency_compressed`),
+/// which is the compression half of the paper's co-design inside the
+/// search loop.
+pub const HEAD_KEEP_CHOICES: [f32; 3] = [1.0, 0.75, 0.5];
+pub const FFN_KEEP_CHOICES: [f32; 3] = [1.0, 0.75, 0.5];
+
+/// One point in the compression sub-space (indices keep it `Eq + Hash`
+/// for the latency cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct CompressionChoice {
+    pub head_keep_idx: usize,
+    pub ffn_keep_idx: usize,
+    pub int8: bool,
+}
+
+impl CompressionChoice {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn head_keep(&self) -> f32 {
+        HEAD_KEEP_CHOICES[self.head_keep_idx]
+    }
+
+    pub fn ffn_keep(&self) -> f32 {
+        FFN_KEEP_CHOICES[self.ffn_keep_idx]
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.head_keep_idx == 0 && self.ffn_keep_idx == 0 && !self.int8
+    }
+
+    pub fn prune_spec(&self) -> PruneSpec {
+        PruneSpec { head_keep: self.head_keep(), ffn_keep: self.ffn_keep() }
+    }
+
+    /// Surrogate accuracy cost in GLUE points (calibrated to the
+    /// MobileBERT / CoCoPIE-style results the paper builds on: moderate
+    /// structured compression costs ~1 point, int8 a fraction of one).
+    pub fn accuracy_drop(&self) -> f32 {
+        2.0 * (1.0 - self.head_keep())
+            + 3.0 * (1.0 - self.ffn_keep())
+            + if self.int8 { 0.3 } else { 0.0 }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SearchConfig {
@@ -38,6 +88,10 @@ pub struct SearchConfig {
     pub joint: bool,
     /// Ablation D1: evaluate latency WITHOUT LP-Fusion in the loop.
     pub no_fusion_in_loop: bool,
+    /// Add the §2.1 compression knobs (heads kept, FFN keep ratio, int8)
+    /// to the phase-2 step space. Off by default: architecture-only
+    /// search reproduces the paper's base experiments unchanged.
+    pub search_compression: bool,
 }
 
 impl Default for SearchConfig {
@@ -53,6 +107,7 @@ impl Default for SearchConfig {
             accuracy_only: false,
             joint: false,
             no_fusion_in_loop: false,
+            search_compression: false,
         }
     }
 }
@@ -60,6 +115,9 @@ impl Default for SearchConfig {
 #[derive(Debug, Clone)]
 pub struct Candidate {
     pub cfg: BertConfig,
+    /// The compression point this candidate was priced at
+    /// (`CompressionChoice::none()` in architecture-only search).
+    pub compression: CompressionChoice,
     pub accuracy: f32,
     pub latency_ms: f64,
     pub reward: f32,
@@ -90,7 +148,7 @@ fn decisions_to_cfg(layers: usize, hidden_idx: usize, inter_idx: usize) -> BertC
 /// is the expensive part of an iteration; candidates repeat often).
 pub struct Search {
     pub cfg: SearchConfig,
-    latency_cache: HashMap<BertConfig, f64>,
+    latency_cache: HashMap<(BertConfig, CompressionChoice), f64>,
     pub evaluations: usize,
 }
 
@@ -99,27 +157,42 @@ impl Search {
         Search { cfg, latency_cache: HashMap::new(), evaluations: 0 }
     }
 
-    /// Compile (with or without fusion, per ablation) and price a config.
+    /// Compile (with or without fusion, per ablation) and price a config
+    /// at the dense (uncompressed) point.
     pub fn latency_ms(&mut self, cfg: &BertConfig) -> f64 {
-        if let Some(&l) = self.latency_cache.get(cfg) {
+        self.latency_ms_compressed(cfg, CompressionChoice::none())
+    }
+
+    /// Compile the *compressed shapes* and price them: pruning shrinks
+    /// the graph the compiler sees (`build_encoder_with`), int8 switches
+    /// the weight-matmul blocks to the device's int8 roofline.
+    pub fn latency_ms_compressed(&mut self, cfg: &BertConfig, comp: CompressionChoice) -> f64 {
+        if let Some(&l) = self.latency_cache.get(&(*cfg, comp)) {
             return l;
         }
-        let g = build_encoder(cfg);
+        let spec = comp.prune_spec();
+        let dims = vec![
+            LayerDims { heads: spec.heads_kept(cfg), inter: spec.inter_kept(cfg) };
+            cfg.layers
+        ];
+        let g = build_encoder_with(cfg, &dims);
         let opts = if self.cfg.no_fusion_in_loop {
             CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() }
         } else {
             CompileOptions { model_only_tuning: true, ..Default::default() }
         };
         let compiled = compile(&g, &opts);
-        let lat = plan_latency(&compiled.graph, &compiled.plan, &self.cfg.device).ms();
-        self.latency_cache.insert(*cfg, lat);
+        let lat =
+            plan_latency_compressed(&compiled.graph, &compiled.plan, &self.cfg.device, comp.int8)
+                .ms();
+        self.latency_cache.insert((*cfg, comp), lat);
         self.evaluations += 1;
         lat
     }
 
-    pub fn evaluate(&mut self, cfg: &BertConfig) -> Candidate {
-        let accuracy = surrogate_mean(cfg, self.cfg.seed);
-        let latency_ms = self.latency_ms(cfg);
+    pub fn evaluate(&mut self, cfg: &BertConfig, comp: CompressionChoice) -> Candidate {
+        let accuracy = surrogate_mean(cfg, self.cfg.seed) - comp.accuracy_drop();
+        let latency_ms = self.latency_ms_compressed(cfg, comp);
         let penalty = if self.cfg.accuracy_only {
             0.0
         } else {
@@ -127,7 +200,7 @@ impl Search {
         };
         // Normalized accuracy (GLUE mean / 100) minus the latency hinge.
         let reward = accuracy / 100.0 - penalty;
-        Candidate { cfg: *cfg, accuracy, latency_ms, reward }
+        Candidate { cfg: *cfg, compression: comp, accuracy, latency_ms, reward }
     }
 
     /// Run the full two-phase (or joint) search.
@@ -150,7 +223,7 @@ impl Search {
                 for _ in 0..self.cfg.batch {
                     let s = ctrl.sample(&mut rng);
                     let cfg = decisions_to_cfg(LAYER_CHOICES[s.decisions[0]], 3, 3);
-                    let cand = self.evaluate(&cfg);
+                    let cand = self.evaluate(&cfg, CompressionChoice::none());
                     rsum += cand.reward;
                     batch.push((s.decisions, cand.reward));
                     history.push(cand);
@@ -161,13 +234,19 @@ impl Search {
             Some(LAYER_CHOICES[ctrl.greedy()[0]])
         };
 
-        // ---- Phase 2: sizes (hidden, inter), layers fixed or joint -----
+        // ---- Phase 2: sizes (hidden, inter), layers fixed or joint;
+        // plus, when enabled, the compression knobs -------------------
         let mut steps = Vec::new();
         if fixed_layers.is_none() {
             steps.push(StepSpec { name: "layers".into(), choices: LAYER_CHOICES.len() });
         }
         steps.push(StepSpec { name: "hidden".into(), choices: HIDDEN_CHOICES.len() });
         steps.push(StepSpec { name: "inter".into(), choices: INTER_CHOICES.len() });
+        if self.cfg.search_compression {
+            steps.push(StepSpec { name: "head_keep".into(), choices: HEAD_KEEP_CHOICES.len() });
+            steps.push(StepSpec { name: "ffn_keep".into(), choices: FFN_KEEP_CHOICES.len() });
+            steps.push(StepSpec { name: "int8".into(), choices: 2 });
+        }
         let mut ctrl = Controller::new(steps, self.cfg.seed.wrapping_add(1));
 
         for _ in 0..self.cfg.phase2_iters {
@@ -175,12 +254,23 @@ impl Search {
             let mut rsum = 0.0;
             for _ in 0..self.cfg.batch {
                 let s = ctrl.sample(&mut rng);
-                let (layers, hi, ii) = match fixed_layers {
-                    Some(l) => (l, s.decisions[0], s.decisions[1]),
-                    None => (LAYER_CHOICES[s.decisions[0]], s.decisions[1], s.decisions[2]),
+                let base = usize::from(fixed_layers.is_none());
+                let layers = match fixed_layers {
+                    Some(l) => l,
+                    None => LAYER_CHOICES[s.decisions[0]],
+                };
+                let (hi, ii) = (s.decisions[base], s.decisions[base + 1]);
+                let comp = if self.cfg.search_compression {
+                    CompressionChoice {
+                        head_keep_idx: s.decisions[base + 2],
+                        ffn_keep_idx: s.decisions[base + 3],
+                        int8: s.decisions[base + 4] == 1,
+                    }
+                } else {
+                    CompressionChoice::none()
                 };
                 let cfg = decisions_to_cfg(layers, hi, ii);
-                let cand = self.evaluate(&cfg);
+                let cand = self.evaluate(&cfg, comp);
                 rsum += cand.reward;
                 batch.push((s.decisions, cand.reward));
                 history.push(cand);
@@ -262,5 +352,44 @@ mod tests {
         let mut s = Search::new(SearchConfig { joint: true, ..quick_cfg() });
         let res = s.run();
         assert!(res.best.cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn compression_knobs_reduce_latency_estimate() {
+        let mut s = Search::new(quick_cfg());
+        let cfg = BertConfig::canaobert();
+        let dense = s.latency_ms_compressed(&cfg, CompressionChoice::none());
+        let pruned = s.latency_ms_compressed(
+            &cfg,
+            CompressionChoice { head_keep_idx: 2, ffn_keep_idx: 2, int8: false },
+        );
+        let both = s.latency_ms_compressed(
+            &cfg,
+            CompressionChoice { head_keep_idx: 2, ffn_keep_idx: 2, int8: true },
+        );
+        assert!(pruned < dense, "pruned {pruned} !< dense {dense}");
+        assert!(both < pruned, "pruned+int8 {both} !< pruned {pruned}");
+        // Cache keys distinguish compression points.
+        let evals = s.evaluations;
+        let _ = s.latency_ms_compressed(
+            &cfg,
+            CompressionChoice { head_keep_idx: 2, ffn_keep_idx: 2, int8: true },
+        );
+        assert_eq!(s.evaluations, evals);
+    }
+
+    #[test]
+    fn compression_search_explores_and_reports_knobs() {
+        let mut s = Search::new(SearchConfig { search_compression: true, ..quick_cfg() });
+        let res = s.run();
+        assert!(res.best.cfg.validate().is_ok());
+        // Phase 2 candidates must cover more than one compression point.
+        let distinct: std::collections::HashSet<_> =
+            res.history.iter().map(|c| c.compression).collect();
+        assert!(distinct.len() > 1, "controller never explored compression: {distinct:?}");
+        // The accuracy surrogate penalizes compression.
+        assert!(CompressionChoice { head_keep_idx: 2, ffn_keep_idx: 2, int8: true }
+            .accuracy_drop()
+            > CompressionChoice::none().accuracy_drop());
     }
 }

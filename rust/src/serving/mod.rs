@@ -10,7 +10,11 @@
 //!   **wave-parallel arena executor** (`compiler::exec::parallel`). No
 //!   artifacts or PJRT needed — this is what the benches, stress tests,
 //!   and artifact-less deployments run, and it is how real serving
-//!   traffic exercises the executor end to end.
+//!   traffic exercises the executor end to end. Both engines accept a
+//!   `compress::CompressionConfig` (`with_compression`) to serve
+//!   structurally pruned and/or INT8-quantized models; per-request
+//!   executor state is cached (`Compiled::prepared`) and weights are
+//!   borrowed by the executor, never copied per forward.
 //!
 //! The batcher coalesces queued requests into batches when load is high
 //! and falls back to singles when it isn't (bucketed static shapes — the
@@ -36,8 +40,10 @@ pub(crate) const NEG_MASK: f32 = -1.0e4;
 /// Deterministic parameter set for a native-backend model: layernorm
 /// gammas 1, betas 0, everything else small-normal. (The native engines
 /// demonstrate/benchmark the serving + executor stack; swap in trained
-/// parameters by name to serve a real checkpoint.)
-pub(crate) fn init_weights(g: &Graph, seed: u64) -> HashMap<String, Vec<f32>> {
+/// parameters by name to serve a real checkpoint.) Public so the benches
+/// and the compression differential tests draw exactly the weights
+/// serving uses.
+pub fn init_weights(g: &Graph, seed: u64) -> HashMap<String, Vec<f32>> {
     let mut rng = Rng::new(seed);
     let mut weights = HashMap::new();
     for node in &g.nodes {

@@ -14,8 +14,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::batcher::BatchModel;
-use crate::compiler::exec::ExecError;
+use crate::compiler::exec::{ExecError, Feeds, QuantizedTensor, QuantizedWeights, View};
 use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::compress::{compress_encoder, CompressionConfig, CompressionReport};
 use crate::model::{build_encoder, BertConfig};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::tokenizer::Tokenizer;
@@ -170,10 +171,9 @@ pub fn best_span(
 
 // ---- native backend -----------------------------------------------------
 
-/// The QA graph: the demo encoder plus a span head projecting each
-/// position's hidden state to (start, end) logits.
-fn qa_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
-    let mut g = build_encoder(cfg);
+/// Append the span head to an encoder graph: each position's hidden
+/// state projects to (start, end) logits.
+fn qa_head(g: &mut crate::compiler::ir::Graph, cfg: &BertConfig) {
     let x = *g.outputs.last().expect("encoder output");
     let w = g.weight("qa/w_span", &[cfg.hidden, 2]);
     let b = g.weight("qa/b_span", &[2]);
@@ -185,19 +185,32 @@ fn qa_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
     // never freed).
     g.outputs.clear();
     g.mark_output(logits);
+}
+
+/// The dense QA graph (encoder + span head).
+fn qa_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
+    let mut g = build_encoder(cfg);
+    qa_head(&mut g, cfg);
     g
 }
 
 /// PJRT-free QA engine: compiles the QA graph once (passes + LP-Fusion +
-/// schedule tuning) and serves every request through the wave-parallel
-/// arena executor. This is the path benches, stress tests, and
+/// schedule tuning; optionally structurally pruned and int8-quantized via
+/// the `compress` subsystem) and serves every request through the
+/// wave-parallel arena executor with a cached `PreparedExec`. Weights
+/// live in one persistent map the executor borrows per request — no
+/// per-forward copies. This is the path benches, stress tests, and
 /// artifact-less deployments use; parameters are deterministic
 /// placeholders unless replaced by name (see `serving::init_weights`).
 pub struct NativeQaEngine {
     pub tokenizer: Arc<Tokenizer>,
     compiled: Compiled,
     weights: HashMap<String, Vec<f32>>,
+    quant: Option<QuantizedWeights>,
     cfg: BertConfig,
+    /// What compression this engine serves (and its effect on the model).
+    pub compression: CompressionConfig,
+    pub report: CompressionReport,
     pub max_answer_tokens: usize,
     /// Worker threads per request in the wave executor.
     pub threads: usize,
@@ -206,15 +219,47 @@ pub struct NativeQaEngine {
 
 impl NativeQaEngine {
     pub fn new(tokenizer: Arc<Tokenizer>, cfg: BertConfig, threads: usize) -> Self {
-        let g = qa_graph(&cfg);
-        let compiled =
-            compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
-        let weights = super::init_weights(&compiled.graph, 0x0A11_CE5E);
+        Self::with_compression(tokenizer, cfg, threads, CompressionConfig::none())
+    }
+
+    /// Build a compressed serving engine: weights are drawn for the full
+    /// model first (magnitude pruning needs the dense tensors to score),
+    /// then pruned (graph + weights shrink together) and the pruned graph
+    /// compiled; int8 quantizes the compiled model's matmul weights into
+    /// the executor's side table.
+    pub fn with_compression(
+        tokenizer: Arc<Tokenizer>,
+        cfg: BertConfig,
+        threads: usize,
+        compression: CompressionConfig,
+    ) -> Self {
+        let dense = qa_graph(&cfg);
+        let mut weights = super::init_weights(&dense, 0x0A11_CE5E);
+        let (mut g, mut report) = compress_encoder(&cfg, &mut weights, &compression);
+        qa_head(&mut g, &cfg);
+        let compiled = compile(
+            &g,
+            &CompileOptions { model_only_tuning: true, compression, ..Default::default() },
+        );
+        let quant = compression.int8.then(|| compiled.quantize_weights(&weights));
+        if compression.int8 {
+            // The compiled model also quantizes the span head, which the
+            // encoder-level report couldn't see.
+            report.quantized_params = compiled
+                .quant_sites
+                .iter()
+                .filter_map(|s| weights.get(&s.name))
+                .map(|v| v.len())
+                .sum();
+        }
         NativeQaEngine {
             tokenizer,
             compiled,
             weights,
+            quant,
             cfg,
+            compression,
+            report,
             max_answer_tokens: 30,
             threads: threads.max(1),
             batch_cap: 8,
@@ -226,11 +271,26 @@ impl NativeQaEngine {
         Self::new(tokenizer, BertConfig::demo_qa(), threads)
     }
 
-    /// Replace a parameter by name (e.g. with trained values).
+    /// Replace a parameter by name (e.g. with trained values). Shapes are
+    /// post-pruning; a quantized weight is re-quantized in place.
     pub fn set_weight(&mut self, name: &str, data: Vec<f32>) -> Result<(), ExecError> {
         match self.weights.get(name) {
             Some(old) if old.len() == data.len() => {
                 self.weights.insert(name.to_string(), data);
+                if let Some(q) = self.quant.as_mut() {
+                    if let Some(site) =
+                        self.compiled.quant_sites.iter().find(|s| s.name == name)
+                    {
+                        let shape = &self.compiled.graph.nodes[site.weight].shape;
+                        q.by_node.insert(
+                            site.weight,
+                            QuantizedTensor::per_channel(View {
+                                shape,
+                                data: &self.weights[name],
+                            }),
+                        );
+                    }
+                }
                 Ok(())
             }
             Some(old) => Err(ExecError::FeedShape {
@@ -251,17 +311,21 @@ impl NativeQaEngine {
     pub fn exec_stats(&self) -> Result<crate::compiler::exec::ExecStats, ExecError> {
         let (ids, _tt, mask, _b_start) =
             self.tokenizer.encode_pair("warm", "up", self.cfg.seq);
-        let feeds = self.feeds_from(&ids, &mask);
+        let request = self.request_feeds(&ids, &mask);
         self.compiled
-            .run_parallel_stats(&feeds, self.threads)
+            .run_parallel_with(
+                &Feeds::layered(&request, &self.weights),
+                self.threads,
+                self.quant.as_ref(),
+            )
             .map(|(_, stats)| stats)
     }
 
-    /// Build the executor feed map from an already-encoded request, so
-    /// the ids used for span decoding and the ids fed to the model are
-    /// one and the same.
-    fn feeds_from(&self, ids: &[i32], mask: &[f32]) -> HashMap<String, Vec<f32>> {
-        let mut feeds = self.weights.clone();
+    /// Build the per-request feed map (ids + per-layer masks only; the
+    /// persistent weight map is layered underneath by the executor and
+    /// borrowed, never copied).
+    fn request_feeds(&self, ids: &[i32], mask: &[f32]) -> HashMap<String, Vec<f32>> {
+        let mut feeds = HashMap::new();
         let cap = self.cfg.vocab as i32 - 1;
         feeds.insert(
             "input_ids".to_string(),
@@ -282,8 +346,12 @@ impl NativeQaEngine {
         let (ids, _tt, mask, b_start) =
             self.tokenizer.encode_pair(&req.question, &req.context, seq);
         let used = mask.iter().filter(|&&m| m > 0.0).count();
-        let feeds = self.feeds_from(&ids, &mask);
-        let outs = self.compiled.run_parallel(&feeds, self.threads)?;
+        let request = self.request_feeds(&ids, &mask);
+        let (outs, _) = self.compiled.run_parallel_with(
+            &Feeds::layered(&request, &self.weights),
+            self.threads,
+            self.quant.as_ref(),
+        )?;
         let logits = outs.last().expect("qa graph has outputs"); // [seq, 2]
 
         let mut s_row = vec![0.0f32; seq];
@@ -426,6 +494,64 @@ mod tests {
         let stats = eng.exec_stats().unwrap();
         assert!(stats.peak_arena_bytes <= stats.naive_bytes);
         assert!(stats.waves > 0);
+    }
+
+    fn tiny_compressed_engine(threads: usize, comp: CompressionConfig) -> NativeQaEngine {
+        use crate::tokenizer::{Tokenizer, Vocab};
+        let corpus = "the quick brown fox jumps over the lazy dog . \
+                      layer fusion reduces the number of kernels .";
+        let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 256)));
+        let cfg = BertConfig { vocab: 256, seq: 16, layers: 1, hidden: 8, heads: 2, inter: 16 };
+        NativeQaEngine::with_compression(tok, cfg, threads, comp)
+    }
+
+    #[test]
+    fn compressed_engines_serve_and_stay_deterministic() {
+        let req = QaRequest {
+            question: "what reduces kernels ?".into(),
+            context: "layer fusion reduces the number of kernels".into(),
+        };
+        for comp in [
+            CompressionConfig::pruned(0.5, 0.5),
+            CompressionConfig::int8_only(),
+            CompressionConfig::pruned_int8(0.5, 0.5),
+        ] {
+            let eng = tiny_compressed_engine(2, comp);
+            if comp.prune.is_some() {
+                assert!(
+                    eng.report.params_after < eng.report.params_before,
+                    "{comp:?} did not shrink the model"
+                );
+            }
+            let resp = eng.answer(&req).unwrap();
+            assert!(resp.start_token <= resp.end_token);
+            assert!(resp.score.is_finite());
+            // Same spans regardless of executor thread count (the int8
+            // kernel is deterministic and wave order doesn't matter).
+            let resp1 = tiny_compressed_engine(1, comp).answer(&req).unwrap();
+            assert_eq!(
+                (resp.start_token, resp.end_token, resp.answer.clone()),
+                (resp1.start_token, resp1.end_token, resp1.answer.clone()),
+                "{comp:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn set_weight_requantizes_int8_entries() {
+        let mut eng = tiny_compressed_engine(1, CompressionConfig::int8_only());
+        let site = eng
+            .compiled
+            .quant_sites
+            .iter()
+            .find(|s| s.name == "qa/w_span")
+            .expect("span head is a quantizable matmul")
+            .clone();
+        let before = eng.quant.as_ref().unwrap().by_node[&site.weight].clone();
+        let n = eng.weights["qa/w_span"].len();
+        eng.set_weight("qa/w_span", vec![0.25; n]).unwrap();
+        let after = &eng.quant.as_ref().unwrap().by_node[&site.weight];
+        assert_ne!(&before, after, "int8 table must track weight updates");
     }
 
     #[test]

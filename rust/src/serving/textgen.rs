@@ -14,8 +14,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::compiler::exec::ExecError;
+use crate::compiler::exec::{ExecError, Feeds, QuantizedWeights};
 use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::compress::{compress_encoder, CompressionConfig, CompressionReport};
 use crate::model::{build_encoder, BertConfig};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::tokenizer::Tokenizer;
@@ -111,10 +112,9 @@ impl GenEngine {
 
 // ---- native backend -----------------------------------------------------
 
-/// The generation graph: the encoder plus an LM head projecting each
-/// position's hidden state to vocabulary logits.
-fn lm_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
-    let mut g = build_encoder(cfg);
+/// Append the LM head to an encoder graph: each position's hidden state
+/// projects to vocabulary logits.
+fn lm_head(g: &mut crate::compiler::ir::Graph, cfg: &BertConfig) {
     let x = *g.outputs.last().expect("encoder output");
     let w = g.weight("lm/w_head", &[cfg.hidden, cfg.vocab]);
     let logits = g.matmul(x, w); // [seq, vocab]
@@ -122,31 +122,79 @@ fn lm_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
     // output would be copied per step and never freed by the arena).
     g.outputs.clear();
     g.mark_output(logits);
+}
+
+/// The dense generation graph (encoder + LM head).
+fn lm_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
+    let mut g = build_encoder(cfg);
+    lm_head(&mut g, cfg);
     g
 }
 
 /// PJRT-free text-generation engine with the same request/response types
 /// and decode loop as [`GenEngine`]: at each step the full static-shape
-/// sequence is re-run on the wave-parallel arena executor and the next
-/// token is sampled from the logits at the last attended position.
+/// sequence is re-run on the wave-parallel arena executor (cached
+/// `PreparedExec`, weights borrowed — not copied — per step; optionally
+/// pruned/int8 via the `compress` subsystem) and the next token is
+/// sampled from the logits at the last attended position.
 /// (Bidirectional attention over the attended prefix — this mirrors the
 /// AOT `gen_b1` interface and timing shape, not its causal mask.)
 pub struct NativeGenEngine {
     pub tokenizer: Arc<Tokenizer>,
     compiled: Compiled,
     weights: HashMap<String, Vec<f32>>,
+    quant: Option<QuantizedWeights>,
     cfg: BertConfig,
+    /// What compression this engine serves.
+    pub compression: CompressionConfig,
+    pub report: CompressionReport,
     /// Worker threads per forward in the wave executor.
     pub threads: usize,
 }
 
 impl NativeGenEngine {
     pub fn new(tokenizer: Arc<Tokenizer>, cfg: BertConfig, threads: usize) -> Self {
-        let g = lm_graph(&cfg);
-        let compiled =
-            compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
-        let weights = super::init_weights(&compiled.graph, 0x6E6E_57A7);
-        NativeGenEngine { tokenizer, compiled, weights, cfg, threads: threads.max(1) }
+        Self::with_compression(tokenizer, cfg, threads, CompressionConfig::none())
+    }
+
+    /// As [`NativeQaEngine::with_compression`](super::NativeQaEngine):
+    /// dense weight draw, structured pruning (graph + weights together),
+    /// compile, then int8 table from the compiled model.
+    pub fn with_compression(
+        tokenizer: Arc<Tokenizer>,
+        cfg: BertConfig,
+        threads: usize,
+        compression: CompressionConfig,
+    ) -> Self {
+        let dense = lm_graph(&cfg);
+        let mut weights = super::init_weights(&dense, 0x6E6E_57A7);
+        let (mut g, mut report) = compress_encoder(&cfg, &mut weights, &compression);
+        lm_head(&mut g, &cfg);
+        let compiled = compile(
+            &g,
+            &CompileOptions { model_only_tuning: true, compression, ..Default::default() },
+        );
+        let quant = compression.int8.then(|| compiled.quantize_weights(&weights));
+        if compression.int8 {
+            // The compiled model also quantizes the LM head, which the
+            // encoder-level report couldn't see.
+            report.quantized_params = compiled
+                .quant_sites
+                .iter()
+                .filter_map(|s| weights.get(&s.name))
+                .map(|v| v.len())
+                .sum();
+        }
+        NativeGenEngine {
+            tokenizer,
+            compiled,
+            weights,
+            quant,
+            cfg,
+            compression,
+            report,
+            threads: threads.max(1),
+        }
     }
 
     /// Small default configuration for demos and benches.
@@ -173,22 +221,27 @@ impl NativeGenEngine {
 
         let mut per_token_ms = Vec::new();
         let mut generated = 0usize;
-        // Weights are loop-invariant; only input_ids/mask change per step.
-        let mut feeds = self.weights.clone();
+        // Weights are loop-invariant and live in the persistent map the
+        // executor borrows; only input_ids/mask go in the request layer.
+        let mut request: HashMap<String, Vec<f32>> = HashMap::new();
         while generated < req.max_new_tokens && ids.len() < seq {
             let used = ids.len();
             let mut padded: Vec<f32> = ids.iter().map(|&i| i as f32).collect();
             padded.resize(seq, 0.0);
-            feeds.insert("input_ids".to_string(), padded);
+            request.insert("input_ids".to_string(), padded);
             let mask: Vec<f32> = (0..seq)
                 .map(|i| if i < used { 0.0 } else { super::NEG_MASK })
                 .collect();
             for l in 0..self.cfg.layers {
-                feeds.insert(format!("mask{l}"), mask.clone());
+                request.insert(format!("mask{l}"), mask.clone());
             }
 
             let t0 = std::time::Instant::now();
-            let outs = self.compiled.run_parallel(&feeds, self.threads)?;
+            let (outs, _) = self.compiled.run_parallel_with(
+                &Feeds::layered(&request, &self.weights),
+                self.threads,
+                self.quant.as_ref(),
+            )?;
             per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             let logits = outs.last().expect("lm graph has outputs"); // [seq, vocab]
             let last = &logits.data[(used - 1) * vocab..used * vocab];
@@ -230,6 +283,36 @@ mod tests {
         assert_eq!(r1.tokens_generated, 4);
         assert_eq!(r1.text, r2.text, "wave executor must not change sampling");
         assert_eq!(r1.per_token_ms.len(), 4);
+    }
+
+    #[test]
+    fn compressed_generation_is_deterministic_and_smaller() {
+        let corpus = "the quick brown fox jumps over the lazy dog . \
+                      the model generates new sentences word by word .";
+        let mk = |threads: usize| {
+            let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 256)));
+            let cfg =
+                BertConfig { vocab: 256, seq: 12, layers: 1, hidden: 8, heads: 2, inter: 16 };
+            NativeGenEngine::with_compression(
+                tok,
+                cfg,
+                threads,
+                CompressionConfig::pruned_int8(0.5, 0.5),
+            )
+        };
+        let req = GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 3,
+            temperature: 0.0,
+            seed: 11,
+        };
+        let e1 = mk(1);
+        assert!(e1.report.params_after < e1.report.params_before);
+        assert!(e1.report.size_ratio() > 1.5, "{}", e1.report.size_ratio());
+        let r1 = e1.generate(&req).unwrap();
+        let r4 = mk(4).generate(&req).unwrap();
+        assert_eq!(r1.text, r4.text, "compressed decode must not depend on threads");
+        assert_eq!(r1.tokens_generated, 3);
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Differential tests for the compression subsystem (§2.1):
+//!
+//! * **Pruning is exact**: a magnitude-pruned model must be *bitwise
+//!   equal* to a hand-shrunk reference — the graph built directly at the
+//!   smaller dims with weights sliced by independent test-local code from
+//!   the same kept indices. Pruning changes *which* model runs, never
+//!   *how* it runs.
+//! * **INT8 is close**: quantized outputs must stay within a documented
+//!   tolerance of fp32 on tiny-BERT encoders (per-channel symmetric
+//!   weights + per-row dynamic activations keep the error ~1% per matmul;
+//!   layernorm renormalizes between layers — we assert rtol 0.1 /
+//!   atol 0.05, comfortably above observed drift, far below anything a
+//!   span/argmax consumer would notice).
+//! * **Executors agree under compression**: sequential vs wave-parallel
+//!   execution of a compressed model stays bitwise identical at every
+//!   thread count, same as the fp32 contract in `exec_differential.rs`.
+//! * **Smoke** (CI): compiling + serving a tiny model with pruning+int8
+//!   enabled end to end can't rot silently.
+
+use std::collections::HashMap;
+
+use canao::compiler::exec::interp::eval_graph;
+use canao::compiler::exec::plan::execute_plan_with;
+use canao::compiler::exec::Feeds;
+use canao::compiler::{compile, CompileOptions};
+use canao::compress::prune::{plan_prune, PruneSpec};
+use canao::compress::quant::calibrate_activations;
+use canao::compress::{compress_encoder, CompressionConfig};
+use canao::model::{build_encoder, build_encoder_with, BertConfig, LayerDims};
+use canao::util::check::assert_close;
+use canao::util::rng::Rng;
+
+fn tiny_cfg() -> BertConfig {
+    BertConfig { vocab: 64, seq: 8, layers: 2, hidden: 16, heads: 4, inter: 24 }
+}
+
+// The weights under test are exactly the ones serving draws.
+use canao::serving::init_weights;
+
+/// Per-request inputs for an encoder graph.
+fn request_feeds(cfg: &BertConfig, seed: u64) -> HashMap<String, Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut feeds = HashMap::new();
+    feeds.insert(
+        "input_ids".to_string(),
+        (0..cfg.seq).map(|_| rng.below(cfg.vocab) as f32).collect(),
+    );
+    for l in 0..cfg.layers {
+        feeds.insert(format!("mask{l}"), vec![0.0; cfg.seq]);
+    }
+    feeds
+}
+
+fn merged(
+    a: &HashMap<String, Vec<f32>>,
+    b: &HashMap<String, Vec<f32>>,
+) -> HashMap<String, Vec<f32>> {
+    let mut m = a.clone();
+    for (k, v) in b {
+        m.insert(k.clone(), v.clone());
+    }
+    m
+}
+
+/// Test-local weight slicing, independent of `compress::prune`'s
+/// implementation: keep `heads` column blocks / `ffn` channels.
+fn hand_shrink(
+    cfg: &BertConfig,
+    dense: &HashMap<String, Vec<f32>>,
+    kept_heads: &[Vec<usize>],
+    kept_ffn: &[Vec<usize>],
+) -> HashMap<String, Vec<f32>> {
+    let (h, i, dh) = (cfg.hidden, cfg.inter, cfg.head_dim());
+    let mut out = dense.clone();
+    for l in 0..cfg.layers {
+        let cols: Vec<usize> =
+            kept_heads[l].iter().flat_map(|&a| (a * dh)..((a + 1) * dh)).collect();
+        for nm in ["wq", "wk", "wv"] {
+            let w = &dense[&format!("layer{l}/{nm}")];
+            let mut v = Vec::new();
+            for r in 0..h {
+                for &c in &cols {
+                    v.push(w[r * h + c]);
+                }
+            }
+            out.insert(format!("layer{l}/{nm}"), v);
+        }
+        for nm in ["bq", "bk", "bv"] {
+            let w = &dense[&format!("layer{l}/{nm}")];
+            out.insert(format!("layer{l}/{nm}"), cols.iter().map(|&c| w[c]).collect());
+        }
+        let wo = &dense[&format!("layer{l}/wo")];
+        let mut v = Vec::new();
+        for &r in &cols {
+            v.extend_from_slice(&wo[r * h..(r + 1) * h]);
+        }
+        out.insert(format!("layer{l}/wo"), v);
+
+        let w1 = &dense[&format!("layer{l}/w1")];
+        let mut v = Vec::new();
+        for r in 0..h {
+            for &c in &kept_ffn[l] {
+                v.push(w1[r * i + c]);
+            }
+        }
+        out.insert(format!("layer{l}/w1"), v);
+        let b1 = &dense[&format!("layer{l}/b1")];
+        out.insert(format!("layer{l}/b1"), kept_ffn[l].iter().map(|&c| b1[c]).collect());
+        let w2 = &dense[&format!("layer{l}/w2")];
+        let mut v = Vec::new();
+        for &r in &kept_ffn[l] {
+            v.extend_from_slice(&w2[r * h..(r + 1) * h]);
+        }
+        out.insert(format!("layer{l}/w2"), v);
+    }
+    out
+}
+
+/// The pruned model is bitwise equal to the hand-shrunk reference graph:
+/// same kept indices -> same sliced weights -> same interpreter output,
+/// and the compiled pruned model agrees bitwise between the sequential
+/// and wave-parallel executors.
+#[test]
+fn c1_pruned_model_bitwise_equals_hand_shrunk_reference() {
+    let cfg = tiny_cfg();
+    let dense_graph = build_encoder(&cfg);
+    let dense_weights = init_weights(&dense_graph, 0x9A17);
+    let spec = PruneSpec { head_keep: 0.5, ffn_keep: 0.5 };
+
+    // What the subsystem prunes...
+    let plan = plan_prune(&cfg, &dense_weights, &spec);
+    let mut pruned_weights = dense_weights.clone();
+    let (pruned_graph, report) = compress_encoder(
+        &cfg,
+        &mut pruned_weights,
+        &CompressionConfig { prune: Some(spec), int8: false },
+    );
+    assert_eq!(report.layers, plan, "compress_encoder must follow the magnitude plan");
+
+    // ...vs the hand-shrunk reference built by independent test code.
+    let kept_heads: Vec<Vec<usize>> = plan.iter().map(|lp| lp.heads.clone()).collect();
+    let kept_ffn: Vec<Vec<usize>> = plan.iter().map(|lp| lp.ffn.clone()).collect();
+    let hand_weights = hand_shrink(&cfg, &dense_weights, &kept_heads, &kept_ffn);
+    let dims: Vec<LayerDims> = plan.iter().map(|lp| lp.dims()).collect();
+    let hand_graph = build_encoder_with(&cfg, &dims);
+
+    // Weight maps agree exactly (encoder weights; embeddings untouched).
+    for (name, v) in &hand_weights {
+        assert_eq!(v, &pruned_weights[name], "weight {name} differs from hand slice");
+    }
+
+    // Interpreter outputs are bitwise equal.
+    let request = request_feeds(&cfg, 0xF00D);
+    let a = eval_graph(&pruned_graph, &merged(&pruned_weights, &request)).unwrap();
+    let b = eval_graph(&hand_graph, &merged(&hand_weights, &request)).unwrap();
+    assert_eq!(a[0].data, b[0].data, "pruned model != hand-shrunk reference");
+
+    // And the compiled pruned model runs identically on both executors.
+    let compiled = compile(
+        &pruned_graph,
+        &CompileOptions { model_only_tuning: true, ..Default::default() },
+    );
+    let feeds = Feeds::layered(&request, &pruned_weights);
+    let seq = compiled.run_with(&feeds, None).unwrap();
+    for threads in [1, 2, 4] {
+        let (par, _) = compiled.run_parallel_with(&feeds, threads, None).unwrap();
+        assert_eq!(par[0].data, seq[0].data, "parallel != sequential at {threads} threads");
+    }
+}
+
+/// INT8 execution stays within the documented tolerance of fp32 on
+/// tiny-BERT encoders, and sequential == parallel bitwise.
+#[test]
+fn c2_int8_within_tolerance_of_fp32() {
+    for seed in [1u64, 2, 3] {
+        let cfg = tiny_cfg();
+        let graph = build_encoder(&cfg);
+        let weights = init_weights(&graph, seed);
+        let request = request_feeds(&cfg, seed.wrapping_mul(77));
+
+        let compiled = compile(
+            &graph,
+            &CompileOptions {
+                model_only_tuning: true,
+                compression: CompressionConfig::int8_only(),
+                ..Default::default()
+            },
+        );
+        assert!(!compiled.quant_sites.is_empty());
+        let qw = compiled.quantize_weights(&weights);
+        assert_eq!(qw.by_node.len(), compiled.quant_sites.len());
+
+        let feeds = Feeds::layered(&request, &weights);
+        let fp32 = compiled.run_with(&feeds, None).unwrap();
+        let int8_seq = compiled.run_with(&feeds, Some(&qw)).unwrap();
+        // Documented tolerance: rtol 0.1, atol 0.05 (see module docs).
+        assert_close(&int8_seq[0].data, &fp32[0].data, 0.1, 0.05)
+            .unwrap_or_else(|e| panic!("int8 drifted from fp32 (seed {seed}): {e}"));
+        // Quantization must actually change something (guards against a
+        // silently-ignored table).
+        assert_ne!(int8_seq[0].data, fp32[0].data);
+
+        for threads in [1, 2, 4] {
+            let (int8_par, _) = compiled.run_parallel_with(&feeds, threads, Some(&qw)).unwrap();
+            assert_eq!(
+                int8_par[0].data, int8_seq[0].data,
+                "int8 parallel != sequential at {threads} threads (seed {seed})"
+            );
+        }
+
+        // Static calibrated activation scales stay within a slightly
+        // looser band (per-tensor instead of per-row).
+        let mut qw_cal = qw.clone();
+        let sample = merged(&weights, &request);
+        calibrate_activations(
+            &compiled.graph,
+            &compiled.quant_sites,
+            &mut qw_cal,
+            std::slice::from_ref(&sample),
+        )
+        .unwrap();
+        assert!(!qw_cal.act_scale.is_empty());
+        let int8_static = compiled.run_with(&feeds, Some(&qw_cal)).unwrap();
+        assert_close(&int8_static[0].data, &fp32[0].data, 0.15, 0.08)
+            .unwrap_or_else(|e| panic!("calibrated int8 drifted (seed {seed}): {e}"));
+    }
+}
+
+/// Pruning composed with int8: still close to the pruned fp32 model, and
+/// the plain `execute_plan_with` path agrees with `Compiled::run_with`.
+#[test]
+fn c3_pruned_int8_composes() {
+    let cfg = tiny_cfg();
+    let dense = build_encoder(&cfg);
+    let mut weights = init_weights(&dense, 9);
+    let comp = CompressionConfig::pruned_int8(0.5, 0.5);
+    let (graph, report) = compress_encoder(&cfg, &mut weights, &comp);
+    assert!(report.params_after < report.params_before);
+
+    let compiled = compile(
+        &graph,
+        &CompileOptions { model_only_tuning: true, compression: comp, ..Default::default() },
+    );
+    let qw = compiled.quantize_weights(&weights);
+    let request = request_feeds(&cfg, 0xBEEF);
+    let feeds = Feeds::layered(&request, &weights);
+
+    let fp32 = compiled.run_with(&feeds, None).unwrap();
+    let int8 = compiled.run_with(&feeds, Some(&qw)).unwrap();
+    assert_close(&int8[0].data, &fp32[0].data, 0.1, 0.05).unwrap();
+
+    let free_fn =
+        execute_plan_with(&compiled.graph, &compiled.plan, &feeds, &compiled.schedules, Some(&qw))
+            .unwrap();
+    assert_eq!(free_fn[0].data, int8[0].data);
+}
+
+/// CI smoke: a tiny model with pruning+int8 enabled compiles and serves a
+/// QA request end to end through the native engine (covers the engine
+/// constructor, the cached PreparedExec, layered feeds, and the int8
+/// kernel in one shot).
+#[test]
+fn c4_smoke_prune_int8_serving() {
+    use canao::serving::{NativeQaEngine, QaRequest};
+    use canao::tokenizer::{Tokenizer, Vocab};
+    use std::sync::Arc;
+
+    let tok = Arc::new(Tokenizer::new(Vocab::build(
+        "layer fusion reduces the number of kernels and the memory traffic .",
+        256,
+    )));
+    let cfg = BertConfig { vocab: 256, seq: 16, layers: 2, hidden: 16, heads: 4, inter: 24 };
+    let engine =
+        NativeQaEngine::with_compression(tok, cfg, 2, CompressionConfig::pruned_int8(0.5, 0.5));
+    assert!(engine.report.params_after < engine.report.params_before);
+    assert!(engine.report.size_ratio() > 1.5, "{}", engine.report.size_ratio());
+    let resp = engine
+        .answer(&QaRequest {
+            question: "what reduces kernels ?".into(),
+            context: "layer fusion reduces the number of kernels".into(),
+        })
+        .unwrap();
+    assert!(resp.start_token <= resp.end_token);
+    assert!(resp.score.is_finite());
+    // Repeated requests reuse the cached PreparedExec and stay identical.
+    let again = engine
+        .answer(&QaRequest {
+            question: "what reduces kernels ?".into(),
+            context: "layer fusion reduces the number of kernels".into(),
+        })
+        .unwrap();
+    assert_eq!((resp.start_token, resp.end_token), (again.start_token, again.end_token));
+}
