@@ -8,8 +8,10 @@
 //! per column (Fig. 4 `fuse_add'`), the row schedule recomputes them
 //! (Fig. 4 `fuse_add`).
 
-use crate::compiler::exec::tensor::{Tensor, View};
-use crate::compiler::fusion::FusedBlock;
+use crate::compiler::exec::tensor::{
+    accumulate_row_i8, quantize_row_i8, QuantizedTensor, Tensor, View,
+};
+use crate::compiler::fusion::{BlockKind, FusedBlock};
 use crate::compiler::ir::{Graph, NodeId, Op, Shape};
 use crate::compiler::passes::const_fold::erf;
 use crate::compiler::poly::{block_output_shape, Access, Schedule};
@@ -228,45 +230,68 @@ impl BlockTape {
         let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; self.insts.len()];
 
         for i in row0..row1 {
-            for (ri, inst) in self.insts.iter().enumerate() {
-                match *inst {
-                    TapeInst::Load { input } => {
-                        let s = &self.input_strides[input];
-                        let base = i * s[0];
-                        let data = &bufs[input].data;
-                        let dst = &mut regs[ri];
-                        if s[1] == 1 {
-                            dst.copy_from_slice(&data[base..base + n]);
-                        } else if s[1] == 0 {
-                            dst.fill(data[base]);
-                        } else {
-                            for (j, d) in dst.iter_mut().enumerate() {
-                                *d = data[base + j * s[1]];
-                            }
-                        }
-                    }
-                    TapeInst::Const(v) => regs[ri].fill(v),
-                    TapeInst::Unary { op, src } => {
-                        let (a, b) = split_two(&mut regs, ri, src);
-                        for (o, &x) in a.iter_mut().zip(b.iter()) {
-                            *o = apply_unary(op, x);
-                        }
-                    }
-                    TapeInst::Binary { op, lhs, rhs } => {
-                        let (dst, l, r) = split_three(&mut regs, ri, lhs, rhs);
-                        match op {
-                            BOp::Add => vbin(dst, l, r, |a, b| a + b),
-                            BOp::Sub => vbin(dst, l, r, |a, b| a - b),
-                            BOp::Mul => vbin(dst, l, r, |a, b| a * b),
-                            BOp::Div => vbin(dst, l, r, |a, b| a / b),
-                            BOp::Max => vbin(dst, l, r, f32::max),
-                        }
-                    }
-                }
-            }
+            self.eval_row_regs(bufs, i, &mut regs, None);
             let base = (i - row0) * n;
             for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
                 outs[oi][base..base + n].copy_from_slice(&regs[r]);
+            }
+        }
+    }
+
+    /// Evaluate every register of row `i`, vectorized along the row. The
+    /// ONE copy of the per-row tape semantics: the plain row schedule
+    /// runs it with `override_load = None`, the fused matmul-epilogue
+    /// kernel overrides its virtual matmul input slot with the in-flight
+    /// row — keeping the two bitwise-identical by construction.
+    #[inline]
+    fn eval_row_regs(
+        &self,
+        bufs: &[View],
+        i: usize,
+        regs: &mut [Vec<f32>],
+        override_load: Option<(usize, &[f32])>,
+    ) {
+        let n = self.domain.dims[1];
+        for (ri, inst) in self.insts.iter().enumerate() {
+            match *inst {
+                TapeInst::Load { input } => {
+                    if let Some((idx, row)) = override_load {
+                        if input == idx {
+                            regs[ri].copy_from_slice(row);
+                            continue;
+                        }
+                    }
+                    let s = &self.input_strides[input];
+                    let base = i * s[0];
+                    let data = &bufs[input].data;
+                    let dst = &mut regs[ri];
+                    if s[1] == 1 {
+                        dst.copy_from_slice(&data[base..base + n]);
+                    } else if s[1] == 0 {
+                        dst.fill(data[base]);
+                    } else {
+                        for (j, d) in dst.iter_mut().enumerate() {
+                            *d = data[base + j * s[1]];
+                        }
+                    }
+                }
+                TapeInst::Const(v) => regs[ri].fill(v),
+                TapeInst::Unary { op, src } => {
+                    let (a, b) = split_two(regs, ri, src);
+                    for (o, &x) in a.iter_mut().zip(b.iter()) {
+                        *o = apply_unary(op, x);
+                    }
+                }
+                TapeInst::Binary { op, lhs, rhs } => {
+                    let (dst, l, r) = split_three(regs, ri, lhs, rhs);
+                    match op {
+                        BOp::Add => vbin(dst, l, r, |a, b| a + b),
+                        BOp::Sub => vbin(dst, l, r, |a, b| a - b),
+                        BOp::Mul => vbin(dst, l, r, |a, b| a * b),
+                        BOp::Div => vbin(dst, l, r, |a, b| a / b),
+                        BOp::Max => vbin(dst, l, r, f32::max),
+                    }
+                }
             }
         }
     }
@@ -473,6 +498,173 @@ impl BlockTape {
     }
 }
 
+/// A fused quantized matmul-epilogue kernel: one INT8 matmul plus the
+/// elementwise epilogue LP-Fusion attached to it (bias add, bias+GELU,
+/// bias+residual, ...), compiled as one tape program.
+///
+/// This is where the paper's two halves finally compose (§2.1 x §2.2):
+/// the epilogue is an ordinary [`BlockTape`] whose tape *inputs* include
+/// the matmul node as a virtual input; at execution every LHS row is
+/// quantized once (`absmax/127` dynamic or calibrated-static scale), the
+/// `i8 x i8` products accumulate in `i32`, and the rescale + bias +
+/// activation all happen in the same row pass, writing straight into the
+/// caller's output buffers (the wave executor hands arena regions) — no
+/// scratch tensor, no copy.
+#[derive(Debug, Clone)]
+pub struct MatmulEpilogueTape {
+    /// The epilogue program over the `[m, n]` output domain. Its `inputs`
+    /// list contains `matmul` as a virtual entry at `mm_input`; every
+    /// `Load` of that slot is satisfied from the in-flight matmul row,
+    /// never from a buffer.
+    pub tape: BlockTape,
+    /// The matmul node this kernel computes.
+    pub matmul: NodeId,
+    /// The matmul's LHS (external activation input, `[m, k]`).
+    pub lhs: NodeId,
+    /// The matmul's RHS (external rank-2 weight leaf, `[k, n]`) — the key
+    /// the executors look up in the `QuantizedWeights` side table.
+    pub rhs: NodeId,
+    /// Index of `matmul` in `tape.inputs`.
+    pub mm_input: usize,
+    /// Inner (contraction) dimension.
+    pub k: usize,
+}
+
+/// Recognize a [`BlockKind::MatmulEpilogue`] block the fused kernel can
+/// run: exactly one matmul whose operands are external to the block, a
+/// purely elementwise epilogue reading it, and every block output shaped
+/// like the `[m, n]` matmul result. Returns `None` (callers fall back to
+/// per-node execution) for prologue matmuls, batched/rank-3 domains, or
+/// a matmul that is itself a block output.
+pub fn compile_matmul_epilogue(g: &Graph, block: &FusedBlock) -> Option<MatmulEpilogueTape> {
+    if block.kind != BlockKind::MatmulEpilogue {
+        return None;
+    }
+    let mms: Vec<NodeId> =
+        block.nodes.iter().copied().filter(|&n| g.nodes[n].op == Op::MatMul).collect();
+    let &[mm] = mms.as_slice() else { return None };
+    let node = &g.nodes[mm];
+    let (lhs, rhs) = (node.inputs[0], node.inputs[1]);
+    if block.nodes.contains(&lhs) || block.nodes.contains(&rhs) {
+        return None; // prologue feeding the matmul: not an epilogue shape
+    }
+    if block.outputs.contains(&mm) {
+        return None; // the raw matmul result escapes the block
+    }
+    let domain = &node.shape;
+    if domain.rank() != 2 || g.nodes[lhs].shape.rank() != 2 || g.nodes[rhs].shape.rank() != 2 {
+        return None;
+    }
+    let k = g.nodes[rhs].shape.dims[0];
+
+    let epi: Vec<NodeId> = block.nodes.iter().copied().filter(|&n| n != mm).collect();
+    if epi.is_empty() || !epi.iter().all(|&n| g.nodes[n].op.is_elementwise()) {
+        return None;
+    }
+    // The tape writes every output over the full domain, and the row loop
+    // needs the epilogue's iteration space to BE the matmul's [m, n].
+    if g.nodes[*epi.last()?].shape != *domain
+        || block.outputs.iter().any(|&o| g.nodes[o].shape != *domain)
+    {
+        return None;
+    }
+
+    // Compile the epilogue alone; the matmul node is simply an external
+    // value the tape loads (identity strides over the domain).
+    let pseudo = FusedBlock {
+        id: block.id,
+        nodes: epi,
+        inputs: block.inputs.clone(),
+        outputs: block.outputs.clone(),
+        kind: BlockKind::ElementwiseChain,
+    };
+    let tape = compile_block(g, &pseudo);
+    let mm_input = tape.inputs.iter().position(|&i| i == mm)?;
+    Some(MatmulEpilogueTape { tape, matmul: mm, lhs, rhs, mm_input, k })
+}
+
+impl MatmulEpilogueTape {
+    /// Resolve the tape's input buffers: every real external through the
+    /// caller's `view_of`, and the virtual matmul slot as an empty
+    /// placeholder (never read — the matmul row is computed in flight).
+    /// One definition of the bufs/`mm_input` contract, shared by both
+    /// executors' dispatch sites.
+    pub fn input_views<'a>(
+        &self,
+        g: &'a Graph,
+        mut view_of: impl FnMut(NodeId) -> View<'a>,
+    ) -> Vec<View<'a>> {
+        self.tape
+            .inputs
+            .iter()
+            .map(|&i| {
+                if i == self.matmul {
+                    View { shape: &g.nodes[self.matmul].shape, data: &[] }
+                } else {
+                    view_of(i)
+                }
+            })
+            .collect()
+    }
+
+    /// Fused INT8 execution over the row range `[row0, row1)`.
+    ///
+    /// `bufs` aligns with `self.tape.inputs`; the entry at `mm_input` is
+    /// never read (pass an empty view). `outs[oi]` covers exactly the
+    /// requested rows (length `(row1 - row0) * n`), so the wave executor
+    /// can split one block's rows across threads with `split_at_mut` —
+    /// rows are independent, making the split bitwise-exact.
+    ///
+    /// Numerics contract (asserted by `tests/fused_int8.rs`): the matmul
+    /// rows reuse `quantize_row_i8` / `accumulate_row_i8` and the exact
+    /// rescale expression of `matmul_i8`, and the epilogue registers use
+    /// the same scalar kernels as every other tape — so fused output ==
+    /// unfused int8 fallback output, bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_i8_rows_into(
+        &self,
+        lhs: View,
+        rhs: &QuantizedTensor,
+        act_scale: Option<f32>,
+        bufs: &[View],
+        row0: usize,
+        row1: usize,
+        outs: &mut [&mut [f32]],
+    ) {
+        let tape = &self.tape;
+        debug_assert_eq!(tape.domain.rank(), 2, "epilogue domain is [m, n]");
+        debug_assert_eq!(bufs.len(), tape.inputs.len());
+        debug_assert_eq!(outs.len(), tape.output_regs.len());
+        let n = tape.domain.dims[1];
+        let k = self.k;
+
+        let mut qa = vec![0i8; k];
+        let mut acc = vec![0i32; n];
+        let mut mm_row = vec![0.0f32; n];
+        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; tape.insts.len()];
+
+        for i in row0..row1 {
+            // INT8 matmul row: quantize the LHS row once, accumulate
+            // i8 x i8 -> i32, rescale — identical to `matmul_i8`.
+            let arow = &lhs.data[i * k..(i + 1) * k];
+            let s_a = quantize_row_i8(arow, act_scale, &mut qa);
+            accumulate_row_i8(&qa, &rhs.data, n, &mut acc);
+            for (j, d) in mm_row.iter_mut().enumerate() {
+                *d = acc[j] as f32 * (s_a * rhs.scales[j]);
+            }
+
+            // Epilogue registers across the row, in the same pass —
+            // the shared tape row evaluator with the virtual matmul
+            // slot overridden by the in-flight row.
+            tape.eval_row_regs(bufs, i, &mut regs, Some((self.mm_input, &mm_row)));
+            let base = (i - row0) * n;
+            for (oi, &(_, r)) in tape.output_regs.iter().enumerate() {
+                outs[oi][base..base + n].copy_from_slice(&regs[r]);
+            }
+        }
+    }
+}
+
 #[inline]
 fn apply_unary(op: UOp, x: f32) -> f32 {
     match op {
@@ -607,6 +799,130 @@ mod tests {
         let out = tape.execute(&[&at], Schedule::RowRecompute);
         for (o, i) in out[0].data.iter().zip(&at.data) {
             assert!((o - i * 2.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_epilogue_tape_matches_unfused_int8() {
+        use crate::compiler::exec::tensor::matmul_i8;
+        use crate::compiler::exec::interp::apply_op;
+
+        // x @ w + b -> gelu, fused into one MatmulEpilogue block.
+        let (m, k, n) = (9, 12, 7);
+        let mut g = Graph::new();
+        let x = g.input("x", &[m, k], DType::F32);
+        let w = g.weight("w", &[k, n]);
+        let b = g.weight("b", &[n]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let act = g.gelu(biased);
+        g.mark_output(act);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        let mt = compile_matmul_epilogue(&g, &plan.blocks[0]).expect("epilogue compiles");
+        assert_eq!(mt.matmul, mm);
+        assert_eq!((mt.lhs, mt.rhs, mt.k), (x, w, k));
+
+        let xt = rand_t(&[m, k], 31);
+        let wt = rand_t(&[k, n], 32);
+        let bt = rand_t(&[n], 33);
+        let q = QuantizedTensor::per_channel(wt.view());
+
+        // Fused execution.
+        let mut fused = vec![0.0f32; m * n];
+        {
+            let bufs: Vec<View> = mt
+                .tape
+                .inputs
+                .iter()
+                .map(|&i| {
+                    if i == mm {
+                        View { shape: &g.nodes[mm].shape, data: &[] }
+                    } else if i == b {
+                        bt.view()
+                    } else {
+                        panic!("unexpected epilogue input {i}")
+                    }
+                })
+                .collect();
+            let mut outs = vec![fused.as_mut_slice()];
+            mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, 0, m, &mut outs);
+        }
+
+        // Unfused reference: matmul_i8, then each epilogue op via the
+        // interpreter kernel. Must agree BITWISE.
+        let mm_ref = matmul_i8(xt.view(), &q, None, &g.nodes[mm].shape);
+        let mut vals: std::collections::HashMap<usize, Tensor> = std::collections::HashMap::new();
+        vals.insert(mm, mm_ref);
+        vals.insert(x, xt.clone());
+        vals.insert(b, bt.clone());
+        for nid in 0..g.nodes.len() {
+            if vals.contains_key(&nid) {
+                continue;
+            }
+            if let Op::Const { value } = g.nodes[nid].op {
+                vals.insert(nid, Tensor::scalar(value));
+                continue;
+            }
+            if g.nodes[nid].op.is_leaf() {
+                continue;
+            }
+            let args: Vec<View> = g.nodes[nid].inputs.iter().map(|&i| vals[&i].view()).collect();
+            let t = apply_op(&g.nodes[nid].op, &args, &g.nodes[nid].shape);
+            vals.insert(nid, t);
+        }
+        assert_eq!(fused, vals[&act].data, "fused int8 != unfused int8 reference");
+
+        // Row-range execution composes to the same bits (the wave
+        // executor's split).
+        let bufs: Vec<View> = mt
+            .tape
+            .inputs
+            .iter()
+            .map(|&i| {
+                if i == mm {
+                    View { shape: &g.nodes[mm].shape, data: &[] }
+                } else {
+                    bt.view()
+                }
+            })
+            .collect();
+        let mut lo = vec![0.0f32; 4 * n];
+        let mut hi = vec![0.0f32; (m - 4) * n];
+        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, 0, 4, &mut [lo.as_mut_slice()]);
+        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, 4, m, &mut [hi.as_mut_slice()]);
+        assert_eq!(&fused[..4 * n], &lo[..]);
+        assert_eq!(&fused[4 * n..], &hi[..]);
+    }
+
+    #[test]
+    fn matmul_epilogue_rejects_non_epilogue_shapes() {
+        // Attention core (two matmuls) is not an epilogue block.
+        let mut g = Graph::new();
+        let q = g.input("q", &[8, 4], DType::F32);
+        let kt = g.input("kt", &[4, 8], DType::F32);
+        let v = g.input("v", &[8, 4], DType::F32);
+        let s = g.matmul(q, kt);
+        let sm = g.softmax(s, 1);
+        let o = g.matmul(sm, v);
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        for blk in &plan.blocks {
+            assert!(compile_matmul_epilogue(&g, blk).is_none());
+        }
+
+        // A matmul whose raw result escapes the block is rejected too.
+        let mut g2 = Graph::new();
+        let x = g2.input("x", &[4, 4], DType::F32);
+        let w = g2.weight("w", &[4, 4]);
+        let b = g2.weight("b", &[4]);
+        let mm = g2.matmul(x, w);
+        let biased = g2.add(mm, b);
+        g2.mark_output(mm); // raw matmul escapes
+        g2.mark_output(biased);
+        let plan2 = lp_fusion(&g2, &FusionConfig::default());
+        for blk in &plan2.blocks {
+            assert!(compile_matmul_epilogue(&g2, blk).is_none());
         }
     }
 

@@ -68,44 +68,60 @@ fn eval_node(
 /// Evaluate one compute op on concrete tensor views — shared by the graph
 /// interpreter and both plan executors' per-node fallback.
 pub fn apply_op(op: &Op, args: &[View], out_shape: &Shape) -> Tensor {
+    let mut out = vec![0.0f32; out_shape.numel()];
+    apply_op_into(op, args, out_shape, &mut out);
+    Tensor { shape: out_shape.clone(), data: out }
+}
+
+/// As [`apply_op`], writing into a caller-provided buffer. This is what
+/// lets the executors' per-node fallback compute block outputs straight
+/// into their planned slab regions instead of into scratch followed by a
+/// copy (ROADMAP item: fallback blocks — attention-core, unfused matmuls
+/// — no longer pay a scratch-and-copy per output).
+pub fn apply_op_into(op: &Op, args: &[View], out_shape: &Shape, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), out_shape.numel(), "output buffer mismatch");
     let arg = |i: usize| args[i];
     match op {
         Op::Input { .. } | Op::Weight { .. } | Op::Const { .. } => {
             unreachable!("leaves are fed externally")
         }
-        Op::Neg => map_unary(arg(0), |x| -x),
-        Op::Exp => map_unary(arg(0), f32::exp),
-        Op::Erf => map_unary(arg(0), erf),
-        Op::Tanh => map_unary(arg(0), f32::tanh),
-        Op::Rsqrt => map_unary(arg(0), |x| 1.0 / x.sqrt()),
-        Op::Recip => map_unary(arg(0), |x| 1.0 / x),
-        Op::Add => map_binary(arg(0), arg(1), out_shape, |a, b| a + b),
-        Op::Sub => map_binary(arg(0), arg(1), out_shape, |a, b| a - b),
-        Op::Mul => map_binary(arg(0), arg(1), out_shape, |a, b| a * b),
-        Op::Div => map_binary(arg(0), arg(1), out_shape, |a, b| a / b),
-        Op::Max => map_binary(arg(0), arg(1), out_shape, f32::max),
-        Op::MatMul => matmul(arg(0), arg(1), out_shape),
-        Op::Transpose => transpose(arg(0)),
-        Op::Reshape { target } => Tensor::from_vec(target, arg(0).data.to_vec()),
-        Op::ReduceSum { axis } => reduce(arg(0), *axis, 0.0, |acc, x| acc + x),
-        Op::ReduceMax { axis } => reduce(arg(0), *axis, f32::NEG_INFINITY, f32::max),
-        Op::Gather => gather(arg(0), arg(1), out_shape),
+        Op::Neg => map_unary(arg(0), out, |x| -x),
+        Op::Exp => map_unary(arg(0), out, f32::exp),
+        Op::Erf => map_unary(arg(0), out, erf),
+        Op::Tanh => map_unary(arg(0), out, f32::tanh),
+        Op::Rsqrt => map_unary(arg(0), out, |x| 1.0 / x.sqrt()),
+        Op::Recip => map_unary(arg(0), out, |x| 1.0 / x),
+        Op::Add => map_binary(arg(0), arg(1), out_shape, out, |a, b| a + b),
+        Op::Sub => map_binary(arg(0), arg(1), out_shape, out, |a, b| a - b),
+        Op::Mul => map_binary(arg(0), arg(1), out_shape, out, |a, b| a * b),
+        Op::Div => map_binary(arg(0), arg(1), out_shape, out, |a, b| a / b),
+        Op::Max => map_binary(arg(0), arg(1), out_shape, out, f32::max),
+        Op::MatMul => matmul(arg(0), arg(1), out_shape, out),
+        Op::Transpose => transpose(arg(0), out),
+        Op::Reshape { .. } => out.copy_from_slice(arg(0).data),
+        Op::ReduceSum { axis } => reduce(arg(0), *axis, 0.0, out, |acc, x| acc + x),
+        Op::ReduceMax { axis } => reduce(arg(0), *axis, f32::NEG_INFINITY, out, f32::max),
+        Op::Gather => gather(arg(0), arg(1), out),
     }
 }
 
-fn map_unary(t: View, f: impl Fn(f32) -> f32) -> Tensor {
-    Tensor { shape: t.shape.clone(), data: t.data.iter().map(|&x| f(x)).collect() }
+fn map_unary(t: View, out: &mut [f32], f: impl Fn(f32) -> f32) {
+    for (o, &x) in out.iter_mut().zip(t.data) {
+        *o = f(x);
+    }
 }
 
-fn map_binary(a: View, b: View, out_shape: &Shape, f: impl Fn(f32, f32) -> f32) -> Tensor {
+fn map_binary(a: View, b: View, out_shape: &Shape, out: &mut [f32], f: impl Fn(f32, f32) -> f32) {
     let ra = a.bcast_reader(out_shape);
     let rb = b.bcast_reader(out_shape);
-    let mut out = Vec::with_capacity(out_shape.numel());
-    for_each_coord(out_shape, |c| out.push(f(ra(c), rb(c))));
-    Tensor { shape: out_shape.clone(), data: out }
+    let mut flat = 0usize;
+    for_each_coord(out_shape, |c| {
+        out[flat] = f(ra(c), rb(c));
+        flat += 1;
+    });
 }
 
-fn matmul(a: View, b: View, out_shape: &Shape) -> Tensor {
+fn matmul(a: View, b: View, out_shape: &Shape, out: &mut [f32]) {
     let ar = a.shape.rank();
     let br = b.shape.rank();
     let (m, k) = (a.shape.dims[ar - 2], a.shape.dims[ar - 1]);
@@ -120,7 +136,7 @@ fn matmul(a: View, b: View, out_shape: &Shape) -> Tensor {
     let a_strides = a_lead.broadcast_strides(&lead);
     let b_strides = b_lead.broadcast_strides(&lead);
 
-    let mut out = vec![0.0f32; out_shape.numel()];
+    out.fill(0.0);
     let mut batch_coords = vec![0usize; lead.rank()];
     for bi in 0..batch.max(1) {
         // decode bi -> coords
@@ -150,16 +166,12 @@ fn matmul(a: View, b: View, out_shape: &Shape) -> Tensor {
             }
         }
     }
-    Tensor { shape: out_shape.clone(), data: out }
 }
 
-fn transpose(a: View) -> Tensor {
+fn transpose(a: View, out: &mut [f32]) {
     let r = a.shape.rank();
-    let mut dims = a.shape.dims.clone();
-    dims.swap(r - 2, r - 1);
     let (rows, cols) = (a.shape.dims[r - 2], a.shape.dims[r - 1]);
     let batch: usize = a.shape.dims[..r - 2].iter().product::<usize>().max(1);
-    let mut out = vec![0.0f32; a.numel()];
     for b in 0..batch {
         let off = b * rows * cols;
         for i in 0..rows {
@@ -168,17 +180,13 @@ fn transpose(a: View) -> Tensor {
             }
         }
     }
-    Tensor { shape: Shape { dims }, data: out }
 }
 
-fn reduce(a: View, axis: usize, init: f32, f: impl Fn(f32, f32) -> f32) -> Tensor {
-    let mut dims = a.shape.dims.clone();
-    let extent = dims[axis];
-    dims[axis] = 1;
-    let out_shape = Shape { dims };
+fn reduce(a: View, axis: usize, init: f32, out: &mut [f32], f: impl Fn(f32, f32) -> f32) {
+    let extent = a.shape.dims[axis];
     let inner: usize = a.shape.dims[axis + 1..].iter().product();
     let outer: usize = a.shape.dims[..axis].iter().product();
-    let mut out = vec![init; out_shape.numel()];
+    out.fill(init);
     for o in 0..outer {
         for e in 0..extent {
             let base = (o * extent + e) * inner;
@@ -188,18 +196,15 @@ fn reduce(a: View, axis: usize, init: f32, f: impl Fn(f32, f32) -> f32) -> Tenso
             }
         }
     }
-    Tensor { shape: out_shape, data: out }
 }
 
-fn gather(table: View, ids: View, out_shape: &Shape) -> Tensor {
+fn gather(table: View, ids: View, out: &mut [f32]) {
     let h = table.shape.dims[1];
     let v = table.shape.dims[0];
-    let mut out = Vec::with_capacity(out_shape.numel());
-    for &idf in ids.data {
+    for (row, &idf) in ids.data.iter().enumerate() {
         let idx = (idf as usize).min(v - 1);
-        out.extend_from_slice(&table.data[idx * h..(idx + 1) * h]);
+        out[row * h..(row + 1) * h].copy_from_slice(&table.data[idx * h..(idx + 1) * h]);
     }
-    Tensor { shape: out_shape.clone(), data: out }
 }
 
 #[cfg(test)]

@@ -38,7 +38,7 @@ pub mod plan;
 pub mod tensor;
 
 pub use parallel::{execute_plan_parallel, execute_plan_parallel_stats, ExecStats, PreparedExec};
-pub use tensor::{matmul_i8, QuantizedTensor, Tensor, View};
+pub use tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 
 use std::collections::HashMap;
 use std::fmt;

@@ -7,11 +7,15 @@
 //! threads. Between waves there is a barrier (the `thread::scope` join),
 //! which is also what makes the arena's wave-granular liveness sound.
 //!
-//! All materialized values live in one flat [`Slab`] at offsets chosen by
+//! All materialized values live in one flat slab at offsets chosen by
 //! the arena planner ([`super::arena`]); kernels read inputs as [`View`]s
 //! of earlier waves' regions and write outputs straight into their own
-//! regions — no per-node allocation, no result copies (except the
-//! per-node fallback, which computes into scratch first).
+//! regions — no per-node allocation, no result copies. That includes the
+//! per-node fallback (block outputs via `apply_op_into`/`matmul_i8_into`)
+//! and the fused INT8 matmul-epilogue tape; only a fallback block's
+//! *internal* values use block-local scratch. The slab itself is checked
+//! out of a per-`PreparedExec` [`SlabPool`], so steady-state serving
+//! performs zero large allocations per request.
 //!
 //! A wave consisting of a single wide 2-D elementwise block does not have
 //! to run on one core: the row-recompute schedule evaluates rows
@@ -34,18 +38,20 @@
 use std::collections::HashMap;
 
 use super::arena::{plan_arena, ArenaPlan};
-use super::interp::apply_op;
+use super::interp::{apply_op, apply_op_into};
 use super::plan::{
     layernorm_rows, match_layernorm, match_softmax, row_split, softmax_rows,
     LayernormPattern, ScheduleChoices, SoftmaxPattern,
 };
-use super::tensor::{matmul_i8, Tensor, View};
+use super::tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, QuantizedWeights};
-use crate::compiler::codegen::tape::{compile_block, BlockTape};
+use crate::compiler::codegen::tape::{
+    compile_block, compile_matmul_epilogue, BlockTape, MatmulEpilogueTape,
+};
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId};
 use crate::compiler::poly::{block_output_shape, Schedule};
-use crate::util::pool::{SharedSlab, Slab};
+use crate::util::pool::{SharedSlab, SlabPool};
 
 /// Below this many output elements a wave runs inline: thread spawn costs
 /// more than the compute it would hide.
@@ -108,6 +114,12 @@ pub struct PreparedExec {
     pub waves: Vec<Vec<usize>>,
     pub arena: ArenaPlan,
     kernels: Vec<Kernel>,
+    /// Recycled execution slabs: every run checks one out and returns it,
+    /// so steady-state serving does zero large allocations per request
+    /// (ROADMAP item — previously a fresh `Slab` was allocated per call
+    /// even though `PreparedExec` itself was cached). Holds at most the
+    /// peak number of concurrent executions.
+    slab_pool: SlabPool,
 }
 
 impl PreparedExec {
@@ -115,7 +127,13 @@ impl PreparedExec {
         let waves = block_waves(plan);
         let arena = plan_arena(g, plan, &waves);
         let kernels = plan.blocks.iter().map(|b| prepare_kernel(g, b)).collect();
-        PreparedExec { waves, arena, kernels }
+        PreparedExec { waves, arena, kernels, slab_pool: SlabPool::new() }
+    }
+
+    /// Slabs currently parked in the pool (observability for tests and
+    /// serving stats).
+    pub fn pooled_slabs(&self) -> usize {
+        self.slab_pool.len()
     }
 }
 
@@ -176,7 +194,7 @@ pub fn execute_prepared(
         threads,
     };
 
-    let mut slab = Slab::new(arena.slab_len);
+    let mut slab = prep.slab_pool.checkout(arena.slab_len);
     let shared = slab.shared();
 
     for wave in waves {
@@ -190,8 +208,17 @@ pub fn execute_prepared(
         if par && wave.len() == 1 {
             let bi = wave[0];
             let sched = sched_of(schedules, plan, bi);
-            if row_parallel(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, arena, threads)
-            {
+            if row_parallel(
+                g,
+                &plan.blocks[bi],
+                &kernels[bi],
+                sched,
+                &leaf,
+                shared,
+                arena,
+                threads,
+                quant,
+            ) {
                 continue;
             }
         }
@@ -244,6 +271,7 @@ pub fn execute_prepared(
             Tensor { shape: g.nodes[o].shape.clone(), data }
         })
         .collect();
+    prep.slab_pool.give_back(slab);
     Ok((outputs, stats))
 }
 
@@ -259,6 +287,12 @@ fn sched_of(schedules: &ScheduleChoices, plan: &FusionPlan, bi: usize) -> Schedu
 #[derive(Debug, Clone)]
 enum Kernel {
     Tape(BlockTape),
+    /// A matmul + elementwise epilogue block. Runs the fused INT8 tape
+    /// kernel when the matmul's weight has an entry in the request's
+    /// `QuantizedWeights` table (quantization is per-call state, so the
+    /// dispatch is resolved at run time); fp32 requests take the
+    /// per-node fallback as before.
+    MatmulEpi(MatmulEpilogueTape),
     Softmax(SoftmaxPattern),
     Layernorm(LayernormPattern),
     Fallback,
@@ -275,6 +309,10 @@ fn prepare_kernel(g: &Graph, block: &FusedBlock) -> Kernel {
             }
             Kernel::Tape(compile_block(g, block))
         }
+        BlockKind::MatmulEpilogue => match compile_matmul_epilogue(g, block) {
+            Some(mt) => Kernel::MatmulEpi(mt),
+            None => Kernel::Fallback,
+        },
         BlockKind::Reduction => {
             if let Some(p) = match_softmax(g, block) {
                 return Kernel::Softmax(p);
@@ -360,39 +398,91 @@ fn run_block(
                 out_region(slab, arena, p.out),
             );
         }
-        Kernel::Fallback => {
-            // Per-node execution with block-local scratch; only the block
-            // outputs are copied into their regions. Matmuls whose RHS
-            // weight has an int8 entry run the quantized kernel — the
-            // exact dispatch the sequential executor makes, keeping the
-            // two bitwise identical under compression.
-            let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
-            for &n in &block.nodes {
-                let node = &g.nodes[n];
-                let t = {
-                    let arg = |i: NodeId| match scratch.get(&i) {
-                        Some(s) => s.view(),
-                        None => value_view(g, i, leaf, slab, arena),
-                    };
-                    if let Some((qt, scale)) = quant_matmul(g, n, quant) {
-                        matmul_i8(arg(node.inputs[0]), qt, scale, &node.shape)
-                    } else {
-                        let args: Vec<View> = node.inputs.iter().map(|&i| arg(i)).collect();
-                        apply_op(&node.op, &args, &node.shape)
-                    }
+        Kernel::MatmulEpi(mt) => {
+            if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
+                // Fused INT8 epilogue: quantize each LHS row once,
+                // accumulate i8 x i8 -> i32, rescale + bias + activation
+                // in one pass, written straight into the arena regions.
+                let lhs = value_view(g, mt.lhs, leaf, slab, arena);
+                let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
+                let mut outs: Vec<&mut [f32]> = block
+                    .outputs
+                    .iter()
+                    .map(|&o| out_region(slab, arena, o))
+                    .collect();
+                mt.execute_i8_rows_into(
+                    lhs,
+                    qt,
+                    scale,
+                    &bufs,
+                    0,
+                    mt.tape.domain.dims[0],
+                    &mut outs,
+                );
+            } else {
+                fallback_block(g, block, leaf, slab, arena, quant);
+            }
+        }
+        Kernel::Fallback => fallback_block(g, block, leaf, slab, arena, quant),
+    }
+}
+
+/// Per-node execution of an unfused/unmatched block. Internal values use
+/// block-local scratch; block *outputs* are computed straight into their
+/// arena regions (`apply_op_into` / `matmul_i8_into`) — no scratch-and-
+/// copy (ROADMAP item). Matmuls whose RHS weight has an int8 entry run
+/// the quantized kernel — the exact dispatch the sequential executor
+/// makes, keeping the two bitwise identical under compression.
+fn fallback_block(
+    g: &Graph,
+    block: &FusedBlock,
+    leaf: &[Option<LeafValue>],
+    slab: SharedSlab<'_>,
+    arena: &ArenaPlan,
+    quant: Option<&QuantizedWeights>,
+) {
+    let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
+    for &n in &block.nodes {
+        let node = &g.nodes[n];
+        // A value written to its region earlier in this block is read
+        // back through `value_view` — same thread, so the slab contract
+        // (no concurrent overlapping access) still holds.
+        if block.outputs.contains(&n) {
+            let out = out_region(slab, arena, n);
+            let arg = |i: NodeId| match scratch.get(&i) {
+                Some(s) => s.view(),
+                None => value_view(g, i, leaf, slab, arena),
+            };
+            if let Some((qt, scale)) = quant_matmul(g, n, quant) {
+                matmul_i8_into(arg(node.inputs[0]), qt, scale, out);
+            } else {
+                let args: Vec<View> = node.inputs.iter().map(|&i| arg(i)).collect();
+                apply_op_into(&node.op, &args, &node.shape, out);
+            }
+        } else {
+            let t = {
+                let arg = |i: NodeId| match scratch.get(&i) {
+                    Some(s) => s.view(),
+                    None => value_view(g, i, leaf, slab, arena),
                 };
-                scratch.insert(n, t);
-            }
-            for &o in &block.outputs {
-                out_region(slab, arena, o).copy_from_slice(&scratch[&o].data);
-            }
+                if let Some((qt, scale)) = quant_matmul(g, n, quant) {
+                    matmul_i8(arg(node.inputs[0]), qt, scale, &node.shape)
+                } else {
+                    let args: Vec<View> = node.inputs.iter().map(|&i| arg(i)).collect();
+                    apply_op(&node.op, &args, &node.shape)
+                }
+            };
+            scratch.insert(n, t);
         }
     }
 }
 
-/// Split a lone 2-D elementwise block's rows across threads. Returns
-/// false (nothing executed) when the kernel/schedule/shape doesn't allow
-/// row splitting — the caller then falls back to whole-block execution.
+/// Split a lone 2-D block's rows across threads: elementwise tapes under
+/// the row-recompute schedule, and fused INT8 matmul-epilogue kernels
+/// (whose rows are independent by construction — each quantizes its own
+/// LHS row). Returns false (nothing executed) when the kernel/schedule/
+/// shape doesn't allow row splitting — the caller then falls back to
+/// whole-block execution.
 #[allow(clippy::too_many_arguments)]
 fn row_parallel(
     g: &Graph,
@@ -403,25 +493,59 @@ fn row_parallel(
     slab: SharedSlab<'_>,
     arena: &ArenaPlan,
     threads: usize,
+    quant: Option<&QuantizedWeights>,
 ) -> bool {
-    let tape = match kernel {
-        Kernel::Tape(t) => t,
+    // Resolve the kernel to a row-splittable form first; one shared
+    // chunking loop then serves both (a policy change in the split can
+    // never diverge between the two kernels).
+    enum RowKernel<'k> {
+        Tape(&'k BlockTape),
+        I8(&'k MatmulEpilogueTape, View<'k>, &'k QuantizedTensor, Option<f32>),
+    }
+
+    // Cheap eligibility checks first (schedule/rank/row count) so the
+    // common bail-out never builds input views or touches the quant
+    // table; run_block redoes that work whenever we return false.
+    let domain = match kernel {
+        Kernel::Tape(tape) => {
+            if !sched.row_parallelizable() || tape.domain.rank() != 2 {
+                return false;
+            }
+            &tape.domain
+        }
+        // The fused kernel's domain is [m, n] by construction; the
+        // schedule is irrelevant (it always walks rows).
+        Kernel::MatmulEpi(mt) => &mt.tape.domain,
         _ => return false,
     };
-    if !sched.row_parallelizable() || tape.domain.rank() != 2 {
-        return false;
-    }
-    let (m, n) = (tape.domain.dims[0], tape.domain.dims[1]);
+    let (m, n) = (domain.dims[0], domain.dims[1]);
     let nt = threads.min(m / PAR_MIN_ROWS_PER_THREAD);
     if nt < 2 {
         return false;
     }
 
-    let bufs: Vec<View> = tape
-        .inputs
-        .iter()
-        .map(|&i| value_view(g, i, leaf, slab, arena))
-        .collect();
+    let (bufs, rk) = match kernel {
+        Kernel::Tape(tape) => {
+            let bufs: Vec<View> = tape
+                .inputs
+                .iter()
+                .map(|&i| value_view(g, i, leaf, slab, arena))
+                .collect();
+            (bufs, RowKernel::Tape(tape))
+        }
+        Kernel::MatmulEpi(mt) => {
+            // fp32 requests (no int8 entry) fall back to whole-block
+            // per-node execution.
+            let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) else {
+                return false;
+            };
+            let lhs = value_view(g, mt.lhs, leaf, slab, arena);
+            let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
+            (bufs, RowKernel::I8(mt, lhs, qt, scale))
+        }
+        _ => unreachable!("filtered above"),
+    };
+
     let mut rest: Vec<&mut [f32]> = block
         .outputs
         .iter()
@@ -431,6 +555,7 @@ fn row_parallel(
     let chunk = m.div_ceil(nt);
     std::thread::scope(|scope| {
         let bufs = &bufs;
+        let rk = &rk;
         let mut row0 = 0usize;
         while row0 < m {
             let row1 = (row0 + chunk).min(m);
@@ -446,7 +571,14 @@ fn row_parallel(
             rest = next;
             scope.spawn(move || {
                 let mut mine = mine;
-                tape.execute_rows_into(bufs, row0, row1, &mut mine);
+                match rk {
+                    RowKernel::Tape(tape) => {
+                        tape.execute_rows_into(bufs, row0, row1, &mut mine);
+                    }
+                    RowKernel::I8(mt, lhs, qt, scale) => {
+                        mt.execute_i8_rows_into(*lhs, qt, *scale, bufs, row0, row1, &mut mine);
+                    }
+                }
             });
             row0 = row1;
         }

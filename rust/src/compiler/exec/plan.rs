@@ -7,6 +7,10 @@
 //! * Reduction blocks matching softmax / layernorm -> native kernels
 //!   (pattern matchers and row kernels live here and are shared with the
 //!   wave-parallel executor).
+//! * Matmul-epilogue blocks whose weight has an int8 entry -> the fused
+//!   quantized tape kernel (`codegen::tape::MatmulEpilogueTape`): LHS
+//!   rows quantized once, i8 x i8 -> i32, rescale + bias + activation in
+//!   one pass — the §2.1 x §2.2 co-design point.
 //! * Everything else -> per-node fallback via `interp::apply_op`
 //!   (always correct; the perf-critical inference path runs on
 //!   `exec::parallel` or PJRT).
@@ -20,7 +24,7 @@ use std::collections::HashMap;
 use super::interp::apply_op;
 use super::tensor::{matmul_i8, Tensor, View};
 use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, QuantizedWeights};
-use crate::compiler::codegen::tape::compile_block;
+use crate::compiler::codegen::tape::{compile_block, compile_matmul_epilogue};
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId, Op, Shape};
 use crate::compiler::poly::Schedule;
@@ -148,6 +152,42 @@ pub fn execute_block(
                     let mut out = vec![0.0f32; shape.numel()];
                     layernorm_rows(xt.data, gt.data, bt.data, p.eps, rows, cols, &mut out);
                     vals.insert(p.out, Tensor { shape, data: out });
+                    return;
+                }
+            }
+            fallback(g, block, leaf, vals, quant);
+        }
+        BlockKind::MatmulEpilogue => {
+            // The co-design payoff: a quantized matmul and its fused
+            // epilogue (bias / GELU / residual) run as ONE tape kernel —
+            // LHS rows quantized once, i8 x i8 -> i32, rescale + epilogue
+            // in the same pass. Blocks that don't match the epilogue
+            // shape, or whose weight has no int8 entry, fall back to
+            // per-node execution as before.
+            if let Some(mt) = compile_matmul_epilogue(g, block) {
+                if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
+                    let numel = mt.tape.domain.numel();
+                    let mut storage: Vec<Vec<f32>> =
+                        mt.tape.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
+                    {
+                        let lhs = value_view(g, mt.lhs, leaf, vals);
+                        let bufs = mt.input_views(g, |i| value_view(g, i, leaf, vals));
+                        let mut outs: Vec<&mut [f32]> =
+                            storage.iter_mut().map(|v| v.as_mut_slice()).collect();
+                        mt.execute_i8_rows_into(
+                            lhs,
+                            qt,
+                            scale,
+                            &bufs,
+                            0,
+                            mt.tape.domain.dims[0],
+                            &mut outs,
+                        );
+                    }
+                    let keys: Vec<NodeId> = mt.tape.output_regs.iter().map(|&(nd, _)| nd).collect();
+                    for (key, data) in keys.into_iter().zip(storage) {
+                        vals.insert(key, Tensor { shape: mt.tape.domain.clone(), data });
+                    }
                     return;
                 }
             }

@@ -141,6 +141,49 @@ impl QuantizedTensor {
     }
 }
 
+/// Quantize one fp32 activation row into `qa` symmetrically (`absmax/127`
+/// dynamic, or the calibrated static `act_scale`), returning the row
+/// scale. Shared by [`matmul_i8`] and the fused epilogue kernel
+/// (`codegen::tape::MatmulEpilogueTape`) so the two stay bitwise
+/// identical.
+#[inline]
+pub fn quantize_row_i8(arow: &[f32], act_scale: Option<f32>, qa: &mut [i8]) -> f32 {
+    let s_a = match act_scale {
+        Some(s) => s,
+        None => {
+            let m = arow.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if m > 0.0 {
+                m / 127.0
+            } else {
+                1.0
+            }
+        }
+    };
+    let inv = 1.0 / s_a;
+    for (q, &a) in qa.iter_mut().zip(arow) {
+        *q = (a * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    s_a
+}
+
+/// `i8 x i8 -> i32` row accumulation: `acc[j] = sum_k qa[k] * rhs[k, j]`
+/// over a row-major `[k, n]` int8 payload. Shared with the fused epilogue
+/// kernel (bitwise-identical accumulation order).
+#[inline]
+pub fn accumulate_row_i8(qa: &[i8], rhs_data: &[i8], n: usize, acc: &mut [i32]) {
+    acc.fill(0);
+    for (kk, &q) in qa.iter().enumerate() {
+        let av = q as i32;
+        if av == 0 {
+            continue;
+        }
+        let brow = &rhs_data[kk * n..(kk + 1) * n];
+        for (a, &b) in acc.iter_mut().zip(brow) {
+            *a += av * b as i32;
+        }
+    }
+}
+
 /// INT8 matmul: `lhs [.., m, k]` fp32 activations x per-channel quantized
 /// `rhs [k, n]` weight -> fp32 `[.., m, n]`.
 ///
@@ -156,48 +199,31 @@ pub fn matmul_i8(
     act_scale: Option<f32>,
     out_shape: &Shape,
 ) -> Tensor {
+    let mut out = vec![0.0f32; out_shape.numel()];
+    matmul_i8_into(lhs, rhs, act_scale, &mut out);
+    Tensor { shape: out_shape.clone(), data: out }
+}
+
+/// As [`matmul_i8`], writing into a caller-provided buffer (e.g. a
+/// planned arena region) instead of allocating — the no-copy fallback
+/// path of the wave executor.
+pub fn matmul_i8_into(lhs: View, rhs: &QuantizedTensor, act_scale: Option<f32>, out: &mut [f32]) {
     let (k, n) = (rhs.shape.dims[0], rhs.shape.dims[1]);
     debug_assert_eq!(lhs.shape.dims.last().copied(), Some(k), "lhs inner dim != k");
     let rows = lhs.numel() / k;
-    debug_assert_eq!(out_shape.numel(), rows * n, "out shape mismatch");
+    debug_assert_eq!(out.len(), rows * n, "out buffer mismatch");
 
-    let mut out = vec![0.0f32; rows * n];
     let mut qa = vec![0i8; k];
     let mut acc = vec![0i32; n];
     for r in 0..rows {
         let arow = &lhs.data[r * k..(r + 1) * k];
-        let s_a = match act_scale {
-            Some(s) => s,
-            None => {
-                let m = arow.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-                if m > 0.0 {
-                    m / 127.0
-                } else {
-                    1.0
-                }
-            }
-        };
-        let inv = 1.0 / s_a;
-        for (q, &a) in qa.iter_mut().zip(arow) {
-            *q = (a * inv).round().clamp(-127.0, 127.0) as i8;
-        }
-        acc.fill(0);
-        for kk in 0..k {
-            let av = qa[kk] as i32;
-            if av == 0 {
-                continue;
-            }
-            let brow = &rhs.data[kk * n..(kk + 1) * n];
-            for (a, &b) in acc.iter_mut().zip(brow) {
-                *a += av * b as i32;
-            }
-        }
+        let s_a = quantize_row_i8(arow, act_scale, &mut qa);
+        accumulate_row_i8(&qa, &rhs.data, n, &mut acc);
         let orow = &mut out[r * n..(r + 1) * n];
         for (j, o) in orow.iter_mut().enumerate() {
             *o = acc[j] as f32 * (s_a * rhs.scales[j]);
         }
     }
-    Tensor { shape: out_shape.clone(), data: out }
 }
 
 /// Iterate all coordinates of `shape` in row-major order.

@@ -299,14 +299,49 @@ fn can_merge(
         return false;
     }
 
-    // At most 2 matmuls per block (the attention core), never 3+.
-    let matmuls = p_members
+    // At most 2 matmuls per block (the attention core), never 3+ — and
+    // two only when a reduction (the softmax) sits on the dependency path
+    // BETWEEN them. Two back-to-back GEMMs (e.g. the FFN's
+    // matmul→GELU→matmul) must stay separate blocks: a merged pair has no
+    // fused kernel and would run per-node, whereas split apart each
+    // matmul keeps its elementwise epilogue and qualifies for the fused
+    // (int8) matmul-epilogue tape. (Path check, not an id-range proxy: an
+    // off-path reduction that happens to get an id between two dependent
+    // GEMMs must not legitimize the merge.)
+    let mm_ids: Vec<NodeId> = p_members
         .iter()
         .chain(&c_members)
-        .filter(|&&m| g.nodes[m].op == Op::MatMul)
-        .count();
-    if matmuls > 2 {
+        .copied()
+        .filter(|&m| g.nodes[m].op == Op::MatMul)
+        .collect();
+    if mm_ids.len() > 2 {
         return false;
+    }
+    if mm_ids.len() == 2 {
+        let lo = *mm_ids.iter().min().expect("two matmuls");
+        let hi = *mm_ids.iter().max().expect("two matmuls");
+        let merged: HashSet<NodeId> = p_members.iter().chain(&c_members).copied().collect();
+        // In-block forward reachability (blocks are capped at
+        // max_block_ops members, so this stays tiny).
+        let reach = |start: NodeId| -> HashSet<NodeId> {
+            let mut seen = HashSet::new();
+            let mut stack = vec![start];
+            while let Some(x) = stack.pop() {
+                for &u in &users[x] {
+                    if merged.contains(&u) && seen.insert(u) {
+                        stack.push(u);
+                    }
+                }
+            }
+            seen
+        };
+        let from_lo = reach(lo);
+        let softmax_between = merged.iter().any(|&m| {
+            g.nodes[m].op.is_reduce() && from_lo.contains(&m) && reach(m).contains(&hi)
+        });
+        if !softmax_between {
+            return false;
+        }
     }
 
     // Footprint: internal intermediates must fit the fast-memory budget.
@@ -397,6 +432,31 @@ mod tests {
         let plan = lp_fusion(&g, &FusionConfig::default());
         assert_eq!(plan.num_blocks(), 1, "{:#?}", plan.blocks);
         assert_eq!(plan.blocks[0].kind, BlockKind::MatmulEpilogue);
+    }
+
+    /// The FFN shape: matmul -> bias -> GELU -> matmul -> bias. Two
+    /// back-to-back GEMMs must NOT share a block (no fused kernel exists
+    /// for that) — each keeps its own epilogue so the (int8) matmul-
+    /// epilogue tape applies to both.
+    #[test]
+    fn ffn_matmul_chain_splits_into_two_epilogue_blocks() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[16, 32], DType::F32);
+        let w1 = g.weight("w1", &[32, 64]);
+        let b1 = g.weight("b1", &[64]);
+        let w2 = g.weight("w2", &[64, 32]);
+        let b2 = g.weight("b2", &[32]);
+        let mm1 = g.matmul(x, w1);
+        let h = g.add(mm1, b1);
+        let a = g.gelu(h);
+        let mm2 = g.matmul(a, w2);
+        let out = g.add(mm2, b2);
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 2, "{:#?}", plan.blocks);
+        for b in &plan.blocks {
+            assert_eq!(b.kind, BlockKind::MatmulEpilogue);
+        }
     }
 
     #[test]

@@ -163,7 +163,11 @@ impl Graph {
         let shape = infer_shape(&op, &shapes);
         let dtype = match op {
             Op::Gather => DType::F32,
-            _ => self.nodes.get(inputs.first().copied().unwrap_or(0)).map(|n| n.dtype).unwrap_or(DType::F32),
+            _ => self
+                .nodes
+                .get(inputs.first().copied().unwrap_or(0))
+                .map(|n| n.dtype)
+                .unwrap_or(DType::F32),
         };
         self.push(Node { op, inputs: inputs.to_vec(), shape, dtype })
     }

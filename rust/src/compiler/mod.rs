@@ -165,7 +165,24 @@ impl Compiled {
     /// Build the executor's int8 side table from this model's quant sites
     /// and a named weight map (per-channel symmetric, see
     /// `compress::quant`). Empty when compiled without `compression.int8`.
+    /// Sites that can't be quantized (missing / mis-sized weight) are
+    /// logged to stderr — use [`Compiled::quantize_weights_report`] to
+    /// inspect or propagate the summary instead.
     pub fn quantize_weights(&self, weights: &HashMap<String, Vec<f32>>) -> QuantizedWeights {
+        let (qw, summary) = self.quantize_weights_report(weights);
+        if !summary.all_quantized() {
+            eprintln!("[quant] WARNING: {summary}");
+        }
+        qw
+    }
+
+    /// As [`Compiled::quantize_weights`], also returning which sites were
+    /// quantized vs skipped (with reasons) so callers can surface or fail
+    /// on partial quantization instead of silently serving fp32.
+    pub fn quantize_weights_report(
+        &self,
+        weights: &HashMap<String, Vec<f32>>,
+    ) -> (QuantizedWeights, crate::compress::QuantSummary) {
         crate::compress::quant::quantize_sites(&self.graph, &self.quant_sites, weights)
     }
 

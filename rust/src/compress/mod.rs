@@ -51,7 +51,7 @@ use crate::compiler::ir::Graph;
 use crate::model::{build_encoder, BertConfig};
 
 pub use prune::{LayerPrune, PruneSpec};
-pub use quant::{quant_sites, QuantSite};
+pub use quant::{quant_sites, QuantSite, QuantSkip, QuantSummary};
 
 /// What to compress. `Default` = no compression (dense fp32).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

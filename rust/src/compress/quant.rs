@@ -18,6 +18,7 @@
 //! rescales once per output.
 
 use std::collections::HashMap;
+use std::fmt;
 
 use crate::compiler::exec::interp::eval_graph_values;
 use crate::compiler::exec::{ExecError, QuantizedTensor, QuantizedWeights, View};
@@ -52,26 +53,97 @@ pub fn quant_sites(g: &Graph) -> Vec<QuantSite> {
         .collect()
 }
 
+/// Why a quant site stayed fp32.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QuantSkip {
+    /// No entry of that name in the weight map (e.g. a typo'd name).
+    MissingWeight { name: String },
+    /// An entry exists but its length doesn't match the graph shape.
+    SizeMismatch { name: String, expected: usize, got: usize },
+}
+
+impl fmt::Display for QuantSkip {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QuantSkip::MissingWeight { name } => write!(f, "{name} (missing weight)"),
+            QuantSkip::SizeMismatch { name, expected, got } => {
+                write!(f, "{name} ({got} elements, shape needs {expected})")
+            }
+        }
+    }
+}
+
+/// What [`quantize_sites`] did: which sites got an int8 entry and which
+/// silently stayed fp32, with the reason. Previously a typo'd weight name
+/// served fp32 with no signal at all — now the summary is returned to (and
+/// logged by) `Compiled::quantize_weights` and the serving engines.
+#[derive(Debug, Clone, Default)]
+pub struct QuantSummary {
+    /// Weight names that received an int8 table entry.
+    pub quantized: Vec<String>,
+    /// Sites left fp32, with why.
+    pub skipped: Vec<QuantSkip>,
+}
+
+impl QuantSummary {
+    pub fn all_quantized(&self) -> bool {
+        self.skipped.is_empty()
+    }
+}
+
+impl fmt::Display for QuantSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "quantized {}/{} int8 sites",
+            self.quantized.len(),
+            self.quantized.len() + self.skipped.len()
+        )?;
+        if !self.skipped.is_empty() {
+            write!(f, "; left fp32: ")?;
+            for (i, s) in self.skipped.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{s}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Build the executor's int8 side table: per-channel quantize each site's
 /// weight from the named feed map. Sites whose weight is missing or
 /// mis-sized are skipped (they simply stay fp32) — quantization must
-/// never turn a servable model into an unservable one.
+/// never turn a servable model into an unservable one — but every skip is
+/// reported in the returned [`QuantSummary`] so a typo'd weight name has
+/// a signal instead of silently serving fp32.
 pub fn quantize_sites(
     g: &Graph,
     sites: &[QuantSite],
     weights: &HashMap<String, Vec<f32>>,
-) -> QuantizedWeights {
+) -> (QuantizedWeights, QuantSummary) {
     let mut qw = QuantizedWeights::default();
+    let mut summary = QuantSummary::default();
     for site in sites {
-        let Some(data) = weights.get(&site.name) else { continue };
+        let Some(data) = weights.get(&site.name) else {
+            summary.skipped.push(QuantSkip::MissingWeight { name: site.name.clone() });
+            continue;
+        };
         let shape = &g.nodes[site.weight].shape;
         if data.len() != shape.numel() {
+            summary.skipped.push(QuantSkip::SizeMismatch {
+                name: site.name.clone(),
+                expected: shape.numel(),
+                got: data.len(),
+            });
             continue;
         }
         qw.by_node
             .insert(site.weight, QuantizedTensor::per_channel(View { shape, data }));
+        summary.quantized.push(site.name.clone());
     }
-    qw
+    (qw, summary)
 }
 
 /// Static activation calibration from sample feeds: run the fp32 model
@@ -155,10 +227,26 @@ mod tests {
         let mut weights = HashMap::new();
         weights.insert("w1".to_string(), vec![0.5; 16]);
         weights.insert("w2".to_string(), vec![0.5; 3]); // wrong size
-        let qw = quantize_sites(&g, &sites, &weights);
+        let (qw, summary) = quantize_sites(&g, &sites, &weights);
         assert_eq!(qw.by_node.len(), 1);
         assert!(qw.by_node.contains_key(&w1));
         assert!(!qw.by_node.contains_key(&w2));
+        // The skip is reported, not silent.
+        assert_eq!(summary.quantized, vec!["w1".to_string()]);
+        assert_eq!(
+            summary.skipped,
+            vec![QuantSkip::SizeMismatch { name: "w2".into(), expected: 16, got: 3 }]
+        );
+        assert!(!summary.all_quantized());
+        assert!(summary.to_string().contains("1/2"), "{summary}");
+
+        // A missing weight reports the name.
+        weights.remove("w2");
+        let (_, summary) = quantize_sites(&g, &sites, &weights);
+        assert_eq!(
+            summary.skipped,
+            vec![QuantSkip::MissingWeight { name: "w2".into() }]
+        );
     }
 
     #[test]
@@ -172,7 +260,8 @@ mod tests {
         let mut rng = Rng::new(11);
         let mut weights = HashMap::new();
         weights.insert("w".to_string(), (0..12).map(|_| rng.normal_f32(0.0, 0.5)).collect());
-        let mut qw = quantize_sites(&g, &sites, &weights);
+        let (mut qw, summary) = quantize_sites(&g, &sites, &weights);
+        assert!(summary.all_quantized());
         assert!(qw.act_scale.is_empty());
 
         let mut feeds = weights.clone();

@@ -167,14 +167,41 @@ pub fn block_cost_with(
                 && g.nodes[n].inputs.get(1).is_some_and(|w| set.contains(w))
         })
     });
-    let rate = if int8_matmul {
-        dev.int8_matmul_flops
+    let compute_s = if int8_matmul {
+        // Fused INT8 epilogue block (the tape kernel both executors run):
+        // the i8 x i8 MACs go down the SDOT/dp4a path, while the fused
+        // epilogue (bias/activation) plus the per-row quantize and the
+        // rescale run on the vector units in the same pass. Pricing the
+        // two separately is what lets NAS phase 2 see the *real* fused
+        // int8 latency instead of the MAC-only lower bound.
+        let mm_flops: f64 = block
+            .nodes
+            .iter()
+            .filter(|&&n| g.nodes[n].op == Op::MatMul)
+            .map(|&n| node_flops(g, n))
+            .sum();
+        let requant: f64 = block
+            .nodes
+            .iter()
+            .filter(|&&n| {
+                g.nodes[n].op == Op::MatMul
+                    && g.nodes[n]
+                        .inputs
+                        .get(1)
+                        .is_some_and(|w| int8_weights.is_some_and(|set| set.contains(w)))
+            })
+            .map(|&n| {
+                // Quantize each LHS element once + one rescale per output.
+                let lhs = g.nodes[n].inputs[0];
+                (g.nodes[lhs].shape.numel() + g.nodes[n].shape.numel()) as f64
+            })
+            .sum();
+        mm_flops / dev.int8_matmul_flops + (flops - mm_flops + requant) / dev.vector_flops
     } else if has_matmul {
-        dev.matmul_flops
+        flops / dev.matmul_flops
     } else {
-        dev.vector_flops
+        flops / dev.vector_flops
     };
-    let compute_s = flops / rate;
     let memory_s = bytes / dev.mem_bw;
     let total_s = dev.launch_overhead_s + compute_s.max(memory_s);
     BlockCost { flops, bytes, compute_s, memory_s, total_s }
@@ -267,7 +294,10 @@ mod tests {
         // fused GPU fastest of all.
         let cfg = BertConfig::canaobert();
         let g = build_encoder(&cfg);
-        let unfused = compile(&g, &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() });
+        let unfused = compile(
+            &g,
+            &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() },
+        );
         let fused = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
         let tfl = tflite::tflite_latency(&cfg);
         let gpu_unfused = plan_latency(&unfused.graph, &unfused.plan, &DeviceProfile::s865_gpu());
@@ -299,7 +329,10 @@ mod tests {
     fn overhead_dominates_gpu_unfused() {
         let cfg = BertConfig::canaobert();
         let g = build_encoder(&cfg);
-        let c = compile(&g, &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() });
+        let c = compile(
+            &g,
+            &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() },
+        );
         let lat = plan_latency(&c.graph, &c.plan, &DeviceProfile::s865_gpu());
         assert!(
             lat.overhead_s > 0.5 * lat.total_s,
@@ -339,10 +372,13 @@ mod tests {
         let dev = DeviceProfile::s865_cpu();
         let mut g = Graph::new();
         let a = g.input("a", &[128, 128], crate::compiler::ir::DType::F32);
-        let w = g.weight("w", &[128, 128], );
+        let w = g.weight("w", &[128, 128]);
         let m = g.matmul(a, w);
         g.mark_output(m);
-        let plan = crate::compiler::fusion::lp_fusion(&g, &crate::compiler::fusion::FusionConfig::default());
+        let plan = crate::compiler::fusion::lp_fusion(
+            &g,
+            &crate::compiler::fusion::FusionConfig::default(),
+        );
         let c = block_cost(&g, &plan.blocks[0], &dev);
         assert!(c.flops == 2.0 * 128.0 * 128.0 * 128.0);
         assert!(c.total_s > dev.launch_overhead_s);

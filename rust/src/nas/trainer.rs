@@ -209,7 +209,8 @@ mod tests {
 
     #[test]
     fn scores_bounded_and_deterministic() {
-        let cfg = BertConfig { vocab: 30522, seq: 128, layers: 3, hidden: 192, heads: 3, inter: 768 };
+        let cfg =
+            BertConfig { vocab: 30522, seq: 128, layers: 3, hidden: 192, heads: 3, inter: 768 };
         let a = surrogate_mean(&cfg, 42);
         let b = surrogate_mean(&cfg, 42);
         assert_eq!(a, b);
@@ -220,7 +221,8 @@ mod tests {
 
     #[test]
     fn noise_varies_across_tasks() {
-        let cfg = BertConfig { vocab: 30522, seq: 128, layers: 5, hidden: 320, heads: 5, inter: 1280 };
+        let cfg =
+            BertConfig { vocab: 30522, seq: 128, layers: 5, hidden: 320, heads: 5, inter: 1280 };
         let n1 = noise(&cfg, GlueTask::Sst2, 1);
         let n2 = noise(&cfg, GlueTask::Rte, 1);
         assert_ne!(n1, n2);

@@ -44,9 +44,12 @@ pub fn table1_rows() -> Vec<Table1Row> {
         .into_iter()
         .map(|(name, cfg)| {
             let g = build_encoder(&cfg);
-            let fused = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
-            let unfused =
-                compile(&g, &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() });
+            let fused =
+                compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+            let unfused = compile(
+                &g,
+                &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() },
+            );
             Table1Row {
                 name,
                 gflops: cfg.flops() as f64 / 1e9,
@@ -69,7 +72,17 @@ pub fn bench_table1(out: &mut dyn Write) -> anyhow::Result<()> {
     writeln!(
         out,
         "{:<12} {:>7} | {:>11} | {:>9} {:>5} {:>9} {:>5} | {:>9} {:>5} {:>9} {:>5}",
-        "Model", "#FLOPs", "TFLite CPU", "nf CPU", "x", "nf GPU", "x", "fused CPU", "x", "fused GPU", "x"
+        "Model",
+        "#FLOPs",
+        "TFLite CPU",
+        "nf CPU",
+        "x",
+        "nf GPU",
+        "x",
+        "fused CPU",
+        "x",
+        "fused GPU",
+        "x"
     )?;
     let rows = table1_rows();
     for r in &rows {

@@ -26,7 +26,11 @@ pub struct Executable {
 impl Executable {
     /// Execute with `params` (empty slice for param-less artifacts)
     /// followed by the extra inputs. Returns the decomposed output tuple.
-    pub fn run(&self, params: &[xla::Literal], extras: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    pub fn run(
+        &self,
+        params: &[xla::Literal],
+        extras: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
         let expected = self.entry.extra_inputs.len();
         if extras.len() != expected {
             bail!(
@@ -131,13 +135,15 @@ impl Runtime {
             .with_context(|| format!("unknown executable {name:?}"))?
             .clone();
         let path = self.dir.join(&entry.hlo);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        let arc =
-            Arc::new(Executable { name: name.to_string(), entry, exe, client: self.client.clone() });
+        let arc = Arc::new(Executable {
+            name: name.to_string(),
+            entry,
+            exe,
+            client: self.client.clone(),
+        });
         self.cache.insert(name.to_string(), Arc::clone(&arc));
         Ok(arc)
     }

@@ -29,7 +29,18 @@ impl Vocab {
     /// Order: specials, single characters (coverage floor), frequent whole
     /// words, then frequent `##` suffix pieces (2..4 chars) for splitting
     /// unseen words.
+    ///
+    /// The cap is a hard invariant across ALL phases: token ids index the
+    /// embedding table, so a vocab that outgrew `max_size` would gather
+    /// out of bounds. A corpus whose character set alone exceeds the cap
+    /// is truncated deterministically (chars are sorted, so which survive
+    /// is stable); dropped characters tokenize to `[UNK]`.
     pub fn build(corpus: &str, max_size: usize) -> Vocab {
+        assert!(
+            max_size >= SPECIALS.len(),
+            "vocab cap {max_size} cannot hold the {} special tokens",
+            SPECIALS.len()
+        );
         let mut word_freq: HashMap<String, usize> = HashMap::new();
         let mut char_set: Vec<char> = Vec::new();
         for token in pre_tokenize(corpus) {
@@ -58,13 +69,24 @@ impl Vocab {
         }
 
         let mut pieces: Vec<String> = SPECIALS.iter().map(|s| s.to_string()).collect();
+        // Phase 2: single-character coverage — capped like every other
+        // phase (a large corpus charset previously blew past `max_size`
+        // here, yielding ids beyond the embedding row count).
         for c in &char_set {
+            if pieces.len() >= max_size {
+                break;
+            }
             pieces.push(c.to_string());
         }
         for c in &char_set {
+            if pieces.len() >= max_size {
+                break;
+            }
             pieces.push(format!("##{c}"));
         }
 
+        // Phase 3: frequent whole words, budgeted to 7/8 of the cap so
+        // suffix pieces always get some room.
         let mut words: Vec<(&String, &usize)> = word_freq.iter().collect();
         words.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
         for (w, _) in words {
@@ -76,6 +98,7 @@ impl Vocab {
             }
         }
 
+        // Phase 4: frequent `##` suffix pieces up to the cap.
         let mut sufs: Vec<(&String, &usize)> = suffix_freq.iter().collect();
         sufs.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
         for (s, _) in sufs {
@@ -87,6 +110,7 @@ impl Vocab {
                 pieces.push(tagged);
             }
         }
+        debug_assert!(pieces.len() <= max_size);
 
         let id_of = pieces
             .iter()
@@ -331,6 +355,31 @@ mod tests {
         let v2 = Vocab::load(&dir).unwrap();
         assert_eq!(v.piece_of, v2.piece_of);
         let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn huge_charset_respects_cap() {
+        // Regression: the char-coverage phases used to push every corpus
+        // character (and its ## twin) BEFORE checking max_size, so a
+        // many-char corpus produced ids past the embedding row count.
+        let corpus: String = (0..300u32)
+            .filter_map(|i| char::from_u32(0x3042 + i)) // kana/CJK range
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        let cap = 64;
+        let v = Vocab::build(&corpus, cap);
+        assert!(v.len() <= cap, "vocab {} exceeds cap {cap}", v.len());
+        // Every id a tokenizer can emit stays a valid embedding row.
+        let t = Tokenizer::new(v);
+        for id in t.encode(&corpus) {
+            assert!((id as usize) < cap, "id {id} out of range");
+        }
+        // Specials survive truncation.
+        assert_eq!(t.vocab.id_of["[UNK]"], UNK);
+        // Deterministic truncation: same corpus, same vocab.
+        let v2 = Vocab::build(&corpus, cap);
+        assert_eq!(t.vocab.piece_of, v2.piece_of);
     }
 
     #[test]

@@ -110,7 +110,12 @@ pub fn finetune_cls(rt: &mut Runtime, steps: usize, lr: f32, seed: u64) -> Resul
 }
 
 /// Evaluate classification accuracy of current `cls` params on fresh data.
-pub fn eval_cls(rt: &mut Runtime, params: &[xla::Literal], batches: usize, seed: u64) -> Result<f32> {
+pub fn eval_cls(
+    rt: &mut Runtime,
+    params: &[xla::Literal],
+    batches: usize,
+    seed: u64,
+) -> Result<f32> {
     let exe = rt.load("cls_b8")?;
     let m = &rt.manifest.models["cls"];
     let (seq, vocab, classes) = (m.cfg("seq"), m.cfg("vocab"), 2usize);

@@ -35,6 +35,15 @@ impl Slab {
         self.data.is_empty()
     }
 
+    /// Grow (never shrink) the backing storage to at least `len` elements.
+    /// New elements are zeroed; executors never read a region before
+    /// writing it, so recycled contents are harmless either way.
+    pub fn ensure_len(&mut self, len: usize) {
+        if self.data.len() < len {
+            self.data.resize(len, 0.0);
+        }
+    }
+
     /// Borrow the whole slab as a shareable handle. The `&mut` receiver
     /// guarantees no other safe borrow of the storage exists while
     /// `SharedSlab` copies are alive.
@@ -44,6 +53,69 @@ impl Slab {
             len: self.data.len(),
             _marker: PhantomData,
         }
+    }
+}
+
+/// Recycling pool of [`Slab`]s for steady-state serving: the wave
+/// executor checks a slab out per execution and returns it afterwards, so
+/// after warm-up no request performs a large allocation. The pool grows
+/// to the peak number of *concurrent* executions and no further; a
+/// checked-out slab that is too small (e.g. the pool was cloned across
+/// models) is grown in place.
+pub struct SlabPool {
+    slabs: Mutex<Vec<Slab>>,
+}
+
+impl SlabPool {
+    pub fn new() -> SlabPool {
+        SlabPool { slabs: Mutex::new(Vec::new()) }
+    }
+
+    /// Take a slab with at least `len` elements, reusing a parked one
+    /// when available.
+    pub fn checkout(&self, len: usize) -> Slab {
+        let recycled = self.slabs.lock().unwrap().pop();
+        match recycled {
+            Some(mut s) => {
+                s.ensure_len(len);
+                s
+            }
+            None => Slab::new(len),
+        }
+    }
+
+    /// Park a slab for reuse by a later execution.
+    pub fn give_back(&self, slab: Slab) {
+        self.slabs.lock().unwrap().push(slab);
+    }
+
+    /// Number of slabs currently parked.
+    pub fn len(&self) -> usize {
+        self.slabs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for SlabPool {
+    fn default() -> Self {
+        SlabPool::new()
+    }
+}
+
+/// Pools are warm caches: a cloned `SlabPool` (e.g. cloning a cached
+/// `PreparedExec`) starts cold rather than duplicating buffers.
+impl Clone for SlabPool {
+    fn clone(&self) -> Self {
+        SlabPool::new()
+    }
+}
+
+impl std::fmt::Debug for SlabPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SlabPool({} parked)", self.len())
     }
 }
 
@@ -213,6 +285,26 @@ mod tests {
         for (i, &v) in all.iter().enumerate() {
             assert_eq!(v, i as f32);
         }
+    }
+
+    #[test]
+    fn slab_pool_recycles_and_grows() {
+        let pool = SlabPool::new();
+        assert!(pool.is_empty());
+        let a = pool.checkout(16);
+        assert_eq!(a.len(), 16);
+        pool.give_back(a);
+        assert_eq!(pool.len(), 1);
+        // Reuse grows in place when a larger slab is needed...
+        let b = pool.checkout(64);
+        assert!(pool.is_empty(), "the parked slab was reused, not left behind");
+        assert_eq!(b.len(), 64);
+        pool.give_back(b);
+        // ...and a smaller request reuses the bigger slab as-is.
+        let c = pool.checkout(8);
+        assert_eq!(c.len(), 64);
+        pool.give_back(c);
+        assert_eq!(pool.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Differential coverage for the fused INT8 matmul-epilogue path — the
+//! PR where compression (§2.1) and LP-Fusion (§2.2) finally compose:
+//!
+//! * **Fused == unfused, bitwise**: executing a `matmul -> bias [->
+//!   GELU / residual]` block through the fused int8 tape kernel must be
+//!   bit-identical to the per-node path (`matmul_i8` fallback + tape
+//!   elementwise blocks) that a fusion-disabled compile runs.
+//! * **Sequential == parallel, bitwise**: the wave executor (including
+//!   its row-split of the fused kernel) agrees with the sequential plan
+//!   executor at every thread count.
+//! * **Close to fp32**: within the compression subsystem's documented
+//!   rtol 0.1 / atol 0.05.
+//! * **The bench path is fused**: the `table1_latency` pruned+int8
+//!   encoder executes its weight matmuls as MatmulEpilogue blocks whose
+//!   fused kernel compiles and whose weights are in the int8 table — no
+//!   scratch-and-copy on that path.
+
+use std::collections::HashMap;
+
+use canao::compiler::codegen::tape::compile_matmul_epilogue;
+use canao::compiler::exec::Feeds;
+use canao::compiler::fusion::BlockKind;
+use canao::compiler::ir::{DType, Graph};
+use canao::compiler::{compile, CompileOptions, Compiled};
+use canao::compress::{compress_encoder, CompressionConfig};
+use canao::model::{build_encoder, BertConfig};
+use canao::serving::init_weights;
+use canao::util::check::assert_close;
+use canao::util::rng::Rng;
+
+fn opts_int8() -> CompileOptions {
+    CompileOptions {
+        model_only_tuning: true,
+        compression: CompressionConfig::int8_only(),
+        ..Default::default()
+    }
+}
+
+fn opts_int8_unfused() -> CompileOptions {
+    CompileOptions {
+        model_only_tuning: true,
+        compression: CompressionConfig::int8_only(),
+        ..CompileOptions::no_fusion()
+    }
+}
+
+fn random_feeds(g: &Graph, seed: u64) -> HashMap<String, Vec<f32>> {
+    use canao::compiler::ir::Op;
+    let mut rng = Rng::new(seed);
+    let mut feeds = HashMap::new();
+    for node in &g.nodes {
+        if let Op::Input { name } | Op::Weight { name } = &node.op {
+            feeds.insert(
+                name.clone(),
+                (0..node.shape.numel()).map(|_| rng.normal_f32(0.0, 0.7)).collect(),
+            );
+        }
+    }
+    feeds
+}
+
+/// The three epilogue shapes the tentpole names: bias-only, bias+GELU,
+/// and bias+residual.
+fn epilogue_graph(variant: &str, m: usize, k: usize, n: usize) -> Graph {
+    let mut g = Graph::new();
+    let x = g.input("x", &[m, k], DType::F32);
+    let w = g.weight("w", &[k, n]);
+    let b = g.weight("b", &[n]);
+    let mm = g.matmul(x, w);
+    let biased = g.add(mm, b);
+    let out = match variant {
+        "bias" => biased,
+        "bias+gelu" => g.gelu(biased),
+        "bias+residual" => {
+            let r = g.input("r", &[m, n], DType::F32);
+            g.add(biased, r)
+        }
+        other => panic!("unknown variant {other}"),
+    };
+    g.mark_output(out);
+    g
+}
+
+fn run_all(
+    c: &Compiled,
+    feeds: &HashMap<String, Vec<f32>>,
+    quant: bool,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let qw = quant.then(|| c.quantize_weights(feeds));
+    let f = Feeds::single(feeds);
+    let seq = c.run_with(&f, qw.as_ref()).unwrap();
+    let pars = [1usize, 2, 4]
+        .iter()
+        .map(|&t| c.run_parallel_with(&f, t, qw.as_ref()).unwrap().0[0].data.clone())
+        .collect();
+    (seq[0].data.clone(), pars)
+}
+
+#[test]
+fn f1_fused_bitwise_equals_unfused_int8_across_epilogues() {
+    for variant in ["bias", "bias+gelu", "bias+residual"] {
+        let g = epilogue_graph(variant, 16, 24, 20);
+        let feeds = random_feeds(&g, 0xF15E);
+
+        let fused = compile(&g, &opts_int8());
+        assert!(
+            fused.plan.blocks.iter().any(|b| b.kind == BlockKind::MatmulEpilogue
+                && compile_matmul_epilogue(&fused.graph, b).is_some()),
+            "{variant}: no fused matmul-epilogue block"
+        );
+        let unfused = compile(&g, &opts_int8_unfused());
+
+        let (fused_seq, fused_par) = run_all(&fused, &feeds, true);
+        let (unfused_seq, unfused_par) = run_all(&unfused, &feeds, true);
+
+        // Fused int8 == per-node int8 fallback, bit for bit.
+        assert_eq!(fused_seq, unfused_seq, "{variant}: fused != unfused int8");
+        // Sequential == parallel at every thread count, both plans.
+        for (t, p) in fused_par.iter().enumerate() {
+            assert_eq!(p, &fused_seq, "{variant}: fused parallel[{t}] != sequential");
+        }
+        for (t, p) in unfused_par.iter().enumerate() {
+            assert_eq!(p, &unfused_seq, "{variant}: unfused parallel[{t}] != sequential");
+        }
+
+        // And int8 stays within the documented tolerance of fp32 — both
+        // the compiled fp32 plan and the unfused reference interpreter.
+        let (fp32_seq, _) = run_all(&fused, &feeds, false);
+        assert_close(&fused_seq, &fp32_seq, 0.1, 0.05)
+            .unwrap_or_else(|e| panic!("{variant}: int8 drifted from fp32: {e}"));
+        assert_ne!(fused_seq, fp32_seq, "{variant}: int8 table silently ignored");
+        let interp = canao::compiler::exec::interp::eval_graph(&g, &feeds).unwrap();
+        assert_close(&fused_seq, &interp[0].data, 0.1, 0.05)
+            .unwrap_or_else(|e| panic!("{variant}: fused int8 drifted from interp: {e}"));
+    }
+}
+
+#[test]
+fn f2_fused_kernel_row_splits_bitwise_on_tall_blocks() {
+    // Tall domain (m = 256 rows) so the wave executor row-splits the
+    // fused int8 kernel across threads; numerics must not move.
+    let g = epilogue_graph("bias+gelu", 256, 32, 16);
+    let feeds = random_feeds(&g, 0x0AB5);
+    let c = compile(&g, &opts_int8());
+    let (seq, pars) = run_all(&c, &feeds, true);
+    for (t, p) in pars.iter().enumerate() {
+        assert_eq!(p, &seq, "row-split parallel[{t}] != sequential");
+    }
+}
+
+#[test]
+fn f3_encoder_int8_fused_blocks_seq_eq_par() {
+    let cfg = BertConfig { vocab: 64, seq: 8, layers: 2, hidden: 16, heads: 4, inter: 24 };
+    let graph = build_encoder(&cfg);
+    let weights = init_weights(&graph, 0xE0C0);
+    let compiled = compile(&graph, &opts_int8());
+
+    // The encoder's weight matmuls fuse with their epilogues.
+    let fused_epis = compiled
+        .plan
+        .blocks
+        .iter()
+        .filter(|b| b.kind == BlockKind::MatmulEpilogue
+            && compile_matmul_epilogue(&compiled.graph, b).is_some())
+        .count();
+    assert!(fused_epis > 0, "encoder has no fused matmul-epilogue blocks");
+
+    let mut rng = Rng::new(7);
+    let mut request = HashMap::new();
+    request.insert(
+        "input_ids".to_string(),
+        (0..cfg.seq).map(|_| rng.below(cfg.vocab) as f32).collect::<Vec<f32>>(),
+    );
+    for l in 0..cfg.layers {
+        request.insert(format!("mask{l}"), vec![0.0; cfg.seq]);
+    }
+    let qw = compiled.quantize_weights(&weights);
+    let feeds = Feeds::layered(&request, &weights);
+
+    let fp32 = compiled.run_with(&feeds, None).unwrap();
+    let seq = compiled.run_with(&feeds, Some(&qw)).unwrap();
+    assert_close(&seq[0].data, &fp32[0].data, 0.1, 0.05).unwrap();
+    for threads in [1, 2, 4] {
+        let (par, _) = compiled.run_parallel_with(&feeds, threads, Some(&qw)).unwrap();
+        assert_eq!(par[0].data, seq[0].data, "int8 parallel != sequential at {threads}");
+    }
+
+    // Slab pooling: the serial run_parallel_with calls above each checked
+    // a slab out and returned it, so exactly one is parked — and another
+    // parallel request recycles it rather than allocating a second.
+    // (The sequential executor `run_with` never touches the pool.)
+    assert_eq!(compiled.prepared().pooled_slabs(), 1);
+    let _ = compiled.run_parallel_with(&feeds, 2, Some(&qw)).unwrap();
+    assert_eq!(compiled.prepared().pooled_slabs(), 1);
+}
+
+/// Pins the acceptance criterion: the `table1_latency` pruned+int8 row's
+/// model executes its weight matmuls (incl. matmul+bias+GELU in the FFN)
+/// as fused MatmulEpilogue tape blocks whose weights are all in the int8
+/// table — the path with no scratch tensor and no copy.
+#[test]
+fn f4_table1_pruned_int8_row_runs_fused() {
+    let cfg = BertConfig { vocab: 2048, seq: 64, layers: 2, hidden: 128, heads: 4, inter: 512 };
+    let comp = CompressionConfig::pruned_int8(0.5, 0.5);
+    let dense = build_encoder(&cfg);
+    let mut weights = init_weights(&dense, 0xC0DE);
+    let (graph, _report) = compress_encoder(&cfg, &mut weights, &comp);
+    let compiled = compile(
+        &graph,
+        &CompileOptions { model_only_tuning: true, compression: comp, ..Default::default() },
+    );
+    let (qw, summary) = compiled.quantize_weights_report(&weights);
+    assert!(summary.all_quantized(), "bench weights must fully quantize: {summary}");
+
+    let mut fused = 0usize;
+    let mut gelu_fused = 0usize;
+    for block in &compiled.plan.blocks {
+        let Some(mt) = compile_matmul_epilogue(&compiled.graph, block) else { continue };
+        assert!(
+            qw.by_node.contains_key(&mt.rhs),
+            "fused epilogue weight missing from the int8 table"
+        );
+        fused += 1;
+        // The FFN's matmul+bias+GELU epilogue contains the erf.
+        if mt.tape.insts.iter().any(|i| {
+            matches!(
+                i,
+                canao::compiler::codegen::tape::TapeInst::Unary {
+                    op: canao::compiler::codegen::tape::UOp::Erf,
+                    ..
+                }
+            )
+        }) {
+            gelu_fused += 1;
+        }
+    }
+    // Per layer at least: Q/K/V projections (bias-only) + the FFN's
+    // matmul+bias+GELU. (The wo/w2 matmuls merge with their downstream
+    // layernorms and run the per-node int8 fallback — unchanged.)
+    assert!(fused >= 4 * cfg.layers, "only {fused} fused epilogue blocks");
+    assert!(
+        gelu_fused >= cfg.layers,
+        "matmul+bias+GELU must run as one fused tape block per layer (got {gelu_fused})"
+    );
+}
