@@ -5,16 +5,20 @@
 //!   --accuracy-only   D3: drop the latency term from the reward
 //!   --joint           D4: joint search instead of two-phase
 //!   --no-fusion       D1: price candidates WITHOUT fusion in the loop
+//!   --compress        add the §2.1 compression knobs to phase 2
+//!   --decode-step     price per-token KV-cached decode latency
 //!
 //! Run: cargo run --release --example nas_search -- [--target-ms 45]
 //!      [--device cpu|gpu] [--iters 20] [--accuracy-only] [--joint]
+//!      [--compress] [--decode-step]
 
 use canao::device::DeviceProfile;
 use canao::nas::{Search, SearchConfig};
 use canao::util::cli::Args;
 
 fn main() {
-    let args = Args::from_env(&["accuracy-only", "joint", "no-fusion"]);
+    let args =
+        Args::from_env(&["accuracy-only", "joint", "no-fusion", "compress", "decode-step"]);
     let device = match args.get_or("device", "gpu").as_str() {
         "cpu" => DeviceProfile::s865_cpu(),
         _ => DeviceProfile::s865_gpu(),
@@ -30,6 +34,8 @@ fn main() {
         accuracy_only: args.has("accuracy-only"),
         joint: args.has("joint"),
         no_fusion_in_loop: args.has("no-fusion"),
+        search_compression: args.has("compress"),
+        decode_step: args.has("decode-step"),
     };
     println!(
         "CANAO search: device={} target={:.0}ms lambda={} mode={}{}{}",

@@ -1,0 +1,13 @@
+//! Bench: text-generation decode — full-resequence vs KV-cached, fp32 vs
+//! pruned+INT8, ms/token by position quartile, with the device-simulated
+//! per-step cost alongside (see `reports::bench_textgen`).
+//!
+//! The model is demo-sized so the whole table prints in seconds; CI runs
+//! this bench as the decode smoke test, so a regression that breaks the
+//! decode path (not just its unit tests) fails the pipeline.
+//!
+//! Run: cargo bench --bench textgen_decode
+
+fn main() -> anyhow::Result<()> {
+    canao::bench_textgen(&mut std::io::stdout())
+}

@@ -37,7 +37,10 @@ pub mod parallel;
 pub mod plan;
 pub mod tensor;
 
-pub use parallel::{execute_plan_parallel, execute_plan_parallel_stats, ExecStats, PreparedExec};
+pub use parallel::{
+    execute_plan_parallel, execute_plan_parallel_stats, execute_prepared_sinks, ExecStats,
+    PreparedExec,
+};
 pub use tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 
 use std::collections::HashMap;
@@ -50,16 +53,21 @@ use crate::compiler::ir::{Node, NodeId, Op};
 /// one long-lived map and builds only the tiny request map (ids + masks)
 /// per forward — previously every forward deep-copied the whole weight
 /// set into a merged map (ROADMAP open item).
+///
+/// The optional `slices` layer holds *borrowed* buffers that don't live
+/// in any owned `Vec` map — e.g. the decode subsystem's KV-cache regions,
+/// which sit in a pooled slab and are fed to the step graph zero-copy.
 #[derive(Debug, Clone, Copy)]
 pub struct Feeds<'a> {
     request: &'a HashMap<String, Vec<f32>>,
+    slices: Option<&'a HashMap<&'a str, &'a [f32]>>,
     base: Option<&'a HashMap<String, Vec<f32>>>,
 }
 
 impl<'a> Feeds<'a> {
     /// A single flat map (the historical call shape).
     pub fn single(m: &'a HashMap<String, Vec<f32>>) -> Self {
-        Feeds { request: m, base: None }
+        Feeds { request: m, slices: None, base: None }
     }
 
     /// `request` entries shadow `base` entries of the same name.
@@ -67,14 +75,67 @@ impl<'a> Feeds<'a> {
         request: &'a HashMap<String, Vec<f32>>,
         base: &'a HashMap<String, Vec<f32>>,
     ) -> Self {
-        Feeds { request, base: Some(base) }
+        Feeds { request, slices: None, base: Some(base) }
+    }
+
+    /// Three layers: `request` over borrowed `slices` over `base`. The
+    /// decode loop feeds its cache tensors through `slices` so no step
+    /// ever copies the cache into an owned map (keys are borrowed too —
+    /// the cache manager interns its feed names once).
+    pub fn layered_slices(
+        request: &'a HashMap<String, Vec<f32>>,
+        slices: &'a HashMap<&'a str, &'a [f32]>,
+        base: &'a HashMap<String, Vec<f32>>,
+    ) -> Self {
+        Feeds { request, slices: Some(slices), base: Some(base) }
     }
 
     pub fn get(&self, name: &str) -> Option<&'a [f32]> {
         if let Some(v) = self.request.get(name) {
             return Some(v.as_slice());
         }
+        if let Some(&s) = self.slices.and_then(|m| m.get(name)) {
+            return Some(s);
+        }
         self.base.and_then(|b| b.get(name)).map(|v| v.as_slice())
+    }
+}
+
+/// Where one graph output should go after execution. `Owned` materializes
+/// a [`Tensor`] (the historical behavior); `Into` writes the output
+/// straight into a caller-provided buffer (the decode loop hands its
+/// KV-cache rows and reusable logits scratch, so steady-state decoding
+/// allocates nothing per token); `Discard` skips the copy-out entirely
+/// (e.g. the full-resequence path ignoring the prefill graph's cache
+/// outputs).
+#[derive(Debug)]
+pub enum OutputSink<'o> {
+    Owned,
+    Into(&'o mut [f32]),
+    Discard,
+}
+
+impl OutputSink<'_> {
+    /// One `Owned` sink per graph output (the historical behavior).
+    pub fn owned(n: usize) -> Vec<OutputSink<'static>> {
+        (0..n).map(|_| OutputSink::Owned).collect()
+    }
+
+    /// Deliver `data` (an output's final value) according to the sink.
+    pub(crate) fn deliver(
+        &mut self,
+        shape: &crate::compiler::ir::Shape,
+        data: &[f32],
+    ) -> Option<Tensor> {
+        match self {
+            OutputSink::Owned => Some(Tensor { shape: shape.clone(), data: data.to_vec() }),
+            OutputSink::Into(buf) => {
+                assert_eq!(buf.len(), data.len(), "output sink length mismatch");
+                buf.copy_from_slice(data);
+                None
+            }
+            OutputSink::Discard => None,
+        }
     }
 }
 

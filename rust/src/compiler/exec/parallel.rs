@@ -44,7 +44,9 @@ use super::plan::{
     LayernormPattern, ScheduleChoices, SoftmaxPattern,
 };
 use super::tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
-use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, QuantizedWeights};
+use super::{
+    leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights,
+};
 use crate::compiler::codegen::tape::{
     compile_block, compile_matmul_epilogue, BlockTape, MatmulEpilogueTape,
 };
@@ -173,6 +175,41 @@ pub fn execute_prepared(
     threads: usize,
     quant: Option<&QuantizedWeights>,
 ) -> Result<(Vec<Tensor>, ExecStats), ExecError> {
+    let mut sinks = OutputSink::owned(g.outputs.len());
+    let (outs, stats) =
+        execute_prepared_sinks(g, plan, prep, feeds, schedules, threads, quant, &mut sinks)?;
+    Ok((outs.into_iter().map(|t| t.expect("owned sink")).collect(), stats))
+}
+
+/// As [`execute_prepared`], delivering each graph output through its
+/// [`OutputSink`] instead of always materializing owned tensors: `Into`
+/// sinks receive the output bytes directly from the arena slab (one
+/// bounded copy, no allocation — how the decode loop lands appended
+/// KV-cache rows and logits in caller-owned buffers every token), and
+/// `Discard` sinks skip the copy-out entirely. Sink delivery happens
+/// after the final wave barrier, so `Into` buffers may alias storage that
+/// feeds borrowed *during* execution only if the caller guarantees the
+/// regions are disjoint.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_prepared_sinks(
+    g: &Graph,
+    plan: &FusionPlan,
+    prep: &PreparedExec,
+    feeds: &Feeds<'_>,
+    schedules: &ScheduleChoices,
+    threads: usize,
+    quant: Option<&QuantizedWeights>,
+    sinks: &mut [OutputSink<'_>],
+) -> Result<(Vec<Option<Tensor>>, ExecStats), ExecError> {
+    // Sinks are program-constructed (not request data), so mismatches are
+    // programmer errors and panic — but panic HERE, before the slab is
+    // checked out or any thread spawned, never mid-execution.
+    assert_eq!(sinks.len(), g.outputs.len(), "one sink per graph output");
+    for (&o, sink) in g.outputs.iter().zip(sinks.iter()) {
+        if let OutputSink::Into(buf) = sink {
+            assert_eq!(buf.len(), g.nodes[o].shape.numel(), "sink buffer != output numel");
+        }
+    }
     let threads = threads.max(1);
 
     // Validate + borrow leaves up front: a malformed request fails here,
@@ -257,18 +294,17 @@ pub fn execute_prepared(
     let outputs = g
         .outputs
         .iter()
-        .map(|&o| {
+        .zip(sinks)
+        .map(|(&o, sink)| {
+            let shape = &g.nodes[o].shape;
             if let Some(lv) = &leaf[o] {
-                return Tensor {
-                    shape: g.nodes[o].shape.clone(),
-                    data: lv.as_slice().to_vec(),
-                };
+                return sink.deliver(shape, lv.as_slice());
             }
             let r = arena.regions[&o];
             // SAFETY: every writer joined at its wave barrier; graph
             // outputs are never freed, so the region still holds `o`.
-            let data = unsafe { shared.read(r.offset, r.len) }.to_vec();
-            Tensor { shape: g.nodes[o].shape.clone(), data }
+            let data = unsafe { shared.read(r.offset, r.len) };
+            sink.deliver(shape, data)
         })
         .collect();
     prep.slab_pool.give_back(slab);
@@ -760,6 +796,42 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out[0].data, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn output_sinks_and_sliced_feeds() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let b = g.input("b", &[4], DType::F32);
+        let o = g.add(a, b);
+        g.mark_output(a); // leaf output through a sink
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let prep = PreparedExec::new(&g, &plan);
+
+        let mut request = HashMap::new();
+        request.insert("a".to_string(), vec![1.0f32; 4]);
+        // `b` arrives as a borrowed slice (the decode KV-cache shape).
+        let bdata = vec![2.0f32; 4];
+        let mut slices: HashMap<&str, &[f32]> = HashMap::new();
+        slices.insert("b", &bdata);
+        let base = HashMap::new();
+
+        let mut sum = vec![0.0f32; 4];
+        let mut sinks = vec![OutputSink::Discard, OutputSink::Into(&mut sum)];
+        let (outs, _) = execute_prepared_sinks(
+            &g,
+            &plan,
+            &prep,
+            &Feeds::layered_slices(&request, &slices, &base),
+            &HashMap::new(),
+            1,
+            None,
+            &mut sinks,
+        )
+        .unwrap();
+        assert!(outs[0].is_none() && outs[1].is_none(), "no owned tensors requested");
+        assert_eq!(sum, vec![3.0; 4], "Into sink receives the output bytes");
     }
 
     #[test]

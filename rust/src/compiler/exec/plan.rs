@@ -23,7 +23,7 @@ use std::collections::HashMap;
 
 use super::interp::apply_op;
 use super::tensor::{matmul_i8, Tensor, View};
-use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, QuantizedWeights};
+use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights};
 use crate::compiler::codegen::tape::{compile_block, compile_matmul_epilogue};
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId, Op, Shape};
@@ -52,6 +52,32 @@ pub fn execute_plan_with(
     schedules: &ScheduleChoices,
     quant: Option<&QuantizedWeights>,
 ) -> Result<Vec<Tensor>, ExecError> {
+    let mut sinks = OutputSink::owned(g.outputs.len());
+    let outs = execute_plan_sinks(g, plan, feeds, schedules, quant, &mut sinks)?;
+    Ok(outs.into_iter().map(|t| t.expect("owned sink")).collect())
+}
+
+/// As [`execute_plan_with`], delivering each graph output through its
+/// [`OutputSink`]: `Owned` entries come back as tensors, `Into` entries
+/// are written to the caller's buffer (`None` in the result), `Discard`
+/// entries are dropped. This is how the decode loop threads the step
+/// graph's appended KV-cache rows back without per-token allocations.
+pub fn execute_plan_sinks(
+    g: &Graph,
+    plan: &FusionPlan,
+    feeds: &Feeds<'_>,
+    schedules: &ScheduleChoices,
+    quant: Option<&QuantizedWeights>,
+    sinks: &mut [OutputSink<'_>],
+) -> Result<Vec<Option<Tensor>>, ExecError> {
+    // Sink mismatches are programmer errors (panic up front, before any
+    // work) — unlike feeds, which are request data and error typed.
+    assert_eq!(sinks.len(), g.outputs.len(), "one sink per graph output");
+    for (&o, sink) in g.outputs.iter().zip(sinks.iter()) {
+        if let OutputSink::Into(buf) = sink {
+            assert_eq!(buf.len(), g.nodes[o].shape.numel(), "sink buffer != output numel");
+        }
+    }
     // Validate + borrow leaves up front (typed errors before any work).
     let mut leaf: Vec<Option<LeafValue>> = vec![None; g.nodes.len()];
     for (id, node) in g.nodes.iter().enumerate() {
@@ -69,9 +95,13 @@ pub fn execute_plan_with(
     Ok(g
         .outputs
         .iter()
-        .map(|&o| match &leaf[o] {
-            Some(lv) => Tensor { shape: g.nodes[o].shape.clone(), data: lv.as_slice().to_vec() },
-            None => vals[&o].clone(),
+        .zip(sinks)
+        .map(|(&o, sink)| {
+            let shape = &g.nodes[o].shape;
+            match &leaf[o] {
+                Some(lv) => sink.deliver(shape, lv.as_slice()),
+                None => sink.deliver(shape, &vals[&o].data),
+            }
         })
         .collect())
 }
@@ -284,6 +314,15 @@ pub fn row_split(shape: &Shape) -> (usize, usize) {
 }
 
 /// Single-pass numerically-stable softmax over contiguous rows.
+///
+/// Arithmetic mirrors the graph's primitive sequence *operation for
+/// operation* (`reduce_max`, `sub`, `exp`, `reduce_sum`, then a true
+/// `div` per element — NOT a multiply by the reciprocal), so a softmax
+/// that runs through this kernel is bitwise identical to one that runs
+/// through the per-node fallback or a tape. The decode subsystem's
+/// KV-cached == full-resequence contract relies on this: the two decode
+/// graphs fuse differently, so corresponding softmaxes may take
+/// different kernel paths and must still agree bit for bit.
 pub fn softmax_rows(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(out.len(), rows * cols);
@@ -296,9 +335,8 @@ pub fn softmax_rows(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
             *o = (v - m).exp();
             total += *o;
         }
-        let inv = 1.0 / total;
         for o in orow.iter_mut() {
-            *o *= inv;
+            *o /= total;
         }
     }
 }
@@ -369,6 +407,11 @@ pub fn match_layernorm(g: &Graph, block: &FusedBlock) -> Option<LayernormPattern
 
 /// Two-pass layernorm over contiguous rows; gamma/beta broadcast by
 /// modulo (handles [cols] and scalar parameters alike).
+///
+/// Arithmetic mirrors `Graph::layernorm`'s primitive sequence exactly —
+/// sums are *multiplied by the precomputed `1/n`* (the graph's `inv_n`
+/// constant), never divided by `n` — so matched-kernel and per-node
+/// execution of the same layernorm agree bitwise (see [`softmax_rows`]).
 pub fn layernorm_rows(
     x: &[f32],
     gamma: &[f32],
@@ -380,10 +423,11 @@ pub fn layernorm_rows(
 ) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(out.len(), rows * cols);
+    let inv_n = 1.0 / cols as f32;
     for r in 0..rows {
         let row = &x[r * cols..(r + 1) * cols];
-        let mean: f32 = row.iter().sum::<f32>() / cols as f32;
-        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let mean: f32 = row.iter().sum::<f32>() * inv_n;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() * inv_n;
         let rs = 1.0 / (var + eps).sqrt();
         let orow = &mut out[r * cols..(r + 1) * cols];
         for j in 0..cols {

@@ -22,7 +22,7 @@ use std::collections::HashMap;
 use std::sync::OnceLock;
 
 use exec::plan::ScheduleChoices;
-use exec::{Feeds, PreparedExec, QuantizedWeights};
+use exec::{Feeds, OutputSink, PreparedExec, QuantizedWeights};
 use fusion::{FusionConfig, FusionPlan};
 use ir::Graph;
 use passes::{PassManager, PassStat};
@@ -159,6 +159,32 @@ impl Compiled {
             &self.schedules,
             threads,
             quant,
+        )
+    }
+
+    /// As [`Compiled::run_parallel_with`], delivering each graph output
+    /// through its [`OutputSink`] — `Into` sinks land output bytes in
+    /// caller-owned buffers (no allocation), `Discard` sinks skip the
+    /// copy-out. The decode subsystem's per-token path: logits go to a
+    /// reusable scratch row, appended KV rows to the cache manager's
+    /// staging, cache feeds come in borrowed — no tensor allocations
+    /// per step.
+    pub fn run_parallel_sinks(
+        &self,
+        feeds: &Feeds<'_>,
+        threads: usize,
+        quant: Option<&QuantizedWeights>,
+        sinks: &mut [OutputSink<'_>],
+    ) -> Result<(Vec<Option<exec::Tensor>>, exec::ExecStats), exec::ExecError> {
+        exec::parallel::execute_prepared_sinks(
+            &self.graph,
+            &self.plan,
+            self.prepared(),
+            feeds,
+            &self.schedules,
+            threads,
+            quant,
+            sinks,
         )
     }
 

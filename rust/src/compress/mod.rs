@@ -48,7 +48,7 @@ pub mod quant;
 use std::collections::HashMap;
 
 use crate::compiler::ir::Graph;
-use crate::model::{build_encoder, BertConfig};
+use crate::model::{build_encoder_with, BertConfig, LayerDims};
 
 pub use prune::{LayerPrune, PruneSpec};
 pub use quant::{quant_sites, QuantSite, QuantSkip, QuantSummary};
@@ -112,6 +112,43 @@ impl CompressionReport {
     }
 }
 
+/// Apply the spec's structured pruning to a weight map and return the
+/// per-layer dims plus the shared report accounting (params before/after,
+/// kept indices) — the graph-builder-agnostic half of compression, used
+/// by both the encoder engines ([`compress_encoder`]) and the causal
+/// decode engine (which builds prefill AND step graphs at the returned
+/// dims). `quantized_params` is left 0: it depends on which graph's
+/// quant sites the caller ends up compiling.
+pub fn prune_model(
+    cfg: &BertConfig,
+    weights: &mut HashMap<String, Vec<f32>>,
+    spec: &CompressionConfig,
+) -> (Vec<LayerDims>, CompressionReport) {
+    let params_before: usize = weights.values().map(|v| v.len()).sum();
+    let layers = match &spec.prune {
+        Some(p) => {
+            let plan = prune::plan_prune(cfg, weights, p);
+            prune::prune_weights(cfg, weights, &plan);
+            plan
+        }
+        None => Vec::new(),
+    };
+    let dims: Vec<LayerDims> = if layers.is_empty() {
+        vec![LayerDims::of(cfg); cfg.layers]
+    } else {
+        layers.iter().map(|lp| lp.dims()).collect()
+    };
+    let params_after: usize = weights.values().map(|v| v.len()).sum();
+    let report = CompressionReport {
+        params_before,
+        params_after,
+        quantized_params: 0,
+        layers,
+        int8: spec.int8,
+    };
+    (dims, report)
+}
+
 /// The compression front door: apply the spec's structured pruning to an
 /// encoder-family model, mutating `weights` in place (head/FFN slices
 /// removed) and returning the pruned encoder graph whose tensors have the
@@ -125,28 +162,15 @@ pub fn compress_encoder(
     weights: &mut HashMap<String, Vec<f32>>,
     spec: &CompressionConfig,
 ) -> (Graph, CompressionReport) {
-    let params_before: usize = weights.values().map(|v| v.len()).sum();
-    let (graph, layers) = match &spec.prune {
-        Some(p) => prune::prune_encoder(cfg, weights, p),
-        None => (build_encoder(cfg), Vec::new()),
-    };
-    let params_after: usize = weights.values().map(|v| v.len()).sum();
-    let quantized_params: usize = if spec.int8 {
-        quant::quant_sites(&graph)
+    let (dims, mut report) = prune_model(cfg, weights, spec);
+    let graph = build_encoder_with(cfg, &dims);
+    if spec.int8 {
+        report.quantized_params = quant::quant_sites(&graph)
             .iter()
             .filter_map(|s| weights.get(&s.name))
             .map(|v| v.len())
-            .sum()
-    } else {
-        0
-    };
-    let report = CompressionReport {
-        params_before,
-        params_after,
-        quantized_params,
-        layers,
-        int8: spec.int8,
-    };
+            .sum();
+    }
     (graph, report)
 }
 
@@ -154,6 +178,7 @@ pub fn compress_encoder(
 mod tests {
     use super::*;
     use crate::compiler::ir::Op;
+    use crate::model::build_encoder;
     use crate::serving::init_weights;
 
     fn tiny_cfg() -> BertConfig {

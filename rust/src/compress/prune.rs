@@ -203,15 +203,17 @@ pub fn prune_weights(
 
 /// The full structured-pruning transform: plan from magnitudes, slice the
 /// weights, and rebuild the encoder graph at the pruned dimensions.
+/// (A thin wrapper over [`crate::compress::prune_model`] — the one prune
+/// pipeline shared with the decode engine — specialized to the encoder
+/// builder.)
 pub fn prune_encoder(
     cfg: &BertConfig,
     weights: &mut HashMap<String, Vec<f32>>,
     spec: &PruneSpec,
 ) -> (Graph, Vec<LayerPrune>) {
-    let plan = plan_prune(cfg, weights, spec);
-    prune_weights(cfg, weights, &plan);
-    let dims: Vec<LayerDims> = plan.iter().map(|lp| lp.dims()).collect();
-    (build_encoder_with(cfg, &dims), plan)
+    let comp = super::CompressionConfig { prune: Some(*spec), int8: false };
+    let (dims, report) = super::prune_model(cfg, weights, &comp);
+    (build_encoder_with(cfg, &dims), report.layers)
 }
 
 #[cfg(test)]

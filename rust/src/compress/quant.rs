@@ -154,6 +154,12 @@ pub fn quantize_sites(
 /// at a small accuracy cost vs dynamic (bounded by the calibration
 /// coverage; `tests/compress_differential.rs` checks both stay within
 /// tolerance of fp32).
+///
+/// Calibration ACCUMULATES: an already-installed scale is only ever
+/// widened (max), never narrowed, so callers may stream warmup samples
+/// through one feed map across several calls instead of materializing
+/// every sample's full feed set at once (the serving engines' warmup
+/// path does exactly that — weights are large, samples are many).
 pub fn calibrate_activations(
     g: &Graph,
     sites: &[QuantSite],
@@ -175,7 +181,11 @@ pub fn calibrate_activations(
     }
     for (node, m) in absmax {
         if m > 0.0 {
-            qw.act_scale.insert(node, m / 127.0);
+            let s = m / 127.0;
+            qw.act_scale
+                .entry(node)
+                .and_modify(|e| *e = e.max(s))
+                .or_insert(s);
         }
     }
     Ok(())

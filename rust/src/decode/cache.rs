@@ -1,0 +1,209 @@
+//! Slab-backed KV-cache storage for incremental decoding.
+//!
+//! One [`KvCache`] holds every layer's K and V projections for one
+//! in-flight generation request, in a single flat [`Slab`] checked out of
+//! the decoder's [`SlabPool`] — steady-state serving performs no large
+//! allocation per request and allocates no buffers at all per token.
+//!
+//! ## Layout
+//!
+//! Regions are laid out `k0, v0, k1, v1, ...`; layer `l`'s K region is a
+//! position-major `[seq, aw_l]` matrix (`aw_l` = the layer's possibly
+//! pruned attention width), so:
+//!
+//! * feeding the step graph is zero-copy (`feed_slices` hands the whole
+//!   region to [`crate::compiler::exec::Feeds`] as a borrowed slice);
+//! * appending position `p`'s rows is one contiguous `aw_l`-element copy
+//!   per tensor;
+//! * the prefill graph's cache outputs (`[seq, aw_l]` K/V projections)
+//!   sink straight into the regions ([`KvCache::cache_sinks`]) with no
+//!   intermediate tensor.
+//!
+//! ## The zero-row invariant
+//!
+//! Before the step for position `p` runs, row `p` of every K and V region
+//! must be all zeros ([`KvCache::zero_row`]): the step graph splices the
+//! freshly computed K/V row in arithmetically (`+ onehot_p * self_score`,
+//! `+ probs[p] * v_new`), relying on the cache side contributing exact
+//! `q · 0 = 0` / `probs[p] · 0 = 0` at row `p`. Rows beyond `p` may hold
+//! stale prefill garbage — they are masked with `NEG_MASK`, and
+//! `exp(-1e4 + x)` underflows to exactly `0.0`, so they never reach the
+//! output bits.
+
+use std::collections::HashMap;
+
+use crate::util::pool::{Slab, SlabPool};
+
+/// Per-request KV storage (see module docs for layout and invariants).
+pub struct KvCache {
+    slab: Slab,
+    seq: usize,
+    /// Per-layer attention width (kept heads x head_dim).
+    aws: Vec<usize>,
+    /// Per-layer (k_offset, v_offset) into the slab, in elements.
+    offsets: Vec<(usize, usize)>,
+    /// Interned feed names, `(k_cache, v_cache)` per layer — built once
+    /// so the per-step feed map borrows `&str` keys instead of
+    /// allocating 2·layers strings per token.
+    names: Vec<(String, String)>,
+    total: usize,
+    /// Valid prefix: rows `0..len` hold real K/V projections.
+    pub len: usize,
+}
+
+impl KvCache {
+    /// Check a cache out of `pool` (recycled when possible), preallocated
+    /// to `seq` rows per layer. Contents start undefined — prefill
+    /// overwrites every row, and the zero-row invariant is maintained
+    /// per step, so no bulk zeroing is needed.
+    pub fn new(seq: usize, aws: Vec<usize>, pool: &SlabPool) -> KvCache {
+        let mut offsets = Vec::with_capacity(aws.len());
+        let mut off = 0usize;
+        for &aw in &aws {
+            offsets.push((off, off + seq * aw));
+            off += 2 * seq * aw;
+        }
+        let names = (0..aws.len())
+            .map(|l| (format!("layer{l}/k_cache"), format!("layer{l}/v_cache")))
+            .collect();
+        let slab = pool.checkout(off);
+        KvCache { slab, seq, aws, offsets, names, total: off, len: 0 }
+    }
+
+    /// Return the backing slab to `pool` for the next request.
+    pub fn into_pool(self, pool: &SlabPool) {
+        pool.give_back(self.slab);
+    }
+
+    pub fn layers(&self) -> usize {
+        self.aws.len()
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Elements of staging one appended row set needs (`Σ_l 2·aw_l`).
+    pub fn row_elems(&self) -> usize {
+        self.aws.iter().map(|&aw| 2 * aw).sum()
+    }
+
+    /// Zero row `p` of every K and V region — the step graph's
+    /// self-splice precondition (see module docs).
+    pub fn zero_row(&mut self, p: usize) {
+        assert!(p < self.seq, "cache row {p} out of range {}", self.seq);
+        let data = self.slab.data_mut();
+        for (l, &aw) in self.aws.iter().enumerate() {
+            let (ko, vo) = self.offsets[l];
+            data[ko + p * aw..ko + (p + 1) * aw].fill(0.0);
+            data[vo + p * aw..vo + (p + 1) * aw].fill(0.0);
+        }
+    }
+
+    /// Borrowed per-layer cache feeds (`layer{l}/k_cache` / `v_cache`)
+    /// for [`crate::compiler::exec::Feeds::layered_slices`] — zero-copy,
+    /// with interned `&str` keys (no strings allocated per step).
+    pub fn feed_slices(&self) -> HashMap<&str, &[f32]> {
+        let data = self.slab.data();
+        let mut m = HashMap::with_capacity(2 * self.aws.len());
+        for (l, &aw) in self.aws.iter().enumerate() {
+            let (ko, vo) = self.offsets[l];
+            m.insert(self.names[l].0.as_str(), &data[ko..ko + self.seq * aw]);
+            m.insert(self.names[l].1.as_str(), &data[vo..vo + self.seq * aw]);
+        }
+        m
+    }
+
+    /// Exclusive region slices in prefill-output order (`k0, v0, k1,
+    /// v1, ...`) — the prefill graph's cache outputs sink directly into
+    /// these, so loading the cache costs zero copies beyond the
+    /// executor's single slab-to-sink write.
+    pub fn cache_sinks(&mut self) -> Vec<&mut [f32]> {
+        let seq = self.seq;
+        let mut rest = &mut self.slab.data_mut()[..self.total];
+        let mut sinks = Vec::with_capacity(2 * self.aws.len());
+        for &aw in &self.aws {
+            let (k, r) = rest.split_at_mut(seq * aw);
+            let (v, r) = r.split_at_mut(seq * aw);
+            sinks.push(k);
+            sinks.push(v);
+            rest = r;
+        }
+        sinks
+    }
+
+    /// Copy one staged row set (layout `k_row_0, v_row_0, k_row_1, ...`,
+    /// as produced by the step graph's sinks) into row `p` and extend the
+    /// valid prefix.
+    pub fn append_row(&mut self, p: usize, staged: &[f32]) {
+        assert!(p < self.seq, "cache row {p} out of range {}", self.seq);
+        assert_eq!(staged.len(), self.row_elems(), "staged row set size");
+        let data = self.slab.data_mut();
+        let mut s = 0usize;
+        for (l, &aw) in self.aws.iter().enumerate() {
+            let (ko, vo) = self.offsets[l];
+            data[ko + p * aw..ko + (p + 1) * aw].copy_from_slice(&staged[s..s + aw]);
+            s += aw;
+            data[vo + p * aw..vo + (p + 1) * aw].copy_from_slice(&staged[s..s + aw]);
+            s += aw;
+        }
+        self.len = self.len.max(p + 1);
+    }
+
+    /// Read one cached row (tests and debugging).
+    pub fn row(&self, layer: usize, v: bool, p: usize) -> &[f32] {
+        let aw = self.aws[layer];
+        let (ko, vo) = self.offsets[layer];
+        let base = if v { vo } else { ko };
+        &self.slab.data()[base + p * aw..base + (p + 1) * aw]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_feeds_and_appends() {
+        let pool = SlabPool::new();
+        let mut c = KvCache::new(4, vec![6, 2], &pool);
+        assert_eq!(c.layers(), 2);
+        assert_eq!(c.row_elems(), 2 * 6 + 2 * 2);
+
+        // Prefill-style sinks cover the full regions, in k0,v0,k1,v1 order.
+        let lens: Vec<usize> = c.cache_sinks().iter().map(|s| s.len()).collect();
+        assert_eq!(lens, vec![24, 24, 8, 8]);
+        for s in c.cache_sinks() {
+            s.fill(7.0); // simulate prefill garbage everywhere
+        }
+
+        c.zero_row(2);
+        assert!(c.row(0, false, 2).iter().all(|&x| x == 0.0));
+        assert!(c.row(1, true, 2).iter().all(|&x| x == 0.0));
+        assert!(c.row(0, false, 1).iter().all(|&x| x == 7.0), "other rows untouched");
+
+        let staged: Vec<f32> = (0..c.row_elems()).map(|i| i as f32).collect();
+        c.append_row(2, &staged);
+        assert_eq!(c.row(0, false, 2), &staged[..6]);
+        assert_eq!(c.row(0, true, 2), &staged[6..12]);
+        assert_eq!(c.row(1, false, 2), &staged[12..14]);
+        assert_eq!(c.row(1, true, 2), &staged[14..16]);
+        assert_eq!(c.len, 3);
+
+        let feeds = c.feed_slices();
+        assert_eq!(feeds["layer0/k_cache"].len(), 24);
+        assert_eq!(feeds["layer1/v_cache"].len(), 8);
+        assert_eq!(feeds["layer1/v_cache"][2 * 2], 14.0);
+    }
+
+    #[test]
+    fn pool_recycles_cache_slabs() {
+        let pool = SlabPool::new();
+        let c = KvCache::new(8, vec![4], &pool);
+        c.into_pool(&pool);
+        assert_eq!(pool.len(), 1);
+        let c2 = KvCache::new(8, vec![4], &pool);
+        assert_eq!(pool.len(), 0, "second request reuses the parked slab");
+        c2.into_pool(&pool);
+    }
+}

@@ -1,0 +1,434 @@
+//! KV-cached incremental decoding — real-time text generation on the
+//! native executor (the paper's Fig. 1 right demo at its ~45 ms/token
+//! real-time target).
+//!
+//! The serving layer's historical decode loop re-ran the full
+//! static-shape sequence for every generated token, so each token paid a
+//! whole-sequence forward and recomputed every already-attended
+//! position's K/V state. This subsystem splits decoding into:
+//!
+//! * a **prefill** graph ([`crate::model::build_causal_lm_with`] with
+//!   `emit_cache`): the prompt runs once; per-layer K/V projections come
+//!   out as extra outputs and land *directly* in a [`KvCache`] via
+//!   executor output sinks ([`crate::compiler::exec::OutputSink`]);
+//! * a **step** graph ([`crate::model::build_decode_step_with`]): a
+//!   single query position attends over the `[seq, aw]` cache feeds
+//!   (borrowed zero-copy through `Feeds::layered_slices`), emitting the
+//!   next-token logits row plus the appended K/V rows. Per-token work is
+//!   O(seq·hidden) regardless of how many tokens were generated before.
+//!
+//! ## Numerics contract
+//!
+//! KV-cached decode is **bitwise identical** to full-resequence decode
+//! at matched seeds (`tests/decode_differential.rs`), across thread
+//! counts and under pruning + INT8. The load-bearing pieces:
+//!
+//! * the decode graphs use *position-true causal attention* (real head
+//!   splits; see `crate::model`), so position `p` is a row-wise function
+//!   of tokens `0..=p`;
+//! * `NEG_MASK`-masked scores underflow `exp` to exactly `0.0`, and the
+//!   interpreter's matmul skips zero operands, so masked/garbage cache
+//!   rows never touch an output bit;
+//! * the step graph splices the current position's K/V in
+//!   arithmetically against zeroed cache rows (see [`cache`]);
+//! * softmax/layernorm kernels mirror the graph-primitive arithmetic
+//!   (see `exec::plan`), so full-vs-step fusion differences cannot
+//!   change bits.
+//!
+//! The fused INT8 matmul-epilogue tape keeps firing inside the step
+//! graph (its Q/K/V/FFN projections are ordinary `[1, n]`-domain
+//! matmul+bias blocks); the wo/w2 projections merge with their
+//! downstream layernorm and take the per-node int8 fallback, exactly as
+//! in the full graph (ROADMAP: a fused matmul+layernorm kernel would
+//! cover both).
+
+pub mod cache;
+
+use std::collections::HashMap;
+
+use crate::compiler::exec::{ExecError, ExecStats, Feeds, OutputSink, QuantizedWeights};
+use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::compress::quant::calibrate_activations;
+use crate::compress::CompressionConfig;
+use crate::device::{plan_latency_compressed, DeviceProfile, Latency};
+use crate::model::{build_causal_lm_with, build_decode_step_with, BertConfig, LayerDims};
+use crate::util::pool::SlabPool;
+
+pub use cache::KvCache;
+
+/// Additive attention-mask value for masked key positions. Finite (so
+/// fully-masked softmax rows stay NaN-free) yet large enough that
+/// `exp(NEG_MASK + x - max)` underflows to exactly `0.0f32` for every
+/// realistic score `x` — the bitwise decode contract depends on that.
+pub const NEG_MASK: f32 = -1.0e4;
+
+/// How a generation engine decodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeMode {
+    /// Re-run the full static-shape sequence per token (the reference
+    /// path; per-token cost = one whole-sequence forward).
+    FullResequence,
+    /// Prefill once, then one single-position step per token.
+    #[default]
+    KvCache,
+}
+
+/// The `[s, s]` additive causal-mask feed: row `i` attends keys `j <= i`.
+/// Static across the whole decode (padding needs no extra masking: a
+/// causal query row only ever attends rows at or before itself).
+pub fn causal_mask_feed(seq: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; seq * seq];
+    for i in 0..seq {
+        for j in (i + 1)..seq {
+            m[i * seq + j] = NEG_MASK;
+        }
+    }
+    m
+}
+
+/// Fill the step graph's `[s]` key mask for query position `p`
+/// (keys `0..=p` attended).
+pub fn step_mask_feed(p: usize, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = if j <= p { 0.0 } else { NEG_MASK };
+    }
+}
+
+/// Device-simulated cost of ONE KV-cached decode step at the given
+/// (possibly pruned) dims — what NAS phase 2 prices when it targets
+/// per-token generation latency instead of full-sequence encoding.
+pub fn step_latency(
+    cfg: &BertConfig,
+    dims: &[LayerDims],
+    dev: &DeviceProfile,
+    int8: bool,
+) -> Latency {
+    let g = build_decode_step_with(cfg, dims);
+    let c = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    plan_latency_compressed(&c.graph, &c.plan, dev, int8)
+}
+
+/// As [`step_latency`], at the config's full dims.
+pub fn step_latency_dense(cfg: &BertConfig, dev: &DeviceProfile, int8: bool) -> Latency {
+    step_latency(cfg, &vec![LayerDims::of(cfg); cfg.layers], dev, int8)
+}
+
+/// Compiled decode artifacts for one model: the prefill graph (also the
+/// full-resequence reference), the step graph, their INT8 side tables,
+/// and the recycled KV-slab pool. Weights stay with the owning engine —
+/// the decoder only borrows them per call.
+pub struct Decoder {
+    pub prefill: Compiled,
+    pub step: Compiled,
+    pub cfg: BertConfig,
+    pub dims: Vec<LayerDims>,
+    quant_prefill: Option<QuantizedWeights>,
+    quant_step: Option<QuantizedWeights>,
+    pool: SlabPool,
+    causal_mask: Vec<f32>,
+}
+
+impl Decoder {
+    /// Compile the prefill + step graphs at `dims` (pass the pruned dims
+    /// for a compressed model — the weights must already be pruned to
+    /// match). `compression.int8` records the quantizable sites; call
+    /// [`Decoder::quantize`] afterwards to build the tables.
+    pub fn new(cfg: BertConfig, dims: Vec<LayerDims>, compression: CompressionConfig) -> Decoder {
+        let opts = CompileOptions { model_only_tuning: true, compression, ..Default::default() };
+        let prefill = compile(&build_causal_lm_with(&cfg, &dims, true), &opts);
+        let step = compile(&build_decode_step_with(&cfg, &dims), &opts);
+        let causal_mask = causal_mask_feed(cfg.seq);
+        Decoder {
+            prefill,
+            step,
+            cfg,
+            dims,
+            quant_prefill: None,
+            quant_step: None,
+            pool: SlabPool::new(),
+            causal_mask,
+        }
+    }
+
+    /// Build both graphs' INT8 weight tables from one named weight map
+    /// (the same per-channel quantization lands in both, keyed by each
+    /// graph's own node ids).
+    pub fn quantize(&mut self, weights: &HashMap<String, Vec<f32>>) {
+        self.quant_prefill = Some(self.prefill.quantize_weights(weights));
+        self.quant_step = Some(self.step.quantize_weights(weights));
+    }
+
+    /// Warmup calibration: run the fp32 reference on `prompt_feeds`
+    /// (padded `input_ids` vectors), record absmax at every quantized
+    /// matmul's input, and install static activation scales in BOTH
+    /// graphs' tables — matched by weight name, so KV-cached and
+    /// full-resequence decode stay bitwise identical after calibration.
+    /// Returns the number of calibrated sites (0 when int8 is off).
+    pub fn calibrate(
+        &mut self,
+        weights: &HashMap<String, Vec<f32>>,
+        prompt_feeds: &[Vec<f32>],
+    ) -> Result<usize, ExecError> {
+        if self.quant_prefill.is_none() || prompt_feeds.is_empty() {
+            return Ok(0);
+        }
+        // ONE merged feed map streamed across samples (only `input_ids`
+        // changes per prompt; `calibrate_activations` accumulates by
+        // max) — no per-sample clone of the weight map.
+        let mut feeds = weights.clone();
+        feeds.insert("causal_mask".to_string(), self.causal_mask.clone());
+        for ids in prompt_feeds {
+            feeds.insert("input_ids".to_string(), ids.clone());
+            let qp = self.quant_prefill.as_mut().expect("checked above");
+            calibrate_activations(
+                &self.prefill.graph,
+                &self.prefill.quant_sites,
+                qp,
+                std::slice::from_ref(&feeds),
+            )?;
+        }
+        let qp = self.quant_prefill.as_ref().expect("checked above");
+        // Propagate the per-site static scales to the step graph by
+        // weight name (each name quantizes exactly one matmul per graph).
+        let by_name: HashMap<&str, f32> = self
+            .prefill
+            .quant_sites
+            .iter()
+            .filter_map(|s| qp.act_scale.get(&s.matmul).map(|&v| (s.name.as_str(), v)))
+            .collect();
+        let qs = self.quant_step.as_mut().expect("quantize() builds both");
+        for site in &self.step.quant_sites {
+            if let Some(&scale) = by_name.get(site.name.as_str()) {
+                qs.act_scale.insert(site.matmul, scale);
+            }
+        }
+        Ok(by_name.len())
+    }
+
+    /// Calibrated static activation scales installed (per graph site).
+    pub fn calibrated_sites(&self) -> usize {
+        self.quant_prefill.as_ref().map_or(0, |q| q.act_scale.len())
+    }
+
+    /// One full-resequence forward (the uncached reference path): run the
+    /// prefill graph on `request` (must hold the padded `input_ids`),
+    /// discard the cache outputs, and write the `[s, vocab]` logits into
+    /// `logits`.
+    pub fn reseq_forward(
+        &self,
+        request: &HashMap<String, Vec<f32>>,
+        weights: &HashMap<String, Vec<f32>>,
+        threads: usize,
+        logits: &mut [f32],
+    ) -> Result<ExecStats, ExecError> {
+        let slices = self.mask_slices();
+        let mut sinks: Vec<OutputSink> = Vec::with_capacity(1 + 2 * self.dims.len());
+        sinks.push(OutputSink::Into(logits));
+        for _ in 0..2 * self.dims.len() {
+            sinks.push(OutputSink::Discard);
+        }
+        let feeds = Feeds::layered_slices(request, &slices, weights);
+        self.prefill
+            .run_parallel_sinks(&feeds, threads, self.quant_prefill.as_ref(), &mut sinks)
+            .map(|(_, stats)| stats)
+    }
+
+    /// Start a KV-cached generation session (checks a cache slab out of
+    /// the pool; [`DecodeSession::finish`] returns it).
+    pub fn begin<'a>(
+        &'a self,
+        weights: &'a HashMap<String, Vec<f32>>,
+        threads: usize,
+    ) -> DecodeSession<'a> {
+        let (s, v, h) = (self.cfg.seq, self.cfg.vocab, self.cfg.head_dim());
+        let aws: Vec<usize> = self.dims.iter().map(|d| d.heads * h).collect();
+        let cache = KvCache::new(s, aws, &self.pool);
+        let staging = vec![0.0f32; cache.row_elems()];
+        let mut request = HashMap::new();
+        request.insert("step_ids".to_string(), vec![0.0f32]);
+        request.insert("step_pos".to_string(), vec![0.0f32]);
+        request.insert("step_mask".to_string(), vec![NEG_MASK; s]);
+        request.insert("step_onehot".to_string(), vec![0.0f32; s]);
+        request.insert("input_ids".to_string(), vec![0.0f32; s]);
+        DecodeSession {
+            dec: self,
+            weights,
+            threads,
+            cache,
+            request,
+            logits: vec![0.0f32; s * v],
+            staging,
+            pos: 0,
+            last_stats: None,
+        }
+    }
+
+    /// Borrowed-slice feed layer holding the static causal mask.
+    fn mask_slices(&self) -> HashMap<&str, &[f32]> {
+        let mut m = HashMap::with_capacity(1);
+        m.insert("causal_mask", self.causal_mask.as_slice());
+        m
+    }
+
+    /// Slabs currently parked in the KV pool (observability).
+    pub fn pooled_caches(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+/// One in-flight KV-cached generation: owns the cache, the reusable
+/// request map, and the logits/row staging scratch. After construction,
+/// a session allocates **no tensors or strings per token** — every
+/// buffer (logits, K/V staging, cache regions, feed names) is reused;
+/// the only per-step allocations are the two small lookup/sink tables.
+pub struct DecodeSession<'a> {
+    dec: &'a Decoder,
+    weights: &'a HashMap<String, Vec<f32>>,
+    threads: usize,
+    cache: KvCache,
+    request: HashMap<String, Vec<f32>>,
+    logits: Vec<f32>,
+    staging: Vec<f32>,
+    pos: usize,
+    last_stats: Option<ExecStats>,
+}
+
+impl DecodeSession<'_> {
+    /// Run the prompt once through the prefill graph: logits land in the
+    /// session scratch, per-layer K/V projections land directly in the
+    /// cache. Returns the logits row at the last prompt position.
+    pub fn prefill(&mut self, ids: &[i32]) -> Result<&[f32], ExecError> {
+        let (s, v) = (self.dec.cfg.seq, self.dec.cfg.vocab);
+        assert!(!ids.is_empty() && ids.len() < s, "prompt must fit below seq");
+        let padded = self.request.get_mut("input_ids").expect("session request map");
+        padded.iter_mut().enumerate().for_each(|(i, x)| {
+            *x = ids.get(i).copied().unwrap_or(0) as f32;
+        });
+
+        let slices = self.dec.mask_slices();
+        let mut sinks: Vec<OutputSink> = Vec::with_capacity(1 + 2 * self.cache.layers());
+        sinks.push(OutputSink::Into(&mut self.logits[..s * v]));
+        for region in self.cache.cache_sinks() {
+            sinks.push(OutputSink::Into(region));
+        }
+        let feeds = Feeds::layered_slices(&self.request, &slices, self.weights);
+        let (_, stats) = self.dec.prefill.run_parallel_sinks(
+            &feeds,
+            self.threads,
+            self.dec.quant_prefill.as_ref(),
+            &mut sinks,
+        )?;
+        drop(sinks);
+        self.last_stats = Some(stats);
+        self.cache.len = ids.len();
+        self.pos = ids.len();
+        Ok(&self.logits[(ids.len() - 1) * v..ids.len() * v])
+    }
+
+    /// Decode one token at the current position: zero the cache row,
+    /// run the step graph over borrowed cache feeds, append the fresh
+    /// K/V rows, and return the next-token logits row.
+    pub fn step(&mut self, token: i32) -> Result<&[f32], ExecError> {
+        let (s, v) = (self.dec.cfg.seq, self.dec.cfg.vocab);
+        let p = self.pos;
+        assert!(p > 0, "prefill before stepping");
+        assert!(p < s, "cache full at seq={s}");
+        self.cache.zero_row(p);
+
+        self.request.get_mut("step_ids").expect("session request map")[0] = token as f32;
+        self.request.get_mut("step_pos").expect("session request map")[0] = p as f32;
+        step_mask_feed(p, self.request.get_mut("step_mask").expect("session request map"));
+        let onehot = self.request.get_mut("step_onehot").expect("session request map");
+        onehot.fill(0.0);
+        onehot[p] = 1.0;
+
+        {
+            let slices = self.cache.feed_slices();
+            let mut sinks: Vec<OutputSink> = Vec::with_capacity(1 + 2 * self.cache.layers());
+            sinks.push(OutputSink::Into(&mut self.logits[..v]));
+            let mut rest = &mut self.staging[..];
+            for d in &self.dec.dims {
+                let aw = d.heads * self.dec.cfg.head_dim();
+                let (k, r) = rest.split_at_mut(aw);
+                let (vrow, r) = r.split_at_mut(aw);
+                sinks.push(OutputSink::Into(k));
+                sinks.push(OutputSink::Into(vrow));
+                rest = r;
+            }
+            let feeds = Feeds::layered_slices(&self.request, &slices, self.weights);
+            let (_, stats) = self.dec.step.run_parallel_sinks(
+                &feeds,
+                self.threads,
+                self.dec.quant_step.as_ref(),
+                &mut sinks,
+            )?;
+            self.last_stats = Some(stats);
+        }
+        self.cache.append_row(p, &self.staging);
+        self.pos += 1;
+        Ok(&self.logits[..v])
+    }
+
+    /// Next position to decode (== tokens currently in the cache).
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Executor stats of the most recent prefill/step (per-token work is
+    /// constant by construction — asserted in the differential tests).
+    pub fn last_stats(&self) -> Option<ExecStats> {
+        self.last_stats
+    }
+
+    /// Return the cache slab to the decoder's pool.
+    pub fn finish(self) {
+        self.cache.into_pool(&self.dec.pool);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causal_mask_is_lower_triangular() {
+        let m = causal_mask_feed(3);
+        assert_eq!(m, vec![0.0, NEG_MASK, NEG_MASK, 0.0, 0.0, NEG_MASK, 0.0, 0.0, 0.0]);
+        let mut sm = vec![0.0f32; 3];
+        step_mask_feed(1, &mut sm);
+        assert_eq!(sm, vec![0.0, 0.0, NEG_MASK]);
+    }
+
+    #[test]
+    fn neg_mask_underflows_exp_to_exact_zero() {
+        // The bitwise decode contract: a masked score can never reach the
+        // output bits because exp flushes it to exactly 0.0.
+        assert_eq!((NEG_MASK + 500.0f32).exp(), 0.0);
+        assert_eq!((NEG_MASK - 30.0f32).exp(), 0.0);
+    }
+
+    #[test]
+    fn step_cost_is_independent_of_generated_tokens() {
+        // Device-sim acceptance: one step costs far less than one full
+        // resequence forward, and (being a fixed graph) cannot scale
+        // with how many tokens were generated before.
+        let cfg = BertConfig { vocab: 256, seq: 64, layers: 2, hidden: 64, heads: 4, inter: 128 };
+        let dims = vec![LayerDims::of(&cfg); cfg.layers];
+        let dev = DeviceProfile::s865_cpu();
+        let step = step_latency(&cfg, &dims, &dev, false);
+        let full = {
+            let g = build_causal_lm_with(&cfg, &dims, true);
+            let opts = CompileOptions { model_only_tuning: true, ..Default::default() };
+            let c = compile(&g, &opts);
+            plan_latency_compressed(&c.graph, &c.plan, &dev, false)
+        };
+        assert!(
+            step.flops * 8.0 < full.flops,
+            "step {} flops !<< full {} flops",
+            step.flops,
+            full.flops
+        );
+        let step8 = step_latency(&cfg, &dims, &dev, true);
+        assert!(step8.total_s <= step.total_s, "int8 must not cost more");
+    }
+}

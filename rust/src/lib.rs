@@ -20,6 +20,7 @@
 
 pub mod compiler;
 pub mod compress;
+pub mod decode;
 pub mod device;
 pub mod model;
 pub mod nas;
@@ -30,4 +31,4 @@ pub mod tokenizer;
 pub mod train;
 pub mod util;
 
-pub use reports::{bench_table1, bench_table2, table1_rows};
+pub use reports::{bench_table1, bench_table2, bench_textgen, table1_rows};

@@ -34,7 +34,16 @@ fn main() {
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     let args = Args::parse(
         argv.into_iter(),
-        &["no-fusion", "accuracy-only", "joint", "verbose", "int8", "compress"],
+        &[
+            "no-fusion",
+            "accuracy-only",
+            "joint",
+            "verbose",
+            "int8",
+            "compress",
+            "decode-step",
+            "full-reseq",
+        ],
     );
 
     let result = match cmd.as_str() {
@@ -42,6 +51,7 @@ fn main() {
         "compile" => cmd_compile(&args),
         "table1" => cmd_table1(),
         "table2" => cmd_table2(),
+        "textgen" => cmd_textgen(),
         "serve-qa" => cmd_serve_qa(&args),
         "serve-gen" => cmd_serve_gen(&args),
         "finetune" => cmd_finetune(&args),
@@ -63,13 +73,15 @@ fn print_help() {
          usage: canao <command> [--flags]\n\
          \n\
          commands:\n\
-         \x20 search     compiler-aware NAS    [--target-ms N --device cpu|gpu --iters N --compress]\n\
+         \x20 search     compiler-aware NAS    [--target-ms N --device cpu|gpu --iters N --compress\n\
+         \x20                                   --decode-step (price per-token decode latency)]\n\
          \x20 compile    compile one config    [--layers N --hidden N --inter N --no-fusion\n\
          \x20                                   --head-keep F --ffn-keep F --int8]\n\
          \x20 table1     reproduce Table 1 (latency)\n\
          \x20 table2     reproduce Table 2 (GLUE)\n\
+         \x20 textgen    decode bench: full-reseq vs KV-cache ms/token\n\
          \x20 serve-qa   QA demo               [--question S --context S]\n\
-         \x20 serve-gen  text generation demo  [--prompt S --tokens N --temp F]\n\
+         \x20 serve-gen  text generation demo  [--prompt S --tokens N --temp F --full-reseq]\n\
          \x20 finetune   e2e training loop     [--steps N --lr F]\n"
     );
 }
@@ -94,14 +106,17 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
         joint: args.has("joint"),
         no_fusion_in_loop: args.has("no-fusion"),
         search_compression: args.has("compress"),
+        decode_step: args.has("decode-step"),
     };
     println!(
-        "[search] device={} target={}ms lambda={} two_phase={} compression_knobs={}",
+        "[search] device={} target={}ms lambda={} two_phase={} compression_knobs={} \
+         decode_step={}",
         cfg.device.name,
         cfg.target_ms,
         cfg.lambda,
         !cfg.joint,
-        cfg.search_compression
+        cfg.search_compression,
+        cfg.decode_step
     );
     let mut search = Search::new(cfg);
     let res = search.run();
@@ -214,6 +229,10 @@ fn cmd_table2() -> anyhow::Result<()> {
     canao::bench_table2(&mut std::io::stdout())
 }
 
+fn cmd_textgen() -> anyhow::Result<()> {
+    canao::bench_textgen(&mut std::io::stdout())
+}
+
 fn default_tokenizer() -> anyhow::Result<Arc<Tokenizer>> {
     let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")
         .unwrap_or_else(|_| "the quick brown fox jumps over the lazy dog .".to_string());
@@ -275,9 +294,15 @@ fn cmd_serve_gen(args: &Args) -> anyhow::Result<()> {
         }
         Err(e) => {
             println!("[gen] PJRT unavailable ({e})");
-            println!("[gen] generating on the native wave-parallel executor");
-            let engine =
+            let mut engine =
                 NativeGenEngine::demo(default_tokenizer()?, args.usize_or("threads", 4));
+            if args.has("full-reseq") {
+                engine.mode = canao::decode::DecodeMode::FullResequence;
+            }
+            println!(
+                "[gen] native wave-parallel executor, {:?} decode",
+                engine.mode
+            );
             engine.generate(&req)?
         }
     };

@@ -92,6 +92,11 @@ pub struct SearchConfig {
     /// to the phase-2 step space. Off by default: architecture-only
     /// search reproduces the paper's base experiments unchanged.
     pub search_compression: bool,
+    /// Price candidates by ONE KV-cached decode step (per-token
+    /// generation latency, `decode::step_latency`) instead of the full
+    /// sequence forward — the text-generation deployment target. Off by
+    /// default: encoder workloads (QA, GLUE) are priced per forward.
+    pub decode_step: bool,
 }
 
 impl Default for SearchConfig {
@@ -108,6 +113,7 @@ impl Default for SearchConfig {
             joint: false,
             no_fusion_in_loop: false,
             search_compression: false,
+            decode_step: false,
         }
     }
 }
@@ -165,7 +171,9 @@ impl Search {
 
     /// Compile the *compressed shapes* and price them: pruning shrinks
     /// the graph the compiler sees (`build_encoder_with`), int8 switches
-    /// the weight-matmul blocks to the device's int8 roofline.
+    /// the weight-matmul blocks to the device's int8 roofline. With
+    /// `decode_step`, the candidate is priced by one KV-cached decode
+    /// step instead — per-token latency, not full-resequence latency.
     pub fn latency_ms_compressed(&mut self, cfg: &BertConfig, comp: CompressionChoice) -> f64 {
         if let Some(&l) = self.latency_cache.get(&(*cfg, comp)) {
             return l;
@@ -175,7 +183,12 @@ impl Search {
             LayerDims { heads: spec.heads_kept(cfg), inter: spec.inter_kept(cfg) };
             cfg.layers
         ];
-        let g = build_encoder_with(cfg, &dims);
+        // Both workloads honor the D1 ablation (fusion in/out of the loop).
+        let g = if self.cfg.decode_step {
+            crate::model::build_decode_step_with(cfg, &dims)
+        } else {
+            build_encoder_with(cfg, &dims)
+        };
         let opts = if self.cfg.no_fusion_in_loop {
             CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() }
         } else {
@@ -376,6 +389,28 @@ mod tests {
             CompressionChoice { head_keep_idx: 2, ffn_keep_idx: 2, int8: true },
         );
         assert_eq!(s.evaluations, evals);
+    }
+
+    #[test]
+    fn decode_step_pricing_targets_per_token_latency() {
+        let cfg = BertConfig::canaobert();
+        let mut full = Search::new(quick_cfg());
+        let mut step = Search::new(SearchConfig { decode_step: true, ..quick_cfg() });
+        let lf = full.latency_ms(&cfg);
+        let ls = step.latency_ms(&cfg);
+        assert!(
+            ls * 3.0 < lf,
+            "one decode step ({ls} ms) must cost far less than a full forward ({lf} ms)"
+        );
+        // A decode-step-priced search still runs end to end.
+        let mut s = Search::new(SearchConfig {
+            decode_step: true,
+            phase1_iters: 2,
+            phase2_iters: 2,
+            batch: 2,
+            ..Default::default()
+        });
+        assert!(s.run().best.cfg.validate().is_ok());
     }
 
     #[test]

@@ -3,11 +3,16 @@
 //! every surface prints exactly the same rows.
 
 use std::io::Write;
+use std::sync::Arc;
 
 use crate::compiler::{compile, CompileOptions};
-use crate::device::{plan_latency, tflite, DeviceProfile};
+use crate::compress::CompressionConfig;
+use crate::decode::{step_latency, DecodeMode};
+use crate::device::{plan_latency, plan_latency_compressed, tflite, DeviceProfile};
 use crate::model::{build_encoder, BertConfig};
 use crate::nas::trainer::{anchors, surrogate_score, ALL_TASKS};
+use crate::serving::{GenRequest, NativeGenEngine};
+use crate::tokenizer::{Tokenizer, Vocab};
 
 /// One Table 1 row, fully computed.
 #[derive(Debug, Clone)]
@@ -106,6 +111,117 @@ pub fn bench_table1(out: &mut dyn Write) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Mean of one quarter of the per-token latencies (`q` in 0..4) — the
+/// "ms/token by position" columns of the textgen table. A KV-cached
+/// decode shows FLAT quartiles (per-token work is position-independent);
+/// the full-resequence decode pays a whole forward per token regardless,
+/// so it is flat too but several times higher.
+fn quartile_ms(ms: &[f64], q: usize) -> f64 {
+    if ms.is_empty() {
+        return 0.0;
+    }
+    let n = ms.len();
+    let lo = q * n / 4;
+    let hi = ((q + 1) * n / 4).max(lo + 1).min(n);
+    ms[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+}
+
+/// The text-generation decode bench: full-resequence vs KV-cached
+/// decoding on the native executor (measured host ms/token by position
+/// quartile), fp32 vs pruned+INT8, plus the device-simulated per-step
+/// cost next to each full-forward cost. Small demo model, so this also
+/// serves as the CI smoke run (`benches/textgen_decode.rs`).
+pub fn bench_textgen(out: &mut dyn Write) -> anyhow::Result<()> {
+    let corpus = "the quick brown fox jumps over the lazy dog . \
+                  the model generates new sentences word by word . \
+                  layer fusion reduces the number of kernels and the memory traffic .";
+    let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 512)));
+    let cfg = BertConfig { vocab: 512, seq: 48, layers: 2, hidden: 64, heads: 4, inter: 256 };
+    let dev = DeviceProfile::s865_cpu();
+    writeln!(
+        out,
+        "Textgen decode: full-resequence vs KV-cache (native executor, \
+         seq={}, layers={}, hidden={})",
+        cfg.seq,
+        cfg.layers,
+        cfg.hidden
+    )?;
+    writeln!(
+        out,
+        "{:<12} {:<11} | {:>8} | {:>8} {:>8} {:>8} {:>8} | {:>8} | {:>9}",
+        "config",
+        "mode",
+        "first ms",
+        "q1 ms/t",
+        "q2 ms/t",
+        "q3 ms/t",
+        "q4 ms/t",
+        "mean",
+        "sim ms/t"
+    )?;
+
+    let req = GenRequest {
+        prompt: "the model generates".into(),
+        max_new_tokens: cfg.seq,
+        temperature: 0.7,
+        seed: 5,
+    };
+    let mut means = Vec::new();
+    for (label, comp) in [
+        ("fp32", CompressionConfig::none()),
+        ("pruned+int8", CompressionConfig::pruned_int8(0.5, 0.5)),
+    ] {
+        let engine = NativeGenEngine::with_compression(Arc::clone(&tok), cfg, 2, comp);
+        let dec = engine.decoder();
+        let sim_full =
+            plan_latency_compressed(&dec.prefill.graph, &dec.prefill.plan, &dev, comp.int8).ms();
+        let sim_step = step_latency(&cfg, &dec.dims, &dev, comp.int8).ms();
+        for (mode_label, mode, sim) in [
+            ("full-reseq", DecodeMode::FullResequence, sim_full),
+            ("kv-cache", DecodeMode::KvCache, sim_step),
+        ] {
+            let resp = engine.generate_with_mode(&req, mode)?;
+            // The first forward is the prompt prefill (in kv-cache mode a
+            // whole-sequence pass) — report it separately so the ms/token
+            // quartiles show only steady-state per-token cost.
+            let first = resp.per_token_ms.first().copied().unwrap_or(0.0);
+            let ms = &resp.per_token_ms[1.min(resp.per_token_ms.len())..];
+            let mean = ms.iter().sum::<f64>() / ms.len().max(1) as f64;
+            means.push(((label, mode_label), mean));
+            writeln!(
+                out,
+                "{:<12} {:<11} | {:>8.2} | {:>8.2} {:>8.2} {:>8.2} {:>8.2} | {:>8.2} | {:>9.2}",
+                label,
+                mode_label,
+                first,
+                quartile_ms(ms, 0),
+                quartile_ms(ms, 1),
+                quartile_ms(ms, 2),
+                quartile_ms(ms, 3),
+                mean,
+                sim
+            )?;
+        }
+    }
+    let full = means
+        .iter()
+        .find(|((l, m), _)| *l == "fp32" && *m == "full-reseq")
+        .expect("printed above")
+        .1;
+    let kv = means
+        .iter()
+        .find(|((l, m), _)| *l == "fp32" && *m == "kv-cache")
+        .expect("printed above")
+        .1;
+    writeln!(
+        out,
+        "headline: fp32 {full:.2} ms/token full-reseq vs {kv:.2} ms/token KV-cached \
+         = {:.1}x (paper target: ~45 ms/token on-device)",
+        full / kv.max(1e-9)
+    )?;
+    Ok(())
+}
+
 /// Print Table 2 (GLUE accuracy) from the trainer surrogate.
 pub fn bench_table2(out: &mut dyn Write) -> anyhow::Result<()> {
     writeln!(out, "Table 2: GLUE dev accuracy (surrogate anchored to published points)")?;
@@ -172,5 +288,24 @@ mod tests {
         let s = String::from_utf8(buf).unwrap();
         assert!(s.contains("CANAOBERT"));
         assert!(s.contains("MNLI-m"));
+    }
+
+    #[test]
+    fn textgen_table_prints_both_modes() {
+        let mut buf = Vec::new();
+        bench_textgen(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("kv-cache"), "{s}");
+        assert!(s.contains("full-reseq"), "{s}");
+        assert!(s.contains("pruned+int8"), "{s}");
+        assert!(s.contains("headline"), "{s}");
+    }
+
+    #[test]
+    fn quartiles_cover_all_positions() {
+        let ms: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let total: f64 = (0..4).map(|q| quartile_ms(&ms, q)).sum();
+        assert!(total > 0.0);
+        assert_eq!(quartile_ms(&[], 2), 0.0);
     }
 }

@@ -12,9 +12,14 @@
 //!   and artifact-less deployments run, and it is how real serving
 //!   traffic exercises the executor end to end. Both engines accept a
 //!   `compress::CompressionConfig` (`with_compression`) to serve
-//!   structurally pruned and/or INT8-quantized models; per-request
-//!   executor state is cached (`Compiled::prepared`) and weights are
-//!   borrowed by the executor, never copied per forward.
+//!   structurally pruned and/or INT8-quantized models (optionally
+//!   warmup-calibrated to static activation scales via
+//!   `calibrate_warmup`); per-request executor state is cached
+//!   (`Compiled::prepared`) and weights are borrowed by the executor,
+//!   never copied per forward. Text generation decodes KV-cached by
+//!   default (`crate::decode`: prefill once, then O(seq·hidden) per
+//!   token), with the full-resequence path kept as the bitwise-equal
+//!   reference.
 //!
 //! The batcher coalesces queued requests into batches when load is high
 //! and falls back to singles when it isn't (bucketed static shapes — the
@@ -33,9 +38,10 @@ pub use batcher::{BatchModel, Batcher, BatcherOptions};
 pub use qa::{NativeQaEngine, QaEngine, QaRequest, QaResponse};
 pub use textgen::{GenEngine, GenRequest, GenResponse, NativeGenEngine};
 
-/// Additive attention-mask value for padded key positions (finite, so
-/// softmax rows stay NaN-free even when fully masked).
-pub(crate) const NEG_MASK: f32 = -1.0e4;
+/// Additive attention-mask value for padded key positions — shared with
+/// the decode subsystem (which additionally relies on it underflowing
+/// `exp` to exactly 0.0; see `crate::decode`).
+pub(crate) use crate::decode::NEG_MASK;
 
 /// Deterministic parameter set for a native-backend model: layernorm
 /// gammas 1, betas 0, everything else small-normal. (The native engines

@@ -306,6 +306,37 @@ impl NativeQaEngine {
         self.batch_cap
     }
 
+    /// Warmup calibration (ROADMAP follow-up): run `reqs` through the
+    /// fp32 reference interpreter, record the activation range at every
+    /// quantized matmul input, and install static scales — the int8 path
+    /// then skips the per-row absmax reduction (the mobile deployment
+    /// shape). Returns the number of sites now calibrated; no-op (0) on
+    /// fp32 engines. Accuracy stays within the established int8
+    /// tolerance of fp32 (`tests/decode_differential.rs`).
+    pub fn calibrate_warmup(&mut self, reqs: &[QaRequest]) -> Result<usize, ExecError> {
+        if self.quant.is_none() || reqs.is_empty() {
+            return Ok(0);
+        }
+        // ONE merged feed map, reused across samples: only the request
+        // entries change per warmup request (the same key set every
+        // time), and `calibrate_activations` accumulates scales by max —
+        // no per-sample clone of the (large) weight map.
+        let mut feeds = self.weights.clone();
+        for r in reqs {
+            let (ids, _tt, mask, _b) =
+                self.tokenizer.encode_pair(&r.question, &r.context, self.cfg.seq);
+            feeds.extend(self.request_feeds(&ids, &mask));
+            let q = self.quant.as_mut().expect("checked above");
+            crate::compress::quant::calibrate_activations(
+                &self.compiled.graph,
+                &self.compiled.quant_sites,
+                q,
+                std::slice::from_ref(&feeds),
+            )?;
+        }
+        Ok(self.quant.as_ref().expect("checked above").act_scale.len())
+    }
+
     /// Wave/arena statistics for one representative request — what the
     /// serving bench reports as the executor's memory win.
     pub fn exec_stats(&self) -> Result<crate::compiler::exec::ExecStats, ExecError> {
@@ -535,6 +566,29 @@ mod tests {
                 "{comp:?}"
             );
         }
+    }
+
+    #[test]
+    fn warmup_calibration_installs_static_scales_and_keeps_answers_sane() {
+        let req = QaRequest {
+            question: "what reduces kernels ?".into(),
+            context: "layer fusion reduces the number of kernels".into(),
+        };
+        let mut eng = tiny_compressed_engine(2, CompressionConfig::int8_only());
+        let before = eng.answer(&req).unwrap();
+        assert!(before.score.is_finite());
+        let n = eng.calibrate_warmup(std::slice::from_ref(&req)).unwrap();
+        assert!(n > 0, "int8 engine must calibrate at least one site");
+        // Calibrated engine still serves valid, deterministic answers.
+        let after = eng.answer(&req).unwrap();
+        assert!(after.score.is_finite());
+        assert!(after.start_token <= after.end_token);
+        let again = eng.answer(&req).unwrap();
+        assert_eq!((after.start_token, after.end_token), (again.start_token, again.end_token));
+
+        // fp32 engines have nothing to calibrate.
+        let mut fp32 = tiny_native_engine(1);
+        assert_eq!(fp32.calibrate_warmup(std::slice::from_ref(&req)).unwrap(), 0);
     }
 
     #[test]

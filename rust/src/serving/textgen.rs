@@ -1,23 +1,40 @@
 //! Text-generation engine — the paper's Fig. 1 (right) demo: "given a
 //! starting sentence, it can automatically generate new sentences by
-//! word."
+//! word", at the real-time (~45 ms/token) target.
 //!
-//! Autoregressive decode over the causal-LM executable (gen_b1): at each
-//! step the full (static-shape) sequence is re-run and the next token is
-//! sampled from the logits at the last attended position. (No KV cache:
-//! the AOT artifact has a fixed [1, seq] signature; re-running the full
-//! forward keeps the Rust side trivially correct. The device-simulated
-//! numbers in Table 1 are per-forward, matching the paper's setup.)
+//! Decoding is *prefill-then-step* (`crate::decode`): the prompt runs
+//! once through the causal prefill graph, whose per-layer K/V
+//! projections land directly in a slab-backed [`crate::decode::KvCache`];
+//! each generated token then runs the single-position step graph over
+//! the borrowed cache feeds, so per-token cost is independent of how
+//! many tokens were generated before. The full-resequence path
+//! ([`DecodeMode::FullResequence`]) re-runs the whole static-shape
+//! sequence per token — it is the bitwise reference for the cached path
+//! (`tests/decode_differential.rs`) and the paper-shaped baseline the
+//! `bench_textgen` table compares against.
+//!
+//! Both engines share ONE decode-loop skeleton ([`decode_loop`]): prompt
+//! encoding + truncation, the generation loop, seeded sampling, and
+//! `per_token_ms` accounting are written once, so the PJRT and native
+//! backends cannot drift.
+//!
+//! * [`GenEngine`] — the AOT `gen_b1` artifact on PJRT (fixed `[1, seq]`
+//!   signature, full re-forward per token; no cache feeds exist in the
+//!   artifact).
+//! * [`NativeGenEngine`] — compiler-IR causal LM on the wave-parallel
+//!   arena executor; optionally pruned/INT8 via `compress`, optionally
+//!   warmup-calibrated to static activation scales
+//!   ([`NativeGenEngine::calibrate_warmup`]).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::compiler::exec::{ExecError, Feeds, QuantizedWeights};
-use crate::compiler::{compile, CompileOptions, Compiled};
-use crate::compress::{compress_encoder, CompressionConfig, CompressionReport};
-use crate::model::{build_encoder, BertConfig};
+use crate::compiler::exec::ExecError;
+use crate::compress::{prune_model, CompressionConfig, CompressionReport};
+use crate::decode::{DecodeMode, DecodeSession, Decoder};
+use crate::model::{build_causal_lm, BertConfig};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
@@ -37,6 +54,61 @@ pub struct GenResponse {
     pub tokens_generated: usize,
     /// Per-token forward latencies (for the demo's tokens/s display).
     pub per_token_ms: Vec<f64>,
+}
+
+/// Encode a prompt for decoding: ids capped to the embedding rows, empty
+/// prompts fall back to `[CLS]`, and prompts at/over the sequence length
+/// truncate deterministically to `seq - 1` (one free slot keeps
+/// generation possible). Shared by every backend.
+pub(crate) fn encode_prompt(tok: &Tokenizer, prompt: &str, vocab: usize, seq: usize) -> Vec<i32> {
+    let mut ids: Vec<i32> = tok
+        .encode(prompt)
+        .iter()
+        .map(|&t| (t as i32).min(vocab as i32 - 1))
+        .collect();
+    if ids.is_empty() {
+        ids.push(crate::tokenizer::CLS as i32);
+    }
+    if ids.len() >= seq {
+        ids.truncate(seq - 1);
+    }
+    ids
+}
+
+/// The ONE decode-loop skeleton shared by the PJRT and native engines
+/// (and by both native decode modes): prompt encoding, loop control and
+/// the `seq` cap, per-token timing, seeded sampling, and final text
+/// decoding. `forward(ids, logits)` must fill `logits` with the
+/// next-token logits row for the prefix `ids`; the loop reuses one
+/// buffer, so a backend that writes in place allocates nothing per token.
+///
+/// Timing boundary: `per_token_ms` covers the WHOLE forward closure —
+/// including host logits readback on the PJRT backend (the historical
+/// PJRT loop stopped the clock before readback, so its numbers were
+/// slightly lower for the identical model). One uniform boundary across
+/// backends is what makes the `bench_textgen` rows comparable.
+pub(crate) fn decode_loop<E>(
+    tokenizer: &Tokenizer,
+    seq: usize,
+    vocab: usize,
+    req: &GenRequest,
+    mut forward: impl FnMut(&[i32], &mut Vec<f32>) -> Result<(), E>,
+) -> Result<GenResponse, E> {
+    let mut rng = Rng::new(req.seed);
+    let mut ids = encode_prompt(tokenizer, &req.prompt, vocab, seq);
+    let mut per_token_ms = Vec::new();
+    let mut generated = 0usize;
+    let mut logits: Vec<f32> = Vec::new();
+    while generated < req.max_new_tokens && ids.len() < seq {
+        let t0 = std::time::Instant::now();
+        forward(&ids, &mut logits)?;
+        per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let next = rng.sample_logits(&logits, req.temperature) as i32;
+        ids.push(next.min(vocab as i32 - 1));
+        generated += 1;
+    }
+    let text = tokenizer.decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
+    Ok(GenResponse { text, tokens_generated: generated, per_token_ms })
 }
 
 pub struct GenEngine {
@@ -65,91 +137,52 @@ impl GenEngine {
         Ok(())
     }
 
+    /// Autoregressive decode over the AOT causal-LM executable: the fixed
+    /// `[1, seq]` artifact has no cache feeds, so every token re-runs the
+    /// full sequence (the shared loop keeps everything else identical to
+    /// the native engine).
     pub fn generate(&self, req: &GenRequest) -> Result<GenResponse> {
-        let mut rng = Rng::new(req.seed);
-        let mut ids: Vec<i32> = self
-            .tokenizer
-            .encode(&req.prompt)
-            .iter()
-            .map(|&t| (t as i32).min(self.vocab as i32 - 1))
-            .collect();
-        if ids.is_empty() {
-            ids.push(crate::tokenizer::CLS as i32);
-        }
-        if ids.len() >= self.seq {
-            ids.truncate(self.seq - 1);
-        }
-
-        let mut per_token_ms = Vec::new();
-        let mut generated = 0usize;
-        while generated < req.max_new_tokens && ids.len() < self.seq {
+        decode_loop(&self.tokenizer, self.seq, self.vocab, req, |ids, out| {
             let used = ids.len();
-            let mut padded = ids.clone();
+            let mut padded = ids.to_vec();
             padded.resize(self.seq, 0);
             let mut mask = vec![0.0f32; self.seq];
             for m in mask.iter_mut().take(used) {
                 *m = 1.0;
             }
-            let t0 = std::time::Instant::now();
-            let out = self.exe.run_device(
+            let outs = self.exe.run_device(
                 &self.params,
                 &[lit_i32(&padded, &[1, self.seq])?, lit_f32(&mask, &[1, self.seq])?],
             )?;
-            per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-            let logits = to_vec_f32(&out[0])?; // [1, seq, vocab]
-            let last = &logits[(used - 1) * self.vocab..used * self.vocab];
-            let next = rng.sample_logits(last, req.temperature) as i32;
-            ids.push(next);
-            generated += 1;
-        }
-
-        let text = self
-            .tokenizer
-            .decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
-        Ok(GenResponse { text, tokens_generated: generated, per_token_ms })
+            let logits = to_vec_f32(&outs[0])?; // [1, seq, vocab]
+            out.clear();
+            out.extend_from_slice(&logits[(used - 1) * self.vocab..used * self.vocab]);
+            Ok(())
+        })
     }
 }
 
 // ---- native backend -----------------------------------------------------
 
-/// Append the LM head to an encoder graph: each position's hidden state
-/// projects to vocabulary logits.
-fn lm_head(g: &mut crate::compiler::ir::Graph, cfg: &BertConfig) {
-    let x = *g.outputs.last().expect("encoder output");
-    let w = g.weight("lm/w_head", &[cfg.hidden, cfg.vocab]);
-    let logits = g.matmul(x, w); // [seq, vocab]
-    // Logits are the only output (see qa_graph: a retained hidden-state
-    // output would be copied per step and never freed by the arena).
-    g.outputs.clear();
-    g.mark_output(logits);
-}
-
-/// The dense generation graph (encoder + LM head).
-fn lm_graph(cfg: &BertConfig) -> crate::compiler::ir::Graph {
-    let mut g = build_encoder(cfg);
-    lm_head(&mut g, cfg);
-    g
-}
-
-/// PJRT-free text-generation engine with the same request/response types
-/// and decode loop as [`GenEngine`]: at each step the full static-shape
-/// sequence is re-run on the wave-parallel arena executor (cached
-/// `PreparedExec`, weights borrowed — not copied — per step; optionally
-/// pruned/int8 via the `compress` subsystem) and the next token is
-/// sampled from the logits at the last attended position.
-/// (Bidirectional attention over the attended prefix — this mirrors the
-/// AOT `gen_b1` interface and timing shape, not its causal mask.)
+/// PJRT-free text-generation engine on the wave-parallel arena executor,
+/// with the same request/response types as [`GenEngine`]. Serves the
+/// *position-true causal* LM (`model::build_causal_lm_with`) in either
+/// decode mode — [`DecodeMode::KvCache`] (default: prefill once, then
+/// O(seq·hidden) per token) or [`DecodeMode::FullResequence`] (the
+/// bitwise-identical reference) — optionally structurally pruned and/or
+/// INT8-quantized via the `compress` subsystem.
 pub struct NativeGenEngine {
     pub tokenizer: Arc<Tokenizer>,
-    compiled: Compiled,
+    decoder: Decoder,
     weights: HashMap<String, Vec<f32>>,
-    quant: Option<QuantizedWeights>,
     cfg: BertConfig,
     /// What compression this engine serves.
     pub compression: CompressionConfig,
     pub report: CompressionReport,
     /// Worker threads per forward in the wave executor.
     pub threads: usize,
+    /// Default decode mode for [`NativeGenEngine::generate`].
+    pub mode: DecodeMode,
 }
 
 impl NativeGenEngine {
@@ -157,28 +190,25 @@ impl NativeGenEngine {
         Self::with_compression(tokenizer, cfg, threads, CompressionConfig::none())
     }
 
-    /// As [`NativeQaEngine::with_compression`](super::NativeQaEngine):
-    /// dense weight draw, structured pruning (graph + weights together),
-    /// compile, then int8 table from the compiled model.
+    /// Dense weight draw, structured pruning (graph dims + weights
+    /// together), then prefill/step compilation and (optionally) the
+    /// int8 tables for both graphs.
     pub fn with_compression(
         tokenizer: Arc<Tokenizer>,
         cfg: BertConfig,
         threads: usize,
         compression: CompressionConfig,
     ) -> Self {
-        let dense = lm_graph(&cfg);
+        let dense = build_causal_lm(&cfg);
         let mut weights = super::init_weights(&dense, 0x6E6E_57A7);
-        let (mut g, mut report) = compress_encoder(&cfg, &mut weights, &compression);
-        lm_head(&mut g, &cfg);
-        let compiled = compile(
-            &g,
-            &CompileOptions { model_only_tuning: true, compression, ..Default::default() },
-        );
-        let quant = compression.int8.then(|| compiled.quantize_weights(&weights));
+        // Shared prune + report accounting (`compress::prune_model`); the
+        // decode engine then compiles BOTH graphs at the pruned dims.
+        let (dims, mut report) = prune_model(&cfg, &mut weights, &compression);
+        let mut decoder = Decoder::new(cfg, dims, compression);
         if compression.int8 {
-            // The compiled model also quantizes the LM head, which the
-            // encoder-level report couldn't see.
-            report.quantized_params = compiled
+            decoder.quantize(&weights);
+            report.quantized_params = decoder
+                .prefill
                 .quant_sites
                 .iter()
                 .filter_map(|s| weights.get(&s.name))
@@ -187,13 +217,13 @@ impl NativeGenEngine {
         }
         NativeGenEngine {
             tokenizer,
-            compiled,
+            decoder,
             weights,
-            quant,
             cfg,
             compression,
             report,
             threads: threads.max(1),
+            mode: DecodeMode::KvCache,
         }
     }
 
@@ -203,57 +233,92 @@ impl NativeGenEngine {
         Self::new(tokenizer, cfg, threads)
     }
 
-    pub fn generate(&self, req: &GenRequest) -> Result<GenResponse, ExecError> {
+    /// The compiled decode artifacts (tests, benches, pricing).
+    pub fn decoder(&self) -> &Decoder {
+        &self.decoder
+    }
+
+    /// The engine's named weight map (post-pruning shapes).
+    pub fn weights(&self) -> &HashMap<String, Vec<f32>> {
+        &self.weights
+    }
+
+    /// Warmup calibration (ROADMAP follow-up): run the given prompts
+    /// through the fp32 reference, record every quantized matmul's input
+    /// range, and switch the int8 path from per-row dynamic to
+    /// calibrated-static activation scales — installed in BOTH decode
+    /// graphs by weight name, so cached and full-resequence decode stay
+    /// bitwise identical after calibration. No-op (returns 0) on fp32
+    /// engines.
+    pub fn calibrate_warmup(&mut self, prompts: &[&str]) -> Result<usize, ExecError> {
         let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
-        let mut rng = Rng::new(req.seed);
-        let mut ids: Vec<i32> = self
-            .tokenizer
-            .encode(&req.prompt)
+        let feeds: Vec<Vec<f32>> = prompts
             .iter()
-            .map(|&t| (t as i32).min(vocab as i32 - 1))
+            .map(|&p| {
+                let ids = encode_prompt(&self.tokenizer, p, vocab, seq);
+                let mut padded: Vec<f32> = ids.iter().map(|&i| i as f32).collect();
+                padded.resize(seq, 0.0);
+                padded
+            })
             .collect();
-        if ids.is_empty() {
-            ids.push(crate::tokenizer::CLS as i32);
-        }
-        if ids.len() >= seq {
-            ids.truncate(seq - 1);
-        }
+        self.decoder.calibrate(&self.weights, &feeds)
+    }
 
-        let mut per_token_ms = Vec::new();
-        let mut generated = 0usize;
-        // Weights are loop-invariant and live in the persistent map the
-        // executor borrows; only input_ids/mask go in the request layer.
-        let mut request: HashMap<String, Vec<f32>> = HashMap::new();
-        while generated < req.max_new_tokens && ids.len() < seq {
-            let used = ids.len();
-            let mut padded: Vec<f32> = ids.iter().map(|&i| i as f32).collect();
-            padded.resize(seq, 0.0);
-            request.insert("input_ids".to_string(), padded);
-            let mask: Vec<f32> = (0..seq)
-                .map(|i| if i < used { 0.0 } else { super::NEG_MASK })
-                .collect();
-            for l in 0..self.cfg.layers {
-                request.insert(format!("mask{l}"), mask.clone());
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResponse, ExecError> {
+        self.generate_with_mode(req, self.mode)
+    }
+
+    /// Decode with an explicit mode (the differential tests pin
+    /// `KvCache` == `FullResequence` bitwise at matched seeds).
+    pub fn generate_with_mode(
+        &self,
+        req: &GenRequest,
+        mode: DecodeMode,
+    ) -> Result<GenResponse, ExecError> {
+        let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
+        match mode {
+            DecodeMode::FullResequence => {
+                // Loop-invariant request map + logits scratch: only the
+                // padded ids mutate per token.
+                let mut request: HashMap<String, Vec<f32>> = HashMap::new();
+                request.insert("input_ids".to_string(), vec![0.0; seq]);
+                let mut full = vec![0.0f32; seq * vocab];
+                decode_loop(&self.tokenizer, seq, vocab, req, |ids, out| {
+                    let used = ids.len();
+                    let padded = request.get_mut("input_ids").expect("inserted above");
+                    for (i, x) in padded.iter_mut().enumerate() {
+                        *x = ids.get(i).copied().unwrap_or(0) as f32;
+                    }
+                    self.decoder.reseq_forward(&request, &self.weights, self.threads, &mut full)?;
+                    out.clear();
+                    out.extend_from_slice(&full[(used - 1) * vocab..used * vocab]);
+                    Ok(())
+                })
             }
-
-            let t0 = std::time::Instant::now();
-            let (outs, _) = self.compiled.run_parallel_with(
-                &Feeds::layered(&request, &self.weights),
-                self.threads,
-                self.quant.as_ref(),
-            )?;
-            per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-            let logits = outs.last().expect("lm graph has outputs"); // [seq, vocab]
-            let last = &logits.data[(used - 1) * vocab..used * vocab];
-            let next = rng.sample_logits(last, req.temperature) as i32;
-            ids.push(next.min(vocab as i32 - 1));
-            generated += 1;
+            DecodeMode::KvCache => {
+                let mut session: Option<DecodeSession> = None;
+                let resp = decode_loop(&self.tokenizer, seq, vocab, req, |ids, out| {
+                    if session.is_none() {
+                        // First forward: prefill the prompt into the cache.
+                        session = Some(self.decoder.begin(&self.weights, self.threads));
+                        let row = session.as_mut().expect("just set").prefill(ids)?;
+                        out.clear();
+                        out.extend_from_slice(row);
+                        return Ok(());
+                    }
+                    let s = session.as_mut().expect("checked above");
+                    debug_assert_eq!(s.position() + 1, ids.len());
+                    let row = s.step(*ids.last().expect("prompt is never empty"))?;
+                    out.clear();
+                    out.extend_from_slice(row);
+                    Ok(())
+                });
+                if let Some(s) = session {
+                    s.finish(); // park the cache slab for the next request
+                }
+                resp
+            }
         }
-
-        let text = self
-            .tokenizer
-            .decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
-        Ok(GenResponse { text, tokens_generated: generated, per_token_ms })
     }
 }
 
@@ -283,6 +348,24 @@ mod tests {
         assert_eq!(r1.tokens_generated, 4);
         assert_eq!(r1.text, r2.text, "wave executor must not change sampling");
         assert_eq!(r1.per_token_ms.len(), 4);
+    }
+
+    #[test]
+    fn cached_and_resequence_modes_agree() {
+        let req = GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 5,
+            temperature: 0.8,
+            seed: 23,
+        };
+        let eng = tiny_engine(2);
+        let kv = eng.generate_with_mode(&req, DecodeMode::KvCache).unwrap();
+        let full = eng.generate_with_mode(&req, DecodeMode::FullResequence).unwrap();
+        assert_eq!(kv.text, full.text, "KV cache must not change sampling");
+        assert_eq!(kv.tokens_generated, full.tokens_generated);
+        // Back-to-back cached requests recycle the cache slab.
+        let _ = eng.generate(&req).unwrap();
+        assert_eq!(eng.decoder().pooled_caches(), 1);
     }
 
     #[test]

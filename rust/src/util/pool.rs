@@ -44,6 +44,19 @@ impl Slab {
         }
     }
 
+    /// Safe shared view of the whole storage — for owners that manage
+    /// their own region layout with ordinary borrows (e.g. the decode
+    /// subsystem's KV cache), as opposed to the wave executor's
+    /// cross-thread [`SharedSlab`] accessors.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Safe exclusive view of the whole storage (see [`Slab::data`]).
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
     /// Borrow the whole slab as a shareable handle. The `&mut` receiver
     /// guarantees no other safe borrow of the storage exists while
     /// `SharedSlab` copies are alive.

@@ -1,0 +1,250 @@
+//! Differential harness for the KV-cached decode subsystem.
+//!
+//! The contract under test: **KV-cached decode is bitwise identical to
+//! full-resequence decode** at matched sampling seeds — across executor
+//! thread counts (1/2/4), for fp32 and pruned+INT8 models, at the logits
+//! level (f32 `==`, which only tolerates the sign of zero) and at the
+//! generated-text level. Plus the edge cases both paths must share
+//! (truncation, empty prompt, zero budget, cache-full stop) and the
+//! per-token-work flatness acceptance criterion.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use canao::compress::CompressionConfig;
+use canao::decode::DecodeMode;
+use canao::model::BertConfig;
+use canao::serving::{GenRequest, NativeGenEngine};
+use canao::tokenizer::{Tokenizer, Vocab};
+use canao::util::check::assert_close;
+
+const CORPUS: &str = "the quick brown fox jumps over the lazy dog . \
+                      the model generates new sentences word by word . \
+                      layer fusion reduces the number of kernels .";
+
+fn tiny_cfg() -> BertConfig {
+    BertConfig { vocab: 256, seq: 12, layers: 2, hidden: 8, heads: 2, inter: 16 }
+}
+
+fn engine(threads: usize, comp: CompressionConfig) -> NativeGenEngine {
+    let tok = Arc::new(Tokenizer::new(Vocab::build(CORPUS, 256)));
+    NativeGenEngine::with_compression(tok, tiny_cfg(), threads, comp)
+}
+
+/// Per-step logits rows from the KV-cached session: prefill on `prompt`,
+/// then one step per token in `steps`.
+fn kv_logits(
+    eng: &NativeGenEngine,
+    threads: usize,
+    prompt: &[i32],
+    steps: &[i32],
+) -> Vec<Vec<f32>> {
+    let mut session = eng.decoder().begin(eng.weights(), threads);
+    let mut rows = vec![session.prefill(prompt).unwrap().to_vec()];
+    for &t in steps {
+        rows.push(session.step(t).unwrap().to_vec());
+    }
+    session.finish();
+    rows
+}
+
+/// The same rows from full-resequence forwards over growing prefixes.
+fn reseq_logits(
+    eng: &NativeGenEngine,
+    threads: usize,
+    prompt: &[i32],
+    steps: &[i32],
+) -> Vec<Vec<f32>> {
+    let cfg = tiny_cfg();
+    let (s, v) = (cfg.seq, cfg.vocab);
+    let mut ids = prompt.to_vec();
+    let mut rows = Vec::new();
+    let mut full = vec![0.0f32; s * v];
+    let mut request: HashMap<String, Vec<f32>> = HashMap::new();
+    for i in 0..=steps.len() {
+        if i > 0 {
+            ids.push(steps[i - 1]);
+        }
+        let mut padded: Vec<f32> = ids.iter().map(|&t| t as f32).collect();
+        padded.resize(s, 0.0);
+        request.insert("input_ids".to_string(), padded);
+        eng.decoder()
+            .reseq_forward(&request, eng.weights(), threads, &mut full)
+            .unwrap();
+        rows.push(full[(ids.len() - 1) * v..ids.len() * v].to_vec());
+    }
+    rows
+}
+
+#[test]
+fn kv_logits_bitwise_equal_full_resequence_fp32() {
+    let prompt = [5i32, 9, 17];
+    let steps = [3i32, 44, 7, 120];
+    for threads in [1usize, 2, 4] {
+        let eng = engine(threads, CompressionConfig::none());
+        let kv = kv_logits(&eng, threads, &prompt, &steps);
+        let rs = reseq_logits(&eng, threads, &prompt, &steps);
+        assert_eq!(kv.len(), rs.len());
+        for (i, (a, b)) in kv.iter().zip(&rs).enumerate() {
+            assert_eq!(a, b, "logits row {i} diverged at {threads} threads (fp32)");
+        }
+    }
+}
+
+#[test]
+fn kv_logits_bitwise_equal_full_resequence_pruned_int8() {
+    let prompt = [2i32, 31];
+    let steps = [8i32, 3, 90];
+    for threads in [1usize, 2, 4] {
+        let eng = engine(threads, CompressionConfig::pruned_int8(0.5, 0.5));
+        let kv = kv_logits(&eng, threads, &prompt, &steps);
+        let rs = reseq_logits(&eng, threads, &prompt, &steps);
+        for (i, (a, b)) in kv.iter().zip(&rs).enumerate() {
+            assert_eq!(a, b, "logits row {i} diverged at {threads} threads (pruned+int8)");
+        }
+    }
+}
+
+#[test]
+fn generated_text_matches_across_modes_and_threads() {
+    let req = GenRequest {
+        prompt: "the model generates".into(),
+        max_new_tokens: 6,
+        temperature: 0.9, // sampling path: any logits divergence shows up
+        seed: 77,
+    };
+    let mut texts = Vec::new();
+    for threads in [1usize, 2, 4] {
+        for comp in [CompressionConfig::none(), CompressionConfig::pruned_int8(0.5, 0.5)] {
+            let eng = engine(threads, comp);
+            let kv = eng.generate_with_mode(&req, DecodeMode::KvCache).unwrap();
+            let full = eng.generate_with_mode(&req, DecodeMode::FullResequence).unwrap();
+            assert_eq!(kv.text, full.text, "{comp:?} at {threads} threads");
+            assert_eq!(kv.tokens_generated, full.tokens_generated);
+            assert_eq!(kv.per_token_ms.len(), full.per_token_ms.len());
+            texts.push((threads, comp.int8, kv.text));
+        }
+    }
+    // Thread count never changes the text either.
+    let fp32: Vec<&String> = texts.iter().filter(|t| !t.1).map(|t| &t.2).collect();
+    assert!(fp32.windows(2).all(|w| w[0] == w[1]), "{fp32:?}");
+}
+
+#[test]
+fn edge_cases_agree_between_modes() {
+    let eng = engine(2, CompressionConfig::none());
+    let seq = tiny_cfg().seq;
+
+    // Prompt longer than seq: deterministic truncation, still generates
+    // (one slot is kept free), identical in both modes.
+    let long = GenRequest {
+        prompt: CORPUS.into(), // tokenizes far past seq=12
+        max_new_tokens: 5,
+        temperature: 0.6,
+        seed: 9,
+    };
+    let kv = eng.generate_with_mode(&long, DecodeMode::KvCache).unwrap();
+    let full = eng.generate_with_mode(&long, DecodeMode::FullResequence).unwrap();
+    assert_eq!(kv.text, full.text);
+    assert_eq!(kv.tokens_generated, 1, "seq-1 truncation leaves one slot");
+    assert_eq!(full.tokens_generated, 1);
+
+    // Empty prompt falls back to [CLS] and still generates.
+    let empty = GenRequest {
+        prompt: "".into(),
+        max_new_tokens: 3,
+        temperature: 0.0,
+        seed: 1,
+    };
+    let kv = eng.generate_with_mode(&empty, DecodeMode::KvCache).unwrap();
+    let full = eng.generate_with_mode(&empty, DecodeMode::FullResequence).unwrap();
+    assert_eq!(kv.text, full.text);
+    assert_eq!(kv.tokens_generated, 3);
+
+    // max_new_tokens = 0: no forward at all, prompt echoed back.
+    let zero = GenRequest {
+        prompt: "the model".into(),
+        max_new_tokens: 0,
+        temperature: 0.0,
+        seed: 1,
+    };
+    let kv = eng.generate_with_mode(&zero, DecodeMode::KvCache).unwrap();
+    let full = eng.generate_with_mode(&zero, DecodeMode::FullResequence).unwrap();
+    assert_eq!(kv.tokens_generated, 0);
+    assert_eq!(kv.per_token_ms.len(), 0);
+    assert_eq!(kv.text, full.text);
+
+    // Cache-full stop: an unbounded budget stops exactly at seq.
+    let unbounded = GenRequest {
+        prompt: "the model".into(),
+        max_new_tokens: 1000,
+        temperature: 0.4,
+        seed: 4,
+    };
+    let kv = eng.generate_with_mode(&unbounded, DecodeMode::KvCache).unwrap();
+    let full = eng.generate_with_mode(&unbounded, DecodeMode::FullResequence).unwrap();
+    assert_eq!(kv.text, full.text);
+    assert!(kv.tokens_generated < 1000);
+    let prompt_len = 2; // "the model" -> 2 known words
+    assert_eq!(kv.tokens_generated, seq - prompt_len, "fills the cache to seq");
+}
+
+#[test]
+fn calibrated_decode_stays_cached_consistent_and_near_fp32() {
+    let prompt = [5i32, 9];
+    let steps = [3i32, 44];
+
+    // fp32 reference rows (same dense weight draw as the int8 engine).
+    let fp32 = engine(2, CompressionConfig::none());
+    let fp_rows = reseq_logits(&fp32, 2, &prompt, &steps);
+
+    // Int8 engine, warmup-calibrated to static activation scales.
+    let mut int8 = engine(2, CompressionConfig::int8_only());
+    let n = int8.calibrate_warmup(&["the model generates", "the quick brown fox"]).unwrap();
+    assert!(n > 0, "warmup must calibrate the quantized sites");
+    assert!(int8.decoder().calibrated_sites() > 0);
+
+    // Calibrated KV-cached decode still equals calibrated full-reseq
+    // bitwise (static scales are installed per weight name in BOTH
+    // graphs)...
+    let kv = kv_logits(&int8, 2, &prompt, &steps);
+    let rs = reseq_logits(&int8, 2, &prompt, &steps);
+    for (a, b) in kv.iter().zip(&rs) {
+        assert_eq!(a, b, "calibration must not split the decode paths");
+    }
+    // ...and stays within the established int8 tolerance of fp32.
+    for (q, f) in kv.iter().zip(&fp_rows) {
+        assert_close(q, f, 0.1, 0.05).unwrap();
+    }
+}
+
+#[test]
+fn per_token_executor_work_is_flat() {
+    let eng = engine(2, CompressionConfig::none());
+    let mut session = eng.decoder().begin(eng.weights(), 2);
+    session.prefill(&[5, 9, 17]).unwrap();
+    let prefill_stats = session.last_stats().unwrap();
+
+    let mut step_stats = Vec::new();
+    for t in [3i32, 44, 7, 120, 6] {
+        session.step(t).unwrap();
+        step_stats.push(session.last_stats().unwrap());
+    }
+    session.finish();
+
+    // Acceptance: the step's executor work does not scale with the
+    // number of previously generated tokens — every step runs the same
+    // waves over the same arena footprint...
+    for s in &step_stats {
+        assert_eq!(s.waves, step_stats[0].waves);
+        assert_eq!(s.naive_bytes, step_stats[0].naive_bytes);
+        assert_eq!(s.peak_arena_bytes, step_stats[0].peak_arena_bytes);
+    }
+    // ...and that footprint is well below one full-sequence forward's.
+    assert!(
+        step_stats[0].naive_bytes * 2 < prefill_stats.naive_bytes,
+        "step {} bytes !<< prefill {} bytes",
+        step_stats[0].naive_bytes,
+        prefill_stats.naive_bytes
+    );
+}
