@@ -97,6 +97,15 @@ fn compression_section() {
         if label == "fp32" {
             fp32_median = stats.median;
         }
+        // Per-kernel dispatch census; the pruned+int8 path must not run
+        // any int8 matmul on the per-node fallback (the fused epilogue /
+        // layernorm kernels cover every weight matmul).
+        let counts = compiled.dispatch_counts(quant.as_ref());
+        println!("  {label:>12} dispatch: {counts}");
+        assert_eq!(
+            counts.fallback_i8_matmul, 0,
+            "{label}: per-node int8 matmul fallback fired"
+        );
         let sim = plan_latency_compressed(
             &compiled.graph,
             &compiled.plan,

@@ -7,6 +7,24 @@
 //! precomputed: the hoisted schedule evaluates invariant registers once
 //! per column (Fig. 4 `fuse_add'`), the row schedule recomputes them
 //! (Fig. 4 `fuse_add`).
+//!
+//! Two fused matmul kernels build on the tape, sharing its per-row
+//! evaluator so their epilogues are bitwise-identical to plain tape
+//! execution:
+//!
+//! * [`MatmulEpilogueTape`] — `matmul -> bias [-> GELU / residual]`: the
+//!   elementwise epilogue with the matmul as a virtual input.
+//! * [`MatmulLayernormTape`] — `matmul -> bias -> residual-add ->
+//!   layernorm`: the same virtual-matmul epilogue followed by a two-pass
+//!   row normalization (the `Graph::layernorm` 11-op idiom matched by
+//!   `exec::plan::match_layernorm_chain`). The whole block — quantize the
+//!   LHS row, i8 x i8 -> i32 MACs, rescale + bias + residual, mean/var +
+//!   normalize — runs in ONE pass per row, keeping the accumulators in
+//!   registers; an fp32 variant (interp-mirroring dot product) serves the
+//!   uncompressed path. The normalization arithmetic is
+//!   `exec::plan::layernorm_rows`, which mirrors the graph primitives
+//!   bit for bit, so fused output == per-node output always (the decode
+//!   subsystem's differential contract depends on it).
 
 use crate::compiler::exec::tensor::{
     accumulate_row_i8, quantize_row_i8, QuantizedTensor, Tensor, View,
@@ -583,28 +601,57 @@ pub fn compile_matmul_epilogue(g: &Graph, block: &FusedBlock) -> Option<MatmulEp
     Some(MatmulEpilogueTape { tape, matmul: mm, lhs, rhs, mm_input, k })
 }
 
+/// Resolve a fused matmul kernel's tape input buffers: every real
+/// external through the caller's `view_of`, and the virtual matmul slot
+/// as an empty placeholder (never read — the matmul row is computed in
+/// flight). The ONE definition of the bufs/virtual-slot contract, shared
+/// by both fused kernels and thus by every executor dispatch site.
+fn virtual_matmul_views<'a>(
+    g: &'a Graph,
+    inputs: &[NodeId],
+    matmul: NodeId,
+    mut view_of: impl FnMut(NodeId) -> View<'a>,
+) -> Vec<View<'a>> {
+    inputs
+        .iter()
+        .map(|&i| {
+            if i == matmul {
+                View { shape: &g.nodes[matmul].shape, data: &[] }
+            } else {
+                view_of(i)
+            }
+        })
+        .collect()
+}
+
+/// One INT8 matmul row — quantize the LHS row (dynamic or static scale),
+/// accumulate `i8 x i8 -> i32`, rescale — the exact `matmul_i8`
+/// arithmetic, shared by both fused kernels so a change here can never
+/// split them from the per-node kernel bitwise.
+#[inline]
+fn i8_matmul_row(
+    arow: &[f32],
+    rhs: &QuantizedTensor,
+    act_scale: Option<f32>,
+    qa: &mut [i8],
+    acc: &mut [i32],
+    mm_row: &mut [f32],
+) {
+    let s_a = quantize_row_i8(arow, act_scale, qa);
+    accumulate_row_i8(qa, &rhs.data, mm_row.len(), acc);
+    for (j, d) in mm_row.iter_mut().enumerate() {
+        *d = acc[j] as f32 * (s_a * rhs.scales[j]);
+    }
+}
+
 impl MatmulEpilogueTape {
-    /// Resolve the tape's input buffers: every real external through the
-    /// caller's `view_of`, and the virtual matmul slot as an empty
-    /// placeholder (never read — the matmul row is computed in flight).
-    /// One definition of the bufs/`mm_input` contract, shared by both
-    /// executors' dispatch sites.
+    /// Resolve the tape's input buffers (see [`virtual_matmul_views`]).
     pub fn input_views<'a>(
         &self,
         g: &'a Graph,
-        mut view_of: impl FnMut(NodeId) -> View<'a>,
+        view_of: impl FnMut(NodeId) -> View<'a>,
     ) -> Vec<View<'a>> {
-        self.tape
-            .inputs
-            .iter()
-            .map(|&i| {
-                if i == self.matmul {
-                    View { shape: &g.nodes[self.matmul].shape, data: &[] }
-                } else {
-                    view_of(i)
-                }
-            })
-            .collect()
+        virtual_matmul_views(g, &self.tape.inputs, self.matmul, view_of)
     }
 
     /// Fused INT8 execution over the row range `[row0, row1)`.
@@ -646,12 +693,14 @@ impl MatmulEpilogueTape {
         for i in row0..row1 {
             // INT8 matmul row: quantize the LHS row once, accumulate
             // i8 x i8 -> i32, rescale — identical to `matmul_i8`.
-            let arow = &lhs.data[i * k..(i + 1) * k];
-            let s_a = quantize_row_i8(arow, act_scale, &mut qa);
-            accumulate_row_i8(&qa, &rhs.data, n, &mut acc);
-            for (j, d) in mm_row.iter_mut().enumerate() {
-                *d = acc[j] as f32 * (s_a * rhs.scales[j]);
-            }
+            i8_matmul_row(
+                &lhs.data[i * k..(i + 1) * k],
+                rhs,
+                act_scale,
+                &mut qa,
+                &mut acc,
+                &mut mm_row,
+            );
 
             // Epilogue registers across the row, in the same pass —
             // the shared tape row evaluator with the virtual matmul
@@ -661,6 +710,258 @@ impl MatmulEpilogueTape {
             for (oi, &(_, r)) in tape.output_regs.iter().enumerate() {
                 outs[oi][base..base + n].copy_from_slice(&regs[r]);
             }
+        }
+    }
+}
+
+/// A fused matmul + layernorm kernel: one matmul, its elementwise
+/// pre-normalization epilogue (bias add, residual add), and the
+/// downstream `Graph::layernorm` chain, compiled as one row-pass program.
+///
+/// This closes the last structural int8 gap (§2.1 x §2.2): the wo/w2
+/// projections in the encoder, prefill, and decode-step graphs merge
+/// with their downstream layernorm, and such blocks previously ran the
+/// per-node fallback — the exact scratch-compute-then-rescale shape the
+/// epilogue tape eliminated everywhere else. Here every output row is
+/// produced in one pass: quantize the LHS row once (dynamic or
+/// calibrated-static scale), accumulate `i8 x i8 -> i32`, rescale + bias
+/// + residual through the shared tape row evaluator, then run the
+/// two-pass normalization over the finished row — writing straight into
+/// the caller's buffer (the wave executor hands arena regions). Rows are
+/// independent (layernorm is row-local), so the wave executor row-splits
+/// the kernel across threads exactly like the epilogue tape.
+#[derive(Debug, Clone)]
+pub struct MatmulLayernormTape {
+    /// The pre-normalization epilogue over the `[m, n]` matmul domain;
+    /// its single output register is the layernorm input. `inputs`
+    /// contains `matmul` as a virtual entry at `mm_input` (never read
+    /// from a buffer — satisfied from the in-flight row).
+    pub tape: BlockTape,
+    /// The matmul node this kernel computes.
+    pub matmul: NodeId,
+    /// The matmul's LHS (external activation input, `[m, k]`).
+    pub lhs: NodeId,
+    /// The matmul's RHS (external rank-2 weight leaf, `[k, n]`) — the key
+    /// the executors look up in the `QuantizedWeights` side table.
+    pub rhs: NodeId,
+    /// Index of `matmul` in `tape.inputs`.
+    pub mm_input: usize,
+    /// Inner (contraction) dimension.
+    pub k: usize,
+    /// Layernorm scale parameter (external, `[n]` or scalar).
+    pub gamma: NodeId,
+    /// Layernorm shift parameter (external, `[n]` or scalar).
+    pub beta: NodeId,
+    pub eps: f32,
+    /// The block's single output: the layernorm's final add.
+    pub out: NodeId,
+}
+
+/// Recognize a [`BlockKind::MatmulLayernorm`] block the fused kernel can
+/// run: exactly one matmul with external rank-2 operands, a purely
+/// elementwise pre-normalization epilogue over the `[m, n]` domain, and
+/// the block's single output a `Graph::layernorm` chain normalizing the
+/// epilogue's result over the last axis. Returns `None` (callers fall
+/// back to per-node execution) for anything else — e.g. softmax-bearing
+/// blocks, batched domains, or layernorm-like chains with foreign
+/// constants.
+pub fn compile_matmul_layernorm(g: &Graph, block: &FusedBlock) -> Option<MatmulLayernormTape> {
+    use crate::compiler::exec::plan::match_layernorm_chain;
+
+    if block.kind != BlockKind::MatmulLayernorm {
+        return None;
+    }
+    let mms: Vec<NodeId> =
+        block.nodes.iter().copied().filter(|&n| g.nodes[n].op == Op::MatMul).collect();
+    let &[mm] = mms.as_slice() else { return None };
+    let node = &g.nodes[mm];
+    let (lhs, rhs) = (node.inputs[0], node.inputs[1]);
+    if block.nodes.contains(&lhs) || block.nodes.contains(&rhs) {
+        return None; // prologue feeding the matmul: not this shape
+    }
+    let domain = &node.shape;
+    if domain.rank() != 2 || g.nodes[lhs].shape.rank() != 2 || g.nodes[rhs].shape.rank() != 2 {
+        return None;
+    }
+    let (k, n) = (g.nodes[rhs].shape.dims[0], domain.dims[1]);
+
+    let &[out] = block.outputs.as_slice() else { return None };
+    let ln = match_layernorm_chain(g, out)?;
+    if !ln.nodes.iter().all(|m| block.nodes.contains(m)) {
+        return None;
+    }
+    if block.nodes.contains(&ln.gamma) || block.nodes.contains(&ln.beta) {
+        return None; // affine parameters must be external values
+    }
+    for p in [ln.gamma, ln.beta] {
+        let pn = g.nodes[p].shape.numel();
+        if pn != n && pn != 1 {
+            return None; // must broadcast over the row like the kernel does
+        }
+    }
+
+    // The epilogue: everything between the matmul and the layernorm. Its
+    // last value IS the layernorm input, its ops are elementwise over the
+    // full domain, and it never reads layernorm internals (the chain is
+    // strictly downstream of it).
+    let ln_set: std::collections::HashSet<NodeId> = ln.nodes.iter().copied().collect();
+    let epi: Vec<NodeId> =
+        block.nodes.iter().copied().filter(|&m| m != mm && !ln_set.contains(&m)).collect();
+    if epi.last().copied() != Some(ln.x) {
+        return None;
+    }
+    for &m in &epi {
+        if !g.nodes[m].op.is_elementwise() || g.nodes[m].shape != *domain {
+            return None;
+        }
+        if g.nodes[m].inputs.iter().any(|i| ln_set.contains(i)) {
+            return None;
+        }
+    }
+
+    // Compile the pre-normalization epilogue alone, with the matmul as a
+    // plain external input and the layernorm input as the sole output.
+    let pseudo = FusedBlock {
+        id: block.id,
+        nodes: epi,
+        inputs: block.inputs.clone(),
+        outputs: vec![ln.x],
+        kind: BlockKind::ElementwiseChain,
+    };
+    let tape = compile_block(g, &pseudo);
+    let mm_input = tape.inputs.iter().position(|&i| i == mm)?;
+    Some(MatmulLayernormTape {
+        tape,
+        matmul: mm,
+        lhs,
+        rhs,
+        mm_input,
+        k,
+        gamma: ln.gamma,
+        beta: ln.beta,
+        eps: ln.eps,
+        out,
+    })
+}
+
+impl MatmulLayernormTape {
+    /// Resolve the tape's input buffers (see [`virtual_matmul_views`]).
+    pub fn input_views<'a>(
+        &self,
+        g: &'a Graph,
+        view_of: impl FnMut(NodeId) -> View<'a>,
+    ) -> Vec<View<'a>> {
+        virtual_matmul_views(g, &self.tape.inputs, self.matmul, view_of)
+    }
+
+    /// Fused INT8 execution over the row range `[row0, row1)`; `out`
+    /// covers exactly the requested rows (length `(row1 - row0) * n`), so
+    /// the wave executor can `split_at_mut` it across threads.
+    ///
+    /// Numerics contract: the matmul rows reuse `quantize_row_i8` /
+    /// `accumulate_row_i8` and the exact rescale of `matmul_i8`, the
+    /// epilogue runs through the shared tape row evaluator, and the
+    /// normalization is `layernorm_rows` — so fused output == per-node
+    /// int8 fallback output, bit for bit (`tests/fused_int8.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_i8_rows_into(
+        &self,
+        lhs: View,
+        rhs: &QuantizedTensor,
+        act_scale: Option<f32>,
+        bufs: &[View],
+        gamma: View,
+        beta: View,
+        row0: usize,
+        row1: usize,
+        out: &mut [f32],
+    ) {
+        let k = self.k;
+        let mut qa = vec![0i8; k];
+        let mut acc = vec![0i32; self.tape.domain.dims[1]];
+        self.run_rows(bufs, gamma, beta, row0, row1, out, |i, mm_row| {
+            i8_matmul_row(
+                &lhs.data[i * k..(i + 1) * k],
+                rhs,
+                act_scale,
+                &mut qa,
+                &mut acc,
+                mm_row,
+            );
+        });
+    }
+
+    /// The fp32 variant, for the uncompressed path: the matmul row
+    /// mirrors the interpreter's kernel exactly (k-ascending
+    /// accumulation, `av == 0.0` operands skipped — the zero-skip is
+    /// load-bearing for the decode contract's masked rows), so fused
+    /// fp32 == per-node fp32, bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_f32_rows_into(
+        &self,
+        lhs: View,
+        rhs: View,
+        bufs: &[View],
+        gamma: View,
+        beta: View,
+        row0: usize,
+        row1: usize,
+        out: &mut [f32],
+    ) {
+        let k = self.k;
+        self.run_rows(bufs, gamma, beta, row0, row1, out, |i, mm_row| {
+            mm_row.fill(0.0);
+            for (kk, &av) in lhs.data[i * k..(i + 1) * k].iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &rhs.data[kk * mm_row.len()..(kk + 1) * mm_row.len()];
+                for (d, &b) in mm_row.iter_mut().zip(brow) {
+                    *d += av * b;
+                }
+            }
+        });
+    }
+
+    /// The shared row loop: compute the matmul row, run the epilogue
+    /// registers through the ONE tape row evaluator (virtual matmul slot
+    /// overridden), then normalize the finished row in place via
+    /// `layernorm_rows` with `rows = 1` — each row fully independent.
+    #[allow(clippy::too_many_arguments)]
+    fn run_rows(
+        &self,
+        bufs: &[View],
+        gamma: View,
+        beta: View,
+        row0: usize,
+        row1: usize,
+        out: &mut [f32],
+        mut mm_row_fn: impl FnMut(usize, &mut [f32]),
+    ) {
+        use crate::compiler::exec::plan::layernorm_rows;
+
+        let tape = &self.tape;
+        debug_assert_eq!(tape.domain.rank(), 2, "layernorm domain is [m, n]");
+        debug_assert_eq!(bufs.len(), tape.inputs.len());
+        let n = tape.domain.dims[1];
+        debug_assert_eq!(out.len(), (row1 - row0) * n, "out covers the requested rows");
+        let ln_reg = tape.output_regs[0].1;
+
+        let mut mm_row = vec![0.0f32; n];
+        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; tape.insts.len()];
+        for i in row0..row1 {
+            mm_row_fn(i, &mut mm_row);
+            tape.eval_row_regs(bufs, i, &mut regs, Some((self.mm_input, &mm_row)));
+            let base = (i - row0) * n;
+            layernorm_rows(
+                &regs[ln_reg],
+                gamma.data,
+                beta.data,
+                self.eps,
+                1,
+                n,
+                &mut out[base..base + n],
+            );
         }
     }
 }
@@ -920,6 +1221,206 @@ mod tests {
         let biased = g2.add(mm, b);
         g2.mark_output(mm); // raw matmul escapes
         g2.mark_output(biased);
+        let plan2 = lp_fusion(&g2, &FusionConfig::default());
+        for blk in &plan2.blocks {
+            assert!(compile_matmul_epilogue(&g2, blk).is_none());
+        }
+    }
+
+    /// The wo/w2 shape: x @ w + b, + residual, -> layernorm, fused into
+    /// one MatmulLayernorm block and executed as one row-pass kernel.
+    fn mm_ln_graph(m: usize, k: usize, n: usize) -> (Graph, [NodeId; 6]) {
+        let mut g = Graph::new();
+        let x = g.input("x", &[m, k], DType::F32);
+        let r = g.input("r", &[m, n], DType::F32);
+        let w = g.weight("w", &[k, n]);
+        let b = g.weight("b", &[n]);
+        let ga = g.weight("gamma", &[n]);
+        let be = g.weight("beta", &[n]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let res = g.add(biased, r);
+        let ln = g.layernorm(res, ga, be, 1e-12);
+        g.mark_output(ln);
+        (g, [x, r, w, b, ga, be])
+    }
+
+    /// Per-node reference over the whole graph, with the matmul's value
+    /// supplied (int8 or fp32) — the unfused execution both fused
+    /// kernels must match bit for bit.
+    fn per_node_reference(g: &Graph, seeded: &[(NodeId, Tensor)]) -> Vec<Tensor> {
+        use crate::compiler::exec::interp::apply_op;
+        let mut vals: std::collections::HashMap<usize, Tensor> = std::collections::HashMap::new();
+        for (nid, t) in seeded {
+            vals.insert(*nid, t.clone());
+        }
+        for nid in 0..g.nodes.len() {
+            if vals.contains_key(&nid) {
+                continue;
+            }
+            if let Op::Const { value } = g.nodes[nid].op {
+                vals.insert(nid, Tensor::scalar(value));
+                continue;
+            }
+            if g.nodes[nid].op.is_leaf() {
+                continue;
+            }
+            let args: Vec<View> =
+                g.nodes[nid].inputs.iter().map(|&i| vals[&i].view()).collect();
+            let t = apply_op(&g.nodes[nid].op, &args, &g.nodes[nid].shape);
+            vals.insert(nid, t);
+        }
+        g.outputs.iter().map(|o| vals[o].clone()).collect()
+    }
+
+    #[test]
+    fn matmul_layernorm_tape_matches_per_node_bitwise() {
+        use crate::compiler::exec::tensor::matmul_i8;
+        use crate::compiler::fusion::BlockKind;
+
+        let (m, k, n) = (9, 12, 8);
+        let (g, [x, r, w, b, ga, be]) = mm_ln_graph(m, k, n);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1, "{:#?}", plan.blocks);
+        assert_eq!(plan.blocks[0].kind, BlockKind::MatmulLayernorm);
+        let mt = compile_matmul_layernorm(&g, &plan.blocks[0]).expect("mm+ln compiles");
+        assert_eq!((mt.lhs, mt.rhs, mt.k), (x, w, k));
+        assert_eq!((mt.gamma, mt.beta), (ga, be));
+
+        let xt = rand_t(&[m, k], 41);
+        let rt = rand_t(&[m, n], 42);
+        let wt = rand_t(&[k, n], 43);
+        let bt = rand_t(&[n], 44);
+        let gat = rand_t(&[n], 45);
+        let bet = rand_t(&[n], 46);
+        let q = QuantizedTensor::per_channel(wt.view());
+        let view_of = |i: NodeId| {
+            if i == x {
+                xt.view()
+            } else if i == r {
+                rt.view()
+            } else if i == b {
+                bt.view()
+            } else {
+                panic!("unexpected epilogue input {i}")
+            }
+        };
+
+        // Fused int8 == per-node int8 (matmul_i8 then graph primitives).
+        let mut fused_i8 = vec![0.0f32; m * n];
+        let bufs = mt.input_views(&g, view_of);
+        mt.execute_i8_rows_into(
+            xt.view(),
+            &q,
+            None,
+            &bufs,
+            gat.view(),
+            bet.view(),
+            0,
+            m,
+            &mut fused_i8,
+        );
+        let mm_i8 = matmul_i8(xt.view(), &q, None, &g.nodes[mt.matmul].shape);
+        let seeds = [
+            (mt.matmul, mm_i8),
+            (x, xt.clone()),
+            (r, rt.clone()),
+            (b, bt.clone()),
+            (ga, gat.clone()),
+            (be, bet.clone()),
+        ];
+        let ref_i8 = per_node_reference(&g, &seeds);
+        assert_eq!(fused_i8, ref_i8[0].data, "fused int8 != per-node int8");
+
+        // Fused fp32 == per-node fp32 (interp matmul, zero-skip and all).
+        let mut fused_f32 = vec![0.0f32; m * n];
+        mt.execute_f32_rows_into(
+            xt.view(),
+            wt.view(),
+            &bufs,
+            gat.view(),
+            bet.view(),
+            0,
+            m,
+            &mut fused_f32,
+        );
+        let mut feeds = std::collections::HashMap::new();
+        feeds.insert("x".to_string(), xt.data.clone());
+        feeds.insert("r".to_string(), rt.data.clone());
+        feeds.insert("w".to_string(), wt.data.clone());
+        feeds.insert("b".to_string(), bt.data.clone());
+        feeds.insert("gamma".to_string(), gat.data.clone());
+        feeds.insert("beta".to_string(), bet.data.clone());
+        let interp = crate::compiler::exec::interp::eval_graph(&g, &feeds).unwrap();
+        assert_eq!(fused_f32, interp[0].data, "fused fp32 != interpreter");
+
+        // Row-range execution composes to the same bits (the wave
+        // executor's split) in both precisions.
+        let mut lo = vec![0.0f32; 4 * n];
+        let mut hi = vec![0.0f32; (m - 4) * n];
+        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, gat.view(), bet.view(), 0, 4, &mut lo);
+        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, gat.view(), bet.view(), 4, m, &mut hi);
+        assert_eq!(&fused_i8[..4 * n], &lo[..]);
+        assert_eq!(&fused_i8[4 * n..], &hi[..]);
+        mt.execute_f32_rows_into(
+            xt.view(),
+            wt.view(),
+            &bufs,
+            gat.view(),
+            bet.view(),
+            0,
+            4,
+            &mut lo,
+        );
+        assert_eq!(&fused_f32[..4 * n], &lo[..]);
+    }
+
+    #[test]
+    fn matmul_layernorm_rejects_non_matching_shapes() {
+        use crate::compiler::fusion::BlockKind;
+
+        // A layernorm-LIKE chain with a foreign `1/n` constant must be
+        // rejected — the fused kernel's `1.0 / cols` would change bits.
+        let (m, k, n) = (4, 4, 4);
+        let mut g = Graph::new();
+        let x = g.input("x", &[m, k], DType::F32);
+        let w = g.weight("w", &[k, n]);
+        let b = g.weight("b", &[n]);
+        let ga = g.weight("gamma", &[n]);
+        let be = g.weight("beta", &[n]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        // Hand-rolled "layernorm" with 1/(n+1) instead of 1/n.
+        let bad_inv = g.constant(1.0 / (n as f32 + 1.0));
+        let s = g.add_op(Op::ReduceSum { axis: 1 }, &[biased]);
+        let mu = g.mul(s, bad_inv);
+        let cx = g.sub(biased, mu);
+        let sq = g.mul(cx, cx);
+        let vs = g.add_op(Op::ReduceSum { axis: 1 }, &[sq]);
+        let var = g.mul(vs, bad_inv);
+        let epsc = g.constant(1e-12);
+        let ve = g.add(var, epsc);
+        let rs = g.add_op(Op::Rsqrt, &[ve]);
+        let norm = g.mul(cx, rs);
+        let scaled = g.mul(norm, ga);
+        let out = g.add(scaled, be);
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        // The chain DOES merge into a MatmulLayernorm block (so the loop
+        // below is not vacuous) — it's the compile step that must refuse.
+        assert!(
+            plan.blocks.iter().any(|blk| blk.kind == BlockKind::MatmulLayernorm),
+            "{:?}",
+            plan.blocks.iter().map(|blk| blk.kind).collect::<Vec<_>>()
+        );
+        for blk in &plan.blocks {
+            if blk.kind == BlockKind::MatmulLayernorm {
+                assert!(compile_matmul_layernorm(&g, blk).is_none());
+            }
+        }
+
+        // And a real mm+ln block is NOT an epilogue block.
+        let (g2, _) = mm_ln_graph(6, 4, 4);
         let plan2 = lp_fusion(&g2, &FusionConfig::default());
         for blk in &plan2.blocks {
             assert!(compile_matmul_epilogue(&g2, blk).is_none());

@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 
 use super::tensor::{for_each_coord, Tensor, View};
-use super::ExecError;
+use super::{ExecError, Feeds};
 use crate::compiler::ir::{Graph, Node, Op, Shape};
 use crate::compiler::passes::const_fold::erf;
 
@@ -15,7 +15,14 @@ use crate::compiler::passes::const_fold::erf;
 /// materializes everything). Validation lives in [`super::leaf_value`],
 /// shared with the plan executors' zero-copy leaf path.
 pub fn leaf_tensor(node: &Node, feeds: &HashMap<String, Vec<f32>>) -> Result<Tensor, ExecError> {
-    let lv = super::leaf_value(node, &super::Feeds::single(feeds))?;
+    leaf_tensor_with(node, &Feeds::single(feeds))
+}
+
+/// As [`leaf_tensor`], over layered [`Feeds`] (leaf data still copied —
+/// the interpreter owns every value — but the *caller* no longer has to
+/// merge its weight map into one flat map per call).
+pub fn leaf_tensor_with(node: &Node, feeds: &Feeds<'_>) -> Result<Tensor, ExecError> {
+    let lv = super::leaf_value(node, feeds)?;
     Ok(Tensor { shape: node.shape.clone(), data: lv.as_slice().to_vec() })
 }
 
@@ -37,6 +44,14 @@ pub fn eval_graph_values(
     g: &Graph,
     feeds: &HashMap<String, Vec<f32>>,
 ) -> Result<Vec<Tensor>, ExecError> {
+    eval_graph_values_with(g, &Feeds::single(feeds))
+}
+
+/// As [`eval_graph_values`], over layered [`Feeds`]: the warmup
+/// calibrators hand a tiny per-sample request map layered over the
+/// engine's persistent weight map, so calibration no longer deep-clones
+/// the whole weight set per call (ROADMAP item).
+pub fn eval_graph_values_with(g: &Graph, feeds: &Feeds<'_>) -> Result<Vec<Tensor>, ExecError> {
     let mut vals: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
     for (id, _node) in g.nodes.iter().enumerate() {
         let t = eval_node(g, id, &vals, feeds)?;
@@ -49,11 +64,11 @@ fn eval_node(
     g: &Graph,
     id: usize,
     vals: &[Option<Tensor>],
-    feeds: &HashMap<String, Vec<f32>>,
+    feeds: &Feeds<'_>,
 ) -> Result<Tensor, ExecError> {
     let node = &g.nodes[id];
     match &node.op {
-        Op::Input { .. } | Op::Weight { .. } | Op::Const { .. } => leaf_tensor(node, feeds),
+        Op::Input { .. } | Op::Weight { .. } | Op::Const { .. } => leaf_tensor_with(node, feeds),
         op => {
             let args: Vec<View> = node
                 .inputs

@@ -38,8 +38,8 @@ pub mod plan;
 pub mod tensor;
 
 pub use parallel::{
-    execute_plan_parallel, execute_plan_parallel_stats, execute_prepared_sinks, ExecStats,
-    PreparedExec,
+    dispatch_counts, execute_plan_parallel, execute_plan_parallel_stats,
+    execute_prepared_sinks, DispatchCounts, ExecStats, PreparedExec,
 };
 pub use tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 

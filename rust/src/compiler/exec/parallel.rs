@@ -12,8 +12,9 @@
 //! of earlier waves' regions and write outputs straight into their own
 //! regions — no per-node allocation, no result copies. That includes the
 //! per-node fallback (block outputs via `apply_op_into`/`matmul_i8_into`)
-//! and the fused INT8 matmul-epilogue tape; only a fallback block's
-//! *internal* values use block-local scratch. The slab itself is checked
+//! and the fused matmul kernels (the INT8 matmul-epilogue tape and the
+//! int8/fp32 matmul+layernorm tape); only a fallback block's *internal*
+//! values use block-local scratch. The slab itself is checked
 //! out of a per-`PreparedExec` [`SlabPool`], so steady-state serving
 //! performs zero large allocations per request.
 //!
@@ -48,7 +49,8 @@ use super::{
     leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights,
 };
 use crate::compiler::codegen::tape::{
-    compile_block, compile_matmul_epilogue, BlockTape, MatmulEpilogueTape,
+    compile_block, compile_matmul_epilogue, compile_matmul_layernorm, BlockTape,
+    MatmulEpilogueTape, MatmulLayernormTape,
 };
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId};
@@ -329,9 +331,114 @@ enum Kernel {
     /// dispatch is resolved at run time); fp32 requests take the
     /// per-node fallback as before.
     MatmulEpi(MatmulEpilogueTape),
+    /// A matmul -> bias -> residual -> layernorm block (the wo/w2
+    /// projections). Always fused: the int8 variant when the weight has
+    /// a table entry, the interp-mirroring fp32 variant otherwise —
+    /// never the per-node fallback.
+    MatmulLn(MatmulLayernormTape),
     Softmax(SoftmaxPattern),
     Layernorm(LayernormPattern),
     Fallback,
+}
+
+/// Per-kernel dispatch census for one (compiled plan, int8 table)
+/// pairing. Kernel selection is fully determined by the prepared
+/// [`Kernel`]s plus which matmuls have entries in the `QuantizedWeights`
+/// table, so the census is exact for every execution with that table —
+/// both executors make the same dispatch (`tests/fused_int8.rs` pins it).
+///
+/// The load-bearing field is `fallback_i8_matmul`: an int8 matmul
+/// executed per-node *inside a multi-op fallback block* — the
+/// scratch-compute-then-rescale shape the fused kernels exist to
+/// eliminate. `direct_i8_matmul` (a single-op matmul block, e.g. the LM
+/// head) is NOT a fallback: there is no epilogue to fuse, and the kernel
+/// writes straight into its arena region.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchCounts {
+    /// Fused int8 matmul+epilogue tape dispatches.
+    pub fused_epilogue_i8: usize,
+    /// Fused int8 matmul+layernorm dispatches.
+    pub fused_layernorm_i8: usize,
+    /// Fused fp32 matmul+layernorm dispatches.
+    pub fused_layernorm_f32: usize,
+    /// Elementwise tape blocks.
+    pub tape: usize,
+    /// Native softmax / layernorm reduction kernels.
+    pub native_softmax: usize,
+    pub native_layernorm: usize,
+    /// Single-op matmul blocks on the int8 kernel (nothing to fuse).
+    pub direct_i8_matmul: usize,
+    /// Int8 matmuls run per-node inside a multi-op fallback block — the
+    /// shape the fused kernels eliminate; zero on the compressed BERT
+    /// graphs (asserted by tests and the CI bench smoke).
+    pub fallback_i8_matmul: usize,
+    /// Blocks taking the per-node fallback (any precision).
+    pub fallback_blocks: usize,
+}
+
+impl std::fmt::Display for DispatchCounts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fused-epi-i8 {}, fused-ln-i8 {}, fused-ln-f32 {}, direct-i8 {}, \
+             int8-fallback {}, tape {}, softmax {}, layernorm {}, fallback-blocks {}",
+            self.fused_epilogue_i8,
+            self.fused_layernorm_i8,
+            self.fused_layernorm_f32,
+            self.direct_i8_matmul,
+            self.fallback_i8_matmul,
+            self.tape,
+            self.native_softmax,
+            self.native_layernorm,
+            self.fallback_blocks,
+        )
+    }
+}
+
+/// Compute the dispatch census (see [`DispatchCounts`]). Mirrors
+/// [`run_block`]'s dispatch decisions one-for-one.
+pub fn dispatch_counts(
+    g: &Graph,
+    plan: &FusionPlan,
+    prep: &PreparedExec,
+    quant: Option<&QuantizedWeights>,
+) -> DispatchCounts {
+    let mut c = DispatchCounts::default();
+    let count_fallback = |block: &FusedBlock, c: &mut DispatchCounts| {
+        c.fallback_blocks += 1;
+        for &n in &block.nodes {
+            if quant_matmul(g, n, quant).is_some() {
+                if block.nodes.len() == 1 {
+                    c.direct_i8_matmul += 1;
+                } else {
+                    c.fallback_i8_matmul += 1;
+                }
+            }
+        }
+    };
+    for (block, kernel) in plan.blocks.iter().zip(&prep.kernels) {
+        match kernel {
+            Kernel::Tape(_) => c.tape += 1,
+            Kernel::Softmax(_) => c.native_softmax += 1,
+            Kernel::Layernorm(_) => c.native_layernorm += 1,
+            Kernel::MatmulEpi(mt) => {
+                if quant_matmul(g, mt.matmul, quant).is_some() {
+                    c.fused_epilogue_i8 += 1;
+                } else {
+                    count_fallback(block, &mut c);
+                }
+            }
+            Kernel::MatmulLn(mt) => {
+                if quant_matmul(g, mt.matmul, quant).is_some() {
+                    c.fused_layernorm_i8 += 1;
+                } else {
+                    c.fused_layernorm_f32 += 1;
+                }
+            }
+            Kernel::Fallback => count_fallback(block, &mut c),
+        }
+    }
+    c
 }
 
 fn prepare_kernel(g: &Graph, block: &FusedBlock) -> Kernel {
@@ -347,6 +454,10 @@ fn prepare_kernel(g: &Graph, block: &FusedBlock) -> Kernel {
         }
         BlockKind::MatmulEpilogue => match compile_matmul_epilogue(g, block) {
             Some(mt) => Kernel::MatmulEpi(mt),
+            None => Kernel::Fallback,
+        },
+        BlockKind::MatmulLayernorm => match compile_matmul_layernorm(g, block) {
+            Some(mt) => Kernel::MatmulLn(mt),
             None => Kernel::Fallback,
         },
         BlockKind::Reduction => {
@@ -459,6 +570,23 @@ fn run_block(
                 fallback_block(g, block, leaf, slab, arena, quant);
             }
         }
+        Kernel::MatmulLn(mt) => {
+            // Fused matmul+layernorm: one row pass from quantized (or
+            // fp32) MACs through bias/residual to the normalized row,
+            // written straight into the output's arena region.
+            let lhs = value_view(g, mt.lhs, leaf, slab, arena);
+            let gamma = value_view(g, mt.gamma, leaf, slab, arena);
+            let beta = value_view(g, mt.beta, leaf, slab, arena);
+            let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
+            let out = out_region(slab, arena, mt.out);
+            let m = mt.tape.domain.dims[0];
+            if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
+                mt.execute_i8_rows_into(lhs, qt, scale, &bufs, gamma, beta, 0, m, out);
+            } else {
+                let rhs = value_view(g, mt.rhs, leaf, slab, arena);
+                mt.execute_f32_rows_into(lhs, rhs, &bufs, gamma, beta, 0, m, out);
+            }
+        }
         Kernel::Fallback => fallback_block(g, block, leaf, slab, arena, quant),
     }
 }
@@ -514,11 +642,12 @@ fn fallback_block(
 }
 
 /// Split a lone 2-D block's rows across threads: elementwise tapes under
-/// the row-recompute schedule, and fused INT8 matmul-epilogue kernels
-/// (whose rows are independent by construction — each quantizes its own
-/// LHS row). Returns false (nothing executed) when the kernel/schedule/
-/// shape doesn't allow row splitting — the caller then falls back to
-/// whole-block execution.
+/// the row-recompute schedule, fused INT8 matmul-epilogue kernels, and
+/// fused matmul+layernorm kernels in both precisions (rows are
+/// independent by construction — each quantizes its own LHS row, and
+/// layernorm is row-local). Returns false (nothing executed) when the
+/// kernel/schedule/shape doesn't allow row splitting — the caller then
+/// falls back to whole-block execution.
 #[allow(clippy::too_many_arguments)]
 fn row_parallel(
     g: &Graph,
@@ -532,11 +661,20 @@ fn row_parallel(
     quant: Option<&QuantizedWeights>,
 ) -> bool {
     // Resolve the kernel to a row-splittable form first; one shared
-    // chunking loop then serves both (a policy change in the split can
-    // never diverge between the two kernels).
+    // chunking loop then serves every kernel (a policy change in the
+    // split can never diverge between them).
     enum RowKernel<'k> {
         Tape(&'k BlockTape),
         I8(&'k MatmulEpilogueTape, View<'k>, &'k QuantizedTensor, Option<f32>),
+        LnI8(
+            &'k MatmulLayernormTape,
+            View<'k>,
+            &'k QuantizedTensor,
+            Option<f32>,
+            View<'k>,
+            View<'k>,
+        ),
+        LnF32(&'k MatmulLayernormTape, View<'k>, View<'k>, View<'k>, View<'k>),
     }
 
     // Cheap eligibility checks first (schedule/rank/row count) so the
@@ -549,9 +687,10 @@ fn row_parallel(
             }
             &tape.domain
         }
-        // The fused kernel's domain is [m, n] by construction; the
-        // schedule is irrelevant (it always walks rows).
+        // The fused kernels' domains are [m, n] by construction; the
+        // schedule is irrelevant (they always walk rows).
         Kernel::MatmulEpi(mt) => &mt.tape.domain,
+        Kernel::MatmulLn(mt) => &mt.tape.domain,
         _ => return false,
     };
     let (m, n) = (domain.dims[0], domain.dims[1]);
@@ -578,6 +717,20 @@ fn row_parallel(
             let lhs = value_view(g, mt.lhs, leaf, slab, arena);
             let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
             (bufs, RowKernel::I8(mt, lhs, qt, scale))
+        }
+        Kernel::MatmulLn(mt) => {
+            let lhs = value_view(g, mt.lhs, leaf, slab, arena);
+            let gamma = value_view(g, mt.gamma, leaf, slab, arena);
+            let beta = value_view(g, mt.beta, leaf, slab, arena);
+            let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
+            let rk = match quant_matmul(g, mt.matmul, quant) {
+                Some((qt, scale)) => RowKernel::LnI8(mt, lhs, qt, scale, gamma, beta),
+                None => {
+                    let rhs = value_view(g, mt.rhs, leaf, slab, arena);
+                    RowKernel::LnF32(mt, lhs, rhs, gamma, beta)
+                }
+            };
+            (bufs, rk)
         }
         _ => unreachable!("filtered above"),
     };
@@ -613,6 +766,18 @@ fn row_parallel(
                     }
                     RowKernel::I8(mt, lhs, qt, scale) => {
                         mt.execute_i8_rows_into(*lhs, qt, *scale, bufs, row0, row1, &mut mine);
+                    }
+                    RowKernel::LnI8(mt, lhs, qt, scale, gamma, beta) => {
+                        let out = mine.swap_remove(0);
+                        mt.execute_i8_rows_into(
+                            *lhs, qt, *scale, bufs, *gamma, *beta, row0, row1, out,
+                        );
+                    }
+                    RowKernel::LnF32(mt, lhs, rhs, gamma, beta) => {
+                        let out = mine.swap_remove(0);
+                        mt.execute_f32_rows_into(
+                            *lhs, *rhs, bufs, *gamma, *beta, row0, row1, out,
+                        );
                     }
                 }
             });
@@ -726,6 +891,80 @@ mod tests {
                 execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), threads).unwrap();
             assert_eq!(got[0].data, seq[0].data);
         }
+    }
+
+    #[test]
+    fn matmul_layernorm_row_splits_bitwise() {
+        // Tall fused matmul+layernorm block (m = 256): the wave executor
+        // row-splits the fp32 fused kernel; bits must not move vs the
+        // sequential executor.
+        let mut g = Graph::new();
+        let x = g.input("x", &[256, 24], DType::F32);
+        let r = g.input("r", &[256, 16], DType::F32);
+        let w = g.weight("w", &[24, 16]);
+        let b = g.weight("b", &[16]);
+        let ga = g.weight("gamma", &[16]);
+        let be = g.weight("beta", &[16]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let res = g.add(biased, r);
+        let ln = g.layernorm(res, ga, be, 1e-12);
+        g.mark_output(ln);
+
+        let feeds = feeds_for(&g, 31);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1, "one fused mm+ln block");
+        let seq = execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap();
+        for threads in [2, 4] {
+            let got =
+                execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), threads).unwrap();
+            assert_eq!(got[0].data, seq[0].data, "row-split mm+ln != sequential");
+        }
+    }
+
+    #[test]
+    fn dispatch_census_matches_kernel_selection() {
+        // mm+ln graph: fp32 census reports the fused fp32 kernel; with
+        // an int8 table it flips to the fused int8 kernel; and a
+        // fusion-disabled plan reports the direct single-op dispatch —
+        // never the multi-op fallback shape.
+        let mut g = Graph::new();
+        let x = g.input("x", &[8, 8], DType::F32);
+        let r = g.input("r", &[8, 8], DType::F32);
+        let w = g.weight("w", &[8, 8]);
+        let b = g.weight("b", &[8]);
+        let ga = g.weight("gamma", &[8]);
+        let be = g.weight("beta", &[8]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let res = g.add(biased, r);
+        let ln = g.layernorm(res, ga, be, 1e-12);
+        g.mark_output(ln);
+
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let prep = PreparedExec::new(&g, &plan);
+        let fp32 = dispatch_counts(&g, &plan, &prep, None);
+        assert_eq!(fp32.fused_layernorm_f32, 1);
+        assert_eq!(fp32.fused_layernorm_i8, 0);
+        assert_eq!(fp32.fallback_i8_matmul, 0);
+
+        let mut qw = QuantizedWeights::default();
+        let mut rng = Rng::new(5);
+        let wt = crate::compiler::exec::tensor::Tensor::randn(&[8, 8], &mut rng, 0.3);
+        qw.by_node
+            .insert(w, crate::compiler::exec::tensor::QuantizedTensor::per_channel(wt.view()));
+        let i8c = dispatch_counts(&g, &plan, &prep, Some(&qw));
+        assert_eq!(i8c.fused_layernorm_i8, 1);
+        assert_eq!(i8c.fused_layernorm_f32, 0);
+        assert_eq!(i8c.fallback_i8_matmul, 0);
+
+        // Fusion disabled: the lone matmul block is a DIRECT int8
+        // dispatch (nothing to fuse), not a fallback.
+        let unfused = lp_fusion(&g, &FusionConfig::disabled());
+        let uprep = PreparedExec::new(&g, &unfused);
+        let uc = dispatch_counts(&g, &unfused, &uprep, Some(&qw));
+        assert_eq!(uc.direct_i8_matmul, 1);
+        assert_eq!(uc.fallback_i8_matmul, 0);
     }
 
     #[test]

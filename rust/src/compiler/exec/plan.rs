@@ -11,6 +11,11 @@
 //!   quantized tape kernel (`codegen::tape::MatmulEpilogueTape`): LHS
 //!   rows quantized once, i8 x i8 -> i32, rescale + bias + activation in
 //!   one pass — the §2.1 x §2.2 co-design point.
+//! * Matmul-layernorm blocks (matmul -> bias -> residual -> layernorm,
+//!   the wo/w2 projections) -> the fused matmul+layernorm kernel
+//!   (`codegen::tape::MatmulLayernormTape`): the same row pass continues
+//!   through the two-pass normalization, int8 or fp32 — no per-node int8
+//!   fallback remains on the compressed BERT path.
 //! * Everything else -> per-node fallback via `interp::apply_op`
 //!   (always correct; the perf-critical inference path runs on
 //!   `exec::parallel` or PJRT).
@@ -24,7 +29,9 @@ use std::collections::HashMap;
 use super::interp::apply_op;
 use super::tensor::{matmul_i8, Tensor, View};
 use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights};
-use crate::compiler::codegen::tape::{compile_block, compile_matmul_epilogue};
+use crate::compiler::codegen::tape::{
+    compile_block, compile_matmul_epilogue, compile_matmul_layernorm,
+};
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
 use crate::compiler::ir::{Graph, NodeId, Op, Shape};
 use crate::compiler::poly::Schedule;
@@ -223,6 +230,35 @@ pub fn execute_block(
             }
             fallback(g, block, leaf, vals, quant);
         }
+        BlockKind::MatmulLayernorm => {
+            // The last int8 gap closed: matmul -> bias -> residual ->
+            // layernorm runs as ONE row-pass kernel (int8 when the weight
+            // has a table entry, interp-mirroring fp32 otherwise), never
+            // the per-node fallback. Blocks that don't match the chain
+            // shape still fall back.
+            if let Some(mt) = compile_matmul_layernorm(g, block) {
+                let shape = g.nodes[mt.out].shape.clone();
+                let mut data = vec![0.0f32; shape.numel()];
+                {
+                    let lhs = value_view(g, mt.lhs, leaf, vals);
+                    let gamma = value_view(g, mt.gamma, leaf, vals);
+                    let beta = value_view(g, mt.beta, leaf, vals);
+                    let bufs = mt.input_views(g, |i| value_view(g, i, leaf, vals));
+                    let m = mt.tape.domain.dims[0];
+                    if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
+                        mt.execute_i8_rows_into(
+                            lhs, qt, scale, &bufs, gamma, beta, 0, m, &mut data,
+                        );
+                    } else {
+                        let rhs = value_view(g, mt.rhs, leaf, vals);
+                        mt.execute_f32_rows_into(lhs, rhs, &bufs, gamma, beta, 0, m, &mut data);
+                    }
+                }
+                vals.insert(mt.out, Tensor { shape, data });
+                return;
+            }
+            fallback(g, block, leaf, vals, quant);
+        }
         _ => fallback(g, block, leaf, vals, quant),
     }
 }
@@ -352,57 +388,147 @@ pub struct LayernormPattern {
     pub out: NodeId,
 }
 
+/// The `Graph::layernorm` primitive chain rooted at an output node, fully
+/// resolved: the normalized input, the affine parameters, and every chain
+/// member. This is the ONE structural walker behind both the standalone
+/// reduction matcher ([`match_layernorm`]) and the fused
+/// matmul+layernorm kernel (`codegen::tape::compile_matmul_layernorm`) —
+/// a pattern change can never split the two.
+#[derive(Debug, Clone)]
+pub struct LayernormChain {
+    pub x: NodeId,
+    pub gamma: NodeId,
+    pub beta: NodeId,
+    pub eps: f32,
+    pub out: NodeId,
+    /// The 11 chain members (s, mu, cx, sq, vs, var, ve, rs, norm,
+    /// scaled, out), in dataflow order.
+    pub nodes: Vec<NodeId>,
+}
+
+/// Match the exact `Graph::layernorm` lowering upward from `out`:
+/// `add(mul(mul(sub(x, mul(sum(x), 1/n)), rsqrt(mul(sum(cx*cx), 1/n) +
+/// eps)), gamma), beta)`. Commutative operands are accepted in either
+/// order (the canonicalize pass sorts them by node id, so the spelling
+/// varies per site), and both `1/n` constants must hold the bitwise value
+/// `1.0 / cols` the row kernels use — anything else is layernorm-*like*
+/// and must take the per-node path to preserve the bitwise contract.
+pub fn match_layernorm_chain(g: &Graph, out: NodeId) -> Option<LayernormChain> {
+    let is_const = |n: NodeId| matches!(g.nodes[n].op, Op::Const { .. });
+    let const_val = |n: NodeId| match g.nodes[n].op {
+        Op::Const { value } => Some(value),
+        _ => None,
+    };
+    // (const operand, other operand) of a commutative node, if exactly
+    // one side is a Const.
+    let split_const = |n: NodeId| -> Option<(f32, NodeId)> {
+        let ins = &g.nodes[n].inputs;
+        match (const_val(ins[0]), const_val(ins[1])) {
+            (Some(v), None) => Some((v, ins[1])),
+            (None, Some(v)) => Some((v, ins[0])),
+            _ => None,
+        }
+    };
+
+    if g.nodes[out].op != Op::Add {
+        return None;
+    }
+    let both = |n: NodeId| {
+        let ins = &g.nodes[n].inputs;
+        [(ins[0], ins[1]), (ins[1], ins[0])]
+    };
+    for (scaled, beta) in both(out) {
+        if g.nodes[scaled].op != Op::Mul {
+            continue;
+        }
+        for (norm, gamma) in both(scaled) {
+            if g.nodes[norm].op != Op::Mul {
+                continue;
+            }
+            for (cx, rs) in both(norm) {
+                if g.nodes[cx].op != Op::Sub || g.nodes[rs].op != Op::Rsqrt {
+                    continue;
+                }
+                let (x, mu) = (g.nodes[cx].inputs[0], g.nodes[cx].inputs[1]);
+                if g.nodes[mu].op != Op::Mul || is_const(x) {
+                    continue;
+                }
+                let Some((inv1, s)) = split_const(mu) else { continue };
+                let Op::ReduceSum { axis: ax1 } = g.nodes[s].op else { continue };
+                if g.nodes[s].inputs[0] != x {
+                    continue;
+                }
+                // Variance side: rsqrt(var * 1/n + eps).
+                let ve = g.nodes[rs].inputs[0];
+                if g.nodes[ve].op != Op::Add {
+                    continue;
+                }
+                let Some((eps, var)) = split_const(ve) else { continue };
+                if g.nodes[var].op != Op::Mul {
+                    continue;
+                }
+                let Some((inv2, vs)) = split_const(var) else { continue };
+                let Op::ReduceSum { axis: ax2 } = g.nodes[vs].op else { continue };
+                let sq = g.nodes[vs].inputs[0];
+                if g.nodes[sq].op != Op::Mul
+                    || g.nodes[sq].inputs[0] != cx
+                    || g.nodes[sq].inputs[1] != cx
+                {
+                    continue;
+                }
+                // Last-axis reduces with the exact `1/n` the kernels use.
+                let rank = g.nodes[x].shape.rank();
+                let cols = *g.nodes[x].shape.dims.last()?;
+                if ax1 + 1 != rank || ax2 + 1 != rank {
+                    continue;
+                }
+                let inv_n = 1.0 / cols as f32;
+                if inv1 != inv_n || inv2 != inv_n {
+                    continue;
+                }
+                return Some(LayernormChain {
+                    x,
+                    gamma,
+                    beta,
+                    eps,
+                    out,
+                    nodes: vec![s, mu, cx, sq, vs, var, ve, rs, norm, scaled, out],
+                });
+            }
+        }
+    }
+    None
+}
+
 pub fn match_layernorm(g: &Graph, block: &FusedBlock) -> Option<LayernormPattern> {
-    // Structural fingerprint: 2x ReduceSum, 1x Rsqrt, final add; input x is
-    // the ReduceSum operand that is also used by a Sub.
+    // A standalone layernorm block: exactly the 11-node chain, with the
+    // normalized input external to the block.
     if block.outputs.len() != 1 {
         return None;
     }
-    let reduces: Vec<NodeId> = block
-        .nodes
-        .iter()
-        .copied()
-        .filter(|&n| matches!(g.nodes[n].op, Op::ReduceSum { .. }))
-        .collect();
-    let rsqrts: Vec<NodeId> = block
-        .nodes
-        .iter()
-        .copied()
-        .filter(|&n| g.nodes[n].op == Op::Rsqrt)
-        .collect();
-    if reduces.len() != 2 || rsqrts.len() != 1 || block.nodes.len() != 12 {
+    let chain = match_layernorm_chain(g, block.outputs[0])?;
+    if block.nodes.len() != chain.nodes.len()
+        || !chain.nodes.iter().all(|n| block.nodes.contains(n))
+        || block.nodes.contains(&chain.x)
+    {
         return None;
     }
-    let out_id = block.outputs[0];
-    let final_add = &g.nodes[out_id];
-    if final_add.op != Op::Add {
-        return None;
+    // gamma/beta must broadcast over the row exactly like the kernel's
+    // modulo indexing does: [cols] or scalar.
+    let cols = *g.nodes[chain.out].shape.dims.last()?;
+    for p in [chain.gamma, chain.beta] {
+        let pn = g.nodes[p].shape.numel();
+        if pn != cols && pn != 1 {
+            return None;
+        }
     }
-    // x = the external input of the first reduce.
-    let x = g.nodes[reduces[0]].inputs[0];
-    if block.nodes.contains(&x) {
-        return None; // expected external
-    }
-    // gamma/beta: external non-scalar inputs of the last mul/add.
-    let scaled = final_add.inputs[0];
-    let beta = final_add.inputs[1];
-    if g.nodes[scaled].op != Op::Mul {
-        return None;
-    }
-    let gamma = g.nodes[scaled].inputs[1];
-    // eps: the Const added before rsqrt.
-    let ve = g.nodes[rsqrts[0]].inputs[0];
-    if g.nodes[ve].op != Op::Add {
-        return None;
-    }
-    let eps = match g.nodes[g.nodes[ve].inputs[1]].op {
-        Op::Const { value } => value,
-        _ => match g.nodes[g.nodes[ve].inputs[0]].op {
-            Op::Const { value } => value,
-            _ => return None,
-        },
-    };
-    Some(LayernormPattern { x, gamma, beta, eps, out: out_id })
+    Some(LayernormPattern {
+        x: chain.x,
+        gamma: chain.gamma,
+        beta: chain.beta,
+        eps: chain.eps,
+        out: chain.out,
+    })
 }
 
 /// Two-pass layernorm over contiguous rows; gamma/beta broadcast by
@@ -491,6 +617,63 @@ mod tests {
         let o = g.layernorm(x, ga, be, 1e-12);
         g.mark_output(o);
         check_plan_matches_interp(&g, &FusionConfig::default(), 12);
+    }
+
+    #[test]
+    fn matmul_layernorm_native_matches_interp_and_fallback_bitwise() {
+        // The fused fp32 matmul+layernorm kernel vs the interpreter AND
+        // vs the per-node execution of a fusion-disabled plan — all
+        // three bitwise identical (interp-mirroring matmul + shared
+        // layernorm arithmetic).
+        let mut g = Graph::new();
+        let x = g.input("x", &[6, 10], DType::F32);
+        let r = g.input("r", &[6, 8], DType::F32);
+        let w = g.weight("w", &[10, 8]);
+        let b = g.weight("b", &[8]);
+        let ga = g.weight("gamma", &[8]);
+        let be = g.weight("beta", &[8]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let res = g.add(biased, r);
+        let ln = g.layernorm(res, ga, be, 1e-12);
+        g.mark_output(ln);
+
+        let feeds = feeds_for(&g, 77);
+        let expect = eval_graph(&g, &feeds).unwrap();
+        let fused = lp_fusion(&g, &FusionConfig::default());
+        assert!(fused
+            .blocks
+            .iter()
+            .any(|bl| crate::compiler::codegen::tape::compile_matmul_layernorm(&g, bl)
+                .is_some()));
+        let got = execute_plan(&g, &fused, &feeds, &HashMap::new()).unwrap();
+        assert_eq!(got[0].data, expect[0].data, "fused fp32 != interp");
+        let unfused = lp_fusion(&g, &FusionConfig::disabled());
+        let per_node = execute_plan(&g, &unfused, &feeds, &HashMap::new()).unwrap();
+        assert_eq!(got[0].data, per_node[0].data, "fused fp32 != per-node");
+    }
+
+    #[test]
+    fn standalone_layernorm_block_matches_native_kernel() {
+        // An 11-node pure-layernorm block (x external) now matches the
+        // native row kernel; numerics must stay bitwise-equal to the
+        // per-node path (the kernels mirror the graph primitives).
+        let mut g = Graph::new();
+        let x = g.input("x", &[4, 16], DType::F32);
+        let ga = g.weight("gamma", &[16]);
+        let be = g.weight("beta", &[16]);
+        let o = g.layernorm(x, ga, be, 1e-12);
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        let p = match_layernorm(&g, &plan.blocks[0]).expect("pure LN block matches");
+        assert_eq!((p.x, p.gamma, p.beta), (x, ga, be));
+        let feeds = feeds_for(&g, 78);
+        let fused = execute_plan(&g, &plan, &feeds, &HashMap::new()).unwrap();
+        let per_node =
+            execute_plan(&g, &lp_fusion(&g, &FusionConfig::disabled()), &feeds, &HashMap::new())
+                .unwrap();
+        assert_eq!(fused[0].data, per_node[0].data);
     }
 
     #[test]

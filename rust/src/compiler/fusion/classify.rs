@@ -14,6 +14,12 @@ pub enum BlockKind {
     Reduction,
     /// One matmul + elementwise prologue/epilogue.
     MatmulEpilogue,
+    /// One matmul whose epilogue contains a reduction — the deliberate
+    /// case is `matmul -> bias -> residual-add -> layernorm` (the wo/w2
+    /// projections), compiled by `codegen::tape::compile_matmul_layernorm`
+    /// into a single row-pass kernel; reduction-bearing shapes that don't
+    /// match the layernorm chain fall back to per-node execution.
+    MatmulLayernorm,
     /// Two matmuls + softmax between: the attention core.
     AttentionCore,
     /// A single unfused op (matmul alone, transpose, gather, reshape, ...).
@@ -31,6 +37,9 @@ pub fn classify(g: &Graph, nodes: &[NodeId]) -> BlockKind {
     if matmuls == 1 {
         if nodes.len() == 1 {
             return BlockKind::Opaque;
+        }
+        if reduces > 0 {
+            return BlockKind::MatmulLayernorm;
         }
         return BlockKind::MatmulEpilogue;
     }

@@ -317,24 +317,24 @@ fn can_merge(
     if mm_ids.len() > 2 {
         return false;
     }
+    let merged: HashSet<NodeId> = p_members.iter().chain(&c_members).copied().collect();
+    // In-block forward reachability (blocks are capped at max_block_ops
+    // members, so this stays tiny) — shared by both matmul-count rules.
+    let reach = |start: NodeId| -> HashSet<NodeId> {
+        let mut seen = HashSet::new();
+        let mut stack = vec![start];
+        while let Some(x) = stack.pop() {
+            for &u in &users[x] {
+                if merged.contains(&u) && seen.insert(u) {
+                    stack.push(u);
+                }
+            }
+        }
+        seen
+    };
     if mm_ids.len() == 2 {
         let lo = *mm_ids.iter().min().expect("two matmuls");
         let hi = *mm_ids.iter().max().expect("two matmuls");
-        let merged: HashSet<NodeId> = p_members.iter().chain(&c_members).copied().collect();
-        // In-block forward reachability (blocks are capped at
-        // max_block_ops members, so this stays tiny).
-        let reach = |start: NodeId| -> HashSet<NodeId> {
-            let mut seen = HashSet::new();
-            let mut stack = vec![start];
-            while let Some(x) = stack.pop() {
-                for &u in &users[x] {
-                    if merged.contains(&u) && seen.insert(u) {
-                        stack.push(u);
-                    }
-                }
-            }
-            seen
-        };
         let from_lo = reach(lo);
         let softmax_between = merged.iter().any(|&m| {
             g.nodes[m].op.is_reduce() && from_lo.contains(&m) && reach(m).contains(&hi)
@@ -344,10 +344,82 @@ fn can_merge(
         }
     }
 
+    // ONE matmul sharing a block with reductions is allowed in exactly two
+    // deliberate shapes (previously any such merge happened accidentally
+    // and ran per-node):
+    //  1. the reductions include a ReduceMax — a softmax under
+    //     construction on its way to the two-matmul attention core (the
+    //     rule above gates the final shape);
+    //  2. every reduction is a layernorm *statistic* — a last-axis
+    //     ReduceSum downstream of the matmul through at least one
+    //     elementwise epilogue node, feeding either the centering
+    //     `sub(x, mul(sum(x), 1/n))` or summing a square — the
+    //     normalization-epilogue shape (matmul -> bias -> residual ->
+    //     layernorm) the fused MatmulLayernorm tape kernel executes in
+    //     one row pass. A reduce reading the matmul DIRECTLY (an
+    //     epilogue-free normalization) is refused: the matmul then keeps
+    //     its direct dispatch and the layernorm its native kernel.
+    // Anything else — an unrelated reduction, a mean-pooling sum — would
+    // merge into a block with no fused kernel, stealing the matmul's
+    // fusable epilogue; keep them apart instead. (The shape test is
+    // structural, not bitwise: a layernorm-LIKE chain with foreign
+    // constants can still form a block here that
+    // `compile_matmul_layernorm` then rejects into the per-node
+    // fallback, which stays correct — just unfused.)
+    if mm_ids.len() == 1 {
+        let reduce_nodes: Vec<NodeId> =
+            merged.iter().copied().filter(|&m| g.nodes[m].op.is_reduce()).collect();
+        let softmax_marker = reduce_nodes
+            .iter()
+            .any(|&m| matches!(g.nodes[m].op, Op::ReduceMax { .. }));
+        if !reduce_nodes.is_empty() && !softmax_marker {
+            let reachable = reach(mm_ids[0]);
+            let normalizes_matmul_directly = reduce_nodes
+                .iter()
+                .any(|&r| g.nodes[r].inputs.contains(&mm_ids[0]));
+            if normalizes_matmul_directly {
+                return false;
+            }
+            // Is `r` one of the two layernorm statistics? Judged on the
+            // FULL graph (not the partial merged set), so the answer is
+            // stable across the fixpoint's merge order.
+            let is_norm_stat = |r: NodeId| -> bool {
+                let x = g.nodes[r].inputs[0];
+                // Variance statistic: a sum over an elementwise square.
+                if g.nodes[x].op == Op::Mul && g.nodes[x].inputs[0] == g.nodes[x].inputs[1] {
+                    return true;
+                }
+                // Mean statistic: sum -> mul-by-const -> sub(x, mean).
+                users[r].iter().any(|&u| {
+                    g.nodes[u].op == Op::Mul
+                        && g.nodes[u]
+                            .inputs
+                            .iter()
+                            .any(|&i| matches!(g.nodes[i].op, Op::Const { .. }))
+                        && users[u].iter().any(|&w| {
+                            g.nodes[w].op == Op::Sub
+                                && g.nodes[w].inputs[0] == x
+                                && g.nodes[w].inputs[1] == u
+                        })
+                })
+            };
+            for &r in &reduce_nodes {
+                let last_axis = match g.nodes[r].op {
+                    Op::ReduceSum { axis } => {
+                        axis + 1 == g.nodes[g.nodes[r].inputs[0]].shape.rank()
+                    }
+                    _ => false,
+                };
+                if !last_axis || !reachable.contains(&r) || !is_norm_stat(r) {
+                    return false;
+                }
+            }
+        }
+    }
+
     // Footprint: internal intermediates must fit the fast-memory budget.
     // Graph outputs are written to main memory regardless, so they don't
     // occupy the block's fast-memory working set.
-    let merged: HashSet<NodeId> = p_members.iter().chain(&c_members).copied().collect();
     let mut footprint = 0usize;
     for &m in &merged {
         let internal = users[m].iter().all(|u| merged.contains(u)) && !outputs.contains(&m);
@@ -457,6 +529,95 @@ mod tests {
         for b in &plan.blocks {
             assert_eq!(b.kind, BlockKind::MatmulEpilogue);
         }
+    }
+
+    /// The wo/w2 shape: matmul -> bias -> residual-add -> layernorm must
+    /// fuse into ONE deliberate MatmulLayernorm block (the fused
+    /// matmul+layernorm tape kernel's input shape) — previously this
+    /// merge happened accidentally and ran per-node.
+    #[test]
+    fn matmul_bias_residual_layernorm_forms_one_block() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[8, 16], DType::F32);
+        let r = g.input("r", &[8, 12], DType::F32);
+        let w = g.weight("w", &[16, 12]);
+        let b = g.weight("b", &[12]);
+        let ga = g.weight("gamma", &[12]);
+        let be = g.weight("beta", &[12]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let res = g.add(biased, r);
+        let ln = g.layernorm(res, ga, be, 1e-12);
+        g.mark_output(ln);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1, "{:#?}", plan.blocks);
+        assert_eq!(plan.blocks[0].kind, BlockKind::MatmulLayernorm);
+        assert_eq!(plan.blocks[0].nodes.len(), 14); // mm + 2 adds + 11 LN ops
+    }
+
+    /// The epilogue-free shape `layernorm(matmul(x, w))` must NOT merge:
+    /// the fused kernel needs at least one elementwise epilogue node, so
+    /// merging would form a block with no kernel. Kept apart, the matmul
+    /// gets its direct dispatch and the layernorm its native kernel.
+    #[test]
+    fn epilogue_free_matmul_layernorm_stays_split() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[8, 16], DType::F32);
+        let w = g.weight("w", &[16, 12]);
+        let ga = g.weight("gamma", &[12]);
+        let be = g.weight("beta", &[12]);
+        let mm = g.matmul(x, w);
+        let ln = g.layernorm(mm, ga, be, 1e-12);
+        g.mark_output(ln);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let mm_block = plan.blocks.iter().find(|b| b.nodes.contains(&mm)).unwrap();
+        assert_eq!(mm_block.nodes.len(), 1, "{:#?}", plan.blocks);
+        assert!(plan.blocks.iter().all(|b| b.kind != BlockKind::MatmulLayernorm));
+    }
+
+    /// A mean-pooling head (matmul -> bias -> last-axis reduce_sum ->
+    /// * 1/n, no centering) is NOT a layernorm statistic: the matmul
+    /// must keep its fusable bias epilogue instead of merging into a
+    /// kernel-less block that would run per-node.
+    #[test]
+    fn matmul_does_not_merge_with_mean_pooling_reduce() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[8, 16], DType::F32);
+        let w = g.weight("w", &[16, 12]);
+        let b = g.weight("b", &[12]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let s = g.add_op(Op::ReduceSum { axis: 1 }, &[biased]); // [8, 1]
+        let inv = g.constant(1.0 / 12.0);
+        let mean = g.mul(s, inv);
+        g.mark_output(mean);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let mm_block = plan.blocks.iter().find(|bl| bl.nodes.contains(&mm)).unwrap();
+        assert!(!mm_block.nodes.contains(&s), "{:#?}", plan.blocks);
+        assert_eq!(mm_block.kind, BlockKind::MatmulEpilogue, "bias epilogue kept");
+    }
+
+    /// A reduction with no dataflow tie to the matmul must NOT share its
+    /// block: the merged block would have no fused kernel and would
+    /// steal the matmul's fusable epilogue (the deliberate-formation
+    /// rule; previously this merged into one per-node fallback block).
+    #[test]
+    fn matmul_keeps_epilogue_away_from_unrelated_reduction() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[4, 8], DType::F32);
+        let r = g.input("r", &[4, 4], DType::F32);
+        let w = g.weight("w", &[8, 4]);
+        let mm = g.matmul(x, w); // [4, 4]
+        let s = g.add_op(Op::ReduceSum { axis: 1 }, &[r]); // [4, 1], unrelated
+        let out = g.add(mm, s); // broadcast join
+        g.mark_output(out);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert!(plan.num_blocks() >= 2, "{:#?}", plan.blocks);
+        let mm_block = plan.blocks.iter().find(|b| b.nodes.contains(&mm)).unwrap();
+        assert!(
+            !mm_block.nodes.contains(&s),
+            "unrelated reduction merged into the matmul block"
+        );
     }
 
     #[test]

@@ -212,6 +212,18 @@ impl Compiled {
         crate::compress::quant::quantize_sites(&self.graph, &self.quant_sites, weights)
     }
 
+    /// Per-kernel dispatch census for this model under the given int8
+    /// table (exact — dispatch is a pure function of the prepared kernels
+    /// and the table; see [`exec::DispatchCounts`]). Benches print it and
+    /// CI fails if a compressed model still runs any int8 matmul on the
+    /// per-node fallback.
+    pub fn dispatch_counts(
+        &self,
+        quant: Option<&QuantizedWeights>,
+    ) -> exec::DispatchCounts {
+        exec::dispatch_counts(&self.graph, &self.plan, self.prepared(), quant)
+    }
+
     /// The paper's fusion-rate metrics: (ops, blocks, ops/block).
     pub fn fusion_summary(&self) -> (usize, usize, f64) {
         let ops = self.plan.num_ops();

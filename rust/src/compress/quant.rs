@@ -20,8 +20,8 @@
 use std::collections::HashMap;
 use std::fmt;
 
-use crate::compiler::exec::interp::eval_graph_values;
-use crate::compiler::exec::{ExecError, QuantizedTensor, QuantizedWeights, View};
+use crate::compiler::exec::interp::eval_graph_values_with;
+use crate::compiler::exec::{ExecError, Feeds, QuantizedTensor, QuantizedWeights, View};
 use crate::compiler::ir::{Graph, NodeId, Op};
 
 /// One int8-eligible matmul: the matmul node, its RHS weight leaf, and
@@ -166,24 +166,37 @@ pub fn calibrate_activations(
     qw: &mut QuantizedWeights,
     sample_feeds: &[HashMap<String, Vec<f32>>],
 ) -> Result<(), ExecError> {
-    let mut absmax: HashMap<NodeId, f32> = HashMap::new();
     for feeds in sample_feeds {
-        let vals = eval_graph_values(g, feeds)?;
-        for site in sites {
-            if !qw.by_node.contains_key(&site.weight) {
-                continue;
-            }
-            let lhs = &vals[g.nodes[site.matmul].inputs[0]];
-            let m = lhs.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let e = absmax.entry(site.matmul).or_insert(0.0);
-            *e = e.max(m);
-        }
+        calibrate_activations_with(g, sites, qw, &Feeds::single(feeds))?;
     }
-    for (node, m) in absmax {
+    Ok(())
+}
+
+/// Calibrate on ONE sample given as layered [`Feeds`] — the serving
+/// warmup shape: a tiny per-request map layered over the engine's
+/// persistent weight map (and, for decode, borrowed mask slices). This
+/// removes the ROADMAP-flagged per-call deep clone of the whole weight
+/// map into a merged flat feed map; the reference interpreter itself
+/// still materializes each leaf while evaluating, as it always has.
+/// Scales accumulate by max across calls, exactly as the flat-map entry
+/// point.
+pub fn calibrate_activations_with(
+    g: &Graph,
+    sites: &[QuantSite],
+    qw: &mut QuantizedWeights,
+    feeds: &Feeds<'_>,
+) -> Result<(), ExecError> {
+    let vals = eval_graph_values_with(g, feeds)?;
+    for site in sites {
+        if !qw.by_node.contains_key(&site.weight) {
+            continue;
+        }
+        let lhs = &vals[g.nodes[site.matmul].inputs[0]];
+        let m = lhs.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         if m > 0.0 {
             let s = m / 127.0;
             qw.act_scale
-                .entry(node)
+                .entry(site.matmul)
                 .and_modify(|e| *e = e.max(s))
                 .or_insert(s);
         }

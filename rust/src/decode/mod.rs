@@ -35,12 +35,28 @@
 //!   (see `exec::plan`), so full-vs-step fusion differences cannot
 //!   change bits.
 //!
-//! The fused INT8 matmul-epilogue tape keeps firing inside the step
-//! graph (its Q/K/V/FFN projections are ordinary `[1, n]`-domain
-//! matmul+bias blocks); the wo/w2 projections merge with their
-//! downstream layernorm and take the per-node int8 fallback, exactly as
-//! in the full graph (ROADMAP: a fused matmul+layernorm kernel would
-//! cover both).
+//! The fused matmul kernels cover EVERY quantized matmul in both decode
+//! graphs: the Q/K/V/FFN projections run the INT8 matmul-epilogue tape
+//! (`[1, n]`-domain matmul+bias blocks), and the wo/w2 projections —
+//! which merge with their downstream layernorm — run the fused
+//! matmul+layernorm tape (`codegen::tape::MatmulLayernormTape`: quantize
+//! the LHS row, i8 x i8 -> i32, rescale + bias + residual, then the
+//! two-pass normalization, all in one row pass). Its normalization is
+//! `layernorm_rows` and its fp32 matmul mirrors the interpreter's
+//! zero-skip kernel, so the fusion change is invisible to the bitwise
+//! contract above; only the LM head (a lone matmul with nothing to fuse)
+//! dispatches the int8 kernel per node, straight into its arena region.
+//! [`Decoder::dispatch_counts`] reports the census; the CI bench smoke
+//! fails if a per-node int8 fallback ever reappears.
+//!
+//! ## Errors
+//!
+//! Malformed *requests* are typed [`DecodeError`]s, never panics: an
+//! empty or over-length prompt, stepping before prefill, or stepping
+//! past a full cache all surface as errors the serving layer can reject
+//! (previously `assert!`s that killed the process in release builds). A
+//! full-length (`ids.len() == seq`) prompt is legal when no step will
+//! follow — a scoring request reads the prefill logits and finishes.
 
 pub mod cache;
 
@@ -48,13 +64,55 @@ use std::collections::HashMap;
 
 use crate::compiler::exec::{ExecError, ExecStats, Feeds, OutputSink, QuantizedWeights};
 use crate::compiler::{compile, CompileOptions, Compiled};
-use crate::compress::quant::calibrate_activations;
+use crate::compress::quant::calibrate_activations_with;
 use crate::compress::CompressionConfig;
 use crate::device::{plan_latency_compressed, DeviceProfile, Latency};
 use crate::model::{build_causal_lm_with, build_decode_step_with, BertConfig, LayerDims};
 use crate::util::pool::SlabPool;
 
 pub use cache::KvCache;
+
+/// Typed decode-request failure: everything a *caller* can get wrong when
+/// driving a [`DecodeSession`]. Serving rejects these per request;
+/// internal invariant violations still panic (compiler bugs, not inputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// `prefill` called with no tokens.
+    EmptyPrompt,
+    /// The prompt has more tokens than the graph's sequence length.
+    PromptTooLong { len: usize, seq: usize },
+    /// `step` called before `prefill`.
+    NotPrefilled,
+    /// Every cache row is occupied — no position left to decode into
+    /// (also the successful end state of a full-length scoring prefill).
+    CacheFull { seq: usize },
+    /// The underlying executor rejected the feeds.
+    Exec(ExecError),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::EmptyPrompt => write!(f, "prompt has no tokens"),
+            DecodeError::PromptTooLong { len, seq } => {
+                write!(f, "prompt has {len} tokens, graph sequence length is {seq}")
+            }
+            DecodeError::NotPrefilled => write!(f, "step called before prefill"),
+            DecodeError::CacheFull { seq } => {
+                write!(f, "KV cache full: all {seq} positions decoded")
+            }
+            DecodeError::Exec(e) => write!(f, "executor: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+impl From<ExecError> for DecodeError {
+    fn from(e: ExecError) -> Self {
+        DecodeError::Exec(e)
+    }
+}
 
 /// Additive attention-mask value for masked key positions. Finite (so
 /// fully-masked softmax rows stay NaN-free) yet large enough that
@@ -172,19 +230,23 @@ impl Decoder {
         if self.quant_prefill.is_none() || prompt_feeds.is_empty() {
             return Ok(0);
         }
-        // ONE merged feed map streamed across samples (only `input_ids`
-        // changes per prompt; `calibrate_activations` accumulates by
-        // max) — no per-sample clone of the weight map.
-        let mut feeds = weights.clone();
-        feeds.insert("causal_mask".to_string(), self.causal_mask.clone());
+        // No weight-map clone per calibrate call (ROADMAP item —
+        // previously the entire weight map was deep-cloned to build the
+        // interpreter's flat feed map): the per-sample request map holds
+        // only the padded ids, layered over borrowed mask and weight
+        // data; scales accumulate by max across samples. (The reference
+        // interpreter still materializes leaves while evaluating.)
+        let mut request: HashMap<String, Vec<f32>> = HashMap::with_capacity(1);
+        let mut slices: HashMap<&str, &[f32]> = HashMap::with_capacity(1);
+        slices.insert("causal_mask", self.causal_mask.as_slice());
         for ids in prompt_feeds {
-            feeds.insert("input_ids".to_string(), ids.clone());
+            request.insert("input_ids".to_string(), ids.clone());
             let qp = self.quant_prefill.as_mut().expect("checked above");
-            calibrate_activations(
+            calibrate_activations_with(
                 &self.prefill.graph,
                 &self.prefill.quant_sites,
                 qp,
-                std::slice::from_ref(&feeds),
+                &Feeds::layered_slices(&request, &slices, weights),
             )?;
         }
         let qp = self.quant_prefill.as_ref().expect("checked above");
@@ -208,6 +270,20 @@ impl Decoder {
     /// Calibrated static activation scales installed (per graph site).
     pub fn calibrated_sites(&self) -> usize {
         self.quant_prefill.as_ref().map_or(0, |q| q.act_scale.len())
+    }
+
+    /// Per-kernel dispatch census for (prefill, step) under this
+    /// decoder's int8 tables — what `bench_textgen` prints and the CI
+    /// smoke gates on: `fallback_i8_matmul` must be 0 in both graphs
+    /// (every quantized matmul runs a fused kernel or, for the lone LM
+    /// head, the direct int8 dispatch).
+    pub fn dispatch_counts(
+        &self,
+    ) -> (crate::compiler::exec::DispatchCounts, crate::compiler::exec::DispatchCounts) {
+        (
+            self.prefill.dispatch_counts(self.quant_prefill.as_ref()),
+            self.step.dispatch_counts(self.quant_step.as_ref()),
+        )
     }
 
     /// One full-resequence forward (the uncached reference path): run the
@@ -280,7 +356,10 @@ impl Decoder {
 /// request map, and the logits/row staging scratch. After construction,
 /// a session allocates **no tensors or strings per token** — every
 /// buffer (logits, K/V staging, cache regions, feed names) is reused;
-/// the only per-step allocations are the two small lookup/sink tables.
+/// the per-step allocations that remain are the two small lookup/sink
+/// tables plus the executor kernels' bounded per-dispatch scratch (the
+/// fused matmul tapes' row/register vectors — pooling those like the
+/// slabs is an open ROADMAP item).
 pub struct DecodeSession<'a> {
     dec: &'a Decoder,
     weights: &'a HashMap<String, Vec<f32>>,
@@ -297,9 +376,21 @@ impl DecodeSession<'_> {
     /// Run the prompt once through the prefill graph: logits land in the
     /// session scratch, per-layer K/V projections land directly in the
     /// cache. Returns the logits row at the last prompt position.
-    pub fn prefill(&mut self, ids: &[i32]) -> Result<&[f32], ExecError> {
+    ///
+    /// A full-length (`ids.len() == seq`) prompt is accepted — a legit
+    /// scoring request that reads the prefill logits and never steps
+    /// (the cache is full, so a subsequent [`DecodeSession::step`]
+    /// returns [`DecodeError::CacheFull`]). Longer prompts and empty
+    /// prompts are typed errors, not panics — serving rejects the
+    /// request instead of dying.
+    pub fn prefill(&mut self, ids: &[i32]) -> Result<&[f32], DecodeError> {
         let (s, v) = (self.dec.cfg.seq, self.dec.cfg.vocab);
-        assert!(!ids.is_empty() && ids.len() < s, "prompt must fit below seq");
+        if ids.is_empty() {
+            return Err(DecodeError::EmptyPrompt);
+        }
+        if ids.len() > s {
+            return Err(DecodeError::PromptTooLong { len: ids.len(), seq: s });
+        }
         let padded = self.request.get_mut("input_ids").expect("session request map");
         padded.iter_mut().enumerate().for_each(|(i, x)| {
             *x = ids.get(i).copied().unwrap_or(0) as f32;
@@ -327,12 +418,17 @@ impl DecodeSession<'_> {
 
     /// Decode one token at the current position: zero the cache row,
     /// run the step graph over borrowed cache feeds, append the fresh
-    /// K/V rows, and return the next-token logits row.
-    pub fn step(&mut self, token: i32) -> Result<&[f32], ExecError> {
+    /// K/V rows, and return the next-token logits row. Stepping before
+    /// prefill or past a full cache is a typed error, not a panic.
+    pub fn step(&mut self, token: i32) -> Result<&[f32], DecodeError> {
         let (s, v) = (self.dec.cfg.seq, self.dec.cfg.vocab);
         let p = self.pos;
-        assert!(p > 0, "prefill before stepping");
-        assert!(p < s, "cache full at seq={s}");
+        if p == 0 {
+            return Err(DecodeError::NotPrefilled);
+        }
+        if p >= s {
+            return Err(DecodeError::CacheFull { seq: s });
+        }
         self.cache.zero_row(p);
 
         self.request.get_mut("step_ids").expect("session request map")[0] = token as f32;

@@ -168,12 +168,15 @@ pub fn block_cost_with(
         })
     });
     let compute_s = if int8_matmul {
-        // Fused INT8 epilogue block (the tape kernel both executors run):
-        // the i8 x i8 MACs go down the SDOT/dp4a path, while the fused
-        // epilogue (bias/activation) plus the per-row quantize and the
-        // rescale run on the vector units in the same pass. Pricing the
-        // two separately is what lets NAS phase 2 see the *real* fused
-        // int8 latency instead of the MAC-only lower bound.
+        // Fused INT8 block (the tape kernels both executors run —
+        // matmul+epilogue AND matmul+layernorm): the i8 x i8 MACs go
+        // down the SDOT/dp4a path, while everything else in the block —
+        // per-row quantize, rescale, bias/activation epilogue, and for
+        // the wo/w2 blocks the two-pass layernorm (its reduce and
+        // normalize flops are in `flops - mm_flops`) — runs on the
+        // vector units in the same pass. Pricing the two separately is
+        // what lets NAS phase 2 see the *real* fused int8 latency
+        // instead of the MAC-only lower bound.
         let mm_flops: f64 = block
             .nodes
             .iter()
@@ -365,6 +368,50 @@ mod tests {
         assert!(pr < fp32, "pruned {pr} !< fp32 {fp32}");
         let both = plan_latency_compressed(&pruned.graph, &pruned.plan, &dev, true).ms();
         assert!(both < pr, "pruned+int8 {both} !< pruned {pr}");
+    }
+
+    /// Acceptance: the fused matmul+layernorm block must be priced below
+    /// the unfused matmul + layernorm pair — fewer launches and no
+    /// intermediate traffic — in both precisions. (The int8 variant is
+    /// additionally priced as SDOT MACs + vector-unit normalize.)
+    #[test]
+    fn fused_matmul_layernorm_priced_below_unfused_pair() {
+        use crate::compiler::fusion::BlockKind;
+        use crate::compiler::ir::DType;
+        let mut g = Graph::new();
+        let x = g.input("x", &[64, 96], DType::F32);
+        let w = g.weight("w", &[96, 96]);
+        let b = g.weight("b", &[96]);
+        let ga = g.weight("gamma", &[96]);
+        let be = g.weight("beta", &[96]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let res = g.add(biased, x);
+        let ln = g.layernorm(res, ga, be, 1e-12);
+        g.mark_output(ln);
+
+        let opts = CompileOptions { model_only_tuning: true, ..Default::default() };
+        let fused = compile(&g, &opts);
+        let unfused = compile(
+            &g,
+            &CompileOptions { model_only_tuning: true, ..CompileOptions::no_fusion() },
+        );
+        assert!(
+            fused.plan.blocks.iter().any(|bl| bl.kind == BlockKind::MatmulLayernorm),
+            "kinds: {:?}",
+            fused.plan.blocks.iter().map(|bl| bl.kind).collect::<Vec<_>>()
+        );
+        let dev = DeviceProfile::s865_cpu();
+        for int8 in [false, true] {
+            let f = plan_latency_compressed(&fused.graph, &fused.plan, &dev, int8);
+            let u = plan_latency_compressed(&unfused.graph, &unfused.plan, &dev, int8);
+            assert!(
+                f.total_s < u.total_s,
+                "int8={int8}: fused {:.3}ms !< unfused pair {:.3}ms",
+                f.ms(),
+                u.ms()
+            );
+        }
     }
 
     #[test]

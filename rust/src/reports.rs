@@ -37,6 +37,27 @@ impl Table1Row {
     }
 }
 
+/// Look up a Table 1 row by model name — a descriptive error instead of
+/// a panic when a row is renamed (previously two copy-pasted `.unwrap()`
+/// sites turned a renamed table row into a bench-binary crash).
+pub fn table1_row<'a>(rows: &'a [Table1Row], name: &str) -> anyhow::Result<&'a Table1Row> {
+    rows.iter().find(|r| r.name == name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "Table 1 row {name:?} not found (rows: {})",
+            rows.iter().map(|r| r.name).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+/// The paper's headline comparison — BERT_BASE on TFLite-CPU vs
+/// CANAOBERT fused-GPU — computed in ONE place for the table printer and
+/// its tests. Returns `(tflite_ms, canao_ms, speedup)`.
+pub fn headline_speedup(rows: &[Table1Row]) -> anyhow::Result<(f64, f64, f64)> {
+    let bert_tfl = table1_row(rows, "BERT_BASE")?.tflite_cpu_ms;
+    let canao_gpu = table1_row(rows, "CANAOBERT")?.fuse_gpu_ms;
+    Ok((bert_tfl, canao_gpu, bert_tfl / canao_gpu))
+}
+
 pub fn table1_rows() -> Vec<Table1Row> {
     let models: [(&'static str, BertConfig); 3] = [
         ("DistilBERT", BertConfig::distilbert()),
@@ -100,13 +121,11 @@ pub fn bench_table1(out: &mut dyn Write) -> anyhow::Result<()> {
         )?;
     }
     // Headline: BERT_BASE on TFLite CPU vs CANAOBERT fused GPU.
-    let bert_tfl = rows.iter().find(|r| r.name == "BERT_BASE").unwrap().tflite_cpu_ms;
-    let canao_gpu = rows.iter().find(|r| r.name == "CANAOBERT").unwrap().fuse_gpu_ms;
+    let (bert_tfl, canao_gpu, speedup) = headline_speedup(&rows)?;
     writeln!(
         out,
         "headline: BERT_BASE TFLite-CPU {bert_tfl:.0}ms vs CANAOBERT fused-GPU {canao_gpu:.0}ms \
-         = {:.1}x (paper: 352ms vs 45ms = 7.8x)",
-        bert_tfl / canao_gpu
+         = {speedup:.1}x (paper: 352ms vs 45ms = 7.8x)"
     )?;
     Ok(())
 }
@@ -176,6 +195,22 @@ pub fn bench_textgen(out: &mut dyn Write) -> anyhow::Result<()> {
         let sim_full =
             plan_latency_compressed(&dec.prefill.graph, &dec.prefill.plan, &dev, comp.int8).ms();
         let sim_step = step_latency(&cfg, &dec.dims, &dev, comp.int8).ms();
+        // Per-kernel dispatch census — and the CI gate: in the
+        // pruned+int8 path every quantized matmul must run a fused
+        // kernel (or the LM head's direct dispatch), never the per-node
+        // int8 fallback. A regression fails the bench smoke step.
+        let (pc, sc) = dec.dispatch_counts();
+        writeln!(out, "  {label} dispatch prefill: {pc}")?;
+        writeln!(out, "  {label} dispatch step:    {sc}")?;
+        if comp.int8 {
+            anyhow::ensure!(
+                pc.fallback_i8_matmul == 0 && sc.fallback_i8_matmul == 0,
+                "per-node int8 matmul fallback fired in the {label} path \
+                 (prefill {}, step {})",
+                pc.fallback_i8_matmul,
+                sc.fallback_i8_matmul
+            );
+        }
         for (mode_label, mode, sim) in [
             ("full-reseq", DecodeMode::FullResequence, sim_full),
             ("kv-cache", DecodeMode::KvCache, sim_step),
@@ -273,11 +308,30 @@ mod tests {
     #[test]
     fn headline_speedup_in_band() {
         let rows = table1_rows();
-        let bert_tfl = rows.iter().find(|r| r.name == "BERT_BASE").unwrap().tflite_cpu_ms;
-        let canao_gpu = rows.iter().find(|r| r.name == "CANAOBERT").unwrap().fuse_gpu_ms;
-        let headline = bert_tfl / canao_gpu;
+        let (_, _, headline) = headline_speedup(&rows).unwrap();
         // Paper: 7.8x. Accept the band that preserves the claim's shape.
         assert!(headline > 5.0 && headline < 12.0, "headline {headline:.1}");
+    }
+
+    #[test]
+    fn missing_table1_row_is_a_descriptive_error() {
+        let rows = table1_rows();
+        let err = table1_row(&rows, "BERT_HUGE").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("BERT_HUGE"), "{msg}");
+        assert!(msg.contains("CANAOBERT"), "names the rows that exist: {msg}");
+    }
+
+    #[test]
+    fn textgen_table_reports_zero_int8_fallbacks() {
+        // bench_textgen itself `ensure!`s the gate; this pins that the
+        // dispatch census lines actually print for both configs.
+        let mut buf = Vec::new();
+        bench_textgen(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("dispatch prefill"), "{s}");
+        assert!(s.contains("dispatch step"), "{s}");
+        assert!(s.contains("int8-fallback 0"), "{s}");
     }
 
     #[test]

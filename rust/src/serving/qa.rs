@@ -317,21 +317,22 @@ impl NativeQaEngine {
         if self.quant.is_none() || reqs.is_empty() {
             return Ok(0);
         }
-        // ONE merged feed map, reused across samples: only the request
-        // entries change per warmup request (the same key set every
-        // time), and `calibrate_activations` accumulates scales by max —
-        // no per-sample clone of the (large) weight map.
-        let mut feeds = self.weights.clone();
+        // No weight-map clone (ROADMAP item — this path used to
+        // deep-clone the whole weight map once per call into a merged
+        // flat feed map): each sample builds only the tiny ids/mask
+        // request map, layered over the persistent weight map; scales
+        // accumulate by max across samples. (The reference interpreter
+        // still materializes leaves while evaluating.)
         for r in reqs {
             let (ids, _tt, mask, _b) =
                 self.tokenizer.encode_pair(&r.question, &r.context, self.cfg.seq);
-            feeds.extend(self.request_feeds(&ids, &mask));
+            let request = self.request_feeds(&ids, &mask);
             let q = self.quant.as_mut().expect("checked above");
-            crate::compress::quant::calibrate_activations(
+            crate::compress::quant::calibrate_activations_with(
                 &self.compiled.graph,
                 &self.compiled.quant_sites,
                 q,
-                std::slice::from_ref(&feeds),
+                &Feeds::layered(&request, &self.weights),
             )?;
         }
         Ok(self.quant.as_ref().expect("checked above").act_scale.len())

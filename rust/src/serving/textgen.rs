@@ -33,7 +33,7 @@ use anyhow::Result;
 
 use crate::compiler::exec::ExecError;
 use crate::compress::{prune_model, CompressionConfig, CompressionReport};
-use crate::decode::{DecodeMode, DecodeSession, Decoder};
+use crate::decode::{DecodeError, DecodeMode, DecodeSession, Decoder};
 use crate::model::{build_causal_lm, BertConfig};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::tokenizer::Tokenizer;
@@ -264,7 +264,10 @@ impl NativeGenEngine {
         self.decoder.calibrate(&self.weights, &feeds)
     }
 
-    pub fn generate(&self, req: &GenRequest) -> Result<GenResponse, ExecError> {
+    /// Generate text. Malformed requests and decode misuse surface as
+    /// typed [`DecodeError`]s (executor failures wrapped inside) — the
+    /// serving layer rejects the request instead of panicking.
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResponse, DecodeError> {
         self.generate_with_mode(req, self.mode)
     }
 
@@ -274,7 +277,7 @@ impl NativeGenEngine {
         &self,
         req: &GenRequest,
         mode: DecodeMode,
-    ) -> Result<GenResponse, ExecError> {
+    ) -> Result<GenResponse, DecodeError> {
         let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
         match mode {
             DecodeMode::FullResequence => {

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use canao::compress::CompressionConfig;
-use canao::decode::DecodeMode;
+use canao::decode::{DecodeError, DecodeMode};
 use canao::model::BertConfig;
 use canao::serving::{GenRequest, NativeGenEngine};
 use canao::tokenizer::{Tokenizer, Vocab};
@@ -216,6 +216,73 @@ fn calibrated_decode_stays_cached_consistent_and_near_fp32() {
     for (q, f) in kv.iter().zip(&fp_rows) {
         assert_close(q, f, 0.1, 0.05).unwrap();
     }
+}
+
+#[test]
+fn malformed_decode_requests_are_typed_errors_not_panics() {
+    let eng = engine(1, CompressionConfig::none());
+    let seq = tiny_cfg().seq;
+
+    // Empty prompt.
+    let mut s = eng.decoder().begin(eng.weights(), 1);
+    assert_eq!(s.prefill(&[]).unwrap_err(), DecodeError::EmptyPrompt);
+
+    // Over-length prompt (previously an assert! that killed the serving
+    // process in release builds).
+    let too_long = vec![1i32; seq + 1];
+    assert_eq!(
+        s.prefill(&too_long).unwrap_err(),
+        DecodeError::PromptTooLong { len: seq + 1, seq }
+    );
+
+    // Stepping before prefill.
+    assert_eq!(s.step(3).unwrap_err(), DecodeError::NotPrefilled);
+    s.finish();
+
+    // Stepping past a full cache.
+    let mut s = eng.decoder().begin(eng.weights(), 1);
+    s.prefill(&[5, 9]).unwrap();
+    for t in 0..(seq - 2) {
+        s.step(t as i32).unwrap();
+    }
+    assert_eq!(s.step(7).unwrap_err(), DecodeError::CacheFull { seq });
+    s.finish();
+}
+
+#[test]
+fn full_length_prompt_scores_without_stepping() {
+    // A prompt that fills the whole sequence is a legit scoring request:
+    // prefill succeeds, its last logits row equals the full-resequence
+    // forward's bitwise, and any subsequent step reports CacheFull.
+    let eng = engine(2, CompressionConfig::none());
+    let seq = tiny_cfg().seq;
+    let prompt: Vec<i32> = (0..seq as i32).map(|i| (i * 13 + 5) % 200).collect();
+
+    let mut s = eng.decoder().begin(eng.weights(), 2);
+    let prefill_row = s.prefill(&prompt).unwrap().to_vec();
+    assert_eq!(s.step(1).unwrap_err(), DecodeError::CacheFull { seq });
+    s.finish();
+
+    let rs = reseq_logits(&eng, 2, &prompt, &[]);
+    assert_eq!(prefill_row, rs[0], "scoring prefill != full forward");
+}
+
+#[test]
+fn decode_graphs_run_zero_int8_matmul_fallbacks() {
+    // The fused matmul+layernorm kernel covers wo/w2 in BOTH decode
+    // graphs; with pruning+int8 the only non-fused quantized dispatch is
+    // the LM head's direct single-op block.
+    let eng = engine(2, CompressionConfig::pruned_int8(0.5, 0.5));
+    let (pc, sc) = eng.decoder().dispatch_counts();
+    assert_eq!(pc.fallback_i8_matmul, 0, "prefill: {pc}");
+    assert_eq!(sc.fallback_i8_matmul, 0, "step: {sc}");
+    assert!(pc.fused_layernorm_i8 > 0 && sc.fused_layernorm_i8 > 0);
+
+    // fp32 engines run the fused fp32 layernorm kernel instead.
+    let fp = engine(1, CompressionConfig::none());
+    let (pc, sc) = fp.decoder().dispatch_counts();
+    assert!(pc.fused_layernorm_f32 > 0 && sc.fused_layernorm_f32 > 0);
+    assert_eq!(pc.fallback_i8_matmul + sc.fallback_i8_matmul, 0);
 }
 
 #[test]

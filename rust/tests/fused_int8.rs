@@ -14,10 +14,15 @@
 //!   encoder executes its weight matmuls as MatmulEpilogue blocks whose
 //!   fused kernel compiles and whose weights are in the int8 table — no
 //!   scratch-and-copy on that path.
+//! * **The last gap is closed**: the wo/w2 projections (matmul -> bias
+//!   -> residual -> layernorm) run the fused matmul+layernorm kernel in
+//!   all three graphs — encoder, prefill, decode step — and the
+//!   dispatch census proves the per-node int8 fallback never fires for
+//!   any quantized matmul (`f7`).
 
 use std::collections::HashMap;
 
-use canao::compiler::codegen::tape::compile_matmul_epilogue;
+use canao::compiler::codegen::tape::{compile_matmul_epilogue, compile_matmul_layernorm};
 use canao::compiler::exec::Feeds;
 use canao::compiler::fusion::BlockKind;
 use canao::compiler::ir::{DType, Graph};
@@ -235,11 +240,133 @@ fn f4_table1_pruned_int8_row_runs_fused() {
         }
     }
     // Per layer at least: Q/K/V projections (bias-only) + the FFN's
-    // matmul+bias+GELU. (The wo/w2 matmuls merge with their downstream
-    // layernorms and run the per-node int8 fallback — unchanged.)
+    // matmul+bias+GELU.
     assert!(fused >= 4 * cfg.layers, "only {fused} fused epilogue blocks");
     assert!(
         gelu_fused >= cfg.layers,
         "matmul+bias+GELU must run as one fused tape block per layer (got {gelu_fused})"
     );
+    // And the wo/w2 matmuls — merged with their downstream layernorms —
+    // run the fused matmul+layernorm kernel, closing the last per-node
+    // int8 fallback.
+    let mut ln_fused = 0usize;
+    for block in &compiled.plan.blocks {
+        let Some(mt) = compile_matmul_layernorm(&compiled.graph, block) else { continue };
+        assert!(
+            qw.by_node.contains_key(&mt.rhs),
+            "fused layernorm weight missing from the int8 table"
+        );
+        ln_fused += 1;
+    }
+    assert_eq!(
+        ln_fused,
+        2 * cfg.layers,
+        "wo + w2 must each run the fused matmul+layernorm kernel per layer"
+    );
+}
+
+/// The tentpole's differential: a matmul -> bias -> residual ->
+/// layernorm graph runs the fused matmul+layernorm kernel, bitwise equal
+/// to the per-node path of a fusion-disabled compile — int8 AND fp32 —
+/// sequential == parallel at 1/2/4 threads including the row-split, and
+/// int8 within the documented tolerance of fp32.
+#[test]
+fn f5_fused_matmul_layernorm_bitwise_equals_unfused() {
+    // m = 256 rows so the wave executor row-splits the fused kernel.
+    for (m, k, n) in [(16, 24, 20), (256, 32, 16)] {
+        let mut g = Graph::new();
+        let x = g.input("x", &[m, k], DType::F32);
+        let r = g.input("r", &[m, n], DType::F32);
+        let w = g.weight("w", &[k, n]);
+        let b = g.weight("b", &[n]);
+        let ga = g.weight("gamma", &[n]);
+        let be = g.weight("beta", &[n]);
+        let mm = g.matmul(x, w);
+        let biased = g.add(mm, b);
+        let res = g.add(biased, r);
+        let ln = g.layernorm(res, ga, be, 1e-12);
+        g.mark_output(ln);
+        let feeds = random_feeds(&g, 0x11AA ^ m as u64);
+
+        let fused = compile(&g, &opts_int8());
+        assert!(
+            fused
+                .plan
+                .blocks
+                .iter()
+                .any(|bl| compile_matmul_layernorm(&fused.graph, bl).is_some()),
+            "no fused matmul+layernorm block at m={m}"
+        );
+        let unfused = compile(&g, &opts_int8_unfused());
+
+        let (fused_seq, fused_par) = run_all(&fused, &feeds, true);
+        let (unfused_seq, unfused_par) = run_all(&unfused, &feeds, true);
+        assert_eq!(fused_seq, unfused_seq, "m={m}: fused != unfused int8");
+        for (t, p) in fused_par.iter().enumerate() {
+            assert_eq!(p, &fused_seq, "m={m}: fused parallel[{t}] != sequential");
+        }
+        for (t, p) in unfused_par.iter().enumerate() {
+            assert_eq!(p, &unfused_seq, "m={m}: unfused parallel[{t}] != sequential");
+        }
+
+        // fp32: the fused kernel must also be bitwise-identical to the
+        // per-node fp32 path (interp-mirroring matmul + shared
+        // layernorm arithmetic) — and int8 within tolerance of it.
+        let (fp32_fused, fp32_par) = run_all(&fused, &feeds, false);
+        let (fp32_unfused, _) = run_all(&unfused, &feeds, false);
+        assert_eq!(fp32_fused, fp32_unfused, "m={m}: fused fp32 != per-node fp32");
+        for (t, p) in fp32_par.iter().enumerate() {
+            assert_eq!(p, &fp32_fused, "m={m}: fp32 parallel[{t}] != sequential");
+        }
+        assert_close(&fused_seq, &fp32_fused, 0.1, 0.05)
+            .unwrap_or_else(|e| panic!("m={m}: int8 drifted from fp32: {e}"));
+        assert_ne!(fused_seq, fp32_fused, "m={m}: int8 table silently ignored");
+        let interp = canao::compiler::exec::interp::eval_graph(&g, &feeds).unwrap();
+        assert_eq!(fp32_fused, interp[0].data, "m={m}: fused fp32 != interp");
+    }
+}
+
+/// Acceptance criterion: the pruned+int8 encoder, prefill, and
+/// decode-step graphs execute with ZERO per-node int8 matmul fallbacks.
+/// Every quantized matmul runs a fused kernel — MatmulEpilogue for
+/// Q/K/V/w1, MatmulLayernorm for wo/w2 — except the prefill/step LM
+/// head, a single-op matmul block with nothing to fuse (direct int8
+/// dispatch straight into its arena region, not the
+/// scratch-compute-then-rescale fallback shape).
+#[test]
+fn f7_no_per_node_int8_fallback_in_any_graph() {
+    use canao::serving::NativeGenEngine;
+    use canao::tokenizer::{Tokenizer, Vocab};
+    use std::sync::Arc;
+
+    let comp = CompressionConfig::pruned_int8(0.5, 0.5);
+
+    // Encoder.
+    let cfg = BertConfig { vocab: 2048, seq: 64, layers: 2, hidden: 128, heads: 4, inter: 512 };
+    let dense = build_encoder(&cfg);
+    let mut weights = init_weights(&dense, 0xC0DE);
+    let (graph, _report) = compress_encoder(&cfg, &mut weights, &comp);
+    let compiled = compile(
+        &graph,
+        &CompileOptions { model_only_tuning: true, compression: comp, ..Default::default() },
+    );
+    let qw = compiled.quantize_weights(&weights);
+    let enc = compiled.dispatch_counts(Some(&qw));
+    assert_eq!(enc.fallback_i8_matmul, 0, "encoder: {enc}");
+    assert_eq!(enc.direct_i8_matmul, 0, "encoder has no lone weight matmul: {enc}");
+    assert_eq!(enc.fused_layernorm_i8, 2 * cfg.layers, "encoder wo/w2: {enc}");
+    assert!(enc.fused_epilogue_i8 >= 4 * cfg.layers, "encoder q/k/v/w1: {enc}");
+
+    // Prefill + decode step (the textgen engine's two graphs).
+    let corpus = "the quick brown fox jumps over the lazy dog .";
+    let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 256)));
+    let gcfg = BertConfig { vocab: 256, seq: 16, layers: 2, hidden: 16, heads: 2, inter: 32 };
+    let engine = NativeGenEngine::with_compression(tok, gcfg, 2, comp);
+    let (pc, sc) = engine.decoder().dispatch_counts();
+    for (label, c) in [("prefill", pc), ("step", sc)] {
+        assert_eq!(c.fallback_i8_matmul, 0, "{label}: {c}");
+        assert_eq!(c.fused_layernorm_i8, 2 * gcfg.layers, "{label} wo/w2: {c}");
+        assert!(c.fused_epilogue_i8 >= 4 * gcfg.layers, "{label} q/k/v/w1: {c}");
+        assert_eq!(c.direct_i8_matmul, 1, "{label} LM head: {c}");
+    }
 }
