@@ -1,0 +1,77 @@
+//! Bench: open-loop sustained load against both native serving engines.
+//!
+//! Unlike `serving_throughput` (closed-loop: submit a burst, time the
+//! drain), this bench injects requests on a seeded Poisson arrival
+//! schedule at a configured QPS — the load the system would see from
+//! independent users — and reports what they would experience: p50/p95/
+//! p99 TTFT (queue wait included), steady-state ms/token for generation,
+//! completions/s, admission rejects from the bounded batcher queue, and
+//! a closed-loop throughput-at-saturation probe for context.
+//!
+//! Run: cargo bench --bench serving_load -- \
+//!        [--qps F] [--duration-ms N] [--queue-cap N] [--threads N]
+//!        [--tokens N] [--seed N] [--burst N] [--out PATH]
+//!
+//! CI runs this at smoke QPS with `--out BENCH_serving.json` and
+//! publishes the file, so the serving-latency trajectory diffs per PR.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use canao::serving::{
+    run_gen_load, run_qa_load, write_bench_json, LoadConfig, NativeGenEngine, NativeQaEngine,
+    QaRequest,
+};
+use canao::tokenizer::{Tokenizer, Vocab};
+use canao::util::cli::Args;
+
+const FALLBACK_CORPUS: &str = "layer fusion reduces the number of kernels and the memory \
+    traffic . the runtime loads the compiled program and executes it on the device . \
+    the quick brown fox jumps over the lazy dog .";
+
+fn corpus_tokenizer() -> Arc<Tokenizer> {
+    let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")
+        .unwrap_or_else(|_| FALLBACK_CORPUS.to_string());
+    Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)))
+}
+
+fn main() {
+    // `cargo bench -- --flags` forwards everything after `--`; cargo
+    // itself may also pass `--bench`, which parses as a boolean flag.
+    let args = Args::from_env(&["bench"]);
+    let cfg = LoadConfig {
+        qps: args.f64_or("qps", 48.0),
+        duration: Duration::from_millis(args.u64_or("duration-ms", 3000)),
+        seed: args.u64_or("seed", 0x10AD),
+        threads: args.usize_or("threads", 2),
+        queue_cap: args.usize_or("queue-cap", 128),
+        max_new_tokens: args.usize_or("tokens", 8),
+        saturation_burst: args.usize_or("burst", 32),
+    };
+    println!(
+        "== open-loop serving load: {} qps for {} ms (seed {:#x}, queue cap {}) ==",
+        cfg.qps,
+        cfg.duration.as_millis(),
+        cfg.seed,
+        cfg.queue_cap
+    );
+
+    let tok = corpus_tokenizer();
+    let qa_reqs = vec![QaRequest {
+        question: "what reduces the number of kernels ?".into(),
+        context: "layer fusion reduces the number of kernels and the memory traffic . \
+                  the runtime loads the compiled program and executes it on the device ."
+            .into(),
+    }];
+    let qa = run_qa_load(NativeQaEngine::demo(Arc::clone(&tok), cfg.threads), &qa_reqs, &cfg);
+    print!("{}", qa.render());
+
+    let prompts = ["the model", "the quick brown fox", "the runtime loads"];
+    let gen = run_gen_load(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg);
+    print!("{}", gen.render());
+
+    if let Some(out) = args.get("out") {
+        write_bench_json(out, &cfg, &[qa, gen]).expect("write bench json");
+        println!("wrote {out}");
+    }
+}

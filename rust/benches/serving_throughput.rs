@@ -114,19 +114,22 @@ fn native_section(tok: Arc<Tokenizer>) {
     }
 
     // Dynamic batcher under concurrent load, native model underneath.
+    // queue_cap covers the whole burst: this closed-loop bench measures
+    // drain throughput, not admission control.
     let engine = NativeQaEngine::new(tok, cfg, 2);
     let batcher = Arc::new(Batcher::new(
         engine,
-        BatcherOptions { max_wait: Duration::from_millis(4), min_batch: 4 },
+        BatcherOptions { max_wait: Duration::from_millis(4), min_batch: 4, queue_cap: 256 },
     ));
     let n = 64;
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n).map(|_| batcher.submit(req.clone())).collect();
+    let rxs: Vec<_> =
+        (0..n).map(|_| batcher.submit(req.clone()).expect("queue has room")).collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().expect("native qa batch succeeds");
     }
     let wall = t0.elapsed();
-    let mut m = batcher.metrics.lock().unwrap();
+    let m = &batcher.metrics;
     println!(
         "native batched serving: {n} reqs in {} = {:.1} req/s (mean batch {:.1})",
         fmt_dur(wall),
@@ -167,16 +170,17 @@ fn pjrt_section(tok: Arc<Tokenizer>) -> anyhow::Result<()> {
     // Dynamic batcher under concurrent load.
     let batcher = Arc::new(Batcher::new(
         engine,
-        BatcherOptions { max_wait: Duration::from_millis(4), min_batch: 4 },
+        BatcherOptions { max_wait: Duration::from_millis(4), min_batch: 4, queue_cap: 256 },
     ));
     let n = 128;
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n).map(|_| batcher.submit(req.clone())).collect();
+    let rxs: Vec<_> =
+        (0..n).map(|_| batcher.submit(req.clone()).expect("queue has room")).collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().expect("pjrt qa batch succeeds");
     }
     let wall = t0.elapsed();
-    let mut m = batcher.metrics.lock().unwrap();
+    let m = &batcher.metrics;
     println!(
         "batched serving:   {n} reqs in {} = {:.1} req/s (mean batch {:.1})",
         fmt_dur(wall),
@@ -184,7 +188,6 @@ fn pjrt_section(tok: Arc<Tokenizer>) -> anyhow::Result<()> {
         m.mean_batch_size()
     );
     println!("                   {}", m.total_latency.summary());
-    drop(m);
 
     // Text generation tokens/s.
     let mut rt2 = Runtime::open("artifacts")?;
@@ -195,12 +198,16 @@ fn pjrt_section(tok: Arc<Tokenizer>) -> anyhow::Result<()> {
         temperature: 0.0,
         seed: 1,
     })?;
-    let mean_ms = resp.per_token_ms.iter().sum::<f64>() / resp.per_token_ms.len() as f64;
-    println!(
-        "textgen:           {:.2} ms/token = {:.1} tok/s (greedy, seq=64 full re-forward)",
-        mean_ms,
-        1e3 / mean_ms
-    );
+    // Guard the empty case: a request that generated zero tokens used to
+    // print "NaN tok/s" here (0.0 / 0 division).
+    match resp.mean_ms_per_token() {
+        Some(mean_ms) => println!(
+            "textgen:           {:.2} ms/token = {:.1} tok/s (greedy, seq=64 full re-forward)",
+            mean_ms,
+            1e3 / mean_ms.max(1e-9)
+        ),
+        None => println!("textgen:           no tokens generated"),
+    }
     Ok(())
 }
 

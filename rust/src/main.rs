@@ -7,6 +7,7 @@
 //!   table2      reproduce Table 2 (GLUE accuracy)
 //!   serve-qa    interactive QA demo over the AOT artifacts (Fig. 1 left)
 //!   serve-gen   text-generation demo (Fig. 1 right)
+//!   serve-load  open-loop sustained-load run against the native engines
 //!   finetune    run the e2e fine-tuning loop through PJRT
 //!
 //! Examples:
@@ -24,7 +25,8 @@ use canao::model::{build_encoder, build_encoder_with, BertConfig, LayerDims};
 use canao::nas::{Search, SearchConfig};
 use canao::runtime::Runtime;
 use canao::serving::{
-    GenEngine, GenRequest, NativeGenEngine, NativeQaEngine, QaEngine, QaRequest,
+    run_gen_load, run_qa_load, write_bench_json, GenEngine, GenRequest, LoadConfig,
+    NativeGenEngine, NativeQaEngine, QaEngine, QaRequest,
 };
 use canao::tokenizer::{Tokenizer, Vocab};
 use canao::util::cli::Args;
@@ -54,6 +56,7 @@ fn main() {
         "textgen" => cmd_textgen(),
         "serve-qa" => cmd_serve_qa(&args),
         "serve-gen" => cmd_serve_gen(&args),
+        "serve-load" => cmd_serve_load(&args),
         "finetune" => cmd_finetune(&args),
         _ => {
             print_help();
@@ -82,6 +85,8 @@ fn print_help() {
          \x20 textgen    decode bench: full-reseq vs KV-cache ms/token\n\
          \x20 serve-qa   QA demo               [--question S --context S]\n\
          \x20 serve-gen  text generation demo  [--prompt S --tokens N --temp F --full-reseq]\n\
+         \x20 serve-load sustained-load run    [--qps F --duration-ms N --queue-cap N\n\
+         \x20                                   --threads N --tokens N --seed N --out PATH]\n\
          \x20 finetune   e2e training loop     [--steps N --lr F]\n"
     );
 }
@@ -306,14 +311,61 @@ fn cmd_serve_gen(args: &Args) -> anyhow::Result<()> {
             engine.generate(&req)?
         }
     };
-    let mean_ms = resp.per_token_ms.iter().sum::<f64>() / resp.per_token_ms.len().max(1) as f64;
     println!("[gen] {:?}", resp.text);
+    // mean_ms_per_token is None for zero generated tokens — this used to
+    // report a meaningless tok/s from a 0/0-shaped division.
+    match resp.mean_ms_per_token() {
+        Some(mean_ms) => println!(
+            "[gen] {} tokens, {:.1} ms/token ({:.1} tok/s)",
+            resp.tokens_generated,
+            mean_ms,
+            1e3 / mean_ms.max(1e-9)
+        ),
+        None => println!("[gen] no tokens generated"),
+    }
+    Ok(())
+}
+
+/// Open-loop sustained load against both native engines: Poisson
+/// arrivals at `--qps`, bounded-queue admission, p50/p95/p99 TTFT and
+/// ms/token plus throughput-at-saturation. `--out PATH` additionally
+/// writes the machine-readable report (the `BENCH_serving.json` CI
+/// publishes comes from the `serving_load` bench, same format).
+fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
+    let cfg = LoadConfig {
+        qps: args.f64_or("qps", 32.0),
+        duration: std::time::Duration::from_millis(args.u64_or("duration-ms", 2000)),
+        seed: args.u64_or("seed", 0x10AD),
+        threads: args.usize_or("threads", 2),
+        queue_cap: args.usize_or("queue-cap", 128),
+        max_new_tokens: args.usize_or("tokens", 8),
+        saturation_burst: args.usize_or("burst", 32),
+    };
     println!(
-        "[gen] {} tokens, {:.1} ms/token ({:.1} tok/s)",
-        resp.tokens_generated,
-        mean_ms,
-        1e3 / mean_ms.max(1e-9)
+        "[load] open-loop {} qps for {} ms (seed {:#x}, queue cap {})",
+        cfg.qps,
+        cfg.duration.as_millis(),
+        cfg.seed,
+        cfg.queue_cap
     );
+    let tok = default_tokenizer()?;
+    let qa_reqs = vec![QaRequest {
+        question: args.get_or("question", "what reduces the number of kernels ?"),
+        context: args.get_or(
+            "context",
+            "layer fusion reduces the number of kernels and the memory traffic . \
+             the runtime loads the compiled program and executes it on the device .",
+        ),
+    }];
+    let qa = run_qa_load(NativeQaEngine::demo(Arc::clone(&tok), cfg.threads), &qa_reqs, &cfg);
+    print!("{}", qa.render());
+    let prompts = ["the model", "the quick brown fox", "the runtime loads"];
+    let gen = run_gen_load(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg);
+    print!("{}", gen.render());
+    if let Some(out) = args.get("out") {
+        write_bench_json(out, &cfg, &[qa, gen])?;
+        println!("[load] wrote {out}");
+    }
     Ok(())
 }
 

@@ -3,12 +3,39 @@
 //! Policy: drain the queue up to `max_batch`; if fewer than `min_batch`
 //! requests are waiting, wait up to `max_wait` for more before running.
 //! Generic over `BatchModel` so unit tests run without PJRT.
+//!
+//! ## Backpressure and failure contract
+//!
+//! * **Bounded queue.** At most [`BatcherOptions::queue_cap`] requests
+//!   wait at once; [`Batcher::submit`] on a full queue returns
+//!   [`BatcherError::QueueFull`] immediately (admission control) instead
+//!   of buffering without bound. Rejections are counted in
+//!   [`BatcherMetrics::rejected`].
+//! * **No caller ever hangs or panics on a server fault.** Every reply
+//!   channel yields a `Result<Resp, BatcherError>`:
+//!   - a model whose `run_batch` returns *fewer* responses than requests
+//!     fails the unanswered tail with [`BatcherError::ShortBatch`] (in
+//!     release builds too — this used to be a `debug_assert` and a
+//!     silent forever-block);
+//!   - a model that *panics* fails that batch with
+//!     [`BatcherError::ModelPanicked`], after which the worker marks
+//!     itself dead, fails everything still queued, and exits (the model
+//!     is assumed poisoned) — subsequent `submit` calls return
+//!     [`BatcherError::WorkerGone`] instead of panicking the caller.
+//! * **Metrics are lock-free** ([`BatcherMetrics`]): atomic counters
+//!   plus fixed-size streaming histograms (`serving::metrics`), so a
+//!   long-running server's memory does not grow with request count (the
+//!   previous `Vec`-per-request metrics did).
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::util::stats::LatencyHistogram;
+use super::metrics::{Counter, Gauge, StreamingHistogram};
 
 /// A model that can run a batch of work items.
 ///
@@ -16,82 +43,161 @@ use crate::util::stats::LatencyHistogram;
 /// the model and moves it into its single worker thread, so all PJRT
 /// handles (which are not thread-safe in the `xla` crate's type system)
 /// are used from exactly one thread after construction.
+///
+/// `run_batch` must return exactly one response per item, in order. A
+/// short return fails the tail with [`BatcherError::ShortBatch`]; extra
+/// responses are dropped. A panic is caught and fails the batch (see the
+/// module docs).
 pub trait BatchModel<Req: Send + 'static, Resp: Send + 'static>: Send + 'static {
     fn max_batch(&self) -> usize;
     fn run_batch(&self, items: &[Req]) -> Vec<Resp>;
 }
+
+/// Typed serving-path failure — what a caller gets instead of a hang or
+/// a propagated panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BatcherError {
+    /// Admission control: the bounded queue is at capacity. Retry later
+    /// or shed the request.
+    QueueFull { capacity: usize },
+    /// The worker thread is no longer running (model panicked earlier,
+    /// or the batcher shut down).
+    WorkerGone,
+    /// The model panicked while running the batch this request was in.
+    ModelPanicked,
+    /// `run_batch` returned fewer responses than requests; this request
+    /// was in the unanswered tail.
+    ShortBatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for BatcherError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatcherError::QueueFull { capacity } => {
+                write!(f, "batcher queue full (capacity {capacity})")
+            }
+            BatcherError::WorkerGone => write!(f, "batcher worker is gone"),
+            BatcherError::ModelPanicked => write!(f, "model panicked while running batch"),
+            BatcherError::ShortBatch { expected, got } => {
+                write!(f, "model returned {got} responses for {expected} requests")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BatcherError {}
+
+/// What a reply channel yields.
+pub type BatchResult<Resp> = Result<Resp, BatcherError>;
 
 #[derive(Debug, Clone)]
 pub struct BatcherOptions {
     pub max_wait: Duration,
     /// Don't wait if at least this many requests are queued.
     pub min_batch: usize,
+    /// Bounded-queue capacity: at most this many requests wait at once;
+    /// beyond it, `submit` rejects with [`BatcherError::QueueFull`].
+    pub queue_cap: usize,
 }
 
 impl Default for BatcherOptions {
     fn default() -> Self {
-        BatcherOptions { max_wait: Duration::from_millis(5), min_batch: 2 }
+        BatcherOptions { max_wait: Duration::from_millis(5), min_batch: 2, queue_cap: 256 }
     }
 }
 
 struct Job<Req, Resp> {
     req: Req,
-    reply: Sender<Resp>,
+    reply: Sender<BatchResult<Resp>>,
     enqueued: Instant,
 }
 
 pub struct Batcher<Req: Send + 'static, Resp: Send + 'static> {
-    tx: Sender<Job<Req, Resp>>,
-    pub metrics: Arc<Mutex<BatcherMetrics>>,
+    tx: SyncSender<Job<Req, Resp>>,
+    pub metrics: Arc<BatcherMetrics>,
+    alive: Arc<AtomicBool>,
+    capacity: usize,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Lock-free batcher metrics (see `serving::metrics`). All fields are
+/// safe to read while the batcher serves traffic; histograms are
+/// bucketed (exact counts, quantized percentiles).
 #[derive(Debug, Default)]
 pub struct BatcherMetrics {
-    pub batches: usize,
-    pub requests: usize,
-    /// Replies actually delivered (== `requests` unless a caller dropped
-    /// its receiver before the reply arrived).
-    pub responses: usize,
-    pub batch_sizes: Vec<usize>,
-    pub queue_latency: LatencyHistogram,
-    pub total_latency: LatencyHistogram,
+    /// Requests drained into batches (i.e. handed to the model).
+    pub requests: Counter,
+    /// `Ok` replies actually delivered (== `requests` unless a caller
+    /// dropped its receiver before the reply arrived, or jobs failed).
+    pub responses: Counter,
+    /// Admission rejects: `submit` calls refused with `QueueFull`.
+    pub rejected: Counter,
+    /// Jobs failed with a typed error (short batch, model panic, drain
+    /// at worker death).
+    pub failed: Counter,
+    pub batches: Counter,
+    /// Batch occupancy distribution (values are batch sizes, not µs).
+    pub batch_occupancy: StreamingHistogram,
+    /// Requests waiting in the bounded queue right now (+ peak).
+    pub queue_depth: Gauge,
+    pub queue_latency: StreamingHistogram,
+    pub total_latency: StreamingHistogram,
 }
 
 impl BatcherMetrics {
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batches == 0 {
+        let batches = self.batches.get();
+        if batches == 0 {
             0.0
         } else {
-            self.requests as f64 / self.batches as f64
+            self.requests.get() as f64 / batches as f64
         }
     }
 }
 
 impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
     pub fn new<M: BatchModel<Req, Resp>>(model: M, opts: BatcherOptions) -> Self {
-        let (tx, rx) = channel::<Job<Req, Resp>>();
-        let metrics = Arc::new(Mutex::new(BatcherMetrics::default()));
+        let capacity = opts.queue_cap.max(1);
+        let (tx, rx) = sync_channel::<Job<Req, Resp>>(capacity);
+        let metrics = Arc::new(BatcherMetrics::default());
+        let alive = Arc::new(AtomicBool::new(true));
         let m2 = Arc::clone(&metrics);
+        let a2 = Arc::clone(&alive);
         let worker = std::thread::Builder::new()
             .name("canao-batcher".into())
-            .spawn(move || worker_loop(rx, model, opts, m2))
+            .spawn(move || worker_loop(rx, model, opts, m2, a2))
             .expect("spawn batcher");
-        Batcher { tx, metrics, worker: Some(worker) }
+        Batcher { tx, metrics, alive, capacity, worker: Some(worker) }
     }
 
-    /// Submit a request; the returned receiver yields the response.
-    pub fn submit(&self, req: Req) -> Receiver<Resp> {
+    /// Submit a request; the returned receiver yields the response (or a
+    /// typed error). `Err` here means the request was never admitted —
+    /// queue full or worker dead — and the caller should shed or retry.
+    pub fn submit(&self, req: Req) -> Result<Receiver<BatchResult<Resp>>, BatcherError> {
+        if !self.alive.load(Ordering::Acquire) {
+            return Err(BatcherError::WorkerGone);
+        }
         let (reply, rx) = channel();
-        self.tx
-            .send(Job { req, reply, enqueued: Instant::now() })
-            .expect("batcher worker alive");
-        rx
+        match self.tx.try_send(Job { req, reply, enqueued: Instant::now() }) {
+            Ok(()) => {
+                self.metrics.queue_depth.inc();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.inc();
+                Err(BatcherError::QueueFull { capacity: self.capacity })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(BatcherError::WorkerGone),
+        }
     }
 
-    /// Convenience: submit and wait.
-    pub fn call(&self, req: Req) -> Resp {
-        self.submit(req).recv().expect("batcher reply")
+    /// Convenience: submit and wait. A worker that dies without replying
+    /// (its end of the reply channel dropped) reads as `WorkerGone`.
+    pub fn call(&self, req: Req) -> BatchResult<Resp> {
+        match self.submit(req)?.recv() {
+            Ok(result) => result,
+            Err(_) => Err(BatcherError::WorkerGone),
+        }
     }
 
     /// Stop accepting requests, drain everything already queued (every
@@ -106,7 +212,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
 impl<Req: Send + 'static, Resp: Send + 'static> Drop for Batcher<Req, Resp> {
     fn drop(&mut self) {
         // Closing tx ends the worker loop.
-        let (dummy_tx, _) = channel::<Job<Req, Resp>>();
+        let (dummy_tx, _) = sync_channel::<Job<Req, Resp>>(1);
         drop(std::mem::replace(&mut self.tx, dummy_tx));
         if let Some(w) = self.worker.take() {
             let _ = w.join();
@@ -118,21 +224,29 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
     rx: Receiver<Job<Req, Resp>>,
     model: M,
     opts: BatcherOptions,
-    metrics: Arc<Mutex<BatcherMetrics>>,
+    metrics: Arc<BatcherMetrics>,
+    alive: Arc<AtomicBool>,
 ) {
     loop {
         // Block for the first job.
         let first = match rx.recv() {
             Ok(j) => j,
-            Err(_) => return,
+            Err(_) => {
+                alive.store(false, Ordering::Release);
+                return;
+            }
         };
+        metrics.queue_depth.dec();
         let mut jobs = vec![first];
         let deadline = Instant::now() + opts.max_wait;
         // Accumulate until full, or until deadline when under min_batch.
         while jobs.len() < model.max_batch() {
             if jobs.len() >= opts.min_batch {
                 match rx.try_recv() {
-                    Ok(j) => jobs.push(j),
+                    Ok(j) => {
+                        metrics.queue_depth.dec();
+                        jobs.push(j);
+                    }
                     Err(_) => break,
                 }
             } else {
@@ -141,7 +255,10 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(j) => jobs.push(j),
+                    Ok(j) => {
+                        metrics.queue_depth.dec();
+                        jobs.push(j);
+                    }
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
@@ -158,30 +275,61 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
             enqueued.push(j.enqueued);
         }
 
-        let responses = model.run_batch(&reqs);
-        debug_assert_eq!(responses.len(), replies.len());
-
         // Batch metrics land BEFORE the replies go out, so a caller that
         // observes its reply also observes the metrics for its batch.
-        {
-            let mut m = metrics.lock().unwrap();
-            m.batches += 1;
-            m.requests += reqs.len();
-            m.batch_sizes.push(reqs.len());
-            for &t in &enqueued {
-                m.queue_latency.record(started.duration_since(t));
-                m.total_latency.record(t.elapsed());
+        metrics.batches.inc();
+        metrics.requests.add(reqs.len() as u64);
+        metrics.batch_occupancy.record_value(reqs.len() as u64);
+        for &t in &enqueued {
+            metrics.queue_latency.record(started.duration_since(t));
+        }
+
+        // The model may panic; catching the unwind keeps every caller's
+        // reply channel honest. AssertUnwindSafe is sound because a
+        // panicked model is never touched again — the worker exits below.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| model.run_batch(&reqs)));
+        drop(reqs);
+
+        match result {
+            Ok(responses) => {
+                let expected = replies.len();
+                let got = responses.len();
+                let mut delivered = 0u64;
+                let mut pending = replies.into_iter().zip(enqueued);
+                for resp in responses {
+                    // Extra responses beyond the request count are dropped.
+                    let Some((reply, t)) = pending.next() else { break };
+                    metrics.total_latency.record(t.elapsed());
+                    if reply.send(Ok(resp)).is_ok() {
+                        delivered += 1; // receiver may have given up: fine
+                    }
+                }
+                // Short batch: fail the unanswered tail in release builds
+                // too (callers used to block on recv() forever here).
+                for (reply, _t) in pending {
+                    metrics.failed.inc();
+                    let _ = reply.send(Err(BatcherError::ShortBatch { expected, got }));
+                }
+                // Delivery count is only exact after `shutdown()`/drop has
+                // joined the worker (stress tests read it there).
+                metrics.responses.add(delivered);
+            }
+            Err(_panic) => {
+                // Refuse new work first, then fail this batch and
+                // everything still queued; the model is assumed poisoned.
+                alive.store(false, Ordering::Release);
+                for reply in replies {
+                    metrics.failed.inc();
+                    let _ = reply.send(Err(BatcherError::ModelPanicked));
+                }
+                while let Ok(j) = rx.try_recv() {
+                    metrics.queue_depth.dec();
+                    metrics.failed.inc();
+                    let _ = j.reply.send(Err(BatcherError::WorkerGone));
+                }
+                return;
             }
         }
-        let mut delivered = 0usize;
-        for (resp, reply) in responses.into_iter().zip(replies) {
-            if reply.send(resp).is_ok() {
-                delivered += 1; // receiver may have given up: fine
-            }
-        }
-        // Delivery count is only exact after `shutdown()`/drop has joined
-        // the worker (stress tests read it there).
-        metrics.lock().unwrap().responses += delivered;
     }
 }
 
@@ -204,26 +352,32 @@ mod tests {
     #[test]
     fn single_request_roundtrip() {
         let b = Batcher::new(Doubler, BatcherOptions::default());
-        assert_eq!(b.call(21), 42);
+        assert_eq!(b.call(21), Ok(42));
     }
 
     #[test]
     fn concurrent_requests_batch_together() {
         let b = Arc::new(Batcher::new(
             Doubler,
-            BatcherOptions { max_wait: Duration::from_millis(30), min_batch: 4 },
+            BatcherOptions {
+                max_wait: Duration::from_millis(30),
+                min_batch: 4,
+                ..Default::default()
+            },
         ));
         let mut rxs = Vec::new();
         for i in 0..8u32 {
-            rxs.push(b.submit(i));
+            rxs.push(b.submit(i).expect("queue has room"));
         }
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap(), (i as u32) * 2);
+            assert_eq!(rx.recv().unwrap(), Ok((i as u32) * 2));
         }
-        let m = b.metrics.lock().unwrap();
-        assert_eq!(m.requests, 8);
-        assert!(m.batches <= 4, "batches {}", m.batches);
+        let m = &b.metrics;
+        assert_eq!(m.requests.get(), 8);
+        assert!(m.batches.get() <= 4, "batches {}", m.batches.get());
         assert!(m.mean_batch_size() >= 2.0, "{}", m.mean_batch_size());
+        assert_eq!(m.batch_occupancy.sum(), 8, "occupancy partitions requests");
+        assert!(m.queue_depth.peak() >= 1);
     }
 
     #[test]
@@ -239,9 +393,9 @@ mod tests {
             }
         }
         let b = Arc::new(Batcher::new(Checker, BatcherOptions::default()));
-        let rxs: Vec<_> = (0..10u32).map(|i| b.submit(i)).collect();
+        let rxs: Vec<_> = (0..10u32).map(|i| b.submit(i).unwrap()).collect();
         for rx in rxs {
-            assert!(rx.recv().unwrap() <= 2);
+            assert!(rx.recv().unwrap().unwrap() <= 2);
         }
     }
 
@@ -249,17 +403,24 @@ mod tests {
     fn metrics_latency_recorded() {
         let b = Batcher::new(Doubler, BatcherOptions::default());
         for i in 0..5 {
-            b.call(i);
+            b.call(i).unwrap();
         }
-        let mut m = b.metrics.lock().unwrap();
+        let m = &b.metrics;
         assert_eq!(m.total_latency.len(), 5);
         assert!(m.total_latency.percentile(50.0) < Duration::from_secs(1));
+        assert_eq!(m.queue_depth.get(), 0, "queue drained");
     }
 
     #[test]
     fn drop_shuts_worker_down() {
         let b = Batcher::new(Doubler, BatcherOptions::default());
-        assert_eq!(b.call(1), 2);
+        assert_eq!(b.call(1), Ok(2));
         drop(b); // must not hang
+    }
+
+    #[test]
+    fn queue_cap_of_zero_is_clamped() {
+        let b = Batcher::new(Doubler, BatcherOptions { queue_cap: 0, ..Default::default() });
+        assert_eq!(b.call(3), Ok(6), "capacity clamps to 1, requests still flow");
     }
 }

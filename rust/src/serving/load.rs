@@ -1,0 +1,480 @@
+//! Sustained-load harness: open-loop arrival generation against the
+//! native serving engines, with percentile reporting and a committed
+//! JSON trajectory (`BENCH_serving.json`).
+//!
+//! **Open-loop** means arrivals follow a schedule the system does not
+//! control: requests are injected at a configured QPS with seeded
+//! exponential (Poisson-process) inter-arrival jitter, whether or not
+//! earlier requests finished. Unlike the closed-loop benches (issue a
+//! request, wait, repeat — the load adapts to the system and hides queue
+//! growth), open-loop drive exposes queueing delay: when the engine
+//! saturates, latency percentiles grow and the bounded batcher queue
+//! starts rejecting, and both show up in the report.
+//!
+//! The harness is a library so the `serving_load` bench target, the
+//! `canao serve-load` CLI, and the smoke tests share one implementation.
+//! Reported TTFT includes queue wait (it is what a user would see);
+//! ms/token covers steady-state decode steps only (entry 0 of
+//! `per_token_ms` is prefill + first token). All percentiles here are
+//! exact-sample (`util::stats::MsSummary`) — a load run is bounded, so
+//! the unbounded-`Vec` concern that moved the *serving* path to
+//! streaming histograms does not apply.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use crate::serving::batcher::{BatchResult, Batcher, BatcherError, BatcherOptions};
+use crate::serving::{GenRequest, NativeGenEngine, NativeQaEngine, QaRequest};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::MsSummary;
+
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Mean arrival rate (requests per second).
+    pub qps: f64,
+    /// Open-loop injection window (drain time comes on top).
+    pub duration: Duration,
+    /// Seed for the arrival-jitter process (and generation seeds).
+    pub seed: u64,
+    /// Executor threads per request inside the engine.
+    pub threads: usize,
+    /// Bounded batcher queue (admission control) capacity.
+    pub queue_cap: usize,
+    /// Tokens per generation request (gen engine only).
+    pub max_new_tokens: usize,
+    /// Closed-loop burst size for the throughput-at-saturation probe.
+    pub saturation_burst: usize,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            qps: 32.0,
+            duration: Duration::from_millis(2000),
+            seed: 0x10AD,
+            threads: 2,
+            queue_cap: 128,
+            max_new_tokens: 8,
+            saturation_burst: 32,
+        }
+    }
+}
+
+impl LoadConfig {
+    pub fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("qps".to_string(), Json::Num(self.qps));
+        m.insert("duration_ms".to_string(), Json::Num(self.duration.as_millis() as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("queue_cap".to_string(), Json::Num(self.queue_cap as f64));
+        m.insert("max_new_tokens".to_string(), Json::Num(self.max_new_tokens as f64));
+        m.insert("saturation_burst".to_string(), Json::Num(self.saturation_burst as f64));
+        Json::Obj(m)
+    }
+}
+
+/// One engine's sustained-load result.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub engine: String,
+    /// Arrivals the schedule produced.
+    pub offered: usize,
+    /// Requests that completed with a real response.
+    pub completed: usize,
+    /// Admission rejects (bounded queue full) — the backpressure signal.
+    pub rejected: usize,
+    /// Typed serving errors observed by callers.
+    pub errors: usize,
+    /// Injection + drain wall time.
+    pub wall_s: f64,
+    /// Completions per second over the whole run.
+    pub throughput_rps: f64,
+    /// Closed-loop burst throughput — the engine's service capacity.
+    pub saturation_rps: f64,
+    /// Time to first token, queue wait included. QA: the full answer.
+    pub ttft: Option<MsSummary>,
+    /// Steady-state decode step latency (gen engines only).
+    pub ms_per_token: Option<MsSummary>,
+    pub tokens_generated: usize,
+    pub mean_batch_occupancy: f64,
+    pub queue_depth_peak: i64,
+}
+
+fn r3(x: f64) -> f64 {
+    (x * 1e3).round() / 1e3
+}
+
+impl LoadReport {
+    pub fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("offered".to_string(), Json::Num(self.offered as f64));
+        m.insert("completed".to_string(), Json::Num(self.completed as f64));
+        m.insert("rejected".to_string(), Json::Num(self.rejected as f64));
+        m.insert("errors".to_string(), Json::Num(self.errors as f64));
+        m.insert("wall_s".to_string(), Json::Num(r3(self.wall_s)));
+        m.insert("throughput_rps".to_string(), Json::Num(r3(self.throughput_rps)));
+        m.insert("saturation_rps".to_string(), Json::Num(r3(self.saturation_rps)));
+        let ttft = self.ttft.as_ref().map_or(Json::Null, MsSummary::json);
+        m.insert("ttft".to_string(), ttft);
+        let mpt = self.ms_per_token.as_ref().map_or(Json::Null, MsSummary::json);
+        m.insert("ms_per_token".to_string(), mpt);
+        m.insert("tokens_generated".to_string(), Json::Num(self.tokens_generated as f64));
+        let occ = Json::Num(r3(self.mean_batch_occupancy));
+        m.insert("mean_batch_occupancy".to_string(), occ);
+        m.insert("queue_depth_peak".to_string(), Json::Num(self.queue_depth_peak as f64));
+        Json::Obj(m)
+    }
+
+    /// Multi-line human summary (benches and the CLI print this).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{}: offered {} completed {} rejected {} errors {} in {:.2}s \
+             ({:.1} req/s, saturation {:.1} req/s)\n",
+            self.engine,
+            self.offered,
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.wall_s,
+            self.throughput_rps,
+            self.saturation_rps,
+        );
+        match &self.ttft {
+            Some(t) => out.push_str(&format!(
+                "  ttft ms: p50 {:.2} p95 {:.2} p99 {:.2} mean {:.2} max {:.2} (n={})\n",
+                t.p50_ms, t.p95_ms, t.p99_ms, t.mean_ms, t.max_ms, t.n
+            )),
+            None => out.push_str("  ttft: no completions\n"),
+        }
+        if let Some(t) = &self.ms_per_token {
+            out.push_str(&format!(
+                "  ms/token: p50 {:.2} p95 {:.2} p99 {:.2} mean {:.2} ({} tokens)\n",
+                t.p50_ms, t.p95_ms, t.p99_ms, t.mean_ms, self.tokens_generated
+            ));
+        }
+        out.push_str(&format!(
+            "  batch occupancy mean {:.2}, queue depth peak {}\n",
+            self.mean_batch_occupancy, self.queue_depth_peak
+        ));
+        out
+    }
+}
+
+/// Raw open-loop outcome before engine-specific aggregation.
+struct OpenLoopRun<Resp> {
+    offered: usize,
+    rejected: usize,
+    /// Requests lost at submit time to a dead worker (a serving bug —
+    /// counted as errors, never silently dropped).
+    lost: usize,
+    /// (caller-observed latency ms, reply) per admitted request.
+    completed: Vec<(f64, BatchResult<Resp>)>,
+    wall_s: f64,
+}
+
+/// Drive one batcher open-loop: a pacing thread injects arrivals on the
+/// seeded exponential schedule while a collector drains replies in FIFO
+/// order (the batcher replies in order, so recv order matches completion
+/// order and caller-observed latency is measured at arrival).
+fn open_loop<Req, Resp>(
+    batcher: &Batcher<Req, Resp>,
+    mut make_req: impl FnMut(usize) -> Req,
+    cfg: &LoadConfig,
+) -> OpenLoopRun<Resp>
+where
+    Req: Send + 'static,
+    Resp: Send + 'static,
+{
+    let (ctx, crx) = channel::<(Instant, Receiver<BatchResult<Resp>>)>();
+    let mut offered = 0usize;
+    let mut rejected = 0usize;
+    let mut lost = 0usize;
+    let start = Instant::now();
+    let completed = std::thread::scope(|s| {
+        let collector = s.spawn(move || {
+            let mut done: Vec<(f64, BatchResult<Resp>)> = Vec::new();
+            for (t, rx) in crx {
+                let result = match rx.recv() {
+                    Ok(r) => r,
+                    // Worker died before replying: typed, not a hang.
+                    Err(_) => Err(BatcherError::WorkerGone),
+                };
+                done.push((t.elapsed().as_secs_f64() * 1e3, result));
+            }
+            done
+        });
+
+        let mut rng = Rng::new(cfg.seed);
+        let horizon = cfg.duration.as_secs_f64();
+        let mut next_at = 0.0f64;
+        while next_at < horizon {
+            let due = start + Duration::from_secs_f64(next_at);
+            let wait = due.saturating_duration_since(Instant::now());
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+            offered += 1;
+            match batcher.submit(make_req(offered - 1)) {
+                Ok(rx) => ctx.send((Instant::now(), rx)).expect("collector alive"),
+                Err(BatcherError::QueueFull { .. }) => rejected += 1,
+                Err(_) => lost += 1,
+            }
+            // Poisson process: exponential inter-arrival gaps. rng.f64()
+            // is in [0, 1), so 1 - u is never zero.
+            next_at += -(1.0 - rng.f64()).ln() / cfg.qps.max(1e-3);
+        }
+        drop(ctx);
+        collector.join().expect("collector never panics")
+    });
+    OpenLoopRun { offered, rejected, lost, completed, wall_s: start.elapsed().as_secs_f64() }
+}
+
+/// Closed-loop burst: submit `burst` requests back-to-back and time the
+/// drain — the service capacity the open-loop percentiles degrade
+/// against. Kept within the queue bound so admission control does not
+/// skew the probe.
+fn saturation_rps<Req, Resp>(
+    batcher: &Batcher<Req, Resp>,
+    mut make_req: impl FnMut(usize) -> Req,
+    burst: usize,
+) -> f64
+where
+    Req: Send + 'static,
+    Resp: Send + 'static,
+{
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..burst).filter_map(|i| batcher.submit(make_req(i)).ok()).collect();
+    let n = rxs.len();
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    n as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// Sustained QA load through the dynamic batcher. TTFT is the full
+/// answer latency (queue wait included).
+pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig) -> LoadReport {
+    assert!(!reqs.is_empty(), "need at least one request template");
+    let batcher = Batcher::new(
+        engine,
+        BatcherOptions {
+            max_wait: Duration::from_millis(2),
+            min_batch: 2,
+            queue_cap: cfg.queue_cap,
+        },
+    );
+    let run = open_loop(&batcher, |i| reqs[i % reqs.len()].clone(), cfg);
+    let sat = saturation_rps(
+        &batcher,
+        |i| reqs[i % reqs.len()].clone(),
+        cfg.saturation_burst.min(cfg.queue_cap),
+    );
+    let metrics = &batcher.metrics;
+    let mut ttft = Vec::with_capacity(run.completed.len());
+    let mut errors = run.lost;
+    for (lat_ms, result) in &run.completed {
+        match result {
+            Ok(_) => ttft.push(*lat_ms),
+            Err(_) => errors += 1,
+        }
+    }
+    let completed = ttft.len();
+    LoadReport {
+        engine: "native_qa".to_string(),
+        offered: run.offered,
+        completed,
+        rejected: run.rejected,
+        errors,
+        wall_s: run.wall_s,
+        throughput_rps: completed as f64 / run.wall_s.max(1e-9),
+        saturation_rps: sat,
+        ttft: MsSummary::from_samples(ttft),
+        ms_per_token: None,
+        tokens_generated: 0,
+        mean_batch_occupancy: metrics.mean_batch_size(),
+        queue_depth_peak: metrics.queue_depth.peak(),
+    }
+}
+
+/// Sustained text-generation load. TTFT is queue wait + prefill + first
+/// token (caller latency minus steady-state steps); ms/token aggregates
+/// the steady-state steps and is `None` when no request generated a
+/// second token (the empty-aggregation guard).
+pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig) -> LoadReport {
+    assert!(!prompts.is_empty(), "need at least one prompt");
+    let seed = cfg.seed;
+    let tokens = cfg.max_new_tokens;
+    let make = move |i: usize| GenRequest {
+        prompt: prompts[i % prompts.len()].to_string(),
+        max_new_tokens: tokens,
+        temperature: 0.8,
+        seed: seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
+    };
+    let batcher = Batcher::new(
+        engine,
+        BatcherOptions {
+            max_wait: Duration::from_millis(1),
+            min_batch: 1,
+            queue_cap: cfg.queue_cap,
+        },
+    );
+    let run = open_loop(&batcher, make, cfg);
+    let sat = saturation_rps(&batcher, make, cfg.saturation_burst.min(cfg.queue_cap));
+    let metrics = &batcher.metrics;
+
+    let mut ttft = Vec::new();
+    let mut per_token = Vec::new();
+    let mut tokens_generated = 0usize;
+    let mut errors = run.lost;
+    let mut completed = 0usize;
+    for (lat_ms, result) in &run.completed {
+        match result {
+            Ok(resp) => {
+                completed += 1;
+                tokens_generated += resp.tokens_generated;
+                let steady: f64 = resp.per_token_ms.iter().skip(1).sum();
+                ttft.push((lat_ms - steady).max(0.0));
+                per_token.extend(resp.per_token_ms.iter().skip(1).copied());
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    LoadReport {
+        engine: "native_gen".to_string(),
+        offered: run.offered,
+        completed,
+        rejected: run.rejected,
+        errors,
+        wall_s: run.wall_s,
+        throughput_rps: completed as f64 / run.wall_s.max(1e-9),
+        saturation_rps: sat,
+        ttft: MsSummary::from_samples(ttft),
+        ms_per_token: MsSummary::from_samples(per_token),
+        tokens_generated,
+        mean_batch_occupancy: metrics.mean_batch_size(),
+        queue_depth_peak: metrics.queue_depth.peak(),
+    }
+}
+
+/// Serialize a full load-bench run. Committed/uploaded as
+/// `BENCH_serving.json` by CI so the serving perf trajectory diffs per
+/// PR.
+pub fn bench_json(cfg: &LoadConfig, reports: &[LoadReport]) -> Json {
+    let mut engines = std::collections::BTreeMap::new();
+    for r in reports {
+        engines.insert(r.engine.clone(), r.json());
+    }
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("schema".to_string(), Json::Num(1.0));
+    m.insert("bench".to_string(), Json::Str("serving_load".to_string()));
+    m.insert("config".to_string(), cfg.json());
+    m.insert("engines".to_string(), Json::Obj(engines));
+    Json::Obj(m)
+}
+
+/// Write the pretty-printed report to `path`.
+pub fn write_bench_json(
+    path: &str,
+    cfg: &LoadConfig,
+    reports: &[LoadReport],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_json(cfg, reports).dump_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BertConfig;
+    use crate::tokenizer::{Tokenizer, Vocab};
+    use std::sync::Arc;
+
+    const CORPUS: &str = "the quick brown fox jumps over the lazy dog . \
+                          layer fusion reduces the number of kernels .";
+
+    fn tiny_qa() -> NativeQaEngine {
+        let tok = Arc::new(Tokenizer::new(Vocab::build(CORPUS, 256)));
+        let cfg = BertConfig { vocab: 256, seq: 16, layers: 1, hidden: 8, heads: 2, inter: 16 };
+        NativeQaEngine::new(tok, cfg, 1)
+    }
+
+    fn tiny_gen() -> NativeGenEngine {
+        let tok = Arc::new(Tokenizer::new(Vocab::build(CORPUS, 256)));
+        let cfg = BertConfig { vocab: 256, seq: 12, layers: 1, hidden: 8, heads: 2, inter: 16 };
+        NativeGenEngine::new(tok, cfg, 1)
+    }
+
+    fn smoke_cfg() -> LoadConfig {
+        LoadConfig {
+            qps: 120.0,
+            duration: Duration::from_millis(200),
+            seed: 7,
+            threads: 1,
+            queue_cap: 64,
+            max_new_tokens: 2,
+            saturation_burst: 8,
+        }
+    }
+
+    #[test]
+    fn qa_load_smoke() {
+        let reqs = vec![QaRequest {
+            question: "what reduces kernels ?".into(),
+            context: "layer fusion reduces the number of kernels".into(),
+        }];
+        let cfg = smoke_cfg();
+        let r = run_qa_load(tiny_qa(), &reqs, &cfg);
+        assert!(r.offered > 0, "schedule produced arrivals");
+        assert!(r.completed > 0, "some requests completed");
+        assert!(r.completed + r.rejected + r.errors <= r.offered + cfg.saturation_burst);
+        let ttft = r.ttft.as_ref().expect("completions imply a TTFT summary");
+        assert!(ttft.p50_ms <= ttft.p95_ms && ttft.p95_ms <= ttft.p99_ms);
+        assert!(r.saturation_rps > 0.0);
+        assert!(r.throughput_rps > 0.0);
+        // The serialized form parses back and has the headline fields.
+        let j = bench_json(&cfg, &[r]);
+        let parsed = Json::parse(j.dump_pretty().trim()).unwrap();
+        let qa = parsed.get("engines").unwrap().get("native_qa").unwrap();
+        assert!(qa.get("ttft").unwrap().get("p99_ms").unwrap().as_f64().is_some());
+        assert!(qa.get("saturation_rps").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn gen_load_smoke_reports_ms_per_token() {
+        let cfg = smoke_cfg();
+        let r = run_gen_load(tiny_gen(), &["the model", "the quick brown"], &cfg);
+        assert!(r.offered > 0 && r.completed > 0);
+        assert!(r.tokens_generated > 0, "generation produced tokens");
+        assert!(r.ttft.is_some());
+        let mpt = r.ms_per_token.as_ref().expect("2-token requests have steady steps");
+        assert!(mpt.n > 0);
+        assert!(mpt.p50_ms >= 0.0);
+    }
+
+    #[test]
+    fn gen_load_zero_tokens_has_no_ms_per_token() {
+        // max_new_tokens 1 -> no steady-state steps at all; the ms/token
+        // aggregation must yield None, not NaN (the bench-report bug).
+        let cfg = LoadConfig { max_new_tokens: 1, ..smoke_cfg() };
+        let r = run_gen_load(tiny_gen(), &["the model"], &cfg);
+        assert!(r.completed > 0);
+        assert!(r.ms_per_token.is_none(), "no steady steps -> None");
+        assert!(r.ttft.is_some(), "first-token latency still reported");
+    }
+
+    #[test]
+    fn write_bench_json_writes_parseable_file() {
+        let cfg = smoke_cfg();
+        let reqs = vec![QaRequest { question: "what ?".into(), context: "the dog".into() }];
+        let r = run_qa_load(tiny_qa(), &reqs, &cfg);
+        let path = std::env::temp_dir().join("canao_bench_serving_test.json");
+        let path = path.to_str().expect("utf8 temp path");
+        write_bench_json(path, &cfg, &[r]).unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        let parsed = Json::parse(body.trim()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serving_load"));
+        let _ = std::fs::remove_file(path);
+    }
+}

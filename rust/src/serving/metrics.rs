@@ -1,0 +1,426 @@
+//! Serving observability: lock-free counters, gauges, and fixed-size
+//! streaming histograms for the hot path.
+//!
+//! The serving layer records one event per request (and per generated
+//! token), concurrently from the batcher worker, engine callers, and the
+//! load generator. Everything here is therefore built on atomics:
+//!
+//! * [`Counter`] — monotonically increasing `u64` (requests, rejects).
+//! * [`Gauge`] — instantaneous level plus high-watermark (queue depth).
+//! * [`StreamingHistogram`] — a **fixed-size log-bucketed** histogram
+//!   with p50/p95/p99 queries. Unlike `util::stats::LatencyHistogram`
+//!   (which appends every sample to a `Vec` — exact, but unbounded
+//!   memory and a sort per query), this costs O(1) memory forever and
+//!   O(1) per record, the contract a long-running server needs. The
+//!   price is quantization: a reported percentile is the midpoint of
+//!   the bucket holding the true percentile, so it is within one bucket
+//!   width (≤ 1/8 relative, exact below 8 µs) of the exact value.
+//!   Bounded benches that want exact percentiles keep using the
+//!   `Vec`-backed histogram ("exact-sample mode").
+//!
+//! Recording never blocks and never allocates; queries walk the fixed
+//! bucket array. Under concurrent writes a query sees a slightly stale
+//! but internally usable snapshot (counts are monotone).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotone event counter (lock-free).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level with a high-watermark (e.g. batcher queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicI64,
+    peak: AtomicI64,
+}
+
+impl Gauge {
+    pub fn inc(&self) {
+        let v = self.cur.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.cur.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> i64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// Sub-buckets per power of two: 8 → percentile quantization error is at
+/// most 1/8 of the reported value (and exact for values below 8).
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS;
+/// Octaves covered above the exact range: values up to ~2^43 µs (≈ 100
+/// days) land in a real bucket; anything larger clamps into the last.
+const OCTAVES: usize = 40;
+const NBUCKETS: usize = SUB + OCTAVES * SUB;
+
+/// Fixed-size log-bucketed streaming histogram over `u64` values
+/// (microseconds by convention for latencies; plain counts for batch
+/// occupancy). See the module docs for the accuracy/memory contract.
+#[derive(Debug)]
+pub struct StreamingHistogram {
+    buckets: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for StreamingHistogram {
+    fn default() -> Self {
+        StreamingHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl StreamingHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a value: exact below `SUB`, then `SUB` linear
+    /// sub-buckets per octave.
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros(); // >= SUB_BITS
+        let sub = ((v >> (exp - SUB_BITS)) as usize) - SUB;
+        let idx = SUB + (exp - SUB_BITS) as usize * SUB + sub;
+        idx.min(NBUCKETS - 1)
+    }
+
+    /// Inclusive lower bound and width of bucket `idx`.
+    fn bucket_bounds(idx: usize) -> (u64, u64) {
+        if idx < SUB {
+            return (idx as u64, 1);
+        }
+        let block = (idx - SUB) / SUB;
+        let sub = ((idx - SUB) % SUB) as u64;
+        let exp = block as u32 + SUB_BITS;
+        let width = 1u64 << (exp - SUB_BITS);
+        ((1u64 << exp) + sub * width, width)
+    }
+
+    /// Width of the bucket containing `v` — the histogram's resolution at
+    /// that magnitude (accuracy tests assert against this).
+    pub fn bucket_width(v: u64) -> u64 {
+        Self::bucket_bounds(Self::index(v)).1
+    }
+
+    fn bucket_mid(idx: usize) -> u64 {
+        let (lo, width) = Self::bucket_bounds(idx);
+        lo + (width - 1) / 2
+    }
+
+    /// Record a raw value (O(1), lock-free, never allocates).
+    pub fn record_value(&self, v: u64) {
+        self.buckets[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a latency as whole microseconds.
+    pub fn record(&self, d: Duration) {
+        self.record_value(d.as_micros() as u64);
+    }
+
+    pub fn len(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sum of all recorded values (exact — sums are not bucketed).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max_value(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_value(&self) -> f64 {
+        let n = self.len();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Percentile (`p` in [0, 100]) as a bucket-midpoint value; 0 when
+    /// empty. Within one bucket width of the exact percentile.
+    pub fn percentile_value(&self, p: f64) -> u64 {
+        let count = self.len();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * (count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen > rank {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(NBUCKETS - 1)
+    }
+
+    /// Percentile as a `Duration` (for histograms recording microseconds).
+    pub fn percentile(&self, p: f64) -> Duration {
+        Duration::from_micros(self.percentile_value(p))
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_micros(self.mean_value() as u64)
+    }
+
+    /// One-line summary, mirroring `LatencyHistogram::summary`.
+    pub fn summary(&self) -> String {
+        if self.is_empty() {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} p99={:?} max={:?}",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            Duration::from_micros(self.max_value()),
+        )
+    }
+}
+
+/// Per-engine serving metrics, shared (`Arc`) between the engine — which
+/// records — and observers (load generator, CLI) — which query. All
+/// fields are lock-free; recording from `&self` is what lets the engines
+/// stay `BatchModel`s moved into the batcher worker while callers keep a
+/// metrics handle.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    /// Requests attempted (including ones that then failed).
+    pub requests: Counter,
+    /// Requests that returned a typed error.
+    pub failures: Counter,
+    /// Time-to-first-token, µs. For QA this is the full answer latency
+    /// (the answer IS the first token); for textgen it covers prefill +
+    /// the first generated token.
+    pub ttft: StreamingHistogram,
+    /// Per-token step latency after the first token, µs (textgen only).
+    pub token_latency: StreamingHistogram,
+}
+
+impl EngineMetrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} failures={} ttft[{}] token[{}]",
+            self.requests.get(),
+            self.failures.get(),
+            self.ttft.summary(),
+            self.token_latency.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        g.inc();
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.peak(), 2);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.peak(), 2, "peak is a high-watermark");
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = StreamingHistogram::new();
+        for v in [0u64, 1, 2, 3, 4, 5, 6, 7] {
+            h.record_value(v);
+        }
+        assert_eq!(h.len(), 8);
+        assert_eq!(h.percentile_value(0.0), 0);
+        assert_eq!(h.percentile_value(100.0), 7);
+        assert_eq!(h.sum(), 28);
+        assert_eq!(h.max_value(), 7);
+    }
+
+    #[test]
+    fn bucket_bounds_partition_the_line() {
+        // Every bucket starts exactly where the previous one ends.
+        let mut expected_lo = 0u64;
+        for idx in 0..NBUCKETS {
+            let (lo, width) = StreamingHistogram::bucket_bounds(idx);
+            assert_eq!(lo, expected_lo, "bucket {idx} lower bound");
+            expected_lo = lo + width;
+        }
+        // And index() maps boundary values into the right bucket.
+        for v in [0u64, 7, 8, 15, 16, 17, 1000, 123_456, 10_000_000] {
+            let idx = StreamingHistogram::index(v);
+            let (lo, width) = StreamingHistogram::bucket_bounds(idx);
+            assert!(lo <= v && v < lo + width, "v={v} idx={idx} lo={lo} w={width}");
+        }
+    }
+
+    /// Exact percentile of a sorted sample, matching the rank rule the
+    /// histogram (and `LatencyHistogram`) use.
+    fn exact_percentile(sorted: &[u64], p: f64) -> u64 {
+        let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    fn assert_within_one_bucket(h: &StreamingHistogram, sorted: &[u64], p: f64) {
+        let exact = exact_percentile(sorted, p);
+        let got = h.percentile_value(p);
+        let width = StreamingHistogram::bucket_width(exact);
+        let diff = got.abs_diff(exact);
+        assert!(diff <= width, "p{p}: got {got}, exact {exact}, bucket width {width}");
+    }
+
+    #[test]
+    fn uniform_percentiles_within_one_bucket() {
+        let h = StreamingHistogram::new();
+        let mut vals: Vec<u64> = (1..=100_000u64).collect();
+        for &v in &vals {
+            h.record_value(v);
+        }
+        vals.sort_unstable();
+        for p in [50.0, 95.0, 99.0] {
+            assert_within_one_bucket(&h, &vals, p);
+        }
+    }
+
+    #[test]
+    fn lognormal_percentiles_within_one_bucket() {
+        // A heavy-tailed latency-shaped distribution (µs scale).
+        let mut rng = Rng::new(0xB0C4);
+        let h = StreamingHistogram::new();
+        let mut vals = Vec::with_capacity(20_000);
+        for _ in 0..20_000 {
+            let v = (1e3 * (0.7 * rng.normal()).exp()) as u64 + 1;
+            h.record_value(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        for p in [50.0, 95.0, 99.0] {
+            assert_within_one_bucket(&h, &vals, p);
+        }
+    }
+
+    #[test]
+    fn bimodal_percentiles_within_one_bucket() {
+        // Fast path vs slow path — percentiles must not interpolate
+        // across the gap.
+        let h = StreamingHistogram::new();
+        let mut vals = Vec::new();
+        for _ in 0..900 {
+            h.record_value(100);
+            vals.push(100);
+        }
+        for _ in 0..100 {
+            h.record_value(50_000);
+            vals.push(50_000);
+        }
+        vals.sort_unstable();
+        for p in [50.0, 95.0, 99.0] {
+            assert_within_one_bucket(&h, &vals, p);
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = StreamingHistogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record_value(t * 10_000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.len(), 40_000);
+        let total: u64 = (0..40_000u64).sum();
+        assert_eq!(h.sum(), total);
+        assert_eq!(h.max_value(), 39_999);
+    }
+
+    #[test]
+    fn huge_values_clamp_into_last_bucket() {
+        let h = StreamingHistogram::new();
+        h.record_value(u64::MAX);
+        assert_eq!(h.len(), 1);
+        assert!(h.percentile_value(50.0) > 0, "clamped, not lost");
+    }
+
+    #[test]
+    fn summary_formats() {
+        let h = StreamingHistogram::new();
+        assert_eq!(h.summary(), "n=0");
+        h.record(Duration::from_micros(1500));
+        let s = h.summary();
+        assert!(s.contains("n=1"), "{s}");
+        assert!(s.contains("p99"), "{s}");
+    }
+
+    #[test]
+    fn engine_metrics_summary() {
+        let m = EngineMetrics::default();
+        m.requests.inc();
+        m.ttft.record(Duration::from_millis(5));
+        let s = m.summary();
+        assert!(s.contains("requests=1"), "{s}");
+    }
+}

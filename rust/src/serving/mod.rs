@@ -24,8 +24,33 @@
 //! The batcher coalesces queued requests into batches when load is high
 //! and falls back to singles when it isn't (bucketed static shapes — the
 //! standard PJRT-style serving pattern).
+//!
+//! # Observability and backpressure contract
+//!
+//! Serving is instrumented end to end with **lock-free, fixed-memory**
+//! metrics (`metrics`): atomic counters/gauges plus log-bucketed
+//! [`StreamingHistogram`]s (≤1/8 relative quantization error, O(1)
+//! memory per histogram regardless of request count). The batcher
+//! records queue depth, batch occupancy, queue/total latency, and
+//! admission rejects; the native engines record request counts,
+//! failures, TTFT, and steady-state per-token latency. Nothing on the
+//! hot path allocates per request or takes a lock.
+//!
+//! Admission is **bounded**: `Batcher` holds at most
+//! `BatcherOptions::queue_cap` queued jobs and `submit` returns
+//! `Err(BatcherError::QueueFull)` instead of queueing unboundedly.
+//! Every failure a caller can observe is a typed [`BatcherError`] —
+//! a model panic ([`BatcherError::ModelPanicked`]), a short
+//! `run_batch` return ([`BatcherError::ShortBatch`]), or a dead worker
+//! ([`BatcherError::WorkerGone`]) — never a hang and never a panic
+//! propagated into the caller. The sustained-load harness (`load`, and
+//! the `serving_load` bench) drives both native engines open-loop at a
+//! configured QPS and reports p50/p95/p99 TTFT, ms/token, and
+//! throughput-at-saturation into `BENCH_serving.json`.
 
 pub mod batcher;
+pub mod load;
+pub mod metrics;
 pub mod qa;
 pub mod textgen;
 
@@ -34,7 +59,11 @@ use std::collections::HashMap;
 use crate::compiler::ir::{Graph, Op};
 use crate::util::rng::Rng;
 
-pub use batcher::{BatchModel, Batcher, BatcherOptions};
+pub use batcher::{
+    BatchModel, BatchResult, Batcher, BatcherError, BatcherMetrics, BatcherOptions,
+};
+pub use load::{run_gen_load, run_qa_load, write_bench_json, LoadConfig, LoadReport};
+pub use metrics::{Counter, EngineMetrics, Gauge, StreamingHistogram};
 pub use qa::{NativeQaEngine, QaEngine, QaRequest, QaResponse};
 pub use textgen::{GenEngine, GenRequest, GenResponse, NativeGenEngine};
 

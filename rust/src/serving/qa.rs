@@ -14,6 +14,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::batcher::BatchModel;
+use super::metrics::EngineMetrics;
 use crate::compiler::exec::{ExecError, Feeds, QuantizedTensor, QuantizedWeights, View};
 use crate::compiler::{compile, CompileOptions, Compiled};
 use crate::compress::{compress_encoder, CompressionConfig, CompressionReport};
@@ -215,6 +216,10 @@ pub struct NativeQaEngine {
     /// Worker threads per request in the wave executor.
     pub threads: usize,
     batch_cap: usize,
+    /// Lock-free serving metrics (`ttft` = full answer latency for QA).
+    /// Clone the `Arc` before moving the engine into a `Batcher` to keep
+    /// observing it while it serves.
+    pub metrics: Arc<EngineMetrics>,
 }
 
 impl NativeQaEngine {
@@ -263,6 +268,7 @@ impl NativeQaEngine {
             max_answer_tokens: 30,
             threads: threads.max(1),
             batch_cap: 8,
+            metrics: Arc::new(EngineMetrics::default()),
         }
     }
 
@@ -372,8 +378,20 @@ impl NativeQaEngine {
     }
 
     /// Answer one request on the parallel executor. Malformed model state
-    /// surfaces as a typed `ExecError` instead of a panic.
+    /// surfaces as a typed `ExecError` instead of a panic. Records
+    /// request count and answer latency into [`NativeQaEngine::metrics`].
     pub fn answer(&self, req: &QaRequest) -> Result<QaResponse, ExecError> {
+        let t0 = std::time::Instant::now();
+        self.metrics.requests.inc();
+        let res = self.answer_uninstrumented(req);
+        match &res {
+            Ok(_) => self.metrics.ttft.record(t0.elapsed()),
+            Err(_) => self.metrics.failures.inc(),
+        }
+        res
+    }
+
+    fn answer_uninstrumented(&self, req: &QaRequest) -> Result<QaResponse, ExecError> {
         let seq = self.cfg.seq;
         let (ids, _tt, mask, b_start) =
             self.tokenizer.encode_pair(&req.question, &req.context, seq);
@@ -518,6 +536,21 @@ mod tests {
         let resp1 = tiny_native_engine(1).answer(&req).unwrap();
         assert_eq!((resp.start_token, resp.end_token), (resp1.start_token, resp1.end_token));
         assert_eq!(resp.answer, resp1.answer);
+    }
+
+    #[test]
+    fn answer_records_engine_metrics() {
+        let eng = tiny_native_engine(1);
+        let req = QaRequest {
+            question: "what reduces kernels ?".into(),
+            context: "layer fusion reduces the number of kernels".into(),
+        };
+        eng.answer(&req).unwrap();
+        eng.answer(&req).unwrap();
+        assert_eq!(eng.metrics.requests.get(), 2);
+        assert_eq!(eng.metrics.failures.get(), 0);
+        assert_eq!(eng.metrics.ttft.len(), 2, "one TTFT sample per answer");
+        assert!(eng.metrics.token_latency.is_empty(), "QA generates no tokens");
     }
 
     #[test]

@@ -31,6 +31,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::batcher::BatchModel;
+use super::metrics::EngineMetrics;
 use crate::compiler::exec::ExecError;
 use crate::compress::{prune_model, CompressionConfig, CompressionReport};
 use crate::decode::{DecodeError, DecodeMode, DecodeSession, Decoder};
@@ -53,7 +55,23 @@ pub struct GenResponse {
     pub text: String,
     pub tokens_generated: usize,
     /// Per-token forward latencies (for the demo's tokens/s display).
+    /// Entry 0 covers the prefill + first token; later entries are
+    /// steady-state steps.
     pub per_token_ms: Vec<f64>,
+}
+
+impl GenResponse {
+    /// Mean forward latency per generated token; `None` when no token
+    /// was generated (e.g. a prompt already at the sequence cap, or
+    /// `max_new_tokens == 0`). Report sites must handle `None` — a plain
+    /// `sum / len` here used to print `NaN tok/s`.
+    pub fn mean_ms_per_token(&self) -> Option<f64> {
+        if self.per_token_ms.is_empty() {
+            None
+        } else {
+            Some(self.per_token_ms.iter().sum::<f64>() / self.per_token_ms.len() as f64)
+        }
+    }
 }
 
 /// Encode a prompt for decoding: ids capped to the embedding rows, empty
@@ -183,6 +201,10 @@ pub struct NativeGenEngine {
     pub threads: usize,
     /// Default decode mode for [`NativeGenEngine::generate`].
     pub mode: DecodeMode,
+    /// Lock-free serving metrics: `ttft` is prefill + first token,
+    /// `token_latency` the steady-state per-step cost. Clone the `Arc`
+    /// before moving the engine into a `Batcher` to keep observing it.
+    pub metrics: Arc<EngineMetrics>,
 }
 
 impl NativeGenEngine {
@@ -224,6 +246,7 @@ impl NativeGenEngine {
             report,
             threads: threads.max(1),
             mode: DecodeMode::KvCache,
+            metrics: Arc::new(EngineMetrics::default()),
         }
     }
 
@@ -272,8 +295,30 @@ impl NativeGenEngine {
     }
 
     /// Decode with an explicit mode (the differential tests pin
-    /// `KvCache` == `FullResequence` bitwise at matched seeds).
+    /// `KvCache` == `FullResequence` bitwise at matched seeds). Records
+    /// TTFT and per-token step latency into [`NativeGenEngine::metrics`].
     pub fn generate_with_mode(
+        &self,
+        req: &GenRequest,
+        mode: DecodeMode,
+    ) -> Result<GenResponse, DecodeError> {
+        self.metrics.requests.inc();
+        let res = self.generate_uninstrumented(req, mode);
+        match &res {
+            Ok(resp) => {
+                if let Some(&first) = resp.per_token_ms.first() {
+                    self.metrics.ttft.record_value((first * 1e3) as u64);
+                }
+                for &ms in resp.per_token_ms.iter().skip(1) {
+                    self.metrics.token_latency.record_value((ms * 1e3) as u64);
+                }
+            }
+            Err(_) => self.metrics.failures.inc(),
+        }
+        res
+    }
+
+    fn generate_uninstrumented(
         &self,
         req: &GenRequest,
         mode: DecodeMode,
@@ -322,6 +367,32 @@ impl NativeGenEngine {
                 resp
             }
         }
+    }
+}
+
+/// Adapter: the native generation engine is a batch model for the
+/// dynamic batcher. Generation requests are long-running relative to QA,
+/// so batches are singles (`max_batch` 1) — the bounded queue still
+/// provides admission control and fair FIFO service under load; decode
+/// errors map to an error-text response (mirroring the QA adapter) so
+/// one bad request cannot take the worker down.
+impl BatchModel<GenRequest, GenResponse> for NativeGenEngine {
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn run_batch(&self, items: &[GenRequest]) -> Vec<GenResponse> {
+        items
+            .iter()
+            .map(|req| match self.generate(req) {
+                Ok(r) => r,
+                Err(e) => GenResponse {
+                    text: format!("<error: {e}>"),
+                    tokens_generated: 0,
+                    per_token_ms: Vec::new(),
+                },
+            })
+            .collect()
     }
 }
 
@@ -411,5 +482,66 @@ mod tests {
         };
         let r = tiny_engine(2).generate(&req).unwrap();
         assert!(r.tokens_generated < 64, "seq cap must stop generation");
+    }
+
+    #[test]
+    fn mean_ms_per_token_guards_empty() {
+        let req = GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 0,
+            temperature: 0.0,
+            seed: 1,
+        };
+        let r = tiny_engine(1).generate(&req).unwrap();
+        assert_eq!(r.tokens_generated, 0);
+        assert_eq!(r.mean_ms_per_token(), None, "no tokens -> no mean, not NaN");
+
+        let some = GenResponse {
+            text: String::new(),
+            tokens_generated: 2,
+            per_token_ms: vec![2.0, 4.0],
+        };
+        assert_eq!(some.mean_ms_per_token(), Some(3.0));
+    }
+
+    #[test]
+    fn generation_records_engine_metrics() {
+        let eng = tiny_engine(1);
+        let req = GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 3,
+            temperature: 0.0,
+            seed: 5,
+        };
+        let r = eng.generate(&req).unwrap();
+        assert_eq!(r.tokens_generated, 3);
+        assert_eq!(eng.metrics.requests.get(), 1);
+        assert_eq!(eng.metrics.ttft.len(), 1, "prefill+first token is one TTFT sample");
+        assert_eq!(eng.metrics.token_latency.len(), 2, "two steady-state steps");
+        assert_eq!(eng.metrics.failures.get(), 0);
+
+        // Zero-token requests record a request but no latency samples.
+        let none = GenRequest { max_new_tokens: 0, ..req };
+        eng.generate(&none).unwrap();
+        assert_eq!(eng.metrics.requests.get(), 2);
+        assert_eq!(eng.metrics.ttft.len(), 1);
+    }
+
+    #[test]
+    fn gen_engine_serves_through_the_batcher() {
+        use crate::serving::batcher::{Batcher, BatcherOptions};
+        let eng = tiny_engine(1);
+        let metrics = Arc::clone(&eng.metrics);
+        let b = Batcher::new(eng, BatcherOptions::default());
+        let req = GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 2,
+            temperature: 0.0,
+            seed: 9,
+        };
+        let resp = b.call(req).expect("no batcher fault");
+        assert_eq!(resp.tokens_generated, 2);
+        assert_eq!(metrics.requests.get(), 1, "engine metrics visible from outside");
+        b.shutdown();
     }
 }

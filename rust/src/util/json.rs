@@ -103,6 +103,50 @@ impl Json {
         out
     }
 
+    /// Serialize with 2-space indentation — one key per line, so files
+    /// committed for trend tracking (e.g. `BENCH_serving.json`) produce
+    /// readable per-metric diffs.
+    pub fn dump_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(indent + 1));
+                    x.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&"  ".repeat(indent + 1));
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    x.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -406,6 +450,17 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.dump()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let src = r#"{"a":[1,2],"b":{"c":"x"},"empty":[],"n":null}"#;
+        let j = Json::parse(src).unwrap();
+        let pretty = j.dump_pretty();
+        assert_eq!(Json::parse(pretty.trim()).unwrap(), j, "pretty form parses back");
+        assert!(pretty.contains("\n  \"a\": [\n"), "{pretty}");
+        assert!(pretty.contains("\"empty\": []"), "empty containers stay inline");
+        assert!(pretty.ends_with('\n'), "file-friendly trailing newline");
     }
 
     #[test]

@@ -1,6 +1,15 @@
-//! Latency/throughput metrics for the serving path and benches.
+//! Latency/throughput statistics for benches and tests.
+//!
+//! Everything here is **exact-sample mode**: every observation is kept,
+//! percentiles are computed from the sorted samples. That is the right
+//! tool for bounded runs (benches, tests asserting exact counts) and the
+//! wrong tool for a long-running server — memory grows per request. The
+//! serving hot path uses `serving::metrics::StreamingHistogram` instead
+//! (fixed-size, lock-free, bucketed percentiles).
 
 use std::time::Duration;
+
+use crate::util::json::Json;
 
 /// Online reservoir of latency samples with percentile queries.
 #[derive(Debug, Default, Clone)]
@@ -66,6 +75,58 @@ impl LatencyHistogram {
     }
 }
 
+/// Exact percentile summary over `f64` millisecond samples — the shape
+/// the load-generator bench reports (and serializes into
+/// `BENCH_serving.json`). Construction consumes the samples; an empty
+/// sample set yields `None`, so aggregation can never divide by zero
+/// (the `NaN tok/s` guard).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MsSummary {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl MsSummary {
+    pub fn from_samples(mut xs: Vec<f64>) -> Option<MsSummary> {
+        if xs.is_empty() {
+            return None;
+        }
+        xs.sort_by(f64::total_cmp);
+        let pct = |p: f64| {
+            let rank = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+            xs[rank.min(xs.len() - 1)]
+        };
+        Some(MsSummary {
+            n: xs.len(),
+            mean_ms: xs.iter().sum::<f64>() / xs.len() as f64,
+            p50_ms: pct(50.0),
+            p95_ms: pct(95.0),
+            p99_ms: pct(99.0),
+            max_ms: *xs.last().expect("non-empty"),
+        })
+    }
+
+    /// Round to 3 decimals so serialized reports diff stably.
+    fn r3(x: f64) -> f64 {
+        (x * 1e3).round() / 1e3
+    }
+
+    pub fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        m.insert("mean_ms".to_string(), Json::Num(Self::r3(self.mean_ms)));
+        m.insert("p50_ms".to_string(), Json::Num(Self::r3(self.p50_ms)));
+        m.insert("p95_ms".to_string(), Json::Num(Self::r3(self.p95_ms)));
+        m.insert("p99_ms".to_string(), Json::Num(Self::r3(self.p99_ms)));
+        m.insert("max_ms".to_string(), Json::Num(Self::r3(self.max_ms)));
+        Json::Obj(m)
+    }
+}
+
 /// Simple mean/std accumulator (Welford).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Welford {
@@ -116,6 +177,20 @@ mod tests {
         assert!(h.percentile(50.0) <= h.percentile(90.0));
         assert!(h.percentile(90.0) <= h.percentile(99.0));
         assert_eq!(h.percentile(100.0), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn ms_summary_exact_and_empty_guard() {
+        assert_eq!(MsSummary::from_samples(Vec::new()), None, "empty never divides");
+        let s = MsSummary::from_samples((1..=100).map(|i| i as f64).collect()).unwrap();
+        assert_eq!(s.n, 100);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert_eq!(s.p50_ms, 51.0);
+        assert_eq!(s.p99_ms, 99.0);
+        assert_eq!(s.max_ms, 100.0);
+        let j = s.json();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(100));
+        assert_eq!(j.get("p95_ms").unwrap().as_f64(), Some(95.0));
     }
 
     #[test]

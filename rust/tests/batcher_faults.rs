@@ -1,0 +1,211 @@
+//! Batcher fault injection: every server-side failure a caller can hit
+//! must surface as a typed `BatcherError` — never a hang (the old
+//! short-batch behavior: `debug_assert` + block forever on `recv`) and
+//! never a propagated panic (the old `.expect` on the reply channel).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use canao::serving::batcher::{BatchModel, Batcher, BatcherError, BatcherOptions};
+
+fn opts(max_wait_ms: u64, min_batch: usize, queue_cap: usize) -> BatcherOptions {
+    BatcherOptions {
+        max_wait: Duration::from_millis(max_wait_ms),
+        min_batch,
+        queue_cap,
+    }
+}
+
+/// Returns one response fewer than requested whenever the batch has more
+/// than one item (a buggy model dropping the tail).
+struct ShortChanger;
+
+impl BatchModel<u32, u32> for ShortChanger {
+    fn max_batch(&self) -> usize {
+        8
+    }
+
+    fn run_batch(&self, items: &[u32]) -> Vec<u32> {
+        let keep = if items.len() > 1 { items.len() - 1 } else { 1 };
+        items.iter().take(keep).map(|x| x + 1).collect()
+    }
+}
+
+#[test]
+fn short_batch_fails_the_tail_instead_of_hanging() {
+    // Generous max_wait: the worker must gather all 4 submits into one
+    // batch even under rough CI scheduling, so a multi-item (short)
+    // batch is guaranteed.
+    let b = Arc::new(Batcher::new(ShortChanger, opts(500, 4, 64)));
+    // Submit a burst so a multi-item batch forms; the last job in that
+    // batch must get a ShortBatch error, not block forever.
+    let rxs: Vec<_> = (0..4u32).map(|i| b.submit(i).expect("queue has room")).collect();
+    let mut ok = 0;
+    let mut short = 0;
+    for rx in rxs {
+        // recv() returning at all is the point of the fix; a timeout here
+        // means a caller would have hung in production.
+        match rx.recv_timeout(Duration::from_secs(10)).expect("no caller hangs") {
+            Ok(_) => ok += 1,
+            Err(BatcherError::ShortBatch { expected, got }) => {
+                assert!(got < expected, "short means short: {got} < {expected}");
+                short += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(ok + short, 4, "every submitted request got a reply");
+    assert!(short >= 1, "at least one tail job failed typed");
+    assert_eq!(b.metrics.failed.get(), short as u64);
+    // The worker survives a short batch: new singleton requests still work.
+    assert_eq!(b.call(10), Ok(11));
+}
+
+/// Panics on any batch containing the poison value.
+struct Panicker;
+
+impl BatchModel<u32, u32> for Panicker {
+    fn max_batch(&self) -> usize {
+        4
+    }
+
+    fn run_batch(&self, items: &[u32]) -> Vec<u32> {
+        if items.contains(&666) {
+            panic!("injected model fault");
+        }
+        items.iter().map(|x| x * 2).collect()
+    }
+}
+
+#[test]
+fn model_panic_fails_batch_without_panicking_callers() {
+    let b = Batcher::new(Panicker, opts(2, 1, 64));
+    // Healthy request first: the model works until poisoned.
+    assert_eq!(b.call(3), Ok(6));
+
+    // The poisoned request must come back as a typed error — the old
+    // implementation panicked the *caller* here (expect on a dead
+    // channel) after the worker died.
+    assert_eq!(b.call(666), Err(BatcherError::ModelPanicked));
+
+    // The worker is gone and says so; no panic, no hang.
+    match b.submit(1) {
+        Err(BatcherError::WorkerGone) => {}
+        other => panic!("expected WorkerGone, got {other:?}"),
+    }
+    assert_eq!(b.call(2), Err(BatcherError::WorkerGone));
+    assert_eq!(b.metrics.failed.get(), 1, "the poisoned job failed typed");
+    // Dropping a batcher whose worker already exited must not hang/panic.
+    drop(b);
+}
+
+#[test]
+fn jobs_queued_behind_a_panic_fail_typed() {
+    // Slow down batch formation so we can pile jobs up behind the poison
+    // pill: min_batch 1 + max_wait 0 makes the worker run singletons,
+    // and the sleep in submit order keeps the queue populated.
+    struct SlowPanicker;
+    impl BatchModel<u32, u32> for SlowPanicker {
+        fn max_batch(&self) -> usize {
+            1
+        }
+        fn run_batch(&self, items: &[u32]) -> Vec<u32> {
+            std::thread::sleep(Duration::from_millis(20));
+            if items.contains(&666) {
+                panic!("injected model fault");
+            }
+            items.to_vec()
+        }
+    }
+
+    let b = Batcher::new(SlowPanicker, opts(0, 1, 64));
+    let poison = b.submit(666).expect("queue has room");
+    // These queue up behind the poison pill (the worker sleeps 20ms
+    // inside the poison batch while they arrive). If scheduling is so
+    // skewed that the worker already died, submit itself returns the
+    // typed WorkerGone — also a pass.
+    let behind: Vec<_> = (0..5u32).map(|i| b.submit(i)).collect();
+
+    assert_eq!(
+        poison.recv_timeout(Duration::from_secs(10)).expect("typed, not a hang"),
+        Err(BatcherError::ModelPanicked)
+    );
+    for sub in behind {
+        match sub {
+            Err(BatcherError::WorkerGone) => {} // refused at the door: typed
+            Err(e) => panic!("unexpected submit error: {e}"),
+            // Admitted, then drained at worker death (WorkerGone). A
+            // reply sender dropped during teardown also unblocks the
+            // caller as an error — never a hang.
+            Ok(rx) => match rx.recv_timeout(Duration::from_secs(10)) {
+                Ok(Err(BatcherError::WorkerGone)) => {}
+                Ok(other) => panic!("expected typed failure, got {other:?}"),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    panic!("caller hung behind a dead worker")
+                }
+                Err(_) => {} // disconnected: caller unblocks with an error
+            },
+        }
+    }
+}
+
+/// Counts how many requests actually reach the model.
+struct CountingSleeper(Arc<AtomicUsize>);
+
+impl BatchModel<u32, u32> for CountingSleeper {
+    fn max_batch(&self) -> usize {
+        2
+    }
+
+    fn run_batch(&self, items: &[u32]) -> Vec<u32> {
+        std::thread::sleep(Duration::from_millis(10));
+        self.0.fetch_add(items.len(), Ordering::Relaxed);
+        items.to_vec()
+    }
+}
+
+#[test]
+fn full_queue_rejects_typed_and_admitted_jobs_complete() {
+    let ran = Arc::new(AtomicUsize::new(0));
+    let b = Batcher::new(CountingSleeper(Arc::clone(&ran)), opts(1, 1, 4));
+
+    // Burst far past capacity. The worker can drain at most a few while
+    // we submit, so rejections are guaranteed.
+    let mut admitted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..64u32 {
+        match b.submit(i) {
+            Ok(rx) => admitted.push(rx),
+            Err(BatcherError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 4);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "burst of 64 into cap-4 queue must reject");
+    assert_eq!(b.metrics.rejected.get(), rejected);
+
+    // Every admitted job completes; every rejected one never ran.
+    for rx in &admitted {
+        assert!(rx.recv_timeout(Duration::from_secs(10)).expect("no hang").is_ok());
+    }
+    let admitted_n = admitted.len();
+    drop(admitted);
+    b.shutdown();
+    assert_eq!(ran.load(Ordering::Relaxed), admitted_n, "rejected jobs never ran");
+    assert_eq!(admitted_n as u64 + rejected, 64);
+}
+
+#[test]
+fn receiver_dropped_mid_flight_does_not_wedge_the_worker() {
+    let b = Batcher::new(Panicker, opts(1, 1, 16));
+    // Submit and immediately drop the receiver while the job is in
+    // flight; the worker's reply send fails silently and it moves on.
+    for i in 0..8u32 {
+        drop(b.submit(i).expect("queue has room"));
+    }
+    // Worker still alive and serving.
+    assert_eq!(b.call(5), Ok(10));
+}

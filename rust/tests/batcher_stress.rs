@@ -30,9 +30,17 @@ fn producers_never_lose_or_cross_responses() {
     const PRODUCERS: u32 = 8;
     const PER_PRODUCER: u32 = 50;
 
+    // queue_cap must cover the full outstanding burst (8 producers x 50
+    // requests); this test asserts exact accounting, so no admission
+    // rejects are allowed (rejection under burst is tested separately in
+    // tests/batcher_faults.rs).
     let batcher = Arc::new(Batcher::new(
         TaggingEcho,
-        BatcherOptions { max_wait: Duration::from_millis(2), min_batch: 4 },
+        BatcherOptions {
+            max_wait: Duration::from_millis(2),
+            min_batch: 4,
+            queue_cap: (PRODUCERS * PER_PRODUCER) as usize,
+        },
     ));
     let metrics = Arc::clone(&batcher.metrics);
 
@@ -42,10 +50,12 @@ fn producers_never_lose_or_cross_responses() {
             scope.spawn(move || {
                 // Submit a burst, then await all replies — forces real
                 // cross-producer interleaving in the queue.
-                let rxs: Vec<_> =
-                    (0..PER_PRODUCER).map(|s| (s, batcher.submit((p, s)))).collect();
+                let rxs: Vec<_> = (0..PER_PRODUCER)
+                    .map(|s| (s, batcher.submit((p, s)).expect("queue has room")))
+                    .collect();
                 for (s, rx) in rxs {
-                    let (rp, rs, batch_len) = rx.recv().expect("reply must arrive");
+                    let (rp, rs, batch_len) =
+                        rx.recv().expect("reply must arrive").expect("model never fails");
                     assert_eq!((rp, rs), (p, s), "response cross-wired");
                     assert!(batch_len >= 1 && batch_len <= 8);
                 }
@@ -59,25 +69,28 @@ fn producers_never_lose_or_cross_responses() {
         Err(_) => panic!("all producers done; batcher must be uniquely owned"),
     }
 
-    let total = (PRODUCERS * PER_PRODUCER) as usize;
-    let m = metrics.lock().unwrap();
-    assert_eq!(m.requests, total, "every submitted request counted");
-    assert_eq!(m.responses, total, "every reply delivered exactly once");
+    let total = (PRODUCERS * PER_PRODUCER) as u64;
+    assert_eq!(metrics.requests.get(), total, "every submitted request counted");
+    assert_eq!(metrics.responses.get(), total, "every reply delivered exactly once");
+    assert_eq!(metrics.rejected.get(), 0, "queue sized for the burst");
+    assert_eq!(metrics.failed.get(), 0);
     assert_eq!(
-        m.batch_sizes.iter().sum::<usize>(),
+        metrics.batch_occupancy.sum(),
         total,
         "batch sizes partition the requests"
     );
-    assert_eq!(m.batch_sizes.len(), m.batches);
-    assert!(m.batches <= total, "batching never inflates batch count");
+    assert_eq!(metrics.batch_occupancy.len(), metrics.batches.get());
+    assert!(metrics.batches.get() <= total, "batching never inflates batch count");
     assert!(
-        m.batch_sizes.iter().all(|&s| (1..=8).contains(&s)),
-        "batch size bounds: {:?}",
-        &m.batch_sizes[..m.batch_sizes.len().min(16)]
+        metrics.batch_occupancy.max_value() <= 8,
+        "batch size bound: max {}",
+        metrics.batch_occupancy.max_value()
     );
-    assert!(m.mean_batch_size() >= 1.0);
-    assert_eq!(m.queue_latency.len(), total);
-    assert_eq!(m.total_latency.len(), total);
+    assert!(metrics.mean_batch_size() >= 1.0);
+    assert_eq!(metrics.queue_latency.len(), total);
+    assert_eq!(metrics.total_latency.len(), total);
+    assert_eq!(metrics.queue_depth.get(), 0, "queue fully drained");
+    assert!(metrics.queue_depth.peak() >= 1, "burst actually queued");
 }
 
 /// Dropping receivers must not wedge the worker or corrupt counts.
@@ -85,26 +98,33 @@ fn producers_never_lose_or_cross_responses() {
 fn abandoned_receivers_are_tolerated() {
     let batcher = Batcher::new(
         TaggingEcho,
-        BatcherOptions { max_wait: Duration::from_millis(1), min_batch: 2 },
+        BatcherOptions {
+            max_wait: Duration::from_millis(1),
+            min_batch: 2,
+            queue_cap: 64,
+        },
     );
     let metrics = Arc::clone(&batcher.metrics);
 
     // Half the callers give up immediately.
     let mut kept = Vec::new();
     for s in 0..20u32 {
-        let rx = batcher.submit((0, s));
+        let rx = batcher.submit((0, s)).expect("queue has room");
         if s % 2 == 0 {
             kept.push((s, rx));
         } // odd receivers dropped here
     }
     for (s, rx) in kept {
-        let (_, rs, _) = rx.recv().unwrap();
+        let (_, rs, _) = rx.recv().unwrap().unwrap();
         assert_eq!(rs, s);
     }
     batcher.shutdown();
 
-    let m = metrics.lock().unwrap();
-    assert_eq!(m.requests, 20);
-    assert!(m.responses >= 10, "kept receivers all answered: {}", m.responses);
-    assert!(m.responses <= 20);
+    assert_eq!(metrics.requests.get(), 20);
+    assert!(
+        metrics.responses.get() >= 10,
+        "kept receivers all answered: {}",
+        metrics.responses.get()
+    );
+    assert!(metrics.responses.get() <= 20);
 }

@@ -118,16 +118,16 @@ fn batcher_sustains_throughput() {
     }
     let b = std::sync::Arc::new(Batcher::new(
         SlowEcho,
-        BatcherOptions { max_wait: Duration::from_millis(3), min_batch: 4 },
+        BatcherOptions { max_wait: Duration::from_millis(3), min_batch: 4, queue_cap: 256 },
     ));
     let n = 64;
     let start = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n).map(|i| b.submit(i)).collect();
+    let rxs: Vec<_> = (0..n).map(|i| b.submit(i).expect("cap 256 queue admits 64 jobs")).collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        assert_eq!(rx.recv().unwrap(), i as u64);
+        assert_eq!(rx.recv().unwrap(), Ok(i as u64));
     }
     let elapsed = start.elapsed();
-    let m = b.metrics.lock().unwrap();
+    let m = &b.metrics;
     // 64 sequential 2ms calls would take 128ms+; batching must beat 64ms.
     assert!(elapsed < Duration::from_millis(64), "{elapsed:?}");
     assert!(m.mean_batch_size() > 2.0, "{}", m.mean_batch_size());
