@@ -8,7 +8,7 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use canao::compiler::exec::Feeds;
+use canao::compiler::exec::{Feeds, OutputSink};
 use canao::compiler::ir::Op;
 use canao::compiler::{compile, CompileOptions};
 use canao::compress::{compress_encoder, CompressionConfig};
@@ -183,4 +183,20 @@ fn host_executor_section() {
             seq_median.as_secs_f64() / s.median.as_secs_f64().max(1e-12)
         );
     }
+
+    // One profiled run: where the wave executor's time actually goes,
+    // by kernel kind (the `canao profile` aggregate view).
+    let mut prof = compiled.profiler(2);
+    let mut sinks: Vec<OutputSink<'_>> =
+        (0..compiled.graph.outputs.len()).map(|_| OutputSink::Discard).collect();
+    compiled
+        .run_parallel_sinks_profiled(&Feeds::single(&feeds), 2, None, &mut sinks, Some(&prof))
+        .expect("profiled execution");
+    let rep = prof.report();
+    println!(
+        "  profiled @2: wall {:.2} ms, barrier idle {:.2} ms",
+        rep.wall_ns() as f64 / 1e6,
+        rep.idle_ns() as f64 / 1e6
+    );
+    print!("{}", rep.aggregate());
 }

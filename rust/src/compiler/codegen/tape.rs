@@ -168,6 +168,22 @@ pub fn compile_block(g: &Graph, block: &FusedBlock) -> BlockTape {
 }
 
 impl BlockTape {
+    /// Kernel rows of the iteration domain (axis 0 for 2-D domains, 1
+    /// for flat ones) — the unit the row-splitting executor and the
+    /// profiler's µs/row metric count in.
+    pub fn rows(&self) -> usize {
+        if self.domain.rank() >= 2 {
+            self.domain.dims[0]
+        } else {
+            1
+        }
+    }
+
+    /// Elements per kernel row (`numel / rows`).
+    pub fn cols(&self) -> usize {
+        self.domain.numel() / self.rows().max(1)
+    }
+
     /// Evaluate the full tape at a flat set of per-input offsets.
     #[inline]
     fn eval_at(&self, regs: &mut [f32], offsets: &[usize], bufs: &[View]) {
@@ -645,6 +661,12 @@ fn i8_matmul_row(
 }
 
 impl MatmulEpilogueTape {
+    /// Matmul output rows `m` of the `[m, n]` domain — the row-split and
+    /// profiling unit (each row quantizes its LHS once).
+    pub fn rows(&self) -> usize {
+        self.tape.domain.dims[0]
+    }
+
     /// Resolve the tape's input buffers (see [`virtual_matmul_views`]).
     pub fn input_views<'a>(
         &self,
@@ -845,6 +867,12 @@ pub fn compile_matmul_layernorm(g: &Graph, block: &FusedBlock) -> Option<MatmulL
 }
 
 impl MatmulLayernormTape {
+    /// Matmul output rows `m` of the `[m, n]` domain — the row-split and
+    /// profiling unit (each row runs MACs through normalization once).
+    pub fn rows(&self) -> usize {
+        self.tape.domain.dims[0]
+    }
+
     /// Resolve the tape's input buffers (see [`virtual_matmul_views`]).
     pub fn input_views<'a>(
         &self,

@@ -24,6 +24,13 @@
 //!      *live* set — not the sum of all intermediates, which is the
 //!      paper's fusion memory win carried through to the executor.
 //!
+//! Both plan executors accept an optional [`profile::Profiler`]
+//! (`*_profiled` entry points): per-block kernel timelines, wave
+//! barrier accounting, and arena snapshots for chrome-trace export and
+//! device-model calibration — a strict no-op (no clock reads, no
+//! allocations) when `None` is passed, and bitwise-invisible when
+//! enabled (the differential suites run profiled).
+//!
 //! Bad feeds are typed errors ([`ExecError`]), not panics, so the serving
 //! layer can reject malformed requests instead of dying.
 //!
@@ -35,12 +42,15 @@ pub mod arena;
 pub mod interp;
 pub mod parallel;
 pub mod plan;
+pub mod profile;
 pub mod tensor;
 
 pub use parallel::{
     dispatch_counts, execute_plan_parallel, execute_plan_parallel_stats,
-    execute_prepared_sinks, DispatchCounts, ExecStats, PreparedExec,
+    execute_prepared_sinks, execute_prepared_sinks_profiled, DispatchCounts, ExecStats,
+    PreparedExec,
 };
+pub use profile::{KernelKind, ProfileAggregate, ProfileReport, Profiler};
 pub use tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 
 use std::collections::HashMap;

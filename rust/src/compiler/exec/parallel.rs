@@ -37,13 +37,15 @@
 //! to the quantized kernel (`compress` subsystem).
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use super::arena::{plan_arena, ArenaPlan};
 use super::interp::{apply_op, apply_op_into};
 use super::plan::{
-    layernorm_rows, match_layernorm, match_softmax, row_split, softmax_rows,
+    fallback_kind, layernorm_rows, match_layernorm, match_softmax, row_split, softmax_rows,
     LayernormPattern, ScheduleChoices, SoftmaxPattern,
 };
+use super::profile::{KernelKind, Profiler};
 use super::tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 use super::{
     leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights,
@@ -203,6 +205,32 @@ pub fn execute_prepared_sinks(
     quant: Option<&QuantizedWeights>,
     sinks: &mut [OutputSink<'_>],
 ) -> Result<(Vec<Option<Tensor>>, ExecStats), ExecError> {
+    execute_prepared_sinks_profiled(g, plan, prep, feeds, schedules, threads, quant, sinks, None)
+}
+
+/// As [`execute_prepared_sinks`] with an optional execution profiler
+/// (`super::profile`): every block dispatch (including row-split chunks,
+/// which record their own row ranges on their chunk's thread slot) and
+/// every wave barrier is timed, and the run's [`ExecStats`] snapshot is
+/// attached. `None` disables profiling at zero cost — no clock reads
+/// anywhere on the wave loop. The profiler must have been built with at
+/// least `threads` thread slots ([`Profiler::new`]).
+///
+/// Profiling reads clocks only — it never touches kernel inputs or
+/// outputs, so profiled runs are bitwise identical to unprofiled runs
+/// (asserted by `tests/exec_differential.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_prepared_sinks_profiled(
+    g: &Graph,
+    plan: &FusionPlan,
+    prep: &PreparedExec,
+    feeds: &Feeds<'_>,
+    schedules: &ScheduleChoices,
+    threads: usize,
+    quant: Option<&QuantizedWeights>,
+    sinks: &mut [OutputSink<'_>],
+    prof: Option<&Profiler>,
+) -> Result<(Vec<Option<Tensor>>, ExecStats), ExecError> {
     // Sinks are program-constructed (not request data), so mismatches are
     // programmer errors and panic — but panic HERE, before the slab is
     // checked out or any thread spawned, never mid-execution.
@@ -236,18 +264,19 @@ pub fn execute_prepared_sinks(
     let mut slab = prep.slab_pool.checkout(arena.slab_len);
     let shared = slab.shared();
 
-    for wave in waves {
+    for (w, wave) in waves.iter().enumerate() {
         let wave_elems: usize = wave
             .iter()
             .flat_map(|&bi| plan.blocks[bi].outputs.iter())
             .map(|&o| g.nodes[o].shape.numel())
             .sum();
         let par = threads > 1 && wave_elems >= PAR_MIN_WAVE_ELEMS;
+        let wave_start = prof.map(|_| Instant::now());
 
         if par && wave.len() == 1 {
             let bi = wave[0];
             let sched = sched_of(schedules, plan, bi);
-            if row_parallel(
+            if let Some(nt_used) = row_parallel(
                 g,
                 &plan.blocks[bi],
                 &kernels[bi],
@@ -257,7 +286,13 @@ pub fn execute_prepared_sinks(
                 arena,
                 threads,
                 quant,
+                prof,
+                w,
+                bi,
             ) {
+                if let (Some(p), Some(ws)) = (prof, wave_start) {
+                    p.wave(w, nt_used, ws);
+                }
                 continue;
             }
         }
@@ -265,7 +300,23 @@ pub fn execute_prepared_sinks(
         if !par || wave.len() == 1 {
             for &bi in wave {
                 let sched = sched_of(schedules, plan, bi);
-                run_block(g, &plan.blocks[bi], &kernels[bi], sched, &leaf, shared, arena, quant);
+                let start = prof.map(|_| Instant::now());
+                let kind = run_block(
+                    g,
+                    &plan.blocks[bi],
+                    &kernels[bi],
+                    sched,
+                    &leaf,
+                    shared,
+                    arena,
+                    quant,
+                );
+                if let (Some(p), Some(s)) = (prof, start) {
+                    p.block(0, w, bi, kind, s);
+                }
+            }
+            if let (Some(p), Some(ws)) = (prof, wave_start) {
+                p.wave(w, 1, ws);
             }
         } else {
             let nt = threads.min(wave.len());
@@ -276,7 +327,8 @@ pub fn execute_prepared_sinks(
                     scope.spawn(move || {
                         for bi in blocks {
                             let sched = sched_of(schedules, plan, bi);
-                            run_block(
+                            let start = prof.map(|_| Instant::now());
+                            let kind = run_block(
                                 g,
                                 &plan.blocks[bi],
                                 &kernels[bi],
@@ -286,11 +338,21 @@ pub fn execute_prepared_sinks(
                                 arena,
                                 quant,
                             );
+                            if let (Some(p), Some(s)) = (prof, start) {
+                                p.block(t, w, bi, kind, s);
+                            }
                         }
                     });
                 }
             });
+            if let (Some(p), Some(ws)) = (prof, wave_start) {
+                p.wave(w, nt, ws);
+            }
         }
+    }
+
+    if let Some(p) = prof {
+        p.run_stats(stats);
     }
 
     let outputs = g
@@ -500,6 +562,8 @@ fn out_region<'a>(slab: SharedSlab<'a>, arena: &ArenaPlan, nid: NodeId) -> &'a m
     unsafe { slab.write(r.offset, r.len) }
 }
 
+/// Returns the [`KernelKind`] actually dispatched (the profiler records
+/// the real decision; callers without a profiler ignore it).
 #[allow(clippy::too_many_arguments)]
 fn run_block(
     g: &Graph,
@@ -510,7 +574,7 @@ fn run_block(
     slab: SharedSlab<'_>,
     arena: &ArenaPlan,
     quant: Option<&QuantizedWeights>,
-) {
+) -> KernelKind {
     match kernel {
         Kernel::Tape(tape) => {
             let bufs: Vec<View> = tape
@@ -524,11 +588,13 @@ fn run_block(
                 .map(|&o| out_region(slab, arena, o))
                 .collect();
             tape.execute_into(&bufs, sched, &mut outs);
+            KernelKind::Tape
         }
         Kernel::Softmax(p) => {
             let x = value_view(g, p.x, leaf, slab, arena);
             let (rows, cols) = row_split(&g.nodes[p.out].shape);
             softmax_rows(x.data, rows, cols, out_region(slab, arena, p.out));
+            KernelKind::NativeSoftmax
         }
         Kernel::Layernorm(p) => {
             let x = value_view(g, p.x, leaf, slab, arena);
@@ -544,6 +610,7 @@ fn run_block(
                 cols,
                 out_region(slab, arena, p.out),
             );
+            KernelKind::NativeLayernorm
         }
         Kernel::MatmulEpi(mt) => {
             if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
@@ -566,8 +633,9 @@ fn run_block(
                     mt.tape.domain.dims[0],
                     &mut outs,
                 );
+                KernelKind::FusedEpilogueI8
             } else {
-                fallback_block(g, block, leaf, slab, arena, quant);
+                fallback_block(g, block, leaf, slab, arena, quant)
             }
         }
         Kernel::MatmulLn(mt) => {
@@ -582,9 +650,11 @@ fn run_block(
             let m = mt.tape.domain.dims[0];
             if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
                 mt.execute_i8_rows_into(lhs, qt, scale, &bufs, gamma, beta, 0, m, out);
+                KernelKind::FusedLayernormI8
             } else {
                 let rhs = value_view(g, mt.rhs, leaf, slab, arena);
                 mt.execute_f32_rows_into(lhs, rhs, &bufs, gamma, beta, 0, m, out);
+                KernelKind::FusedLayernormF32
             }
         }
         Kernel::Fallback => fallback_block(g, block, leaf, slab, arena, quant),
@@ -604,7 +674,7 @@ fn fallback_block(
     slab: SharedSlab<'_>,
     arena: &ArenaPlan,
     quant: Option<&QuantizedWeights>,
-) {
+) -> KernelKind {
     let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
     for &n in &block.nodes {
         let node = &g.nodes[n];
@@ -639,15 +709,18 @@ fn fallback_block(
             scratch.insert(n, t);
         }
     }
+    fallback_kind(g, block, quant)
 }
 
 /// Split a lone 2-D block's rows across threads: elementwise tapes under
 /// the row-recompute schedule, fused INT8 matmul-epilogue kernels, and
 /// fused matmul+layernorm kernels in both precisions (rows are
 /// independent by construction — each quantizes its own LHS row, and
-/// layernorm is row-local). Returns false (nothing executed) when the
+/// layernorm is row-local). Returns `None` (nothing executed) when the
 /// kernel/schedule/shape doesn't allow row splitting — the caller then
-/// falls back to whole-block execution.
+/// falls back to whole-block execution — and `Some(threads used)` after
+/// a split run. Each chunk records its own profile sample (row range,
+/// chunk thread slot) when a profiler is attached.
 #[allow(clippy::too_many_arguments)]
 fn row_parallel(
     g: &Graph,
@@ -659,7 +732,10 @@ fn row_parallel(
     arena: &ArenaPlan,
     threads: usize,
     quant: Option<&QuantizedWeights>,
-) -> bool {
+    prof: Option<&Profiler>,
+    wave: usize,
+    bi: usize,
+) -> Option<usize> {
     // Resolve the kernel to a row-splittable form first; one shared
     // chunking loop then serves every kernel (a policy change in the
     // split can never diverge between them).
@@ -683,7 +759,7 @@ fn row_parallel(
     let domain = match kernel {
         Kernel::Tape(tape) => {
             if !sched.row_parallelizable() || tape.domain.rank() != 2 {
-                return false;
+                return None;
             }
             &tape.domain
         }
@@ -691,12 +767,12 @@ fn row_parallel(
         // schedule is irrelevant (they always walk rows).
         Kernel::MatmulEpi(mt) => &mt.tape.domain,
         Kernel::MatmulLn(mt) => &mt.tape.domain,
-        _ => return false,
+        _ => return None,
     };
     let (m, n) = (domain.dims[0], domain.dims[1]);
     let nt = threads.min(m / PAR_MIN_ROWS_PER_THREAD);
     if nt < 2 {
-        return false;
+        return None;
     }
 
     let (bufs, rk) = match kernel {
@@ -712,7 +788,7 @@ fn row_parallel(
             // fp32 requests (no int8 entry) fall back to whole-block
             // per-node execution.
             let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) else {
-                return false;
+                return None;
             };
             let lhs = value_view(g, mt.lhs, leaf, slab, arena);
             let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
@@ -735,6 +811,13 @@ fn row_parallel(
         _ => unreachable!("filtered above"),
     };
 
+    let kind = match &rk {
+        RowKernel::Tape(_) => KernelKind::Tape,
+        RowKernel::I8(..) => KernelKind::FusedEpilogueI8,
+        RowKernel::LnI8(..) => KernelKind::FusedLayernormI8,
+        RowKernel::LnF32(..) => KernelKind::FusedLayernormF32,
+    };
+
     let mut rest: Vec<&mut [f32]> = block
         .outputs
         .iter()
@@ -746,6 +829,7 @@ fn row_parallel(
         let bufs = &bufs;
         let rk = &rk;
         let mut row0 = 0usize;
+        let mut slot = 0usize;
         while row0 < m {
             let row1 = (row0 + chunk).min(m);
             let take = (row1 - row0) * n;
@@ -760,6 +844,7 @@ fn row_parallel(
             rest = next;
             scope.spawn(move || {
                 let mut mine = mine;
+                let start = prof.map(|_| Instant::now());
                 match rk {
                     RowKernel::Tape(tape) => {
                         tape.execute_rows_into(bufs, row0, row1, &mut mine);
@@ -780,11 +865,15 @@ fn row_parallel(
                         );
                     }
                 }
+                if let (Some(p), Some(s)) = (prof, start) {
+                    p.block_rows(slot, wave, bi, kind, row1 - row0, s);
+                }
             });
             row0 = row1;
+            slot += 1;
         }
     });
-    true
+    Some(nt)
 }
 
 #[cfg(test)]

@@ -25,8 +25,10 @@
 //! `interp::eval_graph` output == `parallel::execute_plan_parallel` output.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use super::interp::apply_op;
+use super::profile::{KernelKind, Profiler};
 use super::tensor::{matmul_i8, Tensor, View};
 use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights};
 use crate::compiler::codegen::tape::{
@@ -77,6 +79,24 @@ pub fn execute_plan_sinks(
     quant: Option<&QuantizedWeights>,
     sinks: &mut [OutputSink<'_>],
 ) -> Result<Vec<Option<Tensor>>, ExecError> {
+    execute_plan_sinks_profiled(g, plan, feeds, schedules, quant, sinks, None)
+}
+
+/// As [`execute_plan_sinks`] with an optional execution profiler: each
+/// block dispatch is timed and recorded under its actual kernel kind
+/// (the sequential executor has no waves, so a block's plan order doubles
+/// as its wave index). `None` disables profiling with zero cost — no
+/// clock reads on the block loop.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_plan_sinks_profiled(
+    g: &Graph,
+    plan: &FusionPlan,
+    feeds: &Feeds<'_>,
+    schedules: &ScheduleChoices,
+    quant: Option<&QuantizedWeights>,
+    sinks: &mut [OutputSink<'_>],
+    prof: Option<&Profiler>,
+) -> Result<Vec<Option<Tensor>>, ExecError> {
     // Sink mismatches are programmer errors (panic up front, before any
     // work) — unlike feeds, which are request data and error typed.
     assert_eq!(sinks.len(), g.outputs.len(), "one sink per graph output");
@@ -94,9 +114,13 @@ pub fn execute_plan_sinks(
     }
 
     let mut vals: HashMap<NodeId, Tensor> = HashMap::new();
-    for block in &plan.blocks {
+    for (bi, block) in plan.blocks.iter().enumerate() {
         let sched = schedules.get(&block.id).copied().unwrap_or(Schedule::RowRecompute);
-        execute_block(g, block, sched, &leaf, &mut vals, quant);
+        let start = prof.map(|_| Instant::now());
+        let kind = execute_block(g, block, sched, &leaf, &mut vals, quant);
+        if let (Some(p), Some(t)) = (prof, start) {
+            p.block(0, bi, bi, kind, t);
+        }
     }
 
     Ok(g
@@ -136,6 +160,9 @@ fn value_view<'a>(
     try_view(g, nid, leaf, vals).expect("value computed before use (topo order)")
 }
 
+/// Execute one block, returning the [`KernelKind`] actually dispatched —
+/// the profiler records the *real* decision, so profile rows can never
+/// drift from execution the way a mirrored classifier could.
 pub fn execute_block(
     g: &Graph,
     block: &FusedBlock,
@@ -143,7 +170,7 @@ pub fn execute_block(
     leaf: &[Option<LeafValue>],
     vals: &mut HashMap<NodeId, Tensor>,
     quant: Option<&QuantizedWeights>,
-) {
+) -> KernelKind {
     match block.kind {
         BlockKind::ElementwiseChain | BlockKind::BroadcastElementwise => {
             // The tape writes every block output over the full iteration
@@ -153,8 +180,7 @@ pub fn execute_block(
             // (rare, multi-output) blocks.
             let domain = crate::compiler::poly::block_output_shape(g, block);
             if block.outputs.iter().any(|&o| g.nodes[o].shape != domain) {
-                fallback(g, block, leaf, vals, quant);
-                return;
+                return fallback(g, block, leaf, vals, quant);
             }
             let tape = compile_block(g, block);
             let outs = {
@@ -166,6 +192,7 @@ pub fn execute_block(
             for (key, out) in keys.into_iter().zip(outs) {
                 vals.insert(key, out);
             }
+            KernelKind::Tape
         }
         BlockKind::Reduction => {
             if let Some(p) = match_softmax(g, block) {
@@ -175,7 +202,7 @@ pub fn execute_block(
                     let mut out = vec![0.0f32; shape.numel()];
                     softmax_rows(xt.data, rows, cols, &mut out);
                     vals.insert(p.out, Tensor { shape, data: out });
-                    return;
+                    return KernelKind::NativeSoftmax;
                 }
             }
             if let Some(p) = match_layernorm(g, block) {
@@ -189,10 +216,10 @@ pub fn execute_block(
                     let mut out = vec![0.0f32; shape.numel()];
                     layernorm_rows(xt.data, gt.data, bt.data, p.eps, rows, cols, &mut out);
                     vals.insert(p.out, Tensor { shape, data: out });
-                    return;
+                    return KernelKind::NativeLayernorm;
                 }
             }
-            fallback(g, block, leaf, vals, quant);
+            fallback(g, block, leaf, vals, quant)
         }
         BlockKind::MatmulEpilogue => {
             // The co-design payoff: a quantized matmul and its fused
@@ -225,10 +252,10 @@ pub fn execute_block(
                     for (key, data) in keys.into_iter().zip(storage) {
                         vals.insert(key, Tensor { shape: mt.tape.domain.clone(), data });
                     }
-                    return;
+                    return KernelKind::FusedEpilogueI8;
                 }
             }
-            fallback(g, block, leaf, vals, quant);
+            fallback(g, block, leaf, vals, quant)
         }
         BlockKind::MatmulLayernorm => {
             // The last int8 gap closed: matmul -> bias -> residual ->
@@ -239,6 +266,7 @@ pub fn execute_block(
             if let Some(mt) = compile_matmul_layernorm(g, block) {
                 let shape = g.nodes[mt.out].shape.clone();
                 let mut data = vec![0.0f32; shape.numel()];
+                let kind;
                 {
                     let lhs = value_view(g, mt.lhs, leaf, vals);
                     let gamma = value_view(g, mt.gamma, leaf, vals);
@@ -249,17 +277,35 @@ pub fn execute_block(
                         mt.execute_i8_rows_into(
                             lhs, qt, scale, &bufs, gamma, beta, 0, m, &mut data,
                         );
+                        kind = KernelKind::FusedLayernormI8;
                     } else {
                         let rhs = value_view(g, mt.rhs, leaf, vals);
                         mt.execute_f32_rows_into(lhs, rhs, &bufs, gamma, beta, 0, m, &mut data);
+                        kind = KernelKind::FusedLayernormF32;
                     }
                 }
                 vals.insert(mt.out, Tensor { shape, data });
-                return;
+                return kind;
             }
-            fallback(g, block, leaf, vals, quant);
+            fallback(g, block, leaf, vals, quant)
         }
         _ => fallback(g, block, leaf, vals, quant),
+    }
+}
+
+/// The profile kind of a block taking the per-node path: a single-op
+/// int8 matmul is the *direct* dispatch (nothing to fuse — e.g. the LM
+/// head), everything else is a true fallback block. Matches the
+/// [`super::DispatchCounts`] distinction.
+pub(crate) fn fallback_kind(
+    g: &Graph,
+    block: &FusedBlock,
+    quant: Option<&QuantizedWeights>,
+) -> KernelKind {
+    if block.nodes.len() == 1 && quant_matmul(g, block.nodes[0], quant).is_some() {
+        KernelKind::DirectI8Matmul
+    } else {
+        KernelKind::FallbackBlock
     }
 }
 
@@ -273,7 +319,7 @@ fn fallback(
     leaf: &[Option<LeafValue>],
     vals: &mut HashMap<NodeId, Tensor>,
     quant: Option<&QuantizedWeights>,
-) {
+) -> KernelKind {
     for &n in &block.nodes {
         let node = &g.nodes[n];
         let out = {
@@ -288,6 +334,7 @@ fn fallback(
         };
         vals.insert(n, out);
     }
+    fallback_kind(g, block, quant)
 }
 
 // ---- shared reduction patterns and kernels ------------------------------

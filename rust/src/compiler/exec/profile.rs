@@ -1,0 +1,557 @@
+//! Opt-in execution profiler for both plan executors (S5b observability).
+//!
+//! `Option<&Profiler>` is the enable flag: every profiled entry point
+//! (`plan::execute_plan_sinks_profiled`,
+//! `parallel::execute_prepared_sinks_profiled`,
+//! `Compiled::run_parallel_sinks_profiled`) takes one, and a `None`
+//! disables profiling at zero cost — no clock reads, no allocations, no
+//! atomics on the hot path. The bitwise differential suites run with
+//! profiling ON to prove the instrumented paths never touch numerics.
+//!
+//! What is recorded, per the taxonomy the dispatch census already uses
+//! ([`super::DispatchCounts`]):
+//!
+//! * per **block dispatch**: kernel kind ([`KernelKind`]), wall time,
+//!   executing thread slot, wave index, rows processed (row-split chunks
+//!   record their own row range), and approximate bytes touched
+//!   (block inputs + outputs, prorated for chunks);
+//! * per **wave**: wall time and threads used, from which barrier /
+//!   straggler idle time is derived (`threads × wave wall − Σ block
+//!   time`);
+//! * per **run**: the executor's [`ExecStats`] arena/slab snapshot.
+//!
+//! Concurrency contract (mirrors `util::pool::SharedSlab`): the profiler
+//! holds one sample buffer per thread slot, and during a wave each slot
+//! is touched only by the thread with that index — the executor's
+//! `thread::scope` join is the barrier that orders every wave's writes
+//! before the next wave and before [`Profiler::report`], which takes
+//! `&mut self` and therefore exclusive access. No locks, no atomics,
+//! lock-free for the whole run.
+//!
+//! Export views ([`ProfileReport`]):
+//! * [`ProfileReport::chrome_trace`] — a chrome://tracing `trace_event`
+//!   JSON timeline (`canao profile --trace out.json`; open in
+//!   `chrome://tracing` or Perfetto);
+//! * [`ProfileReport::aggregate`] — a per-kernel-kind table (time share,
+//!   mean µs/row, dispatch count) printed by `bench_textgen` /
+//!   `table1_latency`;
+//! * `device::calibration` consumes per-block walls
+//!   ([`ProfileReport::block_walls`]) to fit measured cost constants
+//!   against `device::block_cost_with` predictions.
+
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::ExecStats;
+use crate::compiler::fusion::FusionPlan;
+use crate::compiler::ir::Graph;
+use crate::compiler::poly::block_output_shape;
+use crate::util::json::Json;
+
+/// Kernel-kind taxonomy for profiling — one variant per dispatch shape
+/// the executors make, aligned with the [`super::DispatchCounts`] census
+/// fields so census and profile rows can be cross-read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelKind {
+    /// Fused int8 matmul+epilogue tape (`MatmulEpilogueTape`).
+    FusedEpilogueI8,
+    /// Fused int8 matmul+layernorm (`MatmulLayernormTape`).
+    FusedLayernormI8,
+    /// Fused fp32 matmul+layernorm.
+    FusedLayernormF32,
+    /// Compiled elementwise tape block.
+    Tape,
+    /// Native softmax reduction kernel.
+    NativeSoftmax,
+    /// Native layernorm reduction kernel.
+    NativeLayernorm,
+    /// Single-op matmul block on the int8 kernel (nothing to fuse).
+    DirectI8Matmul,
+    /// Per-node fallback block (any precision).
+    FallbackBlock,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 8] = [
+        KernelKind::FusedEpilogueI8,
+        KernelKind::FusedLayernormI8,
+        KernelKind::FusedLayernormF32,
+        KernelKind::Tape,
+        KernelKind::NativeSoftmax,
+        KernelKind::NativeLayernorm,
+        KernelKind::DirectI8Matmul,
+        KernelKind::FallbackBlock,
+    ];
+
+    /// Short label, matching the [`super::DispatchCounts`] display names.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelKind::FusedEpilogueI8 => "fused-epi-i8",
+            KernelKind::FusedLayernormI8 => "fused-ln-i8",
+            KernelKind::FusedLayernormF32 => "fused-ln-f32",
+            KernelKind::Tape => "tape",
+            KernelKind::NativeSoftmax => "softmax",
+            KernelKind::NativeLayernorm => "layernorm",
+            KernelKind::DirectI8Matmul => "direct-i8",
+            KernelKind::FallbackBlock => "fallback",
+        }
+    }
+}
+
+/// Feed-independent per-block metadata, precomputed at
+/// [`Profiler::new`] so recording a dispatch costs two clock reads and a
+/// `Vec` push.
+#[derive(Debug, Clone, Copy)]
+struct BlockMeta {
+    /// Kernel rows of the block's output domain (last axis = columns).
+    rows: usize,
+    /// Approximate bytes touched: external inputs + outputs, f32.
+    bytes: usize,
+}
+
+/// One recorded block dispatch (or row-split chunk of one).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockSample {
+    /// Index into `plan.blocks`.
+    pub block: usize,
+    /// Wave index (sequential executor: the block's plan order).
+    pub wave: usize,
+    pub kind: KernelKind,
+    /// Executing thread slot (0 = the orchestrating thread).
+    pub thread: usize,
+    /// Start offset from the profiler's epoch, ns.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Rows this dispatch processed (< the block's rows for a chunk).
+    pub rows: usize,
+    /// Bytes touched, prorated by `rows` for chunks.
+    pub bytes: usize,
+}
+
+/// One executed wave: wall time between its fork and its join barrier.
+#[derive(Debug, Clone, Copy)]
+pub struct WaveSample {
+    pub wave: usize,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Thread slots the executor used for this wave.
+    pub threads_used: usize,
+}
+
+impl WaveSample {
+    /// Barrier / straggler idle inside this wave: thread-time reserved
+    /// (`threads_used × wall`) minus thread-time actually spent in block
+    /// kernels. Clamped at zero (timer skew on near-empty waves).
+    pub fn idle_ns(&self, blocks: &[BlockSample]) -> u64 {
+        let busy: u64 = blocks
+            .iter()
+            .filter(|b| b.wave == self.wave)
+            .map(|b| b.dur_ns)
+            .sum();
+        (self.threads_used as u64 * self.dur_ns).saturating_sub(busy)
+    }
+}
+
+/// Per-thread sample buffer; see the module docs for the aliasing
+/// contract (identical to `SharedSlab`'s).
+#[derive(Debug, Default)]
+struct Slot(UnsafeCell<Vec<BlockSample>>);
+
+/// The recorder handed to the executors as `Option<&Profiler>`.
+///
+/// Create one per profiled run (or share one across the runs of a
+/// decode session to get a single timeline), then call
+/// [`Profiler::report`] after the executor returns.
+#[derive(Debug)]
+pub struct Profiler {
+    t0: Instant,
+    meta: Vec<BlockMeta>,
+    slots: Box<[Slot]>,
+    /// Orchestrating-thread-only state (wave + run records).
+    waves: UnsafeCell<Vec<WaveSample>>,
+    stats: UnsafeCell<Option<ExecStats>>,
+}
+
+// SAFETY: `slots[t]` is written only by the thread the executor assigned
+// slot `t` within a wave (disjoint per thread), and the executor's scope
+// join orders all wave writes before any later access; `waves`/`stats`
+// are written only by the orchestrating thread. `report` takes `&mut
+// self`. This is the same disjointness argument as `SharedSlab`.
+unsafe impl Sync for Profiler {}
+
+impl Profiler {
+    /// Build a profiler for `(g, plan)` executions on up to `threads`
+    /// thread slots (pass 1 for the sequential executor).
+    pub fn new(g: &Graph, plan: &FusionPlan, threads: usize) -> Self {
+        let meta = plan
+            .blocks
+            .iter()
+            .map(|b| {
+                let domain = block_output_shape(g, b);
+                let cols = domain.dims.last().copied().unwrap_or(1).max(1);
+                let touched: usize = b
+                    .inputs
+                    .iter()
+                    .chain(b.outputs.iter())
+                    .map(|&n| g.nodes[n].shape.numel())
+                    .sum();
+                BlockMeta {
+                    rows: (domain.numel() / cols).max(1),
+                    bytes: touched * std::mem::size_of::<f32>(),
+                }
+            })
+            .collect();
+        let slots = (0..threads.max(1)).map(|_| Slot::default()).collect();
+        Profiler {
+            t0: Instant::now(),
+            meta,
+            slots,
+            waves: UnsafeCell::new(Vec::new()),
+            stats: UnsafeCell::new(None),
+        }
+    }
+
+    fn rel_ns(&self, at: Instant) -> u64 {
+        at.duration_since(self.t0).as_nanos() as u64
+    }
+
+    /// Record a whole-block dispatch that started at `start` and just
+    /// finished (rows taken from the block's metadata).
+    pub fn block(&self, thread: usize, wave: usize, bi: usize, kind: KernelKind, start: Instant) {
+        self.block_rows(thread, wave, bi, kind, self.meta[bi].rows, start);
+    }
+
+    /// Record a dispatch covering `rows` of block `bi` (a row-split
+    /// chunk, or a whole block).
+    pub fn block_rows(
+        &self,
+        thread: usize,
+        wave: usize,
+        bi: usize,
+        kind: KernelKind,
+        rows: usize,
+        start: Instant,
+    ) {
+        let end = Instant::now();
+        let m = self.meta[bi];
+        let sample = BlockSample {
+            block: bi,
+            wave,
+            kind,
+            thread,
+            start_ns: self.rel_ns(start),
+            dur_ns: end.duration_since(start).as_nanos() as u64,
+            rows,
+            bytes: if m.rows == 0 { m.bytes } else { m.bytes * rows / m.rows },
+        };
+        // SAFETY: see the `Sync` impl — `thread` indexes this caller's
+        // private slot for the duration of the wave.
+        unsafe { (*self.slots[thread].0.get()).push(sample) };
+    }
+
+    /// Record a wave that started at `start` and just joined.
+    pub fn wave(&self, wave: usize, threads_used: usize, start: Instant) {
+        let end = Instant::now();
+        let sample = WaveSample {
+            wave,
+            start_ns: self.rel_ns(start),
+            dur_ns: end.duration_since(start).as_nanos() as u64,
+            threads_used: threads_used.max(1),
+        };
+        // SAFETY: orchestrating thread only (no wave is in flight).
+        unsafe { (*self.waves.get()).push(sample) };
+    }
+
+    /// Snapshot the run's arena/slab stats.
+    pub fn run_stats(&self, stats: ExecStats) {
+        // SAFETY: orchestrating thread only.
+        unsafe { *self.stats.get() = Some(stats) };
+    }
+
+    /// Merge every thread slot into one report. `&mut self` is the
+    /// proof that all recording threads have joined.
+    pub fn report(&mut self) -> ProfileReport {
+        let mut blocks: Vec<BlockSample> = Vec::new();
+        for slot in self.slots.iter_mut() {
+            blocks.extend(slot.0.get_mut().iter().copied());
+        }
+        blocks.sort_by_key(|s| (s.start_ns, s.thread));
+        ProfileReport {
+            blocks,
+            waves: self.waves.get_mut().clone(),
+            stats: *self.stats.get_mut(),
+        }
+    }
+}
+
+/// Merged samples of one or more profiled runs; the three export views
+/// hang off this.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// All block dispatches, sorted by start time.
+    pub blocks: Vec<BlockSample>,
+    pub waves: Vec<WaveSample>,
+    /// The last run's arena/slab snapshot (parallel executor only).
+    pub stats: Option<ExecStats>,
+}
+
+impl ProfileReport {
+    /// Wall span covered by the samples (first start to last end), ns.
+    pub fn wall_ns(&self) -> u64 {
+        let start = self.blocks.iter().map(|b| b.start_ns).min().unwrap_or(0);
+        let end = self
+            .blocks
+            .iter()
+            .map(|b| b.start_ns + b.dur_ns)
+            .max()
+            .unwrap_or(0);
+        end.saturating_sub(start)
+    }
+
+    /// Total barrier/straggler idle across all recorded waves, ns.
+    pub fn idle_ns(&self) -> u64 {
+        self.waves.iter().map(|w| w.idle_ns(&self.blocks)).sum()
+    }
+
+    /// Measured wall time per block index: latest chunk end minus
+    /// earliest chunk start, so a row-split block reports its concurrent
+    /// span rather than the sum of its chunks. The span covers ALL of
+    /// this report's samples — a profiler reused across runs would span
+    /// run boundaries, so calibration uses one fresh profiler per run
+    /// and reduces across the per-run reports.
+    pub fn block_walls(&self) -> HashMap<usize, u64> {
+        let mut spans: HashMap<usize, (u64, u64)> = HashMap::new();
+        for s in &self.blocks {
+            let e = spans.entry(s.block).or_insert((u64::MAX, 0));
+            e.0 = e.0.min(s.start_ns);
+            e.1 = e.1.max(s.start_ns + s.dur_ns);
+        }
+        spans.into_iter().map(|(b, (s, e))| (b, e - s)).collect()
+    }
+
+    /// The kernel kind each block dispatched as (fixed per plan + int8
+    /// table, so the last sample wins harmlessly).
+    pub fn block_kinds(&self) -> HashMap<usize, KernelKind> {
+        self.blocks.iter().map(|s| (s.block, s.kind)).collect()
+    }
+
+    /// Per-kernel-kind aggregation — view (2) of the tentpole.
+    pub fn aggregate(&self) -> ProfileAggregate {
+        let mut by: BTreeMap<KernelKind, KindAgg> = BTreeMap::new();
+        for s in &self.blocks {
+            let a = by.entry(s.kind).or_insert(KindAgg {
+                kind: s.kind,
+                count: 0,
+                total_ns: 0,
+                rows: 0,
+                bytes: 0,
+            });
+            a.count += 1;
+            a.total_ns += s.dur_ns;
+            a.rows += s.rows;
+            a.bytes += s.bytes;
+        }
+        let mut kinds: Vec<KindAgg> = by.into_values().collect();
+        kinds.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+        ProfileAggregate { total_ns: kinds.iter().map(|k| k.total_ns).sum(), kinds }
+    }
+
+    /// chrome://tracing `trace_event` JSON — view (1) of the tentpole.
+    /// Block dispatches are complete (`"X"`) events on their thread
+    /// lane; waves are `"X"` events on a dedicated lane (tid 99) so the
+    /// barrier structure is visible above the kernels.
+    pub fn chrome_trace(&self) -> Json {
+        let us = |ns: u64| Json::Num(ns as f64 / 1000.0);
+        let mut events: Vec<Json> = Vec::new();
+        for s in &self.blocks {
+            let mut args = BTreeMap::new();
+            args.insert("block".into(), Json::Num(s.block as f64));
+            args.insert("wave".into(), Json::Num(s.wave as f64));
+            args.insert("rows".into(), Json::Num(s.rows as f64));
+            args.insert("bytes".into(), Json::Num(s.bytes as f64));
+            let mut ev = BTreeMap::new();
+            ev.insert("name".into(), Json::Str(format!("{} b{}", s.kind.label(), s.block)));
+            ev.insert("cat".into(), Json::Str("kernel".into()));
+            ev.insert("ph".into(), Json::Str("X".into()));
+            ev.insert("ts".into(), us(s.start_ns));
+            ev.insert("dur".into(), us(s.dur_ns));
+            ev.insert("pid".into(), Json::Num(0.0));
+            ev.insert("tid".into(), Json::Num(s.thread as f64));
+            ev.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(ev));
+        }
+        for w in &self.waves {
+            let mut args = BTreeMap::new();
+            args.insert("threads".into(), Json::Num(w.threads_used as f64));
+            args.insert("idle_ns".into(), Json::Num(w.idle_ns(&self.blocks) as f64));
+            let mut ev = BTreeMap::new();
+            ev.insert("name".into(), Json::Str(format!("wave {}", w.wave)));
+            ev.insert("cat".into(), Json::Str("wave".into()));
+            ev.insert("ph".into(), Json::Str("X".into()));
+            ev.insert("ts".into(), us(w.start_ns));
+            ev.insert("dur".into(), us(w.dur_ns));
+            ev.insert("pid".into(), Json::Num(0.0));
+            ev.insert("tid".into(), Json::Num(99.0));
+            ev.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(ev));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("traceEvents".into(), Json::Arr(events));
+        top.insert("displayTimeUnit".into(), Json::Str("ns".into()));
+        Json::Obj(top)
+    }
+}
+
+/// One row of the per-kind table.
+#[derive(Debug, Clone, Copy)]
+pub struct KindAgg {
+    pub kind: KernelKind,
+    pub count: usize,
+    pub total_ns: u64,
+    pub rows: usize,
+    pub bytes: usize,
+}
+
+impl KindAgg {
+    pub fn mean_us_per_row(&self) -> f64 {
+        if self.rows == 0 {
+            return 0.0;
+        }
+        self.total_ns as f64 / 1000.0 / self.rows as f64
+    }
+}
+
+/// The per-kernel-kind table, ordered by time share.
+#[derive(Debug, Clone)]
+pub struct ProfileAggregate {
+    pub kinds: Vec<KindAgg>,
+    /// Σ kernel time across all kinds, ns (thread time, not wall).
+    pub total_ns: u64,
+}
+
+impl ProfileAggregate {
+    /// Machine-readable form of the table (`BENCH_profile.json`).
+    pub fn json(&self) -> Json {
+        let kinds = self
+            .kinds
+            .iter()
+            .map(|k| {
+                let mut m = BTreeMap::new();
+                m.insert("kind".to_string(), Json::Str(k.kind.label().to_string()));
+                m.insert("count".to_string(), Json::Num(k.count as f64));
+                m.insert("total_us".to_string(), Json::Num(k.total_ns as f64 / 1e3));
+                m.insert("rows".to_string(), Json::Num(k.rows as f64));
+                m.insert("bytes".to_string(), Json::Num(k.bytes as f64));
+                m.insert("us_per_row".to_string(), Json::Num(k.mean_us_per_row()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("total_us".to_string(), Json::Num(self.total_ns as f64 / 1e3));
+        m.insert("kinds".to_string(), Json::Arr(kinds));
+        Json::Obj(m)
+    }
+}
+
+impl std::fmt::Display for ProfileAggregate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "  {:<14} {:>7} {:>11} {:>7} {:>10}",
+            "kind", "count", "total ms", "share", "us/row"
+        )?;
+        for k in &self.kinds {
+            let share = if self.total_ns == 0 {
+                0.0
+            } else {
+                100.0 * k.total_ns as f64 / self.total_ns as f64
+            };
+            writeln!(
+                f,
+                "  {:<14} {:>7} {:>11.3} {:>6.1}% {:>10.3}",
+                k.kind.label(),
+                k.count,
+                k.total_ns as f64 / 1e6,
+                share,
+                k.mean_us_per_row(),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::fusion::{lp_fusion, FusionConfig};
+    use crate::compiler::ir::{DType, Graph};
+
+    fn tiny() -> (Graph, FusionPlan) {
+        let mut g = Graph::new();
+        let a = g.input("a", &[8, 4], DType::F32);
+        let b = g.input("b", &[8, 4], DType::F32);
+        let o = g.add(a, b);
+        g.mark_output(o);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        (g, plan)
+    }
+
+    #[test]
+    fn samples_merge_and_aggregate() {
+        let (g, plan) = tiny();
+        let mut p = Profiler::new(&g, &plan, 2);
+        let t = Instant::now();
+        p.block(0, 0, 0, KernelKind::Tape, t);
+        p.block_rows(1, 0, 0, KernelKind::Tape, 4, t);
+        p.wave(0, 2, t);
+        let rep = p.report();
+        assert_eq!(rep.blocks.len(), 2);
+        assert_eq!(rep.waves.len(), 1);
+        // Whole-block sample carries the block's 8 kernel rows; the
+        // chunk carries its own 4 and half the bytes.
+        assert_eq!(rep.blocks.iter().map(|s| s.rows).max(), Some(8));
+        assert!(rep.blocks.iter().any(|s| s.rows == 4));
+        let agg = rep.aggregate();
+        assert_eq!(agg.kinds.len(), 1);
+        assert_eq!(agg.kinds[0].count, 2);
+        assert_eq!(
+            agg.total_ns,
+            rep.blocks.iter().map(|s| s.dur_ns).sum::<u64>(),
+            "per-kind totals must sum to total sample time exactly"
+        );
+        let table = agg.to_string();
+        assert!(table.contains("tape"), "{table}");
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let (g, plan) = tiny();
+        let mut p = Profiler::new(&g, &plan, 1);
+        p.block(0, 0, 0, KernelKind::Tape, Instant::now());
+        p.wave(0, 1, Instant::now());
+        let trace = p.report().chrome_trace();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        for ev in events {
+            assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+            assert!(ev.get("ts").unwrap().as_f64().is_some());
+            assert!(ev.get("dur").unwrap().as_f64().is_some());
+            assert!(ev.get("name").unwrap().as_str().is_some());
+        }
+    }
+
+    #[test]
+    fn wave_idle_is_reserved_minus_busy() {
+        let (g, plan) = tiny();
+        let mut p = Profiler::new(&g, &plan, 2);
+        let t = Instant::now();
+        p.block(0, 0, 0, KernelKind::Tape, t);
+        p.wave(0, 2, t);
+        let rep = p.report();
+        let w = rep.waves[0];
+        let busy: u64 = rep.blocks.iter().map(|b| b.dur_ns).sum();
+        assert_eq!(w.idle_ns(&rep.blocks), (2 * w.dur_ns).saturating_sub(busy));
+    }
+}

@@ -176,7 +176,25 @@ impl Compiled {
         quant: Option<&QuantizedWeights>,
         sinks: &mut [OutputSink<'_>],
     ) -> Result<(Vec<Option<exec::Tensor>>, exec::ExecStats), exec::ExecError> {
-        exec::parallel::execute_prepared_sinks(
+        self.run_parallel_sinks_profiled(feeds, threads, quant, sinks, None)
+    }
+
+    /// As [`Compiled::run_parallel_sinks`] with an optional execution
+    /// profiler (see [`exec::profile`]): per-block kernel timings, wave
+    /// barrier accounting, and the run's arena snapshot are recorded into
+    /// `prof` for chrome-trace export, the per-kind table, and
+    /// device-model calibration. `None` is a strict no-op. The profiler
+    /// must have been built for this model's graph/plan with at least
+    /// `threads` slots ([`exec::Profiler::new`]).
+    pub fn run_parallel_sinks_profiled(
+        &self,
+        feeds: &Feeds<'_>,
+        threads: usize,
+        quant: Option<&QuantizedWeights>,
+        sinks: &mut [OutputSink<'_>],
+        prof: Option<&exec::Profiler>,
+    ) -> Result<(Vec<Option<exec::Tensor>>, exec::ExecStats), exec::ExecError> {
+        exec::parallel::execute_prepared_sinks_profiled(
             &self.graph,
             &self.plan,
             self.prepared(),
@@ -185,7 +203,15 @@ impl Compiled {
             threads,
             quant,
             sinks,
+            prof,
         )
+    }
+
+    /// Build a profiler sized for this model (`threads` slots); pass it
+    /// to [`Compiled::run_parallel_sinks_profiled`] and call
+    /// [`exec::Profiler::report`] when done.
+    pub fn profiler(&self, threads: usize) -> exec::Profiler {
+        exec::Profiler::new(&self.graph, &self.plan, threads)
     }
 
     /// Build the executor's int8 side table from this model's quant sites

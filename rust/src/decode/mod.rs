@@ -61,8 +61,9 @@
 pub mod cache;
 
 use std::collections::HashMap;
+use std::time::Instant;
 
-use crate::compiler::exec::{ExecError, ExecStats, Feeds, OutputSink, QuantizedWeights};
+use crate::compiler::exec::{ExecError, ExecStats, Feeds, OutputSink, Profiler, QuantizedWeights};
 use crate::compiler::{compile, CompileOptions, Compiled};
 use crate::compress::quant::calibrate_activations_with;
 use crate::compress::CompressionConfig;
@@ -267,6 +268,14 @@ impl Decoder {
         Ok(by_name.len())
     }
 
+    /// The executors' int8 side tables for (prefill, step) — `None` on
+    /// fp32 decoders. Profiling/calibration derive the quantized weight
+    /// set from these so the device model prices exactly the kernels the
+    /// executors dispatch.
+    pub fn quant_tables(&self) -> (Option<&QuantizedWeights>, Option<&QuantizedWeights>) {
+        (self.quant_prefill.as_ref(), self.quant_step.as_ref())
+    }
+
     /// Calibrated static activation scales installed (per graph site).
     pub fn calibrated_sites(&self) -> usize {
         self.quant_prefill.as_ref().map_or(0, |q| q.act_scale.len())
@@ -336,6 +345,8 @@ impl Decoder {
             staging,
             pos: 0,
             last_stats: None,
+            time_phases: false,
+            phases: DecodePhases::default(),
         }
     }
 
@@ -349,6 +360,52 @@ impl Decoder {
     /// Slabs currently parked in the KV pool (observability).
     pub fn pooled_caches(&self) -> usize {
         self.pool.len()
+    }
+}
+
+/// Per-phase wall-clock breakdown of one session's decode work,
+/// accumulated only after [`DecodeSession::enable_phase_timing`]. The
+/// split separates the two costs the ROADMAP's kernel work will attack
+/// independently: executor compute (prefill forward; per-step forward)
+/// vs cache maintenance (`zero_row` before a step, `append_row` after).
+/// Plain `u64` nanosecond counters — no atomics; when timing is off the
+/// per-token path reads no clock and allocates nothing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DecodePhases {
+    /// Prefill executor time (one forward over the prompt).
+    pub prefill_ns: u64,
+    /// Sum of per-step executor time (step-graph forwards).
+    pub step_compute_ns: u64,
+    /// Sum of per-step cache maintenance (`zero_row` + `append_row`).
+    pub cache_write_ns: u64,
+    /// Steps accumulated into the sums above.
+    pub steps: u64,
+}
+
+impl DecodePhases {
+    /// Mean per-step executor time, microseconds (0 when no steps ran).
+    pub fn mean_step_compute_us(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.step_compute_ns as f64 / self.steps as f64 / 1e3
+    }
+
+    /// Mean per-step cache-write time, microseconds.
+    pub fn mean_cache_write_us(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.cache_write_ns as f64 / self.steps as f64 / 1e3
+    }
+
+    /// Fold another session's breakdown into this one (the serving load
+    /// harness aggregates across requests this way).
+    pub fn merge(&mut self, other: &DecodePhases) {
+        self.prefill_ns += other.prefill_ns;
+        self.step_compute_ns += other.step_compute_ns;
+        self.cache_write_ns += other.cache_write_ns;
+        self.steps += other.steps;
     }
 }
 
@@ -370,9 +427,22 @@ pub struct DecodeSession<'a> {
     staging: Vec<f32>,
     pos: usize,
     last_stats: Option<ExecStats>,
+    time_phases: bool,
+    phases: DecodePhases,
 }
 
 impl DecodeSession<'_> {
+    /// Turn on per-phase wall-clock accounting (see [`DecodePhases`]).
+    /// Off by default so the per-token path stays clock-free.
+    pub fn enable_phase_timing(&mut self) {
+        self.time_phases = true;
+    }
+
+    /// The phase breakdown accumulated so far (all zeros unless
+    /// [`DecodeSession::enable_phase_timing`] was called).
+    pub fn phases(&self) -> DecodePhases {
+        self.phases
+    }
     /// Run the prompt once through the prefill graph: logits land in the
     /// session scratch, per-layer K/V projections land directly in the
     /// cache. Returns the logits row at the last prompt position.
@@ -384,6 +454,17 @@ impl DecodeSession<'_> {
     /// prompts are typed errors, not panics — serving rejects the
     /// request instead of dying.
     pub fn prefill(&mut self, ids: &[i32]) -> Result<&[f32], DecodeError> {
+        self.prefill_profiled(ids, None)
+    }
+
+    /// As [`DecodeSession::prefill`] with an optional execution profiler
+    /// (build one via `self.decoder().prefill.profiler(threads)`); `None`
+    /// is a strict no-op on the hot path.
+    pub fn prefill_profiled(
+        &mut self,
+        ids: &[i32],
+        prof: Option<&Profiler>,
+    ) -> Result<&[f32], DecodeError> {
         let (s, v) = (self.dec.cfg.seq, self.dec.cfg.vocab);
         if ids.is_empty() {
             return Err(DecodeError::EmptyPrompt);
@@ -403,12 +484,17 @@ impl DecodeSession<'_> {
             sinks.push(OutputSink::Into(region));
         }
         let feeds = Feeds::layered_slices(&self.request, &slices, self.weights);
-        let (_, stats) = self.dec.prefill.run_parallel_sinks(
+        let t0 = self.time_phases.then(Instant::now);
+        let (_, stats) = self.dec.prefill.run_parallel_sinks_profiled(
             &feeds,
             self.threads,
             self.dec.quant_prefill.as_ref(),
             &mut sinks,
+            prof,
         )?;
+        if let Some(t) = t0 {
+            self.phases.prefill_ns += t.elapsed().as_nanos() as u64;
+        }
         drop(sinks);
         self.last_stats = Some(stats);
         self.cache.len = ids.len();
@@ -421,6 +507,17 @@ impl DecodeSession<'_> {
     /// K/V rows, and return the next-token logits row. Stepping before
     /// prefill or past a full cache is a typed error, not a panic.
     pub fn step(&mut self, token: i32) -> Result<&[f32], DecodeError> {
+        self.step_profiled(token, None)
+    }
+
+    /// As [`DecodeSession::step`] with an optional execution profiler
+    /// for the step graph (fresh profiler per step gives calibration one
+    /// clean plan-run per report); `None` is a strict no-op.
+    pub fn step_profiled(
+        &mut self,
+        token: i32,
+        prof: Option<&Profiler>,
+    ) -> Result<&[f32], DecodeError> {
         let (s, v) = (self.dec.cfg.seq, self.dec.cfg.vocab);
         let p = self.pos;
         if p == 0 {
@@ -429,7 +526,11 @@ impl DecodeSession<'_> {
         if p >= s {
             return Err(DecodeError::CacheFull { seq: s });
         }
+        let tz = self.time_phases.then(Instant::now);
         self.cache.zero_row(p);
+        if let Some(t) = tz {
+            self.phases.cache_write_ns += t.elapsed().as_nanos() as u64;
+        }
 
         self.request.get_mut("step_ids").expect("session request map")[0] = token as f32;
         self.request.get_mut("step_pos").expect("session request map")[0] = p as f32;
@@ -452,15 +553,25 @@ impl DecodeSession<'_> {
                 rest = r;
             }
             let feeds = Feeds::layered_slices(&self.request, &slices, self.weights);
-            let (_, stats) = self.dec.step.run_parallel_sinks(
+            let tc = self.time_phases.then(Instant::now);
+            let (_, stats) = self.dec.step.run_parallel_sinks_profiled(
                 &feeds,
                 self.threads,
                 self.dec.quant_step.as_ref(),
                 &mut sinks,
+                prof,
             )?;
+            if let Some(t) = tc {
+                self.phases.step_compute_ns += t.elapsed().as_nanos() as u64;
+            }
             self.last_stats = Some(stats);
         }
+        let ta = self.time_phases.then(Instant::now);
         self.cache.append_row(p, &self.staging);
+        if let Some(t) = ta {
+            self.phases.cache_write_ns += t.elapsed().as_nanos() as u64;
+            self.phases.steps += 1;
+        }
         self.pos += 1;
         Ok(&self.logits[..v])
     }

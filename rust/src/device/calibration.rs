@@ -1,0 +1,334 @@
+//! Measured-vs-predicted calibration of the device latency model.
+//!
+//! The roofline model in [`super`] prices a fused block from analytic
+//! FLOP/byte counts and a handful of device constants. Those constants
+//! are literature numbers — useful for *ranking* architectures in NAS,
+//! but nobody should trust their absolute scale without measuring. This
+//! module closes the loop: run the real executors under the
+//! [`Profiler`](crate::compiler::exec::Profiler), pair each block's
+//! measured wall time with its [`block_cost_with`] prediction, report
+//! per-kernel-kind relative error, and fit a [`DeviceProfile`] whose
+//! rate constants reproduce the measurements to first order.
+//!
+//! The fit is deliberately simple: each kernel kind maps to one rate
+//! class (int8 matmul, fp32 matmul, or vector), and each class gets a
+//! single multiplicative scale `s = Σ predicted / Σ measured` over its
+//! blocks — measured time twice the prediction means the effective rate
+//! halves. Memory bandwidth and launch overhead keep their base values;
+//! a per-class scalar can't separate them from the compute term, and on
+//! the graphs we calibrate against the compute term dominates. The
+//! fitted profile feeds NAS phase-2 pricing and
+//! `decode::step_latency`, so latency targets are enforced in measured
+//! units instead of datasheet units.
+//!
+//! Noise discipline: one fresh profiler per run, per-block measured
+//! time is the MIN across runs (best case is closest to the model's
+//! noise-free world), and callers should pass `runs >= 3`.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+use super::{block_cost_with, DeviceProfile};
+use crate::compiler::exec::profile::{KernelKind, ProfileReport};
+use crate::compiler::exec::{ExecError, Feeds, OutputSink, QuantizedWeights};
+use crate::compiler::ir::NodeId;
+use crate::compiler::Compiled;
+use crate::util::json::Json;
+
+/// Which rate constant a kernel kind is priced against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RateClass {
+    Int8Matmul,
+    Matmul,
+    Vector,
+}
+
+fn rate_class(kind: KernelKind) -> RateClass {
+    match kind {
+        KernelKind::FusedEpilogueI8
+        | KernelKind::FusedLayernormI8
+        | KernelKind::DirectI8Matmul => RateClass::Int8Matmul,
+        // Fallback blocks are mixed, but on our graphs the unfused
+        // stragglers are matmul-shaped; misassignment only softens the
+        // matmul-class fit, it cannot corrupt the other classes.
+        KernelKind::FusedLayernormF32 | KernelKind::FallbackBlock => RateClass::Matmul,
+        KernelKind::Tape | KernelKind::NativeSoftmax | KernelKind::NativeLayernorm => {
+            RateClass::Vector
+        }
+    }
+}
+
+/// Measured-vs-predicted totals for one kernel kind.
+#[derive(Debug, Clone, Copy)]
+pub struct KindError {
+    pub kind: KernelKind,
+    /// Distinct blocks of this kind in the plan.
+    pub blocks: usize,
+    /// Sum over blocks of the min-across-runs measured wall time.
+    pub measured_s: f64,
+    /// Sum over blocks of the model's `total_s` prediction.
+    pub predicted_s: f64,
+}
+
+impl KindError {
+    /// |measured - predicted| / measured, guarded against zero.
+    pub fn rel_err(&self) -> f64 {
+        (self.measured_s - self.predicted_s).abs() / self.measured_s.max(1e-12)
+    }
+}
+
+/// Result of pairing profiled runs against the analytic model.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    /// Name of the base profile the predictions came from.
+    pub device: &'static str,
+    /// Profiled runs the measurements were reduced over.
+    pub runs: usize,
+    /// Per-kind totals, sorted by measured time descending.
+    pub per_kind: Vec<KindError>,
+    /// Base profile with per-class rates rescaled to the measurements.
+    pub fitted: DeviceProfile,
+}
+
+impl CalibrationReport {
+    /// Σ|measured_k − predicted_k| / Σ measured_k across kinds.
+    pub fn overall_rel_err(&self) -> f64 {
+        let num: f64 = self.per_kind.iter().map(|k| (k.measured_s - k.predicted_s).abs()).sum();
+        let den: f64 = self.per_kind.iter().map(|k| k.measured_s).sum();
+        num / den.max(1e-12)
+    }
+
+    pub fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("device".to_string(), Json::Str(self.device.to_string()));
+        m.insert("runs".to_string(), Json::Num(self.runs as f64));
+        m.insert("overall_rel_err".to_string(), Json::Num(self.overall_rel_err()));
+        let kinds = self
+            .per_kind
+            .iter()
+            .map(|k| {
+                let mut km = std::collections::BTreeMap::new();
+                km.insert("kind".to_string(), Json::Str(k.kind.label().to_string()));
+                km.insert("blocks".to_string(), Json::Num(k.blocks as f64));
+                km.insert("measured_us".to_string(), Json::Num(k.measured_s * 1e6));
+                km.insert("predicted_us".to_string(), Json::Num(k.predicted_s * 1e6));
+                km.insert("rel_err".to_string(), Json::Num(k.rel_err()));
+                Json::Obj(km)
+            })
+            .collect();
+        m.insert("per_kind".to_string(), Json::Arr(kinds));
+        let mut f = std::collections::BTreeMap::new();
+        f.insert("matmul_flops".to_string(), Json::Num(self.fitted.matmul_flops));
+        f.insert("int8_matmul_flops".to_string(), Json::Num(self.fitted.int8_matmul_flops));
+        f.insert("vector_flops".to_string(), Json::Num(self.fitted.vector_flops));
+        f.insert("mem_bw".to_string(), Json::Num(self.fitted.mem_bw));
+        f.insert("launch_overhead_s".to_string(), Json::Num(self.fitted.launch_overhead_s));
+        m.insert("fitted".to_string(), Json::Obj(f));
+        Json::Obj(m)
+    }
+}
+
+impl fmt::Display for CalibrationReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "calibration vs `{}` ({} runs, min-reduced): overall rel err {:.1}%",
+            self.device,
+            self.runs,
+            self.overall_rel_err() * 100.0
+        )?;
+        writeln!(
+            f,
+            "  {:<14} {:>7} {:>12} {:>12} {:>8}",
+            "kind", "blocks", "measured us", "model us", "rel err"
+        )?;
+        for k in &self.per_kind {
+            writeln!(
+                f,
+                "  {:<14} {:>7} {:>12.1} {:>12.1} {:>7.1}%",
+                k.kind.label(),
+                k.blocks,
+                k.measured_s * 1e6,
+                k.predicted_s * 1e6,
+                k.rel_err() * 100.0
+            )?;
+        }
+        write!(
+            f,
+            "  fitted rates: matmul {:.2e} int8 {:.2e} vector {:.2e} flop/s",
+            self.fitted.matmul_flops, self.fitted.int8_matmul_flops, self.fitted.vector_flops
+        )
+    }
+}
+
+impl DeviceProfile {
+    /// Rescale this profile's per-class compute rates so the model's
+    /// predictions match the per-kind measurements to first order.
+    /// Classes with no measured blocks (or degenerate totals) keep their
+    /// base rate; scales are clamped to `[1e-3, 1e3]` so one noisy run
+    /// can't produce a profile that prices blocks at zero or infinity.
+    pub fn calibrated_from_profile(&self, per_kind: &[KindError]) -> DeviceProfile {
+        let mut fitted = self.clone();
+        fitted.name = "calibrated";
+        for class in [RateClass::Int8Matmul, RateClass::Matmul, RateClass::Vector] {
+            let (mut measured, mut predicted) = (0.0f64, 0.0f64);
+            for k in per_kind.iter().filter(|k| rate_class(k.kind) == class) {
+                measured += k.measured_s;
+                predicted += k.predicted_s;
+            }
+            if measured <= 0.0 || predicted <= 0.0 {
+                continue;
+            }
+            // Measured slower than predicted => effective rate drops.
+            let scale = (predicted / measured).clamp(1e-3, 1e3);
+            match class {
+                RateClass::Int8Matmul => fitted.int8_matmul_flops *= scale,
+                RateClass::Matmul => fitted.matmul_flops *= scale,
+                RateClass::Vector => fitted.vector_flops *= scale,
+            }
+        }
+        fitted
+    }
+}
+
+/// Pair per-run profiles against the analytic model for `c`'s plan.
+///
+/// `reports` must come from fresh profilers, one per run, over the same
+/// compiled model (see [`profile_runs`]); per-block measured time is the
+/// min across runs. `int8_weights` must match what the runs executed
+/// with (pass the quantized table's key set, or `None` for fp32 runs) so
+/// the model prices the same kernels the executor dispatched.
+pub fn calibrate(
+    c: &Compiled,
+    dev: &DeviceProfile,
+    int8_weights: Option<&HashSet<NodeId>>,
+    reports: &[ProfileReport],
+) -> CalibrationReport {
+    // Min-across-runs wall per block index, and the kind that ran it.
+    let mut walls: HashMap<usize, u64> = HashMap::new();
+    let mut kinds: HashMap<usize, KernelKind> = HashMap::new();
+    for r in reports {
+        for (bi, w) in r.block_walls() {
+            let e = walls.entry(bi).or_insert(u64::MAX);
+            *e = (*e).min(w);
+        }
+        kinds.extend(r.block_kinds());
+    }
+
+    let mut per: HashMap<KernelKind, KindError> = HashMap::new();
+    for (bi, block) in c.plan.blocks.iter().enumerate() {
+        let (Some(&wall), Some(&kind)) = (walls.get(&bi), kinds.get(&bi)) else {
+            continue; // block never sampled (empty-output corner)
+        };
+        let predicted = block_cost_with(&c.graph, block, dev, int8_weights).total_s;
+        let e = per.entry(kind).or_insert(KindError {
+            kind,
+            blocks: 0,
+            measured_s: 0.0,
+            predicted_s: 0.0,
+        });
+        e.blocks += 1;
+        e.measured_s += wall as f64 * 1e-9;
+        e.predicted_s += predicted;
+    }
+
+    let mut per_kind: Vec<KindError> = per.into_values().collect();
+    per_kind.sort_by(|a, b| b.measured_s.total_cmp(&a.measured_s));
+    let fitted = dev.calibrated_from_profile(&per_kind);
+    CalibrationReport { device: dev.name, runs: reports.len(), per_kind, fitted }
+}
+
+/// Run `c` `runs` times under a fresh profiler each and return the
+/// per-run reports (outputs discarded). The warmup run — which pays
+/// one-time `PreparedExec` construction — is executed unprofiled first.
+pub fn profile_runs(
+    c: &Compiled,
+    feeds: &HashMap<String, Vec<f32>>,
+    quant: Option<&QuantizedWeights>,
+    threads: usize,
+    runs: usize,
+) -> Result<Vec<ProfileReport>, ExecError> {
+    let feeds = Feeds::single(feeds);
+    let mut sinks: Vec<OutputSink<'_>> =
+        (0..c.graph.outputs.len()).map(|_| OutputSink::Discard).collect();
+    c.run_parallel_sinks_profiled(&feeds, threads, quant, &mut sinks, None)?;
+    let mut out = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        let mut prof = c.profiler(threads);
+        c.run_parallel_sinks_profiled(&feeds, threads, quant, &mut sinks, Some(&prof))?;
+        out.push(prof.report());
+    }
+    Ok(out)
+}
+
+/// One-call convenience: profile `runs` runs and calibrate against
+/// `dev`. The int8 weight set for model pricing is derived from `quant`
+/// so predictions price exactly the kernels the executor dispatched.
+pub fn calibrate_runs(
+    c: &Compiled,
+    feeds: &HashMap<String, Vec<f32>>,
+    quant: Option<&QuantizedWeights>,
+    threads: usize,
+    runs: usize,
+    dev: &DeviceProfile,
+) -> Result<(CalibrationReport, Vec<ProfileReport>), ExecError> {
+    let reports = profile_runs(c, feeds, quant, threads, runs)?;
+    let qset: Option<HashSet<NodeId>> = quant.map(|q| q.by_node.keys().copied().collect());
+    let rep = calibrate(c, dev, qset.as_ref(), &reports);
+    Ok((rep, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kerr(kind: KernelKind, measured_s: f64, predicted_s: f64) -> KindError {
+        KindError { kind, blocks: 1, measured_s, predicted_s }
+    }
+
+    #[test]
+    fn fit_rescales_each_class_independently() {
+        let base = DeviceProfile::s865_cpu();
+        // int8 measured 2x slower than predicted, vector 2x faster.
+        let per = [
+            kerr(KernelKind::FusedEpilogueI8, 2e-3, 1e-3),
+            kerr(KernelKind::Tape, 0.5e-3, 1e-3),
+        ];
+        let fit = base.calibrated_from_profile(&per);
+        assert_eq!(fit.name, "calibrated");
+        assert!((fit.int8_matmul_flops - base.int8_matmul_flops * 0.5).abs() < 1.0);
+        assert!((fit.vector_flops - base.vector_flops * 2.0).abs() < 1.0);
+        // No fp32-matmul samples: base rate untouched.
+        assert_eq!(fit.matmul_flops, base.matmul_flops);
+        assert_eq!(fit.mem_bw, base.mem_bw);
+    }
+
+    #[test]
+    fn fit_clamps_degenerate_scales() {
+        let base = DeviceProfile::s865_cpu();
+        let per = [kerr(KernelKind::FusedLayernormF32, 1e-12, 10.0)];
+        let fit = base.calibrated_from_profile(&per);
+        assert!(fit.matmul_flops <= base.matmul_flops * 1e3 + 1.0);
+    }
+
+    #[test]
+    fn report_error_math() {
+        let rep = CalibrationReport {
+            device: "s865-cpu",
+            runs: 3,
+            per_kind: vec![
+                kerr(KernelKind::FusedEpilogueI8, 4e-3, 3e-3),
+                kerr(KernelKind::Tape, 1e-3, 1e-3),
+            ],
+            fitted: DeviceProfile::s865_cpu(),
+        };
+        // Σ|m−p| = 1e-3, Σm = 5e-3.
+        assert!((rep.overall_rel_err() - 0.2).abs() < 1e-9);
+        let j = rep.json();
+        assert_eq!(j.get("device").and_then(|d| d.as_str()), Some("s865-cpu"));
+        assert_eq!(j.get("per_kind").and_then(|a| a.as_arr()).map(|a| a.len()), Some(2));
+        let s = format!("{rep}");
+        assert!(s.contains("fused-epi-i8"));
+        assert!(s.contains("overall rel err"));
+    }
+}

@@ -16,8 +16,13 @@
 //!   fusion repertoire (matmul+bias+activation only).
 //!
 //! Calibration constants are documented inline; EXPERIMENTS.md compares
-//! the resulting table against the paper's.
+//! the resulting table against the paper's. The datasheet constants are
+//! also checkable against reality: [`calibration`] pairs profiled host
+//! runs (see `compiler::exec::profile`) with [`block_cost_with`]
+//! predictions per kernel kind and fits host-measured rate constants —
+//! `canao profile` prints the resulting error table.
 
+pub mod calibration;
 pub mod tflite;
 
 use std::collections::HashSet;

@@ -31,4 +31,7 @@ pub mod tokenizer;
 pub mod train;
 pub mod util;
 
-pub use reports::{bench_table1, bench_table2, bench_textgen, table1_rows};
+pub use reports::{
+    bench_profile, bench_table1, bench_table2, bench_textgen, host_encoder_calibration,
+    table1_rows,
+};

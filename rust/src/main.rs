@@ -5,6 +5,8 @@
 //!   compile     compile a BERT config and report fusion + latency
 //!   table1      reproduce Table 1 (latency, CANAO vs TFLite, CPU/GPU)
 //!   table2      reproduce Table 2 (GLUE accuracy)
+//!   profile     profiled executor runs: per-kernel tables, chrome trace,
+//!               measured-vs-predicted device-model calibration
 //!   serve-qa    interactive QA demo over the AOT artifacts (Fig. 1 left)
 //!   serve-gen   text-generation demo (Fig. 1 right)
 //!   serve-load  open-loop sustained-load run against the native engines
@@ -45,6 +47,7 @@ fn main() {
             "compress",
             "decode-step",
             "full-reseq",
+            "calibrated",
         ],
     );
 
@@ -54,6 +57,7 @@ fn main() {
         "table1" => cmd_table1(),
         "table2" => cmd_table2(),
         "textgen" => cmd_textgen(),
+        "profile" => cmd_profile(&args),
         "serve-qa" => cmd_serve_qa(&args),
         "serve-gen" => cmd_serve_gen(&args),
         "serve-load" => cmd_serve_load(&args),
@@ -77,12 +81,14 @@ fn print_help() {
          \n\
          commands:\n\
          \x20 search     compiler-aware NAS    [--target-ms N --device cpu|gpu --iters N --compress\n\
-         \x20                                   --decode-step (price per-token decode latency)]\n\
+         \x20                                   --decode-step (price per-token decode latency)\n\
+         \x20                                   --calibrated (host-fitted device model)]\n\
          \x20 compile    compile one config    [--layers N --hidden N --inter N --no-fusion\n\
          \x20                                   --head-keep F --ffn-keep F --int8]\n\
          \x20 table1     reproduce Table 1 (latency)\n\
          \x20 table2     reproduce Table 2 (GLUE)\n\
          \x20 textgen    decode bench: full-reseq vs KV-cache ms/token\n\
+         \x20 profile    profiled executor runs [--threads N --runs N --trace PATH --out PATH]\n\
          \x20 serve-qa   QA demo               [--question S --context S]\n\
          \x20 serve-gen  text generation demo  [--prompt S --tokens N --temp F --full-reseq]\n\
          \x20 serve-load sustained-load run    [--qps F --duration-ms N --queue-cap N\n\
@@ -99,8 +105,24 @@ fn device_of(args: &Args) -> DeviceProfile {
 }
 
 fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    // `--calibrated`: replace the datasheet rate constants with ones
+    // fitted to profiled host runs (see `device::calibration`), so the
+    // latency target is enforced in measured units.
+    let device = if args.has("calibrated") {
+        let base = device_of(args);
+        let (cal, _) = canao::host_encoder_calibration(&base, args.usize_or("threads", 2), 3)?;
+        println!(
+            "[search] calibrated device model from host profile \
+             (base `{}`, overall rel err {:.1}%)",
+            base.name,
+            cal.overall_rel_err() * 100.0
+        );
+        cal.fitted
+    } else {
+        device_of(args)
+    };
     let cfg = SearchConfig {
-        device: device_of(args),
+        device,
         target_ms: args.f64_or("target-ms", 45.0),
         lambda: args.f64_or("lambda", 1.0) as f32,
         phase1_iters: args.usize_or("iters", 20),
@@ -236,6 +258,27 @@ fn cmd_table2() -> anyhow::Result<()> {
 
 fn cmd_textgen() -> anyhow::Result<()> {
     canao::bench_textgen(&mut std::io::stdout())
+}
+
+/// Profiled executor runs over the demo graphs: per-kernel-kind tables
+/// and the measured-vs-predicted calibration on stdout; `--trace PATH`
+/// writes a chrome://tracing timeline of the last int8 prefill run,
+/// `--out PATH` the machine-readable report (`BENCH_profile.json` in CI).
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let (trace, report) = canao::bench_profile(
+        &mut std::io::stdout(),
+        args.usize_or("threads", 2),
+        args.usize_or("runs", 3),
+    )?;
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, trace.dump())?;
+        println!("[profile] wrote {path} (load via chrome://tracing or ui.perfetto.dev)");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, report.dump_pretty())?;
+        println!("[profile] wrote {path}");
+    }
+    Ok(())
 }
 
 fn default_tokenizer() -> anyhow::Result<Arc<Tokenizer>> {

@@ -2,17 +2,21 @@
 //! (`canao table1` / `table2`), the examples, and the bench harness, so
 //! every surface prints exactly the same rows.
 
+use std::collections::{BTreeMap, HashSet};
 use std::io::Write;
 use std::sync::Arc;
 
+use crate::compiler::ir::NodeId;
 use crate::compiler::{compile, CompileOptions};
 use crate::compress::CompressionConfig;
 use crate::decode::{step_latency, DecodeMode};
+use crate::device::calibration::{calibrate, calibrate_runs, CalibrationReport};
 use crate::device::{plan_latency, plan_latency_compressed, tflite, DeviceProfile};
 use crate::model::{build_encoder, BertConfig};
 use crate::nas::trainer::{anchors, surrogate_score, ALL_TASKS};
 use crate::serving::{GenRequest, NativeGenEngine};
 use crate::tokenizer::{Tokenizer, Vocab};
+use crate::util::json::Json;
 
 /// One Table 1 row, fully computed.
 #[derive(Debug, Clone)]
@@ -211,6 +215,18 @@ pub fn bench_textgen(out: &mut dyn Write) -> anyhow::Result<()> {
                 sc.fallback_i8_matmul
             );
         }
+        // Execution-profiler view of the same dispatch mix: one profiled
+        // prefill, printed as the per-kernel-kind time-share table.
+        // Profiling stays off for the measured generate runs below, so
+        // the quartile numbers are untouched.
+        {
+            let mut sess = dec.begin(engine.weights(), 2);
+            let mut prof = dec.prefill.profiler(2);
+            sess.prefill_profiled(&[2, 3, 4, 5], Some(&prof))?;
+            sess.finish();
+            writeln!(out, "  {label} prefill kernel profile:")?;
+            write!(out, "{}", prof.report().aggregate())?;
+        }
         for (mode_label, mode, sim) in [
             ("full-reseq", DecodeMode::FullResequence, sim_full),
             ("kv-cache", DecodeMode::KvCache, sim_step),
@@ -257,6 +273,152 @@ pub fn bench_textgen(out: &mut dyn Write) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Print one profiled graph's section: wall/idle headline, the
+/// per-kernel-kind table, and the measured-vs-predicted calibration —
+/// and collect the machine-readable form for `BENCH_profile.json`.
+fn profile_section(
+    out: &mut dyn Write,
+    label: &str,
+    rep: &crate::compiler::exec::ProfileReport,
+    cal: &CalibrationReport,
+    sections: &mut BTreeMap<String, Json>,
+) -> anyhow::Result<()> {
+    writeln!(
+        out,
+        "{label}: wall {:.3} ms, barrier idle {:.3} ms",
+        rep.wall_ns() as f64 / 1e6,
+        rep.idle_ns() as f64 / 1e6
+    )?;
+    let agg = rep.aggregate();
+    write!(out, "{agg}")?;
+    writeln!(out, "{cal}")?;
+    let mut m = BTreeMap::new();
+    m.insert("wall_us".to_string(), Json::Num(rep.wall_ns() as f64 / 1e3));
+    m.insert("idle_us".to_string(), Json::Num(rep.idle_ns() as f64 / 1e3));
+    m.insert("aggregate".to_string(), agg.json());
+    m.insert("calibration".to_string(), cal.json());
+    sections.insert(label.to_string(), Json::Obj(m));
+    Ok(())
+}
+
+/// Profile the demo fp32 encoder on the host and calibrate the device
+/// model against the measurements. This is the shared entry for `canao
+/// profile` (section 1 of [`bench_profile`]) and for `canao search
+/// --calibrated`, which swaps the fitted profile into NAS phase-2
+/// pricing so latency targets are enforced in measured units.
+pub fn host_encoder_calibration(
+    dev: &DeviceProfile,
+    threads: usize,
+    runs: usize,
+) -> anyhow::Result<(CalibrationReport, Vec<crate::compiler::exec::ProfileReport>)> {
+    let cfg = BertConfig { vocab: 512, seq: 48, layers: 2, hidden: 64, heads: 4, inter: 256 };
+    let g = build_encoder(&cfg);
+    let compiled = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    let mut feeds = crate::serving::init_weights(&g, 0x9ACF);
+    feeds.insert("input_ids".to_string(), (0..cfg.seq).map(|i| (i % 500) as f32).collect());
+    for l in 0..cfg.layers {
+        feeds.insert(format!("mask{l}"), vec![0.0; cfg.seq]);
+    }
+    let (cal, reps) = calibrate_runs(&compiled, &feeds, None, threads, runs, dev)?;
+    Ok((cal, reps))
+}
+
+/// The `canao profile` report: run the demo graphs (fp32 encoder, then
+/// the pruned+int8 decode prefill and step graphs) under the execution
+/// profiler, print per-kernel-kind tables plus the measured-vs-predicted
+/// device-model calibration for each, and return `(chrome_trace,
+/// profile_json)` for the CLI to write. The trace covers the last
+/// profiled int8 prefill run (the richest wave structure).
+pub fn bench_profile(
+    out: &mut dyn Write,
+    threads: usize,
+    runs: usize,
+) -> anyhow::Result<(Json, Json)> {
+    let runs = runs.max(1);
+    let threads = threads.max(1);
+    let dev = DeviceProfile::s865_cpu();
+    writeln!(
+        out,
+        "Execution profile: demo graphs @{threads} threads, {runs} runs (min-reduced), \
+         model priced as `{}`",
+        dev.name
+    )?;
+
+    let mut sections: BTreeMap<String, Json> = BTreeMap::new();
+    let cfg = BertConfig { vocab: 512, seq: 48, layers: 2, hidden: 64, heads: 4, inter: 256 };
+
+    // (1) The fp32 encoder — the Table 1 workload.
+    let (cal, reps) = host_encoder_calibration(&dev, threads, runs)?;
+    profile_section(out, "encoder-fp32", reps.last().expect("runs >= 1"), &cal, &mut sections)?;
+
+    // (2+3) The pruned+int8 decode graphs — the serving path. Fresh
+    // profiler (and for prefill, fresh session) per run; each step of
+    // one session is one clean run of the step plan.
+    let corpus = "the quick brown fox jumps over the lazy dog . \
+                  the model generates new sentences word by word .";
+    let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 512)));
+    let engine = NativeGenEngine::with_compression(
+        tok,
+        cfg,
+        threads,
+        CompressionConfig::pruned_int8(0.5, 0.5),
+    );
+    let dec = engine.decoder();
+    let (qp, qs) = dec.quant_tables();
+    let prompt: Vec<i32> = (2..10).collect();
+
+    let mut prefill_reps = Vec::with_capacity(runs);
+    let mut trace = Json::Null;
+    for i in 0..runs {
+        let mut sess = dec.begin(engine.weights(), threads);
+        let mut prof = dec.prefill.profiler(threads);
+        sess.prefill_profiled(&prompt, Some(&prof))?;
+        sess.finish();
+        let r = prof.report();
+        if i == runs - 1 {
+            trace = r.chrome_trace();
+        }
+        prefill_reps.push(r);
+    }
+    let qset_p: Option<HashSet<NodeId>> = qp.map(|q| q.by_node.keys().copied().collect());
+    let cal_p = calibrate(&dec.prefill, &dev, qset_p.as_ref(), &prefill_reps);
+    profile_section(
+        out,
+        "prefill-int8",
+        prefill_reps.last().expect("runs >= 1"),
+        &cal_p,
+        &mut sections,
+    )?;
+
+    let mut sess = dec.begin(engine.weights(), threads);
+    sess.prefill(&prompt)?;
+    let step_runs = runs.min(cfg.seq - prompt.len());
+    let mut step_reps = Vec::with_capacity(step_runs);
+    for i in 0..step_runs {
+        let mut prof = dec.step.profiler(threads);
+        sess.step_profiled((2 + i % 100) as i32, Some(&prof))?;
+        step_reps.push(prof.report());
+    }
+    sess.finish();
+    let qset_s: Option<HashSet<NodeId>> = qs.map(|q| q.by_node.keys().copied().collect());
+    let cal_s = calibrate(&dec.step, &dev, qset_s.as_ref(), &step_reps);
+    profile_section(
+        out,
+        "step-int8",
+        step_reps.last().expect("at least one step run"),
+        &cal_s,
+        &mut sections,
+    )?;
+
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Num(1.0));
+    top.insert("bench".to_string(), Json::Str("profile".to_string()));
+    top.insert("threads".to_string(), Json::Num(threads as f64));
+    top.insert("runs".to_string(), Json::Num(runs as f64));
+    top.insert("graphs".to_string(), Json::Obj(sections));
+    Ok((trace, Json::Obj(top)))
+}
+
 /// Print Table 2 (GLUE accuracy) from the trainer surrogate.
 pub fn bench_table2(out: &mut dyn Write) -> anyhow::Result<()> {
     writeln!(out, "Table 2: GLUE dev accuracy (surrogate anchored to published points)")?;
@@ -278,6 +440,30 @@ pub fn bench_table2(out: &mut dyn Write) -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_profile_emits_trace_and_sections() {
+        let mut buf = Vec::new();
+        let (trace, json) = bench_profile(&mut buf, 2, 2).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        for section in ["encoder-fp32", "prefill-int8", "step-int8"] {
+            assert!(text.contains(section), "missing section header {section}");
+            assert!(
+                json.get("graphs").and_then(|g| g.get(section)).is_some(),
+                "missing json section {section}"
+            );
+        }
+        assert!(text.contains("overall rel err"), "calibration tables missing");
+        // The returned trace is the last profiled int8 prefill run.
+        let events = trace.get("traceEvents").and_then(|e| e.as_arr()).expect("trace events");
+        assert!(!events.is_empty(), "empty chrome trace");
+        let agg = json
+            .get("graphs")
+            .and_then(|g| g.get("step-int8"))
+            .and_then(|s| s.get("aggregate"))
+            .expect("step aggregate");
+        assert!(agg.get("total_us").and_then(|t| t.as_f64()).is_some());
+    }
 
     #[test]
     fn table1_shape_matches_paper() {

@@ -100,6 +100,33 @@ pub struct LoadReport {
     pub tokens_generated: usize,
     pub mean_batch_occupancy: f64,
     pub queue_depth_peak: i64,
+    /// Decode-phase split (gen engines; see `decode::DecodePhases`):
+    /// where each served token's time actually went.
+    pub phases: Option<PhaseSplit>,
+}
+
+/// Aggregated decode-phase breakdown across a load run's requests.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSplit {
+    /// Total prefill executor time across requests, ms.
+    pub prefill_ms: f64,
+    /// Mean step-graph executor time per generated step, µs.
+    pub step_compute_us: f64,
+    /// Mean KV-cache maintenance (`zero_row` + `append_row`) per step, µs.
+    pub cache_write_us: f64,
+    /// Steps the means aggregate over.
+    pub steps: u64,
+}
+
+impl PhaseSplit {
+    pub fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("prefill_ms".to_string(), Json::Num(r3(self.prefill_ms)));
+        m.insert("step_compute_us".to_string(), Json::Num(r3(self.step_compute_us)));
+        m.insert("cache_write_us".to_string(), Json::Num(r3(self.cache_write_us)));
+        m.insert("steps".to_string(), Json::Num(self.steps as f64));
+        Json::Obj(m)
+    }
 }
 
 fn r3(x: f64) -> f64 {
@@ -124,6 +151,8 @@ impl LoadReport {
         let occ = Json::Num(r3(self.mean_batch_occupancy));
         m.insert("mean_batch_occupancy".to_string(), occ);
         m.insert("queue_depth_peak".to_string(), Json::Num(self.queue_depth_peak as f64));
+        let phases = self.phases.as_ref().map_or(Json::Null, PhaseSplit::json);
+        m.insert("decode_phases".to_string(), phases);
         Json::Obj(m)
     }
 
@@ -158,6 +187,13 @@ impl LoadReport {
             "  batch occupancy mean {:.2}, queue depth peak {}\n",
             self.mean_batch_occupancy, self.queue_depth_peak
         ));
+        if let Some(p) = &self.phases {
+            out.push_str(&format!(
+                "  decode phases: prefill {:.2}ms total, step compute {:.1}us/tok, \
+                 cache write {:.1}us/tok ({} steps)\n",
+                p.prefill_ms, p.step_compute_us, p.cache_write_us, p.steps
+            ));
+        }
         out
     }
 }
@@ -295,6 +331,7 @@ pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig)
         tokens_generated: 0,
         mean_batch_occupancy: metrics.mean_batch_size(),
         queue_depth_peak: metrics.queue_depth.peak(),
+        phases: None,
     }
 }
 
@@ -304,6 +341,11 @@ pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig)
 /// second token (the empty-aggregation guard).
 pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig) -> LoadReport {
     assert!(!prompts.is_empty(), "need at least one prompt");
+    // The harness always wants the phase split; keep a metrics handle
+    // before the batcher takes ownership of the engine.
+    let mut engine = engine;
+    engine.phase_timing = true;
+    let engine_metrics = std::sync::Arc::clone(&engine.metrics);
     let seed = cfg.seed;
     let tokens = cfg.max_new_tokens;
     let make = move |i: usize| GenRequest {
@@ -341,6 +383,14 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
             Err(_) => errors += 1,
         }
     }
+    let ph = &engine_metrics.decode_phases;
+    let steps = ph.steps.get();
+    let phases = (steps > 0 || ph.prefill_ns.get() > 0).then(|| PhaseSplit {
+        prefill_ms: ph.prefill_ns.get() as f64 / 1e6,
+        step_compute_us: ph.step_compute_ns.get() as f64 / steps.max(1) as f64 / 1e3,
+        cache_write_us: ph.cache_write_ns.get() as f64 / steps.max(1) as f64 / 1e3,
+        steps,
+    });
     LoadReport {
         engine: "native_gen".to_string(),
         offered: run.offered,
@@ -355,20 +405,53 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
         tokens_generated,
         mean_batch_occupancy: metrics.mean_batch_size(),
         queue_depth_peak: metrics.queue_depth.peak(),
+        phases,
     }
+}
+
+/// The commit this binary's run should be attributed to: `GITHUB_SHA`
+/// in CI, `git rev-parse HEAD` on a dev checkout, `None` outside a repo.
+fn git_commit() -> Option<String> {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.trim().is_empty() {
+            return Some(sha.trim().to_string());
+        }
+    }
+    let out = std::process::Command::new("git").args(["rev-parse", "HEAD"]).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let sha = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    (!sha.is_empty()).then_some(sha)
+}
+
+/// Run provenance attached to every bench JSON: which commit produced
+/// the numbers and on how parallel a host — without these, trajectory
+/// diffs across PRs can't tell a regression from a machine change.
+fn run_meta(cfg: &LoadConfig) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("git_commit".to_string(), git_commit().map_or(Json::Null, Json::Str));
+    let host = std::thread::available_parallelism().map_or(0, |n| n.get());
+    m.insert("host_threads".to_string(), Json::Num(host as f64));
+    m.insert("engine_threads".to_string(), Json::Num(cfg.threads as f64));
+    m.insert("seed".to_string(), Json::Num(cfg.seed as f64));
+    m.insert("qps".to_string(), Json::Num(cfg.qps));
+    Json::Obj(m)
 }
 
 /// Serialize a full load-bench run. Committed/uploaded as
 /// `BENCH_serving.json` by CI so the serving perf trajectory diffs per
-/// PR.
+/// PR. Schema 2 added the `meta` provenance object and per-engine
+/// `decode_phases`.
 pub fn bench_json(cfg: &LoadConfig, reports: &[LoadReport]) -> Json {
     let mut engines = std::collections::BTreeMap::new();
     for r in reports {
         engines.insert(r.engine.clone(), r.json());
     }
     let mut m = std::collections::BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(1.0));
+    m.insert("schema".to_string(), Json::Num(2.0));
     m.insert("bench".to_string(), Json::Str("serving_load".to_string()));
+    m.insert("meta".to_string(), run_meta(cfg));
     m.insert("config".to_string(), cfg.json());
     m.insert("engines".to_string(), Json::Obj(engines));
     Json::Obj(m)
@@ -450,6 +533,15 @@ mod tests {
         let mpt = r.ms_per_token.as_ref().expect("2-token requests have steady steps");
         assert!(mpt.n > 0);
         assert!(mpt.p50_ms >= 0.0);
+        // The harness enables phase timing, so the split is present and
+        // consistent with the token counts.
+        let ph = r.phases.expect("gen load reports the decode-phase split");
+        assert!(ph.steps > 0, "steady steps were timed");
+        assert!(ph.prefill_ms > 0.0 && ph.step_compute_us > 0.0);
+        assert!(r.render().contains("decode phases"), "{}", r.render());
+        let j = r.json();
+        let steps = j.get("decode_phases").unwrap().get("steps").unwrap();
+        assert_eq!(steps.as_usize(), Some(ph.steps as usize));
     }
 
     #[test]
@@ -473,8 +565,14 @@ mod tests {
         write_bench_json(path, &cfg, &[r]).unwrap();
         let body = std::fs::read_to_string(path).unwrap();
         let parsed = Json::parse(body.trim()).unwrap();
-        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serving_load"));
+        let meta = parsed.get("meta").expect("schema 2 carries run provenance");
+        assert!(meta.get("seed").unwrap().as_usize().is_some());
+        assert!(meta.get("engine_threads").unwrap().as_usize().is_some());
+        assert!(meta.get("qps").unwrap().as_f64().is_some());
+        // git_commit is Str in a checkout, Null outside one — both legal.
+        assert!(meta.get("git_commit").is_some());
         let _ = std::fs::remove_file(path);
     }
 }

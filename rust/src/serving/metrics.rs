@@ -227,6 +227,50 @@ impl StreamingHistogram {
     }
 }
 
+/// Decode-phase time totals (nanosecond sums, lock-free), folded in per
+/// request by the textgen engine when its phase timing is enabled (see
+/// `decode::DecodePhases`). Splits the serving-visible per-token cost
+/// into executor compute vs KV-cache maintenance — the two halves the
+/// ROADMAP's kernel work optimizes separately.
+#[derive(Debug, Default)]
+pub struct PhaseCounters {
+    /// Prefill executor time across requests, ns.
+    pub prefill_ns: Counter,
+    /// Step-graph executor time across steps, ns.
+    pub step_compute_ns: Counter,
+    /// KV-cache `zero_row`/`append_row` time across steps, ns.
+    pub cache_write_ns: Counter,
+    /// Steps folded into the sums above.
+    pub steps: Counter,
+}
+
+impl PhaseCounters {
+    /// Fold one session's breakdown in (called once per request — four
+    /// relaxed adds, nothing per token).
+    pub fn record(&self, p: &crate::decode::DecodePhases) {
+        self.prefill_ns.add(p.prefill_ns);
+        self.step_compute_ns.add(p.step_compute_ns);
+        self.cache_write_ns.add(p.cache_write_ns);
+        self.steps.add(p.steps);
+    }
+
+    /// `None` until something was recorded (phase timing is opt-in).
+    pub fn summary(&self) -> Option<String> {
+        let steps = self.steps.get();
+        if steps == 0 && self.prefill_ns.get() == 0 {
+            return None;
+        }
+        let per = |ns: u64| ns as f64 / steps.max(1) as f64 / 1e3;
+        Some(format!(
+            "prefill={:.1}ms step-compute={:.1}us/tok cache-write={:.1}us/tok steps={}",
+            self.prefill_ns.get() as f64 / 1e6,
+            per(self.step_compute_ns.get()),
+            per(self.cache_write_ns.get()),
+            steps,
+        ))
+    }
+}
+
 /// Per-engine serving metrics, shared (`Arc`) between the engine — which
 /// records — and observers (load generator, CLI) — which query. All
 /// fields are lock-free; recording from `&self` is what lets the engines
@@ -244,17 +288,24 @@ pub struct EngineMetrics {
     pub ttft: StreamingHistogram,
     /// Per-token step latency after the first token, µs (textgen only).
     pub token_latency: StreamingHistogram,
+    /// Decode-phase breakdown (all zeros unless the engine's phase
+    /// timing is enabled — textgen KV-cache mode only).
+    pub decode_phases: PhaseCounters,
 }
 
 impl EngineMetrics {
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} failures={} ttft[{}] token[{}]",
             self.requests.get(),
             self.failures.get(),
             self.ttft.summary(),
             self.token_latency.summary(),
-        )
+        );
+        if let Some(ph) = self.decode_phases.summary() {
+            s.push_str(&format!(" phases[{ph}]"));
+        }
+        s
     }
 }
 

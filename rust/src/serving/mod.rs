@@ -36,6 +36,24 @@
 //! failures, TTFT, and steady-state per-token latency. Nothing on the
 //! hot path allocates per request or takes a lock.
 //!
+//! # Profiling & latency-model calibration
+//!
+//! The native path is profilable end to end, opt-in and zero-cost when
+//! off. `canao profile` runs the demo graphs under the execution
+//! profiler (`crate::compiler::exec::profile`) and emits all three
+//! views: the per-kernel-kind time table, a chrome://tracing timeline
+//! (`--trace`), and the measured-vs-predicted calibration of the device
+//! latency model (`crate::device::calibration`) — whose fitted
+//! constants `canao search --calibrated` then prices NAS with. Decode
+//! sessions additionally expose a per-token phase split (prefill wall
+//! vs step compute vs cache writes; `crate::decode::DecodePhases`): the
+//! load harness enables it per request and folds the split into
+//! [`EngineMetrics::decode_phases`], the rendered report, and
+//! `BENCH_serving.json` (`decode_phases` plus run-provenance `meta`,
+//! schema 2). With profiling and phase timing off — the default — the
+//! per-token path reads no clocks and allocates nothing extra, and
+//! `tests/exec_differential.rs` proves profiled runs stay bitwise equal.
+//!
 //! Admission is **bounded**: `Batcher` holds at most
 //! `BatcherOptions::queue_cap` queued jobs and `submit` returns
 //! `Err(BatcherError::QueueFull)` instead of queueing unboundedly.
@@ -62,8 +80,8 @@ use crate::util::rng::Rng;
 pub use batcher::{
     BatchModel, BatchResult, Batcher, BatcherError, BatcherMetrics, BatcherOptions,
 };
-pub use load::{run_gen_load, run_qa_load, write_bench_json, LoadConfig, LoadReport};
-pub use metrics::{Counter, EngineMetrics, Gauge, StreamingHistogram};
+pub use load::{run_gen_load, run_qa_load, write_bench_json, LoadConfig, LoadReport, PhaseSplit};
+pub use metrics::{Counter, EngineMetrics, Gauge, PhaseCounters, StreamingHistogram};
 pub use qa::{NativeQaEngine, QaEngine, QaRequest, QaResponse};
 pub use textgen::{GenEngine, GenRequest, GenResponse, NativeGenEngine};
 

@@ -205,6 +205,11 @@ pub struct NativeGenEngine {
     /// `token_latency` the steady-state per-step cost. Clone the `Arc`
     /// before moving the engine into a `Batcher` to keep observing it.
     pub metrics: Arc<EngineMetrics>,
+    /// When true, KV-cache sessions time their decode phases
+    /// (`decode::DecodePhases`: prefill vs step compute vs cache writes)
+    /// and fold the breakdown into `metrics.decode_phases` per request.
+    /// Off by default — the per-token path then reads no extra clock.
+    pub phase_timing: bool,
 }
 
 impl NativeGenEngine {
@@ -247,6 +252,7 @@ impl NativeGenEngine {
             threads: threads.max(1),
             mode: DecodeMode::KvCache,
             metrics: Arc::new(EngineMetrics::default()),
+            phase_timing: false,
         }
     }
 
@@ -348,7 +354,11 @@ impl NativeGenEngine {
                 let resp = decode_loop(&self.tokenizer, seq, vocab, req, |ids, out| {
                     if session.is_none() {
                         // First forward: prefill the prompt into the cache.
-                        session = Some(self.decoder.begin(&self.weights, self.threads));
+                        let mut s = self.decoder.begin(&self.weights, self.threads);
+                        if self.phase_timing {
+                            s.enable_phase_timing();
+                        }
+                        session = Some(s);
                         let row = session.as_mut().expect("just set").prefill(ids)?;
                         out.clear();
                         out.extend_from_slice(row);
@@ -362,6 +372,9 @@ impl NativeGenEngine {
                     Ok(())
                 });
                 if let Some(s) = session {
+                    if self.phase_timing {
+                        self.metrics.decode_phases.record(&s.phases());
+                    }
                     s.finish(); // park the cache slab for the next request
                 }
                 resp
@@ -525,6 +538,30 @@ mod tests {
         eng.generate(&none).unwrap();
         assert_eq!(eng.metrics.requests.get(), 2);
         assert_eq!(eng.metrics.ttft.len(), 1);
+    }
+
+    #[test]
+    fn phase_timing_records_decode_breakdown() {
+        let mut eng = tiny_engine(1);
+        eng.phase_timing = true;
+        let req = GenRequest {
+            prompt: "the model".into(),
+            max_new_tokens: 3,
+            temperature: 0.0,
+            seed: 7,
+        };
+        eng.generate(&req).unwrap();
+        let ph = &eng.metrics.decode_phases;
+        assert_eq!(ph.steps.get(), 2, "3 tokens = prefill+first, then 2 steps");
+        assert!(ph.prefill_ns.get() > 0, "prefill forward was timed");
+        assert!(ph.step_compute_ns.get() > 0, "step forwards were timed");
+        assert!(eng.metrics.summary().contains("phases["), "{}", eng.metrics.summary());
+
+        // Off by default: a fresh engine records nothing per token.
+        let quiet = tiny_engine(1);
+        quiet.generate(&req).unwrap();
+        assert_eq!(quiet.metrics.decode_phases.steps.get(), 0);
+        assert!(quiet.metrics.decode_phases.summary().is_none());
     }
 
     #[test]

@@ -19,9 +19,10 @@ use std::collections::HashMap;
 use canao::compiler::exec::interp::eval_graph;
 use canao::compiler::exec::parallel::{
     block_waves, execute_plan_parallel, execute_plan_parallel_stats,
+    execute_prepared_sinks_profiled, PreparedExec,
 };
 use canao::compiler::exec::plan::execute_plan;
-use canao::compiler::exec::ExecError;
+use canao::compiler::exec::{ExecError, Feeds, OutputSink, Profiler};
 use canao::compiler::fusion::{lp_fusion, FusionConfig, FusionPlan};
 use canao::compiler::ir::{DType, Graph, Op};
 use canao::compiler::poly::Schedule;
@@ -305,6 +306,64 @@ fn d5_arena_and_waves_invariants() {
             }
             if stats.slab_bytes < stats.peak_arena_bytes {
                 return Err("slab smaller than peak".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Attaching a profiler must not perturb execution: the profiled run is
+/// bitwise equal to the unprofiled parallel run at every thread count
+/// (the profiler only reads clocks around kernels — same tapes, same
+/// per-element order), and its report samples every block of the plan.
+#[test]
+fn d7_profiled_runs_bitwise_equal_to_unprofiled() {
+    forall(
+        0xD7,
+        25,
+        |rng| {
+            let g = random_graph(rng);
+            let feeds = feeds_for(&g, rng);
+            (g, feeds)
+        },
+        |(g, feeds)| {
+            let plan = lp_fusion(g, &FusionConfig::default());
+            let prep = PreparedExec::new(g, &plan);
+            let schedules = HashMap::new();
+            for &threads in &THREAD_COUNTS {
+                let base = execute_plan_parallel(g, &plan, feeds, &schedules, threads)
+                    .map_err(|e| e.to_string())?;
+                let mut prof = Profiler::new(g, &plan, threads);
+                let mut sinks = OutputSink::owned(g.outputs.len());
+                let (outs, _) = execute_prepared_sinks_profiled(
+                    g,
+                    &plan,
+                    &prep,
+                    &Feeds::single(feeds),
+                    &schedules,
+                    threads,
+                    None,
+                    &mut sinks,
+                    Some(&prof),
+                )
+                .map_err(|e| e.to_string())?;
+                for (i, (o, b)) in outs.iter().zip(&base).enumerate() {
+                    let o = o.as_ref().ok_or_else(|| format!("output {i} missing"))?;
+                    if o.data != b.data {
+                        return Err(format!(
+                            "output {i}: profiled({threads} threads) differs bitwise \
+                             from unprofiled"
+                        ));
+                    }
+                }
+                let rep = prof.report();
+                let sampled = rep.block_kinds().len();
+                if sampled != plan.blocks.len() {
+                    return Err(format!(
+                        "profiler sampled {sampled} of {} blocks",
+                        plan.blocks.len()
+                    ));
+                }
             }
             Ok(())
         },

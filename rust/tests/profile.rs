@@ -1,0 +1,119 @@
+//! Integration tests for the execution profiler's export views and the
+//! measured-vs-predicted device-model calibration:
+//!
+//! * the chrome://tracing export round-trips through the in-tree JSON
+//!   parser with the trace_event schema intact;
+//! * the per-kernel-kind aggregate accounts for every recorded dispatch
+//!   and its totals sum exactly;
+//! * calibrating a tiny BERT encoder yields a structurally sound report
+//!   (positive predictions, finite errors, fitted rates inside the
+//!   clamp band) without asserting tight timing bounds — CI hosts are
+//!   noisy, so these are invariants, not benchmarks.
+
+use std::collections::HashMap;
+
+use canao::compiler::{compile, CompileOptions, Compiled};
+use canao::device::calibration::{calibrate_runs, profile_runs};
+use canao::device::DeviceProfile;
+use canao::model::{build_encoder, BertConfig};
+use canao::util::json::Json;
+
+/// A 1-layer encoder small enough that a profiled run is milliseconds.
+fn tiny_bert() -> (Compiled, HashMap<String, Vec<f32>>) {
+    let cfg = BertConfig { vocab: 64, seq: 8, layers: 1, hidden: 16, heads: 2, inter: 32 };
+    let g = build_encoder(&cfg);
+    let c = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+    let mut feeds = canao::serving::init_weights(&g, 0xBEEF);
+    feeds.insert("input_ids".to_string(), (0..cfg.seq).map(|i| (i % 60) as f32).collect());
+    for l in 0..cfg.layers {
+        feeds.insert(format!("mask{l}"), vec![0.0; cfg.seq]);
+    }
+    (c, feeds)
+}
+
+#[test]
+fn trace_json_round_trips() {
+    let (c, feeds) = tiny_bert();
+    let reps = profile_runs(&c, &feeds, None, 2, 1).unwrap();
+    let rep = &reps[0];
+    assert!(!rep.blocks.is_empty(), "profiled run recorded no dispatches");
+    let parsed = Json::parse(&rep.chrome_trace().dump()).expect("trace must be valid JSON");
+    assert_eq!(parsed.get("displayTimeUnit").and_then(|d| d.as_str()), Some("ns"));
+    let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    // One complete event per block dispatch plus one per wave.
+    assert_eq!(events.len(), rep.blocks.len() + rep.waves.len());
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert!(ev.get("name").and_then(|n| n.as_str()).is_some());
+        assert!(ev.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(ev.get("dur").and_then(|d| d.as_f64()).is_some());
+        assert!(ev.get("pid").and_then(|p| p.as_f64()).is_some());
+        assert!(ev.get("tid").and_then(|t| t.as_f64()).is_some());
+        assert!(ev.get("args").is_some());
+    }
+    // Kernel events sit on real thread lanes; wave events on lane 99.
+    let lanes: Vec<f64> =
+        events.iter().filter_map(|e| e.get("tid").and_then(|t| t.as_f64())).collect();
+    assert!(lanes.iter().any(|&t| t < 99.0), "no kernel lanes in trace");
+    assert_eq!(lanes.iter().filter(|&&t| t == 99.0).count(), rep.waves.len());
+}
+
+#[test]
+fn aggregate_accounts_for_every_dispatch() {
+    let (c, feeds) = tiny_bert();
+    let rep = profile_runs(&c, &feeds, None, 4, 1).unwrap().remove(0);
+    assert!(!rep.blocks.is_empty());
+    let agg = rep.aggregate();
+    let sample_sum: u64 = rep.blocks.iter().map(|s| s.dur_ns).sum();
+    let kind_sum: u64 = agg.kinds.iter().map(|k| k.total_ns).sum();
+    assert_eq!(kind_sum, agg.total_ns, "per-kind totals must sum to the aggregate total");
+    assert_eq!(agg.total_ns, sample_sum, "aggregate total must equal the sample sum");
+    let counted: usize = agg.kinds.iter().map(|k| k.count).sum();
+    assert_eq!(counted, rep.blocks.len(), "every dispatch belongs to exactly one kind");
+    // The machine-readable view mirrors the table.
+    let j = Json::parse(&agg.json().dump()).unwrap();
+    assert_eq!(
+        j.get("kinds").and_then(|k| k.as_arr()).map(|k| k.len()),
+        Some(agg.kinds.len())
+    );
+    let total_us = j.get("total_us").and_then(|t| t.as_f64()).unwrap();
+    assert!((total_us - agg.total_ns as f64 / 1e3).abs() < 1e-6);
+}
+
+#[test]
+fn calibration_on_tiny_bert_is_sane() {
+    let (c, feeds) = tiny_bert();
+    let dev = DeviceProfile::s865_cpu();
+    let (cal, reps) = calibrate_runs(&c, &feeds, None, 2, 3, &dev).unwrap();
+    assert_eq!(reps.len(), 3, "one report per profiled run");
+    assert_eq!(cal.runs, 3);
+    assert!(!cal.per_kind.is_empty(), "no kernel kinds calibrated");
+    assert!(cal.per_kind.iter().any(|k| k.measured_s > 0.0), "all measurements were zero");
+    for k in &cal.per_kind {
+        assert!(k.blocks > 0);
+        assert!(k.predicted_s > 0.0, "model predicted zero cost for {:?}", k.kind);
+        assert!(k.rel_err().is_finite());
+    }
+    assert!(cal.overall_rel_err().is_finite());
+    // The fit is a pure per-class rescale: rates stay positive, inside
+    // the clamp band, and non-compute constants are untouched.
+    let f = &cal.fitted;
+    assert_eq!(f.name, "calibrated");
+    for (fit, base) in [
+        (f.matmul_flops, dev.matmul_flops),
+        (f.int8_matmul_flops, dev.int8_matmul_flops),
+        (f.vector_flops, dev.vector_flops),
+    ] {
+        assert!(fit > 0.0);
+        assert!(fit >= base * 1e-3 * 0.999 && fit <= base * 1e3 * 1.001);
+    }
+    assert_eq!(f.mem_bw, dev.mem_bw);
+    assert_eq!(f.launch_overhead_s, dev.launch_overhead_s);
+    // The JSON view parses back with the same cardinality.
+    let j = Json::parse(&cal.json().dump()).unwrap();
+    assert!(j.get("overall_rel_err").and_then(|e| e.as_f64()).is_some());
+    assert_eq!(
+        j.get("per_kind").and_then(|a| a.as_arr()).map(|a| a.len()),
+        Some(cal.per_kind.len())
+    );
+}
