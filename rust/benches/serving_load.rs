@@ -1,4 +1,4 @@
-//! Bench: open-loop sustained load against both native serving engines.
+//! Bench: open-loop sustained load against the native serving engines.
 //!
 //! Unlike `serving_throughput` (closed-loop: submit a burst, time the
 //! drain), this bench injects requests on a seeded Poisson arrival
@@ -8,31 +8,122 @@
 //! completions/s, admission rejects from the bounded batcher queue, and
 //! a closed-loop throughput-at-saturation probe for context.
 //!
+//! Generation runs three ways so the continuous-batching win is visible
+//! in one report:
+//!
+//! * `native_gen` — the sequential batch-1 engine behind the dynamic
+//!   batcher (the pre-existing serving path);
+//! * `native_gen_batched` — the `GenBatcher` scheduler stepping up to
+//!   `--slots` sessions per wave through the batched step graph, with
+//!   wave occupancy and KV page-pool utilization in the report;
+//! * `native_gen_independent` — `--slots` *independent* batch-1 engines
+//!   decoding concurrently on the same total thread budget (each gets
+//!   `max(1, threads/slots)` executor threads), closed-loop. This is the
+//!   baseline the batched aggregate tokens/sec is compared against: same
+//!   parallelism, no weight-traffic amortization.
+//!
 //! Run: cargo bench --bench serving_load -- \
 //!        [--qps F] [--duration-ms N] [--queue-cap N] [--threads N]
-//!        [--tokens N] [--seed N] [--burst N] [--out PATH]
+//!        [--tokens N] [--seed N] [--burst N] [--slots N] [--out PATH]
 //!
 //! CI runs this at smoke QPS with `--out BENCH_serving.json` and
 //! publishes the file, so the serving-latency trajectory diffs per PR.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use canao::serving::{
-    run_gen_load, run_qa_load, write_bench_json, LoadConfig, NativeGenEngine, NativeQaEngine,
-    QaRequest,
+    run_gen_load, run_gen_load_batched, run_qa_load, write_bench_json, GenBatcherOptions,
+    GenRequest, LoadConfig, LoadReport, NativeGenEngine, NativeQaEngine, QaRequest,
 };
 use canao::tokenizer::{Tokenizer, Vocab};
 use canao::util::cli::Args;
+use canao::util::stats::MsSummary;
 
 const FALLBACK_CORPUS: &str = "layer fusion reduces the number of kernels and the memory \
     traffic . the runtime loads the compiled program and executes it on the device . \
     the quick brown fox jumps over the lazy dog .";
 
+const PROMPTS: [&str; 3] = ["the model", "the quick brown fox", "the runtime loads"];
+
 fn corpus_tokenizer() -> Arc<Tokenizer> {
     let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")
         .unwrap_or_else(|_| FALLBACK_CORPUS.to_string());
     Arc::new(Tokenizer::new(Vocab::build(&corpus, 2048)))
+}
+
+/// Closed-loop baseline: `slots` independent batch-1 engines, each on
+/// its own OS thread with `per_threads` executor threads, splitting the
+/// burst evenly. Engine construction (graph build + fuse + compile) is
+/// excluded from the timed window — the comparison is about steady-state
+/// decode throughput, not startup.
+fn independent_baseline(
+    tok: &Arc<Tokenizer>,
+    slots: usize,
+    per_threads: usize,
+    cfg: &LoadConfig,
+) -> LoadReport {
+    let per_reqs = (cfg.saturation_burst / slots).max(1);
+    let engines: Vec<NativeGenEngine> =
+        (0..slots).map(|_| NativeGenEngine::demo(Arc::clone(tok), per_threads)).collect();
+    let t0 = Instant::now();
+    let results: Vec<(usize, usize, Vec<f64>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(k, eng)| {
+                s.spawn(move || {
+                    let mut done = 0usize;
+                    let mut toks = 0usize;
+                    let mut per_token = Vec::new();
+                    for i in 0..per_reqs {
+                        let n = k * per_reqs + i;
+                        let req = GenRequest {
+                            prompt: PROMPTS[n % PROMPTS.len()].to_string(),
+                            max_new_tokens: cfg.max_new_tokens,
+                            temperature: 0.8,
+                            seed: cfg.seed ^ (n as u64).wrapping_mul(0x9E37_79B9),
+                        };
+                        if let Ok(resp) = eng.generate(&req) {
+                            done += 1;
+                            toks += resp.tokens_generated;
+                            per_token.extend(resp.per_token_ms.iter().skip(1).copied());
+                        }
+                    }
+                    (done, toks, per_token)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("baseline worker")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let offered = slots * per_reqs;
+    let completed: usize = results.iter().map(|r| r.0).sum();
+    let tokens_generated: usize = results.iter().map(|r| r.1).sum();
+    let per_token: Vec<f64> = results.into_iter().flat_map(|r| r.2).collect();
+    let tps = tokens_generated as f64 / wall_s;
+    LoadReport {
+        engine: "native_gen_independent".to_string(),
+        offered,
+        completed,
+        rejected: 0,
+        errors: offered - completed,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s,
+        saturation_rps: completed as f64 / wall_s,
+        ttft: None,
+        ms_per_token: MsSummary::from_samples(per_token),
+        tokens_generated,
+        mean_batch_occupancy: 1.0,
+        peak_batch_occupancy: 1.0,
+        queue_depth_peak: 0,
+        slots,
+        tokens_per_s_aggregate: tps,
+        tokens_per_s_per_slot: tps / slots as f64,
+        saturation_tokens_per_s: tps,
+        page_pool: None,
+        phases: None,
+    }
 }
 
 fn main() {
@@ -48,12 +139,14 @@ fn main() {
         max_new_tokens: args.usize_or("tokens", 8),
         saturation_burst: args.usize_or("burst", 32),
     };
+    let slots = args.usize_or("slots", 4).max(1);
     println!(
-        "== open-loop serving load: {} qps for {} ms (seed {:#x}, queue cap {}) ==",
+        "== open-loop serving load: {} qps for {} ms (seed {:#x}, queue cap {}, {} slots) ==",
         cfg.qps,
         cfg.duration.as_millis(),
         cfg.seed,
-        cfg.queue_cap
+        cfg.queue_cap,
+        slots
     );
 
     let tok = corpus_tokenizer();
@@ -66,12 +159,33 @@ fn main() {
     let qa = run_qa_load(NativeQaEngine::demo(Arc::clone(&tok), cfg.threads), &qa_reqs, &cfg);
     print!("{}", qa.render());
 
-    let prompts = ["the model", "the quick brown fox", "the runtime loads"];
-    let gen = run_gen_load(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg);
+    let gen = run_gen_load(NativeGenEngine::demo(Arc::clone(&tok), cfg.threads), &PROMPTS, &cfg);
     print!("{}", gen.render());
 
+    // Same-thread-budget comparison: the batched engine gets
+    // `slots * per_threads` executor threads for one wave, the baseline
+    // gets `per_threads` per engine across `slots` engines.
+    let per_threads = (cfg.threads / slots).max(1);
+    let budget = per_threads * slots;
+    let batched_engine = NativeGenEngine::demo(Arc::clone(&tok), budget);
+    let opts = GenBatcherOptions { max_slots: slots, max_kv_pages: None };
+    let batched = run_gen_load_batched(batched_engine, &PROMPTS, &cfg, opts);
+    print!("{}", batched.render());
+
+    let baseline = independent_baseline(&tok, slots, per_threads, &cfg);
+    print!("{}", baseline.render());
+    println!(
+        "== continuous batching vs {} independent engines ({} threads total): \
+         {:.1} vs {:.1} tokens/s closed-loop ({:.2}x) ==",
+        slots,
+        budget,
+        batched.saturation_tokens_per_s,
+        baseline.saturation_tokens_per_s,
+        batched.saturation_tokens_per_s / baseline.saturation_tokens_per_s.max(1e-9),
+    );
+
     if let Some(out) = args.get("out") {
-        write_bench_json(out, &cfg, &[qa, gen]).expect("write bench json");
+        write_bench_json(out, &cfg, &[qa, gen, batched, baseline]).expect("write bench json");
         println!("wrote {out}");
     }
 }

@@ -117,6 +117,10 @@ pub fn apply_op_into(op: &Op, args: &[View], out_shape: &Shape, out: &mut [f32])
         Op::ReduceSum { axis } => reduce(arg(0), *axis, 0.0, out, |acc, x| acc + x),
         Op::ReduceMax { axis } => reduce(arg(0), *axis, f32::NEG_INFINITY, out, f32::max),
         Op::Gather => gather(arg(0), arg(1), out),
+        Op::SliceRows { start, len } => slice_rows(arg(0), *start, *len, out),
+        Op::ConcatRows => concat_rows(args, out),
+        Op::ScatterCols { cols } => scatter_cols(arg(0), arg(1), *cols, out),
+        Op::GatherCols => gather_cols(arg(0), arg(1), out),
     }
 }
 
@@ -209,6 +213,45 @@ fn reduce(a: View, axis: usize, init: f32, out: &mut [f32], f: impl Fn(f32, f32)
             for i in 0..inner {
                 out[obase + i] = f(out[obase + i], a.data[base + i]);
             }
+        }
+    }
+}
+
+fn slice_rows(a: View, start: usize, len: usize, out: &mut [f32]) {
+    let inner: usize = a.shape.dims[1..].iter().product();
+    out.copy_from_slice(&a.data[start * inner..(start + len) * inner]);
+}
+
+fn concat_rows(args: &[View], out: &mut [f32]) {
+    let mut off = 0usize;
+    for a in args {
+        out[off..off + a.data.len()].copy_from_slice(a.data);
+        off += a.data.len();
+    }
+}
+
+/// Columns not named by `idx` are exact +0.0 — the decode-step splice
+/// relies on that bit pattern surviving the downstream mask-add untouched.
+fn scatter_cols(x: View, idx: View, cols: usize, out: &mut [f32]) {
+    let k = x.shape.dims[x.shape.rank() - 1];
+    let outer = x.data.len() / k.max(1);
+    out.fill(0.0);
+    for r in 0..outer {
+        for (j, &idf) in idx.data.iter().enumerate() {
+            let c = (idf as usize).min(cols - 1);
+            out[r * cols + c] = x.data[r * k + j];
+        }
+    }
+}
+
+fn gather_cols(x: View, idx: View, out: &mut [f32]) {
+    let n = x.shape.dims[x.shape.rank() - 1];
+    let k = idx.data.len();
+    let outer = x.data.len() / n.max(1);
+    for r in 0..outer {
+        for (j, &idf) in idx.data.iter().enumerate() {
+            let c = (idf as usize).min(n - 1);
+            out[r * k + j] = x.data[r * n + c];
         }
     }
 }
@@ -367,6 +410,56 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out[0].data, vec![2., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn slice_and_concat_rows_roundtrip() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[3, 2], DType::F32);
+        let top = g.add_op(Op::SliceRows { start: 0, len: 1 }, &[x]);
+        let rest = g.add_op(Op::SliceRows { start: 1, len: 2 }, &[x]);
+        let back = g.add_op(Op::ConcatRows, &[rest, top]); // rotate rows
+        g.mark_output(back);
+        let out =
+            eval_graph(&g, &feeds(&[("x", vec![1., 2., 3., 4., 5., 6.])])).unwrap();
+        assert_eq!(out[0].data, vec![3., 4., 5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn scatter_cols_places_value_with_exact_zeros() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 1, 1], DType::F32);
+        let idx = g.input("pos", &[1], DType::I32);
+        let sc = g.add_op(Op::ScatterCols { cols: 4 }, &[x, idx]);
+        g.mark_output(sc);
+        let out = eval_graph(
+            &g,
+            &feeds(&[("x", vec![-7.0, 5.0]), ("pos", vec![2.0])]),
+        )
+        .unwrap();
+        assert_eq!(out[0].data, vec![0., 0., -7., 0., 0., 0., 5., 0.]);
+        // the holes are exact +0.0, never -0.0, even for negative sources
+        for &z in [0, 1, 3, 4, 5, 7].iter().map(|&i| &out[0].data[i]) {
+            assert!(z == 0.0 && z.is_sign_positive());
+        }
+    }
+
+    #[test]
+    fn gather_cols_picks_columns() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 1, 4], DType::F32);
+        let idx = g.input("pos", &[1], DType::I32);
+        let gc = g.add_op(Op::GatherCols, &[x, idx]);
+        g.mark_output(gc);
+        let out = eval_graph(
+            &g,
+            &feeds(&[
+                ("x", vec![1., 2., 3., 4., 5., 6., 7., 8.]),
+                ("pos", vec![3.0]),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(out[0].data, vec![4., 8.]);
     }
 
     #[test]

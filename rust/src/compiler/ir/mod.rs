@@ -53,6 +53,22 @@ pub enum Op {
     ReduceMax { axis: usize },
     /// Embedding lookup: inputs[0] = table [v, h] (Weight), inputs[1] = ids.
     Gather,
+    /// Static contiguous slice along axis 0: `[b, ...] -> [len, ...]`.
+    /// The batched decode step uses it to peel one slot's row (or one
+    /// position scalar) out of a batch without reshapes.
+    SliceRows { start: usize, len: usize },
+    /// Concatenate along axis 0; all inputs share trailing dims.
+    /// `[r_0, ...] ++ [r_1, ...] -> [r_0 + r_1, ...]`.
+    ConcatRows,
+    /// Scatter along the last axis: inputs[0] = x `[..., k]`, inputs[1] =
+    /// column indices `[k]` (I32). Output is `[..., cols]`, exact +0.0
+    /// everywhere except `out[..., idx[j]] = x[..., j]`. Replaces the
+    /// onehot-multiply splice in the decode step graph.
+    ScatterCols { cols: usize },
+    /// Gather along the last axis: inputs[0] = x `[..., n]`, inputs[1] =
+    /// column indices `[k]` (I32). Output `[..., k]` with
+    /// `out[..., j] = x[..., idx[j]]`.
+    GatherCols,
 }
 
 impl Op {
@@ -103,6 +119,10 @@ impl Op {
             Op::ReduceSum { .. } => "reduce_sum",
             Op::ReduceMax { .. } => "reduce_max",
             Op::Gather => "gather",
+            Op::SliceRows { .. } => "slice_rows",
+            Op::ConcatRows => "concat_rows",
+            Op::ScatterCols { .. } => "scatter_cols",
+            Op::GatherCols => "gather_cols",
         }
     }
 }
@@ -349,6 +369,54 @@ pub fn infer_shape(op: &Op, inputs: &[&Shape]) -> Shape {
             dims.push(table.dims[1]);
             Shape { dims }
         }
+        Op::SliceRows { start, len } => {
+            let a = inputs[0];
+            assert!(a.rank() >= 1, "slice_rows needs rank>=1");
+            assert!(
+                start + len <= a.dims[0],
+                "slice_rows [{start}, {start}+{len}) out of bounds for axis-0 extent {}",
+                a.dims[0]
+            );
+            let mut dims = a.dims.clone();
+            dims[0] = *len;
+            Shape { dims }
+        }
+        Op::ConcatRows => {
+            assert!(!inputs.is_empty(), "concat_rows needs at least one input");
+            let first = inputs[0];
+            assert!(first.rank() >= 1, "concat_rows needs rank>=1");
+            let mut rows = 0usize;
+            for a in inputs {
+                assert_eq!(
+                    &a.dims[1..],
+                    &first.dims[1..],
+                    "concat_rows trailing dims mismatch"
+                );
+                rows += a.dims[0];
+            }
+            let mut dims = first.dims.clone();
+            dims[0] = rows;
+            Shape { dims }
+        }
+        Op::ScatterCols { cols } => {
+            let (x, idx) = (inputs[0], inputs[1]);
+            assert_eq!(idx.rank(), 1, "scatter_cols indices must be rank-1");
+            let k = x.dims[x.rank() - 1];
+            assert_eq!(idx.dims[0], k, "scatter_cols index count != source columns");
+            assert!(k <= *cols, "scatter_cols source wider than target");
+            let mut dims = x.dims.clone();
+            let r = dims.len();
+            dims[r - 1] = *cols;
+            Shape { dims }
+        }
+        Op::GatherCols => {
+            let (x, idx) = (inputs[0], inputs[1]);
+            assert_eq!(idx.rank(), 1, "gather_cols indices must be rank-1");
+            let mut dims = x.dims.clone();
+            let r = dims.len();
+            dims[r - 1] = idx.dims[0];
+            Shape { dims }
+        }
         // Elementwise ops are handled by the guard arms above; rustc cannot
         // see that, so make exhaustiveness explicit.
         _ => unreachable!("elementwise op fell through guards: {op:?}"),
@@ -469,6 +537,41 @@ mod tests {
         let a = g.input("a", &[4, 8], DType::F32);
         let b = g.input("b", &[9, 4], DType::F32);
         g.matmul(a, b);
+    }
+
+    #[test]
+    fn slice_concat_rows_shapes() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[4, 8], DType::F32);
+        let s = g.add_op(Op::SliceRows { start: 1, len: 2 }, &[x]);
+        assert_eq!(g.nodes[s].shape.dims, vec![2, 8]);
+        let pos = g.input("pos", &[4], DType::I32);
+        let p1 = g.add_op(Op::SliceRows { start: 3, len: 1 }, &[pos]);
+        assert_eq!(g.nodes[p1].shape.dims, vec![1]);
+        assert_eq!(g.nodes[p1].dtype, DType::I32); // dtype follows input
+        let y = g.input("y", &[1, 8], DType::F32);
+        let c = g.add_op(Op::ConcatRows, &[s, y]);
+        assert_eq!(g.nodes[c].shape.dims, vec![3, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "slice_rows")]
+    fn slice_rows_oob_panics() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[4, 8], DType::F32);
+        g.add_op(Op::SliceRows { start: 3, len: 2 }, &[x]);
+    }
+
+    #[test]
+    fn scatter_gather_cols_shapes() {
+        let mut g = Graph::new();
+        let x = g.input("x", &[2, 1, 1], DType::F32);
+        let idx = g.input("pos", &[1], DType::I32);
+        let sc = g.add_op(Op::ScatterCols { cols: 12 }, &[x, idx]);
+        assert_eq!(g.nodes[sc].shape.dims, vec![2, 1, 12]);
+        assert_eq!(g.nodes[sc].dtype, DType::F32);
+        let gc = g.add_op(Op::GatherCols, &[sc, idx]);
+        assert_eq!(g.nodes[gc].shape.dims, vec![2, 1, 1]);
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Batched decode stepping for continuous batching.
+//!
+//! [`BatchStepper`] drives ONE forward of a
+//! [`crate::model::build_decode_step_batched`] graph over up to
+//! `max_slots` independent sessions: each active slot contributes its
+//! token/position feeds and its own paged [`KvCache`] regions (bound
+//! under `slot{i}/...` feed names, zero-copy), and gets back its
+//! next-token logits row plus freshly appended K/V rows.
+//!
+//! ## Rung selection and dummy slots
+//!
+//! The decoder compiles a power-of-two ladder of batched graphs
+//! ([`crate::decode::Decoder::enable_batched_steps`]); a wave of `n`
+//! active sessions dispatches the smallest rung with `b >= n`. The
+//! `b - n` dummy lanes feed token/position 0, an all-`NEG_MASK` mask
+//! row, and a shared all-zeros cache buffer — the masked softmax of a
+//! fully-masked row is finite (uniform over equal scores, never NaN),
+//! the INT8 row quantizer guards all-zero rows, and dummy outputs are
+//! simply never read, so dummies cannot perturb active lanes.
+//!
+//! ## Bitwise contract
+//!
+//! Every op in the batched graph is row-independent (gather, broadcast
+//! bias adds, row-local layernorm/softmax reductions, per-row matmul
+//! dots, and the per-slot attention bodies are sliced out explicitly),
+//! so slot `i`'s lane computes bit-for-bit the same f32 values as a
+//! batch-1 step of the same session — pinned across thread counts and
+//! under pruning + INT8 by `tests/decode_differential.rs`.
+
+use std::collections::HashMap;
+
+use crate::compiler::exec::{Feeds, OutputSink};
+use crate::decode::cache::KvCache;
+use crate::decode::{step_mask_feed, DecodeError, Decoder, NEG_MASK};
+
+/// One active lane of a batched step: the session's cache plus the
+/// token to decode and the position to decode it at (== the cache's
+/// valid prefix length mid-generation).
+pub struct BatchSlot<'c> {
+    pub cache: &'c mut KvCache,
+    pub token: i32,
+    pub pos: usize,
+}
+
+/// Reusable scratch for batched stepping: logits and K/V staging sized
+/// for the largest ladder rung, the wave's feed map, a shared zeros
+/// buffer backing dummy-lane cache feeds, and the interned
+/// `slot{i}/layer{l}/{k,v}_cache` feed names (no strings allocated per
+/// wave). One stepper serves one scheduler thread.
+pub struct BatchStepper {
+    /// `[b_max, vocab]` logits scratch; row `i` belongs to slot `i`.
+    logits: Vec<f32>,
+    /// Tensor-major staging: per layer, `k_all [b, aw]` then
+    /// `v_all [b, aw]`, at the current wave's `b`.
+    staging: Vec<f32>,
+    request: HashMap<String, Vec<f32>>,
+    zeros: Vec<f32>,
+    /// `slot_names[i][l] = (slot{i}/layer{l}/k_cache, .../v_cache)`.
+    slot_names: Vec<Vec<(String, String)>>,
+    vocab: usize,
+    seq: usize,
+    /// Per-layer attention widths (kept heads x head_dim).
+    aws: Vec<usize>,
+}
+
+impl BatchStepper {
+    /// Build scratch for `dec`'s batched ladder (which must be enabled —
+    /// see [`Decoder::enable_batched_steps`]).
+    pub fn new(dec: &Decoder) -> BatchStepper {
+        let b_max = dec.max_batch_slots();
+        assert!(b_max >= 1, "enable_batched_steps before building a BatchStepper");
+        let (s, v, h) = (dec.cfg.seq, dec.cfg.vocab, dec.cfg.head_dim());
+        let aws: Vec<usize> = dec.dims.iter().map(|d| d.heads * h).collect();
+        let row_elems: usize = aws.iter().map(|&aw| 2 * aw).sum();
+        let max_aw = aws.iter().copied().max().unwrap_or(0);
+        let slot_names = (0..b_max)
+            .map(|i| {
+                (0..aws.len())
+                    .map(|l| {
+                        (format!("slot{i}/layer{l}/k_cache"), format!("slot{i}/layer{l}/v_cache"))
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut request = HashMap::with_capacity(3);
+        request.insert("step_ids".to_string(), Vec::with_capacity(b_max));
+        request.insert("step_pos".to_string(), Vec::with_capacity(b_max));
+        request.insert("step_mask".to_string(), Vec::with_capacity(b_max * s));
+        BatchStepper {
+            logits: vec![0.0f32; b_max * v],
+            staging: vec![0.0f32; b_max * row_elems],
+            request,
+            zeros: vec![0.0f32; s * max_aw],
+            slot_names,
+            vocab: v,
+            seq: s,
+            aws,
+        }
+    }
+
+    /// Decode one token for every slot in one batched forward. Returns
+    /// the dispatched rung size `b` (`>= slots.len()`; the excess lanes
+    /// ran as dummies). On success each slot's cache has its new K/V row
+    /// appended, its `pos` is advanced, and [`BatchStepper::logits_row`]
+    /// holds its next-token logits. A slot stepping before prefill or
+    /// past a full cache fails the wave with a typed error before any
+    /// state changes.
+    pub fn step(
+        &mut self,
+        dec: &Decoder,
+        weights: &HashMap<String, Vec<f32>>,
+        threads: usize,
+        slots: &mut [BatchSlot],
+    ) -> Result<usize, DecodeError> {
+        let n = slots.len();
+        assert!(n >= 1, "batched step needs at least one active slot");
+        let (b, compiled, quant) = dec
+            .batched_step_for(n)
+            .expect("batched ladder too small for wave (enable_batched_steps)");
+        let (s, v) = (self.seq, self.vocab);
+        for slot in slots.iter() {
+            if slot.pos == 0 {
+                return Err(DecodeError::NotPrefilled);
+            }
+            if slot.pos >= s {
+                return Err(DecodeError::CacheFull { seq: s });
+            }
+        }
+        for slot in slots.iter_mut() {
+            slot.cache.zero_row(slot.pos);
+        }
+
+        let ids = self.request.get_mut("step_ids").expect("stepper request map");
+        ids.clear();
+        ids.resize(b, 0.0);
+        for (i, slot) in slots.iter().enumerate() {
+            ids[i] = slot.token as f32;
+        }
+        let pos = self.request.get_mut("step_pos").expect("stepper request map");
+        pos.clear();
+        pos.resize(b, 0.0);
+        for (i, slot) in slots.iter().enumerate() {
+            pos[i] = slot.pos as f32;
+        }
+        let mask = self.request.get_mut("step_mask").expect("stepper request map");
+        mask.clear();
+        mask.resize(b * s, NEG_MASK); // dummy lanes: fully masked
+        for (i, slot) in slots.iter().enumerate() {
+            step_mask_feed(slot.pos, &mut mask[i * s..(i + 1) * s]);
+        }
+
+        // (k_offset, v_offset, aw) per layer into the staging buffer,
+        // at this wave's rung size b.
+        let mut layout = Vec::with_capacity(self.aws.len());
+        {
+            let mut off = 0usize;
+            for &aw in &self.aws {
+                layout.push((off, off + b * aw, aw));
+                off += 2 * b * aw;
+            }
+        }
+
+        {
+            let mut slices: HashMap<&str, &[f32]> = HashMap::with_capacity(2 * b * self.aws.len());
+            for i in 0..b {
+                for (l, &aw) in self.aws.iter().enumerate() {
+                    let (k, vv) = match slots.get(i) {
+                        Some(slot) => slot.cache.regions(l),
+                        None => {
+                            let z = &self.zeros[..s * aw];
+                            (z, z)
+                        }
+                    };
+                    let (kn, vn) = &self.slot_names[i][l];
+                    slices.insert(kn.as_str(), k);
+                    slices.insert(vn.as_str(), vv);
+                }
+            }
+            let mut sinks: Vec<OutputSink> = Vec::with_capacity(1 + 2 * self.aws.len());
+            sinks.push(OutputSink::Into(&mut self.logits[..b * v]));
+            let mut rest = &mut self.staging[..];
+            for &(_, _, aw) in &layout {
+                let (k_all, r) = rest.split_at_mut(b * aw);
+                let (v_all, r) = r.split_at_mut(b * aw);
+                sinks.push(OutputSink::Into(k_all));
+                sinks.push(OutputSink::Into(v_all));
+                rest = r;
+            }
+            let feeds = Feeds::layered_slices(&self.request, &slices, weights);
+            compiled.run_parallel_sinks(&feeds, threads, quant, &mut sinks)?;
+        }
+
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let p = slot.pos;
+            slot.cache.append_row_parts(
+                p,
+                layout.iter().map(|&(k_off, v_off, aw)| {
+                    (
+                        &self.staging[k_off + i * aw..k_off + (i + 1) * aw],
+                        &self.staging[v_off + i * aw..v_off + (i + 1) * aw],
+                    )
+                }),
+            );
+            slot.pos += 1;
+        }
+        Ok(b)
+    }
+
+    /// Slot `i`'s next-token logits from the most recent wave.
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+}

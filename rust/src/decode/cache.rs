@@ -1,78 +1,208 @@
-//! Slab-backed KV-cache storage for incremental decoding.
+//! Paged KV-cache storage for incremental decoding.
 //!
 //! One [`KvCache`] holds every layer's K and V projections for one
-//! in-flight generation request, in a single flat [`Slab`] checked out of
-//! the decoder's [`SlabPool`] — steady-state serving performs no large
-//! allocation per request and allocates no buffers at all per token.
+//! in-flight generation request, as `2·layers` fixed-size **pages**
+//! checked out of a shared [`PagePool`] — steady-state serving performs
+//! no large allocation per request and allocates no buffers at all per
+//! token, and the pool's optional page cap bounds total KV memory under
+//! heavy traffic: when every page is in flight, admission fails *that
+//! session* with a typed error instead of growing without bound.
 //!
-//! ## Layout
+//! ## Page granularity
 //!
-//! Regions are laid out `k0, v0, k1, v1, ...`; layer `l`'s K region is a
-//! position-major `[seq, aw_l]` matrix (`aw_l` = the layer's possibly
-//! pruned attention width), so:
+//! A page is one whole `(layer, K-or-V)` region: a position-major
+//! `[seq, aw_l]` matrix (`aw_l` = the layer's possibly pruned attention
+//! width). Pages are deliberately **not** row-granular: the static-shape
+//! step graph reads each cache tensor as ONE contiguous `[seq, aw_l]`
+//! feed, and the bitwise decode contract (cached == full-resequence at
+//! f32 `==`) forbids splitting that span — a gather over row-pages would
+//! change the matmul's summation layout and with it the float bits.
+//! Region-granular pages keep everything the contract needs:
 //!
-//! * feeding the step graph is zero-copy (`feed_slices` hands the whole
-//!   region to [`crate::compiler::exec::Feeds`] as a borrowed slice);
+//! * feeding the step graph is zero-copy (`feed_slices` hands each page
+//!   to [`crate::compiler::exec::Feeds`] as a borrowed slice);
 //! * appending position `p`'s rows is one contiguous `aw_l`-element copy
 //!   per tensor;
-//! * the prefill graph's cache outputs (`[seq, aw_l]` K/V projections)
-//!   sink straight into the regions ([`KvCache::cache_sinks`]) with no
-//!   intermediate tensor.
+//! * the prefill graph's cache outputs sink straight into the pages
+//!   ([`KvCache::cache_sinks`]) with no intermediate tensor;
+//! * retiring a session returns its pages to the pool without copying
+//!   ([`KvCache::into_pool`]).
+//!
+//! The trade is that a session's pages are all checked out at admission
+//! (prefill writes the full `[seq, aw]` span anyway) rather than growing
+//! page-by-page with `len`; a row-granular pool needs an indirect
+//! (gather-fed) executor path first — noted on the ROADMAP.
+//!
+//! ## Rollback
+//!
+//! [`KvCache::truncate_to`] rewinds the valid prefix in O(1) for
+//! speculative-decoding style accept/rollback. With region-granular
+//! pages no page becomes unused by truncation (every layer still needs
+//! its `[seq, aw]` span for the next step), so rollback frees no pages —
+//! it only shrinks `len`; re-stepping a truncated position re-zeroes and
+//! rewrites its rows, restoring bitwise-identical state.
 //!
 //! ## The zero-row invariant
 //!
-//! Before the step for position `p` runs, row `p` of every K and V region
+//! Before the step for position `p` runs, row `p` of every K and V page
 //! must be all zeros ([`KvCache::zero_row`]): the step graph splices the
-//! freshly computed K/V row in arithmetically (`+ onehot_p * self_score`,
-//! `+ probs[p] * v_new`), relying on the cache side contributing exact
-//! `q · 0 = 0` / `probs[p] · 0 = 0` at row `p`. Rows beyond `p` may hold
-//! stale prefill garbage — they are masked with `NEG_MASK`, and
-//! `exp(-1e4 + x)` underflows to exactly `0.0`, so they never reach the
-//! output bits.
+//! freshly computed K/V row in arithmetically (scatter of `self_score`
+//! at column `p`, `+ probs[p] · v_new`), relying on the cache side
+//! contributing exact `q · 0 = 0` / `probs[p] · 0 = 0` at row `p`. Rows
+//! beyond `p` may hold stale prefill garbage — they are masked with
+//! `NEG_MASK`, and `exp(-1e4 + x)` underflows to exactly `0.0`, so they
+//! never reach the output bits.
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 
-use crate::util::pool::{Slab, SlabPool};
+/// One pooled page: a fixed-size buffer backing one `(layer, K-or-V)`
+/// cache region. Pages are uniform (`PagePool::page_elems` long); a
+/// region uses the leading `seq · aw_l` elements.
+pub struct Page {
+    data: Vec<f32>,
+}
+
+/// Utilization snapshot of a [`PagePool`] — serialized into
+/// `BENCH_serving.json` (schema 3) so KV-memory pressure is diffable
+/// per PR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagePoolStats {
+    /// Pages ever allocated (free + in use).
+    pub allocated: usize,
+    /// Pages currently checked out.
+    pub in_use: usize,
+    /// High-water mark of `in_use`.
+    pub peak_in_use: usize,
+    /// Hard cap on `allocated` (`None` = unbounded).
+    pub capacity: Option<usize>,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    free: Vec<Vec<f32>>,
+    allocated: usize,
+    in_use: usize,
+    peak_in_use: usize,
+}
+
+/// Shared, optionally capped pool of uniform KV pages. Checkout recycles
+/// a free page when one is parked, allocates while under the cap, and
+/// returns `None` once `allocated == capacity` with nothing free — the
+/// decoder surfaces that as `DecodeError::PagePoolExhausted` against the
+/// *admitting session*, never against sessions already holding pages.
+pub struct PagePool {
+    page_elems: usize,
+    capacity: Option<usize>,
+    inner: Mutex<PoolInner>,
+}
+
+impl PagePool {
+    pub fn new(page_elems: usize, capacity: Option<usize>) -> PagePool {
+        PagePool { page_elems, capacity, inner: Mutex::new(PoolInner::default()) }
+    }
+
+    /// Elements per page (`seq · max_l aw_l` for the owning decoder).
+    pub fn page_elems(&self) -> usize {
+        self.page_elems
+    }
+
+    /// Cap total pages (existing checkouts are unaffected; further
+    /// checkouts fail once `allocated` reaches the cap with no free
+    /// pages).
+    pub fn set_capacity(&mut self, capacity: Option<usize>) {
+        self.capacity = capacity;
+    }
+
+    /// Check out one page, or `None` if the pool is exhausted. Contents
+    /// start undefined (prefill overwrites every row; the zero-row
+    /// invariant is maintained per step), so recycling needs no zeroing.
+    pub fn checkout(&self) -> Option<Page> {
+        let mut inner = self.inner.lock().expect("page pool poisoned");
+        let data = match inner.free.pop() {
+            Some(buf) => buf,
+            None => {
+                if self.capacity.is_some_and(|cap| inner.allocated >= cap) {
+                    return None;
+                }
+                inner.allocated += 1;
+                vec![0.0; self.page_elems]
+            }
+        };
+        inner.in_use += 1;
+        inner.peak_in_use = inner.peak_in_use.max(inner.in_use);
+        Some(Page { data })
+    }
+
+    pub fn give_back(&self, page: Page) {
+        let mut inner = self.inner.lock().expect("page pool poisoned");
+        inner.in_use -= 1;
+        inner.free.push(page.data);
+    }
+
+    pub fn stats(&self) -> PagePoolStats {
+        let inner = self.inner.lock().expect("page pool poisoned");
+        PagePoolStats {
+            allocated: inner.allocated,
+            in_use: inner.in_use,
+            peak_in_use: inner.peak_in_use,
+            capacity: self.capacity,
+        }
+    }
+
+    /// Free (parked) pages — checkout hits these before allocating.
+    pub fn free_pages(&self) -> usize {
+        self.inner.lock().expect("page pool poisoned").free.len()
+    }
+}
 
 /// Per-request KV storage (see module docs for layout and invariants).
+/// Pages are ordered `k0, v0, k1, v1, ...` — the prefill sink order.
 pub struct KvCache {
-    slab: Slab,
+    pages: Vec<Page>,
     seq: usize,
     /// Per-layer attention width (kept heads x head_dim).
     aws: Vec<usize>,
-    /// Per-layer (k_offset, v_offset) into the slab, in elements.
-    offsets: Vec<(usize, usize)>,
     /// Interned feed names, `(k_cache, v_cache)` per layer — built once
     /// so the per-step feed map borrows `&str` keys instead of
     /// allocating 2·layers strings per token.
     names: Vec<(String, String)>,
-    total: usize,
     /// Valid prefix: rows `0..len` hold real K/V projections.
     pub len: usize,
 }
 
 impl KvCache {
-    /// Check a cache out of `pool` (recycled when possible), preallocated
-    /// to `seq` rows per layer. Contents start undefined — prefill
-    /// overwrites every row, and the zero-row invariant is maintained
-    /// per step, so no bulk zeroing is needed.
-    pub fn new(seq: usize, aws: Vec<usize>, pool: &SlabPool) -> KvCache {
-        let mut offsets = Vec::with_capacity(aws.len());
-        let mut off = 0usize;
+    /// Check `2·layers` pages out of `pool`, or fail with the pool's
+    /// utilization snapshot if it cannot supply them (already-obtained
+    /// pages are returned before failing, so a rejected admission leaks
+    /// nothing).
+    pub fn new(seq: usize, aws: Vec<usize>, pool: &PagePool) -> Result<KvCache, PagePoolStats> {
         for &aw in &aws {
-            offsets.push((off, off + seq * aw));
-            off += 2 * seq * aw;
+            assert!(seq * aw <= pool.page_elems(), "page too small for [seq, aw] region");
+        }
+        let mut pages = Vec::with_capacity(2 * aws.len());
+        for _ in 0..2 * aws.len() {
+            match pool.checkout() {
+                Some(p) => pages.push(p),
+                None => {
+                    for p in pages {
+                        pool.give_back(p);
+                    }
+                    return Err(pool.stats());
+                }
+            }
         }
         let names = (0..aws.len())
             .map(|l| (format!("layer{l}/k_cache"), format!("layer{l}/v_cache")))
             .collect();
-        let slab = pool.checkout(off);
-        KvCache { slab, seq, aws, offsets, names, total: off, len: 0 }
+        Ok(KvCache { pages, seq, aws, names, len: 0 })
     }
 
-    /// Return the backing slab to `pool` for the next request.
-    pub fn into_pool(self, pool: &SlabPool) {
-        pool.give_back(self.slab);
+    /// Return every page to `pool` for the next request (no copying).
+    pub fn into_pool(self, pool: &PagePool) {
+        for p in self.pages {
+            pool.give_back(p);
+        }
     }
 
     pub fn layers(&self) -> usize {
@@ -88,28 +218,45 @@ impl KvCache {
         self.aws.iter().map(|&aw| 2 * aw).sum()
     }
 
-    /// Zero row `p` of every K and V region — the step graph's
+    /// Rewind the valid prefix to `position` — O(1), the cheap rollback
+    /// speculative decoding needs. Pages stay checked out (see module
+    /// docs: every region is still live at `[seq, aw]` for the next
+    /// step); rows at and beyond `position` are overwritten by the
+    /// re-stepped zero-row/append cycle, restoring identical bits.
+    pub fn truncate_to(&mut self, position: usize) {
+        self.len = self.len.min(position);
+    }
+
+    /// Zero row `p` of every K and V page — the step graph's
     /// self-splice precondition (see module docs).
     pub fn zero_row(&mut self, p: usize) {
         assert!(p < self.seq, "cache row {p} out of range {}", self.seq);
-        let data = self.slab.data_mut();
         for (l, &aw) in self.aws.iter().enumerate() {
-            let (ko, vo) = self.offsets[l];
-            data[ko + p * aw..ko + (p + 1) * aw].fill(0.0);
-            data[vo + p * aw..vo + (p + 1) * aw].fill(0.0);
+            self.pages[2 * l].data[p * aw..(p + 1) * aw].fill(0.0);
+            self.pages[2 * l + 1].data[p * aw..(p + 1) * aw].fill(0.0);
         }
+    }
+
+    /// Borrowed `(K, V)` region slices for `layer` — the raw form of
+    /// [`KvCache::feed_slices`], used by the batched stepper to bind the
+    /// same pages under slot-prefixed feed names.
+    pub fn regions(&self, layer: usize) -> (&[f32], &[f32]) {
+        let aw = self.aws[layer];
+        (
+            &self.pages[2 * layer].data[..self.seq * aw],
+            &self.pages[2 * layer + 1].data[..self.seq * aw],
+        )
     }
 
     /// Borrowed per-layer cache feeds (`layer{l}/k_cache` / `v_cache`)
     /// for [`crate::compiler::exec::Feeds::layered_slices`] — zero-copy,
     /// with interned `&str` keys (no strings allocated per step).
     pub fn feed_slices(&self) -> HashMap<&str, &[f32]> {
-        let data = self.slab.data();
         let mut m = HashMap::with_capacity(2 * self.aws.len());
-        for (l, &aw) in self.aws.iter().enumerate() {
-            let (ko, vo) = self.offsets[l];
-            m.insert(self.names[l].0.as_str(), &data[ko..ko + self.seq * aw]);
-            m.insert(self.names[l].1.as_str(), &data[vo..vo + self.seq * aw]);
+        for l in 0..self.aws.len() {
+            let (k, v) = self.regions(l);
+            m.insert(self.names[l].0.as_str(), k);
+            m.insert(self.names[l].1.as_str(), v);
         }
         m
     }
@@ -117,45 +264,62 @@ impl KvCache {
     /// Exclusive region slices in prefill-output order (`k0, v0, k1,
     /// v1, ...`) — the prefill graph's cache outputs sink directly into
     /// these, so loading the cache costs zero copies beyond the
-    /// executor's single slab-to-sink write.
+    /// executor's single write per sink.
     pub fn cache_sinks(&mut self) -> Vec<&mut [f32]> {
         let seq = self.seq;
-        let mut rest = &mut self.slab.data_mut()[..self.total];
-        let mut sinks = Vec::with_capacity(2 * self.aws.len());
-        for &aw in &self.aws {
-            let (k, r) = rest.split_at_mut(seq * aw);
-            let (v, r) = r.split_at_mut(seq * aw);
-            sinks.push(k);
-            sinks.push(v);
-            rest = r;
-        }
-        sinks
+        let aws = &self.aws;
+        self.pages
+            .iter_mut()
+            .enumerate()
+            .map(|(i, p)| &mut p.data[..seq * aws[i / 2]])
+            .collect()
     }
 
     /// Copy one staged row set (layout `k_row_0, v_row_0, k_row_1, ...`,
     /// as produced by the step graph's sinks) into row `p` and extend the
     /// valid prefix.
     pub fn append_row(&mut self, p: usize, staged: &[f32]) {
-        assert!(p < self.seq, "cache row {p} out of range {}", self.seq);
         assert_eq!(staged.len(), self.row_elems(), "staged row set size");
-        let data = self.slab.data_mut();
         let mut s = 0usize;
-        for (l, &aw) in self.aws.iter().enumerate() {
-            let (ko, vo) = self.offsets[l];
-            data[ko + p * aw..ko + (p + 1) * aw].copy_from_slice(&staged[s..s + aw]);
-            s += aw;
-            data[vo + p * aw..vo + (p + 1) * aw].copy_from_slice(&staged[s..s + aw]);
-            s += aw;
+        let mut parts = Vec::with_capacity(self.aws.len());
+        for &aw in &self.aws {
+            parts.push((s, s + aw));
+            s += 2 * aw;
         }
+        let aws = self.aws.clone();
+        self.append_row_parts(
+            p,
+            aws.iter()
+                .zip(&parts)
+                .map(|(&aw, &(ks, vs))| (&staged[ks..ks + aw], &staged[vs..vs + aw])),
+        );
+    }
+
+    /// As [`KvCache::append_row`], from per-layer `(k_row, v_row)` slices
+    /// — the batched stepper's form, whose staging groups rows by tensor
+    /// (`k_all` then `v_all` per layer) rather than by session.
+    pub fn append_row_parts<'a>(
+        &mut self,
+        p: usize,
+        parts: impl Iterator<Item = (&'a [f32], &'a [f32])>,
+    ) {
+        assert!(p < self.seq, "cache row {p} out of range {}", self.seq);
+        let mut layers = 0usize;
+        for (l, (k_row, v_row)) in parts.enumerate() {
+            let aw = self.aws[l];
+            self.pages[2 * l].data[p * aw..(p + 1) * aw].copy_from_slice(k_row);
+            self.pages[2 * l + 1].data[p * aw..(p + 1) * aw].copy_from_slice(v_row);
+            layers += 1;
+        }
+        assert_eq!(layers, self.aws.len(), "row parts must cover every layer");
         self.len = self.len.max(p + 1);
     }
 
     /// Read one cached row (tests and debugging).
     pub fn row(&self, layer: usize, v: bool, p: usize) -> &[f32] {
         let aw = self.aws[layer];
-        let (ko, vo) = self.offsets[layer];
-        let base = if v { vo } else { ko };
-        &self.slab.data()[base + p * aw..base + (p + 1) * aw]
+        let page = &self.pages[2 * layer + usize::from(v)];
+        &page.data[p * aw..(p + 1) * aw]
     }
 }
 
@@ -163,10 +327,15 @@ impl KvCache {
 mod tests {
     use super::*;
 
+    fn pool_for(seq: usize, aws: &[usize]) -> PagePool {
+        let max_aw = aws.iter().copied().max().unwrap_or(0);
+        PagePool::new(seq * max_aw, None)
+    }
+
     #[test]
     fn layout_feeds_and_appends() {
-        let pool = SlabPool::new();
-        let mut c = KvCache::new(4, vec![6, 2], &pool);
+        let pool = pool_for(4, &[6, 2]);
+        let mut c = KvCache::new(4, vec![6, 2], &pool).unwrap();
         assert_eq!(c.layers(), 2);
         assert_eq!(c.row_elems(), 2 * 6 + 2 * 2);
 
@@ -197,13 +366,76 @@ mod tests {
     }
 
     #[test]
-    fn pool_recycles_cache_slabs() {
-        let pool = SlabPool::new();
-        let c = KvCache::new(8, vec![4], &pool);
+    fn append_row_parts_matches_append_row() {
+        let pool = pool_for(4, &[6, 2]);
+        let mut a = KvCache::new(4, vec![6, 2], &pool).unwrap();
+        let mut b = KvCache::new(4, vec![6, 2], &pool).unwrap();
+        let staged: Vec<f32> = (0..a.row_elems()).map(|i| i as f32 * 1.5).collect();
+        a.append_row(1, &staged);
+        b.append_row_parts(
+            1,
+            vec![(&staged[0..6], &staged[6..12]), (&staged[12..14], &staged[14..16])]
+                .into_iter(),
+        );
+        for l in 0..2 {
+            assert_eq!(a.row(l, false, 1), b.row(l, false, 1));
+            assert_eq!(a.row(l, true, 1), b.row(l, true, 1));
+        }
+        assert_eq!(b.len, 2);
+    }
+
+    #[test]
+    fn pool_recycles_pages() {
+        let pool = pool_for(8, &[4]);
+        let c = KvCache::new(8, vec![4], &pool).unwrap();
+        assert_eq!(pool.stats().in_use, 2, "one layer = one K page + one V page");
         c.into_pool(&pool);
-        assert_eq!(pool.len(), 1);
-        let c2 = KvCache::new(8, vec![4], &pool);
-        assert_eq!(pool.len(), 0, "second request reuses the parked slab");
+        assert_eq!(pool.free_pages(), 2);
+        let c2 = KvCache::new(8, vec![4], &pool).unwrap();
+        let s = pool.stats();
+        assert_eq!(pool.free_pages(), 0, "second request reuses the parked pages");
+        assert_eq!(s.allocated, 2, "no new allocations for the recycled request");
         c2.into_pool(&pool);
+    }
+
+    #[test]
+    fn capped_pool_rejects_then_recovers() {
+        // Capacity for exactly one 2-layer session (4 pages).
+        let mut pool = pool_for(4, &[3, 3]);
+        pool.set_capacity(Some(4));
+        let first = KvCache::new(4, vec![3, 3], &pool).unwrap();
+        let err = KvCache::new(4, vec![3, 3], &pool).unwrap_err();
+        assert_eq!(err.in_use, 4);
+        assert_eq!(err.capacity, Some(4));
+        assert_eq!(
+            pool.stats().in_use,
+            4,
+            "failed checkout returns partial pages, keeps the holder's"
+        );
+        first.into_pool(&pool);
+        let again = KvCache::new(4, vec![3, 3], &pool);
+        assert!(again.is_ok(), "retirement frees capacity for the next session");
+        assert_eq!(pool.stats().peak_in_use, 4);
+    }
+
+    #[test]
+    fn truncate_rewinds_len_without_freeing_pages() {
+        let pool = pool_for(8, &[4]);
+        let mut c = KvCache::new(8, vec![4], &pool).unwrap();
+        let staged: Vec<f32> = vec![1.0; c.row_elems()];
+        for p in 0..5 {
+            c.append_row(p, &staged);
+        }
+        assert_eq!(c.len, 5);
+        c.truncate_to(2);
+        assert_eq!(c.len, 2);
+        assert_eq!(pool.stats().in_use, 2, "regions stay checked out for re-stepping");
+        c.truncate_to(6);
+        assert_eq!(c.len, 2, "truncate never extends the valid prefix");
+        // Re-stepping position 2 restores the append path unchanged.
+        c.zero_row(2);
+        c.append_row(2, &staged);
+        assert_eq!(c.len, 3);
+        c.into_pool(&pool);
     }
 }

@@ -58,6 +58,7 @@
 //! full-length (`ids.len() == seq`) prompt is legal when no step will
 //! follow — a scoring request reads the prefill logits and finishes.
 
+pub mod batch;
 pub mod cache;
 
 use std::collections::HashMap;
@@ -68,10 +69,12 @@ use crate::compiler::{compile, CompileOptions, Compiled};
 use crate::compress::quant::calibrate_activations_with;
 use crate::compress::CompressionConfig;
 use crate::device::{plan_latency_compressed, DeviceProfile, Latency};
-use crate::model::{build_causal_lm_with, build_decode_step_with, BertConfig, LayerDims};
-use crate::util::pool::SlabPool;
+use crate::model::{
+    build_causal_lm_with, build_decode_step_batched, build_decode_step_with, BertConfig, LayerDims,
+};
 
-pub use cache::KvCache;
+pub use batch::{BatchSlot, BatchStepper};
+pub use cache::{KvCache, PagePool, PagePoolStats};
 
 /// Typed decode-request failure: everything a *caller* can get wrong when
 /// driving a [`DecodeSession`]. Serving rejects these per request;
@@ -87,6 +90,10 @@ pub enum DecodeError {
     /// Every cache row is occupied — no position left to decode into
     /// (also the successful end state of a full-length scoring prefill).
     CacheFull { seq: usize },
+    /// The shared KV [`PagePool`] could not supply this session's pages
+    /// (capped pool under heavy traffic). Fails only the *admitting*
+    /// session — sessions already holding pages are untouched.
+    PagePoolExhausted { in_use: usize, capacity: usize },
     /// The underlying executor rejected the feeds.
     Exec(ExecError),
 }
@@ -101,6 +108,9 @@ impl std::fmt::Display for DecodeError {
             DecodeError::NotPrefilled => write!(f, "step called before prefill"),
             DecodeError::CacheFull { seq } => {
                 write!(f, "KV cache full: all {seq} positions decoded")
+            }
+            DecodeError::PagePoolExhausted { in_use, capacity } => {
+                write!(f, "KV page pool exhausted: {in_use}/{capacity} pages in use")
             }
             DecodeError::Exec(e) => write!(f, "executor: {e}"),
         }
@@ -172,10 +182,20 @@ pub fn step_latency_dense(cfg: &BertConfig, dev: &DeviceProfile, int8: bool) -> 
     step_latency(cfg, &vec![LayerDims::of(cfg); cfg.layers], dev, int8)
 }
 
+/// One rung of the batched-step ladder: the compiled
+/// [`build_decode_step_batched`] graph for `slots` batch slots, plus its
+/// INT8 side table.
+struct BatchedStep {
+    slots: usize,
+    compiled: Compiled,
+    quant: Option<QuantizedWeights>,
+}
+
 /// Compiled decode artifacts for one model: the prefill graph (also the
-/// full-resequence reference), the step graph, their INT8 side tables,
-/// and the recycled KV-slab pool. Weights stay with the owning engine —
-/// the decoder only borrows them per call.
+/// full-resequence reference), the step graph, the optional
+/// continuous-batching step ladder, their INT8 side tables, and the
+/// shared KV page pool. Weights stay with the owning engine — the
+/// decoder only borrows them per call.
 pub struct Decoder {
     pub prefill: Compiled,
     pub step: Compiled,
@@ -183,7 +203,11 @@ pub struct Decoder {
     pub dims: Vec<LayerDims>,
     quant_prefill: Option<QuantizedWeights>,
     quant_step: Option<QuantizedWeights>,
-    pool: SlabPool,
+    /// Batched step graphs at power-of-two slot counts, ascending —
+    /// empty until [`Decoder::enable_batched_steps`].
+    batched: Vec<BatchedStep>,
+    opts: CompileOptions,
+    pool: PagePool,
     causal_mask: Vec<f32>,
 }
 
@@ -197,6 +221,8 @@ impl Decoder {
         let prefill = compile(&build_causal_lm_with(&cfg, &dims, true), &opts);
         let step = compile(&build_decode_step_with(&cfg, &dims), &opts);
         let causal_mask = causal_mask_feed(cfg.seq);
+        let hd = cfg.head_dim();
+        let max_aw = dims.iter().map(|d| d.heads * hd).max().unwrap_or(0);
         Decoder {
             prefill,
             step,
@@ -204,17 +230,105 @@ impl Decoder {
             dims,
             quant_prefill: None,
             quant_step: None,
-            pool: SlabPool::new(),
+            batched: Vec::new(),
+            opts,
+            pool: PagePool::new(cfg.seq * max_aw, None),
             causal_mask,
         }
     }
 
-    /// Build both graphs' INT8 weight tables from one named weight map
-    /// (the same per-channel quantization lands in both, keyed by each
-    /// graph's own node ids).
+    /// Compile the continuous-batching step ladder: one batched step
+    /// graph per power-of-two slot count up to `max_slots` (rounded up),
+    /// so a partially occupied batch dispatches the smallest graph that
+    /// fits. Call BEFORE [`Decoder::quantize`] / [`Decoder::calibrate`]
+    /// (or re-run them after) so the ladder gets its INT8 tables and
+    /// static scales too. Idempotent when the ladder already covers
+    /// `max_slots`.
+    pub fn enable_batched_steps(&mut self, max_slots: usize) {
+        assert!(max_slots >= 1, "need at least one batch slot");
+        let top = max_slots.next_power_of_two();
+        if self.max_batch_slots() >= top {
+            return;
+        }
+        self.batched.clear();
+        let mut b = 1usize;
+        while b <= top {
+            let g = build_decode_step_batched(&self.cfg, &self.dims, b);
+            self.batched.push(BatchedStep {
+                slots: b,
+                compiled: compile(&g, &self.opts),
+                quant: None,
+            });
+            b *= 2;
+        }
+    }
+
+    /// Largest slot count the batched ladder covers (0 = not enabled).
+    pub fn max_batch_slots(&self) -> usize {
+        self.batched.last().map_or(0, |e| e.slots)
+    }
+
+    /// Smallest ladder rung with `slots >= n` (its compiled graph and
+    /// int8 table); `None` when the ladder is disabled or too small.
+    pub(crate) fn batched_step_for(
+        &self,
+        n: usize,
+    ) -> Option<(usize, &Compiled, Option<&QuantizedWeights>)> {
+        self.batched
+            .iter()
+            .find(|e| e.slots >= n)
+            .map(|e| (e.slots, &e.compiled, e.quant.as_ref()))
+    }
+
+    /// Per-rung dispatch census for the batched ladder (slot count,
+    /// counts) — the batched extension of [`Decoder::dispatch_counts`];
+    /// `fallback_i8_matmul` must stay 0 at every rung.
+    pub fn batched_dispatch_counts(
+        &self,
+    ) -> Vec<(usize, crate::compiler::exec::DispatchCounts)> {
+        self.batched
+            .iter()
+            .map(|e| (e.slots, e.compiled.dispatch_counts(e.quant.as_ref())))
+            .collect()
+    }
+
+    /// Build every graph's INT8 weight tables from one named weight map
+    /// (the same per-channel quantization lands in each graph — prefill,
+    /// step, and any batched ladder rungs — keyed by each graph's own
+    /// node ids).
     pub fn quantize(&mut self, weights: &HashMap<String, Vec<f32>>) {
         self.quant_prefill = Some(self.prefill.quantize_weights(weights));
         self.quant_step = Some(self.step.quantize_weights(weights));
+        for e in &mut self.batched {
+            e.quant = Some(e.compiled.quantize_weights(weights));
+        }
+    }
+
+    /// Build (or refresh) the batched ladder's INT8 tables only — the
+    /// engine path when the ladder is enabled *after* [`Decoder::quantize`]
+    /// already ran. Static activation scales already calibrated on the
+    /// step graph are propagated by weight name, so the ladder joins the
+    /// same quantization regime whichever order enable/quantize/calibrate
+    /// ran in.
+    pub fn quantize_ladder(&mut self, weights: &HashMap<String, Vec<f32>>) {
+        let by_name: HashMap<&str, f32> = match &self.quant_step {
+            Some(qs) => self
+                .step
+                .quant_sites
+                .iter()
+                .filter_map(|s| qs.act_scale.get(&s.matmul).map(|&v| (s.name.as_str(), v)))
+                .collect(),
+            None => HashMap::new(),
+        };
+        for e in &mut self.batched {
+            let mut q = e.compiled.quantize_weights(weights);
+            for site in &e.compiled.quant_sites {
+                if let Some(&scale) = by_name.get(site.name.as_str()) {
+                    q.act_scale.insert(site.matmul, scale);
+                }
+            }
+            e.quant = Some(q);
+        }
     }
 
     /// Warmup calibration: run the fp32 reference on `prompt_feeds`
@@ -263,6 +377,17 @@ impl Decoder {
         for site in &self.step.quant_sites {
             if let Some(&scale) = by_name.get(site.name.as_str()) {
                 qs.act_scale.insert(site.matmul, scale);
+            }
+        }
+        // Same propagation into every batched ladder rung: a batched row
+        // is the same activation distribution as the batch-1 row, so the
+        // batch-1 static scale is the right (and bitwise-matching) one.
+        for e in &mut self.batched {
+            let q = e.quant.as_mut().expect("quantize() builds the ladder tables");
+            for site in &e.compiled.quant_sites {
+                if let Some(&scale) = by_name.get(site.name.as_str()) {
+                    q.act_scale.insert(site.matmul, scale);
+                }
             }
         }
         Ok(by_name.len())
@@ -318,24 +443,29 @@ impl Decoder {
             .map(|(_, stats)| stats)
     }
 
-    /// Start a KV-cached generation session (checks a cache slab out of
-    /// the pool; [`DecodeSession::finish`] returns it).
-    pub fn begin<'a>(
+    /// Start a KV-cached generation session (checks the session's KV
+    /// pages out of the shared pool; [`DecodeSession::finish`] returns
+    /// them). On a *capped* pool, admission past capacity is the typed
+    /// [`DecodeError::PagePoolExhausted`].
+    pub fn try_begin<'a>(
         &'a self,
         weights: &'a HashMap<String, Vec<f32>>,
         threads: usize,
-    ) -> DecodeSession<'a> {
-        let (s, v, h) = (self.cfg.seq, self.cfg.vocab, self.cfg.head_dim());
-        let aws: Vec<usize> = self.dims.iter().map(|d| d.heads * h).collect();
-        let cache = KvCache::new(s, aws, &self.pool);
+    ) -> Result<DecodeSession<'a>, DecodeError> {
+        let (s, v) = (self.cfg.seq, self.cfg.vocab);
+        let cache = self.new_cache().map_err(|stats| {
+            DecodeError::PagePoolExhausted {
+                in_use: stats.in_use,
+                capacity: stats.capacity.unwrap_or(stats.in_use),
+            }
+        })?;
         let staging = vec![0.0f32; cache.row_elems()];
         let mut request = HashMap::new();
         request.insert("step_ids".to_string(), vec![0.0f32]);
         request.insert("step_pos".to_string(), vec![0.0f32]);
         request.insert("step_mask".to_string(), vec![NEG_MASK; s]);
-        request.insert("step_onehot".to_string(), vec![0.0f32; s]);
         request.insert("input_ids".to_string(), vec![0.0f32; s]);
-        DecodeSession {
+        Ok(DecodeSession {
             dec: self,
             weights,
             threads,
@@ -347,7 +477,95 @@ impl Decoder {
             last_stats: None,
             time_phases: false,
             phases: DecodePhases::default(),
+        })
+    }
+
+    /// As [`Decoder::try_begin`] on an uncapped pool, where admission
+    /// cannot fail (the historical infallible entry point; the batching
+    /// scheduler uses `try_begin` against a capped pool).
+    pub fn begin<'a>(
+        &'a self,
+        weights: &'a HashMap<String, Vec<f32>>,
+        threads: usize,
+    ) -> DecodeSession<'a> {
+        self.try_begin(weights, threads)
+            .expect("uncapped page pool cannot exhaust")
+    }
+
+    /// Cap (or uncap) the shared KV page pool. Pages already checked out
+    /// stay valid; only future admissions observe the new cap.
+    pub fn cap_pages(&mut self, max_pages: Option<usize>) {
+        self.pool.set_capacity(max_pages);
+    }
+
+    /// Page-pool occupancy snapshot (allocated / in-use / peak / cap).
+    pub fn page_pool_stats(&self) -> PagePoolStats {
+        self.pool.stats()
+    }
+
+    /// Shared access to the KV page pool (the batching scheduler admits
+    /// sessions against it).
+    pub(crate) fn page_pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    /// Check a fresh session cache (one `[seq, aw_l]` K and V region per
+    /// layer) out of the shared page pool — the building block external
+    /// schedulers pair with [`Decoder::prefill_into`] and
+    /// [`BatchStepper`](crate::decode::batch::BatchStepper). On a capped
+    /// pool, `Err` carries the snapshot that refused the checkout.
+    /// Return the pages with [`Decoder::release_cache`].
+    pub fn new_cache(&self) -> Result<KvCache, PagePoolStats> {
+        let h = self.cfg.head_dim();
+        let aws: Vec<usize> = self.dims.iter().map(|d| d.heads * h).collect();
+        KvCache::new(self.cfg.seq, aws, &self.pool)
+    }
+
+    /// Return a session cache's pages to the shared pool (no copying —
+    /// the pages themselves are recycled).
+    pub fn release_cache(&self, cache: KvCache) {
+        cache.into_pool(&self.pool);
+    }
+
+    /// Prefill `ids` into a caller-owned `cache` — the continuous
+    /// batching admission path: a new session prefills batch-1 here,
+    /// then joins the batched step graph (`BatchStepper`). Writes the
+    /// full `[s, vocab]` logits into `logits` (so the caller can sample
+    /// the first generated token from the last prompt row) and leaves
+    /// the cache filled to the prompt length.
+    pub fn prefill_into(
+        &self,
+        ids: &[i32],
+        cache: &mut KvCache,
+        logits: &mut [f32],
+        weights: &HashMap<String, Vec<f32>>,
+        threads: usize,
+    ) -> Result<usize, DecodeError> {
+        let (s, v) = (self.cfg.seq, self.cfg.vocab);
+        if ids.is_empty() {
+            return Err(DecodeError::EmptyPrompt);
         }
+        if ids.len() > s {
+            return Err(DecodeError::PromptTooLong { len: ids.len(), seq: s });
+        }
+        let mut padded = vec![0.0f32; s];
+        for (i, x) in padded.iter_mut().enumerate() {
+            *x = ids.get(i).copied().unwrap_or(0) as f32;
+        }
+        let mut request: HashMap<String, Vec<f32>> = HashMap::with_capacity(1);
+        request.insert("input_ids".to_string(), padded);
+        let slices = self.mask_slices();
+        let mut sinks: Vec<OutputSink> = Vec::with_capacity(1 + 2 * cache.layers());
+        sinks.push(OutputSink::Into(&mut logits[..s * v]));
+        for region in cache.cache_sinks() {
+            sinks.push(OutputSink::Into(region));
+        }
+        let feeds = Feeds::layered_slices(&request, &slices, weights);
+        self.prefill
+            .run_parallel_sinks(&feeds, threads, self.quant_prefill.as_ref(), &mut sinks)?;
+        drop(sinks);
+        cache.len = ids.len();
+        Ok(ids.len())
     }
 
     /// Borrowed-slice feed layer holding the static causal mask.
@@ -357,9 +575,10 @@ impl Decoder {
         m
     }
 
-    /// Slabs currently parked in the KV pool (observability).
+    /// Whole KV caches' worth of pages currently parked free in the pool
+    /// (observability; one cache = 2 pages per layer).
     pub fn pooled_caches(&self) -> usize {
-        self.pool.len()
+        self.pool.free_pages() / (2 * self.dims.len())
     }
 }
 
@@ -535,9 +754,6 @@ impl DecodeSession<'_> {
         self.request.get_mut("step_ids").expect("session request map")[0] = token as f32;
         self.request.get_mut("step_pos").expect("session request map")[0] = p as f32;
         step_mask_feed(p, self.request.get_mut("step_mask").expect("session request map"));
-        let onehot = self.request.get_mut("step_onehot").expect("session request map");
-        onehot.fill(0.0);
-        onehot[p] = 1.0;
 
         {
             let slices = self.cache.feed_slices();
@@ -579,6 +795,19 @@ impl DecodeSession<'_> {
     /// Next position to decode (== tokens currently in the cache).
     pub fn position(&self) -> usize {
         self.pos
+    }
+
+    /// Rewind the session to `position`: subsequent steps re-decode from
+    /// there over the same pages (a cheap O(1) rollback — see
+    /// [`KvCache::truncate_to`]; no pages move, no data is copied).
+    /// Positions at or past the current one are a no-op. This is the
+    /// primitive a speculative accept/reject loop needs: on a rejected
+    /// draft, roll back to the last accepted position and re-step.
+    /// Rolling back to 0 discards the prefill — the next call must be a
+    /// fresh [`DecodeSession::prefill`], not a step.
+    pub fn rollback_to(&mut self, position: usize) {
+        self.pos = self.pos.min(position);
+        self.cache.truncate_to(self.pos);
     }
 
     /// Executor stats of the most recent prefill/step (per-token work is

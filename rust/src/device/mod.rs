@@ -116,7 +116,13 @@ pub fn node_flops(g: &Graph, id: NodeId) -> f64 {
             let k = a.dims[a.rank() - 1] as f64;
             2.0 * k * n.shape.numel() as f64
         }
-        Op::Transpose | Op::Reshape { .. } | Op::Gather => 0.0,
+        Op::Transpose
+        | Op::Reshape { .. }
+        | Op::Gather
+        | Op::SliceRows { .. }
+        | Op::ConcatRows
+        | Op::ScatterCols { .. }
+        | Op::GatherCols => 0.0,
         op if op.is_leaf() => 0.0,
         Op::Exp | Op::Erf | Op::Tanh | Op::Rsqrt => 4.0 * n.shape.numel() as f64,
         Op::ReduceSum { .. } | Op::ReduceMax { .. } => {

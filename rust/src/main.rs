@@ -27,8 +27,8 @@ use canao::model::{build_encoder, build_encoder_with, BertConfig, LayerDims};
 use canao::nas::{Search, SearchConfig};
 use canao::runtime::Runtime;
 use canao::serving::{
-    run_gen_load, run_qa_load, write_bench_json, GenEngine, GenRequest, LoadConfig,
-    NativeGenEngine, NativeQaEngine, QaEngine, QaRequest,
+    run_gen_load, run_gen_load_batched, run_qa_load, write_bench_json, GenBatcherOptions,
+    GenEngine, GenRequest, LoadConfig, NativeGenEngine, NativeQaEngine, QaEngine, QaRequest,
 };
 use canao::tokenizer::{Tokenizer, Vocab};
 use canao::util::cli::Args;
@@ -92,7 +92,8 @@ fn print_help() {
          \x20 serve-qa   QA demo               [--question S --context S]\n\
          \x20 serve-gen  text generation demo  [--prompt S --tokens N --temp F --full-reseq]\n\
          \x20 serve-load sustained-load run    [--qps F --duration-ms N --queue-cap N\n\
-         \x20                                   --threads N --tokens N --seed N --out PATH]\n\
+         \x20                                   --threads N --tokens N --seed N --slots N\n\
+         \x20                                   --out PATH]\n\
          \x20 finetune   e2e training loop     [--steps N --lr F]\n"
     );
 }
@@ -369,11 +370,14 @@ fn cmd_serve_gen(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Open-loop sustained load against both native engines: Poisson
+/// Open-loop sustained load against the native engines: Poisson
 /// arrivals at `--qps`, bounded-queue admission, p50/p95/p99 TTFT and
-/// ms/token plus throughput-at-saturation. `--out PATH` additionally
-/// writes the machine-readable report (the `BENCH_serving.json` CI
-/// publishes comes from the `serving_load` bench, same format).
+/// ms/token plus throughput-at-saturation. Generation runs twice — the
+/// sequential batch-1 engine and the continuous-batching scheduler with
+/// `--slots` concurrent sessions (occupancy + KV page-pool stats in the
+/// report). `--out PATH` additionally writes the machine-readable
+/// report (the `BENCH_serving.json` CI publishes comes from the
+/// `serving_load` bench, same format).
 fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
     let cfg = LoadConfig {
         qps: args.f64_or("qps", 32.0),
@@ -403,10 +407,14 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
     let qa = run_qa_load(NativeQaEngine::demo(Arc::clone(&tok), cfg.threads), &qa_reqs, &cfg);
     print!("{}", qa.render());
     let prompts = ["the model", "the quick brown fox", "the runtime loads"];
-    let gen = run_gen_load(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg);
+    let gen = run_gen_load(NativeGenEngine::demo(Arc::clone(&tok), cfg.threads), &prompts, &cfg);
     print!("{}", gen.render());
+    let slots = args.usize_or("slots", 4);
+    let opts = GenBatcherOptions { max_slots: slots, max_kv_pages: None };
+    let batched = run_gen_load_batched(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg, opts);
+    print!("{}", batched.render());
     if let Some(out) = args.get("out") {
-        write_bench_json(out, &cfg, &[qa, gen])?;
+        write_bench_json(out, &cfg, &[qa, gen, batched])?;
         println!("[load] wrote {out}");
     }
     Ok(())

@@ -343,19 +343,66 @@ pub fn build_causal_lm(cfg: &BertConfig) -> Graph {
     build_causal_lm_with(cfg, &vec![LayerDims::of(cfg); cfg.layers], false)
 }
 
-/// One KV-cached decode-step layer: a single query position attends over
-/// the layer's cache feeds plus itself. Inputs created here per layer:
-/// `layer{l}/k_cache` and `layer{l}/v_cache`, both `[s, aw]`
-/// position-major (row `j` = position `j`'s K/V projection).
+/// The single-query attention body shared by the batch-1 and batched
+/// decode-step graphs: one `[1, aw]` Q/K/V row set attends over `[s, aw]`
+/// cache feeds named `{cache_prefix}layer{l}/k_cache` / `v_cache`
+/// (position-major; row `j` = position `j`'s K/V projection).
 ///
 /// The self-attention trick: the cache CANNOT contain the current
 /// position's K/V row (it is being computed in this very graph), so the
-/// caller zeroes cache row `p` and the graph splices the fresh row in
-/// arithmetically — `combined = q·K_cache^T + onehot_p * (q·k_new^T)`
-/// (row `p` contributes `q·0 = 0` from the cache side) and
-/// `ctx = probs·V_cache + probs[p] * v_new`. Both splices add exact
-/// zeros elsewhere, which keeps the step bitwise equal to the
-/// full-resequence row (`tests/decode_differential.rs`).
+/// caller zeroes cache row `p` and the graph splices the fresh row in —
+/// `combined = q·K_cache^T + scatter_p(q·k_new^T)` (row `p` contributes
+/// `q·0 = 0` from the cache side) and
+/// `ctx = probs·V_cache + gather_p(probs) * v_new`. The scatter fills
+/// exact `+0.0` off `p`, and the downstream mask-add normalizes any
+/// sign-of-zero difference, which keeps the step bitwise equal to the
+/// full-resequence row (`tests/decode_differential.rs`). `pos` is a `[1]`
+/// I32 node holding `p`; `step_mask` is `[s]` (or `[1, s]`, same
+/// broadcast) — 0 for keys `<= p`, `NEG_MASK` beyond.
+#[allow(clippy::too_many_arguments)]
+fn step_attention(
+    g: &mut Graph,
+    cfg: &BertConfig,
+    l: usize,
+    d: LayerDims,
+    q_row: NodeId,
+    k_row: NodeId,
+    v_row: NodeId,
+    step_mask: NodeId,
+    pos: NodeId,
+    cache_prefix: &str,
+) -> NodeId {
+    let (s, a) = (cfg.seq, d.heads);
+    let dh = cfg.head_dim();
+    let aw = a * dh;
+    let p = format!("{cache_prefix}layer{l}");
+
+    let qh = split_heads(g, q_row, a, dh, 1); // [a, 1, dh]
+    let kt_new = split_heads_t(g, k_row, a, dh, 1); // [a, dh, 1]
+    let self_s = g.matmul(qh, kt_new); // [a, 1, 1]
+
+    let k_cache = g.input(&format!("{p}/k_cache"), &[s, aw], DType::F32);
+    let kt_c = split_heads_t(g, k_cache, a, dh, s); // [a, dh, s]
+    let scores_c = g.matmul(qh, kt_c); // [a, 1, s]
+    let placed = g.add_op(Op::ScatterCols { cols: s }, &[self_s, pos]); // [a, 1, s]
+    let combined = g.add(scores_c, placed);
+    let scale = g.constant(1.0 / (dh as f32).sqrt());
+    let scaled = g.mul(combined, scale);
+    let masked = g.add(scaled, step_mask); // broadcast over keys
+    let probs = g.softmax(masked, 2); // [a, 1, s]
+
+    let v_cache = g.input(&format!("{p}/v_cache"), &[s, aw], DType::F32);
+    let vh_c = split_heads(g, v_cache, a, dh, s); // [a, s, dh]
+    let ctx_c = g.matmul(probs, vh_c); // [a, 1, dh]
+    let probs_p = g.add_op(Op::GatherCols, &[probs, pos]); // [a, 1, 1]
+    let vh_new = split_heads(g, v_row, a, dh, 1); // [a, 1, dh]
+    let self_ctx = g.mul(probs_p, vh_new);
+    let ctx = g.add(ctx_c, self_ctx);
+    merge_heads(g, ctx, aw, 1) // [1, aw]
+}
+
+/// One KV-cached decode-step layer: projections + [`step_attention`] +
+/// the shared [`layer_tail`].
 fn step_layer(
     g: &mut Graph,
     cfg: &BertConfig,
@@ -363,50 +410,25 @@ fn step_layer(
     l: usize,
     d: LayerDims,
     step_mask: NodeId,
-    onehot: NodeId,
+    pos: NodeId,
 ) -> (NodeId, NodeId, NodeId) {
-    let (s, h, a) = (cfg.seq, cfg.hidden, d.heads);
-    let dh = cfg.head_dim();
-    let aw = a * dh;
+    let (h, a) = (cfg.hidden, d.heads);
+    let aw = a * cfg.head_dim();
     let p = format!("layer{l}");
 
     let q = proj(g, x, &format!("{p}/wq"), &format!("{p}/bq"), h, aw);
     let k_new = proj(g, x, &format!("{p}/wk"), &format!("{p}/bk"), h, aw);
     let v_new = proj(g, x, &format!("{p}/wv"), &format!("{p}/bv"), h, aw);
-
-    let qh = split_heads(g, q, a, dh, 1); // [a, 1, dh]
-    let kt_new = split_heads_t(g, k_new, a, dh, 1); // [a, dh, 1]
-    let self_s = g.matmul(qh, kt_new); // [a, 1, 1]
-
-    let k_cache = g.input(&format!("{p}/k_cache"), &[s, aw], DType::F32);
-    let kt_c = split_heads_t(g, k_cache, a, dh, s); // [a, dh, s]
-    let scores_c = g.matmul(qh, kt_c); // [a, 1, s]
-    let placed = g.mul(onehot, self_s); // [a, 1, s]: self score at row p
-    let combined = g.add(scores_c, placed);
-    let scale = g.constant(1.0 / (dh as f32).sqrt());
-    let scaled = g.mul(combined, scale);
-    let masked = g.add(scaled, step_mask); // [s] broadcast over keys
-    let probs = g.softmax(masked, 2); // [a, 1, s]
-
-    let v_cache = g.input(&format!("{p}/v_cache"), &[s, aw], DType::F32);
-    let vh_c = split_heads(g, v_cache, a, dh, s); // [a, s, dh]
-    let ctx_c = g.matmul(probs, vh_c); // [a, 1, dh]
-    let sel = g.mul(probs, onehot); // zero everywhere but p
-    let probs_p = g.add_op(Op::ReduceSum { axis: 2 }, &[sel]); // [a, 1, 1]
-    let vh_new = split_heads(g, v_new, a, dh, 1); // [a, 1, dh]
-    let self_ctx = g.mul(probs_p, vh_new);
-    let ctx = g.add(ctx_c, self_ctx);
-    let merged = merge_heads(g, ctx, aw, 1); // [1, aw]
-
+    let merged = step_attention(g, cfg, l, d, q, k_new, v_new, step_mask, pos, "");
     (layer_tail(g, cfg, x, merged, l, d), k_new, v_new)
 }
 
 /// The KV-cached decode *step* graph: one query position through the
 /// whole causal LM, attending over per-layer cache feeds. Inputs:
-/// `step_ids [1]` (the token at position p), `step_pos [1]` (p, indexes
-/// the position-embedding table), `step_mask [s]` (0 for keys `<= p`,
-/// `NEG_MASK` beyond), `step_onehot [s]` (1 at p), and per layer the
-/// `[s, aw]` `k_cache`/`v_cache` feeds. Output 0 is the `[1, vocab]`
+/// `step_ids [1]` (the token at position p), `step_pos [1]` (p — indexes
+/// the position-embedding table AND drives the scatter/gather splice),
+/// `step_mask [s]` (0 for keys `<= p`, `NEG_MASK` beyond), and per layer
+/// the `[s, aw]` `k_cache`/`v_cache` feeds. Output 0 is the `[1, vocab]`
 /// logits row; outputs `1 + 2l` / `2 + 2l` are layer `l`'s fresh K / V
 /// rows (`[1, aw_l]`) to append to the cache at position p.
 ///
@@ -430,10 +452,9 @@ pub fn build_decode_step_with(cfg: &BertConfig, dims: &[LayerDims]) -> Graph {
     let mut x = g.layernorm(emb, ln_g, ln_b, 1e-12);
 
     let step_mask = g.input("step_mask", &[cfg.seq], DType::F32);
-    let onehot = g.input("step_onehot", &[cfg.seq], DType::F32);
     let mut rows = Vec::new();
     for (l, d) in dims.iter().enumerate() {
-        let (nx, k, v) = step_layer(&mut g, cfg, x, l, *d, step_mask, onehot);
+        let (nx, k, v) = step_layer(&mut g, cfg, x, l, *d, step_mask, pos_ids);
         x = nx;
         rows.push((k, v));
     }
@@ -451,6 +472,92 @@ pub fn build_decode_step_with(cfg: &BertConfig, dims: &[LayerDims]) -> Graph {
 /// Dense decode-step graph at the config's full dims.
 pub fn build_decode_step(cfg: &BertConfig) -> Graph {
     build_decode_step_with(cfg, &vec![LayerDims::of(cfg); cfg.layers])
+}
+
+/// The continuous-batching decode-step graph: `b` independent sessions
+/// advance one position each in a single dispatch. Inputs: `step_ids
+/// [b]`, `step_pos [b]` (I32), `step_mask [b, s]` (one mask row per
+/// slot), and per slot `i` / layer `l` the `[s, aw_l]` cache feeds
+/// `slot{i}/layer{l}/k_cache` / `v_cache` — b *independent* caches, so
+/// attention is block-diagonal by construction: slot `i`'s query row can
+/// only ever read slot `i`'s cache tensors. Output 0 is the `[b, vocab]`
+/// logits; outputs `1 + 2l` / `2 + 2l` are layer `l`'s fresh K / V rows
+/// (`[b, aw_l]`, row `i` belongs to slot `i`'s cache).
+///
+/// Structure per layer: the Q/K/V projections, output projection, and
+/// FFN run *batched* (`[b, n]` matmuls — which row-split across threads
+/// where the batch-1 `[1, n]` shapes could not, and hit the same fused
+/// int8/fp32 kernels); only the tiny attention core runs per slot, via
+/// `SliceRows` peel / [`step_attention`] / `ConcatRows` rejoin. Every
+/// batched op is row-independent (per-row matmul dots, per-row dynamic
+/// int8 scales, row-local layernorm/softmax), so slot `i`'s lane is
+/// bitwise identical to a batch-1 step with the same feeds — the
+/// batched extension of the decode contract
+/// (`tests/decode_differential.rs`).
+pub fn build_decode_step_batched(cfg: &BertConfig, dims: &[LayerDims], b: usize) -> Graph {
+    assert!(b >= 1, "batched step needs at least one slot");
+    assert_eq!(dims.len(), cfg.layers, "one LayerDims per layer");
+    let mut g = Graph::new();
+    let h = cfg.hidden;
+
+    let tok_table = g.weight("embed/token", &[cfg.vocab, h]);
+    let ids = g.input("step_ids", &[b], DType::I32);
+    let tok = g.add_op(Op::Gather, &[tok_table, ids]); // [b, h]
+    let pos_table = g.weight("embed/position", &[cfg.seq, h]);
+    let pos_ids = g.input("step_pos", &[b], DType::I32);
+    let pos = g.add_op(Op::Gather, &[pos_table, pos_ids]); // [b, h]
+    let emb = g.add(tok, pos);
+    let ln_g = g.weight("embed/ln_gamma", &[h]);
+    let ln_b = g.weight("embed/ln_beta", &[h]);
+    let mut x = g.layernorm(emb, ln_g, ln_b, 1e-12);
+
+    let step_mask = g.input("step_mask", &[b, cfg.seq], DType::F32);
+    let slot_pos: Vec<NodeId> = (0..b)
+        .map(|i| g.add_op(Op::SliceRows { start: i, len: 1 }, &[pos_ids]))
+        .collect();
+    let slot_mask: Vec<NodeId> = (0..b)
+        .map(|i| g.add_op(Op::SliceRows { start: i, len: 1 }, &[step_mask]))
+        .collect();
+
+    let mut rows = Vec::new();
+    for (l, d) in dims.iter().enumerate() {
+        let p = format!("layer{l}");
+        let aw = d.heads * cfg.head_dim();
+        let q_all = proj(&mut g, x, &format!("{p}/wq"), &format!("{p}/bq"), h, aw);
+        let k_all = proj(&mut g, x, &format!("{p}/wk"), &format!("{p}/bk"), h, aw);
+        let v_all = proj(&mut g, x, &format!("{p}/wv"), &format!("{p}/bv"), h, aw);
+
+        let mut merged_slots = Vec::with_capacity(b);
+        for i in 0..b {
+            let qi = g.add_op(Op::SliceRows { start: i, len: 1 }, &[q_all]);
+            let ki = g.add_op(Op::SliceRows { start: i, len: 1 }, &[k_all]);
+            let vi = g.add_op(Op::SliceRows { start: i, len: 1 }, &[v_all]);
+            merged_slots.push(step_attention(
+                &mut g,
+                cfg,
+                l,
+                *d,
+                qi,
+                ki,
+                vi,
+                slot_mask[i],
+                slot_pos[i],
+                &format!("slot{i}/"),
+            ));
+        }
+        let merged = g.add_op(Op::ConcatRows, &merged_slots); // [b, aw]
+        x = layer_tail(&mut g, cfg, x, merged, l, *d);
+        rows.push((k_all, v_all));
+    }
+
+    let w_head = g.weight("lm/w_head", &[h, cfg.vocab]);
+    let logits = g.matmul(x, w_head); // [b, vocab]
+    g.mark_output(logits);
+    for (k, v) in rows {
+        g.mark_output(k);
+        g.mark_output(v);
+    }
+    g
 }
 
 #[cfg(test)]
@@ -589,6 +696,37 @@ mod tests {
         assert_eq!(step.outputs.len(), 1 + 2 * cfg.layers);
         assert_eq!(step.nodes[step.outputs[0]].shape.dims, vec![1, 32]);
         assert_eq!(step.nodes[step.outputs[1]].shape.dims, vec![1, 4]);
+    }
+
+    #[test]
+    fn batched_step_graph_shapes_and_slot_feeds() {
+        let cfg = BertConfig { vocab: 32, seq: 4, layers: 2, hidden: 8, heads: 2, inter: 8 };
+        let dims = [LayerDims { heads: 1, inter: 6 }; 2];
+        let b = 3;
+        let g = build_decode_step_batched(&cfg, &dims, b);
+        assert_eq!(g.outputs.len(), 1 + 2 * cfg.layers);
+        assert_eq!(g.nodes[g.outputs[0]].shape.dims, vec![b, 32]);
+        // Pruned attention width = 1 head x head_dim 4, one row per slot.
+        assert_eq!(g.nodes[g.outputs[1]].shape.dims, vec![b, 4]);
+        // Every slot has its own cache inputs for every layer.
+        let input_names: Vec<&str> = g
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Input { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect();
+        for i in 0..b {
+            for l in 0..cfg.layers {
+                assert!(input_names.contains(&format!("slot{i}/layer{l}/k_cache").as_str()));
+                assert!(input_names.contains(&format!("slot{i}/layer{l}/v_cache").as_str()));
+            }
+        }
+        assert!(input_names.contains(&"step_mask"));
+        // Batched graph compiles through the standard pipeline.
+        let c = compile(&g, &CompileOptions { model_only_tuning: true, ..Default::default() });
+        assert!(c.plan.num_blocks() > 0);
     }
 
     #[test]

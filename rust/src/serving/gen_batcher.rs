@@ -1,0 +1,526 @@
+//! Continuous-batching session scheduler for text generation.
+//!
+//! The plain [`super::batcher::Batcher`] serves generation as singles:
+//! one long-running request occupies the worker until it finishes. This
+//! scheduler instead runs up to [`GenBatcherOptions::max_slots`]
+//! generations *concurrently* through ONE batched step forward per wave
+//! ([`crate::decode::BatchStepper`]):
+//!
+//! * **Admission is per-session and mid-flight.** A new prompt joins as
+//!   soon as a batch slot is free — it prefills batch-1 (the prefill
+//!   graph is whole-sequence anyway), then enters the step wave next to
+//!   sessions that are already generating. Admission past slot capacity
+//!   rejects immediately with [`GenBatcherError::SlotsFull`]; a capped
+//!   KV page pool that cannot seat the new session rejects it with
+//!   [`GenBatcherError::PagePoolExhausted`] — failing only *that*
+//!   session, never the sessions already holding pages.
+//! * **Retirement never stalls the wave.** A session that reaches its
+//!   token budget or the sequence cap replies and frees its slot + pages
+//!   at the end of the wave; remaining sessions keep stepping. Dropped
+//!   reply receivers are ignored (`send` errors discarded), so an
+//!   impatient caller cannot wedge the loop.
+//! * **Sampling is bitwise-identical to batch-1 serving.** The scheduler
+//!   replicates [`super::textgen::decode_loop`]'s control flow (same
+//!   prompt encoding, same per-session seeded RNG, same stop conditions)
+//!   and the batched step graph is row-bitwise-equal to the batch-1 step
+//!   graph, so a request generates exactly the text
+//!   [`NativeGenEngine::generate`] would have produced.
+//!
+//! Per-wave occupancy, active-session count, and KV page-pool
+//! utilization land in [`GenBatcherMetrics`] (lock-free, fixed memory),
+//! feeding `BENCH_serving.json` schema 3.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::{Counter, Gauge, StreamingHistogram};
+use super::textgen::{encode_prompt, GenRequest, GenResponse, NativeGenEngine};
+use crate::decode::{BatchSlot, BatchStepper, DecodeError, KvCache, PagePoolStats};
+use crate::util::rng::Rng;
+
+/// Typed continuous-batching failure — what a generation caller gets
+/// instead of a hang or a propagated panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GenBatcherError {
+    /// Admission control: every batch slot is taken (active sessions plus
+    /// admissions already queued). Retry later or shed the request.
+    SlotsFull { slots: usize },
+    /// The capped KV page pool could not seat this session's cache.
+    PagePoolExhausted { in_use: usize, capacity: usize },
+    /// The worker thread is no longer running (engine panicked earlier,
+    /// or the scheduler shut down).
+    WorkerGone,
+    /// The engine panicked while this session was in flight.
+    ModelPanicked,
+    /// The decode subsystem rejected this session's work.
+    Decode(DecodeError),
+}
+
+impl std::fmt::Display for GenBatcherError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GenBatcherError::SlotsFull { slots } => {
+                write!(f, "all {slots} generation slots are taken")
+            }
+            GenBatcherError::PagePoolExhausted { in_use, capacity } => {
+                write!(f, "KV page pool exhausted: {in_use}/{capacity} pages in use")
+            }
+            GenBatcherError::WorkerGone => write!(f, "generation scheduler worker is gone"),
+            GenBatcherError::ModelPanicked => write!(f, "engine panicked while generating"),
+            GenBatcherError::Decode(e) => write!(f, "decode: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for GenBatcherError {}
+
+impl From<DecodeError> for GenBatcherError {
+    fn from(e: DecodeError) -> Self {
+        match e {
+            DecodeError::PagePoolExhausted { in_use, capacity } => {
+                GenBatcherError::PagePoolExhausted { in_use, capacity }
+            }
+            other => GenBatcherError::Decode(other),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenBatcherOptions {
+    /// Concurrent generation sessions (the batched step ladder compiles
+    /// up to the next power of two of this).
+    pub max_slots: usize,
+    /// Cap on the engine's shared KV page pool (`None` = unbounded).
+    /// With `2·layers` pages per session, a cap below
+    /// `max_slots · 2 · layers` exercises per-session admission failure.
+    pub max_kv_pages: Option<usize>,
+}
+
+impl Default for GenBatcherOptions {
+    fn default() -> Self {
+        GenBatcherOptions { max_slots: 4, max_kv_pages: None }
+    }
+}
+
+/// Lock-free KV page-pool snapshot, refreshed by the worker once per
+/// wave (plain atomic stores — no lock on either side).
+#[derive(Debug, Default)]
+pub struct PoolStatsCell {
+    allocated: AtomicU64,
+    in_use: AtomicU64,
+    peak_in_use: AtomicU64,
+    /// `u64::MAX` encodes an unbounded pool.
+    capacity: AtomicU64,
+}
+
+impl PoolStatsCell {
+    fn store(&self, s: PagePoolStats) {
+        self.allocated.store(s.allocated as u64, Ordering::Relaxed);
+        self.in_use.store(s.in_use as u64, Ordering::Relaxed);
+        self.peak_in_use.store(s.peak_in_use as u64, Ordering::Relaxed);
+        self.capacity.store(s.capacity.map_or(u64::MAX, |c| c as u64), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> PagePoolStats {
+        let cap = self.capacity.load(Ordering::Relaxed);
+        PagePoolStats {
+            allocated: self.allocated.load(Ordering::Relaxed) as usize,
+            in_use: self.in_use.load(Ordering::Relaxed) as usize,
+            peak_in_use: self.peak_in_use.load(Ordering::Relaxed) as usize,
+            capacity: (cap != u64::MAX).then_some(cap as usize),
+        }
+    }
+}
+
+/// Lock-free scheduler metrics (see `serving::metrics`).
+#[derive(Debug, Default)]
+pub struct GenBatcherMetrics {
+    /// Sessions admitted (handed to the worker).
+    pub requests: Counter,
+    /// Sessions that replied `Ok`.
+    pub completed: Counter,
+    /// Sessions that replied with a typed error.
+    pub failed: Counter,
+    /// Admissions refused with [`GenBatcherError::SlotsFull`].
+    pub rejected: Counter,
+    /// Batched step waves dispatched.
+    pub steps: Counter,
+    /// Active sessions per wave (values are counts, not µs).
+    pub batch_occupancy: StreamingHistogram,
+    /// Sessions currently holding a slot (+ peak).
+    pub active_sessions: Gauge,
+    /// KV page-pool utilization, refreshed per wave.
+    pub kv_pages: PoolStatsCell,
+}
+
+impl GenBatcherMetrics {
+    /// Mean active sessions per wave — the continuous-batching win in
+    /// one number (1.0 = no better than serial).
+    pub fn mean_occupancy(&self) -> f64 {
+        self.batch_occupancy.mean_value()
+    }
+
+    /// Largest wave occupancy observed.
+    pub fn peak_occupancy(&self) -> u64 {
+        self.batch_occupancy.max_value()
+    }
+}
+
+struct Admission {
+    req: GenRequest,
+    reply: Sender<Result<GenResponse, GenBatcherError>>,
+}
+
+/// One in-flight generation inside the worker: its paged cache, token
+/// prefix, seeded sampler, and reply channel.
+struct GenSession {
+    cache: KvCache,
+    ids: Vec<i32>,
+    generated: usize,
+    max_new_tokens: usize,
+    temperature: f32,
+    rng: Rng,
+    per_token_ms: Vec<f64>,
+    reply: Sender<Result<GenResponse, GenBatcherError>>,
+}
+
+/// Continuous-batching generation front end: owns the engine's worker
+/// thread; callers submit [`GenRequest`]s and receive per-session reply
+/// channels. See the module docs for the scheduling contract.
+pub struct GenBatcher {
+    tx: SyncSender<Admission>,
+    pub metrics: Arc<GenBatcherMetrics>,
+    reserved: Arc<AtomicUsize>,
+    max_slots: usize,
+    alive: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GenBatcher {
+    /// Take ownership of `engine`, enable its batched step ladder and
+    /// (optional) KV page cap, and start the scheduler worker.
+    pub fn new(mut engine: NativeGenEngine, opts: GenBatcherOptions) -> GenBatcher {
+        let max_slots = opts.max_slots.max(1);
+        engine.enable_batched(max_slots);
+        engine.cap_kv_pages(opts.max_kv_pages);
+        let (tx, rx) = sync_channel::<Admission>(max_slots);
+        let metrics = Arc::new(GenBatcherMetrics::default());
+        let reserved = Arc::new(AtomicUsize::new(0));
+        let alive = Arc::new(AtomicBool::new(true));
+        let (m2, r2, a2) = (Arc::clone(&metrics), Arc::clone(&reserved), Arc::clone(&alive));
+        let worker = std::thread::Builder::new()
+            .name("canao-gen-batcher".into())
+            .spawn(move || worker_loop(rx, engine, max_slots, m2, r2, a2))
+            .expect("spawn gen batcher");
+        GenBatcher { tx, metrics, reserved, max_slots, alive, worker: Some(worker) }
+    }
+
+    /// Admit a generation session; the returned receiver yields the
+    /// response (or a typed error). `Err` here means the session was
+    /// never admitted — every slot taken, or the worker dead.
+    pub fn submit(
+        &self,
+        req: GenRequest,
+    ) -> Result<Receiver<Result<GenResponse, GenBatcherError>>, GenBatcherError> {
+        if !self.alive.load(Ordering::Acquire) {
+            return Err(GenBatcherError::WorkerGone);
+        }
+        // Reserve a slot up front: `reserved` counts queued admissions
+        // plus active sessions, so a successful reservation guarantees
+        // the worker has (or will have) a free slot for this session and
+        // the bounded channel below can never be full.
+        if self
+            .reserved
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.max_slots).then_some(n + 1)
+            })
+            .is_err()
+        {
+            self.metrics.rejected.inc();
+            return Err(GenBatcherError::SlotsFull { slots: self.max_slots });
+        }
+        let (reply, rx) = channel();
+        match self.tx.try_send(Admission { req, reply }) {
+            Ok(()) => {
+                self.metrics.requests.inc();
+                Ok(rx)
+            }
+            Err(_) => {
+                self.reserved.fetch_sub(1, Ordering::AcqRel);
+                Err(GenBatcherError::WorkerGone)
+            }
+        }
+    }
+
+    /// Convenience: submit and wait. A worker that dies without replying
+    /// reads as `WorkerGone`.
+    pub fn call(&self, req: GenRequest) -> Result<GenResponse, GenBatcherError> {
+        match self.submit(req)?.recv() {
+            Ok(result) => result,
+            Err(_) => Err(GenBatcherError::WorkerGone),
+        }
+    }
+
+    /// Sessions a fresh `submit` would have to share slots with.
+    pub fn slots_in_use(&self) -> usize {
+        self.reserved.load(Ordering::Acquire)
+    }
+
+    /// Stop admitting, let in-flight sessions run to completion, and
+    /// join the worker.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for GenBatcher {
+    fn drop(&mut self) {
+        // Closing tx stops admission; the worker finishes in-flight
+        // sessions, then exits.
+        let (dummy_tx, _) = sync_channel::<Admission>(1);
+        drop(std::mem::replace(&mut self.tx, dummy_tx));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Admission>,
+    engine: NativeGenEngine,
+    max_slots: usize,
+    metrics: Arc<GenBatcherMetrics>,
+    reserved: Arc<AtomicUsize>,
+    alive: Arc<AtomicBool>,
+) {
+    let dec = engine.decoder();
+    let weights = engine.weights();
+    let threads = engine.threads;
+    let (seq, vocab, hd) = (dec.cfg.seq, dec.cfg.vocab, dec.cfg.head_dim());
+    let aws: Vec<usize> = dec.dims.iter().map(|d| d.heads * hd).collect();
+    let mut stepper = BatchStepper::new(dec);
+    let mut prefill_logits = vec![0.0f32; seq * vocab];
+    let mut sessions: Vec<GenSession> = Vec::with_capacity(max_slots);
+    let mut disconnected = false;
+
+    loop {
+        if sessions.is_empty() {
+            if disconnected {
+                break;
+            }
+            match rx.recv() {
+                Ok(adm) => {
+                    let admitted = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        admit(adm, &engine, &aws, &mut prefill_logits, &mut sessions, &metrics, &reserved)
+                    }));
+                    if admitted.is_err() {
+                        fail_everything(&rx, sessions, &metrics, &alive);
+                        return;
+                    }
+                }
+                Err(_) => break,
+            }
+            continue;
+        }
+
+        let wave = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            // Fill free slots from the admission queue without blocking.
+            while sessions.len() < max_slots && !disconnected {
+                match rx.try_recv() {
+                    Ok(adm) => admit(
+                        adm,
+                        &engine,
+                        &aws,
+                        &mut prefill_logits,
+                        &mut sessions,
+                        &metrics,
+                        &reserved,
+                    ),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => disconnected = true,
+                }
+            }
+            if sessions.is_empty() {
+                return Ok(());
+            }
+
+            // One batched step over every active session.
+            let t0 = Instant::now();
+            let mut slots: Vec<BatchSlot> = sessions
+                .iter_mut()
+                .map(|s| {
+                    let pos = s.cache.len;
+                    BatchSlot { cache: &mut s.cache, token: *s.ids.last().expect("non-empty"), pos }
+                })
+                .collect();
+            let n = slots.len();
+            let stepped = stepper.step(dec, weights, threads, &mut slots);
+            drop(slots);
+            metrics.steps.inc();
+            metrics.batch_occupancy.record_value(n as u64);
+            metrics.kv_pages.store(dec.page_pool_stats());
+            stepped?;
+            let wave_ms = t0.elapsed().as_secs_f64() * 1e3;
+            for (i, s) in sessions.iter_mut().enumerate() {
+                // The wave's wall time is shared: each active session
+                // progressed one token in it.
+                s.per_token_ms.push(wave_ms);
+                let next = s.rng.sample_logits(stepper.logits_row(i), s.temperature) as i32;
+                s.ids.push(next.min(vocab as i32 - 1));
+                s.generated += 1;
+            }
+            Ok::<(), DecodeError>(())
+        }));
+
+        match wave {
+            Ok(Ok(())) => {
+                // Retire sessions that hit their budget or the seq cap:
+                // reply (a dropped receiver is ignored), return pages,
+                // release the slot reservation.
+                let mut i = 0;
+                while i < sessions.len() {
+                    let done = sessions[i].generated >= sessions[i].max_new_tokens
+                        || sessions[i].ids.len() >= seq;
+                    if !done {
+                        i += 1;
+                        continue;
+                    }
+                    let GenSession { cache, ids, generated, per_token_ms, reply, .. } =
+                        sessions.swap_remove(i);
+                    metrics.completed.inc();
+                    let _ = reply.send(Ok(finish_response(&engine, ids, generated, per_token_ms)));
+                    cache.into_pool(dec.page_pool());
+                    metrics.active_sessions.dec();
+                    reserved.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            Ok(Err(e)) => {
+                // Executor failure is wave-wide (it cannot be attributed
+                // to one lane): fail every active session typed, keep
+                // the worker alive for new admissions.
+                for s in sessions.drain(..) {
+                    metrics.failed.inc();
+                    let _ = s.reply.send(Err(GenBatcherError::from(e.clone())));
+                    s.cache.into_pool(dec.page_pool());
+                    metrics.active_sessions.dec();
+                    reserved.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            Err(_panic) => {
+                fail_everything(&rx, sessions, &metrics, &alive);
+                return;
+            }
+        }
+    }
+    alive.store(false, Ordering::Release);
+}
+
+/// Engine panic: refuse new work, fail every in-flight session and every
+/// queued admission, and exit — the engine is assumed poisoned.
+fn fail_everything(
+    rx: &Receiver<Admission>,
+    sessions: Vec<GenSession>,
+    metrics: &GenBatcherMetrics,
+    alive: &AtomicBool,
+) {
+    alive.store(false, Ordering::Release);
+    for s in sessions {
+        metrics.failed.inc();
+        metrics.active_sessions.dec();
+        let _ = s.reply.send(Err(GenBatcherError::ModelPanicked));
+    }
+    while let Ok(adm) = rx.try_recv() {
+        metrics.failed.inc();
+        let _ = adm.reply.send(Err(GenBatcherError::WorkerGone));
+    }
+}
+
+/// Admit one session: encode, seat its cache (typed per-session failure
+/// on an exhausted pool), prefill batch-1, and sample the first token —
+/// exactly [`super::textgen::decode_loop`]'s first iteration, so batched
+/// serving reproduces batch-1 text bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    adm: Admission,
+    engine: &NativeGenEngine,
+    aws: &[usize],
+    prefill_logits: &mut [f32],
+    sessions: &mut Vec<GenSession>,
+    metrics: &GenBatcherMetrics,
+    reserved: &AtomicUsize,
+) {
+    let dec = engine.decoder();
+    let (seq, vocab) = (dec.cfg.seq, dec.cfg.vocab);
+    let Admission { req, reply } = adm;
+    let mut ids = encode_prompt(&engine.tokenizer, &req.prompt, vocab, seq);
+    let finish_now = |ids: Vec<i32>, generated: usize, per_token_ms: Vec<f64>| {
+        metrics.completed.inc();
+        let _ = reply.send(Ok(finish_response(engine, ids, generated, per_token_ms)));
+        reserved.fetch_sub(1, Ordering::AcqRel);
+    };
+    if req.max_new_tokens == 0 {
+        // decode_loop would run no forward at all.
+        finish_now(ids, 0, Vec::new());
+        return;
+    }
+    let mut cache = match KvCache::new(seq, aws.to_vec(), dec.page_pool()) {
+        Ok(c) => c,
+        Err(stats) => {
+            metrics.failed.inc();
+            let _ = reply.send(Err(GenBatcherError::PagePoolExhausted {
+                in_use: stats.in_use,
+                capacity: stats.capacity.unwrap_or(stats.in_use),
+            }));
+            metrics.kv_pages.store(stats);
+            reserved.fetch_sub(1, Ordering::AcqRel);
+            return;
+        }
+    };
+    metrics.kv_pages.store(dec.page_pool_stats());
+    let t0 = Instant::now();
+    let len = match dec.prefill_into(&ids, &mut cache, prefill_logits, engine.weights(), engine.threads)
+    {
+        Ok(len) => len,
+        Err(e) => {
+            cache.into_pool(dec.page_pool());
+            metrics.failed.inc();
+            let _ = reply.send(Err(GenBatcherError::from(e)));
+            reserved.fetch_sub(1, Ordering::AcqRel);
+            return;
+        }
+    };
+    let mut rng = Rng::new(req.seed);
+    let per_token_ms = vec![t0.elapsed().as_secs_f64() * 1e3];
+    let row = &prefill_logits[(len - 1) * vocab..len * vocab];
+    let next = rng.sample_logits(row, req.temperature) as i32;
+    ids.push(next.min(vocab as i32 - 1));
+    if 1 >= req.max_new_tokens || ids.len() >= seq {
+        cache.into_pool(dec.page_pool());
+        finish_now(ids, 1, per_token_ms);
+        return;
+    }
+    metrics.active_sessions.inc();
+    sessions.push(GenSession {
+        cache,
+        ids,
+        generated: 1,
+        max_new_tokens: req.max_new_tokens,
+        temperature: req.temperature,
+        rng,
+        per_token_ms,
+        reply,
+    });
+}
+
+fn finish_response(
+    engine: &NativeGenEngine,
+    ids: Vec<i32>,
+    generated: usize,
+    per_token_ms: Vec<f64>,
+) -> GenResponse {
+    let text = engine.tokenizer.decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
+    GenResponse { text, tokens_generated: generated, per_token_ms }
+}

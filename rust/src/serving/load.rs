@@ -23,8 +23,10 @@
 use std::sync::mpsc::{channel, Receiver};
 use std::time::{Duration, Instant};
 
-use crate::serving::batcher::{BatchResult, Batcher, BatcherError, BatcherOptions};
-use crate::serving::{GenRequest, NativeGenEngine, NativeQaEngine, QaRequest};
+use crate::decode::PagePoolStats;
+use crate::serving::batcher::{Batcher, BatcherError, BatcherOptions};
+use crate::serving::gen_batcher::{GenBatcher, GenBatcherError, GenBatcherOptions};
+use crate::serving::{GenRequest, GenResponse, NativeGenEngine, NativeQaEngine, QaRequest};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::MsSummary;
@@ -99,7 +101,25 @@ pub struct LoadReport {
     pub ms_per_token: Option<MsSummary>,
     pub tokens_generated: usize,
     pub mean_batch_occupancy: f64,
+    /// Largest batch occupancy observed (continuous batching: the most
+    /// sessions any single step wave carried).
+    pub peak_batch_occupancy: f64,
     pub queue_depth_peak: i64,
+    /// Concurrent serving slots (1 = plain engine; >1 = continuous
+    /// batching via `GenBatcher`).
+    pub slots: usize,
+    /// Aggregate generated-token throughput over the whole run (all
+    /// slots together).
+    pub tokens_per_s_aggregate: f64,
+    /// `tokens_per_s_aggregate / slots` — what each slot contributed,
+    /// comparable across batched and unbatched runs on the same thread
+    /// budget.
+    pub tokens_per_s_per_slot: f64,
+    /// Closed-loop burst token throughput (aggregate; the saturation
+    /// probe's tokens/sec companion to `saturation_rps`).
+    pub saturation_tokens_per_s: f64,
+    /// KV page-pool utilization at end of run (paged-cache engines).
+    pub page_pool: Option<PagePoolStats>,
     /// Decode-phase split (gen engines; see `decode::DecodePhases`):
     /// where each served token's time actually went.
     pub phases: Option<PhaseSplit>,
@@ -150,7 +170,26 @@ impl LoadReport {
         m.insert("tokens_generated".to_string(), Json::Num(self.tokens_generated as f64));
         let occ = Json::Num(r3(self.mean_batch_occupancy));
         m.insert("mean_batch_occupancy".to_string(), occ);
+        let peak = Json::Num(r3(self.peak_batch_occupancy));
+        m.insert("peak_batch_occupancy".to_string(), peak);
         m.insert("queue_depth_peak".to_string(), Json::Num(self.queue_depth_peak as f64));
+        m.insert("slots".to_string(), Json::Num(self.slots as f64));
+        let tps = Json::Num(r3(self.tokens_per_s_aggregate));
+        m.insert("tokens_per_s_aggregate".to_string(), tps);
+        let tpss = Json::Num(r3(self.tokens_per_s_per_slot));
+        m.insert("tokens_per_s_per_slot".to_string(), tpss);
+        let sat_tps = Json::Num(r3(self.saturation_tokens_per_s));
+        m.insert("saturation_tokens_per_s".to_string(), sat_tps);
+        let pool = self.page_pool.as_ref().map_or(Json::Null, |p| {
+            let mut pm = std::collections::BTreeMap::new();
+            pm.insert("allocated".to_string(), Json::Num(p.allocated as f64));
+            pm.insert("in_use".to_string(), Json::Num(p.in_use as f64));
+            pm.insert("peak_in_use".to_string(), Json::Num(p.peak_in_use as f64));
+            let cap = p.capacity.map_or(Json::Null, |c| Json::Num(c as f64));
+            pm.insert("capacity".to_string(), cap);
+            Json::Obj(pm)
+        });
+        m.insert("page_pool".to_string(), pool);
         let phases = self.phases.as_ref().map_or(Json::Null, PhaseSplit::json);
         m.insert("decode_phases".to_string(), phases);
         Json::Obj(m)
@@ -184,9 +223,26 @@ impl LoadReport {
             ));
         }
         out.push_str(&format!(
-            "  batch occupancy mean {:.2}, queue depth peak {}\n",
-            self.mean_batch_occupancy, self.queue_depth_peak
+            "  batch occupancy mean {:.2} peak {:.0}, queue depth peak {}\n",
+            self.mean_batch_occupancy, self.peak_batch_occupancy, self.queue_depth_peak
         ));
+        if self.tokens_per_s_aggregate > 0.0 {
+            out.push_str(&format!(
+                "  tokens/s: {:.1} aggregate over {} slot(s) ({:.1} per slot), \
+                 saturation {:.1}\n",
+                self.tokens_per_s_aggregate,
+                self.slots,
+                self.tokens_per_s_per_slot,
+                self.saturation_tokens_per_s
+            ));
+        }
+        if let Some(p) = &self.page_pool {
+            let cap = p.capacity.map_or("unbounded".to_string(), |c| c.to_string());
+            out.push_str(&format!(
+                "  kv pages: {} allocated, peak {} in use, capacity {}\n",
+                p.allocated, p.peak_in_use, cap
+            ));
+        }
         if let Some(p) = &self.phases {
             out.push_str(&format!(
                 "  decode phases: prefill {:.2}ms total, step compute {:.1}us/tok, \
@@ -198,45 +254,51 @@ impl LoadReport {
     }
 }
 
+/// How one arrival fared at submit time — the front half of the
+/// admission contract, shared by the `Batcher` and `GenBatcher` drivers.
+enum SubmitOutcome<R> {
+    Admitted(Receiver<R>),
+    /// Typed admission control (queue full / slots full).
+    Rejected,
+    /// Dead worker at submit time (a serving bug — counted as an error,
+    /// never silently dropped).
+    Lost,
+}
+
 /// Raw open-loop outcome before engine-specific aggregation.
-struct OpenLoopRun<Resp> {
+struct OpenLoopRun<R> {
     offered: usize,
     rejected: usize,
-    /// Requests lost at submit time to a dead worker (a serving bug —
-    /// counted as errors, never silently dropped).
     lost: usize,
-    /// (caller-observed latency ms, reply) per admitted request.
-    completed: Vec<(f64, BatchResult<Resp>)>,
+    /// (caller-observed latency ms, reply) per admitted request; `None`
+    /// when the worker died before replying.
+    completed: Vec<(f64, Option<R>)>,
     wall_s: f64,
 }
 
-/// Drive one batcher open-loop: a pacing thread injects arrivals on the
-/// seeded exponential schedule while a collector drains replies in FIFO
-/// order (the batcher replies in order, so recv order matches completion
-/// order and caller-observed latency is measured at arrival).
-fn open_loop<Req, Resp>(
-    batcher: &Batcher<Req, Resp>,
+/// Drive one serving front end open-loop: a pacing thread injects
+/// arrivals on the seeded exponential schedule while a collector drains
+/// replies in FIFO order (both front ends reply in completion order, so
+/// recv order matches and caller-observed latency is measured at
+/// arrival). Generic over the submit path so the plain batcher and the
+/// continuous-batching scheduler share one driver.
+fn open_loop<Req, R: Send>(
+    mut submit: impl FnMut(Req) -> SubmitOutcome<R>,
     mut make_req: impl FnMut(usize) -> Req,
     cfg: &LoadConfig,
-) -> OpenLoopRun<Resp>
-where
-    Req: Send + 'static,
-    Resp: Send + 'static,
-{
-    let (ctx, crx) = channel::<(Instant, Receiver<BatchResult<Resp>>)>();
+) -> OpenLoopRun<R> {
+    let (ctx, crx) = channel::<(Instant, Receiver<R>)>();
     let mut offered = 0usize;
     let mut rejected = 0usize;
     let mut lost = 0usize;
     let start = Instant::now();
     let completed = std::thread::scope(|s| {
         let collector = s.spawn(move || {
-            let mut done: Vec<(f64, BatchResult<Resp>)> = Vec::new();
+            let mut done: Vec<(f64, Option<R>)> = Vec::new();
             for (t, rx) in crx {
-                let result = match rx.recv() {
-                    Ok(r) => r,
-                    // Worker died before replying: typed, not a hang.
-                    Err(_) => Err(BatcherError::WorkerGone),
-                };
+                // Worker died before replying: typed at aggregation, not
+                // a hang.
+                let result = rx.recv().ok();
                 done.push((t.elapsed().as_secs_f64() * 1e3, result));
             }
             done
@@ -252,10 +314,12 @@ where
                 std::thread::sleep(wait);
             }
             offered += 1;
-            match batcher.submit(make_req(offered - 1)) {
-                Ok(rx) => ctx.send((Instant::now(), rx)).expect("collector alive"),
-                Err(BatcherError::QueueFull { .. }) => rejected += 1,
-                Err(_) => lost += 1,
+            match submit(make_req(offered - 1)) {
+                SubmitOutcome::Admitted(rx) => {
+                    ctx.send((Instant::now(), rx)).expect("collector alive")
+                }
+                SubmitOutcome::Rejected => rejected += 1,
+                SubmitOutcome::Lost => lost += 1,
             }
             // Poisson process: exponential inter-arrival gaps. rng.f64()
             // is in [0, 1), so 1 - u is never zero.
@@ -270,12 +334,17 @@ where
 /// Closed-loop burst: submit `burst` requests back-to-back and time the
 /// drain — the service capacity the open-loop percentiles degrade
 /// against. Kept within the queue bound so admission control does not
-/// skew the probe.
-fn saturation_rps<Req, Resp>(
+/// skew the probe. Returns `(requests/s, aggregate tokens/s)`; the
+/// per-request `tokens(resp)` hook lets gen engines count generated
+/// tokens (QA passes 0). Per-slot tokens/sec is aggregate divided by the
+/// engine's slot count — the report derives it so the two are always
+/// consistent.
+fn saturation_probe<Req, Resp>(
     batcher: &Batcher<Req, Resp>,
     mut make_req: impl FnMut(usize) -> Req,
     burst: usize,
-) -> f64
+    tokens: impl Fn(&Resp) -> usize,
+) -> (f64, f64)
 where
     Req: Send + 'static,
     Resp: Send + 'static,
@@ -283,10 +352,58 @@ where
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..burst).filter_map(|i| batcher.submit(make_req(i)).ok()).collect();
     let n = rxs.len();
+    let mut toks = 0usize;
     for rx in rxs {
-        let _ = rx.recv();
+        if let Ok(Ok(resp)) = rx.recv() {
+            toks += tokens(&resp);
+        }
     }
-    n as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+    let el = t0.elapsed().as_secs_f64().max(1e-9);
+    (n as f64 / el, toks as f64 / el)
+}
+
+/// The saturation probe against the continuous-batching scheduler:
+/// admission is slot-bounded, so the burst keeps every slot busy by
+/// draining one completion whenever `SlotsFull` pushes back, then
+/// retrying — the closed-loop analogue of a saturated arrival process.
+fn saturation_probe_batched(
+    gb: &GenBatcher,
+    mut make_req: impl FnMut(usize) -> GenRequest,
+    burst: usize,
+) -> (f64, f64) {
+    let t0 = Instant::now();
+    let mut pending: std::collections::VecDeque<Receiver<Result<GenResponse, GenBatcherError>>> =
+        std::collections::VecDeque::new();
+    let mut n = 0usize;
+    let mut toks = 0usize;
+    let mut drain = |rx: Receiver<Result<GenResponse, GenBatcherError>>,
+                     n: &mut usize,
+                     toks: &mut usize| {
+        if let Ok(Ok(resp)) = rx.recv() {
+            *n += 1;
+            *toks += resp.tokens_generated;
+        }
+    };
+    'outer: for i in 0..burst {
+        loop {
+            match gb.submit(make_req(i)) {
+                Ok(rx) => {
+                    pending.push_back(rx);
+                    break;
+                }
+                Err(GenBatcherError::SlotsFull { .. }) => match pending.pop_front() {
+                    Some(rx) => drain(rx, &mut n, &mut toks),
+                    None => break 'outer,
+                },
+                Err(_) => break 'outer,
+            }
+        }
+    }
+    for rx in pending {
+        drain(rx, &mut n, &mut toks);
+    }
+    let el = t0.elapsed().as_secs_f64().max(1e-9);
+    (n as f64 / el, toks as f64 / el)
 }
 
 /// Sustained QA load through the dynamic batcher. TTFT is the full
@@ -301,19 +418,28 @@ pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig)
             queue_cap: cfg.queue_cap,
         },
     );
-    let run = open_loop(&batcher, |i| reqs[i % reqs.len()].clone(), cfg);
-    let sat = saturation_rps(
+    let run = open_loop(
+        |req| match batcher.submit(req) {
+            Ok(rx) => SubmitOutcome::Admitted(rx),
+            Err(BatcherError::QueueFull { .. }) => SubmitOutcome::Rejected,
+            Err(_) => SubmitOutcome::Lost,
+        },
+        |i| reqs[i % reqs.len()].clone(),
+        cfg,
+    );
+    let (sat, _) = saturation_probe(
         &batcher,
         |i| reqs[i % reqs.len()].clone(),
         cfg.saturation_burst.min(cfg.queue_cap),
+        |_| 0,
     );
     let metrics = &batcher.metrics;
     let mut ttft = Vec::with_capacity(run.completed.len());
     let mut errors = run.lost;
     for (lat_ms, result) in &run.completed {
         match result {
-            Ok(_) => ttft.push(*lat_ms),
-            Err(_) => errors += 1,
+            Some(Ok(_)) => ttft.push(*lat_ms),
+            _ => errors += 1,
         }
     }
     let completed = ttft.len();
@@ -330,7 +456,13 @@ pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig)
         ms_per_token: None,
         tokens_generated: 0,
         mean_batch_occupancy: metrics.mean_batch_size(),
+        peak_batch_occupancy: metrics.batch_occupancy.max_value() as f64,
         queue_depth_peak: metrics.queue_depth.peak(),
+        slots: 1,
+        tokens_per_s_aggregate: 0.0,
+        tokens_per_s_per_slot: 0.0,
+        saturation_tokens_per_s: 0.0,
+        page_pool: None,
         phases: None,
     }
 }
@@ -362,8 +494,21 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
             queue_cap: cfg.queue_cap,
         },
     );
-    let run = open_loop(&batcher, make, cfg);
-    let sat = saturation_rps(&batcher, make, cfg.saturation_burst.min(cfg.queue_cap));
+    let run = open_loop(
+        |req| match batcher.submit(req) {
+            Ok(rx) => SubmitOutcome::Admitted(rx),
+            Err(BatcherError::QueueFull { .. }) => SubmitOutcome::Rejected,
+            Err(_) => SubmitOutcome::Lost,
+        },
+        make,
+        cfg,
+    );
+    let (sat, sat_tps) = saturation_probe(
+        &batcher,
+        make,
+        cfg.saturation_burst.min(cfg.queue_cap),
+        |resp| resp.tokens_generated,
+    );
     let metrics = &batcher.metrics;
 
     let mut ttft = Vec::new();
@@ -373,14 +518,14 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
     let mut completed = 0usize;
     for (lat_ms, result) in &run.completed {
         match result {
-            Ok(resp) => {
+            Some(Ok(resp)) => {
                 completed += 1;
                 tokens_generated += resp.tokens_generated;
                 let steady: f64 = resp.per_token_ms.iter().skip(1).sum();
                 ttft.push((lat_ms - steady).max(0.0));
                 per_token.extend(resp.per_token_ms.iter().skip(1).copied());
             }
-            Err(_) => errors += 1,
+            _ => errors += 1,
         }
     }
     let ph = &engine_metrics.decode_phases;
@@ -391,6 +536,7 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
         cache_write_us: ph.cache_write_ns.get() as f64 / steps.max(1) as f64 / 1e3,
         steps,
     });
+    let tps = tokens_generated as f64 / run.wall_s.max(1e-9);
     LoadReport {
         engine: "native_gen".to_string(),
         offered: run.offered,
@@ -404,8 +550,92 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
         ms_per_token: MsSummary::from_samples(per_token),
         tokens_generated,
         mean_batch_occupancy: metrics.mean_batch_size(),
+        peak_batch_occupancy: metrics.batch_occupancy.max_value() as f64,
         queue_depth_peak: metrics.queue_depth.peak(),
+        slots: 1,
+        tokens_per_s_aggregate: tps,
+        tokens_per_s_per_slot: tps,
+        saturation_tokens_per_s: sat_tps,
+        page_pool: None,
         phases,
+    }
+}
+
+/// Sustained text-generation load through the continuous-batching
+/// scheduler ([`GenBatcher`]): up to `opts.max_slots` sessions decode
+/// concurrently per step wave; admissions join mid-flight and retire
+/// independently. Rejections here are [`GenBatcherError::SlotsFull`]
+/// (slot-bounded admission, the analogue of the queue bound), and the
+/// report carries wave occupancy and KV page-pool utilization. TTFT and
+/// ms/token aggregate the same way as [`run_gen_load`].
+pub fn run_gen_load_batched(
+    engine: NativeGenEngine,
+    prompts: &[&str],
+    cfg: &LoadConfig,
+    opts: GenBatcherOptions,
+) -> LoadReport {
+    assert!(!prompts.is_empty(), "need at least one prompt");
+    let slots = opts.max_slots.max(1);
+    let seed = cfg.seed;
+    let tokens = cfg.max_new_tokens;
+    let make = move |i: usize| GenRequest {
+        prompt: prompts[i % prompts.len()].to_string(),
+        max_new_tokens: tokens,
+        temperature: 0.8,
+        seed: seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
+    };
+    let gb = GenBatcher::new(engine, opts);
+    let run = open_loop(
+        |req| match gb.submit(req) {
+            Ok(rx) => SubmitOutcome::Admitted(rx),
+            Err(GenBatcherError::SlotsFull { .. }) => SubmitOutcome::Rejected,
+            Err(_) => SubmitOutcome::Lost,
+        },
+        make,
+        cfg,
+    );
+    let (sat, sat_tps) = saturation_probe_batched(&gb, make, cfg.saturation_burst);
+
+    let mut ttft = Vec::new();
+    let mut per_token = Vec::new();
+    let mut tokens_generated = 0usize;
+    let mut errors = run.lost;
+    let mut completed = 0usize;
+    for (lat_ms, result) in &run.completed {
+        match result {
+            Some(Ok(resp)) => {
+                completed += 1;
+                tokens_generated += resp.tokens_generated;
+                let steady: f64 = resp.per_token_ms.iter().skip(1).sum();
+                ttft.push((lat_ms - steady).max(0.0));
+                per_token.extend(resp.per_token_ms.iter().skip(1).copied());
+            }
+            _ => errors += 1,
+        }
+    }
+    let m = &gb.metrics;
+    let tps = tokens_generated as f64 / run.wall_s.max(1e-9);
+    LoadReport {
+        engine: "native_gen_batched".to_string(),
+        offered: run.offered,
+        completed,
+        rejected: run.rejected,
+        errors,
+        wall_s: run.wall_s,
+        throughput_rps: completed as f64 / run.wall_s.max(1e-9),
+        saturation_rps: sat,
+        ttft: MsSummary::from_samples(ttft),
+        ms_per_token: MsSummary::from_samples(per_token),
+        tokens_generated,
+        mean_batch_occupancy: m.mean_occupancy(),
+        peak_batch_occupancy: m.peak_occupancy() as f64,
+        queue_depth_peak: m.active_sessions.peak(),
+        slots,
+        tokens_per_s_aggregate: tps,
+        tokens_per_s_per_slot: tps / slots as f64,
+        saturation_tokens_per_s: sat_tps,
+        page_pool: Some(m.kv_pages.get()),
+        phases: None,
     }
 }
 
@@ -442,14 +672,16 @@ fn run_meta(cfg: &LoadConfig) -> Json {
 /// Serialize a full load-bench run. Committed/uploaded as
 /// `BENCH_serving.json` by CI so the serving perf trajectory diffs per
 /// PR. Schema 2 added the `meta` provenance object and per-engine
-/// `decode_phases`.
+/// `decode_phases`; schema 3 added continuous-batching fields per engine
+/// (`slots`, `peak_batch_occupancy`, `tokens_per_s_aggregate`,
+/// `tokens_per_s_per_slot`, `saturation_tokens_per_s`, `page_pool`).
 pub fn bench_json(cfg: &LoadConfig, reports: &[LoadReport]) -> Json {
     let mut engines = std::collections::BTreeMap::new();
     for r in reports {
         engines.insert(r.engine.clone(), r.json());
     }
     let mut m = std::collections::BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(2.0));
+    m.insert("schema".to_string(), Json::Num(3.0));
     m.insert("bench".to_string(), Json::Str("serving_load".to_string()));
     m.insert("meta".to_string(), run_meta(cfg));
     m.insert("config".to_string(), cfg.json());
@@ -545,6 +777,35 @@ mod tests {
     }
 
     #[test]
+    fn gen_load_batched_smoke_reports_occupancy_and_pool() {
+        let cfg = smoke_cfg();
+        let opts = GenBatcherOptions { max_slots: 2, max_kv_pages: None };
+        let r = run_gen_load_batched(tiny_gen(), &["the model", "the quick brown"], &cfg, opts);
+        assert!(r.offered > 0 && r.completed > 0, "{}", r.render());
+        assert!(r.tokens_generated > 0, "generation produced tokens");
+        assert_eq!(r.slots, 2);
+        assert!(r.mean_batch_occupancy >= 1.0 && r.mean_batch_occupancy <= 2.0);
+        assert!(r.peak_batch_occupancy >= 1.0 && r.peak_batch_occupancy <= 2.0);
+        assert!(r.tokens_per_s_aggregate > 0.0);
+        assert!(
+            (r.tokens_per_s_per_slot - r.tokens_per_s_aggregate / 2.0).abs() < 1e-9,
+            "per-slot is aggregate / slots"
+        );
+        let pool = r.page_pool.expect("batched gen load reports pool stats");
+        assert!(pool.peak_in_use >= 2, "1-layer session holds 2 pages");
+        assert_eq!(pool.capacity, None, "uncapped pool");
+        // Schema-3 fields survive a serialize -> parse round trip.
+        let j = bench_json(&cfg, &[r]);
+        let parsed = Json::parse(j.dump_pretty().trim()).unwrap();
+        let e = parsed.get("engines").unwrap().get("native_gen_batched").unwrap();
+        assert_eq!(e.get("slots").unwrap().as_usize(), Some(2));
+        assert!(e.get("peak_batch_occupancy").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(e.get("tokens_per_s_aggregate").unwrap().as_f64().unwrap() > 0.0);
+        let pp = e.get("page_pool").unwrap();
+        assert!(pp.get("peak_in_use").unwrap().as_usize().unwrap() >= 2);
+    }
+
+    #[test]
     fn gen_load_zero_tokens_has_no_ms_per_token() {
         // max_new_tokens 1 -> no steady-state steps at all; the ms/token
         // aggregation must yield None, not NaN (the bench-report bug).
@@ -565,7 +826,7 @@ mod tests {
         write_bench_json(path, &cfg, &[r]).unwrap();
         let body = std::fs::read_to_string(path).unwrap();
         let parsed = Json::parse(body.trim()).unwrap();
-        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serving_load"));
         let meta = parsed.get("meta").expect("schema 2 carries run provenance");
         assert!(meta.get("seed").unwrap().as_usize().is_some());

@@ -65,8 +65,38 @@
 //! the `serving_load` bench) drives both native engines open-loop at a
 //! configured QPS and reports p50/p95/p99 TTFT, ms/token, and
 //! throughput-at-saturation into `BENCH_serving.json`.
+//!
+//! # Continuous batching
+//!
+//! Generation requests are long-running, so coalescing them into fixed
+//! batches (the `Batcher` pattern above) would hold every request in a
+//! batch hostage to the longest one. The [`GenBatcher`] scheduler
+//! (`gen_batcher`) instead serves up to `max_slots` generations
+//! *concurrently* through one batched step-graph forward per wave:
+//!
+//! * a new prompt is admitted into a free slot **mid-flight** — it
+//!   prefills batch-1, then joins the step wave next to sessions already
+//!   generating (no wave restart, no waiting for stragglers);
+//! * each session's K/V state lives in per-layer **pages** checked out
+//!   of a shared, optionally capped [`crate::decode::PagePool`]; a
+//!   finished session's pages return without copying, and a capped pool
+//!   fails the *admitting* session typed
+//!   ([`GenBatcherError::PagePoolExhausted`]) instead of growing KV
+//!   memory without bound;
+//! * admission past slot capacity rejects typed
+//!   ([`GenBatcherError::SlotsFull`]), retirement never stalls the wave,
+//!   and dropped reply receivers are ignored — the loop cannot wedge;
+//! * the batched step graph is **row-bitwise-equal** to the batch-1 step
+//!   graph (`tests/decode_differential.rs`), and the scheduler replicates
+//!   the batch-1 decode loop's sampling exactly, so batched serving
+//!   produces identical text at matched seeds — the throughput win
+//!   (amortized weight traffic, row-splittable `[b, n]` matmuls) is free
+//!   of any quality or reproducibility trade;
+//! * per-wave occupancy, active sessions, and page-pool utilization land
+//!   in [`GenBatcherMetrics`] and `BENCH_serving.json` (schema 3).
 
 pub mod batcher;
+pub mod gen_batcher;
 pub mod load;
 pub mod metrics;
 pub mod qa;
@@ -80,7 +110,11 @@ use crate::util::rng::Rng;
 pub use batcher::{
     BatchModel, BatchResult, Batcher, BatcherError, BatcherMetrics, BatcherOptions,
 };
-pub use load::{run_gen_load, run_qa_load, write_bench_json, LoadConfig, LoadReport, PhaseSplit};
+pub use gen_batcher::{GenBatcher, GenBatcherError, GenBatcherMetrics, GenBatcherOptions};
+pub use load::{
+    run_gen_load, run_gen_load_batched, run_qa_load, write_bench_json, LoadConfig, LoadReport,
+    PhaseSplit,
+};
 pub use metrics::{Counter, EngineMetrics, Gauge, PhaseCounters, StreamingHistogram};
 pub use qa::{NativeQaEngine, QaEngine, QaRequest, QaResponse};
 pub use textgen::{GenEngine, GenRequest, GenResponse, NativeGenEngine};

@@ -4,7 +4,7 @@
 //!
 //! Decoding is *prefill-then-step* (`crate::decode`): the prompt runs
 //! once through the causal prefill graph, whose per-layer K/V
-//! projections land directly in a slab-backed [`crate::decode::KvCache`];
+//! projections land directly in a pool-paged [`crate::decode::KvCache`];
 //! each generated token then runs the single-position step graph over
 //! the borrowed cache feeds, so per-token cost is independent of how
 //! many tokens were generated before. The full-resequence path
@@ -293,6 +293,26 @@ impl NativeGenEngine {
         self.decoder.calibrate(&self.weights, &feeds)
     }
 
+    /// Enable continuous-batching decode: compile the batched step-graph
+    /// ladder up to `max_slots` concurrent sessions (see
+    /// [`Decoder::enable_batched_steps`]) and, on INT8 engines, build its
+    /// quantization tables — inheriting any already-calibrated static
+    /// activation scales, so enable/calibrate order does not matter.
+    pub fn enable_batched(&mut self, max_slots: usize) {
+        self.decoder.enable_batched_steps(max_slots);
+        if self.compression.int8 {
+            self.decoder.quantize_ladder(&self.weights);
+        }
+    }
+
+    /// Cap the shared KV page pool (total pages across all in-flight
+    /// sessions; `None` = unbounded). Under the cap, admitting a session
+    /// past capacity fails *that session* with
+    /// [`DecodeError::PagePoolExhausted`].
+    pub fn cap_kv_pages(&mut self, max_pages: Option<usize>) {
+        self.decoder.cap_pages(max_pages);
+    }
+
     /// Generate text. Malformed requests and decode misuse surface as
     /// typed [`DecodeError`]s (executor failures wrapped inside) — the
     /// serving layer rejects the request instead of panicking.
@@ -375,7 +395,7 @@ impl NativeGenEngine {
                     if self.phase_timing {
                         self.metrics.decode_phases.record(&s.phases());
                     }
-                    s.finish(); // park the cache slab for the next request
+                    s.finish(); // return the cache pages for the next request
                 }
                 resp
             }
@@ -450,7 +470,7 @@ mod tests {
         let full = eng.generate_with_mode(&req, DecodeMode::FullResequence).unwrap();
         assert_eq!(kv.text, full.text, "KV cache must not change sampling");
         assert_eq!(kv.tokens_generated, full.tokens_generated);
-        // Back-to-back cached requests recycle the cache slab.
+        // Back-to-back cached requests recycle the cache pages.
         let _ = eng.generate(&req).unwrap();
         assert_eq!(eng.decoder().pooled_caches(), 1);
     }

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use canao::compress::CompressionConfig;
-use canao::decode::{DecodeError, DecodeMode};
+use canao::decode::{BatchSlot, BatchStepper, DecodeError, DecodeMode};
 use canao::model::BertConfig;
 use canao::serving::{GenRequest, NativeGenEngine};
 use canao::tokenizer::{Tokenizer, Vocab};
@@ -283,6 +283,177 @@ fn decode_graphs_run_zero_int8_matmul_fallbacks() {
     let (pc, sc) = fp.decoder().dispatch_counts();
     assert!(pc.fused_layernorm_f32 > 0 && sc.fused_layernorm_f32 > 0);
     assert_eq!(pc.fallback_i8_matmul + sc.fallback_i8_matmul, 0);
+}
+
+#[test]
+fn batched_step_rows_bitwise_equal_batch1() {
+    // Four sessions with different prompts and token streams, stepped
+    // together through the batched step graph: every slot's logits row
+    // must equal the batch-1 session's row bitwise (f32 `==`), across
+    // thread counts and under pruning + INT8. This is the contract that
+    // makes continuous batching free of any quality trade.
+    let prompts: [&[i32]; 4] = [&[5, 9, 17], &[2, 31], &[7], &[40, 8, 3, 99]];
+    let steps: [&[i32]; 4] = [&[3, 44, 7], &[8, 3, 90], &[120, 6, 11], &[1, 2, 200]];
+    for comp in [CompressionConfig::none(), CompressionConfig::pruned_int8(0.5, 0.5)] {
+        for threads in [1usize, 2, 4] {
+            let mut eng = engine(threads, comp);
+            eng.enable_batched(4);
+            let reference: Vec<Vec<Vec<f32>>> =
+                (0..4).map(|i| kv_logits(&eng, threads, prompts[i], steps[i])).collect();
+
+            let dec = eng.decoder();
+            let cfg = tiny_cfg();
+            let mut caches: Vec<_> = (0..4).map(|_| dec.new_cache().unwrap()).collect();
+            let mut prefill = vec![0.0f32; cfg.seq * cfg.vocab];
+            for (i, c) in caches.iter_mut().enumerate() {
+                let len =
+                    dec.prefill_into(prompts[i], c, &mut prefill, eng.weights(), threads).unwrap();
+                assert_eq!(len, prompts[i].len());
+            }
+            let mut stepper = BatchStepper::new(dec);
+            for t in 0..3 {
+                let mut slots: Vec<BatchSlot> = caches
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        let pos = c.len;
+                        BatchSlot { cache: c, token: steps[i][t], pos }
+                    })
+                    .collect();
+                let b = stepper.step(dec, eng.weights(), threads, &mut slots).unwrap();
+                assert_eq!(b, 4, "full wave dispatches the b=4 rung");
+                for i in 0..4 {
+                    assert_eq!(
+                        stepper.logits_row(i),
+                        reference[i][t + 1].as_slice(),
+                        "slot {i} wave {t} diverged at {threads} threads ({comp:?})"
+                    );
+                }
+            }
+            for c in caches {
+                dec.release_cache(c);
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_waves_with_dummy_lanes_and_retirement_stay_bitwise() {
+    // 3 active slots on a b=4 rung (one dummy lane), then a mid-flight
+    // retirement shrinking the wave to the b=2 and b=1 rungs: dummy
+    // lanes and rung switches must never perturb active slots.
+    let prompts: [&[i32]; 3] = [&[5, 9], &[2, 31, 7], &[40]];
+    let steps: [&[i32]; 3] = [&[3, 44, 7], &[8], &[120, 6]];
+    let eng = {
+        let mut e = engine(2, CompressionConfig::none());
+        e.enable_batched(4);
+        e
+    };
+    let reference: Vec<Vec<Vec<f32>>> =
+        (0..3).map(|i| kv_logits(&eng, 2, prompts[i], steps[i])).collect();
+
+    let dec = eng.decoder();
+    let cfg = tiny_cfg();
+    let mut prefill = vec![0.0f32; cfg.seq * cfg.vocab];
+    let mut caches: Vec<_> = (0..3).map(|_| dec.new_cache().unwrap()).collect();
+    for (i, c) in caches.iter_mut().enumerate() {
+        dec.prefill_into(prompts[i], c, &mut prefill, eng.weights(), 2).unwrap();
+    }
+    let mut stepper = BatchStepper::new(dec);
+
+    // Wave 1: all three active -> rung 4, one dummy lane.
+    {
+        let mut it = caches.iter_mut();
+        let (c0, c1, c2) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+        let mut slots = [
+            BatchSlot { pos: c0.len, cache: c0, token: steps[0][0] },
+            BatchSlot { pos: c1.len, cache: c1, token: steps[1][0] },
+            BatchSlot { pos: c2.len, cache: c2, token: steps[2][0] },
+        ];
+        let b = stepper.step(dec, eng.weights(), 2, &mut slots).unwrap();
+        assert_eq!(b, 4, "3 active slots round up to the b=4 rung");
+        for i in 0..3 {
+            assert_eq!(stepper.logits_row(i), reference[i][1].as_slice(), "wave 1 slot {i}");
+        }
+    }
+
+    // Slot 1 finished: its pages go back without copying...
+    let retired = caches.remove(1);
+    dec.release_cache(retired);
+
+    // ...and the survivors keep stepping, now on the b=2 rung.
+    {
+        let mut it = caches.iter_mut();
+        let (c0, c2) = (it.next().unwrap(), it.next().unwrap());
+        let mut slots = [
+            BatchSlot { pos: c0.len, cache: c0, token: steps[0][1] },
+            BatchSlot { pos: c2.len, cache: c2, token: steps[2][1] },
+        ];
+        let b = stepper.step(dec, eng.weights(), 2, &mut slots).unwrap();
+        assert_eq!(b, 2);
+        assert_eq!(stepper.logits_row(0), reference[0][2].as_slice(), "wave 2 slot 0");
+        assert_eq!(stepper.logits_row(1), reference[2][2].as_slice(), "wave 2 slot 2");
+    }
+
+    // Down to one session: the b=1 rung.
+    {
+        let c0 = &mut caches[0];
+        let mut slots = [BatchSlot { pos: c0.len, cache: c0, token: steps[0][2] }];
+        let b = stepper.step(dec, eng.weights(), 2, &mut slots).unwrap();
+        assert_eq!(b, 1);
+        assert_eq!(stepper.logits_row(0), reference[0][3].as_slice(), "wave 3 slot 0");
+    }
+    for c in caches {
+        dec.release_cache(c);
+    }
+}
+
+#[test]
+fn batched_step_graphs_run_zero_int8_fallbacks() {
+    // Acceptance: the whole batched ladder dispatches through the fused
+    // int8 kernels — no per-node interpreter fallbacks crept in with the
+    // gather/scatter/slice/concat batching ops.
+    let mut eng = engine(2, CompressionConfig::pruned_int8(0.5, 0.5));
+    eng.enable_batched(4);
+    let census = eng.decoder().batched_dispatch_counts();
+    assert_eq!(census.len(), 3, "ladder rungs 1, 2, 4");
+    for (b, c) in census {
+        assert_eq!(c.fallback_i8_matmul, 0, "rung {b}: {c}");
+        assert!(c.fused_layernorm_i8 > 0, "rung {b} runs the fused int8 kernel");
+    }
+}
+
+#[test]
+fn rollback_replays_identical_logits() {
+    // Speculative-decoding building block: rewind a session to an
+    // earlier position and re-decode — the replayed rows must be bitwise
+    // identical to the first pass (truncate_to leaves no stale state).
+    let eng = engine(2, CompressionConfig::none());
+    let mut s = eng.decoder().begin(eng.weights(), 2);
+    s.prefill(&[5, 9, 17]).unwrap();
+    let base = s.position();
+    let tokens = [3i32, 44, 7];
+    let first: Vec<Vec<f32>> =
+        tokens.iter().map(|&t| s.step(t).unwrap().to_vec()).collect();
+
+    // Full rollback to the prompt, replay the same tokens.
+    s.rollback_to(base);
+    assert_eq!(s.position(), base);
+    let replay: Vec<Vec<f32>> =
+        tokens.iter().map(|&t| s.step(t).unwrap().to_vec()).collect();
+    assert_eq!(first, replay, "full-rollback replay diverged");
+
+    // Partial rollback: keep the first accepted token, replay the rest.
+    s.rollback_to(base + 1);
+    assert_eq!(s.position(), base + 1);
+    let tail: Vec<Vec<f32>> =
+        tokens[1..].iter().map(|&t| s.step(t).unwrap().to_vec()).collect();
+    assert_eq!(&first[1..], tail.as_slice(), "partial-rollback replay diverged");
+
+    // Rolling back never *extends* the session.
+    s.rollback_to(usize::MAX);
+    assert_eq!(s.position(), base + tokens.len());
+    s.finish();
 }
 
 #[test]

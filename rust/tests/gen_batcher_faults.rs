@@ -1,0 +1,196 @@
+//! Continuous-batching scheduler faults: every failure a generation
+//! caller can hit must surface as a typed `GenBatcherError` — never a
+//! hang, never a propagated panic — and a per-session failure must never
+//! take down sessions that are already generating. Mirrors
+//! `tests/batcher_faults.rs` for the `GenBatcher` scheduler.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use canao::model::BertConfig;
+use canao::serving::{
+    GenBatcher, GenBatcherError, GenBatcherOptions, GenRequest, NativeGenEngine,
+};
+use canao::tokenizer::{Tokenizer, Vocab};
+
+const CORPUS: &str = "the quick brown fox jumps over the lazy dog . \
+                      the model generates new sentences word by word . \
+                      layer fusion reduces the number of kernels .";
+
+/// Engine weights are drawn from a fixed seed, so two engines built from
+/// the same config are identical — the batch-1 reference and the batched
+/// scheduler can be compared across separate instances.
+fn tiny_gen(threads: usize) -> NativeGenEngine {
+    let tok = Arc::new(Tokenizer::new(Vocab::build(CORPUS, 256)));
+    let cfg = BertConfig { vocab: 256, seq: 12, layers: 1, hidden: 8, heads: 2, inter: 16 };
+    NativeGenEngine::new(tok, cfg, threads)
+}
+
+fn req(prompt: &str, max_new_tokens: usize, seed: u64) -> GenRequest {
+    GenRequest { prompt: prompt.into(), max_new_tokens, temperature: 0.9, seed }
+}
+
+/// Submit with a bounded retry: the worker releases a retiring session's
+/// slot reservation moments after sending its reply, so a submit racing
+/// that window may see `SlotsFull` briefly even though a slot is about
+/// to free up.
+fn submit_eventually(
+    gb: &GenBatcher,
+    r: GenRequest,
+) -> std::sync::mpsc::Receiver<Result<canao::serving::GenResponse, GenBatcherError>> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match gb.submit(r.clone()) {
+            Ok(rx) => return rx,
+            Err(GenBatcherError::SlotsFull { .. }) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => panic!("submit failed: {e}"),
+        }
+    }
+}
+
+#[test]
+fn staggered_retirement_matches_batch1_text_per_session() {
+    // Four sessions with different token budgets: they retire mid-batch
+    // at different waves while the others keep stepping, and every one
+    // must produce exactly the text the batch-1 engine generates for the
+    // same request (same seed, same sampling) — the end-to-end form of
+    // the bitwise step contract.
+    let reqs: Vec<GenRequest> = [("the model", 2u64), ("the quick brown", 3), ("fox", 4), ("lazy dog", 5)]
+        .iter()
+        .enumerate()
+        .map(|(i, &(p, s))| req(p, 2 + i * 2, 100 + s))
+        .collect();
+    let reference: Vec<_> = {
+        let eng = tiny_gen(2);
+        reqs.iter().map(|r| eng.generate(r).expect("batch-1 reference")).collect()
+    };
+
+    let gb = GenBatcher::new(tiny_gen(2), GenBatcherOptions { max_slots: 4, max_kv_pages: None });
+    let rxs: Vec<_> = reqs.iter().map(|r| gb.submit(r.clone()).expect("4 slots free")).collect();
+    for (i, (rx, want)) in rxs.into_iter().zip(&reference).enumerate() {
+        let got = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("no caller hangs")
+            .expect("session succeeds");
+        assert_eq!(got.text, want.text, "session {i} text != batch-1");
+        assert_eq!(got.tokens_generated, want.tokens_generated, "session {i}");
+        assert_eq!(got.per_token_ms.len(), want.per_token_ms.len(), "session {i}");
+    }
+    assert_eq!(gb.metrics.completed.get(), 4);
+    assert_eq!(gb.metrics.failed.get(), 0);
+    assert!(gb.metrics.steps.get() > 0, "waves were dispatched");
+    assert!(gb.metrics.peak_occupancy() >= 1);
+    gb.shutdown();
+}
+
+#[test]
+fn slots_full_rejects_typed_and_frees_on_retirement() {
+    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions { max_slots: 1, max_kv_pages: None });
+    // Occupy the only slot with a long-ish session.
+    let rx = gb.submit(req("the model generates", 8, 1)).expect("slot free");
+    assert_eq!(gb.slots_in_use(), 1);
+
+    // The next admission is refused immediately, typed.
+    match gb.submit(req("fox", 2, 2)) {
+        Err(GenBatcherError::SlotsFull { slots }) => assert_eq!(slots, 1),
+        other => panic!("expected SlotsFull, got {other:?}"),
+    }
+    assert_eq!(gb.metrics.rejected.get(), 1);
+
+    // The occupant completes and its slot frees for new work.
+    assert!(rx.recv_timeout(Duration::from_secs(10)).expect("no hang").is_ok());
+    let rx2 = submit_eventually(&gb, req("fox", 2, 2));
+    assert!(rx2.recv_timeout(Duration::from_secs(10)).expect("no hang").is_ok());
+    gb.shutdown();
+}
+
+#[test]
+fn page_pool_exhaustion_fails_the_session_not_the_batch() {
+    // 1 layer -> 2 pages per session; a 4-page cap seats exactly two
+    // concurrent sessions. Admissions three and four must fail typed
+    // while the seated sessions run to completion unharmed.
+    let gb = GenBatcher::new(
+        tiny_gen(1),
+        GenBatcherOptions { max_slots: 4, max_kv_pages: Some(4) },
+    );
+    let rxs: Vec<_> = (0..4)
+        .map(|i| gb.submit(req("the model generates", 9, i as u64)).expect("slots free"))
+        .collect();
+
+    let mut ok = 0;
+    let mut exhausted = 0;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(10)).expect("no caller hangs") {
+            Ok(resp) => {
+                assert!(resp.tokens_generated > 0);
+                ok += 1;
+            }
+            Err(GenBatcherError::PagePoolExhausted { in_use, capacity }) => {
+                assert_eq!(capacity, 4);
+                assert_eq!(in_use, 4, "both seated sessions hold their pages");
+                exhausted += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(ok, 2, "seated sessions complete");
+    assert_eq!(exhausted, 2, "unseatable sessions fail typed");
+    assert_eq!(gb.metrics.failed.get(), 2);
+    assert_eq!(gb.metrics.completed.get(), 2);
+    let pool = gb.metrics.kv_pages.get();
+    assert_eq!(pool.capacity, Some(4));
+    assert!(pool.peak_in_use <= 4, "cap was honored: {pool:?}");
+
+    // Pages returned at retirement: the pool recovers and new sessions
+    // seat again — exhaustion is a per-session admission failure, not a
+    // poisoned scheduler.
+    let rx = submit_eventually(&gb, req("fox", 2, 9));
+    assert!(rx.recv_timeout(Duration::from_secs(10)).expect("no hang").is_ok());
+    gb.shutdown();
+}
+
+#[test]
+fn dropped_receivers_do_not_wedge_the_scheduler() {
+    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions { max_slots: 2, max_kv_pages: None });
+    // Submit and immediately drop the receivers while the sessions are
+    // in flight: the worker's reply sends fail silently and retirement
+    // still frees the slots and pages.
+    for i in 0..6u64 {
+        drop(submit_eventually(&gb, req("the model", 3, i)));
+    }
+    // The scheduler is still alive and serving; the reply matches the
+    // batch-1 engine as usual.
+    let want = tiny_gen(1).generate(&req("lazy dog", 2, 42)).unwrap();
+    let rx = submit_eventually(&gb, req("lazy dog", 2, 42));
+    let got = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("scheduler not wedged")
+        .expect("session succeeds");
+    assert_eq!(got.text, want.text);
+    // Dropping the batcher with nothing in flight joins cleanly.
+    gb.shutdown();
+}
+
+#[test]
+fn zero_budget_and_oversized_prompts_behave_like_batch1() {
+    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions::default());
+    let eng = tiny_gen(1);
+
+    // max_new_tokens = 0: no forward at all, prompt echoed back.
+    let zero = req("the model", 0, 1);
+    let want = eng.generate(&zero).unwrap();
+    let got = gb.call(zero).expect("zero-budget session succeeds");
+    assert_eq!(got.text, want.text);
+    assert_eq!(got.tokens_generated, 0);
+
+    // A prompt tokenizing past seq truncates deterministically and still
+    // generates, identically to batch-1.
+    let long = req(CORPUS, 5, 2);
+    let want = eng.generate(&long).unwrap();
+    let got = gb.call(long).expect("truncated session succeeds");
+    assert_eq!(got.text, want.text);
+    assert_eq!(got.tokens_generated, want.tokens_generated);
+    gb.shutdown();
+}
