@@ -25,16 +25,23 @@
 //! Run: cargo bench --bench serving_load -- \
 //!        [--qps F] [--duration-ms N] [--queue-cap N] [--threads N]
 //!        [--tokens N] [--seed N] [--burst N] [--slots N] [--out PATH]
+//!        [--trace-sample N] [--trace-json PATH]
 //!
-//! CI runs this at smoke QPS with `--out BENCH_serving.json` and
-//! publishes the file, so the serving-latency trajectory diffs per PR.
+//! The report always lands in `--out` (default `BENCH_serving.json`, in
+//! the package directory) so a plain `cargo bench --bench serving_load`
+//! reproduces the committed-seed file; CI diffs the fresh run against
+//! `BENCH_serving.seed.json` with `scripts/diff_bench.py` (shape-only —
+//! values vary by host) and publishes the artifact. `--trace-sample N`
+//! attaches a request tracer to the batched engine (head-sampling every
+//! Nth request); `--trace-json PATH` writes its `BENCH_trace.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use canao::serving::{
     run_gen_load, run_gen_load_batched, run_qa_load, write_bench_json, GenBatcherOptions,
-    GenRequest, LoadConfig, LoadReport, NativeGenEngine, NativeQaEngine, QaRequest,
+    GenRequest, LoadConfig, LoadReport, NativeGenEngine, NativeQaEngine, QaRequest, TraceConfig,
+    Tracer,
 };
 use canao::tokenizer::{Tokenizer, Vocab};
 use canao::util::cli::Args;
@@ -123,6 +130,7 @@ fn independent_baseline(
         saturation_tokens_per_s: tps,
         page_pool: None,
         phases: None,
+        trace: None,
     }
 }
 
@@ -168,9 +176,23 @@ fn main() {
     let per_threads = (cfg.threads / slots).max(1);
     let budget = per_threads * slots;
     let batched_engine = NativeGenEngine::demo(Arc::clone(&tok), budget);
-    let opts = GenBatcherOptions { max_slots: slots, max_kv_pages: None };
+    let tracer = args.get("trace-sample").map(|_| {
+        Tracer::shared(TraceConfig {
+            sample_every: args.u64_or("trace-sample", 1).max(1),
+            ..TraceConfig::default()
+        })
+    });
+    let opts = GenBatcherOptions {
+        max_slots: slots,
+        tracer: tracer.clone(),
+        ..Default::default()
+    };
     let batched = run_gen_load_batched(batched_engine, &PROMPTS, &cfg, opts);
     print!("{}", batched.render());
+    if let (Some(t), Some(path)) = (&tracer, args.get("trace-json")) {
+        std::fs::write(path, t.report().json().dump_pretty()).expect("write trace json");
+        println!("wrote {path}");
+    }
 
     let baseline = independent_baseline(&tok, slots, per_threads, &cfg);
     print!("{}", baseline.render());
@@ -184,8 +206,7 @@ fn main() {
         batched.saturation_tokens_per_s / baseline.saturation_tokens_per_s.max(1e-9),
     );
 
-    if let Some(out) = args.get("out") {
-        write_bench_json(out, &cfg, &[qa, gen, batched, baseline]).expect("write bench json");
-        println!("wrote {out}");
-    }
+    let out = args.get_or("out", "BENCH_serving.json");
+    write_bench_json(&out, &cfg, &[qa, gen, batched, baseline]).expect("write bench json");
+    println!("wrote {out}");
 }

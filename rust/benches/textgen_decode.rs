@@ -6,8 +6,27 @@
 //! this bench as the decode smoke test, so a regression that breaks the
 //! decode path (not just its unit tests) fails the pipeline.
 //!
-//! Run: cargo bench --bench textgen_decode
+//! After the decode table, the bench runs the execution profiler over
+//! the demo graphs and writes the machine-readable report to `--out`
+//! (default `BENCH_profile.json`, in the package directory) — a plain
+//! `cargo bench --bench textgen_decode` reproduces the committed-seed
+//! file that CI diffs against with `scripts/diff_bench.py`.
+//!
+//! Run: cargo bench --bench textgen_decode -- [--threads N] [--runs N]
+//!        [--out PATH]
+
+use canao::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
-    canao::bench_textgen(&mut std::io::stdout())
+    let args = Args::from_env(&["bench"]);
+    canao::bench_textgen(&mut std::io::stdout())?;
+    let (_trace, report) = canao::bench_profile(
+        &mut std::io::stdout(),
+        args.usize_or("threads", 2),
+        args.usize_or("runs", 2),
+    )?;
+    let out = args.get_or("out", "BENCH_profile.json");
+    std::fs::write(&out, report.dump_pretty())?;
+    println!("wrote {out}");
+    Ok(())
 }

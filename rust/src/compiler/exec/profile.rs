@@ -363,6 +363,14 @@ impl ProfileReport {
     /// lane; waves are `"X"` events on a dedicated lane (tid 99) so the
     /// barrier structure is visible above the kernels.
     pub fn chrome_trace(&self) -> Json {
+        self.chrome_trace_with(&[])
+    }
+
+    /// [`ProfileReport::chrome_trace`] with extra pre-built trace events
+    /// appended — the serving tracer merges its per-request lanes
+    /// (tids 100+, see `serving::trace::REQUEST_LANE_BASE`) into the
+    /// kernel/wave timeline this way, yielding one merged document.
+    pub fn chrome_trace_with(&self, extra: &[Json]) -> Json {
         let us = |ns: u64| Json::Num(ns as f64 / 1000.0);
         let mut events: Vec<Json> = Vec::new();
         for s in &self.blocks {
@@ -397,6 +405,7 @@ impl ProfileReport {
             ev.insert("args".into(), Json::Obj(args));
             events.push(Json::Obj(ev));
         }
+        events.extend(extra.iter().cloned());
         let mut top = BTreeMap::new();
         top.insert("traceEvents".into(), Json::Arr(events));
         top.insert("displayTimeUnit".into(), Json::Str("ns".into()));

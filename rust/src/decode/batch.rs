@@ -28,10 +28,11 @@
 //! under pruning + INT8 by `tests/decode_differential.rs`.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use crate::compiler::exec::{Feeds, OutputSink};
 use crate::decode::cache::KvCache;
-use crate::decode::{step_mask_feed, DecodeError, Decoder, NEG_MASK};
+use crate::decode::{step_mask_feed, DecodeError, DecodePhases, Decoder, NEG_MASK};
 
 /// One active lane of a batched step: the session's cache plus the
 /// token to decode and the position to decode it at (== the cache's
@@ -61,6 +62,10 @@ pub struct BatchStepper {
     seq: usize,
     /// Per-layer attention widths (kept heads x head_dim).
     aws: Vec<usize>,
+    /// Phase timing is opt-in; off by default so the hot path reads no
+    /// clocks (same contract as [`crate::decode::DecodeSession`]).
+    time_phases: bool,
+    phases: DecodePhases,
 }
 
 impl BatchStepper {
@@ -95,7 +100,30 @@ impl BatchStepper {
             vocab: v,
             seq: s,
             aws,
+            time_phases: false,
+            phases: DecodePhases::default(),
         }
+    }
+
+    /// Turn on wall-clock phase accounting for subsequent waves. Timing
+    /// brackets whole dispatch phases (a handful of clock reads per
+    /// wave), never per-op work, so traced waves stay bitwise equal to
+    /// untraced ones.
+    pub fn enable_phase_timing(&mut self) {
+        self.time_phases = true;
+    }
+
+    /// Accumulated phase breakdown across all waves stepped so far.
+    /// `steps` counts per-token work (active slots, not waves) so the
+    /// per-step means stay comparable with the batch-1 path.
+    pub fn phases(&self) -> DecodePhases {
+        self.phases
+    }
+
+    /// Take the accumulated breakdown, resetting the counters — the
+    /// continuous batcher drains this into its metrics after each wave.
+    pub fn take_phases(&mut self) -> DecodePhases {
+        std::mem::take(&mut self.phases)
     }
 
     /// Decode one token for every slot in one batched forward. Returns
@@ -126,8 +154,13 @@ impl BatchStepper {
                 return Err(DecodeError::CacheFull { seq: s });
             }
         }
+        let mut wave_write_ns = 0u64;
+        let t0 = self.time_phases.then(Instant::now);
         for slot in slots.iter_mut() {
             slot.cache.zero_row(slot.pos);
+        }
+        if let Some(t) = t0 {
+            wave_write_ns += t.elapsed().as_nanos() as u64;
         }
 
         let ids = self.request.get_mut("step_ids").expect("stepper request map");
@@ -187,9 +220,14 @@ impl BatchStepper {
                 rest = r;
             }
             let feeds = Feeds::layered_slices(&self.request, &slices, weights);
+            let t0 = self.time_phases.then(Instant::now);
             compiled.run_parallel_sinks(&feeds, threads, quant, &mut sinks)?;
+            if let Some(t) = t0 {
+                self.phases.add_step_wave(t.elapsed().as_nanos() as u64, 0, n as u64);
+            }
         }
 
+        let t0 = self.time_phases.then(Instant::now);
         for (i, slot) in slots.iter_mut().enumerate() {
             let p = slot.pos;
             slot.cache.append_row_parts(
@@ -203,6 +241,10 @@ impl BatchStepper {
             );
             slot.pos += 1;
         }
+        if let Some(t) = t0 {
+            wave_write_ns += t.elapsed().as_nanos() as u64;
+        }
+        self.phases.add_step_wave(0, wave_write_ns, 0);
         Ok(b)
     }
 

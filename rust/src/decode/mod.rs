@@ -626,6 +626,21 @@ impl DecodePhases {
         self.cache_write_ns += other.cache_write_ns;
         self.steps += other.steps;
     }
+
+    /// Account one prefill forward.
+    pub fn add_prefill(&mut self, ns: u64) {
+        self.prefill_ns += ns;
+    }
+
+    /// Account one step dispatch that advanced `tokens` sessions — the
+    /// batch-1 session passes 1; the batched stepper passes the number
+    /// of real slots in the wave, keeping `steps` per-token on both
+    /// paths so the means stay comparable.
+    pub fn add_step_wave(&mut self, compute_ns: u64, cache_write_ns: u64, tokens: u64) {
+        self.step_compute_ns += compute_ns;
+        self.cache_write_ns += cache_write_ns;
+        self.steps += tokens;
+    }
 }
 
 /// One in-flight KV-cached generation: owns the cache, the reusable

@@ -32,6 +32,6 @@ pub mod train;
 pub mod util;
 
 pub use reports::{
-    bench_profile, bench_table1, bench_table2, bench_textgen, host_encoder_calibration,
-    table1_rows,
+    bench_profile, bench_table1, bench_table2, bench_textgen, bench_trace,
+    host_encoder_calibration, table1_rows,
 };

@@ -7,6 +7,8 @@
 //!   table2      reproduce Table 2 (GLUE accuracy)
 //!   profile     profiled executor runs: per-kernel tables, chrome trace,
 //!               measured-vs-predicted device-model calibration
+//!   trace       request-scoped tracing demo: merged kernel + request
+//!               timeline and the BENCH_trace.json report
 //!   serve-qa    interactive QA demo over the AOT artifacts (Fig. 1 left)
 //!   serve-gen   text-generation demo (Fig. 1 right)
 //!   serve-load  open-loop sustained-load run against the native engines
@@ -27,8 +29,9 @@ use canao::model::{build_encoder, build_encoder_with, BertConfig, LayerDims};
 use canao::nas::{Search, SearchConfig};
 use canao::runtime::Runtime;
 use canao::serving::{
-    run_gen_load, run_gen_load_batched, run_qa_load, write_bench_json, GenBatcherOptions,
-    GenEngine, GenRequest, LoadConfig, NativeGenEngine, NativeQaEngine, QaEngine, QaRequest,
+    run_gen_load_batched, run_gen_load_traced, run_qa_load_traced, write_bench_json,
+    GenBatcherOptions, GenEngine, GenRequest, LoadConfig, NativeGenEngine, NativeQaEngine,
+    QaEngine, QaRequest, TraceConfig, Tracer,
 };
 use canao::tokenizer::{Tokenizer, Vocab};
 use canao::util::cli::Args;
@@ -58,6 +61,7 @@ fn main() {
         "table2" => cmd_table2(),
         "textgen" => cmd_textgen(),
         "profile" => cmd_profile(&args),
+        "trace" => cmd_trace(&args),
         "serve-qa" => cmd_serve_qa(&args),
         "serve-gen" => cmd_serve_gen(&args),
         "serve-load" => cmd_serve_load(&args),
@@ -89,11 +93,15 @@ fn print_help() {
          \x20 table2     reproduce Table 2 (GLUE)\n\
          \x20 textgen    decode bench: full-reseq vs KV-cache ms/token\n\
          \x20 profile    profiled executor runs [--threads N --runs N --trace PATH --out PATH]\n\
+         \x20 trace      merged request+kernel timeline\n\
+         \x20                                  [--threads N --requests N --sample-every N\n\
+         \x20                                   --trace-out PATH --trace-json PATH]\n\
          \x20 serve-qa   QA demo               [--question S --context S]\n\
          \x20 serve-gen  text generation demo  [--prompt S --tokens N --temp F --full-reseq]\n\
          \x20 serve-load sustained-load run    [--qps F --duration-ms N --queue-cap N\n\
          \x20                                   --threads N --tokens N --seed N --slots N\n\
-         \x20                                   --out PATH]\n\
+         \x20                                   --out PATH --trace-sample N\n\
+         \x20                                   --trace-out PATH --trace-json PATH]\n\
          \x20 finetune   e2e training loop     [--steps N --lr F]\n"
     );
 }
@@ -282,6 +290,29 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Request-scoped tracing demo: one profiled prefill supplies the
+/// kernel lanes, a traced continuous-batching run the request lanes,
+/// merged into a single chrome-trace timeline. `--trace-out PATH`
+/// writes the merged timeline, `--trace-json PATH` the machine-readable
+/// report (`BENCH_trace.json` in CI).
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let (merged, report) = canao::bench_trace(
+        &mut std::io::stdout(),
+        args.usize_or("threads", 2),
+        args.usize_or("requests", 12),
+        args.u64_or("sample-every", 1),
+    )?;
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, merged.dump())?;
+        println!("[trace] wrote {path} (load via chrome://tracing or ui.perfetto.dev)");
+    }
+    if let Some(path) = args.get("trace-json") {
+        std::fs::write(path, report.dump_pretty())?;
+        println!("[trace] wrote {path}");
+    }
+    Ok(())
+}
+
 fn default_tokenizer() -> anyhow::Result<Arc<Tokenizer>> {
     let corpus = std::fs::read_to_string("examples/data/tiny_corpus.txt")
         .unwrap_or_else(|_| "the quick brown fox jumps over the lazy dog .".to_string());
@@ -377,7 +408,11 @@ fn cmd_serve_gen(args: &Args) -> anyhow::Result<()> {
 /// `--slots` concurrent sessions (occupancy + KV page-pool stats in the
 /// report). `--out PATH` additionally writes the machine-readable
 /// report (the `BENCH_serving.json` CI publishes comes from the
-/// `serving_load` bench, same format).
+/// `serving_load` bench, same format). Any of `--trace-sample N` /
+/// `--trace-out PATH` / `--trace-json PATH` attaches a request tracer
+/// to every engine (head-sampling every Nth request): per-phase
+/// aggregates fold into each engine's report, and the batched engine's
+/// trace exports as a chrome timeline / `BENCH_trace.json`.
 fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
     let cfg = LoadConfig {
         qps: args.f64_or("qps", 32.0),
@@ -395,6 +430,17 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
         cfg.seed,
         cfg.queue_cap
     );
+    let tracing = args.get("trace-out").is_some()
+        || args.get("trace-json").is_some()
+        || args.get("trace-sample").is_some();
+    let mk_tracer = || {
+        tracing.then(|| {
+            Tracer::shared(TraceConfig {
+                sample_every: args.u64_or("trace-sample", 1).max(1),
+                ..TraceConfig::default()
+            })
+        })
+    };
     let tok = default_tokenizer()?;
     let qa_reqs = vec![QaRequest {
         question: args.get_or("question", "what reduces the number of kernels ?"),
@@ -404,15 +450,45 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
              the runtime loads the compiled program and executes it on the device .",
         ),
     }];
-    let qa = run_qa_load(NativeQaEngine::demo(Arc::clone(&tok), cfg.threads), &qa_reqs, &cfg);
+    let qa = run_qa_load_traced(
+        NativeQaEngine::demo(Arc::clone(&tok), cfg.threads),
+        &qa_reqs,
+        &cfg,
+        mk_tracer(),
+    );
     print!("{}", qa.render());
     let prompts = ["the model", "the quick brown fox", "the runtime loads"];
-    let gen = run_gen_load(NativeGenEngine::demo(Arc::clone(&tok), cfg.threads), &prompts, &cfg);
+    let gen = run_gen_load_traced(
+        NativeGenEngine::demo(Arc::clone(&tok), cfg.threads),
+        &prompts,
+        &cfg,
+        mk_tracer(),
+    );
     print!("{}", gen.render());
     let slots = args.usize_or("slots", 4);
-    let opts = GenBatcherOptions { max_slots: slots, max_kv_pages: None };
-    let batched = run_gen_load_batched(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg, opts);
+    let batched_tracer = mk_tracer();
+    let opts = GenBatcherOptions {
+        max_slots: slots,
+        tracer: batched_tracer.clone(),
+        ..Default::default()
+    };
+    let batched =
+        run_gen_load_batched(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg, opts);
     print!("{}", batched.render());
+    // The batched engine's tracer is the exported one (the scheduler is
+    // where span trees have the most structure); snapshotting here —
+    // after the run returned and its worker joined — sees every retire.
+    if let Some(t) = &batched_tracer {
+        let rep = t.report();
+        if let Some(path) = args.get("trace-out") {
+            std::fs::write(path, rep.chrome_trace().dump())?;
+            println!("[load] wrote {path} (request lanes; open in ui.perfetto.dev)");
+        }
+        if let Some(path) = args.get("trace-json") {
+            std::fs::write(path, rep.json().dump_pretty())?;
+            println!("[load] wrote {path}");
+        }
+    }
     if let Some(out) = args.get("out") {
         write_bench_json(out, &cfg, &[qa, gen, batched])?;
         println!("[load] wrote {out}");

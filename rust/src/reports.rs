@@ -14,7 +14,9 @@ use crate::device::calibration::{calibrate, calibrate_runs, CalibrationReport};
 use crate::device::{plan_latency, plan_latency_compressed, tflite, DeviceProfile};
 use crate::model::{build_encoder, BertConfig};
 use crate::nas::trainer::{anchors, surrogate_score, ALL_TASKS};
-use crate::serving::{GenRequest, NativeGenEngine};
+use crate::serving::{
+    GenBatcher, GenBatcherOptions, GenRequest, NativeGenEngine, TraceConfig, Tracer,
+};
 use crate::tokenizer::{Tokenizer, Vocab};
 use crate::util::json::Json;
 
@@ -417,6 +419,124 @@ pub fn bench_profile(
     top.insert("runs".to_string(), Json::Num(runs as f64));
     top.insert("graphs".to_string(), Json::Obj(sections));
     Ok((trace, Json::Obj(top)))
+}
+
+/// The `canao trace` report: one merged chrome-trace timeline. Kernel
+/// lanes (tids 0–98 plus the wave lane at 99) come from one profiled
+/// int8 prefill of the demo decode graph; request lanes (tids 100+)
+/// come from a traced continuous-batching run serving `requests` demo
+/// generations at the given head-sampling rate. Returns
+/// `(merged_chrome_trace, trace_report_json)` for the CLI to write —
+/// the latter is the `BENCH_trace.json` document.
+pub fn bench_trace(
+    out: &mut dyn Write,
+    threads: usize,
+    requests: usize,
+    sample_every: u64,
+) -> anyhow::Result<(Json, Json)> {
+    let threads = threads.max(1);
+    let requests = requests.max(1);
+    let corpus = "the quick brown fox jumps over the lazy dog . \
+                  the model generates new sentences word by word .";
+    let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 512)));
+    let cfg = BertConfig { vocab: 512, seq: 48, layers: 2, hidden: 64, heads: 4, inter: 256 };
+
+    // Kernel lanes: one profiled prefill of the pruned+int8 decode graph
+    // (the richest wave structure, same workload `canao profile` traces).
+    let engine = NativeGenEngine::with_compression(
+        Arc::clone(&tok),
+        cfg,
+        threads,
+        CompressionConfig::pruned_int8(0.5, 0.5),
+    );
+    let dec = engine.decoder();
+    let prompt: Vec<i32> = (2..10).collect();
+    let mut sess = dec.begin(engine.weights(), threads);
+    let mut prof = dec.prefill.profiler(threads);
+    sess.prefill_profiled(&prompt, Some(&prof))?;
+    sess.finish();
+    let kernel_report = prof.report();
+
+    // Request lanes: a traced continuous-batching run over the demo
+    // generation engine.
+    let tracer = Tracer::shared(TraceConfig {
+        sample_every: sample_every.max(1),
+        ..TraceConfig::default()
+    });
+    let gb = GenBatcher::new(
+        NativeGenEngine::demo(tok, threads),
+        GenBatcherOptions {
+            max_slots: 4,
+            tracer: Some(Arc::clone(&tracer)),
+            time_phases: true,
+            ..Default::default()
+        },
+    );
+    let prompts = ["the model", "the quick brown fox", "the runtime loads"];
+    let mut pending = std::collections::VecDeque::new();
+    for i in 0..requests {
+        loop {
+            let req = GenRequest {
+                prompt: prompts[i % prompts.len()].to_string(),
+                max_new_tokens: 6,
+                temperature: 0.8,
+                seed: 7 ^ (i as u64).wrapping_mul(0x9E37_79B9),
+            };
+            match gb.submit(req) {
+                Ok(rx) => {
+                    pending.push_back(rx);
+                    break;
+                }
+                // Slots full: free one by draining the oldest reply.
+                Err(_) => match pending.pop_front() {
+                    Some(rx) => {
+                        let _ = rx.recv();
+                    }
+                    None => anyhow::bail!("gen batcher rejected with nothing in flight"),
+                },
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    // Join the worker so every retirement has reached the tracer.
+    drop(gb);
+
+    let report = tracer.report();
+    writeln!(
+        out,
+        "Request trace: {} requests ({} detailed, {} errors), \
+         total us p50 {} p95 {} p99 {}",
+        report.requests,
+        report.detailed,
+        report.errors,
+        report.total_p50_us,
+        report.total_p95_us,
+        report.total_p99_us
+    )?;
+    for p in &report.phases {
+        if p.count > 0 {
+            writeln!(
+                out,
+                "  {:<10} n {:>5}  p50 {:>8} us  p95 {:>8} us  max {:>8} us",
+                p.phase.label(),
+                p.count,
+                p.p50_us,
+                p.p95_us,
+                p.max_us
+            )?;
+        }
+    }
+    writeln!(
+        out,
+        "  retained span trees: {} (tail >= p{:.0} + errors), kernel lanes from \
+         profiled prefill",
+        report.retained.len(),
+        report.tail_pct
+    )?;
+    let merged = kernel_report.chrome_trace_with(&report.chrome_events());
+    Ok((merged, report.json()))
 }
 
 /// Print Table 2 (GLUE accuracy) from the trainer surrogate.

@@ -36,6 +36,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::metrics::{Counter, Gauge, StreamingHistogram};
+use super::trace::{armed, EventKind, Phase, RequestTrace, Tracer};
 
 /// A model that can run a batch of work items.
 ///
@@ -51,6 +52,20 @@ use super::metrics::{Counter, Gauge, StreamingHistogram};
 pub trait BatchModel<Req: Send + 'static, Resp: Send + 'static>: Send + 'static {
     fn max_batch(&self) -> usize;
     fn run_batch(&self, items: &[Req]) -> Vec<Resp>;
+
+    /// Trace-aware variant: `traces[i]` is item `i`'s request trace (if
+    /// the batcher has a tracer attached). The default ignores traces and
+    /// delegates to [`BatchModel::run_batch`]; engines that can attribute
+    /// finer phases (prefill, per-token steps) override this. Must keep
+    /// `run_batch`'s response contract.
+    fn run_batch_traced(
+        &self,
+        items: &[Req],
+        traces: &mut [Option<RequestTrace>],
+    ) -> Vec<Resp> {
+        let _ = traces;
+        self.run_batch(items)
+    }
 }
 
 /// Typed serving-path failure — what a caller gets instead of a hang or
@@ -110,6 +125,7 @@ struct Job<Req, Resp> {
     req: Req,
     reply: Sender<BatchResult<Resp>>,
     enqueued: Instant,
+    trace: Option<RequestTrace>,
 }
 
 pub struct Batcher<Req: Send + 'static, Resp: Send + 'static> {
@@ -117,6 +133,7 @@ pub struct Batcher<Req: Send + 'static, Resp: Send + 'static> {
     pub metrics: Arc<BatcherMetrics>,
     alive: Arc<AtomicBool>,
     capacity: usize,
+    tracer: Option<Arc<Tracer>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -157,6 +174,18 @@ impl BatcherMetrics {
 
 impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
     pub fn new<M: BatchModel<Req, Resp>>(model: M, opts: BatcherOptions) -> Self {
+        Self::new_traced(model, opts, None)
+    }
+
+    /// Like [`Batcher::new`], with a request-scoped tracer attached:
+    /// every submission gets a trace id and a
+    /// `queue_wait → run` span tree (engines overriding
+    /// [`BatchModel::run_batch_traced`] refine `run` into finer phases).
+    pub fn new_traced<M: BatchModel<Req, Resp>>(
+        model: M,
+        opts: BatcherOptions,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Self {
         let capacity = opts.queue_cap.max(1);
         let (tx, rx) = sync_channel::<Job<Req, Resp>>(capacity);
         let metrics = Arc::new(BatcherMetrics::default());
@@ -167,7 +196,7 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
             .name("canao-batcher".into())
             .spawn(move || worker_loop(rx, model, opts, m2, a2))
             .expect("spawn batcher");
-        Batcher { tx, metrics, alive, capacity, worker: Some(worker) }
+        Batcher { tx, metrics, alive, capacity, tracer, worker: Some(worker) }
     }
 
     /// Submit a request; the returned receiver yields the response (or a
@@ -177,17 +206,28 @@ impl<Req: Send + 'static, Resp: Send + 'static> Batcher<Req, Resp> {
         if !self.alive.load(Ordering::Acquire) {
             return Err(BatcherError::WorkerGone);
         }
+        let trace = self.tracer.as_ref().map(|t| t.start_request());
         let (reply, rx) = channel();
-        match self.tx.try_send(Job { req, reply, enqueued: Instant::now() }) {
+        match self.tx.try_send(Job { req, reply, enqueued: Instant::now(), trace }) {
             Ok(()) => {
                 self.metrics.queue_depth.inc();
                 Ok(rx)
             }
-            Err(TrySendError::Full(_)) => {
+            Err(TrySendError::Full(job)) => {
                 self.metrics.rejected.inc();
+                if let Some(mut t) = job.trace {
+                    t.event(EventKind::BatcherFault { kind: "queue_full" });
+                    t.finish(true);
+                }
                 Err(BatcherError::QueueFull { capacity: self.capacity })
             }
-            Err(TrySendError::Disconnected(_)) => Err(BatcherError::WorkerGone),
+            Err(TrySendError::Disconnected(job)) => {
+                if let Some(mut t) = job.trace {
+                    t.event(EventKind::BatcherFault { kind: "worker_gone" });
+                    t.finish(true);
+                }
+                Err(BatcherError::WorkerGone)
+            }
         }
     }
 
@@ -269,10 +309,16 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
         let mut reqs = Vec::with_capacity(jobs.len());
         let mut replies = Vec::with_capacity(jobs.len());
         let mut enqueued = Vec::with_capacity(jobs.len());
+        let mut traces = Vec::with_capacity(jobs.len());
         for j in jobs {
             reqs.push(j.req);
             replies.push(j.reply);
             enqueued.push(j.enqueued);
+            traces.push(j.trace);
+        }
+        for t in traces.iter_mut().flatten() {
+            // No clock read: the wait window is submit-time → `started`.
+            t.queue_wait_until(started);
         }
 
         // Batch metrics land BEFORE the replies go out, so a caller that
@@ -287,28 +333,42 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
         // The model may panic; catching the unwind keeps every caller's
         // reply channel honest. AssertUnwindSafe is sound because a
         // panicked model is never touched again — the worker exits below.
-        let result = std::panic::catch_unwind(AssertUnwindSafe(|| model.run_batch(&reqs)));
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            model.run_batch_traced(&reqs, &mut traces)
+        }));
         drop(reqs);
 
         match result {
             Ok(responses) => {
+                for t in traces.iter_mut() {
+                    if armed(t) {
+                        t.as_mut().expect("armed implies trace").span_from(Phase::Run, started);
+                    }
+                }
                 let expected = replies.len();
                 let got = responses.len();
                 let mut delivered = 0u64;
-                let mut pending = replies.into_iter().zip(enqueued);
+                let mut pending = replies.into_iter().zip(enqueued).zip(traces);
                 for resp in responses {
                     // Extra responses beyond the request count are dropped.
-                    let Some((reply, t)) = pending.next() else { break };
+                    let Some(((reply, t), trace)) = pending.next() else { break };
                     metrics.total_latency.record(t.elapsed());
                     if reply.send(Ok(resp)).is_ok() {
                         delivered += 1; // receiver may have given up: fine
                     }
+                    if let Some(trace) = trace {
+                        trace.finish(false);
+                    }
                 }
                 // Short batch: fail the unanswered tail in release builds
                 // too (callers used to block on recv() forever here).
-                for (reply, _t) in pending {
+                for ((reply, _t), trace) in pending {
                     metrics.failed.inc();
                     let _ = reply.send(Err(BatcherError::ShortBatch { expected, got }));
+                    if let Some(mut trace) = trace {
+                        trace.event(EventKind::BatcherFault { kind: "short_batch" });
+                        trace.finish(true);
+                    }
                 }
                 // Delivery count is only exact after `shutdown()`/drop has
                 // joined the worker (stress tests read it there).
@@ -318,14 +378,22 @@ fn worker_loop<Req: Send + 'static, Resp: Send + 'static, M: BatchModel<Req, Res
                 // Refuse new work first, then fail this batch and
                 // everything still queued; the model is assumed poisoned.
                 alive.store(false, Ordering::Release);
-                for reply in replies {
+                for (reply, trace) in replies.into_iter().zip(traces) {
                     metrics.failed.inc();
                     let _ = reply.send(Err(BatcherError::ModelPanicked));
+                    if let Some(mut t) = trace {
+                        t.event(EventKind::BatcherFault { kind: "model_panicked" });
+                        t.finish(true);
+                    }
                 }
                 while let Ok(j) = rx.try_recv() {
                     metrics.queue_depth.dec();
                     metrics.failed.inc();
                     let _ = j.reply.send(Err(BatcherError::WorkerGone));
+                    if let Some(mut t) = j.trace {
+                        t.event(EventKind::BatcherFault { kind: "worker_gone" });
+                        t.finish(true);
+                    }
                 }
                 return;
             }

@@ -28,7 +28,13 @@
 //!
 //! Per-wave occupancy, active-session count, and KV page-pool
 //! utilization land in [`GenBatcherMetrics`] (lock-free, fixed memory),
-//! feeding `BENCH_serving.json` schema 3.
+//! feeding `BENCH_serving.json` schema 4. Opt-in observability rides on
+//! top: [`GenBatcherOptions::time_phases`] splits wave wall time into
+//! decode phases ([`super::metrics::PhaseCounters`]), and
+//! [`GenBatcherOptions::tracer`] attaches a request-scoped
+//! [`super::trace::Tracer`] that records a span tree per session
+//! (`queue_wait → admit(prefill, sample) → step_wave[n] → retire`) —
+//! both off by default, reading no clocks when off.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -36,9 +42,12 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRe
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::metrics::{Counter, Gauge, StreamingHistogram};
+use super::metrics::{Counter, Gauge, PhaseCounters, StreamingHistogram};
 use super::textgen::{encode_prompt, GenRequest, GenResponse, NativeGenEngine};
-use crate::decode::{BatchSlot, BatchStepper, DecodeError, KvCache, PagePoolStats};
+use super::trace::{armed, EventKind, Phase, RequestTrace, Tracer};
+use crate::decode::{
+    BatchSlot, BatchStepper, DecodeError, DecodePhases, KvCache, PagePoolStats,
+};
 use crate::util::rng::Rng;
 
 /// Typed continuous-batching failure — what a generation caller gets
@@ -97,11 +106,18 @@ pub struct GenBatcherOptions {
     /// With `2·layers` pages per session, a cap below
     /// `max_slots · 2 · layers` exercises per-session admission failure.
     pub max_kv_pages: Option<usize>,
+    /// Request-scoped tracer; `None` (the default) keeps the serving
+    /// path free of tracing clocks, locks, and allocations.
+    pub tracer: Option<Arc<Tracer>>,
+    /// Split wave wall time into decode phases (prefill vs step compute
+    /// vs cache write) in [`GenBatcherMetrics::decode_phases`]. A few
+    /// clock reads per wave; off by default.
+    pub time_phases: bool,
 }
 
 impl Default for GenBatcherOptions {
     fn default() -> Self {
-        GenBatcherOptions { max_slots: 4, max_kv_pages: None }
+        GenBatcherOptions { max_slots: 4, max_kv_pages: None, tracer: None, time_phases: false }
     }
 }
 
@@ -154,6 +170,9 @@ pub struct GenBatcherMetrics {
     pub active_sessions: Gauge,
     /// KV page-pool utilization, refreshed per wave.
     pub kv_pages: PoolStatsCell,
+    /// Batched decode-phase split (prefill / step compute / cache
+    /// write); populated only with [`GenBatcherOptions::time_phases`].
+    pub decode_phases: PhaseCounters,
 }
 
 impl GenBatcherMetrics {
@@ -172,6 +191,7 @@ impl GenBatcherMetrics {
 struct Admission {
     req: GenRequest,
     reply: Sender<Result<GenResponse, GenBatcherError>>,
+    trace: Option<RequestTrace>,
 }
 
 /// One in-flight generation inside the worker: its paged cache, token
@@ -185,6 +205,7 @@ struct GenSession {
     rng: Rng,
     per_token_ms: Vec<f64>,
     reply: Sender<Result<GenResponse, GenBatcherError>>,
+    trace: Option<RequestTrace>,
 }
 
 /// Continuous-batching generation front end: owns the engine's worker
@@ -196,6 +217,7 @@ pub struct GenBatcher {
     reserved: Arc<AtomicUsize>,
     max_slots: usize,
     alive: Arc<AtomicBool>,
+    tracer: Option<Arc<Tracer>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -210,12 +232,14 @@ impl GenBatcher {
         let metrics = Arc::new(GenBatcherMetrics::default());
         let reserved = Arc::new(AtomicUsize::new(0));
         let alive = Arc::new(AtomicBool::new(true));
+        let tracer = opts.tracer.clone();
+        let time_phases = opts.time_phases;
         let (m2, r2, a2) = (Arc::clone(&metrics), Arc::clone(&reserved), Arc::clone(&alive));
         let worker = std::thread::Builder::new()
             .name("canao-gen-batcher".into())
-            .spawn(move || worker_loop(rx, engine, max_slots, m2, r2, a2))
+            .spawn(move || worker_loop(rx, engine, max_slots, time_phases, m2, r2, a2))
             .expect("spawn gen batcher");
-        GenBatcher { tx, metrics, reserved, max_slots, alive, worker: Some(worker) }
+        GenBatcher { tx, metrics, reserved, max_slots, alive, tracer, worker: Some(worker) }
     }
 
     /// Admit a generation session; the returned receiver yields the
@@ -228,6 +252,7 @@ impl GenBatcher {
         if !self.alive.load(Ordering::Acquire) {
             return Err(GenBatcherError::WorkerGone);
         }
+        let trace = self.tracer.as_ref().map(|t| t.start_request());
         // Reserve a slot up front: `reserved` counts queued admissions
         // plus active sessions, so a successful reservation guarantees
         // the worker has (or will have) a free slot for this session and
@@ -240,10 +265,14 @@ impl GenBatcher {
             .is_err()
         {
             self.metrics.rejected.inc();
+            if let Some(mut t) = trace {
+                t.event(EventKind::BatcherFault { kind: "slots_full" });
+                t.finish(true);
+            }
             return Err(GenBatcherError::SlotsFull { slots: self.max_slots });
         }
         let (reply, rx) = channel();
-        match self.tx.try_send(Admission { req, reply }) {
+        match self.tx.try_send(Admission { req, reply, trace }) {
             Ok(()) => {
                 self.metrics.requests.inc();
                 Ok(rx)
@@ -292,6 +321,7 @@ fn worker_loop(
     rx: Receiver<Admission>,
     engine: NativeGenEngine,
     max_slots: usize,
+    time_phases: bool,
     metrics: Arc<GenBatcherMetrics>,
     reserved: Arc<AtomicUsize>,
     alive: Arc<AtomicBool>,
@@ -302,6 +332,9 @@ fn worker_loop(
     let (seq, vocab, hd) = (dec.cfg.seq, dec.cfg.vocab, dec.cfg.head_dim());
     let aws: Vec<usize> = dec.dims.iter().map(|d| d.heads * hd).collect();
     let mut stepper = BatchStepper::new(dec);
+    if time_phases {
+        stepper.enable_phase_timing();
+    }
     let mut prefill_logits = vec![0.0f32; seq * vocab];
     let mut sessions: Vec<GenSession> = Vec::with_capacity(max_slots);
     let mut disconnected = false;
@@ -314,7 +347,16 @@ fn worker_loop(
             match rx.recv() {
                 Ok(adm) => {
                     let admitted = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                        admit(adm, &engine, &aws, &mut prefill_logits, &mut sessions, &metrics, &reserved)
+                        admit(
+                            adm,
+                            &engine,
+                            &aws,
+                            &mut prefill_logits,
+                            &mut sessions,
+                            &metrics,
+                            &reserved,
+                            time_phases,
+                        )
                     }));
                     if admitted.is_err() {
                         fail_everything(&rx, sessions, &metrics, &alive);
@@ -338,6 +380,7 @@ fn worker_loop(
                         &mut sessions,
                         &metrics,
                         &reserved,
+                        time_phases,
                     ),
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => disconnected = true,
@@ -362,13 +405,26 @@ fn worker_loop(
             metrics.steps.inc();
             metrics.batch_occupancy.record_value(n as u64);
             metrics.kv_pages.store(dec.page_pool_stats());
-            stepped?;
-            let wave_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let rung = stepped?;
+            if time_phases {
+                metrics.decode_phases.record(&stepper.take_phases());
+            }
+            let wave_elapsed = t0.elapsed();
+            let wave_ms = wave_elapsed.as_secs_f64() * 1e3;
+            let wave_ns = wave_elapsed.as_nanos() as u64;
             for (i, s) in sessions.iter_mut().enumerate() {
                 // The wave's wall time is shared: each active session
                 // progressed one token in it.
                 s.per_token_ms.push(wave_ms);
+                if armed(&s.trace) {
+                    let t = s.trace.as_mut().expect("armed implies trace");
+                    t.span_at(Phase::StepWave, t0, wave_ns, rung as u32, n as u32);
+                }
+                let s0 = armed(&s.trace).then(Instant::now);
                 let next = s.rng.sample_logits(stepper.logits_row(i), s.temperature) as i32;
+                if let (Some(s0), Some(t)) = (s0, s.trace.as_mut()) {
+                    t.span_from(Phase::Sample, s0);
+                }
                 s.ids.push(next.min(vocab as i32 - 1));
                 s.generated += 1;
             }
@@ -388,13 +444,27 @@ fn worker_loop(
                         i += 1;
                         continue;
                     }
-                    let GenSession { cache, ids, generated, per_token_ms, reply, .. } =
+                    let GenSession { cache, ids, generated, per_token_ms, reply, trace, .. } =
                         sessions.swap_remove(i);
                     metrics.completed.inc();
-                    let _ = reply.send(Ok(finish_response(&engine, ids, generated, per_token_ms)));
+                    let r0 = armed(&trace).then(Instant::now);
+                    let request_id = trace.as_ref().map(|t| t.id);
+                    let _ = reply.send(Ok(finish_response(
+                        &engine,
+                        ids,
+                        generated,
+                        per_token_ms,
+                        request_id,
+                    )));
                     cache.into_pool(dec.page_pool());
                     metrics.active_sessions.dec();
                     reserved.fetch_sub(1, Ordering::AcqRel);
+                    if let Some(mut t) = trace {
+                        if let Some(r0) = r0 {
+                            t.span_from(Phase::Retire, r0);
+                        }
+                        t.finish(false);
+                    }
                 }
             }
             Ok(Err(e)) => {
@@ -407,6 +477,10 @@ fn worker_loop(
                     s.cache.into_pool(dec.page_pool());
                     metrics.active_sessions.dec();
                     reserved.fetch_sub(1, Ordering::AcqRel);
+                    if let Some(mut t) = s.trace {
+                        t.event(EventKind::BatcherFault { kind: "wave_error" });
+                        t.finish(true);
+                    }
                 }
             }
             Err(_panic) => {
@@ -431,10 +505,18 @@ fn fail_everything(
         metrics.failed.inc();
         metrics.active_sessions.dec();
         let _ = s.reply.send(Err(GenBatcherError::ModelPanicked));
+        if let Some(mut t) = s.trace {
+            t.event(EventKind::BatcherFault { kind: "model_panicked" });
+            t.finish(true);
+        }
     }
     while let Ok(adm) = rx.try_recv() {
         metrics.failed.inc();
         let _ = adm.reply.send(Err(GenBatcherError::WorkerGone));
+        if let Some(mut t) = adm.trace {
+            t.event(EventKind::BatcherFault { kind: "worker_gone" });
+            t.finish(true);
+        }
     }
 }
 
@@ -451,19 +533,33 @@ fn admit(
     sessions: &mut Vec<GenSession>,
     metrics: &GenBatcherMetrics,
     reserved: &AtomicUsize,
+    time_phases: bool,
 ) {
     let dec = engine.decoder();
     let (seq, vocab) = (dec.cfg.seq, dec.cfg.vocab);
-    let Admission { req, reply } = adm;
+    let Admission { req, reply, mut trace } = adm;
+    let admit_t0 = armed(&trace).then(Instant::now);
+    if let (Some(t), Some(now)) = (trace.as_mut(), admit_t0) {
+        t.queue_wait_until(now);
+    }
     let mut ids = encode_prompt(&engine.tokenizer, &req.prompt, vocab, seq);
-    let finish_now = |ids: Vec<i32>, generated: usize, per_token_ms: Vec<f64>| {
-        metrics.completed.inc();
-        let _ = reply.send(Ok(finish_response(engine, ids, generated, per_token_ms)));
-        reserved.fetch_sub(1, Ordering::AcqRel);
-    };
+    let finish_now =
+        |ids: Vec<i32>, generated: usize, per_token_ms: Vec<f64>, trace: Option<RequestTrace>| {
+            metrics.completed.inc();
+            let request_id = trace.as_ref().map(|t| t.id);
+            let _ =
+                reply.send(Ok(finish_response(engine, ids, generated, per_token_ms, request_id)));
+            reserved.fetch_sub(1, Ordering::AcqRel);
+            if let Some(mut t) = trace {
+                if let Some(t0) = admit_t0 {
+                    t.span_from(Phase::Admit, t0);
+                }
+                t.finish(false);
+            }
+        };
     if req.max_new_tokens == 0 {
         // decode_loop would run no forward at all.
-        finish_now(ids, 0, Vec::new());
+        finish_now(ids, 0, Vec::new(), trace);
         return;
     }
     let mut cache = match KvCache::new(seq, aws.to_vec(), dec.page_pool()) {
@@ -476,31 +572,69 @@ fn admit(
             }));
             metrics.kv_pages.store(stats);
             reserved.fetch_sub(1, Ordering::AcqRel);
+            if let Some(mut t) = trace {
+                t.event(EventKind::PagePoolExhausted {
+                    in_use: stats.in_use,
+                    capacity: stats.capacity.unwrap_or(stats.in_use),
+                });
+                t.finish(true);
+            }
             return;
         }
     };
-    metrics.kv_pages.store(dec.page_pool_stats());
+    let pool_stats = dec.page_pool_stats();
+    metrics.kv_pages.store(pool_stats);
+    if armed(&trace) {
+        trace.as_mut().expect("armed implies trace").event(EventKind::PagePoolCheckout {
+            in_use: pool_stats.in_use,
+            capacity: pool_stats.capacity,
+        });
+    }
     let t0 = Instant::now();
-    let len = match dec.prefill_into(&ids, &mut cache, prefill_logits, engine.weights(), engine.threads)
-    {
+    let len = match dec.prefill_into(
+        &ids,
+        &mut cache,
+        prefill_logits,
+        engine.weights(),
+        engine.threads,
+    ) {
         Ok(len) => len,
         Err(e) => {
             cache.into_pool(dec.page_pool());
             metrics.failed.inc();
             let _ = reply.send(Err(GenBatcherError::from(e)));
             reserved.fetch_sub(1, Ordering::AcqRel);
+            if let Some(mut t) = trace {
+                t.event(EventKind::BatcherFault { kind: "prefill_error" });
+                t.finish(true);
+            }
             return;
         }
     };
+    if time_phases {
+        let mut ph = DecodePhases::default();
+        ph.add_prefill(t0.elapsed().as_nanos() as u64);
+        metrics.decode_phases.record(&ph);
+    }
+    if armed(&trace) {
+        trace.as_mut().expect("armed implies trace").span_from(Phase::Prefill, t0);
+    }
     let mut rng = Rng::new(req.seed);
     let per_token_ms = vec![t0.elapsed().as_secs_f64() * 1e3];
     let row = &prefill_logits[(len - 1) * vocab..len * vocab];
+    let s0 = armed(&trace).then(Instant::now);
     let next = rng.sample_logits(row, req.temperature) as i32;
+    if let (Some(s0), Some(t)) = (s0, trace.as_mut()) {
+        t.span_from(Phase::Sample, s0);
+    }
     ids.push(next.min(vocab as i32 - 1));
     if 1 >= req.max_new_tokens || ids.len() >= seq {
         cache.into_pool(dec.page_pool());
-        finish_now(ids, 1, per_token_ms);
+        finish_now(ids, 1, per_token_ms, trace);
         return;
+    }
+    if let (Some(t), Some(t0)) = (trace.as_mut(), admit_t0) {
+        t.span_from(Phase::Admit, t0);
     }
     metrics.active_sessions.inc();
     sessions.push(GenSession {
@@ -512,6 +646,7 @@ fn admit(
         rng,
         per_token_ms,
         reply,
+        trace,
     });
 }
 
@@ -520,7 +655,8 @@ fn finish_response(
     ids: Vec<i32>,
     generated: usize,
     per_token_ms: Vec<f64>,
+    request_id: Option<u64>,
 ) -> GenResponse {
     let text = engine.tokenizer.decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
-    GenResponse { text, tokens_generated: generated, per_token_ms }
+    GenResponse { text, tokens_generated: generated, per_token_ms, request_id }
 }

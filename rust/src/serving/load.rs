@@ -21,11 +21,13 @@
 //! streaming histograms does not apply.
 
 use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::decode::PagePoolStats;
 use crate::serving::batcher::{Batcher, BatcherError, BatcherOptions};
 use crate::serving::gen_batcher::{GenBatcher, GenBatcherError, GenBatcherOptions};
+use crate::serving::trace::Tracer;
 use crate::serving::{GenRequest, GenResponse, NativeGenEngine, NativeQaEngine, QaRequest};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -123,6 +125,10 @@ pub struct LoadReport {
     /// Decode-phase split (gen engines; see `decode::DecodePhases`):
     /// where each served token's time actually went.
     pub phases: Option<PhaseSplit>,
+    /// Request-trace report (`serving::trace::TraceReport::json`) when a
+    /// tracer was attached for this run: per-phase p50/p95/p99 plus the
+    /// tail-retained span trees.
+    pub trace: Option<Json>,
 }
 
 /// Aggregated decode-phase breakdown across a load run's requests.
@@ -192,6 +198,7 @@ impl LoadReport {
         m.insert("page_pool".to_string(), pool);
         let phases = self.phases.as_ref().map_or(Json::Null, PhaseSplit::json);
         m.insert("decode_phases".to_string(), phases);
+        m.insert("trace".to_string(), self.trace.clone().unwrap_or(Json::Null));
         Json::Obj(m)
     }
 
@@ -248,6 +255,20 @@ impl LoadReport {
                 "  decode phases: prefill {:.2}ms total, step compute {:.1}us/tok, \
                  cache write {:.1}us/tok ({} steps)\n",
                 p.prefill_ms, p.step_compute_us, p.cache_write_us, p.steps
+            ));
+        }
+        if let Some(Json::Obj(t)) = &self.trace {
+            let n = |k: &str| t.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let retained = match t.get("retained") {
+                Some(Json::Arr(a)) => a.len(),
+                _ => 0,
+            };
+            out.push_str(&format!(
+                "  traces: {} requests ({} detailed, {} errors), {} retained\n",
+                n("requests"),
+                n("detailed"),
+                n("errors"),
+                retained
             ));
         }
         out
@@ -409,14 +430,27 @@ fn saturation_probe_batched(
 /// Sustained QA load through the dynamic batcher. TTFT is the full
 /// answer latency (queue wait included).
 pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig) -> LoadReport {
+    run_qa_load_traced(engine, reqs, cfg, None)
+}
+
+/// [`run_qa_load`] with a request tracer attached: every request gets a
+/// span tree and the report's `trace` field carries the
+/// [`TraceReport`](crate::serving::trace::TraceReport) aggregates.
+pub fn run_qa_load_traced(
+    engine: NativeQaEngine,
+    reqs: &[QaRequest],
+    cfg: &LoadConfig,
+    tracer: Option<Arc<Tracer>>,
+) -> LoadReport {
     assert!(!reqs.is_empty(), "need at least one request template");
-    let batcher = Batcher::new(
+    let batcher = Batcher::new_traced(
         engine,
         BatcherOptions {
             max_wait: Duration::from_millis(2),
             min_batch: 2,
             queue_cap: cfg.queue_cap,
         },
+        tracer.clone(),
     );
     let run = open_loop(
         |req| match batcher.submit(req) {
@@ -433,7 +467,10 @@ pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig)
         cfg.saturation_burst.min(cfg.queue_cap),
         |_| 0,
     );
-    let metrics = &batcher.metrics;
+    // Drop the batcher first (its Drop joins the worker) so the tracer
+    // snapshot below sees every retirement.
+    let metrics = Arc::clone(&batcher.metrics);
+    drop(batcher);
     let mut ttft = Vec::with_capacity(run.completed.len());
     let mut errors = run.lost;
     for (lat_ms, result) in &run.completed {
@@ -464,6 +501,7 @@ pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig)
         saturation_tokens_per_s: 0.0,
         page_pool: None,
         phases: None,
+        trace: tracer.as_ref().map(|t| t.report().json()),
     }
 }
 
@@ -472,6 +510,17 @@ pub fn run_qa_load(engine: NativeQaEngine, reqs: &[QaRequest], cfg: &LoadConfig)
 /// the steady-state steps and is `None` when no request generated a
 /// second token (the empty-aggregation guard).
 pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig) -> LoadReport {
+    run_gen_load_traced(engine, prompts, cfg, None)
+}
+
+/// [`run_gen_load`] with a request tracer attached (see
+/// [`run_qa_load_traced`]).
+pub fn run_gen_load_traced(
+    engine: NativeGenEngine,
+    prompts: &[&str],
+    cfg: &LoadConfig,
+    tracer: Option<Arc<Tracer>>,
+) -> LoadReport {
     assert!(!prompts.is_empty(), "need at least one prompt");
     // The harness always wants the phase split; keep a metrics handle
     // before the batcher takes ownership of the engine.
@@ -486,13 +535,14 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
         temperature: 0.8,
         seed: seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
     };
-    let batcher = Batcher::new(
+    let batcher = Batcher::new_traced(
         engine,
         BatcherOptions {
             max_wait: Duration::from_millis(1),
             min_batch: 1,
             queue_cap: cfg.queue_cap,
         },
+        tracer.clone(),
     );
     let run = open_loop(
         |req| match batcher.submit(req) {
@@ -509,7 +559,9 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
         cfg.saturation_burst.min(cfg.queue_cap),
         |resp| resp.tokens_generated,
     );
-    let metrics = &batcher.metrics;
+    // As in `run_qa_load_traced`: join the worker before snapshotting.
+    let metrics = Arc::clone(&batcher.metrics);
+    drop(batcher);
 
     let mut ttft = Vec::new();
     let mut per_token = Vec::new();
@@ -558,6 +610,7 @@ pub fn run_gen_load(engine: NativeGenEngine, prompts: &[&str], cfg: &LoadConfig)
         saturation_tokens_per_s: sat_tps,
         page_pool: None,
         phases,
+        trace: tracer.as_ref().map(|t| t.report().json()),
     }
 }
 
@@ -575,6 +628,12 @@ pub fn run_gen_load_batched(
     opts: GenBatcherOptions,
 ) -> LoadReport {
     assert!(!prompts.is_empty(), "need at least one prompt");
+    // The harness always wants the decode-phase split (parity with
+    // `run_gen_load`); a tracer rides along when the caller set one on
+    // `opts.tracer`.
+    let mut opts = opts;
+    opts.time_phases = true;
+    let tracer = opts.tracer.clone();
     let slots = opts.max_slots.max(1);
     let seed = cfg.seed;
     let tokens = cfg.max_new_tokens;
@@ -613,7 +672,18 @@ pub fn run_gen_load_batched(
             _ => errors += 1,
         }
     }
-    let m = &gb.metrics;
+    // Drop the scheduler first: its Drop joins the worker, so the
+    // tracer/metrics snapshots below see every retirement.
+    let m = Arc::clone(&gb.metrics);
+    drop(gb);
+    let ph = &m.decode_phases;
+    let steps = ph.steps.get();
+    let phases = (steps > 0 || ph.prefill_ns.get() > 0).then(|| PhaseSplit {
+        prefill_ms: ph.prefill_ns.get() as f64 / 1e6,
+        step_compute_us: ph.step_compute_ns.get() as f64 / steps.max(1) as f64 / 1e3,
+        cache_write_us: ph.cache_write_ns.get() as f64 / steps.max(1) as f64 / 1e3,
+        steps,
+    });
     let tps = tokens_generated as f64 / run.wall_s.max(1e-9);
     LoadReport {
         engine: "native_gen_batched".to_string(),
@@ -635,7 +705,8 @@ pub fn run_gen_load_batched(
         tokens_per_s_per_slot: tps / slots as f64,
         saturation_tokens_per_s: sat_tps,
         page_pool: Some(m.kv_pages.get()),
-        phases: None,
+        phases,
+        trace: tracer.as_ref().map(|t| t.report().json()),
     }
 }
 
@@ -674,14 +745,16 @@ fn run_meta(cfg: &LoadConfig) -> Json {
 /// PR. Schema 2 added the `meta` provenance object and per-engine
 /// `decode_phases`; schema 3 added continuous-batching fields per engine
 /// (`slots`, `peak_batch_occupancy`, `tokens_per_s_aggregate`,
-/// `tokens_per_s_per_slot`, `saturation_tokens_per_s`, `page_pool`).
+/// `tokens_per_s_per_slot`, `saturation_tokens_per_s`, `page_pool`);
+/// schema 4 added per-engine request-trace aggregates (`trace`, null
+/// when no tracer was attached) and the batched path's `decode_phases`.
 pub fn bench_json(cfg: &LoadConfig, reports: &[LoadReport]) -> Json {
     let mut engines = std::collections::BTreeMap::new();
     for r in reports {
         engines.insert(r.engine.clone(), r.json());
     }
     let mut m = std::collections::BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(3.0));
+    m.insert("schema".to_string(), Json::Num(4.0));
     m.insert("bench".to_string(), Json::Str("serving_load".to_string()));
     m.insert("meta".to_string(), run_meta(cfg));
     m.insert("config".to_string(), cfg.json());
@@ -779,7 +852,12 @@ mod tests {
     #[test]
     fn gen_load_batched_smoke_reports_occupancy_and_pool() {
         let cfg = smoke_cfg();
-        let opts = GenBatcherOptions { max_slots: 2, max_kv_pages: None };
+        let tracer = Tracer::shared(crate::serving::trace::TraceConfig::default());
+        let opts = GenBatcherOptions {
+            max_slots: 2,
+            tracer: Some(Arc::clone(&tracer)),
+            ..Default::default()
+        };
         let r = run_gen_load_batched(tiny_gen(), &["the model", "the quick brown"], &cfg, opts);
         assert!(r.offered > 0 && r.completed > 0, "{}", r.render());
         assert!(r.tokens_generated > 0, "generation produced tokens");
@@ -794,7 +872,15 @@ mod tests {
         let pool = r.page_pool.expect("batched gen load reports pool stats");
         assert!(pool.peak_in_use >= 2, "1-layer session holds 2 pages");
         assert_eq!(pool.capacity, None, "uncapped pool");
-        // Schema-3 fields survive a serialize -> parse round trip.
+        // The harness forces the decode-phase split on the batched path
+        // too (schema 4).
+        let ph = r.phases.expect("batched gen load reports the decode-phase split");
+        assert!(ph.prefill_ms > 0.0, "admissions were prefill-timed");
+        assert!(ph.steps > 0 && ph.step_compute_us > 0.0, "waves were step-timed");
+        // The attached tracer saw every completed request.
+        assert!(r.trace.is_some(), "tracer folds into the report");
+        assert!(tracer.report().requests as usize >= r.completed);
+        // Schema-4 fields survive a serialize -> parse round trip.
         let j = bench_json(&cfg, &[r]);
         let parsed = Json::parse(j.dump_pretty().trim()).unwrap();
         let e = parsed.get("engines").unwrap().get("native_gen_batched").unwrap();
@@ -803,6 +889,9 @@ mod tests {
         assert!(e.get("tokens_per_s_aggregate").unwrap().as_f64().unwrap() > 0.0);
         let pp = e.get("page_pool").unwrap();
         assert!(pp.get("peak_in_use").unwrap().as_usize().unwrap() >= 2);
+        let tr = e.get("trace").expect("schema 4 carries the trace aggregates");
+        assert!(tr.get("requests").unwrap().as_usize().unwrap() > 0);
+        assert!(e.get("decode_phases").unwrap().get("steps").unwrap().as_usize().unwrap() > 0);
     }
 
     #[test]
@@ -826,7 +915,7 @@ mod tests {
         write_bench_json(path, &cfg, &[r]).unwrap();
         let body = std::fs::read_to_string(path).unwrap();
         let parsed = Json::parse(body.trim()).unwrap();
-        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(4));
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serving_load"));
         let meta = parsed.get("meta").expect("schema 2 carries run provenance");
         assert!(meta.get("seed").unwrap().as_usize().is_some());

@@ -153,6 +153,23 @@ impl StreamingHistogram {
         self.record_value(d.as_micros() as u64);
     }
 
+    /// Fold another histogram's counts into this one (bucket-wise
+    /// relaxed adds). Merging while either side is still being recorded
+    /// into is safe and loses nothing that was visible at the start of
+    /// the merge — the tool for combining per-worker histograms into a
+    /// fleet view.
+    pub fn merge_from(&self, other: &StreamingHistogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                a.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     pub fn len(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }

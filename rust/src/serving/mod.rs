@@ -25,34 +25,56 @@
 //! and falls back to singles when it isn't (bucketed static shapes — the
 //! standard PJRT-style serving pattern).
 //!
-//! # Observability and backpressure contract
+//! # Observability
 //!
-//! Serving is instrumented end to end with **lock-free, fixed-memory**
-//! metrics (`metrics`): atomic counters/gauges plus log-bucketed
-//! [`StreamingHistogram`]s (≤1/8 relative quantization error, O(1)
-//! memory per histogram regardless of request count). The batcher
-//! records queue depth, batch occupancy, queue/total latency, and
-//! admission rejects; the native engines record request counts,
-//! failures, TTFT, and steady-state per-token latency. Nothing on the
-//! hot path allocates per request or takes a lock.
+//! One guide for everything the serving stack can tell you about
+//! itself. Every layer follows the same two rules: **zero overhead when
+//! off** (the default path reads no clocks, takes no locks, allocates
+//! nothing for observability) and **observed == unobserved** (metrics,
+//! profiling, phase timing, and tracing never change model state,
+//! sampling, or execution order — pinned bitwise by
+//! `tests/exec_differential.rs`, `tests/decode_differential.rs`, and
+//! `tests/trace.rs`).
 //!
-//! # Profiling & latency-model calibration
+//! **Fleet metrics** (`metrics`, PR 6): lock-free, fixed-memory atomic
+//! counters/gauges plus log-bucketed [`StreamingHistogram`]s (≤1/8
+//! relative quantization error, O(1) memory regardless of request
+//! count). The batcher records queue depth, batch occupancy,
+//! queue/total latency, and admission rejects; the native engines
+//! record request counts, failures, TTFT, and steady-state per-token
+//! latency.
 //!
-//! The native path is profilable end to end, opt-in and zero-cost when
-//! off. `canao profile` runs the demo graphs under the execution
-//! profiler (`crate::compiler::exec::profile`) and emits all three
-//! views: the per-kernel-kind time table, a chrome://tracing timeline
-//! (`--trace`), and the measured-vs-predicted calibration of the device
-//! latency model (`crate::device::calibration`) — whose fitted
-//! constants `canao search --calibrated` then prices NAS with. Decode
-//! sessions additionally expose a per-token phase split (prefill wall
-//! vs step compute vs cache writes; `crate::decode::DecodePhases`): the
-//! load harness enables it per request and folds the split into
-//! [`EngineMetrics::decode_phases`], the rendered report, and
-//! `BENCH_serving.json` (`decode_phases` plus run-provenance `meta`,
-//! schema 2). With profiling and phase timing off — the default — the
-//! per-token path reads no clocks and allocates nothing extra, and
-//! `tests/exec_differential.rs` proves profiled runs stay bitwise equal.
+//! **Kernel profiling** (`crate::compiler::exec::profile`, PR 7): `canao
+//! profile` runs the demo graphs under the execution profiler and emits
+//! the per-kernel-kind time table, a chrome-trace timeline (`--trace`),
+//! and the measured-vs-predicted calibration of the device latency
+//! model (`crate::device::calibration`) — whose fitted constants `canao
+//! search --calibrated` prices NAS with.
+//!
+//! **Decode phases** (`crate::decode::DecodePhases`): an opt-in
+//! per-token split of decode wall time into prefill vs step compute vs
+//! cache writes, on both the batch-1 session path
+//! ([`EngineMetrics::decode_phases`]) and the continuous-batching wave
+//! path ([`GenBatcherOptions::time_phases`] →
+//! [`GenBatcherMetrics::decode_phases`]); the load harness folds both
+//! into `BENCH_serving.json`.
+//!
+//! **Request traces** (`trace`): attach a [`Tracer`] to either batcher
+//! and every request gets an id and a span tree — `queue_wait →
+//! admit(prefill, sample) → step_wave[n] (with wave occupancy and
+//! co-resident session count) → retire` — plus page-pool and fault
+//! events. Aggregate per-phase p50/p95/p99 land in `BENCH_serving.json`
+//! (schema 4); full span trees are tail-sampled (slowest percentile +
+//! errors, bounded ring) and exported via [`TraceReport::json`]
+//! (`BENCH_trace.json`).
+//!
+//! **One merged timeline**: `canao trace` (or `canao serve-load
+//! --trace-out`) writes a chrome trace whose lanes combine kernel
+//! profiler dispatches (tids 0–98), the wave lane (tid 99), and one lane
+//! per retained request (tids 100+). Open it at <https://ui.perfetto.dev>
+//! (or `chrome://tracing`): drag the JSON file in, then use W/S to zoom
+//! and A/D to pan; click a request lane's `step_wave` slice to see its
+//! occupancy and co-resident count in the args panel.
 //!
 //! Admission is **bounded**: `Batcher` holds at most
 //! `BatcherOptions::queue_cap` queued jobs and `submit` returns
@@ -93,7 +115,7 @@
 //!   (amortized weight traffic, row-splittable `[b, n]` matmuls) is free
 //!   of any quality or reproducibility trade;
 //! * per-wave occupancy, active sessions, and page-pool utilization land
-//!   in [`GenBatcherMetrics`] and `BENCH_serving.json` (schema 3).
+//!   in [`GenBatcherMetrics`] and `BENCH_serving.json` (schema 4).
 
 pub mod batcher;
 pub mod gen_batcher;
@@ -101,6 +123,7 @@ pub mod load;
 pub mod metrics;
 pub mod qa;
 pub mod textgen;
+pub mod trace;
 
 use std::collections::HashMap;
 
@@ -112,12 +135,15 @@ pub use batcher::{
 };
 pub use gen_batcher::{GenBatcher, GenBatcherError, GenBatcherMetrics, GenBatcherOptions};
 pub use load::{
-    run_gen_load, run_gen_load_batched, run_qa_load, write_bench_json, LoadConfig, LoadReport,
-    PhaseSplit,
+    run_gen_load, run_gen_load_batched, run_gen_load_traced, run_qa_load, run_qa_load_traced,
+    write_bench_json, LoadConfig, LoadReport, PhaseSplit,
 };
 pub use metrics::{Counter, EngineMetrics, Gauge, PhaseCounters, StreamingHistogram};
 pub use qa::{NativeQaEngine, QaEngine, QaRequest, QaResponse};
 pub use textgen::{GenEngine, GenRequest, GenResponse, NativeGenEngine};
+pub use trace::{
+    Phase, RequestTrace, RetainedTrace, TraceConfig, TraceReport, Tracer, REQUEST_LANE_BASE,
+};
 
 /// Additive attention-mask value for padded key positions — shared with
 /// the decode subsystem (which additionally relies on it underflowing

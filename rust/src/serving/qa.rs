@@ -444,6 +444,36 @@ impl BatchModel<QaRequest, QaResponse> for NativeQaEngine {
             })
             .collect()
     }
+
+    fn run_batch_traced(
+        &self,
+        items: &[QaRequest],
+        traces: &mut [Option<super::trace::RequestTrace>],
+    ) -> Vec<QaResponse> {
+        use super::trace::{armed, Phase};
+        items
+            .iter()
+            .zip(traces.iter_mut())
+            .map(|(req, trace)| {
+                // QA is one whole-sequence forward per item: record it as
+                // the request's prefill phase when detail-sampled.
+                let t0 = armed(trace).then(std::time::Instant::now);
+                let resp = match self.answer(req) {
+                    Ok(r) => r,
+                    Err(e) => QaResponse {
+                        answer: format!("<error: {e}>"),
+                        start_token: 0,
+                        end_token: 0,
+                        score: f32::NEG_INFINITY,
+                    },
+                };
+                if let (Some(t0), Some(t)) = (t0, trace.as_mut()) {
+                    t.span_from(Phase::Prefill, t0);
+                }
+                resp
+            })
+            .collect()
+    }
 }
 
 // SAFETY: the `xla` crate's FFI handles (PjRtLoadedExecutable, Literal,

@@ -33,6 +33,7 @@ use anyhow::Result;
 
 use super::batcher::BatchModel;
 use super::metrics::EngineMetrics;
+use super::trace::{armed, Phase, RequestTrace};
 use crate::compiler::exec::ExecError;
 use crate::compress::{prune_model, CompressionConfig, CompressionReport};
 use crate::decode::{DecodeError, DecodeMode, DecodeSession, Decoder};
@@ -58,6 +59,10 @@ pub struct GenResponse {
     /// Entry 0 covers the prefill + first token; later entries are
     /// steady-state steps.
     pub per_token_ms: Vec<f64>,
+    /// The serving trace id this response was recorded under (`None`
+    /// when no tracer was attached) — lets load harnesses join caller
+    /// latency to the retained span tree.
+    pub request_id: Option<u64>,
 }
 
 impl GenResponse {
@@ -126,7 +131,7 @@ pub(crate) fn decode_loop<E>(
         generated += 1;
     }
     let text = tokenizer.decode(&ids.iter().map(|&i| i as u32).collect::<Vec<_>>());
-    Ok(GenResponse { text, tokens_generated: generated, per_token_ms })
+    Ok(GenResponse { text, tokens_generated: generated, per_token_ms, request_id: None })
 }
 
 pub struct GenEngine {
@@ -328,10 +333,33 @@ impl NativeGenEngine {
         req: &GenRequest,
         mode: DecodeMode,
     ) -> Result<GenResponse, DecodeError> {
+        self.generate_traced(req, mode, &mut None)
+    }
+
+    /// Like [`NativeGenEngine::generate`], but records request-scoped
+    /// spans (prefill, per-token steps as occupancy-1 waves) into
+    /// `trace` when it is detail-sampled, and stamps the response with
+    /// the trace id. Tracing is span bookkeeping around unchanged decode
+    /// calls — traced output is bitwise equal to untraced.
+    pub fn generate_with_trace(
+        &self,
+        req: &GenRequest,
+        trace: &mut Option<RequestTrace>,
+    ) -> Result<GenResponse, DecodeError> {
+        self.generate_traced(req, self.mode, trace)
+    }
+
+    fn generate_traced(
+        &self,
+        req: &GenRequest,
+        mode: DecodeMode,
+        trace: &mut Option<RequestTrace>,
+    ) -> Result<GenResponse, DecodeError> {
         self.metrics.requests.inc();
-        let res = self.generate_uninstrumented(req, mode);
-        match &res {
+        let mut res = self.generate_uninstrumented(req, mode, trace);
+        match &mut res {
             Ok(resp) => {
+                resp.request_id = trace.as_ref().map(|t| t.id);
                 if let Some(&first) = resp.per_token_ms.first() {
                     self.metrics.ttft.record_value((first * 1e3) as u64);
                 }
@@ -348,6 +376,7 @@ impl NativeGenEngine {
         &self,
         req: &GenRequest,
         mode: DecodeMode,
+        trace: &mut Option<RequestTrace>,
     ) -> Result<GenResponse, DecodeError> {
         let (seq, vocab) = (self.cfg.seq, self.cfg.vocab);
         match mode {
@@ -372,6 +401,7 @@ impl NativeGenEngine {
             DecodeMode::KvCache => {
                 let mut session: Option<DecodeSession> = None;
                 let resp = decode_loop(&self.tokenizer, seq, vocab, req, |ids, out| {
+                    let t0 = armed(trace).then(std::time::Instant::now);
                     if session.is_none() {
                         // First forward: prefill the prompt into the cache.
                         let mut s = self.decoder.begin(&self.weights, self.threads);
@@ -382,6 +412,9 @@ impl NativeGenEngine {
                         let row = session.as_mut().expect("just set").prefill(ids)?;
                         out.clear();
                         out.extend_from_slice(row);
+                        if let (Some(t0), Some(t)) = (t0, trace.as_mut()) {
+                            t.span_from(Phase::Prefill, t0);
+                        }
                         return Ok(());
                     }
                     let s = session.as_mut().expect("checked above");
@@ -389,6 +422,10 @@ impl NativeGenEngine {
                     let row = s.step(*ids.last().expect("prompt is never empty"))?;
                     out.clear();
                     out.extend_from_slice(row);
+                    if let (Some(t0), Some(t)) = (t0, trace.as_mut()) {
+                        let dur = t0.elapsed().as_nanos() as u64;
+                        t.span_at(Phase::StepWave, t0, dur, 1, 1);
+                    }
                     Ok(())
                 });
                 if let Some(s) = session {
@@ -423,6 +460,27 @@ impl BatchModel<GenRequest, GenResponse> for NativeGenEngine {
                     text: format!("<error: {e}>"),
                     tokens_generated: 0,
                     per_token_ms: Vec::new(),
+                    request_id: None,
+                },
+            })
+            .collect()
+    }
+
+    fn run_batch_traced(
+        &self,
+        items: &[GenRequest],
+        traces: &mut [Option<RequestTrace>],
+    ) -> Vec<GenResponse> {
+        items
+            .iter()
+            .zip(traces.iter_mut())
+            .map(|(req, trace)| match self.generate_with_trace(req, trace) {
+                Ok(r) => r,
+                Err(e) => GenResponse {
+                    text: format!("<error: {e}>"),
+                    tokens_generated: 0,
+                    per_token_ms: Vec::new(),
+                    request_id: trace.as_ref().map(|t| t.id),
                 },
             })
             .collect()
@@ -533,6 +591,7 @@ mod tests {
             text: String::new(),
             tokens_generated: 2,
             per_token_ms: vec![2.0, 4.0],
+            request_id: None,
         };
         assert_eq!(some.mean_ms_per_token(), Some(3.0));
     }

@@ -1,0 +1,717 @@
+//! Request-scoped tracing for the serving stack.
+//!
+//! Where `compiler/exec/profile.rs` answers "which kernel is slow?",
+//! this module answers "which *phase* of which *request* was slow?" —
+//! the continuous batcher interleaves many sessions per step wave, so a
+//! p99 outlier can lose its budget to queue wait, admission prefill,
+//! co-resident sessions sharing its waves, page-pool pressure, or the
+//! final sample/retire hop, and fleet-level histograms cannot say which.
+//!
+//! Design rules, inherited from the execution profiler:
+//!
+//! * **Zero overhead when off.** Tracing is opt-in via
+//!   `Option<Arc<Tracer>>`; with no tracer attached, the serving path
+//!   allocates nothing, takes no locks, and reads no clocks on behalf of
+//!   tracing (every timing site is gated on [`armed`]).
+//! * **Lock-free recording.** Spans accumulate in a [`RequestTrace`]
+//!   owned by exactly one pipeline stage at a time (it travels inside
+//!   the batcher's job / the scheduler's session), so recording is plain
+//!   `Vec::push` with no synchronization. Aggregate phase counters are
+//!   the lock-free [`StreamingHistogram`]s from `serving/metrics`. The
+//!   only lock is a short critical section around the tail-retention
+//!   ring, taken once per *retired* request.
+//! * **Traced == untraced.** Tracing never touches model state, RNG
+//!   state, or execution order — traced runs are bitwise identical to
+//!   untraced runs (pinned in `tests/trace.rs` alongside the decode
+//!   differential pins).
+//!
+//! ## Span model
+//!
+//! Every request gets a `request_id` and a span tree:
+//!
+//! ```text
+//! request ─ queue_wait → admit(prefill, sample) → step_wave[n] → retire
+//! ```
+//!
+//! Step-wave spans carry the dispatched rung width (`occupancy`) and the
+//! number of co-resident real sessions, so time lost to sharing a wave
+//! is attributable. Page-pool checkouts/exhaustions and batcher faults
+//! are recorded as instant events on the same timeline.
+//!
+//! ## Tail-based sampling
+//!
+//! Aggregates (per-phase latency histograms) are recorded for every
+//! traced request; *full span trees* are retained only for the slowest
+//! percentile ([`TraceConfig::tail_pct`]) and for errored requests, in a
+//! fixed-size ring ([`TraceConfig::ring`]) that evicts the fastest
+//! non-errored entry first — bounded memory under unbounded traffic.
+//!
+//! ## Export
+//!
+//! [`TraceReport::json`] is the machine-readable form (published as
+//! `BENCH_trace.json`); [`TraceReport::chrome_events`] renders retained
+//! requests as per-request lanes that merge with the kernel profiler's
+//! chrome trace via `ProfileReport::chrome_trace_with` — one timeline,
+//! openable in `ui.perfetto.dev` (`canao serve-load --trace-out` /
+//! `canao trace`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::metrics::{Counter, StreamingHistogram};
+use crate::util::json::Json;
+
+/// Request lanes in the merged chrome trace start at this tid (kernel
+/// lanes use tids below 99, the wave lane uses 99).
+pub const REQUEST_LANE_BASE: u64 = 100;
+
+/// One phase of a request's lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Submit → the worker picking the request up.
+    QueueWait,
+    /// Admission into the scheduler (encode + cache checkout + prefill).
+    Admit,
+    /// The prompt prefill forward.
+    Prefill,
+    /// One batched decode wave this request took part in.
+    StepWave,
+    /// Sampling the next token from the logits row.
+    Sample,
+    /// Retirement: detokenize, reply, return pages.
+    Retire,
+    /// Generic batch execution (the dynamic batcher's `run_batch`).
+    Run,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::QueueWait,
+        Phase::Admit,
+        Phase::Prefill,
+        Phase::StepWave,
+        Phase::Sample,
+        Phase::Retire,
+        Phase::Run,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::QueueWait => "queue_wait",
+            Phase::Admit => "admit",
+            Phase::Prefill => "prefill",
+            Phase::StepWave => "step_wave",
+            Phase::Sample => "sample",
+            Phase::Retire => "retire",
+            Phase::Run => "run",
+        }
+    }
+
+    fn idx(&self) -> usize {
+        match self {
+            Phase::QueueWait => 0,
+            Phase::Admit => 1,
+            Phase::Prefill => 2,
+            Phase::StepWave => 3,
+            Phase::Sample => 4,
+            Phase::Retire => 5,
+            Phase::Run => 6,
+        }
+    }
+}
+
+/// One recorded span (times are ns relative to the tracer's epoch).
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Step waves: the dispatched rung width (batch slots incl. dummies).
+    pub occupancy: u32,
+    /// Step waves: real co-resident sessions sharing the wave.
+    pub co_resident: u32,
+}
+
+/// Instant events recorded on a request's timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// KV pages checked out at admission (pool utilization after).
+    PagePoolCheckout { in_use: usize, capacity: Option<usize> },
+    /// Admission failed: the pool could not seat the session.
+    PagePoolExhausted { in_use: usize, capacity: usize },
+    /// A batcher/scheduler fault hit this request.
+    BatcherFault { kind: &'static str },
+}
+
+impl EventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::PagePoolCheckout { .. } => "page_pool_checkout",
+            EventKind::PagePoolExhausted { .. } => "page_pool_exhausted",
+            EventKind::BatcherFault { .. } => "batcher_fault",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub at_ns: u64,
+    pub kind: EventKind,
+}
+
+/// Tracer configuration (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Max retained full span trees.
+    pub ring: usize,
+    /// Retain span trees for requests at or above this total-latency
+    /// percentile (plus every errored request).
+    pub tail_pct: f64,
+    /// Record detailed spans for every Nth request (1 = all). Requests
+    /// sampled out still count toward request/error totals and the
+    /// total-latency histogram.
+    pub sample_every: u64,
+    /// Tail decisions need at least this many completed requests; below
+    /// it every detailed request qualifies (so short runs retain data).
+    pub min_tail_samples: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { ring: 32, tail_pct: 95.0, sample_every: 1, min_tail_samples: 16 }
+    }
+}
+
+/// A retained full span tree (one tail-sampled or errored request).
+#[derive(Debug, Clone)]
+pub struct RetainedTrace {
+    pub id: u64,
+    pub start_ns: u64,
+    pub total_ns: u64,
+    pub error: bool,
+    pub spans: Vec<Span>,
+    pub events: Vec<TraceEvent>,
+}
+
+impl RetainedTrace {
+    /// Total ns recorded under `phase`.
+    pub fn phase_ns(&self, phase: Phase) -> u64 {
+        self.spans.iter().filter(|s| s.phase == phase).map(|s| s.dur_ns).sum()
+    }
+}
+
+/// The collector. Create once, share via `Arc` with every batcher /
+/// scheduler that should report into it.
+pub struct Tracer {
+    t0: Instant,
+    cfg: TraceConfig,
+    next_id: AtomicU64,
+    requests: Counter,
+    detailed: Counter,
+    errors: Counter,
+    total_us: StreamingHistogram,
+    phase_us: [StreamingHistogram; Phase::ALL.len()],
+    ring: Mutex<Vec<RetainedTrace>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("cfg", &self.cfg)
+            .field("requests", &self.requests.get())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Tracer {
+        Tracer {
+            t0: Instant::now(),
+            cfg,
+            next_id: AtomicU64::new(0),
+            requests: Counter::default(),
+            detailed: Counter::default(),
+            errors: Counter::default(),
+            total_us: StreamingHistogram::new(),
+            phase_us: std::array::from_fn(|_| StreamingHistogram::new()),
+            ring: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn shared(cfg: TraceConfig) -> Arc<Tracer> {
+        Arc::new(Tracer::new(cfg))
+    }
+
+    fn rel_ns(&self, at: Instant) -> u64 {
+        at.duration_since(self.t0).as_nanos() as u64
+    }
+
+    /// Open a trace for a new request. Allocates the span buffer only
+    /// when this request is head-sampled for detailed recording.
+    pub fn start_request(self: &Arc<Self>) -> RequestTrace {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let every = self.cfg.sample_every.max(1);
+        let detailed = id % every == 0;
+        let born = Instant::now();
+        RequestTrace {
+            tracer: Arc::clone(self),
+            id,
+            born,
+            born_ns: self.rel_ns(born),
+            detailed,
+            done: false,
+            spans: if detailed { Vec::with_capacity(8) } else { Vec::new() },
+            events: Vec::new(),
+        }
+    }
+
+    /// Fold a finished request into the aggregates and decide retention.
+    fn retire(&self, rt: RetainedTrace, detailed: bool) {
+        self.requests.inc();
+        if rt.error {
+            self.errors.inc();
+        }
+        self.total_us.record_value(rt.total_ns / 1_000);
+        if !detailed {
+            return;
+        }
+        self.detailed.inc();
+        for s in &rt.spans {
+            self.phase_us[s.phase.idx()].record_value(s.dur_ns / 1_000);
+        }
+        // `percentile_value` reports a bucket midpoint, which can sit
+        // above the just-recorded value even when that value IS the
+        // percentile sample — allow one bucket of tolerance (the
+        // histogram's stated <= 1/8 relative error).
+        let total_us = rt.total_ns / 1_000;
+        let n = self.total_us.len();
+        let slow = n <= self.cfg.min_tail_samples
+            || total_us + StreamingHistogram::bucket_width(total_us)
+                >= self.total_us.percentile_value(self.cfg.tail_pct);
+        if !(rt.error || slow) || self.cfg.ring == 0 {
+            return;
+        }
+        let mut ring = self.ring.lock().expect("trace ring poisoned");
+        if ring.len() < self.cfg.ring {
+            ring.push(rt);
+            return;
+        }
+        // Full: evict the fastest non-errored entry (errors out-rank
+        // latency), but only for a slower/more-important newcomer.
+        if let Some((i, weakest)) = ring
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| (r.error, r.total_ns))
+            .map(|(i, r)| (i, (r.error, r.total_ns)))
+        {
+            if (rt.error, rt.total_ns) > weakest {
+                ring[i] = rt;
+            }
+        }
+    }
+
+    /// Snapshot everything recorded so far.
+    pub fn report(&self) -> TraceReport {
+        let mut retained = self.ring.lock().expect("trace ring poisoned").clone();
+        retained.sort_by(|a, b| (b.error, b.total_ns).cmp(&(a.error, a.total_ns)));
+        let phases = Phase::ALL
+            .iter()
+            .map(|p| {
+                let h = &self.phase_us[p.idx()];
+                PhaseSummary {
+                    phase: *p,
+                    count: h.len(),
+                    p50_us: h.percentile_value(50.0),
+                    p95_us: h.percentile_value(95.0),
+                    p99_us: h.percentile_value(99.0),
+                    max_us: h.max_value(),
+                    mean_us: h.mean_value(),
+                }
+            })
+            .collect();
+        TraceReport {
+            requests: self.requests.get(),
+            detailed: self.detailed.get(),
+            errors: self.errors.get(),
+            tail_pct: self.cfg.tail_pct,
+            total_p50_us: self.total_us.percentile_value(50.0),
+            total_p95_us: self.total_us.percentile_value(95.0),
+            total_p99_us: self.total_us.percentile_value(99.0),
+            phases,
+            retained,
+        }
+    }
+}
+
+/// The per-request recorder. Owned by exactly one pipeline stage at a
+/// time; recording is plain appends, no locks. Dropping an unfinished
+/// trace (lost request, worker panic unwinding past it) retires it as
+/// an error so faults are never silently invisible.
+pub struct RequestTrace {
+    tracer: Arc<Tracer>,
+    pub id: u64,
+    born: Instant,
+    born_ns: u64,
+    detailed: bool,
+    done: bool,
+    spans: Vec<Span>,
+    events: Vec<TraceEvent>,
+}
+
+/// True when `t` carries a detail-sampled trace — the gate every caller
+/// must use before reading a clock on tracing's behalf.
+pub fn armed(t: &Option<RequestTrace>) -> bool {
+    t.as_ref().is_some_and(|t| t.detailed)
+}
+
+impl RequestTrace {
+    pub fn detailed(&self) -> bool {
+        self.detailed
+    }
+
+    /// Record `phase` from `start` until now.
+    pub fn span_from(&mut self, phase: Phase, start: Instant) {
+        let dur = start.elapsed().as_nanos() as u64;
+        self.span_at(phase, start, dur, 0, 0);
+    }
+
+    /// Record `phase` at an explicit start/duration (used when the
+    /// caller already measured the window, e.g. the shared wave timer).
+    pub fn span_at(
+        &mut self,
+        phase: Phase,
+        start: Instant,
+        dur_ns: u64,
+        occupancy: u32,
+        co_resident: u32,
+    ) {
+        if !self.detailed {
+            return;
+        }
+        let start_ns = self.tracer.rel_ns(start);
+        self.spans.push(Span { phase, start_ns, dur_ns, occupancy, co_resident });
+    }
+
+    /// Close the queue-wait span: birth (submit time) until `now`.
+    pub fn queue_wait_until(&mut self, now: Instant) {
+        let dur = now.duration_since(self.born).as_nanos() as u64;
+        self.span_at(Phase::QueueWait, self.born, dur, 0, 0);
+    }
+
+    /// Record an instant event at the current time.
+    pub fn event(&mut self, kind: EventKind) {
+        if !self.detailed {
+            return;
+        }
+        self.events.push(TraceEvent { at_ns: self.tracer.rel_ns(Instant::now()), kind });
+    }
+
+    fn retire(&mut self, error: bool) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        let total_ns = self.born.elapsed().as_nanos() as u64;
+        let rt = RetainedTrace {
+            id: self.id,
+            start_ns: self.born_ns,
+            total_ns,
+            error,
+            spans: std::mem::take(&mut self.spans),
+            events: std::mem::take(&mut self.events),
+        };
+        let tracer = Arc::clone(&self.tracer);
+        tracer.retire(rt, self.detailed);
+    }
+
+    /// Finish the request (the root span closes now). `error` marks the
+    /// trace for unconditional tail retention.
+    pub fn finish(mut self, error: bool) {
+        self.retire(error);
+    }
+}
+
+impl Drop for RequestTrace {
+    fn drop(&mut self) {
+        self.retire(true);
+    }
+}
+
+/// Aggregate latency for one phase across every detailed request.
+#[derive(Debug, Clone)]
+pub struct PhaseSummary {
+    pub phase: Phase,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+}
+
+/// Snapshot of a [`Tracer`]: aggregates plus the retained tail.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub requests: u64,
+    pub detailed: u64,
+    pub errors: u64,
+    pub tail_pct: f64,
+    pub total_p50_us: u64,
+    pub total_p95_us: u64,
+    pub total_p99_us: u64,
+    pub phases: Vec<PhaseSummary>,
+    pub retained: Vec<RetainedTrace>,
+}
+
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+impl TraceReport {
+    /// Machine-readable form (published as `BENCH_trace.json`). Schema
+    /// is pinned by `tests/trace.rs`.
+    pub fn json(&self) -> Json {
+        let mut phases = BTreeMap::new();
+        for p in &self.phases {
+            let mut m = BTreeMap::new();
+            m.insert("count".to_string(), Json::Num(p.count as f64));
+            m.insert("p50_us".to_string(), Json::Num(p.p50_us as f64));
+            m.insert("p95_us".to_string(), Json::Num(p.p95_us as f64));
+            m.insert("p99_us".to_string(), Json::Num(p.p99_us as f64));
+            m.insert("max_us".to_string(), Json::Num(p.max_us as f64));
+            m.insert("mean_us".to_string(), Json::Num(p.mean_us));
+            phases.insert(p.phase.label().to_string(), Json::Obj(m));
+        }
+        let retained: Vec<Json> = self.retained.iter().map(Self::retained_json).collect();
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), Json::Num(1.0));
+        top.insert("bench".to_string(), Json::Str("trace".to_string()));
+        top.insert("requests".to_string(), Json::Num(self.requests as f64));
+        top.insert("detailed".to_string(), Json::Num(self.detailed as f64));
+        top.insert("errors".to_string(), Json::Num(self.errors as f64));
+        top.insert("tail_pct".to_string(), Json::Num(self.tail_pct));
+        top.insert("total_p50_us".to_string(), Json::Num(self.total_p50_us as f64));
+        top.insert("total_p95_us".to_string(), Json::Num(self.total_p95_us as f64));
+        top.insert("total_p99_us".to_string(), Json::Num(self.total_p99_us as f64));
+        top.insert("phases".to_string(), Json::Obj(phases));
+        top.insert("retained".to_string(), Json::Arr(retained));
+        Json::Obj(top)
+    }
+
+    fn retained_json(rt: &RetainedTrace) -> Json {
+        let spans: Vec<Json> = rt
+            .spans
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("phase".to_string(), Json::Str(s.phase.label().to_string()));
+                m.insert("start_us".to_string(), us(s.start_ns));
+                m.insert("dur_us".to_string(), us(s.dur_ns));
+                m.insert("occupancy".to_string(), Json::Num(s.occupancy as f64));
+                m.insert("co_resident".to_string(), Json::Num(s.co_resident as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let events: Vec<Json> = rt
+            .events
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("at_us".to_string(), us(e.at_ns));
+                m.insert("kind".to_string(), Json::Str(e.kind.label().to_string()));
+                match e.kind {
+                    EventKind::PagePoolCheckout { in_use, capacity } => {
+                        m.insert("in_use".to_string(), Json::Num(in_use as f64));
+                        m.insert(
+                            "capacity".to_string(),
+                            capacity.map_or(Json::Null, |c| Json::Num(c as f64)),
+                        );
+                    }
+                    EventKind::PagePoolExhausted { in_use, capacity } => {
+                        m.insert("in_use".to_string(), Json::Num(in_use as f64));
+                        m.insert("capacity".to_string(), Json::Num(capacity as f64));
+                    }
+                    EventKind::BatcherFault { kind } => {
+                        m.insert("fault".to_string(), Json::Str(kind.to_string()));
+                    }
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Num(rt.id as f64));
+        m.insert("error".to_string(), Json::Bool(rt.error));
+        m.insert("start_us".to_string(), us(rt.start_ns));
+        m.insert("total_us".to_string(), us(rt.total_ns));
+        m.insert("spans".to_string(), Json::Arr(spans));
+        m.insert("events".to_string(), Json::Arr(events));
+        Json::Obj(m)
+    }
+
+    /// Chrome-trace events for the retained requests: one lane (tid)
+    /// per request starting at [`REQUEST_LANE_BASE`], a root "X" event
+    /// covering the whole request, child "X" events per span, and "i"
+    /// instant events. Merge into a kernel profile's timeline with
+    /// `ProfileReport::chrome_trace_with`, or wrap standalone via
+    /// [`TraceReport::chrome_trace`].
+    pub fn chrome_events(&self) -> Vec<Json> {
+        let mut events = Vec::new();
+        for (i, rt) in self.retained.iter().enumerate() {
+            let tid = Json::Num((REQUEST_LANE_BASE + i as u64) as f64);
+            let mut root = BTreeMap::new();
+            root.insert("name".to_string(), Json::Str(format!("request {}", rt.id)));
+            root.insert("ph".to_string(), Json::Str("X".to_string()));
+            root.insert("ts".to_string(), us(rt.start_ns));
+            root.insert("dur".to_string(), us(rt.total_ns));
+            root.insert("pid".to_string(), Json::Num(0.0));
+            root.insert("tid".to_string(), tid.clone());
+            let mut args = BTreeMap::new();
+            args.insert("request_id".to_string(), Json::Num(rt.id as f64));
+            args.insert("error".to_string(), Json::Bool(rt.error));
+            root.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(root));
+            for s in &rt.spans {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(s.phase.label().to_string()));
+                m.insert("ph".to_string(), Json::Str("X".to_string()));
+                m.insert("ts".to_string(), us(s.start_ns));
+                m.insert("dur".to_string(), us(s.dur_ns));
+                m.insert("pid".to_string(), Json::Num(0.0));
+                m.insert("tid".to_string(), tid.clone());
+                let mut args = BTreeMap::new();
+                args.insert("request_id".to_string(), Json::Num(rt.id as f64));
+                if s.phase == Phase::StepWave {
+                    args.insert("occupancy".to_string(), Json::Num(s.occupancy as f64));
+                    args.insert("co_resident".to_string(), Json::Num(s.co_resident as f64));
+                }
+                m.insert("args".to_string(), Json::Obj(args));
+                events.push(Json::Obj(m));
+            }
+            for e in &rt.events {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.kind.label().to_string()));
+                m.insert("ph".to_string(), Json::Str("i".to_string()));
+                m.insert("s".to_string(), Json::Str("t".to_string()));
+                m.insert("ts".to_string(), us(e.at_ns));
+                m.insert("pid".to_string(), Json::Num(0.0));
+                m.insert("tid".to_string(), tid.clone());
+                events.push(Json::Obj(m));
+            }
+        }
+        events
+    }
+
+    /// Standalone chrome-trace document (request lanes only) in the
+    /// same envelope the kernel profiler emits.
+    pub fn chrome_trace(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(self.chrome_events()));
+        top.insert("displayTimeUnit".to_string(), Json::Str("ns".to_string()));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn finish_one(tracer: &Arc<Tracer>, spin: Duration, error: bool) -> u64 {
+        let mut t = tracer.start_request();
+        let id = t.id;
+        let t0 = Instant::now();
+        std::thread::sleep(spin);
+        t.span_from(Phase::Prefill, t0);
+        t.finish(error);
+        id
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_slowest() {
+        let tracer = Tracer::shared(TraceConfig {
+            ring: 2,
+            tail_pct: 0.0, // everything qualifies; the ring must bound it
+            sample_every: 1,
+            min_tail_samples: 1,
+        });
+        for ms in [1u64, 5, 2, 4, 3] {
+            finish_one(&tracer, Duration::from_millis(ms), false);
+        }
+        let rep = tracer.report();
+        assert_eq!(rep.requests, 5);
+        assert_eq!(rep.retained.len(), 2, "ring bound");
+        // The two slowest (5ms, 4ms) survive; report sorts slowest first.
+        assert!(rep.retained[0].total_ns >= rep.retained[1].total_ns);
+        assert!(rep.retained[1].total_ns >= 3_000_000, "kept the slow tail");
+    }
+
+    #[test]
+    fn errors_are_always_retained() {
+        let tracer = Tracer::shared(TraceConfig {
+            ring: 1,
+            tail_pct: 0.0,
+            sample_every: 1,
+            min_tail_samples: 1,
+        });
+        finish_one(&tracer, Duration::from_millis(8), false);
+        let err_id = finish_one(&tracer, Duration::from_millis(1), true);
+        let rep = tracer.report();
+        assert_eq!(rep.errors, 1);
+        assert_eq!(rep.retained.len(), 1);
+        assert_eq!(rep.retained[0].id, err_id, "error evicts the faster-but-clean entry");
+        assert!(rep.retained[0].error);
+    }
+
+    #[test]
+    fn head_sampling_gates_detail_but_counts_everything() {
+        let tracer = Tracer::shared(TraceConfig {
+            ring: 8,
+            tail_pct: 0.0,
+            sample_every: 2,
+            min_tail_samples: 1,
+        });
+        for _ in 0..4 {
+            let mut t = tracer.start_request();
+            assert_eq!(t.detailed(), t.id % 2 == 0);
+            let t0 = Instant::now();
+            t.span_from(Phase::Admit, t0);
+            t.finish(false);
+        }
+        let rep = tracer.report();
+        assert_eq!(rep.requests, 4);
+        assert_eq!(rep.detailed, 2);
+        assert_eq!(rep.retained.len(), 2, "only detailed requests retain span trees");
+    }
+
+    #[test]
+    fn dropped_trace_retires_as_error() {
+        let tracer = Tracer::shared(TraceConfig {
+            ring: 4,
+            tail_pct: 0.0,
+            sample_every: 1,
+            min_tail_samples: 1,
+        });
+        drop(tracer.start_request());
+        let rep = tracer.report();
+        assert_eq!(rep.requests, 1);
+        assert_eq!(rep.errors, 1);
+        assert_eq!(rep.retained.len(), 1);
+    }
+
+    #[test]
+    fn wave_spans_carry_occupancy() {
+        let tracer = Tracer::shared(TraceConfig::default());
+        let mut t = tracer.start_request();
+        t.span_at(Phase::StepWave, Instant::now(), 1_000, 4, 3);
+        t.event(EventKind::PagePoolCheckout { in_use: 2, capacity: Some(8) });
+        t.finish(false);
+        let rep = tracer.report();
+        let rt = &rep.retained[0];
+        assert_eq!(rt.phase_ns(Phase::StepWave), 1_000);
+        let w = rt.spans.iter().find(|s| s.phase == Phase::StepWave).unwrap();
+        assert_eq!((w.occupancy, w.co_resident), (4, 3));
+        assert_eq!(rt.events.len(), 1);
+    }
+}

@@ -409,6 +409,56 @@ fn partial_waves_with_dummy_lanes_and_retirement_stay_bitwise() {
 }
 
 #[test]
+fn phase_timed_batched_stepper_is_bitwise_equal_to_untimed() {
+    // PR 9: the decode-phase split on the batched path only brackets the
+    // wave with clock reads — rows must stay bitwise identical to the
+    // untimed stepper, and the accounting must reconcile with the waves
+    // actually dispatched.
+    let prompts: [&[i32]; 2] = [&[5, 9, 17], &[2, 31]];
+    let steps: [&[i32]; 2] = [&[3, 44, 7], &[8, 3, 90]];
+    let mut eng = engine(2, CompressionConfig::none());
+    eng.enable_batched(2);
+    let reference: Vec<Vec<Vec<f32>>> =
+        (0..2).map(|i| kv_logits(&eng, 2, prompts[i], steps[i])).collect();
+
+    let dec = eng.decoder();
+    let cfg = tiny_cfg();
+    let mut prefill = vec![0.0f32; cfg.seq * cfg.vocab];
+    let mut caches: Vec<_> = (0..2).map(|_| dec.new_cache().unwrap()).collect();
+    for (i, c) in caches.iter_mut().enumerate() {
+        dec.prefill_into(prompts[i], c, &mut prefill, eng.weights(), 2).unwrap();
+    }
+    let mut stepper = BatchStepper::new(dec);
+    stepper.enable_phase_timing();
+    for t in 0..3 {
+        let mut slots: Vec<BatchSlot> = caches
+            .iter_mut()
+            .enumerate()
+            .map(|(i, c)| {
+                let pos = c.len;
+                BatchSlot { cache: c, token: steps[i][t], pos }
+            })
+            .collect();
+        stepper.step(dec, eng.weights(), 2, &mut slots).unwrap();
+        for i in 0..2 {
+            assert_eq!(
+                stepper.logits_row(i),
+                reference[i][t + 1].as_slice(),
+                "slot {i} wave {t}: phase timing perturbed the logits"
+            );
+        }
+    }
+    let phases = stepper.take_phases();
+    assert_eq!(phases.steps, 6, "3 waves x 2 active slots, counted per token");
+    assert!(phases.step_compute_ns > 0, "wave compute was timed");
+    assert!(phases.prefill_ns == 0, "the stepper never prefills");
+    assert_eq!(stepper.phases().steps, 0, "take_phases resets the accumulator");
+    for c in caches {
+        dec.release_cache(c);
+    }
+}
+
+#[test]
 fn batched_step_graphs_run_zero_int8_fallbacks() {
     // Acceptance: the whole batched ladder dispatches through the fused
     // int8 kernels — no per-node interpreter fallbacks crept in with the

@@ -67,7 +67,7 @@ fn staggered_retirement_matches_batch1_text_per_session() {
         reqs.iter().map(|r| eng.generate(r).expect("batch-1 reference")).collect()
     };
 
-    let gb = GenBatcher::new(tiny_gen(2), GenBatcherOptions { max_slots: 4, max_kv_pages: None });
+    let gb = GenBatcher::new(tiny_gen(2), GenBatcherOptions { max_slots: 4, ..Default::default() });
     let rxs: Vec<_> = reqs.iter().map(|r| gb.submit(r.clone()).expect("4 slots free")).collect();
     for (i, (rx, want)) in rxs.into_iter().zip(&reference).enumerate() {
         let got = rx
@@ -87,7 +87,7 @@ fn staggered_retirement_matches_batch1_text_per_session() {
 
 #[test]
 fn slots_full_rejects_typed_and_frees_on_retirement() {
-    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions { max_slots: 1, max_kv_pages: None });
+    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions { max_slots: 1, ..Default::default() });
     // Occupy the only slot with a long-ish session.
     let rx = gb.submit(req("the model generates", 8, 1)).expect("slot free");
     assert_eq!(gb.slots_in_use(), 1);
@@ -113,7 +113,7 @@ fn page_pool_exhaustion_fails_the_session_not_the_batch() {
     // while the seated sessions run to completion unharmed.
     let gb = GenBatcher::new(
         tiny_gen(1),
-        GenBatcherOptions { max_slots: 4, max_kv_pages: Some(4) },
+        GenBatcherOptions { max_slots: 4, max_kv_pages: Some(4), ..Default::default() },
     );
     let rxs: Vec<_> = (0..4)
         .map(|i| gb.submit(req("the model generates", 9, i as u64)).expect("slots free"))
@@ -153,7 +153,7 @@ fn page_pool_exhaustion_fails_the_session_not_the_batch() {
 
 #[test]
 fn dropped_receivers_do_not_wedge_the_scheduler() {
-    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions { max_slots: 2, max_kv_pages: None });
+    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions { max_slots: 2, ..Default::default() });
     // Submit and immediately drop the receivers while the sessions are
     // in flight: the worker's reply sends fail silently and retirement
     // still frees the slots and pages.

@@ -59,6 +59,38 @@ fn trace_json_round_trips() {
 }
 
 #[test]
+fn chrome_trace_with_appends_extra_lanes() {
+    // PR 9: request lanes from the serving tracer merge into the kernel
+    // timeline through `chrome_trace_with` — extra events are appended
+    // verbatim after the kernel/wave events, and the plain export stays
+    // pinned to blocks + waves.
+    let (c, feeds) = tiny_bert();
+    let rep = profile_runs(&c, &feeds, None, 2, 1).unwrap().remove(0);
+    let extra: Vec<Json> = (0..2)
+        .map(|i| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(format!("request {i}")));
+            m.insert("ph".to_string(), Json::Str("X".to_string()));
+            m.insert("ts".to_string(), Json::Num(0.0));
+            m.insert("dur".to_string(), Json::Num(1.0));
+            m.insert("pid".to_string(), Json::Num(0.0));
+            m.insert("tid".to_string(), Json::Num((100 + i) as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let merged = Json::parse(&rep.chrome_trace_with(&extra).dump()).unwrap();
+    let events = merged.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert_eq!(events.len(), rep.blocks.len() + rep.waves.len() + extra.len());
+    let request_lanes =
+        events.iter().filter(|e| e.get("tid").and_then(|t| t.as_f64()) >= Some(100.0)).count();
+    assert_eq!(request_lanes, extra.len(), "request lanes survive the merge");
+    // The no-extra form is the delegating identity.
+    let plain = Json::parse(&rep.chrome_trace().dump()).unwrap();
+    let plain_events = plain.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert_eq!(plain_events.len(), rep.blocks.len() + rep.waves.len());
+}
+
+#[test]
 fn aggregate_accounts_for_every_dispatch() {
     let (c, feeds) = tiny_bert();
     let rep = profile_runs(&c, &feeds, None, 4, 1).unwrap().remove(0);

@@ -1,0 +1,246 @@
+//! Request-scoped tracing integration pins (PR 9):
+//!
+//! * traced runs are bitwise identical to untraced runs — tracing only
+//!   brackets phases with clock reads, never touches model/RNG state;
+//! * no tracer attached means zero samples and no request ids;
+//! * the `BENCH_trace.json` document schema is pinned, like
+//!   `tests/profile.rs` pins the chrome trace_event schema;
+//! * a sampled slow request's span tree accounts for >= 95% of its
+//!   caller-observed latency (the end-to-end attribution contract).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use canao::model::BertConfig;
+use canao::serving::{
+    GenBatcher, GenBatcherOptions, GenRequest, NativeGenEngine, Phase, TraceConfig, Tracer,
+    REQUEST_LANE_BASE,
+};
+use canao::tokenizer::{Tokenizer, Vocab};
+use canao::util::json::Json;
+
+const CORPUS: &str = "the quick brown fox jumps over the lazy dog . \
+                      the model generates new sentences word by word . \
+                      layer fusion reduces the number of kernels .";
+
+/// Engine weights are drawn from a fixed seed, so two engines built
+/// from the same config are identical — the untraced batch-1 reference
+/// and the traced scheduler compare across separate instances.
+fn tiny_gen(threads: usize) -> NativeGenEngine {
+    let tok = Arc::new(Tokenizer::new(Vocab::build(CORPUS, 256)));
+    let cfg = BertConfig { vocab: 256, seq: 12, layers: 1, hidden: 8, heads: 2, inter: 16 };
+    NativeGenEngine::new(tok, cfg, threads)
+}
+
+/// A larger model for the latency-coverage pin: enough compute per wave
+/// that fixed scheduling gaps are a small fraction of the total.
+fn slow_gen(threads: usize) -> NativeGenEngine {
+    let tok = Arc::new(Tokenizer::new(Vocab::build(CORPUS, 256)));
+    let cfg = BertConfig { vocab: 256, seq: 64, layers: 2, hidden: 32, heads: 2, inter: 64 };
+    NativeGenEngine::new(tok, cfg, threads)
+}
+
+fn req(prompt: &str, max_new_tokens: usize, seed: u64) -> GenRequest {
+    GenRequest { prompt: prompt.into(), max_new_tokens, temperature: 0.9, seed }
+}
+
+#[test]
+fn traced_batched_run_is_bitwise_equal_to_untraced_batch1() {
+    let reqs: Vec<GenRequest> =
+        [("the model", 2usize), ("the quick brown", 4), ("fox", 6), ("lazy dog", 8)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(p, n))| req(p, n, 40 + i as u64))
+            .collect();
+    let reference: Vec<_> = {
+        let eng = tiny_gen(2);
+        reqs.iter().map(|r| eng.generate(r).expect("untraced reference")).collect()
+    };
+
+    let tracer = Tracer::shared(TraceConfig::default());
+    let gb = GenBatcher::new(
+        tiny_gen(2),
+        GenBatcherOptions {
+            max_slots: 4,
+            tracer: Some(Arc::clone(&tracer)),
+            time_phases: true,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| gb.submit(r.clone()).expect("4 slots free")).collect();
+    for (i, (rx, want)) in rxs.into_iter().zip(&reference).enumerate() {
+        let got = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("no caller hangs")
+            .expect("session succeeds");
+        assert_eq!(got.text, want.text, "session {i}: tracing changed the generated text");
+        assert_eq!(got.tokens_generated, want.tokens_generated, "session {i}");
+        assert_eq!(got.request_id, Some(i as u64), "ids assigned in submit order");
+    }
+    // Phase timing rode along without perturbing anything either.
+    assert!(gb.metrics.decode_phases.steps.get() > 0, "batched phase split recorded");
+    let metrics = Arc::clone(&gb.metrics);
+    gb.shutdown();
+    assert_eq!(metrics.failed.get(), 0);
+
+    let rep = tracer.report();
+    assert_eq!(rep.requests, 4);
+    assert_eq!(rep.detailed, 4, "sample_every=1 details everything");
+    assert_eq!(rep.errors, 0);
+    // All four sit in the bootstrap tail window -> full span trees.
+    assert_eq!(rep.retained.len(), 4);
+    for rt in &rep.retained {
+        assert!(!rt.error);
+        assert!(rt.spans.iter().any(|s| s.phase == Phase::QueueWait), "queue_wait recorded");
+        assert!(rt.phase_ns(Phase::Admit) > 0, "admit (prefill inside) recorded");
+        assert!(rt.spans.iter().any(|s| s.phase == Phase::StepWave), "waves recorded");
+        let wave = rt.spans.iter().find(|s| s.phase == Phase::StepWave).unwrap();
+        assert!(wave.occupancy >= 1, "wave spans carry the dispatched rung");
+        assert!(wave.co_resident >= 1 && wave.co_resident <= 4);
+    }
+}
+
+#[test]
+fn no_tracer_means_no_ids_and_identical_output() {
+    let want = tiny_gen(1).generate(&req("the model", 3, 7)).unwrap();
+    let gb = GenBatcher::new(tiny_gen(1), GenBatcherOptions { max_slots: 2, ..Default::default() });
+    let got = gb.call(req("the model", 3, 7)).expect("session succeeds");
+    assert_eq!(got.text, want.text, "untraced scheduler matches batch-1");
+    assert_eq!(got.request_id, None, "no tracer -> no request ids, zero samples");
+    gb.shutdown();
+}
+
+#[test]
+fn head_sampling_gates_detail_on_the_real_scheduler() {
+    let tracer = Tracer::shared(TraceConfig { sample_every: 2, ..TraceConfig::default() });
+    let gb = GenBatcher::new(
+        tiny_gen(1),
+        GenBatcherOptions { max_slots: 1, tracer: Some(Arc::clone(&tracer)), ..Default::default() },
+    );
+    for i in 0..4u64 {
+        // One at a time: the 1-slot scheduler serializes, so ids are
+        // assigned 0..4 in order and alternate detailed/summary-only.
+        let resp = gb.call(req("the model", 2, i)).expect("session succeeds");
+        assert_eq!(resp.request_id, Some(i));
+    }
+    gb.shutdown();
+    let rep = tracer.report();
+    assert_eq!(rep.requests, 4, "sampled-out requests still count");
+    assert_eq!(rep.detailed, 2, "every 2nd request records spans");
+    assert_eq!(rep.errors, 0);
+    assert_eq!(rep.retained.len(), 2, "only detailed requests retain span trees");
+}
+
+#[test]
+fn trace_json_schema_is_pinned() {
+    let tracer = Tracer::shared(TraceConfig::default());
+    let gb = GenBatcher::new(
+        tiny_gen(1),
+        GenBatcherOptions { max_slots: 2, tracer: Some(Arc::clone(&tracer)), ..Default::default() },
+    );
+    for i in 0..2u64 {
+        gb.call(req("the model generates", 3, i)).expect("session succeeds");
+    }
+    gb.shutdown();
+    let rep = tracer.report();
+    let parsed = Json::parse(&rep.json().dump_pretty()).expect("BENCH_trace.json parses");
+
+    assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
+    assert_eq!(parsed.get("bench").unwrap().as_str(), Some("trace"));
+    assert_eq!(parsed.get("requests").unwrap().as_usize(), Some(2));
+    for key in ["detailed", "errors", "tail_pct", "total_p50_us", "total_p95_us", "total_p99_us"] {
+        assert!(parsed.get(key).unwrap().as_f64().is_some(), "top-level `{key}`");
+    }
+    let phases = parsed.get("phases").expect("phases object");
+    for label in ["queue_wait", "admit", "prefill", "step_wave", "sample", "retire", "run"] {
+        let p = phases.get(label).unwrap_or_else(|| panic!("phase `{label}` missing"));
+        for k in ["count", "p50_us", "p95_us", "p99_us", "max_us", "mean_us"] {
+            assert!(p.get(k).unwrap().as_f64().is_some(), "{label}.{k}");
+        }
+    }
+    let retained = parsed.get("retained").and_then(|r| r.as_arr()).expect("retained array");
+    assert_eq!(retained.len(), 2);
+    for rt in retained {
+        for k in ["id", "error", "start_us", "total_us"] {
+            assert!(rt.get(k).is_some(), "retained.{k}");
+        }
+        let spans = rt.get("spans").and_then(|s| s.as_arr()).expect("spans array");
+        assert!(!spans.is_empty());
+        for s in spans {
+            for k in ["phase", "start_us", "dur_us", "occupancy", "co_resident"] {
+                assert!(s.get(k).is_some(), "span.{k}");
+            }
+        }
+        assert!(rt.get("events").and_then(|e| e.as_arr()).is_some(), "events array");
+    }
+
+    // The chrome view puts every retained request on its own lane at
+    // REQUEST_LANE_BASE+, wrapped in the profiler's envelope.
+    let chrome = Json::parse(&rep.chrome_trace().dump()).unwrap();
+    assert_eq!(chrome.get("displayTimeUnit").and_then(|d| d.as_str()), Some("ns"));
+    let events = chrome.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert!(!events.is_empty());
+    for ev in events {
+        let tid = ev.get("tid").and_then(|t| t.as_f64()).expect("lane tid");
+        assert!(tid >= REQUEST_LANE_BASE as f64, "request lanes start at {REQUEST_LANE_BASE}");
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap();
+        assert!(ph == "X" || ph == "i", "span or instant events only");
+    }
+}
+
+#[test]
+fn slow_request_span_tree_covers_caller_latency() {
+    // The attribution contract: for a tail-sampled request, the recorded
+    // span tree explains where the caller's wall time actually went —
+    // >= 95% of the caller-observed latency lands inside spans.
+    let tracer = Tracer::shared(TraceConfig::default());
+    let gb = GenBatcher::new(
+        slow_gen(2),
+        GenBatcherOptions {
+            max_slots: 2,
+            tracer: Some(Arc::clone(&tracer)),
+            ..Default::default()
+        },
+    );
+    let t0 = Instant::now();
+    let rx = gb.submit(req("the model generates new sentences", 32, 5)).expect("slot free");
+    let resp = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("no caller hangs")
+        .expect("session succeeds");
+    let caller_ns = t0.elapsed().as_nanos() as u64;
+    assert!(resp.tokens_generated >= 16, "a genuinely slow request");
+    // Join the worker so the retirement reached the tracer.
+    gb.shutdown();
+
+    let rep = tracer.report();
+    let rt = rep
+        .retained
+        .iter()
+        .find(|r| Some(r.id) == resp.request_id)
+        .expect("slow request retained (bootstrap tail window)");
+    // Disjoint top-level phases: queue_wait, admit (prefill + the first
+    // sample nest inside it), the step waves, the post-wave samples, and
+    // retire. The first sample span is the admit-time one — skip it to
+    // avoid double counting.
+    let post_wave_samples: u64 = rt
+        .spans
+        .iter()
+        .filter(|s| s.phase == Phase::Sample)
+        .skip(1)
+        .map(|s| s.dur_ns)
+        .sum();
+    let covered = rt.phase_ns(Phase::QueueWait)
+        + rt.phase_ns(Phase::Admit)
+        + rt.phase_ns(Phase::StepWave)
+        + rt.phase_ns(Phase::Retire)
+        + post_wave_samples;
+    assert!(
+        covered as f64 >= 0.95 * caller_ns as f64,
+        "span tree covers {covered} ns of {caller_ns} ns caller latency \
+         ({:.1}%; trace total {} ns)",
+        100.0 * covered as f64 / caller_ns as f64,
+        rt.total_ns
+    );
+    assert!(covered <= caller_ns + caller_ns / 4, "spans cannot dwarf the caller's clock");
+}

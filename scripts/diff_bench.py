@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Shape-diff a fresh bench report against its committed seed.
+
+Usage: diff_bench.py SEED.json FRESH.json
+
+Bench values (latencies, throughput, counts) vary by host, so CI cannot
+compare them — what it can pin is the document *shape*: the `schema`
+version, the bench name, and the key sets at every object level. A PR
+that adds, renames, or drops a field without bumping the schema (or
+without regenerating the committed seed) fails here; a PR that merely
+runs faster or slower passes.
+
+Rules, applied recursively from the root:
+
+* `null` on either side matches anything — optional sections
+  (`ttft`, `page_pool`, `trace`, `git_commit`, ...) are host- and
+  flag-dependent;
+* two objects must have identical key sets, and each shared key is
+  compared recursively;
+* two arrays match as arrays (element counts and contents vary by run);
+* two scalars must agree on kind (number/string/bool).
+
+Exit status 0 on match; 1 with a per-path report on mismatch.
+"""
+
+import json
+import sys
+
+
+def kind(v):
+    if isinstance(v, dict):
+        return "object"
+    if isinstance(v, list):
+        return "array"
+    if isinstance(v, bool):
+        return "bool"
+    if isinstance(v, (int, float)):
+        return "number"
+    if isinstance(v, str):
+        return "string"
+    return "null"
+
+
+def diff(seed, fresh, path, errors):
+    if seed is None or fresh is None:
+        return
+    ks, kf = kind(seed), kind(fresh)
+    if ks != kf:
+        errors.append(f"{path}: seed is {ks}, fresh is {kf}")
+        return
+    if ks == "object":
+        missing = sorted(seed.keys() - fresh.keys())
+        extra = sorted(fresh.keys() - seed.keys())
+        if missing:
+            errors.append(f"{path}: fresh run dropped keys {missing}")
+        if extra:
+            errors.append(f"{path}: fresh run added keys {extra} (regenerate the seed?)")
+        for k in sorted(seed.keys() & fresh.keys()):
+            diff(seed[k], fresh[k], f"{path}.{k}", errors)
+
+
+def main(argv):
+    if len(argv) != 3:
+        sys.stderr.write(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        seed = json.load(f)
+    with open(argv[2]) as f:
+        fresh = json.load(f)
+
+    errors = []
+    for key in ("schema", "bench"):
+        if seed.get(key) != fresh.get(key):
+            errors.append(f"$.{key}: seed {seed.get(key)!r} != fresh {fresh.get(key)!r}")
+    if not errors:
+        diff(seed, fresh, "$", errors)
+
+    if errors:
+        print(f"shape diff FAILED: {argv[1]} vs {argv[2]}")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"shape diff OK: {argv[2]} matches {argv[1]} (schema {seed.get('schema')})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
