@@ -25,7 +25,11 @@
 //! Run: cargo bench --bench serving_load -- \
 //!        [--qps F] [--duration-ms N] [--queue-cap N] [--threads N]
 //!        [--tokens N] [--seed N] [--burst N] [--slots N] [--out PATH]
-//!        [--trace-sample N] [--trace-json PATH]
+//!        [--trace-sample N] [--trace-json PATH] [--no-pool]
+//!
+//! `--no-pool` swaps every engine from the persistent worker pool onto
+//! the spawn-per-wave scoped reference executor (the bitwise-equality
+//! baseline); CI runs both so a pool-only regression cannot hide.
 //!
 //! The report always lands in `--out` (default `BENCH_serving.json`, in
 //! the package directory) so a plain `cargo bench --bench serving_load`
@@ -38,6 +42,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use canao::compiler::exec::ExecBackend;
 use canao::serving::{
     run_gen_load, run_gen_load_batched, run_qa_load, write_bench_json, GenBatcherOptions,
     GenRequest, LoadConfig, LoadReport, NativeGenEngine, NativeQaEngine, QaRequest, TraceConfig,
@@ -71,8 +76,12 @@ fn independent_baseline(
     cfg: &LoadConfig,
 ) -> LoadReport {
     let per_reqs = (cfg.saturation_burst / slots).max(1);
-    let engines: Vec<NativeGenEngine> =
-        (0..slots).map(|_| NativeGenEngine::demo(Arc::clone(tok), per_threads)).collect();
+    let engines: Vec<NativeGenEngine> = (0..slots)
+        .map(|_| {
+            NativeGenEngine::demo(Arc::clone(tok), per_threads)
+                .with_backend(ExecBackend::with_pool(cfg.use_pool, per_threads))
+        })
+        .collect();
     let t0 = Instant::now();
     let results: Vec<(usize, usize, Vec<f64>)> = std::thread::scope(|s| {
         let handles: Vec<_> = engines
@@ -137,7 +146,7 @@ fn independent_baseline(
 fn main() {
     // `cargo bench -- --flags` forwards everything after `--`; cargo
     // itself may also pass `--bench`, which parses as a boolean flag.
-    let args = Args::from_env(&["bench"]);
+    let args = Args::from_env(&["bench", "no-pool"]);
     let cfg = LoadConfig {
         qps: args.f64_or("qps", 48.0),
         duration: Duration::from_millis(args.u64_or("duration-ms", 3000)),
@@ -146,6 +155,7 @@ fn main() {
         queue_cap: args.usize_or("queue-cap", 128),
         max_new_tokens: args.usize_or("tokens", 8),
         saturation_burst: args.usize_or("burst", 32),
+        use_pool: !args.has("no-pool"),
     };
     let slots = args.usize_or("slots", 4).max(1);
     println!(
@@ -164,10 +174,14 @@ fn main() {
                   the runtime loads the compiled program and executes it on the device ."
             .into(),
     }];
-    let qa = run_qa_load(NativeQaEngine::demo(Arc::clone(&tok), cfg.threads), &qa_reqs, &cfg);
+    let qa_engine = NativeQaEngine::demo(Arc::clone(&tok), cfg.threads)
+        .with_backend(ExecBackend::with_pool(cfg.use_pool, cfg.threads));
+    let qa = run_qa_load(qa_engine, &qa_reqs, &cfg);
     print!("{}", qa.render());
 
-    let gen = run_gen_load(NativeGenEngine::demo(Arc::clone(&tok), cfg.threads), &PROMPTS, &cfg);
+    let gen_engine = NativeGenEngine::demo(Arc::clone(&tok), cfg.threads)
+        .with_backend(ExecBackend::with_pool(cfg.use_pool, cfg.threads));
+    let gen = run_gen_load(gen_engine, &PROMPTS, &cfg);
     print!("{}", gen.render());
 
     // Same-thread-budget comparison: the batched engine gets
@@ -175,7 +189,8 @@ fn main() {
     // gets `per_threads` per engine across `slots` engines.
     let per_threads = (cfg.threads / slots).max(1);
     let budget = per_threads * slots;
-    let batched_engine = NativeGenEngine::demo(Arc::clone(&tok), budget);
+    let batched_engine = NativeGenEngine::demo(Arc::clone(&tok), budget)
+        .with_backend(ExecBackend::with_pool(cfg.use_pool, budget));
     let tracer = args.get("trace-sample").map(|_| {
         Tracer::shared(TraceConfig {
             sample_every: args.u64_or("trace-sample", 1).max(1),

@@ -8,6 +8,13 @@
 //! per column (Fig. 4 `fuse_add'`), the row schedule recomputes them
 //! (Fig. 4 `fuse_add`).
 //!
+//! Every kernel entry point borrows a caller-provided [`Scratch`] arena
+//! for its register banks and row buffers instead of allocating: the
+//! pool executor's workers own one scratch each for their lifetime, so
+//! steady-state execution performs zero kernel allocations. Scratch
+//! buffers are zero-resized to the exact historical lengths on checkout,
+//! keeping reuse bitwise-invisible.
+//!
 //! Two fused matmul kernels build on the tape, sharing its per-row
 //! evaluator so their epilogues are bitwise-identical to plain tape
 //! execution:
@@ -26,6 +33,7 @@
 //!   bit for bit, so fused output == per-node output always (the decode
 //!   subsystem's differential contract depends on it).
 
+use crate::compiler::exec::pool::Scratch;
 use crate::compiler::exec::tensor::{
     accumulate_row_i8, quantize_row_i8, QuantizedTensor, Tensor, View,
 };
@@ -205,7 +213,8 @@ impl BlockTape {
         self.execute_views(&views, sched)
     }
 
-    /// As `execute`, over borrowed views.
+    /// As `execute`, over borrowed views (owns a throwaway [`Scratch`] —
+    /// hot paths hand a persistent one to `execute_into` instead).
     pub fn execute_views(&self, bufs: &[View], sched: Schedule) -> Vec<Tensor> {
         let numel = self.domain.numel();
         let mut storage: Vec<Vec<f32>> =
@@ -213,7 +222,7 @@ impl BlockTape {
         {
             let mut outs: Vec<&mut [f32]> =
                 storage.iter_mut().map(|v| v.as_mut_slice()).collect();
-            self.execute_into(bufs, sched, &mut outs);
+            self.execute_into(bufs, sched, &mut outs, &mut Scratch::new());
         }
         storage
             .into_iter()
@@ -231,19 +240,25 @@ impl BlockTape {
     /// (row schedule) or per COLUMN (hoisted schedule) instead of per
     /// element, exactly what real codegen emits as SIMD loops. Memory
     /// access order (the schedules' defining property) is unchanged.
-    pub fn execute_into(&self, bufs: &[View], sched: Schedule, outs: &mut [&mut [f32]]) {
+    pub fn execute_into(
+        &self,
+        bufs: &[View],
+        sched: Schedule,
+        outs: &mut [&mut [f32]],
+        scratch: &mut Scratch,
+    ) {
         assert_eq!(bufs.len(), self.inputs.len());
         assert_eq!(outs.len(), self.output_regs.len());
         if self.domain.rank() == 2 {
             match sched {
                 Schedule::RowRecompute => {
-                    self.execute_rows_into(bufs, 0, self.domain.dims[0], outs)
+                    self.execute_rows_into(bufs, 0, self.domain.dims[0], outs, scratch)
                 }
-                Schedule::HoistedColMajor => self.execute_cols_into(bufs, outs),
+                Schedule::HoistedColMajor => self.execute_cols_into(bufs, outs, scratch),
             }
             return;
         }
-        self.execute_scalar_into(bufs, sched, outs);
+        self.execute_scalar_into(bufs, sched, outs, scratch);
     }
 
     /// Row schedule, vectorized, over the row range `[row0, row1)`: walk
@@ -258,13 +273,14 @@ impl BlockTape {
         row0: usize,
         row1: usize,
         outs: &mut [&mut [f32]],
+        scratch: &mut Scratch,
     ) {
         assert_eq!(self.domain.rank(), 2, "row execution needs a 2-D domain");
         let n = self.domain.dims[1];
-        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; self.insts.len()];
+        let regs = scratch.reg_bank(self.insts.len(), n);
 
         for i in row0..row1 {
-            self.eval_row_regs(bufs, i, &mut regs, None);
+            self.eval_row_regs(bufs, i, regs, None);
             let base = (i - row0) * n;
             for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
                 outs[oi][base..base + n].copy_from_slice(&regs[r]);
@@ -333,12 +349,40 @@ impl BlockTape {
     /// Hoisted schedule, vectorized: walk columns; row-invariant registers
     /// computed once per column (scalars), variant registers evaluated
     /// down the column (stride-n access = the fuse_add' locality cost).
-    fn execute_cols_into(&self, bufs: &[View], outs: &mut [&mut [f32]]) {
-        let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
-        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; m]; self.insts.len()];
-        let mut hoisted = vec![0.0f32; self.insts.len()];
+    fn execute_cols_into(&self, bufs: &[View], outs: &mut [&mut [f32]], scratch: &mut Scratch) {
+        let n = self.domain.dims[1];
+        let cols: Vec<ColOut> = outs.iter_mut().map(|o| ColOut::new(o)).collect();
+        // SAFETY: one thread, full column range — trivially disjoint.
+        unsafe { self.execute_cols_range_into(bufs, 0, n, &cols, scratch) }
+    }
 
-        for j in 0..n {
+    /// Hoisted schedule over the column range `[col0, col1)`, writing
+    /// absolute `i * n + j` positions through raw [`ColOut`] sinks. This
+    /// is the column-parallel executor's entry point: columns are fully
+    /// independent (each column's hoisted scalars and variant registers
+    /// are recomputed from the inputs alone), so disjoint column ranges
+    /// across workers produce bitwise-identical results to one full pass.
+    ///
+    /// # Safety
+    ///
+    /// Each `ColOut` must stay valid for the duration of the call, and no
+    /// other thread may write the `(i, j)` positions of `[col0, col1)`
+    /// concurrently — the wave executor guarantees this by handing every
+    /// worker a disjoint column range of the same sinks.
+    pub unsafe fn execute_cols_range_into(
+        &self,
+        bufs: &[View],
+        col0: usize,
+        col1: usize,
+        outs: &[ColOut],
+        scratch: &mut Scratch,
+    ) {
+        let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
+        debug_assert_eq!(outs.len(), self.output_regs.len());
+        debug_assert!(col1 <= n);
+        let (regs, hoisted) = scratch.cols_state(self.insts.len(), m);
+
+        for j in col0..col1 {
             // Scalar pass over invariant registers.
             for (ri, inst) in self.insts.iter().enumerate() {
                 if !self.row_invariant[ri] {
@@ -375,7 +419,7 @@ impl BlockTape {
                             let v = apply_unary(op, hoisted[src]);
                             regs[ri].fill(v);
                         } else {
-                            let (a, b) = split_two(&mut regs, ri, src);
+                            let (a, b) = split_two(regs, ri, src);
                             for (o, &x) in a.iter_mut().zip(b.iter()) {
                                 *o = apply_unary(op, x);
                             }
@@ -387,20 +431,20 @@ impl BlockTape {
                             (true, true) => unreachable!("would be invariant"),
                             (true, false) => {
                                 let hv = hoisted[lhs];
-                                let (dst, r) = split_two(&mut regs, ri, rhs);
+                                let (dst, r) = split_two(regs, ri, rhs);
                                 for (o, &x) in dst.iter_mut().zip(r.iter()) {
                                     *o = f(hv, x);
                                 }
                             }
                             (false, true) => {
                                 let hv = hoisted[rhs];
-                                let (dst, l) = split_two(&mut regs, ri, lhs);
+                                let (dst, l) = split_two(regs, ri, lhs);
                                 for (o, &x) in dst.iter_mut().zip(l.iter()) {
                                     *o = f(x, hv);
                                 }
                             }
                             (false, false) => {
-                                let (dst, l, r) = split_three(&mut regs, ri, lhs, rhs);
+                                let (dst, l, r) = split_three(regs, ri, lhs, rhs);
                                 for ((o, &a), &b) in dst.iter_mut().zip(l.iter()).zip(r.iter()) {
                                     *o = f(a, b);
                                 }
@@ -413,12 +457,14 @@ impl BlockTape {
                 if self.row_invariant[r] {
                     let v = hoisted[r];
                     for i in 0..m {
-                        outs[oi][i * n + j] = v;
+                        // SAFETY: (i, j) is inside this call's column range.
+                        unsafe { outs[oi].set(i * n + j, v) };
                     }
                 } else {
                     let col = &regs[r];
                     for i in 0..m {
-                        outs[oi][i * n + j] = col[i]; // column-major store
+                        // SAFETY: as above; column-major store.
+                        unsafe { outs[oi].set(i * n + j, col[i]) };
                     }
                 }
             }
@@ -426,20 +472,29 @@ impl BlockTape {
     }
 
     /// Generic per-element path for non-2-D domains.
-    fn execute_scalar_into(&self, bufs: &[View], sched: Schedule, outs: &mut [&mut [f32]]) {
+    fn execute_scalar_into(
+        &self,
+        bufs: &[View],
+        sched: Schedule,
+        outs: &mut [&mut [f32]],
+        scratch: &mut Scratch,
+    ) {
         let numel = self.domain.numel();
-        let mut regs = vec![0.0f32; self.insts.len()];
+        let (regs, hoisted, offsets, coords) =
+            scratch.scalar_state(self.insts.len(), self.inputs.len(), self.domain.rank());
 
         match (sched, self.domain.rank()) {
             (Schedule::HoistedColMajor, 2) => {
                 let (m, n) = (self.domain.dims[0], self.domain.dims[1]);
-                let mut offsets = vec![0usize; self.inputs.len()];
                 for j in 0..n {
                     // Hoist: evaluate row-invariant registers once per j.
+                    // (An invariant register's sources are invariant and
+                    // SSA-earlier, so every read this j sees a value
+                    // written this j — reusing the bank across columns is
+                    // bitwise-identical to a fresh one.)
                     for (idx, s) in self.input_strides.iter().enumerate() {
                         offsets[idx] = j * s[1];
                     }
-                    let mut hoisted = vec![0.0f32; self.insts.len()];
                     for (i, inst) in self.insts.iter().enumerate() {
                         if self.row_invariant[i] {
                             hoisted[i] = match *inst {
@@ -482,8 +537,6 @@ impl BlockTape {
             _ => {
                 // Row-recompute: flat row-major walk, full tape per element.
                 let strides = self.domain.strides();
-                let mut offsets = vec![0usize; self.inputs.len()];
-                let mut coords = vec![0usize; self.domain.rank()];
                 for flat in 0..numel {
                     // decode coords (row-major)
                     {
@@ -496,7 +549,7 @@ impl BlockTape {
                     for (idx, s) in self.input_strides.iter().enumerate() {
                         offsets[idx] = coords.iter().zip(s).map(|(c, st)| c * st).sum();
                     }
-                    self.eval_at(&mut regs, &offsets, bufs);
+                    self.eval_at(regs, offsets, bufs);
                     for (oi, &(_, r)) in self.output_regs.iter().enumerate() {
                         outs[oi][flat] = regs[r];
                     }
@@ -529,6 +582,39 @@ impl BlockTape {
             }
             _ => compute.iter().filter(|c| **c).count() * self.domain.numel(),
         }
+    }
+}
+
+/// A raw element sink over one block output, for the column-parallel
+/// path: column ranges of a row-major buffer interleave in memory, so
+/// disjoint workers cannot hold disjoint `&mut` slices — each instead
+/// writes absolute positions through this shared pointer. Writes are
+/// sound exactly when the writers' `(i, j)` sets are disjoint, which the
+/// wave executor guarantees by assigning disjoint column ranges.
+#[derive(Debug, Clone, Copy)]
+pub struct ColOut {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: workers write disjoint element sets (the `set` contract); the
+// pointer itself is just an address.
+unsafe impl Send for ColOut {}
+unsafe impl Sync for ColOut {}
+
+impl ColOut {
+    pub fn new(buf: &mut [f32]) -> Self {
+        ColOut { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// # Safety
+    ///
+    /// `idx < len`, the underlying buffer must outlive the write, and no
+    /// other thread may read or write `idx` concurrently.
+    #[inline]
+    unsafe fn set(&self, idx: usize, v: f32) {
+        debug_assert!(idx < self.len);
+        unsafe { *self.ptr.add(idx) = v };
     }
 }
 
@@ -699,6 +785,7 @@ impl MatmulEpilogueTape {
         row0: usize,
         row1: usize,
         outs: &mut [&mut [f32]],
+        scratch: &mut Scratch,
     ) {
         let tape = &self.tape;
         debug_assert_eq!(tape.domain.rank(), 2, "epilogue domain is [m, n]");
@@ -707,27 +794,17 @@ impl MatmulEpilogueTape {
         let n = tape.domain.dims[1];
         let k = self.k;
 
-        let mut qa = vec![0i8; k];
-        let mut acc = vec![0i32; n];
-        let mut mm_row = vec![0.0f32; n];
-        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; tape.insts.len()];
+        let (qa, acc, mm_row, regs) = scratch.i8_state(k, n, tape.insts.len());
 
         for i in row0..row1 {
             // INT8 matmul row: quantize the LHS row once, accumulate
             // i8 x i8 -> i32, rescale — identical to `matmul_i8`.
-            i8_matmul_row(
-                &lhs.data[i * k..(i + 1) * k],
-                rhs,
-                act_scale,
-                &mut qa,
-                &mut acc,
-                &mut mm_row,
-            );
+            i8_matmul_row(&lhs.data[i * k..(i + 1) * k], rhs, act_scale, qa, acc, mm_row);
 
             // Epilogue registers across the row, in the same pass —
             // the shared tape row evaluator with the virtual matmul
             // slot overridden by the in-flight row.
-            tape.eval_row_regs(bufs, i, &mut regs, Some((self.mm_input, &mm_row)));
+            tape.eval_row_regs(bufs, i, regs, Some((self.mm_input, &*mm_row)));
             let base = (i - row0) * n;
             for (oi, &(_, r)) in tape.output_regs.iter().enumerate() {
                 outs[oi][base..base + n].copy_from_slice(&regs[r]);
@@ -903,19 +980,15 @@ impl MatmulLayernormTape {
         row0: usize,
         row1: usize,
         out: &mut [f32],
+        scratch: &mut Scratch,
     ) {
         let k = self.k;
-        let mut qa = vec![0i8; k];
-        let mut acc = vec![0i32; self.tape.domain.dims[1]];
-        self.run_rows(bufs, gamma, beta, row0, row1, out, |i, mm_row| {
-            i8_matmul_row(
-                &lhs.data[i * k..(i + 1) * k],
-                rhs,
-                act_scale,
-                &mut qa,
-                &mut acc,
-                mm_row,
-            );
+        let n = self.tape.domain.dims[1];
+        // One scratch checkout hands out all four disjoint borrows: the
+        // row closure owns qa/acc while the shared loop owns mm_row/regs.
+        let (qa, acc, mm_row, regs) = scratch.i8_state(k, n, self.tape.insts.len());
+        self.run_rows(bufs, gamma, beta, row0, row1, out, mm_row, regs, |i, mm_row| {
+            i8_matmul_row(&lhs.data[i * k..(i + 1) * k], rhs, act_scale, qa, acc, mm_row);
         });
     }
 
@@ -935,9 +1008,12 @@ impl MatmulLayernormTape {
         row0: usize,
         row1: usize,
         out: &mut [f32],
+        scratch: &mut Scratch,
     ) {
         let k = self.k;
-        self.run_rows(bufs, gamma, beta, row0, row1, out, |i, mm_row| {
+        let n = self.tape.domain.dims[1];
+        let (mm_row, regs) = scratch.mm_state(n, self.tape.insts.len());
+        self.run_rows(bufs, gamma, beta, row0, row1, out, mm_row, regs, |i, mm_row| {
             mm_row.fill(0.0);
             for (kk, &av) in lhs.data[i * k..(i + 1) * k].iter().enumerate() {
                 if av == 0.0 {
@@ -955,6 +1031,9 @@ impl MatmulLayernormTape {
     /// registers through the ONE tape row evaluator (virtual matmul slot
     /// overridden), then normalize the finished row in place via
     /// `layernorm_rows` with `rows = 1` — each row fully independent.
+    /// `mm_row` / `regs` are caller-borrowed scratch (both variants pull
+    /// them from the same [`Scratch`] their row closure captures its own
+    /// disjoint buffers from).
     #[allow(clippy::too_many_arguments)]
     fn run_rows(
         &self,
@@ -964,6 +1043,8 @@ impl MatmulLayernormTape {
         row0: usize,
         row1: usize,
         out: &mut [f32],
+        mm_row: &mut [f32],
+        regs: &mut [Vec<f32>],
         mut mm_row_fn: impl FnMut(usize, &mut [f32]),
     ) {
         use crate::compiler::exec::plan::layernorm_rows;
@@ -973,13 +1054,12 @@ impl MatmulLayernormTape {
         debug_assert_eq!(bufs.len(), tape.inputs.len());
         let n = tape.domain.dims[1];
         debug_assert_eq!(out.len(), (row1 - row0) * n, "out covers the requested rows");
+        debug_assert_eq!(mm_row.len(), n);
         let ln_reg = tape.output_regs[0].1;
 
-        let mut mm_row = vec![0.0f32; n];
-        let mut regs: Vec<Vec<f32>> = vec![vec![0.0f32; n]; tape.insts.len()];
         for i in row0..row1 {
-            mm_row_fn(i, &mut mm_row);
-            tape.eval_row_regs(bufs, i, &mut regs, Some((self.mm_input, &mm_row)));
+            mm_row_fn(i, mm_row);
+            tape.eval_row_regs(bufs, i, regs, Some((self.mm_input, &*mm_row)));
             let base = (i - row0) * n;
             layernorm_rows(
                 &regs[ln_reg],
@@ -1098,6 +1178,29 @@ mod tests {
     }
 
     #[test]
+    fn column_ranges_compose_bitwise() {
+        let (m, n) = (16, 24);
+        let (_, tape) = fig4(m, n);
+        let a = rand_t(&[m, n], 11);
+        let b = rand_t(&[m, n], 12);
+        let c = rand_t(&[n], 13);
+        let d = rand_t(&[n], 14);
+        let full = tape.execute(&[&a, &b, &c, &d], Schedule::HoistedColMajor);
+
+        let views: Vec<View> = [&a, &b, &c, &d].iter().map(|t| t.view()).collect();
+        let mut split = vec![0.0f32; m * n];
+        let cols = [ColOut::new(&mut split)];
+        // Disjoint ranges with a WARM scratch between them — the
+        // column-parallel executor's exact access pattern.
+        let mut s = Scratch::new();
+        unsafe {
+            tape.execute_cols_range_into(&views, 0, 7, &cols, &mut s);
+            tape.execute_cols_range_into(&views, 7, n, &cols, &mut s);
+        }
+        assert_eq!(full[0].data, split, "column ranges != one full pass");
+    }
+
+    #[test]
     fn hoisted_flops_fewer() {
         let (_, tape) = fig4(64, 32);
         // row: 3 ops * M*N; hoisted: 2 ops * M*N + 1 op * N
@@ -1175,7 +1278,16 @@ mod tests {
                 })
                 .collect();
             let mut outs = vec![fused.as_mut_slice()];
-            mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, 0, m, &mut outs);
+            mt.execute_i8_rows_into(
+                xt.view(),
+                &q,
+                None,
+                &bufs,
+                0,
+                m,
+                &mut outs,
+                &mut Scratch::new(),
+            );
         }
 
         // Unfused reference: matmul_i8, then each epilogue op via the
@@ -1216,10 +1328,30 @@ mod tests {
                 }
             })
             .collect();
+        // Reusing ONE warm scratch across both halves must be invisible.
+        let mut scratch = Scratch::new();
         let mut lo = vec![0.0f32; 4 * n];
         let mut hi = vec![0.0f32; (m - 4) * n];
-        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, 0, 4, &mut [lo.as_mut_slice()]);
-        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, 4, m, &mut [hi.as_mut_slice()]);
+        mt.execute_i8_rows_into(
+            xt.view(),
+            &q,
+            None,
+            &bufs,
+            0,
+            4,
+            &mut [lo.as_mut_slice()],
+            &mut scratch,
+        );
+        mt.execute_i8_rows_into(
+            xt.view(),
+            &q,
+            None,
+            &bufs,
+            4,
+            m,
+            &mut [hi.as_mut_slice()],
+            &mut scratch,
+        );
         assert_eq!(&fused[..4 * n], &lo[..]);
         assert_eq!(&fused[4 * n..], &hi[..]);
     }
@@ -1335,6 +1467,8 @@ mod tests {
         };
 
         // Fused int8 == per-node int8 (matmul_i8 then graph primitives).
+        // ONE warm scratch serves every call below — reuse is invisible.
+        let mut scratch = Scratch::new();
         let mut fused_i8 = vec![0.0f32; m * n];
         let bufs = mt.input_views(&g, view_of);
         mt.execute_i8_rows_into(
@@ -1347,6 +1481,7 @@ mod tests {
             0,
             m,
             &mut fused_i8,
+            &mut scratch,
         );
         let mm_i8 = matmul_i8(xt.view(), &q, None, &g.nodes[mt.matmul].shape);
         let seeds = [
@@ -1371,6 +1506,7 @@ mod tests {
             0,
             m,
             &mut fused_f32,
+            &mut scratch,
         );
         let mut feeds = std::collections::HashMap::new();
         feeds.insert("x".to_string(), xt.data.clone());
@@ -1386,8 +1522,30 @@ mod tests {
         // executor's split) in both precisions.
         let mut lo = vec![0.0f32; 4 * n];
         let mut hi = vec![0.0f32; (m - 4) * n];
-        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, gat.view(), bet.view(), 0, 4, &mut lo);
-        mt.execute_i8_rows_into(xt.view(), &q, None, &bufs, gat.view(), bet.view(), 4, m, &mut hi);
+        mt.execute_i8_rows_into(
+            xt.view(),
+            &q,
+            None,
+            &bufs,
+            gat.view(),
+            bet.view(),
+            0,
+            4,
+            &mut lo,
+            &mut scratch,
+        );
+        mt.execute_i8_rows_into(
+            xt.view(),
+            &q,
+            None,
+            &bufs,
+            gat.view(),
+            bet.view(),
+            4,
+            m,
+            &mut hi,
+            &mut scratch,
+        );
         assert_eq!(&fused_i8[..4 * n], &lo[..]);
         assert_eq!(&fused_i8[4 * n..], &hi[..]);
         mt.execute_f32_rows_into(
@@ -1399,6 +1557,7 @@ mod tests {
             0,
             4,
             &mut lo,
+            &mut scratch,
         );
         assert_eq!(&fused_f32[..4 * n], &lo[..]);
     }

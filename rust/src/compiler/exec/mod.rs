@@ -9,14 +9,27 @@
 //!   through the compiled tape / native reduction kernels, holding values
 //!   in a per-node map. Simple, and the baseline the parallel executor is
 //!   differential-tested against.
-//! * [`parallel`] — the production host executor. Two subsystems:
+//! * [`parallel`] — the production host executor. Three subsystems:
 //!
 //!   1. **Wave scheduler** ([`parallel::block_waves`]): the block DAG is
 //!      partitioned into dependency levels ("waves"); all blocks of a wave
-//!      are independent and run concurrently on scoped threads. A wave
-//!      with a single wide 2-D elementwise block is instead split by rows
-//!      across threads (intra-block parallelism through the tape).
-//!   2. **Arena planner** ([`arena::plan_arena`]): per-tensor liveness is
+//!      are independent and run concurrently. A wave with a single wide
+//!      2-D block is instead split by row ranges across workers
+//!      (intra-block parallelism through the tape), and a single
+//!      `HoistedColMajor` tape block is split by *column* ranges — every
+//!      schedule now parallelizes.
+//!   2. **Worker pool** ([`pool::WorkerPool`]): waves dispatch onto a
+//!      persistent pool of long-lived threads, parked on a condvar
+//!      between waves, woken by an epoch bump, joined on `Drop`. Each
+//!      worker *owns* a reusable [`pool::Scratch`] arena that the fused
+//!      int8/fp32 kernels borrow instead of allocating, so steady-state
+//!      decode performs zero thread spawns and zero kernel-scratch
+//!      allocations per token (pool counters pin this in `tests/pool.rs`).
+//!      The historical spawn-per-wave scoped path survives as
+//!      [`pool::Workers::Scoped`] — the bitwise reference the pool is
+//!      differential-tested against. A worker panic fails the run with a
+//!      typed [`ExecError::WorkerPanicked`]; the pool itself recovers.
+//!   3. **Arena planner** ([`arena::plan_arena`]): per-tensor liveness is
 //!      computed over the wave schedule and every materialized value is
 //!      assigned an offset in one shared slab ([`crate::util::pool::Slab`])
 //!      by first-fit interval allocation. Buffers are reused as soon as
@@ -29,19 +42,23 @@
 //! barrier accounting, and arena snapshots for chrome-trace export and
 //! device-model calibration — a strict no-op (no clock reads, no
 //! allocations) when `None` is passed, and bitwise-invisible when
-//! enabled (the differential suites run profiled).
+//! enabled (the differential suites run profiled). Profile lanes are
+//! keyed by persistent worker id (driver = lane 0, worker `w` = lane
+//! `w + 1`), stable across waves.
 //!
 //! Bad feeds are typed errors ([`ExecError`]), not panics, so the serving
 //! layer can reject malformed requests instead of dying.
 //!
 //! Correctness contract (property-tested in `tests/exec_differential.rs`):
-//! for every graph, fusion config, schedule choice, and thread count,
-//! all three executors produce the same outputs.
+//! for every graph, fusion config, schedule choice, and worker source
+//! (pool or scoped) at every thread count, all three executors produce
+//! the same outputs.
 
 pub mod arena;
 pub mod interp;
 pub mod parallel;
 pub mod plan;
+pub mod pool;
 pub mod profile;
 pub mod tensor;
 
@@ -50,7 +67,8 @@ pub use parallel::{
     execute_prepared_sinks, execute_prepared_sinks_profiled, DispatchCounts, ExecStats,
     PreparedExec,
 };
-pub use profile::{KernelKind, ProfileAggregate, ProfileReport, Profiler};
+pub use pool::{ExecBackend, PoolStats, Scratch, ScratchPool, WorkerPool, Workers};
+pub use profile::{KernelKind, ProfileAggregate, ProfileReport, Profiler, WorkerLane};
 pub use tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 
 use std::collections::HashMap;
@@ -232,6 +250,10 @@ pub enum ExecError {
     MissingFeed { name: String },
     /// A feed exists but its length does not match the leaf's shape.
     FeedShape { name: String, expected: usize, got: usize },
+    /// A pool worker panicked while running this execution's waves. The
+    /// pool itself recovers (workers catch the unwind and keep serving);
+    /// only this run's outputs are lost.
+    WorkerPanicked,
 }
 
 impl fmt::Display for ExecError {
@@ -242,6 +264,9 @@ impl fmt::Display for ExecError {
                 f,
                 "feed {name:?} has {got} elements, shape needs {expected}"
             ),
+            ExecError::WorkerPanicked => {
+                write!(f, "a pool worker panicked while running a wave; the pool recovered but this run's outputs are lost")
+            }
         }
     }
 }

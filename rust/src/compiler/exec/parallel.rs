@@ -3,9 +3,25 @@
 //!
 //! The `FusionPlan`'s block DAG is partitioned into dependency levels
 //! ("waves", [`block_waves`]): every block of wave `w` depends only on
-//! blocks of waves `< w`, so a wave's blocks run concurrently on scoped
-//! threads. Between waves there is a barrier (the `thread::scope` join),
-//! which is also what makes the arena's wave-granular liveness sound.
+//! blocks of waves `< w`, so a wave's blocks run concurrently. Between
+//! waves there is a barrier (every worker finishes before the driver
+//! moves on), which is also what makes the arena's wave-granular
+//! liveness sound.
+//!
+//! **Where a wave's work runs** is named by a [`Workers`] value:
+//!
+//! * `Workers::Pool(&pool)` — the production path. Waves dispatch onto a
+//!   persistent [`super::pool::WorkerPool`] whose long-lived threads park between
+//!   waves and own reusable [`Scratch`] arenas the kernels borrow, so
+//!   steady-state serving performs **zero thread spawns and zero
+//!   kernel-scratch allocations** per request (`tests/pool.rs` pins
+//!   both via the pool counters). A worker panic surfaces as a typed
+//!   [`ExecError::WorkerPanicked`]; the pool itself recovers.
+//! * `Workers::Scoped(n)` — the historical spawn-per-wave `thread::scope`
+//!   path, kept as the bitwise reference the pool is differential-tested
+//!   against (`tests/exec_differential.rs`: pool == scoped at 1/2/4
+//!   workers, every schedule, fp32 and pruned+int8). A plain `usize`
+//!   converts to `Scoped`, so historical call sites read unchanged.
 //!
 //! All materialized values live in one flat slab at offsets chosen by
 //! the arena planner ([`super::arena`]); kernels read inputs as [`View`]s
@@ -18,25 +34,37 @@
 //! out of a per-`PreparedExec` [`SlabPool`], so steady-state serving
 //! performs zero large allocations per request.
 //!
-//! A wave consisting of a single wide 2-D elementwise block does not have
-//! to run on one core: the row-recompute schedule evaluates rows
-//! independently, so the executor splits the block's rows across threads
-//! ([`Schedule::row_parallelizable`]) and hands each thread a disjoint
-//! `split_at_mut` chunk of the output regions.
+//! A wave consisting of a single wide 2-D block does not have to run on
+//! one core:
+//!
+//! * Row split — the row-recompute schedule and both fused matmul
+//!   kernels evaluate rows independently, so each worker computes the
+//!   row range `[w·chunk, (w+1)·chunk)` straight into the corresponding
+//!   slice of the output regions ([`row_parallel`]).
+//! * Column split — `HoistedColMajor` tapes evaluate *columns*
+//!   independently (each column recomputes its own hoisted scalars), so
+//!   each worker runs a disjoint column range through
+//!   [`BlockTape::execute_cols_range_into`] ([`col_parallel`]); the last
+//!   single-threaded schedule now parallelizes.
+//!
+//! Per-wave bookkeeping is precomputed at [`PreparedExec`] time (output
+//! element counts in `wave_elems`; multi-block waves stride the wave list
+//! directly) — the dispatch loop allocates nothing per wave.
 //!
 //! Numerics are bitwise-identical to the sequential [`super::plan`]
 //! executor: both run the same tapes and the same native kernels in the
 //! same per-element order (asserted by `tests/exec_differential.rs`).
 //!
 //! The feed-independent parts of execution — waves, arena plan, compiled
-//! kernels — live in [`PreparedExec`] so steady-state serving derives
-//! them once per model instead of once per request, and leaf data is
-//! *borrowed* from the caller's feed maps ([`super::Feeds`] /
-//! [`super::LeafValue`]) instead of deep-copied. Matmul nodes whose RHS
+//! kernels, recycled scratch — live in [`PreparedExec`] so steady-state
+//! serving derives them once per model instead of once per request, and
+//! leaf data is *borrowed* from the caller's feed maps ([`super::Feeds`]
+//! / [`super::LeafValue`]) instead of deep-copied. Matmul nodes whose RHS
 //! weight appears in an int8 table ([`super::QuantizedWeights`]) dispatch
 //! to the quantized kernel (`compress` subsystem).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use super::arena::{plan_arena, ArenaPlan};
@@ -45,13 +73,14 @@ use super::plan::{
     fallback_kind, layernorm_rows, match_layernorm, match_softmax, row_split, softmax_rows,
     LayernormPattern, ScheduleChoices, SoftmaxPattern,
 };
+use super::pool::{Scratch, ScratchPool, Workers};
 use super::profile::{KernelKind, Profiler};
 use super::tensor::{matmul_i8, matmul_i8_into, QuantizedTensor, Tensor, View};
 use super::{
     leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights,
 };
 use crate::compiler::codegen::tape::{
-    compile_block, compile_matmul_epilogue, compile_matmul_layernorm, BlockTape,
+    compile_block, compile_matmul_epilogue, compile_matmul_layernorm, BlockTape, ColOut,
     MatmulEpilogueTape, MatmulLayernormTape,
 };
 use crate::compiler::fusion::{BlockKind, FusedBlock, FusionPlan};
@@ -59,10 +88,10 @@ use crate::compiler::ir::{Graph, NodeId};
 use crate::compiler::poly::{block_output_shape, Schedule};
 use crate::util::pool::{SharedSlab, SlabPool};
 
-/// Below this many output elements a wave runs inline: thread spawn costs
-/// more than the compute it would hide.
+/// Below this many output elements a wave runs inline: even waking the
+/// pool costs more than the compute it would hide.
 const PAR_MIN_WAVE_ELEMS: usize = 2048;
-/// Minimum rows per thread before a single block is row-split.
+/// Minimum rows (or columns) per worker before a single block is split.
 const PAR_MIN_ROWS_PER_THREAD: usize = 4;
 
 /// What one execution observed — surfaced so benches and serving can
@@ -79,6 +108,13 @@ pub struct ExecStats {
     /// Actual slab allocation (>= peak; first-fit fragmentation).
     pub slab_bytes: usize,
     pub threads: usize,
+    /// Largest kernel-scratch footprint any participant (driver or
+    /// worker) held during this run, bytes.
+    pub peak_scratch_bytes: usize,
+    /// Kernel-scratch growth events during this run — zero in steady
+    /// state once every shape has been seen (`tests/pool.rs` pins the
+    /// per-token decode delta at zero).
+    pub scratch_grows: u64,
 }
 
 /// Partition the plan's blocks into dependency levels. `waves[w]` holds
@@ -120,12 +156,21 @@ pub struct PreparedExec {
     pub waves: Vec<Vec<usize>>,
     pub arena: ArenaPlan,
     kernels: Vec<Kernel>,
+    /// Total output elements per wave — the inline-vs-parallel decision
+    /// input, precomputed here so the dispatch loop never walks block
+    /// output shapes per run.
+    wave_elems: Vec<usize>,
     /// Recycled execution slabs: every run checks one out and returns it,
     /// so steady-state serving does zero large allocations per request
     /// (ROADMAP item — previously a fresh `Slab` was allocated per call
     /// even though `PreparedExec` itself was cached). Holds at most the
     /// peak number of concurrent executions.
     slab_pool: SlabPool,
+    /// Recycled kernel scratch for participants that don't own any: the
+    /// run's driver thread (inline/sequential waves) and the scoped
+    /// reference path check arenas out of here, so repeat runs reuse
+    /// grown capacity just like persistent pool workers do.
+    scratch_pool: ScratchPool,
 }
 
 impl PreparedExec {
@@ -133,7 +178,23 @@ impl PreparedExec {
         let waves = block_waves(plan);
         let arena = plan_arena(g, plan, &waves);
         let kernels = plan.blocks.iter().map(|b| prepare_kernel(g, b)).collect();
-        PreparedExec { waves, arena, kernels, slab_pool: SlabPool::new() }
+        let wave_elems = waves
+            .iter()
+            .map(|wave| {
+                wave.iter()
+                    .flat_map(|&bi| plan.blocks[bi].outputs.iter())
+                    .map(|&o| g.nodes[o].shape.numel())
+                    .sum()
+            })
+            .collect();
+        PreparedExec {
+            waves,
+            arena,
+            kernels,
+            wave_elems,
+            slab_pool: SlabPool::new(),
+            scratch_pool: ScratchPool::new(),
+        }
     }
 
     /// Slabs currently parked in the pool (observability for tests and
@@ -143,45 +204,47 @@ impl PreparedExec {
     }
 }
 
-/// Execute the plan on `threads` worker threads (1 = sequential wave
-/// order, same numerics). See module docs.
-pub fn execute_plan_parallel(
+/// Execute the plan on the given workers — a [`super::pool::WorkerPool`] reference, an
+/// [`super::pool::ExecBackend`], or a plain thread count for the scoped
+/// reference path (1 = sequential wave order, same numerics). See module
+/// docs.
+pub fn execute_plan_parallel<'p>(
     g: &Graph,
     plan: &FusionPlan,
     feeds: &HashMap<String, Vec<f32>>,
     schedules: &ScheduleChoices,
-    threads: usize,
+    workers: impl Into<Workers<'p>>,
 ) -> Result<Vec<Tensor>, ExecError> {
-    execute_plan_parallel_stats(g, plan, feeds, schedules, threads).map(|(t, _)| t)
+    execute_plan_parallel_stats(g, plan, feeds, schedules, workers).map(|(t, _)| t)
 }
 
 /// As [`execute_plan_parallel`], also returning schedule/memory stats.
-pub fn execute_plan_parallel_stats(
+pub fn execute_plan_parallel_stats<'p>(
     g: &Graph,
     plan: &FusionPlan,
     feeds: &HashMap<String, Vec<f32>>,
     schedules: &ScheduleChoices,
-    threads: usize,
+    workers: impl Into<Workers<'p>>,
 ) -> Result<(Vec<Tensor>, ExecStats), ExecError> {
     let prep = PreparedExec::new(g, plan);
-    execute_prepared(g, plan, &prep, &Feeds::single(feeds), schedules, threads, None)
+    execute_prepared(g, plan, &prep, &Feeds::single(feeds), schedules, workers, None)
 }
 
 /// The full-control entry point: a cached [`PreparedExec`], layered feeds
 /// (leaf data borrowed, never copied), and an optional int8 weight table
 /// (the compression subsystem's quantized execution path).
-pub fn execute_prepared(
+pub fn execute_prepared<'p>(
     g: &Graph,
     plan: &FusionPlan,
     prep: &PreparedExec,
     feeds: &Feeds<'_>,
     schedules: &ScheduleChoices,
-    threads: usize,
+    workers: impl Into<Workers<'p>>,
     quant: Option<&QuantizedWeights>,
 ) -> Result<(Vec<Tensor>, ExecStats), ExecError> {
     let mut sinks = OutputSink::owned(g.outputs.len());
     let (outs, stats) =
-        execute_prepared_sinks(g, plan, prep, feeds, schedules, threads, quant, &mut sinks)?;
+        execute_prepared_sinks(g, plan, prep, feeds, schedules, workers, quant, &mut sinks)?;
     Ok((outs.into_iter().map(|t| t.expect("owned sink")).collect(), stats))
 }
 
@@ -195,55 +258,58 @@ pub fn execute_prepared(
 /// feeds borrowed *during* execution only if the caller guarantees the
 /// regions are disjoint.
 #[allow(clippy::too_many_arguments)]
-pub fn execute_prepared_sinks(
+pub fn execute_prepared_sinks<'p>(
     g: &Graph,
     plan: &FusionPlan,
     prep: &PreparedExec,
     feeds: &Feeds<'_>,
     schedules: &ScheduleChoices,
-    threads: usize,
+    workers: impl Into<Workers<'p>>,
     quant: Option<&QuantizedWeights>,
     sinks: &mut [OutputSink<'_>],
 ) -> Result<(Vec<Option<Tensor>>, ExecStats), ExecError> {
-    execute_prepared_sinks_profiled(g, plan, prep, feeds, schedules, threads, quant, sinks, None)
+    execute_prepared_sinks_profiled(g, plan, prep, feeds, schedules, workers, quant, sinks, None)
 }
 
 /// As [`execute_prepared_sinks`] with an optional execution profiler
-/// (`super::profile`): every block dispatch (including row-split chunks,
-/// which record their own row ranges on their chunk's thread slot) and
-/// every wave barrier is timed, and the run's [`ExecStats`] snapshot is
-/// attached. `None` disables profiling at zero cost — no clock reads
-/// anywhere on the wave loop. The profiler must have been built with at
-/// least `threads` thread slots ([`Profiler::new`]).
+/// (`super::profile`): every block dispatch (including row-split and
+/// column-split ranges) and every wave barrier is timed, and the run's
+/// [`ExecStats`] snapshot is attached. Lanes are keyed by persistent
+/// worker id — the driver records on slot 0, worker `w` on slot `w + 1` —
+/// so chrome-trace lanes stay stable across waves and runs. `None`
+/// disables profiling at zero cost — no clock reads anywhere on the wave
+/// loop. The profiler must have been built with at least `threads`
+/// thread slots ([`Profiler::new`] allocates `threads + 1` lanes).
 ///
 /// Profiling reads clocks only — it never touches kernel inputs or
 /// outputs, so profiled runs are bitwise identical to unprofiled runs
 /// (asserted by `tests/exec_differential.rs`).
 #[allow(clippy::too_many_arguments)]
-pub fn execute_prepared_sinks_profiled(
+pub fn execute_prepared_sinks_profiled<'p>(
     g: &Graph,
     plan: &FusionPlan,
     prep: &PreparedExec,
     feeds: &Feeds<'_>,
     schedules: &ScheduleChoices,
-    threads: usize,
+    workers: impl Into<Workers<'p>>,
     quant: Option<&QuantizedWeights>,
     sinks: &mut [OutputSink<'_>],
     prof: Option<&Profiler>,
 ) -> Result<(Vec<Option<Tensor>>, ExecStats), ExecError> {
+    let workers = workers.into();
     // Sinks are program-constructed (not request data), so mismatches are
     // programmer errors and panic — but panic HERE, before the slab is
-    // checked out or any thread spawned, never mid-execution.
+    // checked out or any worker woken, never mid-execution.
     assert_eq!(sinks.len(), g.outputs.len(), "one sink per graph output");
     for (&o, sink) in g.outputs.iter().zip(sinks.iter()) {
         if let OutputSink::Into(buf) = sink {
             assert_eq!(buf.len(), g.nodes[o].shape.numel(), "sink buffer != output numel");
         }
     }
-    let threads = threads.max(1);
+    let threads = workers.threads();
 
     // Validate + borrow leaves up front: a malformed request fails here,
-    // typed, before any thread is spawned.
+    // typed, before any worker is woken.
     let mut leaf: Vec<Option<LeafValue>> = vec![None; g.nodes.len()];
     for (id, node) in g.nodes.iter().enumerate() {
         if node.op.is_leaf() {
@@ -252,6 +318,122 @@ pub fn execute_prepared_sinks_profiled(
     }
 
     let (waves, arena, kernels) = (&prep.waves, &prep.arena, &prep.kernels);
+
+    let mut slab = prep.slab_pool.checkout(arena.slab_len);
+    let shared = slab.shared();
+
+    // Run-local scratch accounting: every participant (driver, pool
+    // workers, scoped threads) folds its growth delta and peak footprint
+    // in here; the totals land in this run's `ExecStats`.
+    let run_grows = AtomicU64::new(0);
+    let run_peak = AtomicUsize::new(0);
+    // The driver's own kernel scratch, for inline/sequential waves.
+    let mut driver_scratch = prep.scratch_pool.checkout();
+    let driver_g0 = driver_scratch.grows();
+
+    let result = (|| -> Result<(), ExecError> {
+        for (w, wave) in waves.iter().enumerate() {
+            let par = threads > 1 && prep.wave_elems[w] >= PAR_MIN_WAVE_ELEMS;
+            let wave_start = prof.map(|_| Instant::now());
+
+            if par && wave.len() == 1 {
+                let bi = wave[0];
+                let sched = sched_of(schedules, plan, bi);
+                let split = SplitCtx {
+                    g,
+                    block: &plan.blocks[bi],
+                    kernel: &kernels[bi],
+                    sched,
+                    leaf: &leaf,
+                    shared,
+                    arena,
+                    workers,
+                    scratch_pool: &prep.scratch_pool,
+                    run_grows: &run_grows,
+                    run_peak: &run_peak,
+                    prof,
+                    wave: w,
+                    bi,
+                };
+                let nt_used = match row_parallel(&split, quant)? {
+                    Some(nt) => Some(nt),
+                    None => col_parallel(&split)?,
+                };
+                if let Some(nt_used) = nt_used {
+                    if let (Some(p), Some(ws)) = (prof, wave_start) {
+                        p.wave(w, nt_used, ws);
+                    }
+                    continue;
+                }
+            }
+
+            if !par || wave.len() == 1 {
+                for &bi in wave {
+                    let sched = sched_of(schedules, plan, bi);
+                    let start = prof.map(|_| Instant::now());
+                    let kind = run_block(
+                        g,
+                        &plan.blocks[bi],
+                        &kernels[bi],
+                        sched,
+                        &leaf,
+                        shared,
+                        arena,
+                        quant,
+                        &mut driver_scratch,
+                    );
+                    if let (Some(p), Some(s)) = (prof, start) {
+                        p.block(0, w, bi, kind, s);
+                    }
+                }
+                if let (Some(p), Some(ws)) = (prof, wave_start) {
+                    p.wave(w, 1, ws);
+                }
+            } else {
+                let nt = threads.min(wave.len());
+                let leaf_ref = &leaf;
+                // Worker t strides the wave list directly — no per-wave
+                // block-index Vec is ever built.
+                let body = move |t: usize, scratch: &mut Scratch| {
+                    for bi in wave.iter().copied().skip(t).step_by(nt) {
+                        let sched = sched_of(schedules, plan, bi);
+                        let start = prof.map(|_| Instant::now());
+                        let kind = run_block(
+                            g,
+                            &plan.blocks[bi],
+                            &kernels[bi],
+                            sched,
+                            leaf_ref,
+                            shared,
+                            arena,
+                            quant,
+                            scratch,
+                        );
+                        if let (Some(p), Some(s)) = (prof, start) {
+                            p.block(t + 1, w, bi, kind, s);
+                        }
+                    }
+                };
+                dispatch(workers, nt, &prep.scratch_pool, &run_grows, &run_peak, &body)?;
+                if let (Some(p), Some(ws)) = (prof, wave_start) {
+                    p.wave(w, nt, ws);
+                }
+            }
+        }
+        Ok(())
+    })();
+
+    // Fold the driver's scratch accounting in and park its arena whether
+    // or not the run succeeded — a failed run must not leak the slab or
+    // the scratch out of their pools.
+    run_grows.fetch_add(driver_scratch.grows() - driver_g0, Ordering::Relaxed);
+    run_peak.fetch_max(driver_scratch.peak_bytes(), Ordering::Relaxed);
+    prep.scratch_pool.give_back(driver_scratch);
+    if let Err(e) = result {
+        prep.slab_pool.give_back(slab);
+        return Err(e);
+    }
+
     let stats = ExecStats {
         waves: waves.len(),
         max_wave_width: waves.iter().map(|w| w.len()).max().unwrap_or(0),
@@ -259,98 +441,9 @@ pub fn execute_prepared_sinks_profiled(
         naive_bytes: arena.naive_bytes(),
         slab_bytes: arena.slab_bytes(),
         threads,
+        peak_scratch_bytes: run_peak.load(Ordering::Relaxed),
+        scratch_grows: run_grows.load(Ordering::Relaxed),
     };
-
-    let mut slab = prep.slab_pool.checkout(arena.slab_len);
-    let shared = slab.shared();
-
-    for (w, wave) in waves.iter().enumerate() {
-        let wave_elems: usize = wave
-            .iter()
-            .flat_map(|&bi| plan.blocks[bi].outputs.iter())
-            .map(|&o| g.nodes[o].shape.numel())
-            .sum();
-        let par = threads > 1 && wave_elems >= PAR_MIN_WAVE_ELEMS;
-        let wave_start = prof.map(|_| Instant::now());
-
-        if par && wave.len() == 1 {
-            let bi = wave[0];
-            let sched = sched_of(schedules, plan, bi);
-            if let Some(nt_used) = row_parallel(
-                g,
-                &plan.blocks[bi],
-                &kernels[bi],
-                sched,
-                &leaf,
-                shared,
-                arena,
-                threads,
-                quant,
-                prof,
-                w,
-                bi,
-            ) {
-                if let (Some(p), Some(ws)) = (prof, wave_start) {
-                    p.wave(w, nt_used, ws);
-                }
-                continue;
-            }
-        }
-
-        if !par || wave.len() == 1 {
-            for &bi in wave {
-                let sched = sched_of(schedules, plan, bi);
-                let start = prof.map(|_| Instant::now());
-                let kind = run_block(
-                    g,
-                    &plan.blocks[bi],
-                    &kernels[bi],
-                    sched,
-                    &leaf,
-                    shared,
-                    arena,
-                    quant,
-                );
-                if let (Some(p), Some(s)) = (prof, start) {
-                    p.block(0, w, bi, kind, s);
-                }
-            }
-            if let (Some(p), Some(ws)) = (prof, wave_start) {
-                p.wave(w, 1, ws);
-            }
-        } else {
-            let nt = threads.min(wave.len());
-            let leaf_ref = &leaf;
-            std::thread::scope(|scope| {
-                for t in 0..nt {
-                    let blocks: Vec<usize> = wave.iter().copied().skip(t).step_by(nt).collect();
-                    scope.spawn(move || {
-                        for bi in blocks {
-                            let sched = sched_of(schedules, plan, bi);
-                            let start = prof.map(|_| Instant::now());
-                            let kind = run_block(
-                                g,
-                                &plan.blocks[bi],
-                                &kernels[bi],
-                                sched,
-                                leaf_ref,
-                                shared,
-                                arena,
-                                quant,
-                            );
-                            if let (Some(p), Some(s)) = (prof, start) {
-                                p.block(t, w, bi, kind, s);
-                            }
-                        }
-                    });
-                }
-            });
-            if let (Some(p), Some(ws)) = (prof, wave_start) {
-                p.wave(w, nt, ws);
-            }
-        }
-    }
-
     if let Some(p) = prof {
         p.run_stats(stats);
     }
@@ -373,6 +466,44 @@ pub fn execute_prepared_sinks_profiled(
         .collect();
     prep.slab_pool.give_back(slab);
     Ok((outputs, stats))
+}
+
+/// Run `body(worker_id, scratch)` once per worker `0..nt` and barrier
+/// until all are done — on the persistent pool (workers use their owned
+/// scratch) or on the scoped reference path (each spawned thread checks
+/// scratch out of the prepared pool). Scratch growth/peak deltas fold
+/// into the run-local atomics either way, so `ExecStats` is
+/// backend-independent.
+fn dispatch(
+    workers: Workers<'_>,
+    nt: usize,
+    scratch_pool: &ScratchPool,
+    run_grows: &AtomicU64,
+    run_peak: &AtomicUsize,
+    body: &(dyn Fn(usize, &mut Scratch) + Sync),
+) -> Result<(), ExecError> {
+    let wrapped = move |t: usize, scratch: &mut Scratch| {
+        let g0 = scratch.grows();
+        body(t, scratch);
+        run_grows.fetch_add(scratch.grows() - g0, Ordering::Relaxed);
+        run_peak.fetch_max(scratch.peak_bytes(), Ordering::Relaxed);
+    };
+    match workers {
+        Workers::Pool(pool) => pool.run(nt, &wrapped).map_err(|_| ExecError::WorkerPanicked),
+        Workers::Scoped(_) => {
+            std::thread::scope(|scope| {
+                for t in 0..nt {
+                    let wrapped = &wrapped;
+                    scope.spawn(move || {
+                        let mut scratch = scratch_pool.checkout();
+                        wrapped(t, &mut scratch);
+                        scratch_pool.give_back(scratch);
+                    });
+                }
+            });
+            Ok(())
+        }
+    }
 }
 
 fn sched_of(schedules: &ScheduleChoices, plan: &FusionPlan, bi: usize) -> Schedule {
@@ -563,7 +694,9 @@ fn out_region<'a>(slab: SharedSlab<'a>, arena: &ArenaPlan, nid: NodeId) -> &'a m
 }
 
 /// Returns the [`KernelKind`] actually dispatched (the profiler records
-/// the real decision; callers without a profiler ignore it).
+/// the real decision; callers without a profiler ignore it). `scratch`
+/// is the executing participant's reusable kernel arena — the driver's
+/// for inline waves, the worker's own for dispatched ones.
 #[allow(clippy::too_many_arguments)]
 fn run_block(
     g: &Graph,
@@ -574,6 +707,7 @@ fn run_block(
     slab: SharedSlab<'_>,
     arena: &ArenaPlan,
     quant: Option<&QuantizedWeights>,
+    scratch: &mut Scratch,
 ) -> KernelKind {
     match kernel {
         Kernel::Tape(tape) => {
@@ -587,7 +721,7 @@ fn run_block(
                 .iter()
                 .map(|&o| out_region(slab, arena, o))
                 .collect();
-            tape.execute_into(&bufs, sched, &mut outs);
+            tape.execute_into(&bufs, sched, &mut outs, scratch);
             KernelKind::Tape
         }
         Kernel::Softmax(p) => {
@@ -632,6 +766,7 @@ fn run_block(
                     0,
                     mt.tape.domain.dims[0],
                     &mut outs,
+                    scratch,
                 );
                 KernelKind::FusedEpilogueI8
             } else {
@@ -649,11 +784,11 @@ fn run_block(
             let out = out_region(slab, arena, mt.out);
             let m = mt.tape.domain.dims[0];
             if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
-                mt.execute_i8_rows_into(lhs, qt, scale, &bufs, gamma, beta, 0, m, out);
+                mt.execute_i8_rows_into(lhs, qt, scale, &bufs, gamma, beta, 0, m, out, scratch);
                 KernelKind::FusedLayernormI8
             } else {
                 let rhs = value_view(g, mt.rhs, leaf, slab, arena);
-                mt.execute_f32_rows_into(lhs, rhs, &bufs, gamma, beta, 0, m, out);
+                mt.execute_f32_rows_into(lhs, rhs, &bufs, gamma, beta, 0, m, out, scratch);
                 KernelKind::FusedLayernormF32
             }
         }
@@ -712,32 +847,47 @@ fn fallback_block(
     fallback_kind(g, block, quant)
 }
 
-/// Split a lone 2-D block's rows across threads: elementwise tapes under
+/// Everything the single-block split paths ([`row_parallel`] /
+/// [`col_parallel`]) need, bundled so the two stay signature-identical
+/// and the wave loop builds the context once.
+#[derive(Clone, Copy)]
+struct SplitCtx<'c, 'p> {
+    g: &'c Graph,
+    block: &'c FusedBlock,
+    kernel: &'c Kernel,
+    sched: Schedule,
+    leaf: &'c [Option<LeafValue<'c>>],
+    shared: SharedSlab<'c>,
+    arena: &'c ArenaPlan,
+    workers: Workers<'p>,
+    scratch_pool: &'c ScratchPool,
+    run_grows: &'c AtomicU64,
+    run_peak: &'c AtomicUsize,
+    prof: Option<&'c Profiler>,
+    wave: usize,
+    bi: usize,
+}
+
+/// Split a lone 2-D block's rows across workers: elementwise tapes under
 /// the row-recompute schedule, fused INT8 matmul-epilogue kernels, and
 /// fused matmul+layernorm kernels in both precisions (rows are
 /// independent by construction — each quantizes its own LHS row, and
-/// layernorm is row-local). Returns `None` (nothing executed) when the
-/// kernel/schedule/shape doesn't allow row splitting — the caller then
-/// falls back to whole-block execution — and `Some(threads used)` after
-/// a split run. Each chunk records its own profile sample (row range,
-/// chunk thread slot) when a profiler is attached.
-#[allow(clippy::too_many_arguments)]
+/// layernorm is row-local). Worker `t` computes the row range
+/// `[t·chunk, (t+1)·chunk)` straight into its slice of the output
+/// regions — ranges are resolved from the worker id, so no per-chunk
+/// `split_at_mut` handoff runs on the driver. Returns `Ok(None)`
+/// (nothing executed) when the kernel/schedule/shape doesn't allow row
+/// splitting — the caller then tries [`col_parallel`], then whole-block
+/// execution — and `Ok(Some(workers used))` after a split run. Each
+/// range records its own profile sample on its worker's stable lane
+/// (`t + 1`) when a profiler is attached.
 fn row_parallel(
-    g: &Graph,
-    block: &FusedBlock,
-    kernel: &Kernel,
-    sched: Schedule,
-    leaf: &[Option<LeafValue>],
-    slab: SharedSlab<'_>,
-    arena: &ArenaPlan,
-    threads: usize,
+    ctx: &SplitCtx<'_, '_>,
     quant: Option<&QuantizedWeights>,
-    prof: Option<&Profiler>,
-    wave: usize,
-    bi: usize,
-) -> Option<usize> {
+) -> Result<Option<usize>, ExecError> {
+    let SplitCtx { g, block, kernel, sched, leaf, shared, arena, workers, .. } = *ctx;
     // Resolve the kernel to a row-splittable form first; one shared
-    // chunking loop then serves every kernel (a policy change in the
+    // dispatch body then serves every kernel (a policy change in the
     // split can never diverge between them).
     enum RowKernel<'k> {
         Tape(&'k BlockTape),
@@ -755,11 +905,11 @@ fn row_parallel(
 
     // Cheap eligibility checks first (schedule/rank/row count) so the
     // common bail-out never builds input views or touches the quant
-    // table; run_block redoes that work whenever we return false.
+    // table; run_block redoes that work whenever we return None.
     let domain = match kernel {
         Kernel::Tape(tape) => {
             if !sched.row_parallelizable() || tape.domain.rank() != 2 {
-                return None;
+                return Ok(None);
             }
             &tape.domain
         }
@@ -767,12 +917,12 @@ fn row_parallel(
         // schedule is irrelevant (they always walk rows).
         Kernel::MatmulEpi(mt) => &mt.tape.domain,
         Kernel::MatmulLn(mt) => &mt.tape.domain,
-        _ => return None,
+        _ => return Ok(None),
     };
     let (m, n) = (domain.dims[0], domain.dims[1]);
-    let nt = threads.min(m / PAR_MIN_ROWS_PER_THREAD);
+    let nt = workers.threads().min(m / PAR_MIN_ROWS_PER_THREAD);
     if nt < 2 {
-        return None;
+        return Ok(None);
     }
 
     let (bufs, rk) = match kernel {
@@ -780,7 +930,7 @@ fn row_parallel(
             let bufs: Vec<View> = tape
                 .inputs
                 .iter()
-                .map(|&i| value_view(g, i, leaf, slab, arena))
+                .map(|&i| value_view(g, i, leaf, shared, arena))
                 .collect();
             (bufs, RowKernel::Tape(tape))
         }
@@ -788,21 +938,21 @@ fn row_parallel(
             // fp32 requests (no int8 entry) fall back to whole-block
             // per-node execution.
             let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) else {
-                return None;
+                return Ok(None);
             };
-            let lhs = value_view(g, mt.lhs, leaf, slab, arena);
-            let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
+            let lhs = value_view(g, mt.lhs, leaf, shared, arena);
+            let bufs = mt.input_views(g, |i| value_view(g, i, leaf, shared, arena));
             (bufs, RowKernel::I8(mt, lhs, qt, scale))
         }
         Kernel::MatmulLn(mt) => {
-            let lhs = value_view(g, mt.lhs, leaf, slab, arena);
-            let gamma = value_view(g, mt.gamma, leaf, slab, arena);
-            let beta = value_view(g, mt.beta, leaf, slab, arena);
-            let bufs = mt.input_views(g, |i| value_view(g, i, leaf, slab, arena));
+            let lhs = value_view(g, mt.lhs, leaf, shared, arena);
+            let gamma = value_view(g, mt.gamma, leaf, shared, arena);
+            let beta = value_view(g, mt.beta, leaf, shared, arena);
+            let bufs = mt.input_views(g, |i| value_view(g, i, leaf, shared, arena));
             let rk = match quant_matmul(g, mt.matmul, quant) {
                 Some((qt, scale)) => RowKernel::LnI8(mt, lhs, qt, scale, gamma, beta),
                 None => {
-                    let rhs = value_view(g, mt.rhs, leaf, slab, arena);
+                    let rhs = value_view(g, mt.rhs, leaf, shared, arena);
                     RowKernel::LnF32(mt, lhs, rhs, gamma, beta)
                 }
             };
@@ -818,62 +968,108 @@ fn row_parallel(
         RowKernel::LnF32(..) => KernelKind::FusedLayernormF32,
     };
 
-    let mut rest: Vec<&mut [f32]> = block
+    // Region coordinates only — each worker resolves its own disjoint
+    // row-range slice straight from the slab.
+    let regions: Vec<usize> =
+        block.outputs.iter().map(|&o| arena.regions[&o].offset).collect();
+    let chunk = m.div_ceil(nt);
+    let (prof, wave, bi) = (ctx.prof, ctx.wave, ctx.bi);
+    let body = |t: usize, scratch: &mut Scratch| {
+        let row0 = (t * chunk).min(m);
+        let row1 = (row0 + chunk).min(m);
+        // nt·chunk >= m always, but hard round-up can still leave the
+        // last workers empty (e.g. m = 9, nt = 8 → chunk = 2).
+        if row0 >= row1 {
+            return;
+        }
+        let take = (row1 - row0) * n;
+        let start = prof.map(|_| Instant::now());
+        // SAFETY: workers hold pairwise-disjoint row ranges of regions
+        // the planner already guarantees exclusive for this wave.
+        let mut mine: Vec<&mut [f32]> = regions
+            .iter()
+            .map(|&off| unsafe { shared.write(off + row0 * n, take) })
+            .collect();
+        match &rk {
+            RowKernel::Tape(tape) => {
+                tape.execute_rows_into(&bufs, row0, row1, &mut mine, scratch);
+            }
+            RowKernel::I8(mt, lhs, qt, scale) => {
+                mt.execute_i8_rows_into(*lhs, qt, *scale, &bufs, row0, row1, &mut mine, scratch);
+            }
+            RowKernel::LnI8(mt, lhs, qt, scale, gamma, beta) => {
+                let out = mine.swap_remove(0);
+                mt.execute_i8_rows_into(
+                    *lhs, qt, *scale, &bufs, *gamma, *beta, row0, row1, out, scratch,
+                );
+            }
+            RowKernel::LnF32(mt, lhs, rhs, gamma, beta) => {
+                let out = mine.swap_remove(0);
+                mt.execute_f32_rows_into(
+                    *lhs, *rhs, &bufs, *gamma, *beta, row0, row1, out, scratch,
+                );
+            }
+        }
+        if let (Some(p), Some(s)) = (prof, start) {
+            p.block_rows(t + 1, wave, bi, kind, row1 - row0, s);
+        }
+    };
+    dispatch(workers, nt, ctx.scratch_pool, ctx.run_grows, ctx.run_peak, &body)?;
+    Ok(Some(nt))
+}
+
+/// Split a lone `HoistedColMajor` tape block's *columns* across workers:
+/// the hoisted column-major schedule evaluates each column independently
+/// (every column recomputes its own hoisted invariants), so disjoint
+/// column ranges compose bitwise with the whole-block walk
+/// ([`BlockTape::execute_cols_range_into`]; `codegen::tape` pins the
+/// composition). Historically this schedule forced single-threaded
+/// whole-block execution — the last sequential hole in the wave
+/// executor. Column ranges interleave in memory, so outputs flow through
+/// raw-pointer [`ColOut`] sinks rather than `&mut` slices.
+fn col_parallel(ctx: &SplitCtx<'_, '_>) -> Result<Option<usize>, ExecError> {
+    let SplitCtx { g, block, kernel, sched, leaf, shared, arena, workers, .. } = *ctx;
+    let Kernel::Tape(tape) = kernel else {
+        return Ok(None);
+    };
+    if !matches!(sched, Schedule::HoistedColMajor) || tape.domain.rank() != 2 {
+        return Ok(None);
+    }
+    let n = tape.domain.dims[1];
+    let nt = workers.threads().min(n / PAR_MIN_ROWS_PER_THREAD);
+    if nt < 2 {
+        return Ok(None);
+    }
+
+    let bufs: Vec<View> = tape
+        .inputs
+        .iter()
+        .map(|&i| value_view(g, i, leaf, shared, arena))
+        .collect();
+    let outs: Vec<ColOut> = block
         .outputs
         .iter()
-        .map(|&o| out_region(slab, arena, o))
+        .map(|&o| ColOut::new(out_region(shared, arena, o)))
         .collect();
-
-    let chunk = m.div_ceil(nt);
-    std::thread::scope(|scope| {
-        let bufs = &bufs;
-        let rk = &rk;
-        let mut row0 = 0usize;
-        let mut slot = 0usize;
-        while row0 < m {
-            let row1 = (row0 + chunk).min(m);
-            let take = (row1 - row0) * n;
-            let cur = std::mem::take(&mut rest);
-            let mut mine = Vec::with_capacity(cur.len());
-            let mut next = Vec::with_capacity(cur.len());
-            for out in cur {
-                let (head, tail) = out.split_at_mut(take);
-                mine.push(head);
-                next.push(tail);
-            }
-            rest = next;
-            scope.spawn(move || {
-                let mut mine = mine;
-                let start = prof.map(|_| Instant::now());
-                match rk {
-                    RowKernel::Tape(tape) => {
-                        tape.execute_rows_into(bufs, row0, row1, &mut mine);
-                    }
-                    RowKernel::I8(mt, lhs, qt, scale) => {
-                        mt.execute_i8_rows_into(*lhs, qt, *scale, bufs, row0, row1, &mut mine);
-                    }
-                    RowKernel::LnI8(mt, lhs, qt, scale, gamma, beta) => {
-                        let out = mine.swap_remove(0);
-                        mt.execute_i8_rows_into(
-                            *lhs, qt, *scale, bufs, *gamma, *beta, row0, row1, out,
-                        );
-                    }
-                    RowKernel::LnF32(mt, lhs, rhs, gamma, beta) => {
-                        let out = mine.swap_remove(0);
-                        mt.execute_f32_rows_into(
-                            *lhs, *rhs, bufs, *gamma, *beta, row0, row1, out,
-                        );
-                    }
-                }
-                if let (Some(p), Some(s)) = (prof, start) {
-                    p.block_rows(slot, wave, bi, kind, row1 - row0, s);
-                }
-            });
-            row0 = row1;
-            slot += 1;
+    let chunk = n.div_ceil(nt);
+    let (prof, wave, bi) = (ctx.prof, ctx.wave, ctx.bi);
+    let body = |t: usize, scratch: &mut Scratch| {
+        let col0 = (t * chunk).min(n);
+        let col1 = (col0 + chunk).min(n);
+        if col0 >= col1 {
+            return;
         }
-    });
-    Some(nt)
+        let start = prof.map(|_| Instant::now());
+        // SAFETY: workers hold pairwise-disjoint column ranges, so every
+        // element of every output is written by exactly one worker, and
+        // the regions themselves are exclusive this wave (arena plan).
+        unsafe { tape.execute_cols_range_into(&bufs, col0, col1, &outs, scratch) };
+        if let (Some(p), Some(s)) = (prof, start) {
+            p.block_rows(t + 1, wave, bi, KernelKind::Tape, col1 - col0, s);
+        }
+    };
+    dispatch(workers, nt, ctx.scratch_pool, ctx.run_grows, ctx.run_peak, &body)?;
+    Ok(Some(nt))
 }
 
 #[cfg(test)]
@@ -979,6 +1175,59 @@ mod tests {
             let got =
                 execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), threads).unwrap();
             assert_eq!(got[0].data, seq[0].data);
+        }
+    }
+
+    #[test]
+    fn col_parallel_hoisted_matches_sequential_bitwise() {
+        // One wide fused elementwise block forced onto the hoisted
+        // column-major schedule — historically single-threaded, now
+        // column-split. Bits must not move vs the sequential executor,
+        // on the scoped path and through a persistent pool alike.
+        use crate::compiler::exec::pool::WorkerPool;
+        let mut g = Graph::new();
+        let a = g.input("a", &[64, 512], DType::F32);
+        let c = g.input("c", &[512], DType::F32);
+        let x = g.add(a, c);
+        let y = g.add_op(Op::Tanh, &[x]);
+        g.mark_output(y);
+        let feeds = feeds_for(&g, 11);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        assert_eq!(plan.num_blocks(), 1);
+        let mut schedules = ScheduleChoices::new();
+        schedules.insert(plan.blocks[0].id, Schedule::HoistedColMajor);
+        let seq = execute_plan(&g, &plan, &feeds, &schedules).unwrap();
+        for threads in [2, 4] {
+            let got =
+                execute_plan_parallel(&g, &plan, &feeds, &schedules, threads).unwrap();
+            assert_eq!(got[0].data, seq[0].data, "col-split != sequential at {threads}");
+        }
+        let pool = WorkerPool::new(4);
+        let got = execute_plan_parallel(&g, &plan, &feeds, &schedules, &pool).unwrap();
+        assert_eq!(got[0].data, seq[0].data, "col-split on the pool != sequential");
+    }
+
+    #[test]
+    fn pool_reuse_stops_scratch_growth() {
+        // Same prepared graph, same pool: after the first run every
+        // shape has been seen, so later runs report zero scratch growth.
+        use crate::compiler::exec::pool::WorkerPool;
+        let g = wide_graph(64, 48);
+        let plan = lp_fusion(&g, &FusionConfig::default());
+        let prep = PreparedExec::new(&g, &plan);
+        let feeds = feeds_for(&g, 13);
+        let pool = WorkerPool::new(2);
+        let (_, first) = execute_prepared(
+            &g, &plan, &prep, &Feeds::single(&feeds), &ScheduleChoices::new(), &pool, None,
+        )
+        .unwrap();
+        assert!(first.peak_scratch_bytes > 0, "fused blocks use kernel scratch");
+        for _ in 0..3 {
+            let (_, stats) = execute_prepared(
+                &g, &plan, &prep, &Feeds::single(&feeds), &ScheduleChoices::new(), &pool, None,
+            )
+            .unwrap();
+            assert_eq!(stats.scratch_grows, 0, "warm pool run still grew scratch");
         }
     }
 

@@ -28,6 +28,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use super::interp::apply_op;
+use super::pool::Scratch;
 use super::profile::{KernelKind, Profiler};
 use super::tensor::{matmul_i8, Tensor, View};
 use super::{leaf_value, quant_matmul, ExecError, Feeds, LeafValue, OutputSink, QuantizedWeights};
@@ -114,10 +115,12 @@ pub fn execute_plan_sinks_profiled(
     }
 
     let mut vals: HashMap<NodeId, Tensor> = HashMap::new();
+    // One kernel scratch reused across every block of the run.
+    let mut scratch = Scratch::new();
     for (bi, block) in plan.blocks.iter().enumerate() {
         let sched = schedules.get(&block.id).copied().unwrap_or(Schedule::RowRecompute);
         let start = prof.map(|_| Instant::now());
-        let kind = execute_block(g, block, sched, &leaf, &mut vals, quant);
+        let kind = execute_block(g, block, sched, &leaf, &mut vals, quant, &mut scratch);
         if let (Some(p), Some(t)) = (prof, start) {
             p.block(0, bi, bi, kind, t);
         }
@@ -163,6 +166,7 @@ fn value_view<'a>(
 /// Execute one block, returning the [`KernelKind`] actually dispatched —
 /// the profiler records the *real* decision, so profile rows can never
 /// drift from execution the way a mirrored classifier could.
+#[allow(clippy::too_many_arguments)]
 pub fn execute_block(
     g: &Graph,
     block: &FusedBlock,
@@ -170,6 +174,7 @@ pub fn execute_block(
     leaf: &[Option<LeafValue>],
     vals: &mut HashMap<NodeId, Tensor>,
     quant: Option<&QuantizedWeights>,
+    scratch: &mut Scratch,
 ) -> KernelKind {
     match block.kind {
         BlockKind::ElementwiseChain | BlockKind::BroadcastElementwise => {
@@ -183,14 +188,19 @@ pub fn execute_block(
                 return fallback(g, block, leaf, vals, quant);
             }
             let tape = compile_block(g, block);
-            let outs = {
+            let numel = tape.domain.numel();
+            let mut storage: Vec<Vec<f32>> =
+                tape.output_regs.iter().map(|_| vec![0.0f32; numel]).collect();
+            {
                 let bufs: Vec<View> =
                     tape.inputs.iter().map(|&i| value_view(g, i, leaf, vals)).collect();
-                tape.execute_views(&bufs, sched)
-            };
+                let mut outs: Vec<&mut [f32]> =
+                    storage.iter_mut().map(|v| v.as_mut_slice()).collect();
+                tape.execute_into(&bufs, sched, &mut outs, scratch);
+            }
             let keys: Vec<NodeId> = tape.output_regs.iter().map(|&(n, _)| n).collect();
-            for (key, out) in keys.into_iter().zip(outs) {
-                vals.insert(key, out);
+            for (key, data) in keys.into_iter().zip(storage) {
+                vals.insert(key, Tensor { shape: tape.domain.clone(), data });
             }
             KernelKind::Tape
         }
@@ -246,6 +256,7 @@ pub fn execute_block(
                             0,
                             mt.tape.domain.dims[0],
                             &mut outs,
+                            scratch,
                         );
                     }
                     let keys: Vec<NodeId> = mt.tape.output_regs.iter().map(|&(nd, _)| nd).collect();
@@ -275,12 +286,14 @@ pub fn execute_block(
                     let m = mt.tape.domain.dims[0];
                     if let Some((qt, scale)) = quant_matmul(g, mt.matmul, quant) {
                         mt.execute_i8_rows_into(
-                            lhs, qt, scale, &bufs, gamma, beta, 0, m, &mut data,
+                            lhs, qt, scale, &bufs, gamma, beta, 0, m, &mut data, scratch,
                         );
                         kind = KernelKind::FusedLayernormI8;
                     } else {
                         let rhs = value_view(g, mt.rhs, leaf, vals);
-                        mt.execute_f32_rows_into(lhs, rhs, &bufs, gamma, beta, 0, m, &mut data);
+                        mt.execute_f32_rows_into(
+                            lhs, rhs, &bufs, gamma, beta, 0, m, &mut data, scratch,
+                        );
                         kind = KernelKind::FusedLayernormF32;
                     }
                 }

@@ -1,0 +1,721 @@
+//! Persistent worker-pool runtime: long-lived executor threads that own
+//! reusable kernel scratch.
+//!
+//! The paper's real-time budget (§3.2, ~45 ms/token) leaves no room for
+//! per-inference thread churn: the wave executor used to spawn a fresh
+//! `thread::scope` per wave and the fused int8/fp32 row kernels allocated
+//! their `qa`/`acc`/`mm_row`/register scratch on every call. This module
+//! makes the steady-state decode path spawn- and allocation-free:
+//!
+//! * [`WorkerPool`] — `size` threads spawned ONCE (named
+//!   `canao-worker-{i}`), parked on a condvar between waves and woken by
+//!   an epoch bump, joined on `Drop`. A wave is one call to
+//!   [`WorkerPool::run`]: the first `nt <= size` workers each invoke the
+//!   task closure with their stable worker id, the rest keep sleeping.
+//!   A panicking task is contained (`catch_unwind`): the run fails typed
+//!   and the pool stays usable — worker threads never die to a panic.
+//! * [`Scratch`] — the per-thread kernel arena. Every worker owns one for
+//!   its whole life; the fused row kernels *borrow* it instead of
+//!   allocating. Borrow helpers clear + zero-resize to the exact length
+//!   the kernel used to `vec![0; len]`, so reuse is bitwise-invisible.
+//!   Growth events and peak capacity are counted — `ExecStats` and the
+//!   pool counters surface them, and `tests/pool.rs` pins both at zero
+//!   per steady-state decode token.
+//! * [`Workers`] — how a single execution names its thread resources:
+//!   `Workers::Pool(&pool)` dispatches waves to the persistent pool;
+//!   `Workers::Scoped(n)` is the old spawn-per-wave path, kept as the
+//!   bitwise reference (`tests/exec_differential.rs` pins pool == scoped
+//!   at 1/2/4 workers across every schedule and precision). A plain
+//!   `usize` converts to `Scoped`, so historical call sites compile
+//!   unchanged.
+//! * [`ExecBackend`] — the owning version ([`Workers`] borrows from it):
+//!   serving engines hold one for their lifetime (`--no-pool` selects the
+//!   scoped reference). Cloning a `Pool` backend shares the same threads.
+//!
+//! Worker ids are stable across waves, so profiler lanes keyed by worker
+//! id (slot `w + 1`; slot 0 is the driver) no longer jump between waves.
+//!
+//! Core pinning: the vendored environment has no libc/affinity API, so
+//! threads are named but not pinned; pin externally (`taskset`/cgroup
+//! cpusets) for NUMA-stable deployments.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// Lock that survives a poisoned mutex: pool state transitions are all
+/// panic-safe (the only code run under these locks is field updates), so
+/// a poison just means some *other* thread panicked mid-wave — the state
+/// itself is still consistent and shutdown must still work.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---- Scratch -------------------------------------------------------------
+
+/// Reusable per-thread kernel scratch: every buffer the fused int8/fp32
+/// row kernels and the tape schedules used to allocate per call. Each
+/// borrow helper clears and zero-resizes to the exact requested length,
+/// so a warm buffer is bitwise-indistinguishable from a fresh
+/// `vec![0; len]` — the executors' differential contracts never see the
+/// reuse. Capacity never shrinks; after warmup on fixed shapes every call
+/// is allocation-free ([`Scratch::grows`] stops moving, which
+/// `tests/pool.rs` pins for steady-state decode).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Quantized LHS row (`[k]` i8) for the fused int8 kernels.
+    qa: Vec<i8>,
+    /// i32 MAC accumulator row (`[n]`).
+    acc: Vec<i32>,
+    /// The in-flight matmul result row (`[n]` f32).
+    mm_row: Vec<f32>,
+    /// Tape register bank: one row (or column) per instruction. The outer
+    /// Vec never shrinks; inner rows are zero-resized per use.
+    regs: Vec<Vec<f32>>,
+    /// Hoisted (row-invariant) scalar bank for the column schedules.
+    hoisted: Vec<f32>,
+    /// Scalar-path register file (non-2-D domains).
+    sregs: Vec<f32>,
+    /// Per-input flat offsets (scalar path).
+    offsets: Vec<usize>,
+    /// Decoded coordinates (scalar path).
+    coords: Vec<usize>,
+    grows: u64,
+    peak_bytes: usize,
+}
+
+/// Zero-resize `v` to exactly `len`, counting a growth event when the
+/// allocation actually grows. The result is bitwise-identical to a fresh
+/// `vec![T::default(); len]`.
+fn fit<T: Copy + Default>(v: &mut Vec<T>, len: usize, grows: &mut u64) {
+    if v.capacity() < len {
+        *grows += 1;
+    }
+    v.clear();
+    v.resize(len, T::default());
+}
+
+fn fit_bank(bank: &mut Vec<Vec<f32>>, count: usize, len: usize, grows: &mut u64) {
+    if bank.len() < count {
+        *grows += 1;
+        bank.resize_with(count, Vec::new);
+    }
+    for v in &mut bank[..count] {
+        if v.capacity() < len {
+            *grows += 1;
+        }
+        v.clear();
+        v.resize(len, 0.0);
+    }
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tape register bank: `count` rows of `len` zeros (the row
+    /// schedule's `vec![vec![0.0; n]; insts]`).
+    pub fn reg_bank(&mut self, count: usize, len: usize) -> &mut [Vec<f32>] {
+        fit_bank(&mut self.regs, count, len, &mut self.grows);
+        self.note_peak();
+        &mut self.regs[..count]
+    }
+
+    /// Column-schedule state: register bank (`count` columns of `len`
+    /// rows) plus the hoisted scalar bank (`count` slots).
+    pub fn cols_state(&mut self, count: usize, len: usize) -> (&mut [Vec<f32>], &mut [f32]) {
+        fit_bank(&mut self.regs, count, len, &mut self.grows);
+        fit(&mut self.hoisted, count, &mut self.grows);
+        self.note_peak();
+        (&mut self.regs[..count], &mut self.hoisted[..])
+    }
+
+    /// Fused matmul row-loop state: the `[n]` matmul row plus the
+    /// register bank (`count` rows of `n`).
+    pub fn mm_state(&mut self, n: usize, count: usize) -> (&mut [f32], &mut [Vec<f32>]) {
+        fit(&mut self.mm_row, n, &mut self.grows);
+        fit_bank(&mut self.regs, count, n, &mut self.grows);
+        self.note_peak();
+        (&mut self.mm_row[..], &mut self.regs[..count])
+    }
+
+    /// Fused INT8 state: quantized row (`[k]`), accumulator (`[n]`),
+    /// matmul row (`[n]`), register bank (`count` rows of `n`).
+    pub fn i8_state(
+        &mut self,
+        k: usize,
+        n: usize,
+        count: usize,
+    ) -> (&mut [i8], &mut [i32], &mut [f32], &mut [Vec<f32>]) {
+        fit(&mut self.qa, k, &mut self.grows);
+        fit(&mut self.acc, n, &mut self.grows);
+        fit(&mut self.mm_row, n, &mut self.grows);
+        fit_bank(&mut self.regs, count, n, &mut self.grows);
+        self.note_peak();
+        (
+            &mut self.qa[..],
+            &mut self.acc[..],
+            &mut self.mm_row[..],
+            &mut self.regs[..count],
+        )
+    }
+
+    /// Fused INT8 matmul+layernorm state: quantized row + accumulator
+    /// only (the shared row loop borrows [`Scratch::mm_state`] parts
+    /// separately via the caller).
+    pub fn qa_acc(&mut self, k: usize, n: usize) -> (&mut [i8], &mut [i32]) {
+        fit(&mut self.qa, k, &mut self.grows);
+        fit(&mut self.acc, n, &mut self.grows);
+        self.note_peak();
+        (&mut self.qa[..], &mut self.acc[..])
+    }
+
+    /// Scalar-path state (non-vectorized domains): register file,
+    /// hoisted bank, per-input offsets, coordinate buffer.
+    pub fn scalar_state(
+        &mut self,
+        insts: usize,
+        inputs: usize,
+        rank: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [usize], &mut [usize]) {
+        fit(&mut self.sregs, insts, &mut self.grows);
+        fit(&mut self.hoisted, insts, &mut self.grows);
+        fit(&mut self.offsets, inputs, &mut self.grows);
+        fit(&mut self.coords, rank, &mut self.grows);
+        self.note_peak();
+        (
+            &mut self.sregs[..],
+            &mut self.hoisted[..],
+            &mut self.offsets[..],
+            &mut self.coords[..],
+        )
+    }
+
+    /// Growth events since construction (monotonic; a steady-state run on
+    /// warm shapes adds zero).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Peak bytes this scratch has ever held (capacity-based).
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    fn note_peak(&mut self) {
+        let f32s = std::mem::size_of::<f32>();
+        let usizes = std::mem::size_of::<usize>();
+        let bank: usize = self.regs.iter().map(|v| v.capacity() * f32s).sum();
+        let bytes = self.qa.capacity()
+            + self.acc.capacity() * std::mem::size_of::<i32>()
+            + (self.mm_row.capacity() + self.hoisted.capacity() + self.sregs.capacity()) * f32s
+            + (self.offsets.capacity() + self.coords.capacity()) * usizes
+            + bank;
+        self.peak_bytes = self.peak_bytes.max(bytes);
+    }
+}
+
+/// Recycled [`Scratch`] instances for execution paths that have no
+/// persistent worker to own one: the driver thread's inline kernels and
+/// the scoped-spawn reference path. Checkout hands back a warm scratch
+/// when one is parked (steady-state serving stops re-growing), a fresh
+/// one otherwise. `Clone` clones COLD (an empty pool) — it exists only so
+/// `PreparedExec` stays `Clone`, mirroring `util::pool::SlabPool`.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    inner: Mutex<Vec<Scratch>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn checkout(&self) -> Scratch {
+        lock(&self.inner).pop().unwrap_or_default()
+    }
+
+    pub fn give_back(&self, s: Scratch) {
+        lock(&self.inner).push(s);
+    }
+
+    /// Scratches currently parked (observability for tests).
+    pub fn len(&self) -> usize {
+        lock(&self.inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Clone for ScratchPool {
+    fn clone(&self) -> Self {
+        ScratchPool::new()
+    }
+}
+
+// ---- WorkerPool ----------------------------------------------------------
+
+/// A wave's task closure, lifetime-erased so it can sit in the shared
+/// pool state while workers run it. SOUND because [`WorkerPool::run`]
+/// never returns until every participating worker has decremented
+/// `pending` — which each does strictly *after* its call into the closure
+/// returns (or unwinds), so the pointee outlives every dereference.
+struct TaskPtr(*const (dyn Fn(usize, &mut Scratch) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-called from many workers) and the
+// pointer is only dereferenced inside the window `run` keeps it valid.
+unsafe impl Send for TaskPtr {}
+
+struct PoolState {
+    /// Bumped once per dispatched wave; workers park until it moves.
+    epoch: u64,
+    /// The current wave's closure; dangling between waves (never
+    /// dereferenced once `pending` has drained).
+    task: Option<TaskPtr>,
+    /// Worker ids `< nt` participate in the current wave.
+    nt: usize,
+    /// Participants still inside the current wave.
+    pending: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between waves.
+    work: Condvar,
+    /// The driver parks here until `pending` drains.
+    done: Condvar,
+    /// Any participant panicked during the current wave.
+    panicked: AtomicBool,
+    /// Threads ever spawned — set to `size` at construction and never
+    /// incremented again (the zero-spawn pin for steady-state decode).
+    spawns_total: AtomicU64,
+    waves_dispatched: AtomicU64,
+    /// Total scratch growth events across all workers.
+    scratch_grows: AtomicU64,
+    /// Max per-worker scratch footprint seen.
+    scratch_peak: AtomicUsize,
+    /// Workers that have exited their loop (Drop-join observability).
+    exits: Arc<AtomicUsize>,
+}
+
+fn worker_loop(w: usize, shared: Arc<PoolShared>) {
+    let mut scratch = Scratch::new();
+    let mut seen = 0u64;
+    let mut published_grows = 0u64;
+    loop {
+        // Park until the epoch moves (or shutdown); claim participation.
+        let ptr = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    drop(st);
+                    shared.exits.fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if w < st.nt {
+                        break st.task.as_ref().expect("task set with epoch").0;
+                    }
+                    // Not a participant of this wave: keep parking. The
+                    // driver only counted `nt` into `pending`, so skipping
+                    // is correct — and at most one wave is ever
+                    // outstanding (`run` drains before returning), so a
+                    // sleeping worker can never miss a wave it owes.
+                }
+                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        // SAFETY: see `TaskPtr` — `run` keeps the closure alive until this
+        // worker decrements `pending` below, which happens only after the
+        // call returns or unwinds.
+        let f = unsafe { &*ptr };
+        if catch_unwind(AssertUnwindSafe(|| f(w, &mut scratch))).is_err() {
+            shared.panicked.store(true, Ordering::SeqCst);
+        }
+        shared
+            .scratch_grows
+            .fetch_add(scratch.grows() - published_grows, Ordering::Relaxed);
+        published_grows = scratch.grows();
+        shared.scratch_peak.fetch_max(scratch.peak_bytes(), Ordering::Relaxed);
+        let mut st = lock(&shared.state);
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A wave's worth of work panicked on some worker; the run's outputs are
+/// unspecified but the pool itself is fully recovered (workers survive
+/// via `catch_unwind` and the next [`WorkerPool::run`] proceeds
+/// normally). The executor maps this to `ExecError::WorkerPanicked`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolPanicked;
+
+impl std::fmt::Display for PoolPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a pool worker panicked while running a wave")
+    }
+}
+
+impl std::error::Error for PoolPanicked {}
+
+/// Counter snapshot for benches, CI assertions, and `tests/pool.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub size: usize,
+    /// Threads ever spawned (== `size`; never grows after construction).
+    pub spawns_total: u64,
+    pub waves_dispatched: u64,
+    /// Scratch growth events across all workers (delta 0 in steady state).
+    pub scratch_grows: u64,
+    /// Largest per-worker scratch footprint, bytes.
+    pub scratch_peak_bytes: usize,
+}
+
+struct PoolCore {
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Serializes [`WorkerPool::run`] across clones: one wave at a time
+    /// owns the epoch/pending protocol.
+    run_gate: Mutex<()>,
+    size: usize,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        let handles = self.handles.get_mut().unwrap_or_else(PoisonError::into_inner);
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The persistent worker pool. See module docs. `Clone` shares the same
+/// threads (serving engines and their batcher clone freely); the threads
+/// are joined when the last clone drops.
+#[derive(Clone)]
+pub struct WorkerPool {
+    core: Arc<PoolCore>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("size", &self.core.size).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `size.max(1)` workers, named `canao-worker-{i}`. This is the
+    /// ONLY place the pool spawns threads.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                task: None,
+                nt: 0,
+                pending: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+            spawns_total: AtomicU64::new(0),
+            waves_dispatched: AtomicU64::new(0),
+            scratch_grows: AtomicU64::new(0),
+            scratch_peak: AtomicUsize::new(0),
+            exits: Arc::new(AtomicUsize::new(0)),
+        });
+        let mut handles = Vec::with_capacity(size);
+        for w in 0..size {
+            let sh = Arc::clone(&shared);
+            shared.spawns_total.fetch_add(1, Ordering::SeqCst);
+            let h = std::thread::Builder::new()
+                .name(format!("canao-worker-{w}"))
+                .spawn(move || worker_loop(w, sh))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        WorkerPool {
+            core: Arc::new(PoolCore {
+                shared,
+                handles: Mutex::new(handles),
+                run_gate: Mutex::new(()),
+                size,
+            }),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.core.size
+    }
+
+    /// Dispatch one wave: workers `0..min(nt, size)` each run
+    /// `f(worker_id, &mut worker_scratch)` concurrently; the call returns
+    /// after ALL of them finish. A panic in any worker is contained: the
+    /// run returns `Err(PoolPanicked)` (outputs unspecified) and the pool
+    /// remains fully usable. Concurrent `run` calls from clones serialize.
+    pub fn run(
+        &self,
+        nt: usize,
+        f: &(dyn Fn(usize, &mut Scratch) + Sync),
+    ) -> Result<(), PoolPanicked> {
+        let core = &self.core;
+        let nt = nt.min(core.size).max(1);
+        let _gate = lock(&core.run_gate);
+        let shared = &core.shared;
+        // SAFETY (lifetime erasure): this function blocks until `pending`
+        // drains to zero, and each worker decrements only after its call
+        // into `f` has returned or unwound — `f` outlives every use.
+        let ptr = TaskPtr(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize, &mut Scratch) + Sync),
+                &'static (dyn Fn(usize, &mut Scratch) + Sync + 'static),
+            >(f)
+        });
+        let mut st = lock(&shared.state);
+        st.epoch += 1;
+        st.task = Some(ptr);
+        st.nt = nt;
+        st.pending = nt;
+        shared.panicked.store(false, Ordering::SeqCst);
+        shared.work.notify_all();
+        while st.pending > 0 {
+            st = shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        st.task = None;
+        drop(st);
+        shared.waves_dispatched.fetch_add(1, Ordering::Relaxed);
+        if shared.panicked.load(Ordering::SeqCst) {
+            Err(PoolPanicked)
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let s = &self.core.shared;
+        PoolStats {
+            size: self.core.size,
+            spawns_total: s.spawns_total.load(Ordering::SeqCst),
+            waves_dispatched: s.waves_dispatched.load(Ordering::Relaxed),
+            scratch_grows: s.scratch_grows.load(Ordering::Relaxed),
+            scratch_peak_bytes: s.scratch_peak.load(Ordering::Relaxed),
+        }
+    }
+
+    /// A handle that counts worker threads that have exited their loop —
+    /// lets `tests/pool.rs` assert the `Drop` join actually happened
+    /// after the pool is gone.
+    pub fn exits_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.core.shared.exits)
+    }
+}
+
+// ---- Workers / ExecBackend -----------------------------------------------
+
+/// How one execution names its thread resources: the persistent pool or
+/// the scoped-spawn reference path. `Copy`, so it threads through the
+/// executor call chain like the old `threads: usize` did — and a plain
+/// `usize` still converts (`impl From<usize>`), keeping every historical
+/// call site source-compatible while meaning "scoped reference".
+#[derive(Debug, Clone, Copy)]
+pub enum Workers<'p> {
+    /// Spawn-per-wave scoped threads (the bitwise reference path).
+    Scoped(usize),
+    /// Dispatch waves to a persistent [`WorkerPool`].
+    Pool(&'p WorkerPool),
+}
+
+impl Workers<'_> {
+    /// The parallel width this execution may use.
+    pub fn threads(&self) -> usize {
+        match self {
+            Workers::Scoped(n) => (*n).max(1),
+            Workers::Pool(p) => p.size(),
+        }
+    }
+}
+
+impl From<usize> for Workers<'_> {
+    fn from(n: usize) -> Self {
+        Workers::Scoped(n)
+    }
+}
+
+impl<'p> From<&'p WorkerPool> for Workers<'p> {
+    fn from(p: &'p WorkerPool) -> Self {
+        Workers::Pool(p)
+    }
+}
+
+impl<'p> From<&'p ExecBackend> for Workers<'p> {
+    fn from(b: &'p ExecBackend) -> Self {
+        b.workers()
+    }
+}
+
+/// The owning side of [`Workers`]: serving engines hold ONE backend for
+/// their lifetime (a pool by default; `--no-pool` selects the
+/// scoped-spawn reference) and lend `backend.workers()` to every forward.
+/// Cloning a `Pool` backend shares the same threads.
+#[derive(Debug, Clone)]
+pub enum ExecBackend {
+    Scoped(usize),
+    Pool(WorkerPool),
+}
+
+impl ExecBackend {
+    /// A persistent pool of `threads` workers (the serving default).
+    pub fn pool(threads: usize) -> Self {
+        ExecBackend::Pool(WorkerPool::new(threads))
+    }
+
+    /// The spawn-per-wave reference path.
+    pub fn scoped(threads: usize) -> Self {
+        ExecBackend::Scoped(threads.max(1))
+    }
+
+    /// `--no-pool`-style selection helper.
+    pub fn with_pool(use_pool: bool, threads: usize) -> Self {
+        if use_pool {
+            Self::pool(threads)
+        } else {
+            Self::scoped(threads)
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        match self {
+            ExecBackend::Scoped(n) => (*n).max(1),
+            ExecBackend::Pool(p) => p.size(),
+        }
+    }
+
+    pub fn workers(&self) -> Workers<'_> {
+        match self {
+            ExecBackend::Scoped(n) => Workers::Scoped(*n),
+            ExecBackend::Pool(p) => Workers::Pool(p),
+        }
+    }
+
+    /// Pool counters, when this backend holds a pool.
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        match self {
+            ExecBackend::Scoped(_) => None,
+            ExecBackend::Pool(p) => Some(p.stats()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_reuse_is_zero_fill_and_stops_growing() {
+        let mut s = Scratch::new();
+        {
+            let (qa, acc, mm, regs) = s.i8_state(8, 4, 3);
+            assert_eq!(qa, &[0i8; 8]);
+            assert_eq!(acc, &[0i32; 4]);
+            assert_eq!(mm, &[0.0f32; 4]);
+            assert_eq!(regs.len(), 3);
+            qa.fill(7);
+            mm.fill(1.5);
+            regs[0].fill(2.0);
+        }
+        let after_first = s.grows();
+        assert!(after_first > 0);
+        // Same shapes again: dirty buffers come back zeroed, no growth.
+        let (qa, _, mm, regs) = s.i8_state(8, 4, 3);
+        assert_eq!(qa, &[0i8; 8]);
+        assert_eq!(mm, &[0.0f32; 4]);
+        assert!(regs[0].iter().all(|&v| v == 0.0));
+        assert_eq!(s.grows(), after_first);
+        assert!(s.peak_bytes() > 0);
+        // Larger shape grows again.
+        let _ = s.reg_bank(3, 64);
+        assert!(s.grows() > after_first);
+    }
+
+    #[test]
+    fn pool_runs_each_participant_once() {
+        let pool = WorkerPool::new(4);
+        let hits = Mutex::new(vec![0usize; 4]);
+        for nt in [1, 2, 4, 9] {
+            for h in lock(&hits).iter_mut() {
+                *h = 0;
+            }
+            pool.run(nt, &|w, _s| {
+                lock(&hits)[w] += 1;
+            })
+            .unwrap();
+            let got = lock(&hits).clone();
+            let expect_nt = nt.min(4);
+            for (w, &h) in got.iter().enumerate() {
+                assert_eq!(h, usize::from(w < expect_nt), "worker {w} at nt {nt}");
+            }
+        }
+        let st = pool.stats();
+        assert_eq!(st.spawns_total, 4);
+        assert_eq!(st.waves_dispatched, 4);
+    }
+
+    #[test]
+    fn panic_is_contained_and_pool_recovers() {
+        let pool = WorkerPool::new(2);
+        let err = pool.run(2, &|w, _s| {
+            if w == 1 {
+                panic!("poisoned worker");
+            }
+        });
+        assert_eq!(err, Err(PoolPanicked));
+        // The pool is fully usable afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run(2, &|_w, _s| {
+            count.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+        assert_eq!(pool.stats().spawns_total, 2, "no respawn after a panic");
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(3);
+        let exits = pool.exits_handle();
+        pool.run(3, &|_w, _s| {}).unwrap();
+        assert_eq!(exits.load(Ordering::SeqCst), 0);
+        drop(pool);
+        assert_eq!(exits.load(Ordering::SeqCst), 3, "Drop joined every worker");
+    }
+
+    #[test]
+    fn workers_conversions() {
+        let w: Workers = 3usize.into();
+        assert!(matches!(w, Workers::Scoped(3)));
+        assert_eq!(w.threads(), 3);
+        let b = ExecBackend::scoped(2);
+        assert_eq!(Workers::from(&b).threads(), 2);
+        let bp = ExecBackend::pool(2);
+        assert_eq!(bp.threads(), 2);
+        assert!(matches!(bp.workers(), Workers::Pool(_)));
+        assert_eq!(bp.pool_stats().unwrap().size, 2);
+        // Clones share the same threads.
+        let bp2 = bp.clone();
+        assert_eq!(bp2.pool_stats().unwrap().spawns_total, 2);
+    }
+}

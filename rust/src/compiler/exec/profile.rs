@@ -20,13 +20,19 @@
 //!   time`);
 //! * per **run**: the executor's [`ExecStats`] arena/slab snapshot.
 //!
+//! Lanes are keyed by **persistent worker id**: the executor's driver
+//! thread records on slot 0 and worker `w` (pool or scoped) records on
+//! slot `w + 1`, so a chrome-trace lane follows one pool thread across
+//! every wave and run instead of renumbering per wave.
+//! [`Profiler::new`] therefore allocates `threads + 1` slots.
+//!
 //! Concurrency contract (mirrors `util::pool::SharedSlab`): the profiler
-//! holds one sample buffer per thread slot, and during a wave each slot
-//! is touched only by the thread with that index — the executor's
-//! `thread::scope` join is the barrier that orders every wave's writes
-//! before the next wave and before [`Profiler::report`], which takes
-//! `&mut self` and therefore exclusive access. No locks, no atomics,
-//! lock-free for the whole run.
+//! holds one sample buffer per lane, and during a wave each lane is
+//! touched only by the worker with that id — the executor's wave
+//! barrier (pool `run` return or `thread::scope` join) orders every
+//! wave's writes before the next wave and before [`Profiler::report`],
+//! which takes `&mut self` and therefore exclusive access. No locks, no
+//! atomics, lock-free for the whole run.
 //!
 //! Export views ([`ProfileReport`]):
 //! * [`ProfileReport::chrome_trace`] — a chrome://tracing `trace_event`
@@ -183,7 +189,9 @@ unsafe impl Sync for Profiler {}
 
 impl Profiler {
     /// Build a profiler for `(g, plan)` executions on up to `threads`
-    /// thread slots (pass 1 for the sequential executor).
+    /// workers (pass 1 for the sequential executor). Allocates
+    /// `threads + 1` lanes: slot 0 for the driver thread, slot `w + 1`
+    /// for worker `w` — stable across waves and runs.
     pub fn new(g: &Graph, plan: &FusionPlan, threads: usize) -> Self {
         let meta = plan
             .blocks
@@ -203,7 +211,7 @@ impl Profiler {
                 }
             })
             .collect();
-        let slots = (0..threads.max(1)).map(|_| Slot::default()).collect();
+        let slots = (0..threads.max(1) + 1).map(|_| Slot::default()).collect();
         Profiler {
             t0: Instant::now(),
             meta,
@@ -337,6 +345,30 @@ impl ProfileReport {
         self.blocks.iter().map(|s| (s.block, s.kind)).collect()
     }
 
+    /// Per-worker utilization over this report's wall span, one row per
+    /// lane that recorded at least one sample: lane 0 is the driver
+    /// thread, lane `w + 1` is persistent worker `w`. `busy_ns` is the
+    /// lane's kernel time; `idle_ns` is the report wall minus that
+    /// (parked between waves, starved within one, or simply not
+    /// participating) — the thread-budget view the serving guide prints.
+    pub fn worker_lanes(&self) -> Vec<WorkerLane> {
+        let wall = self.wall_ns();
+        let mut by: BTreeMap<usize, (u64, usize)> = BTreeMap::new();
+        for s in &self.blocks {
+            let e = by.entry(s.thread).or_insert((0, 0));
+            e.0 += s.dur_ns;
+            e.1 += 1;
+        }
+        by.into_iter()
+            .map(|(thread, (busy_ns, samples))| WorkerLane {
+                thread,
+                busy_ns,
+                idle_ns: wall.saturating_sub(busy_ns),
+                samples,
+            })
+            .collect()
+    }
+
     /// Per-kernel-kind aggregation — view (2) of the tentpole.
     pub fn aggregate(&self) -> ProfileAggregate {
         let mut by: BTreeMap<KernelKind, KindAgg> = BTreeMap::new();
@@ -411,6 +443,20 @@ impl ProfileReport {
         top.insert("displayTimeUnit".into(), Json::Str("ns".into()));
         Json::Obj(top)
     }
+}
+
+/// Per-worker busy/idle totals over one report's wall span
+/// ([`ProfileReport::worker_lanes`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerLane {
+    /// Profile lane: 0 = driver thread, `w + 1` = persistent worker `w`.
+    pub thread: usize,
+    /// Σ kernel time recorded on this lane, ns.
+    pub busy_ns: u64,
+    /// Report wall minus `busy_ns` (parked, starved, or not dispatched).
+    pub idle_ns: u64,
+    /// Dispatches recorded on this lane.
+    pub samples: usize,
 }
 
 /// One row of the per-kind table.
@@ -548,6 +594,27 @@ mod tests {
             assert!(ev.get("ts").unwrap().as_f64().is_some());
             assert!(ev.get("dur").unwrap().as_f64().is_some());
             assert!(ev.get("name").unwrap().as_str().is_some());
+        }
+    }
+
+    #[test]
+    fn worker_lanes_split_busy_and_idle() {
+        let (g, plan) = tiny();
+        let mut p = Profiler::new(&g, &plan, 2); // lanes 0 (driver), 1, 2
+        let t = Instant::now();
+        p.block(1, 0, 0, KernelKind::Tape, t);
+        p.block(2, 0, 0, KernelKind::Tape, t);
+        p.block(1, 1, 0, KernelKind::Tape, Instant::now());
+        let rep = p.report();
+        let lanes = rep.worker_lanes();
+        assert_eq!(lanes.len(), 2, "only lanes that recorded appear");
+        assert_eq!(lanes[0].thread, 1);
+        assert_eq!(lanes[0].samples, 2);
+        assert_eq!(lanes[1].thread, 2);
+        assert_eq!(lanes[1].samples, 1);
+        let wall = rep.wall_ns();
+        for lane in &lanes {
+            assert_eq!(lane.idle_ns, wall.saturating_sub(lane.busy_ns));
         }
     }
 

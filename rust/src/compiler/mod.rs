@@ -123,32 +123,35 @@ impl Compiled {
         exec::plan::execute_plan_with(&self.graph, &self.plan, feeds, &self.schedules, quant)
     }
 
-    /// Execute on host with the wave-parallel arena executor on `threads`
-    /// worker threads — the production host path.
-    pub fn run_parallel(
+    /// Execute on host with the wave-parallel arena executor — the
+    /// production host path. `workers` is anything convertible to
+    /// [`exec::Workers`]: a persistent [`exec::WorkerPool`] reference, an
+    /// [`exec::ExecBackend`], or a plain thread count for the scoped
+    /// reference path.
+    pub fn run_parallel<'p>(
         &self,
         feeds: &HashMap<String, Vec<f32>>,
-        threads: usize,
+        workers: impl Into<exec::Workers<'p>>,
     ) -> Result<Vec<exec::Tensor>, exec::ExecError> {
-        self.run_parallel_with(&Feeds::single(feeds), threads, None).map(|(t, _)| t)
+        self.run_parallel_with(&Feeds::single(feeds), workers, None).map(|(t, _)| t)
     }
 
     /// As [`Compiled::run_parallel`], also returning wave/arena stats.
-    pub fn run_parallel_stats(
+    pub fn run_parallel_stats<'p>(
         &self,
         feeds: &HashMap<String, Vec<f32>>,
-        threads: usize,
+        workers: impl Into<exec::Workers<'p>>,
     ) -> Result<(Vec<exec::Tensor>, exec::ExecStats), exec::ExecError> {
-        self.run_parallel_with(&Feeds::single(feeds), threads, None)
+        self.run_parallel_with(&Feeds::single(feeds), workers, None)
     }
 
     /// The full-control parallel entry: cached [`PreparedExec`], layered
     /// borrowed feeds, optional int8 weights. Every serving forward goes
     /// through here.
-    pub fn run_parallel_with(
+    pub fn run_parallel_with<'p>(
         &self,
         feeds: &Feeds<'_>,
-        threads: usize,
+        workers: impl Into<exec::Workers<'p>>,
         quant: Option<&QuantizedWeights>,
     ) -> Result<(Vec<exec::Tensor>, exec::ExecStats), exec::ExecError> {
         exec::parallel::execute_prepared(
@@ -157,7 +160,7 @@ impl Compiled {
             self.prepared(),
             feeds,
             &self.schedules,
-            threads,
+            workers,
             quant,
         )
     }
@@ -169,14 +172,14 @@ impl Compiled {
     /// reusable scratch row, appended KV rows to the cache manager's
     /// staging, cache feeds come in borrowed — no tensor allocations
     /// per step.
-    pub fn run_parallel_sinks(
+    pub fn run_parallel_sinks<'p>(
         &self,
         feeds: &Feeds<'_>,
-        threads: usize,
+        workers: impl Into<exec::Workers<'p>>,
         quant: Option<&QuantizedWeights>,
         sinks: &mut [OutputSink<'_>],
     ) -> Result<(Vec<Option<exec::Tensor>>, exec::ExecStats), exec::ExecError> {
-        self.run_parallel_sinks_profiled(feeds, threads, quant, sinks, None)
+        self.run_parallel_sinks_profiled(feeds, workers, quant, sinks, None)
     }
 
     /// As [`Compiled::run_parallel_sinks`] with an optional execution
@@ -185,11 +188,11 @@ impl Compiled {
     /// `prof` for chrome-trace export, the per-kind table, and
     /// device-model calibration. `None` is a strict no-op. The profiler
     /// must have been built for this model's graph/plan with at least
-    /// `threads` slots ([`exec::Profiler::new`]).
-    pub fn run_parallel_sinks_profiled(
+    /// the worker count ([`exec::Profiler::new`]).
+    pub fn run_parallel_sinks_profiled<'p>(
         &self,
         feeds: &Feeds<'_>,
-        threads: usize,
+        workers: impl Into<exec::Workers<'p>>,
         quant: Option<&QuantizedWeights>,
         sinks: &mut [OutputSink<'_>],
         prof: Option<&exec::Profiler>,
@@ -200,15 +203,16 @@ impl Compiled {
             self.prepared(),
             feeds,
             &self.schedules,
-            threads,
+            workers,
             quant,
             sinks,
             prof,
         )
     }
 
-    /// Build a profiler sized for this model (`threads` slots); pass it
-    /// to [`Compiled::run_parallel_sinks_profiled`] and call
+    /// Build a profiler sized for this model (`threads` workers — one
+    /// lane each plus the driver's); pass it to
+    /// [`Compiled::run_parallel_sinks_profiled`] and call
     /// [`exec::Profiler::report`] when done.
     pub fn profiler(&self, threads: usize) -> exec::Profiler {
         exec::Profiler::new(&self.graph, &self.plan, threads)

@@ -30,7 +30,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::compiler::exec::{Feeds, OutputSink};
+use crate::compiler::exec::{Feeds, OutputSink, Workers};
 use crate::decode::cache::KvCache;
 use crate::decode::{step_mask_feed, DecodeError, DecodePhases, Decoder, NEG_MASK};
 
@@ -133,13 +133,14 @@ impl BatchStepper {
     /// holds its next-token logits. A slot stepping before prefill or
     /// past a full cache fails the wave with a typed error before any
     /// state changes.
-    pub fn step(
+    pub fn step<'p>(
         &mut self,
         dec: &Decoder,
         weights: &HashMap<String, Vec<f32>>,
-        threads: usize,
+        workers: impl Into<Workers<'p>>,
         slots: &mut [BatchSlot],
     ) -> Result<usize, DecodeError> {
+        let workers = workers.into();
         let n = slots.len();
         assert!(n >= 1, "batched step needs at least one active slot");
         let (b, compiled, quant) = dec
@@ -221,7 +222,7 @@ impl BatchStepper {
             }
             let feeds = Feeds::layered_slices(&self.request, &slices, weights);
             let t0 = self.time_phases.then(Instant::now);
-            compiled.run_parallel_sinks(&feeds, threads, quant, &mut sinks)?;
+            compiled.run_parallel_sinks(&feeds, workers, quant, &mut sinks)?;
             if let Some(t) = t0 {
                 self.phases.add_step_wave(t.elapsed().as_nanos() as u64, 0, n as u64);
             }

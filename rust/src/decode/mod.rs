@@ -64,7 +64,9 @@ pub mod cache;
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::compiler::exec::{ExecError, ExecStats, Feeds, OutputSink, Profiler, QuantizedWeights};
+use crate::compiler::exec::{
+    ExecError, ExecStats, Feeds, OutputSink, Profiler, QuantizedWeights, Workers,
+};
 use crate::compiler::{compile, CompileOptions, Compiled};
 use crate::compress::quant::calibrate_activations_with;
 use crate::compress::CompressionConfig;
@@ -424,11 +426,11 @@ impl Decoder {
     /// prefill graph on `request` (must hold the padded `input_ids`),
     /// discard the cache outputs, and write the `[s, vocab]` logits into
     /// `logits`.
-    pub fn reseq_forward(
+    pub fn reseq_forward<'p>(
         &self,
         request: &HashMap<String, Vec<f32>>,
         weights: &HashMap<String, Vec<f32>>,
-        threads: usize,
+        workers: impl Into<Workers<'p>>,
         logits: &mut [f32],
     ) -> Result<ExecStats, ExecError> {
         let slices = self.mask_slices();
@@ -439,7 +441,7 @@ impl Decoder {
         }
         let feeds = Feeds::layered_slices(request, &slices, weights);
         self.prefill
-            .run_parallel_sinks(&feeds, threads, self.quant_prefill.as_ref(), &mut sinks)
+            .run_parallel_sinks(&feeds, workers, self.quant_prefill.as_ref(), &mut sinks)
             .map(|(_, stats)| stats)
     }
 
@@ -450,7 +452,7 @@ impl Decoder {
     pub fn try_begin<'a>(
         &'a self,
         weights: &'a HashMap<String, Vec<f32>>,
-        threads: usize,
+        workers: impl Into<Workers<'a>>,
     ) -> Result<DecodeSession<'a>, DecodeError> {
         let (s, v) = (self.cfg.seq, self.cfg.vocab);
         let cache = self.new_cache().map_err(|stats| {
@@ -468,7 +470,7 @@ impl Decoder {
         Ok(DecodeSession {
             dec: self,
             weights,
-            threads,
+            workers: workers.into(),
             cache,
             request,
             logits: vec![0.0f32; s * v],
@@ -486,9 +488,9 @@ impl Decoder {
     pub fn begin<'a>(
         &'a self,
         weights: &'a HashMap<String, Vec<f32>>,
-        threads: usize,
+        workers: impl Into<Workers<'a>>,
     ) -> DecodeSession<'a> {
-        self.try_begin(weights, threads)
+        self.try_begin(weights, workers)
             .expect("uncapped page pool cannot exhaust")
     }
 
@@ -533,13 +535,13 @@ impl Decoder {
     /// full `[s, vocab]` logits into `logits` (so the caller can sample
     /// the first generated token from the last prompt row) and leaves
     /// the cache filled to the prompt length.
-    pub fn prefill_into(
+    pub fn prefill_into<'p>(
         &self,
         ids: &[i32],
         cache: &mut KvCache,
         logits: &mut [f32],
         weights: &HashMap<String, Vec<f32>>,
-        threads: usize,
+        workers: impl Into<Workers<'p>>,
     ) -> Result<usize, DecodeError> {
         let (s, v) = (self.cfg.seq, self.cfg.vocab);
         if ids.is_empty() {
@@ -562,7 +564,7 @@ impl Decoder {
         }
         let feeds = Feeds::layered_slices(&request, &slices, weights);
         self.prefill
-            .run_parallel_sinks(&feeds, threads, self.quant_prefill.as_ref(), &mut sinks)?;
+            .run_parallel_sinks(&feeds, workers, self.quant_prefill.as_ref(), &mut sinks)?;
         drop(sinks);
         cache.len = ids.len();
         Ok(ids.len())
@@ -648,13 +650,14 @@ impl DecodePhases {
 /// a session allocates **no tensors or strings per token** — every
 /// buffer (logits, K/V staging, cache regions, feed names) is reused;
 /// the per-step allocations that remain are the two small lookup/sink
-/// tables plus the executor kernels' bounded per-dispatch scratch (the
-/// fused matmul tapes' row/register vectors — pooling those like the
-/// slabs is an open ROADMAP item).
+/// tables — the executor kernels' per-dispatch scratch (the fused
+/// matmul tapes' row/register vectors) now lives in the pooled
+/// [`Workers`] scratch arenas, so steady-state stepping grows no kernel
+/// scratch at all (pinned by `tests/pool.rs`).
 pub struct DecodeSession<'a> {
     dec: &'a Decoder,
     weights: &'a HashMap<String, Vec<f32>>,
-    threads: usize,
+    workers: Workers<'a>,
     cache: KvCache,
     request: HashMap<String, Vec<f32>>,
     logits: Vec<f32>,
@@ -721,7 +724,7 @@ impl DecodeSession<'_> {
         let t0 = self.time_phases.then(Instant::now);
         let (_, stats) = self.dec.prefill.run_parallel_sinks_profiled(
             &feeds,
-            self.threads,
+            self.workers,
             self.dec.quant_prefill.as_ref(),
             &mut sinks,
             prof,
@@ -787,7 +790,7 @@ impl DecodeSession<'_> {
             let tc = self.time_phases.then(Instant::now);
             let (_, stats) = self.dec.step.run_parallel_sinks_profiled(
                 &feeds,
-                self.threads,
+                self.workers,
                 self.dec.quant_step.as_ref(),
                 &mut sinks,
                 prof,

@@ -22,6 +22,7 @@
 
 use std::sync::Arc;
 
+use canao::compiler::exec::ExecBackend;
 use canao::compiler::{compile, CompileOptions};
 use canao::compress::{CompressionConfig, PruneSpec};
 use canao::device::{plan_latency_compressed, tflite, DeviceProfile};
@@ -51,6 +52,7 @@ fn main() {
             "decode-step",
             "full-reseq",
             "calibrated",
+            "no-pool",
         ],
     );
 
@@ -100,6 +102,7 @@ fn print_help() {
          \x20 serve-gen  text generation demo  [--prompt S --tokens N --temp F --full-reseq]\n\
          \x20 serve-load sustained-load run    [--qps F --duration-ms N --queue-cap N\n\
          \x20                                   --threads N --tokens N --seed N --slots N\n\
+         \x20                                   --no-pool (spawn-per-wave reference executor)\n\
          \x20                                   --out PATH --trace-sample N\n\
          \x20                                   --trace-out PATH --trace-json PATH]\n\
          \x20 finetune   e2e training loop     [--steps N --lr F]\n"
@@ -419,16 +422,18 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
         duration: std::time::Duration::from_millis(args.u64_or("duration-ms", 2000)),
         seed: args.u64_or("seed", 0x10AD),
         threads: args.usize_or("threads", 2),
+        use_pool: !args.has("no-pool"),
         queue_cap: args.usize_or("queue-cap", 128),
         max_new_tokens: args.usize_or("tokens", 8),
         saturation_burst: args.usize_or("burst", 32),
     };
     println!(
-        "[load] open-loop {} qps for {} ms (seed {:#x}, queue cap {})",
+        "[load] open-loop {} qps for {} ms (seed {:#x}, queue cap {}, {})",
         cfg.qps,
         cfg.duration.as_millis(),
         cfg.seed,
-        cfg.queue_cap
+        cfg.queue_cap,
+        if cfg.use_pool { "worker pool" } else { "scoped spawns" }
     );
     let tracing = args.get("trace-out").is_some()
         || args.get("trace-json").is_some()
@@ -451,7 +456,8 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
         ),
     }];
     let qa = run_qa_load_traced(
-        NativeQaEngine::demo(Arc::clone(&tok), cfg.threads),
+        NativeQaEngine::demo(Arc::clone(&tok), cfg.threads)
+            .with_backend(ExecBackend::with_pool(cfg.use_pool, cfg.threads)),
         &qa_reqs,
         &cfg,
         mk_tracer(),
@@ -459,7 +465,8 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
     print!("{}", qa.render());
     let prompts = ["the model", "the quick brown fox", "the runtime loads"];
     let gen = run_gen_load_traced(
-        NativeGenEngine::demo(Arc::clone(&tok), cfg.threads),
+        NativeGenEngine::demo(Arc::clone(&tok), cfg.threads)
+            .with_backend(ExecBackend::with_pool(cfg.use_pool, cfg.threads)),
         &prompts,
         &cfg,
         mk_tracer(),
@@ -472,9 +479,26 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
         tracer: batched_tracer.clone(),
         ..Default::default()
     };
-    let batched =
-        run_gen_load_batched(NativeGenEngine::demo(tok, cfg.threads), &prompts, &cfg, opts);
+    let batched_engine = NativeGenEngine::demo(tok, cfg.threads)
+        .with_backend(ExecBackend::with_pool(cfg.use_pool, cfg.threads));
+    // Clones of a pool backend share the same threads, so this handle
+    // still observes the pool after the run consumes the engine.
+    let batched_backend = batched_engine.backend().clone();
+    let batched = run_gen_load_batched(batched_engine, &prompts, &cfg, opts);
     print!("{}", batched.render());
+    if let Some(stats) = batched_backend.pool_stats() {
+        // The zero-spawn contract: the pool spawned once at construction
+        // and never again, no matter how many requests the run served.
+        assert_eq!(
+            stats.spawns_total, stats.size as u64,
+            "persistent pool must never respawn workers"
+        );
+        println!(
+            "[load] pool: {} workers, {} waves dispatched, 0 respawns, \
+             scratch peak {} B ({} grow events)",
+            stats.size, stats.waves_dispatched, stats.scratch_peak_bytes, stats.scratch_grows
+        );
+    }
     // The batched engine's tracer is the exported one (the scheduler is
     // where span trees have the most structure); snapshotting here —
     // after the run returned and its worker joined — sees every retire.

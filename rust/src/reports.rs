@@ -222,7 +222,7 @@ pub fn bench_textgen(out: &mut dyn Write) -> anyhow::Result<()> {
         // Profiling stays off for the measured generate runs below, so
         // the quartile numbers are untouched.
         {
-            let mut sess = dec.begin(engine.weights(), 2);
+            let mut sess = dec.begin(engine.weights(), engine.backend());
             let mut prof = dec.prefill.profiler(2);
             sess.prefill_profiled(&[2, 3, 4, 5], Some(&prof))?;
             sess.finish();
@@ -299,6 +299,21 @@ fn profile_section(
     m.insert("idle_us".to_string(), Json::Num(rep.idle_ns() as f64 / 1e3));
     m.insert("aggregate".to_string(), agg.json());
     m.insert("calibration".to_string(), cal.json());
+    // Per-worker lanes (schema 2): busy/idle totals keyed by the stable
+    // worker id, so pool-thread utilization survives into the seed diff.
+    let lanes: Vec<Json> = rep
+        .worker_lanes()
+        .iter()
+        .map(|l| {
+            let mut w = BTreeMap::new();
+            w.insert("thread".to_string(), Json::Num(l.thread as f64));
+            w.insert("busy_us".to_string(), Json::Num(l.busy_ns as f64 / 1e3));
+            w.insert("idle_us".to_string(), Json::Num(l.idle_ns as f64 / 1e3));
+            w.insert("samples".to_string(), Json::Num(l.samples as f64));
+            Json::Obj(w)
+        })
+        .collect();
+    m.insert("workers".to_string(), Json::Arr(lanes));
     sections.insert(label.to_string(), Json::Obj(m));
     Ok(())
 }
@@ -372,7 +387,7 @@ pub fn bench_profile(
     let mut prefill_reps = Vec::with_capacity(runs);
     let mut trace = Json::Null;
     for i in 0..runs {
-        let mut sess = dec.begin(engine.weights(), threads);
+        let mut sess = dec.begin(engine.weights(), engine.backend());
         let mut prof = dec.prefill.profiler(threads);
         sess.prefill_profiled(&prompt, Some(&prof))?;
         sess.finish();
@@ -392,7 +407,7 @@ pub fn bench_profile(
         &mut sections,
     )?;
 
-    let mut sess = dec.begin(engine.weights(), threads);
+    let mut sess = dec.begin(engine.weights(), engine.backend());
     sess.prefill(&prompt)?;
     let step_runs = runs.min(cfg.seq - prompt.len());
     let mut step_reps = Vec::with_capacity(step_runs);
@@ -413,7 +428,9 @@ pub fn bench_profile(
     )?;
 
     let mut top = BTreeMap::new();
-    top.insert("schema".to_string(), Json::Num(1.0));
+    // Schema 2 added per-section `workers` lanes (stable worker ids with
+    // busy/idle totals) alongside the aggregate/calibration tables.
+    top.insert("schema".to_string(), Json::Num(2.0));
     top.insert("bench".to_string(), Json::Str("profile".to_string()));
     top.insert("threads".to_string(), Json::Num(threads as f64));
     top.insert("runs".to_string(), Json::Num(runs as f64));
@@ -583,6 +600,20 @@ mod tests {
             .and_then(|s| s.get("aggregate"))
             .expect("step aggregate");
         assert!(agg.get("total_us").and_then(|t| t.as_f64()).is_some());
+        // Schema 2: every section carries per-worker busy/idle lanes.
+        assert_eq!(json.get("schema").and_then(|s| s.as_f64()), Some(2.0));
+        let lanes = json
+            .get("graphs")
+            .and_then(|g| g.get("encoder-fp32"))
+            .and_then(|s| s.get("workers"))
+            .and_then(|w| w.as_arr())
+            .expect("worker lanes");
+        assert!(!lanes.is_empty(), "schema 2 sections carry worker lanes");
+        for lane in lanes {
+            for key in ["thread", "busy_us", "idle_us", "samples"] {
+                assert!(lane.get(key).is_some(), "lane missing {key}");
+            }
+        }
     }
 
     #[test]

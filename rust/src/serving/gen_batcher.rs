@@ -328,7 +328,9 @@ fn worker_loop(
 ) {
     let dec = engine.decoder();
     let weights = engine.weights();
-    let threads = engine.threads;
+    // One worker source for the scheduler's lifetime: the engine's pool
+    // backend by default, so every wave reuses the same parked threads.
+    let backend = engine.backend();
     let (seq, vocab, hd) = (dec.cfg.seq, dec.cfg.vocab, dec.cfg.head_dim());
     let aws: Vec<usize> = dec.dims.iter().map(|d| d.heads * hd).collect();
     let mut stepper = BatchStepper::new(dec);
@@ -400,7 +402,7 @@ fn worker_loop(
                 })
                 .collect();
             let n = slots.len();
-            let stepped = stepper.step(dec, weights, threads, &mut slots);
+            let stepped = stepper.step(dec, weights, backend, &mut slots);
             drop(slots);
             metrics.steps.inc();
             metrics.batch_occupancy.record_value(n as u64);
@@ -596,7 +598,7 @@ fn admit(
         &mut cache,
         prefill_logits,
         engine.weights(),
-        engine.threads,
+        engine.backend(),
     ) {
         Ok(len) => len,
         Err(e) => {

@@ -43,6 +43,9 @@ pub struct LoadConfig {
     pub seed: u64,
     /// Executor threads per request inside the engine.
     pub threads: usize,
+    /// Serve on the persistent worker pool (`true`, the production
+    /// default) or the spawn-per-wave scoped reference (`--no-pool`).
+    pub use_pool: bool,
     /// Bounded batcher queue (admission control) capacity.
     pub queue_cap: usize,
     /// Tokens per generation request (gen engine only).
@@ -58,6 +61,7 @@ impl Default for LoadConfig {
             duration: Duration::from_millis(2000),
             seed: 0x10AD,
             threads: 2,
+            use_pool: true,
             queue_cap: 128,
             max_new_tokens: 8,
             saturation_burst: 32,
@@ -72,6 +76,7 @@ impl LoadConfig {
         m.insert("duration_ms".to_string(), Json::Num(self.duration.as_millis() as f64));
         m.insert("seed".to_string(), Json::Num(self.seed as f64));
         m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("use_pool".to_string(), Json::Bool(self.use_pool));
         m.insert("queue_cap".to_string(), Json::Num(self.queue_cap as f64));
         m.insert("max_new_tokens".to_string(), Json::Num(self.max_new_tokens as f64));
         m.insert("saturation_burst".to_string(), Json::Num(self.saturation_burst as f64));
@@ -747,14 +752,16 @@ fn run_meta(cfg: &LoadConfig) -> Json {
 /// (`slots`, `peak_batch_occupancy`, `tokens_per_s_aggregate`,
 /// `tokens_per_s_per_slot`, `saturation_tokens_per_s`, `page_pool`);
 /// schema 4 added per-engine request-trace aggregates (`trace`, null
-/// when no tracer was attached) and the batched path's `decode_phases`.
+/// when no tracer was attached) and the batched path's `decode_phases`;
+/// schema 5 added `config.use_pool` (persistent worker pool vs the
+/// spawn-per-wave scoped reference).
 pub fn bench_json(cfg: &LoadConfig, reports: &[LoadReport]) -> Json {
     let mut engines = std::collections::BTreeMap::new();
     for r in reports {
         engines.insert(r.engine.clone(), r.json());
     }
     let mut m = std::collections::BTreeMap::new();
-    m.insert("schema".to_string(), Json::Num(4.0));
+    m.insert("schema".to_string(), Json::Num(5.0));
     m.insert("bench".to_string(), Json::Str("serving_load".to_string()));
     m.insert("meta".to_string(), run_meta(cfg));
     m.insert("config".to_string(), cfg.json());
@@ -799,6 +806,7 @@ mod tests {
             duration: Duration::from_millis(200),
             seed: 7,
             threads: 1,
+            use_pool: true,
             queue_cap: 64,
             max_new_tokens: 2,
             saturation_burst: 8,
@@ -915,8 +923,10 @@ mod tests {
         write_bench_json(path, &cfg, &[r]).unwrap();
         let body = std::fs::read_to_string(path).unwrap();
         let parsed = Json::parse(body.trim()).unwrap();
-        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(4));
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(5));
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serving_load"));
+        let use_pool = parsed.get("config").unwrap().get("use_pool").unwrap();
+        assert_eq!(use_pool, &Json::Bool(true), "schema 5 records the worker source");
         let meta = parsed.get("meta").expect("schema 2 carries run provenance");
         assert!(meta.get("seed").unwrap().as_usize().is_some());
         assert!(meta.get("engine_threads").unwrap().as_usize().is_some());

@@ -16,10 +16,13 @@
 //!   warmup-calibrated to static activation scales via
 //!   `calibrate_warmup`); per-request executor state is cached
 //!   (`Compiled::prepared`) and weights are borrowed by the executor,
-//!   never copied per forward. Text generation decodes KV-cached by
-//!   default (`crate::decode`: prefill once, then O(seq·hidden) per
-//!   token), with the full-resequence path kept as the bitwise-equal
-//!   reference.
+//!   never copied per forward. Each native engine owns a persistent
+//!   [`crate::compiler::exec::WorkerPool`] for its lifetime (an
+//!   [`crate::compiler::exec::ExecBackend`]; swap in the spawn-per-wave
+//!   scoped reference with `with_backend` / `--no-pool`). Text
+//!   generation decodes KV-cached by default (`crate::decode`: prefill
+//!   once, then O(seq·hidden) per token), with the full-resequence path
+//!   kept as the bitwise-equal reference.
 //!
 //! The batcher coalesces queued requests into batches when load is high
 //! and falls back to singles when it isn't (bucketed static shapes — the
@@ -75,6 +78,32 @@
 //! (or `chrome://tracing`): drag the JSON file in, then use W/S to zoom
 //! and A/D to pan; click a request lane's `step_wave` slice to see its
 //! occupancy and co-resident count in the args panel.
+//!
+//! # Thread budget
+//!
+//! Every OS thread the serving stack creates, and who owns it:
+//!
+//! * **Executor workers** — each native engine's
+//!   [`ExecBackend`](crate::compiler::exec::ExecBackend) holds ONE persistent
+//!   [`WorkerPool`](crate::compiler::exec::WorkerPool) of `threads`
+//!   workers, spawned at engine construction and parked on a condvar
+//!   between waves; in steady-state decode the spawn counter stays at
+//!   exactly `threads` for the engine's lifetime (`tests/pool.rs`, and
+//!   `canao serve-load` asserts it after every run). Cloning a backend
+//!   shares the same threads. `--no-pool` (or
+//!   `with_backend(ExecBackend::scoped(n))`) swaps in the
+//!   spawn-per-wave scoped reference — bitwise-identical outputs
+//!   (`tests/exec_differential.rs`), one `thread::scope` spawn set per
+//!   parallel wave.
+//! * **Batcher worker** — `Batcher` runs its coalescing loop on one
+//!   owned thread, joined on drop.
+//! * **Scheduler thread** — `GenBatcher` runs admission/wave/retire on
+//!   one owned `canao-gen-batcher` thread, joined on drop; the engine
+//!   it moves there brings its pool along (the pool is `Send + Sync`).
+//!
+//! So a `serve-load` run with `--threads N` costs `N` executor workers
+//! per engine plus one scheduler thread for the batched path — fixed at
+//! startup, independent of request count or tokens generated.
 //!
 //! Admission is **bounded**: `Batcher` holds at most
 //! `BatcherOptions::queue_cap` queued jobs and `submit` returns

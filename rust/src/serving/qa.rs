@@ -15,7 +15,9 @@ use anyhow::Result;
 
 use super::batcher::BatchModel;
 use super::metrics::EngineMetrics;
-use crate::compiler::exec::{ExecError, Feeds, QuantizedTensor, QuantizedWeights, View};
+use crate::compiler::exec::{
+    ExecBackend, ExecError, Feeds, QuantizedTensor, QuantizedWeights, View,
+};
 use crate::compiler::{compile, CompileOptions, Compiled};
 use crate::compress::{compress_encoder, CompressionConfig, CompressionReport};
 use crate::model::{build_encoder, BertConfig};
@@ -215,6 +217,13 @@ pub struct NativeQaEngine {
     pub max_answer_tokens: usize,
     /// Worker threads per request in the wave executor.
     pub threads: usize,
+    /// Executor worker source, held for the engine's lifetime: a
+    /// persistent [`crate::compiler::exec::WorkerPool`] by default, so
+    /// every request reuses the same parked threads and warm scratch
+    /// arenas (zero spawns after warmup). Swap in
+    /// [`ExecBackend::scoped`] via [`NativeQaEngine::with_backend`] for
+    /// the spawn-per-wave bitwise reference.
+    backend: ExecBackend,
     batch_cap: usize,
     /// Lock-free serving metrics (`ttft` = full answer latency for QA).
     /// Clone the `Arc` before moving the engine into a `Batcher` to keep
@@ -267,9 +276,24 @@ impl NativeQaEngine {
             report,
             max_answer_tokens: 30,
             threads: threads.max(1),
+            backend: ExecBackend::pool(threads.max(1)),
             batch_cap: 8,
             metrics: Arc::new(EngineMetrics::default()),
         }
+    }
+
+    /// Replace the executor worker source (e.g.
+    /// [`ExecBackend::scoped`] to serve on the historical
+    /// spawn-per-wave path as a bitwise reference).
+    pub fn with_backend(mut self, backend: ExecBackend) -> Self {
+        self.threads = backend.threads().max(1);
+        self.backend = backend;
+        self
+    }
+
+    /// The engine's executor worker source (pool stats live here).
+    pub fn backend(&self) -> &ExecBackend {
+        &self.backend
     }
 
     /// Small default configuration (the aot.py "qa" demo shape).
@@ -353,7 +377,7 @@ impl NativeQaEngine {
         self.compiled
             .run_parallel_with(
                 &Feeds::layered(&request, &self.weights),
-                self.threads,
+                &self.backend,
                 self.quant.as_ref(),
             )
             .map(|(_, stats)| stats)
@@ -399,7 +423,7 @@ impl NativeQaEngine {
         let request = self.request_feeds(&ids, &mask);
         let (outs, _) = self.compiled.run_parallel_with(
             &Feeds::layered(&request, &self.weights),
-            self.threads,
+            &self.backend,
             self.quant.as_ref(),
         )?;
         let logits = outs.last().expect("qa graph has outputs"); // [seq, 2]

@@ -34,7 +34,7 @@ use anyhow::Result;
 use super::batcher::BatchModel;
 use super::metrics::EngineMetrics;
 use super::trace::{armed, Phase, RequestTrace};
-use crate::compiler::exec::ExecError;
+use crate::compiler::exec::{ExecBackend, ExecError};
 use crate::compress::{prune_model, CompressionConfig, CompressionReport};
 use crate::decode::{DecodeError, DecodeMode, DecodeSession, Decoder};
 use crate::model::{build_causal_lm, BertConfig};
@@ -204,6 +204,13 @@ pub struct NativeGenEngine {
     pub report: CompressionReport,
     /// Worker threads per forward in the wave executor.
     pub threads: usize,
+    /// Executor worker source, held for the engine's lifetime: a
+    /// persistent [`crate::compiler::exec::WorkerPool`] by default, so
+    /// steady-state decode spawns no threads and reuses warm kernel
+    /// scratch per token. Swap in [`ExecBackend::scoped`] via
+    /// [`NativeGenEngine::with_backend`] for the spawn-per-wave bitwise
+    /// reference.
+    backend: ExecBackend,
     /// Default decode mode for [`NativeGenEngine::generate`].
     pub mode: DecodeMode,
     /// Lock-free serving metrics: `ttft` is prefill + first token,
@@ -255,6 +262,7 @@ impl NativeGenEngine {
             compression,
             report,
             threads: threads.max(1),
+            backend: ExecBackend::pool(threads.max(1)),
             mode: DecodeMode::KvCache,
             metrics: Arc::new(EngineMetrics::default()),
             phase_timing: false,
@@ -265,6 +273,20 @@ impl NativeGenEngine {
     pub fn demo(tokenizer: Arc<Tokenizer>, threads: usize) -> Self {
         let cfg = BertConfig { vocab: 2048, seq: 64, layers: 2, hidden: 128, heads: 4, inter: 512 };
         Self::new(tokenizer, cfg, threads)
+    }
+
+    /// Replace the executor worker source (e.g.
+    /// [`ExecBackend::scoped`] to serve on the historical
+    /// spawn-per-wave path as a bitwise reference).
+    pub fn with_backend(mut self, backend: ExecBackend) -> Self {
+        self.threads = backend.threads().max(1);
+        self.backend = backend;
+        self
+    }
+
+    /// The engine's executor worker source (pool stats live here).
+    pub fn backend(&self) -> &ExecBackend {
+        &self.backend
     }
 
     /// The compiled decode artifacts (tests, benches, pricing).
@@ -392,7 +414,12 @@ impl NativeGenEngine {
                     for (i, x) in padded.iter_mut().enumerate() {
                         *x = ids.get(i).copied().unwrap_or(0) as f32;
                     }
-                    self.decoder.reseq_forward(&request, &self.weights, self.threads, &mut full)?;
+                    self.decoder.reseq_forward(
+                        &request,
+                        &self.weights,
+                        &self.backend,
+                        &mut full,
+                    )?;
                     out.clear();
                     out.extend_from_slice(&full[(used - 1) * vocab..used * vocab]);
                     Ok(())
@@ -404,7 +431,7 @@ impl NativeGenEngine {
                     let t0 = armed(trace).then(std::time::Instant::now);
                     if session.is_none() {
                         // First forward: prefill the prompt into the cache.
-                        let mut s = self.decoder.begin(&self.weights, self.threads);
+                        let mut s = self.decoder.begin(&self.weights, &self.backend);
                         if self.phase_timing {
                             s.enable_phase_timing();
                         }

@@ -22,10 +22,12 @@ use canao::compiler::exec::parallel::{
     execute_prepared_sinks_profiled, PreparedExec,
 };
 use canao::compiler::exec::plan::execute_plan;
-use canao::compiler::exec::{ExecError, Feeds, OutputSink, Profiler};
+use canao::compiler::exec::{ExecError, Feeds, OutputSink, Profiler, WorkerPool};
 use canao::compiler::fusion::{lp_fusion, FusionConfig, FusionPlan};
 use canao::compiler::ir::{DType, Graph, Op};
 use canao::compiler::poly::Schedule;
+use canao::compiler::{compile, CompileOptions};
+use canao::compress::CompressionConfig;
 use canao::model::{build_encoder, BertConfig};
 use canao::util::check::{assert_close, forall};
 use canao::util::rng::Rng;
@@ -411,4 +413,94 @@ fn d6_malformed_feeds_rejected_everywhere() {
     feeds.insert("w".to_string(), vec![0.5; 4]);
     let out = execute_plan_parallel(&g, &plan, &feeds, &HashMap::new(), 2).unwrap();
     assert_eq!(out[0].shape.dims, vec![4, 4]);
+}
+
+/// The persistent worker pool against the scoped spawn-per-wave
+/// reference: bitwise-identical outputs at 1/2/4 workers under both
+/// forced schedules, on a [64,512] fused softmax-shaped chain large
+/// enough to clear the inline threshold — so the pool threads actually
+/// run the waves, including the column-parallel `HoistedColMajor` path.
+/// Also pins the pool's headline counter: workers are spawned at
+/// construction and never again.
+#[test]
+fn d8_pool_matches_scoped_bitwise_all_schedules() {
+    let mut g = Graph::new();
+    let x = g.input("x", &[64, 512], DType::F32);
+    let w = g.weight("w", &[64, 512]);
+    let a = g.add(x, w);
+    let t = g.add_op(Op::Tanh, &[a]);
+    let r = g.add_op(Op::ReduceMax { axis: 1 }, &[t]);
+    let s = g.sub(t, r);
+    let e = g.add_op(Op::Exp, &[s]);
+    let y = g.mul(e, a);
+    g.mark_output(y);
+    let mut rng = Rng::new(0xD8);
+    let feeds = feeds_for(&g, &mut rng);
+    let plan = lp_fusion(&g, &FusionConfig::default());
+    for sched in [Schedule::RowRecompute, Schedule::HoistedColMajor] {
+        let choices = force_schedule(&plan, sched);
+        let seq = execute_plan(&g, &plan, &feeds, &choices).unwrap();
+        for &nt in &THREAD_COUNTS {
+            let scoped = execute_plan_parallel(&g, &plan, &feeds, &choices, nt).unwrap();
+            let pool = WorkerPool::new(nt);
+            // Several runs through the same pool: reused scratch must
+            // stay bitwise-equal to the fresh-allocation reference.
+            for round in 0..3 {
+                let pooled = execute_plan_parallel(&g, &plan, &feeds, &choices, &pool).unwrap();
+                for (i, ((p, sc), sq)) in pooled.iter().zip(&scoped).zip(&seq).enumerate() {
+                    assert_eq!(
+                        p.data, sc.data,
+                        "{sched:?}/{nt} workers round {round}: pool differs from scoped, output {i}"
+                    );
+                    assert_eq!(
+                        sc.data, sq.data,
+                        "{sched:?}/{nt} threads: scoped differs from sequential, output {i}"
+                    );
+                }
+            }
+            let stats = pool.stats();
+            assert_eq!(
+                stats.spawns_total, nt as u64,
+                "pool spawned threads beyond construction"
+            );
+        }
+    }
+}
+
+/// Pruned+int8 through the pool: the fused int8 row kernels behind
+/// `run_parallel_with` produce bitwise-identical logits on the pool, the
+/// scoped reference, and the sequential executor (same tapes, same
+/// per-element order) at every worker count.
+#[test]
+fn d9_pool_int8_matches_scoped_and_sequential() {
+    let mut g = Graph::new();
+    let x = g.input("x", &[64, 32], DType::F32);
+    let w = g.weight("w", &[32, 48]);
+    let b = g.weight("b", &[48]);
+    let mm = g.matmul(x, w);
+    let h = g.add(mm, b);
+    let t = g.add_op(Op::Tanh, &[h]);
+    g.mark_output(t);
+    let compiled = compile(
+        &g,
+        &CompileOptions { compression: CompressionConfig::int8_only(), ..Default::default() },
+    );
+    let mut rng = Rng::new(0xD9);
+    let feeds = feeds_for(&compiled.graph, &mut rng);
+    let qw = compiled.quantize_weights(&feeds);
+    assert!(!qw.by_node.is_empty(), "the matmul site must be quantizable");
+    let layered = Feeds::single(&feeds);
+    let seq = compiled.run_with(&layered, Some(&qw)).unwrap();
+    for &nt in &THREAD_COUNTS {
+        let (scoped, _) = compiled.run_parallel_with(&layered, nt, Some(&qw)).unwrap();
+        let pool = WorkerPool::new(nt);
+        let (pooled, _) = compiled.run_parallel_with(&layered, &pool, Some(&qw)).unwrap();
+        for (i, ((p, sc), sq)) in pooled.iter().zip(&scoped).zip(&seq).enumerate() {
+            assert_eq!(p.data, sc.data, "int8 {nt} workers: pool differs from scoped, output {i}");
+            assert_eq!(
+                sc.data, sq.data,
+                "int8 {nt} threads: scoped differs from sequential, output {i}"
+            );
+        }
+    }
 }

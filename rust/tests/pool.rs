@@ -1,0 +1,105 @@
+//! Integration pins for the persistent worker-pool runtime
+//! (`compiler/exec/pool.rs`): panic containment through the public API,
+//! clean thread join on `Drop`, and the headline steady-state decode
+//! contract — zero thread spawns and zero kernel-scratch growth per
+//! generated token once the pool and its per-worker arenas are warm.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use canao::compiler::exec::WorkerPool;
+use canao::compress::CompressionConfig;
+use canao::model::BertConfig;
+use canao::serving::NativeGenEngine;
+use canao::tokenizer::{Tokenizer, Vocab};
+
+fn demo_engine(comp: CompressionConfig) -> NativeGenEngine {
+    let corpus = "the quick brown fox jumps over the lazy dog . \
+                  the model generates new sentences word by word .";
+    let tok = Arc::new(Tokenizer::new(Vocab::build(corpus, 512)));
+    let cfg = BertConfig { vocab: 512, seq: 48, layers: 2, hidden: 64, heads: 4, inter: 256 };
+    NativeGenEngine::with_compression(tok, cfg, 2, comp)
+}
+
+/// A panicking task poisons neither the pool nor its threads: the run
+/// reports the failure, the SAME workers serve the next wave, and the
+/// spawn counter proves no replacement thread was created.
+#[test]
+fn panicking_task_is_contained_and_pool_stays_usable() {
+    let pool = WorkerPool::new(2);
+    let r = pool.run(2, &|w, _scratch| {
+        if w == 1 {
+            panic!("injected worker failure");
+        }
+    });
+    assert!(r.is_err(), "worker panic must surface as PoolPanicked");
+
+    let ran = AtomicUsize::new(0);
+    pool.run(2, &|_, _| {
+        ran.fetch_add(1, Ordering::SeqCst);
+    })
+    .expect("pool serves waves after a contained panic");
+    assert_eq!(ran.load(Ordering::SeqCst), 2, "both workers ran the recovery wave");
+    assert_eq!(
+        pool.stats().spawns_total,
+        2,
+        "containment must not respawn threads"
+    );
+}
+
+/// `Drop` joins every worker: the exit counter (incremented by each
+/// worker on its way out) reaches the pool size by the time `drop`
+/// returns — no detached threads outlive the pool.
+#[test]
+fn drop_joins_every_worker_thread() {
+    let pool = WorkerPool::new(4);
+    let exits = pool.exits_handle();
+    assert_eq!(exits.load(Ordering::SeqCst), 0, "workers alive while pool is");
+    drop(pool);
+    assert_eq!(exits.load(Ordering::SeqCst), 4, "drop returned before all workers exited");
+}
+
+/// The steady-state decode contract from the pool refactor: once a
+/// session is warm, generating further tokens spawns no threads and
+/// grows no kernel scratch — every step runs on parked pool workers and
+/// reused arenas. Covers fp32 and pruned+int8.
+#[test]
+fn steady_state_decode_spawns_nothing_and_grows_no_scratch() {
+    for comp in [CompressionConfig::none(), CompressionConfig::pruned_int8(0.5, 0.5)] {
+        let pool = WorkerPool::new(2);
+        let engine = demo_engine(comp);
+        let dec = engine.decoder();
+        let prompt: Vec<i32> = (2..10).collect();
+
+        let mut sess = dec.begin(engine.weights(), &pool);
+        sess.prefill(&prompt).expect("prefill");
+        // Warm-up: the first steps may grow the step plan's scratch
+        // arenas to their high-water marks.
+        for t in 0..3 {
+            sess.step(2 + t).expect("warm-up step");
+        }
+
+        let before = pool.stats();
+        for t in 0..8 {
+            sess.step(3 + t).expect("steady-state step");
+            let stats = sess.last_stats().expect("parallel run records stats");
+            assert_eq!(
+                stats.scratch_grows, 0,
+                "int8={}: steady-state step grew kernel scratch",
+                comp.int8
+            );
+        }
+        let after = pool.stats();
+        assert_eq!(
+            after.spawns_total, before.spawns_total,
+            "int8={}: steady-state decode spawned threads",
+            comp.int8
+        );
+        assert_eq!(
+            after.scratch_grows, before.scratch_grows,
+            "int8={}: steady-state decode grew pool worker scratch",
+            comp.int8
+        );
+        sess.finish();
+    }
+}
